@@ -1,0 +1,78 @@
+//! BLOCKSIZE tuning (the paper's §6.4 point: "tuning BLOCKSIZE by the
+//! programmer is a viable approach to performance optimization, and the
+//! performance models are essential in this context").
+//!
+//! Sweeps BLOCKSIZE for all three transformed variants on a fixed mesh and
+//! topology, reporting both the simulated time and the model prediction —
+//! showing that the *model* alone would have picked the same winner.
+//!
+//! ```bash
+//! cargo run --release --example blocksize_tuning
+//! ```
+
+use upcsim::comm::Analysis;
+use upcsim::machine::HwParams;
+use upcsim::matrix::Ellpack;
+use upcsim::mesh::{TetGridSpec, TetMesh};
+use upcsim::model::{self, SpmvInputs};
+use upcsim::pgas::{Layout, Topology};
+use upcsim::sim::{ClusterSim, DEFAULT_CACHE_WINDOW};
+use upcsim::spmv::Variant;
+use upcsim::util::fmt;
+
+fn main() -> anyhow::Result<()> {
+    let mesh = TetMesh::generate(&TetGridSpec::ventricle(200_000, 11));
+    let m = Ellpack::diffusion_from_mesh(&mesh);
+    let topo = Topology::new(2, 16);
+    let hw = HwParams::abel();
+    let sim = ClusterSim::new(hw);
+    println!("n = {}, 32 threads over 2 nodes, 1000 iterations\n", fmt::int(m.n));
+    println!(
+        "{:>9}  {:>22}  {:>22}  {:>22}",
+        "BLOCKSIZE", "UPCv1 sim/model", "UPCv2 sim/model", "UPCv3 sim/model"
+    );
+
+    let mut best: Option<(usize, f64)> = None;
+    let mut best_by_model: Option<(usize, f64)> = None;
+    for bs in [256usize, 512, 1024, 2048, 4096, 8192, 16384] {
+        if m.n / bs < 32 {
+            // Fewer blocks than threads would idle threads entirely — not a
+            // configuration the paper's schedule ever uses.
+            continue;
+        }
+        let layout = Layout::new(m.n, bs, 32);
+        let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, DEFAULT_CACHE_WINDOW);
+        let inp = SpmvInputs { layout, topo, hw, r_nz: m.r_nz, analysis: &analysis };
+        let mut cells = Vec::new();
+        for v in Variant::TRANSFORMED {
+            let s = sim.spmv_iteration(v, &inp).total * 1000.0;
+            let p = match v {
+                Variant::V1 => model::predict_v1(&inp).total,
+                Variant::V2 => model::predict_v2(&inp).total,
+                Variant::V3 => model::predict_v3(&inp).total,
+                Variant::Naive => unreachable!(),
+            } * 1000.0;
+            if v == Variant::V3 {
+                if best.is_none_or(|(_, t)| s < t) {
+                    best = Some((bs, s));
+                }
+                if best_by_model.is_none_or(|(_, t)| p < t) {
+                    best_by_model = Some((bs, p));
+                }
+            }
+            cells.push(format!("{:>9.2}/{:<9.2}", s, p));
+        }
+        println!("{bs:>9}  {}  {}  {}", cells[0], cells[1], cells[2]);
+    }
+
+    let (bs_sim, t_sim) = best.unwrap();
+    let (bs_model, _) = best_by_model.unwrap();
+    println!("\nbest UPCv3 BLOCKSIZE by simulation: {bs_sim} ({t_sim:.2} s / 1000 iters)");
+    println!("best UPCv3 BLOCKSIZE by model:      {bs_model}");
+    if bs_sim == bs_model {
+        println!("→ the closed-form model alone picks the same configuration.");
+    } else {
+        println!("→ model and simulation disagree here; see EXPERIMENTS.md discussion.");
+    }
+    Ok(())
+}

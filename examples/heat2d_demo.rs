@@ -1,0 +1,73 @@
+//! §8 demo: the 2D heat-equation solver with halo exchange, validated
+//! against a sequential stencil, plus the Table-5-style model comparison
+//! for the run's geometry.
+//!
+//! ```bash
+//! cargo run --release --example heat2d_demo
+//! ```
+
+use upcsim::heat2d::{seq_reference_step, simulate_heat_step, Heat2dSolver};
+use upcsim::machine::HwParams;
+use upcsim::model::{predict_heat2d, HeatGrid};
+use upcsim::pgas::Topology;
+use upcsim::sim::SimParams;
+use upcsim::util::{fmt, Rng};
+
+fn main() -> anyhow::Result<()> {
+    // A 512×512 field over a 4×4 thread grid (one simulated node).
+    let (mg, ng) = (512usize, 512usize);
+    let grid = HeatGrid::new(mg, ng, 4, 4);
+    let topo = Topology::new(1, 16);
+    let hw = HwParams::abel();
+
+    // Initial condition: a hot disc in a cold plate.
+    let mut rng = Rng::new(2024);
+    let mut f0 = vec![0.0f64; mg * ng];
+    for i in 0..mg {
+        for k in 0..ng {
+            let (di, dk) = (i as f64 - 256.0, k as f64 - 256.0);
+            f0[i * ng + k] =
+                if di * di + dk * dk < 80.0 * 80.0 { 100.0 } else { rng.f64() };
+        }
+    }
+
+    // Run 50 steps on the per-thread solver and verify against the
+    // sequential stencil.
+    let mut solver = Heat2dSolver::new(grid, &f0);
+    let mut reference = f0.clone();
+    let steps = 50;
+    for _ in 0..steps {
+        solver.step();
+        reference = seq_reference_step(mg, ng, &reference);
+    }
+    let got = solver.to_global();
+    let max_err = got
+        .iter()
+        .zip(&reference)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("{steps} steps on {mg}x{ng}, 4x4 thread grid");
+    println!("max |parallel − sequential| = {max_err:.3e}");
+    assert!(max_err < 1e-10, "halo exchange broke the stencil");
+    println!(
+        "halo payload so far: {}",
+        fmt::bytes(solver.inter_thread_bytes as f64)
+    );
+
+    // Table-5-style analytics for the paper's geometries.
+    println!("\nTable-5-style prediction for this setup (per 1000 steps):");
+    let params = SimParams::from_hw(&hw);
+    let sim = simulate_heat_step(&grid, &topo, &hw, &params);
+    let model = predict_heat2d(&grid, &topo, &hw);
+    println!(
+        "  T_halo: simulated {}  predicted {}",
+        fmt::secs(sim.t_halo * 1000.0),
+        fmt::secs(model.t_halo * 1000.0)
+    );
+    println!(
+        "  T_comp: simulated {}  predicted {}",
+        fmt::secs(sim.t_comp * 1000.0),
+        fmt::secs(model.t_comp * 1000.0)
+    );
+    Ok(())
+}

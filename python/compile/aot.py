@@ -1,0 +1,115 @@
+"""AOT lowering: JAX → HLO **text** → `artifacts/` + manifest.json.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import DEFAULT_BLOCK, DEFAULT_TILE
+
+R_NZ = 16  # the paper's fixed off-diagonal count (§6.1)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def spec(shape):
+    return {"shape": list(shape), "dtype": "f32"}
+
+
+def artifact_defs():
+    """Every artifact: (name, jitted fn, example args, input/output specs,
+    meta)."""
+    b, r, t = DEFAULT_BLOCK, R_NZ, DEFAULT_TILE
+    return [
+        dict(
+            name="spmv_block",
+            fn=model.spmv_block_step,
+            args=(f32(b), f32(b), f32(b, r), f32(b, r)),
+            inputs=[spec((b,)), spec((b,)), spec((b, r)), spec((b, r))],
+            outputs=[spec((b,))],
+            meta={"block": b, "r_nz": r},
+        ),
+        dict(
+            name="spmv_block_norm",
+            fn=model.spmv_block_step_with_norm,
+            args=(f32(b), f32(b), f32(b, r), f32(b, r)),
+            inputs=[spec((b,)), spec((b,)), spec((b, r)), spec((b, r))],
+            outputs=[spec((b,)), spec((1,))],
+            meta={"block": b, "r_nz": r},
+        ),
+        dict(
+            name="heat2d_step",
+            fn=model.heat2d_step,
+            args=(f32(t + 2, t + 2),),
+            inputs=[spec((t + 2, t + 2))],
+            outputs=[spec((t, t))],
+            meta={"tile": t},
+        ),
+        dict(
+            name="diffusion_residual",
+            fn=model.diffusion_residual,
+            args=(f32(b), f32(b)),
+            inputs=[spec((b,)), spec((b,))],
+            outputs=[spec((1,))],
+            meta={"block": b},
+        ),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "artifacts": []}
+    for d in artifact_defs():
+        lowered = jax.jit(d["fn"]).lower(*d["args"])
+        text = to_hlo_text(lowered)
+        fname = f"{d['name']}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": d["name"],
+                "file": fname,
+                "inputs": d["inputs"],
+                "outputs": d["outputs"],
+                "meta": d["meta"],
+            }
+        )
+        print(f"lowered {d['name']:24s} -> {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime).
+
+Every kernel here runs with ``interpret=True``: the image's PJRT plugin is
+CPU-only and real-TPU Pallas lowering emits Mosaic custom-calls the CPU
+client cannot execute. Correctness is asserted against the pure-jnp oracle
+in :mod:`compile.kernels.ref` by ``python/tests``.
+"""
+
+from .ellpack_spmv import ellpack_spmv, DEFAULT_BLOCK
+from .heat_stencil import heat_stencil, DEFAULT_TILE
+from .reduce import block_sum_sq
+
+__all__ = [
+    "ellpack_spmv",
+    "heat_stencil",
+    "block_sum_sq",
+    "DEFAULT_BLOCK",
+    "DEFAULT_TILE",
+]

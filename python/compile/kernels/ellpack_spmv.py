@@ -1,0 +1,69 @@
+"""The EllPack SpMV block kernel (paper Listing 1's inner loops, L1 hot-spot).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's kernel is
+a CPU loop with an irregular gather ``x[J[k·r+j]]``. On a TPU-shaped target
+the irregular gather belongs to the *coordinator* (it IS the paper's
+communication), so the kernel receives a dense, pre-gathered ``(B, r_nz)``
+tile ``xg`` and performs the regular part:
+
+    y[k] = d[k] * xd[k] + sum_j a[k, j] * xg[k, j]
+
+Tiling: rows ride the sublane dimension in ``row_tile`` chunks; the 16-wide
+``r_nz`` axis rides the lane dimension and is reduced in-register. VMEM per
+grid step = ``row_tile * (2*r_nz + 2) * 4`` bytes ≈ 69 KiB for
+``row_tile=512, r_nz=16`` — far below the ~16 MiB VMEM budget, leaving room
+for double buffering (see DESIGN.md §7 for the roofline estimate).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Row-tile size the AOT artifact is compiled for (manifest `meta.block`).
+DEFAULT_BLOCK = 4096
+#: Rows per Pallas grid step.
+ROW_TILE = 512
+
+
+def _spmv_kernel(d_ref, xd_ref, a_ref, xg_ref, y_ref):
+    """One row tile: dense FMA + lane-axis reduction."""
+    d = d_ref[...]
+    xd = xd_ref[...]
+    a = a_ref[...]
+    xg = xg_ref[...]
+    y_ref[...] = d * xd + jnp.sum(a * xg, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ellpack_spmv(d, xd, a, xg, interpret=True):
+    """Block SpMV: ``y = d * xd + rowsum(a * xg)``.
+
+    Args:
+      d:  ``(B,)`` diagonal values of the block's rows.
+      xd: ``(B,)`` ``x`` values at the block's own rows.
+      a:  ``(B, r_nz)`` off-diagonal values.
+      xg: ``(B, r_nz)`` pre-gathered ``x`` values at the column indices.
+
+    Returns:
+      ``(B,)`` result rows.
+    """
+    b, r_nz = a.shape
+    assert d.shape == (b,) and xd.shape == (b,) and xg.shape == (b, r_nz)
+    row_tile = min(ROW_TILE, b)
+    assert b % row_tile == 0, f"block {b} must be a multiple of {row_tile}"
+    grid = (b // row_tile,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile,), lambda i: (i,)),
+            pl.BlockSpec((row_tile,), lambda i: (i,)),
+            pl.BlockSpec((row_tile, r_nz), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, r_nz), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), d.dtype),
+        interpret=interpret,
+    )(d, xd, a, xg)

@@ -1,0 +1,23 @@
+"""Block sum-of-squares reduction (the driver's residual norm)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sum_sq_kernel(x_ref, out_ref):
+    x = x_ref[...]
+    out_ref[0] = jnp.sum(x * x)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_sum_sq(x, interpret=True):
+    """``sum(x**2)`` over one block, returned as a length-1 vector."""
+    (b,) = x.shape
+    return pl.pallas_call(
+        _sum_sq_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,39 @@
+"""Layer-2 JAX model: the compute graphs that get AOT-lowered to HLO text.
+
+Each function composes the L1 Pallas kernels into the block-level step the
+Rust coordinator executes. Python never runs at serving time — these exist
+only to be lowered by :mod:`compile.aot`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import block_sum_sq, ellpack_spmv, heat_stencil
+
+
+def spmv_block_step(d, xd, a, xg):
+    """The per-block SpMV the coordinator calls on its hot path.
+
+    Inputs are the pre-gathered tiles (see ``kernels/ellpack_spmv.py`` for
+    why the gather lives in the coordinator). Returns a 1-tuple so the AOT
+    output is uniform (``return_tuple=True`` lowering).
+    """
+    return (ellpack_spmv(d, xd, a, xg),)
+
+
+def spmv_block_step_with_norm(d, xd, a, xg):
+    """Block SpMV fused with the residual contribution ``Σ (y − xd)²`` —
+    the driver variant that logs convergence without a second pass."""
+    y = ellpack_spmv(d, xd, a, xg)
+    r = y - xd
+    return (y, block_sum_sq(r))
+
+
+def heat2d_step(phi):
+    """One Jacobi step on a halo-included tile (§8, Listing 8)."""
+    return (heat_stencil(phi),)
+
+
+def diffusion_residual(y, x):
+    """Standalone residual: ``Σ (y − x)²`` over a block."""
+    return (block_sum_sq(y - x),)

@@ -1,0 +1,91 @@
+"""L2 shape checks and AOT manifest consistency."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import DEFAULT_BLOCK, DEFAULT_TILE
+from compile.kernels.ref import ellpack_spmv_ref
+
+
+R = aot.R_NZ
+
+
+def _rand_block(seed=0):
+    rng = np.random.default_rng(seed)
+    b = DEFAULT_BLOCK
+    return (
+        rng.standard_normal(b).astype(np.float32),
+        rng.standard_normal(b).astype(np.float32),
+        rng.standard_normal((b, R)).astype(np.float32),
+        rng.standard_normal((b, R)).astype(np.float32),
+    )
+
+
+def test_spmv_block_step_shape_and_value():
+    d, xd, a, xg = _rand_block(1)
+    (y,) = model.spmv_block_step(d, xd, a, xg)
+    assert y.shape == (DEFAULT_BLOCK,)
+    np.testing.assert_allclose(y, ellpack_spmv_ref(d, xd, a, xg), rtol=1e-5, atol=1e-5)
+
+
+def test_spmv_block_step_with_norm():
+    d, xd, a, xg = _rand_block(2)
+    y, nrm = model.spmv_block_step_with_norm(d, xd, a, xg)
+    want = np.sum((np.asarray(y) - xd) ** 2)
+    np.testing.assert_allclose(float(nrm[0]), want, rtol=1e-3)
+
+
+def test_heat2d_step_shape():
+    phi = np.random.default_rng(3).standard_normal(
+        (DEFAULT_TILE + 2, DEFAULT_TILE + 2)
+    ).astype(np.float32)
+    (out,) = model.heat2d_step(phi)
+    assert out.shape == (DEFAULT_TILE, DEFAULT_TILE)
+
+
+def test_artifact_defs_are_consistent():
+    """Each def's declared specs match its example args and actual outputs."""
+    for d in aot.artifact_defs():
+        assert len(d["args"]) == len(d["inputs"]), d["name"]
+        for arg, spec in zip(d["args"], d["inputs"]):
+            assert list(arg.shape) == spec["shape"], d["name"]
+        outs = jax.eval_shape(d["fn"], *d["args"])
+        assert len(outs) == len(d["outputs"]), d["name"]
+        for out, spec in zip(outs, d["outputs"]):
+            assert list(out.shape) == spec["shape"], d["name"]
+
+
+def test_lowering_produces_hlo_text():
+    """Every artifact lowers to parseable HLO text (ENTRY + tuple root)."""
+    for d in aot.artifact_defs():
+        lowered = jax.jit(d["fn"]).lower(*d["args"])
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text, d["name"]
+        assert "tuple" in text or "ROOT" in text, d["name"]
+
+
+def test_aot_writes_manifest(tmp_path):
+    """End-to-end aot.py run into a temp dir, then validate the manifest."""
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out)],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert {"spmv_block", "spmv_block_norm", "heat2d_step", "diffusion_residual"} <= names
+    for a in manifest["artifacts"]:
+        assert (out / a["file"]).exists(), a["name"]
+        assert (out / a["file"]).read_text().lstrip().startswith("HloModule")

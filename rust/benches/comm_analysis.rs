@@ -1,0 +1,30 @@
+//! Criterion-lite bench: the communication-traffic analyzer (the paper's
+//! "one-time preparation step"). §Perf target: > 100 M nnz/s.
+
+use upcsim::benchlib::{BenchConfig, Bencher};
+use upcsim::comm::Analysis;
+use upcsim::matrix::Ellpack;
+use upcsim::mesh::{TetGridSpec, TetMesh};
+use upcsim::pgas::{Layout, Topology};
+use upcsim::sim::DEFAULT_CACHE_WINDOW;
+
+fn main() {
+    let mut b = Bencher::from_args(BenchConfig::heavy());
+    let mesh = TetMesh::generate(&TetGridSpec::ventricle(400_000, 7));
+    let m = Ellpack::diffusion_from_mesh(&mesh);
+    let nnz = (m.n * m.r_nz) as f64;
+
+    for &(nodes, tpn, bs) in &[(1usize, 16usize, 4096usize), (4, 16, 4096), (64, 16, 416)] {
+        let layout = Layout::new(m.n, bs, nodes * tpn);
+        let topo = Topology::new(nodes, tpn);
+        b.bench_items(
+            &format!("analysis/{}x{}threads/bs{}", nodes, tpn, bs),
+            nnz,
+            || {
+                let a = Analysis::build(&m.j, m.r_nz, layout, topo, DEFAULT_CACHE_WINDOW);
+                std::hint::black_box(&a);
+            },
+        );
+    }
+    b.finish();
+}

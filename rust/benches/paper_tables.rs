@@ -1,0 +1,48 @@
+//! Criterion-lite bench: end-to-end regeneration time of every paper table
+//! and figure (at 1/64 scale so `cargo bench` stays snappy; the CLI runs the
+//! canonical 1/16 scale).
+
+use upcsim::benchlib::{BenchConfig, Bencher};
+use upcsim::harness::{self, HarnessConfig, Workspace};
+
+fn main() {
+    let mut b = Bencher::from_args(BenchConfig::heavy());
+    let mut cfg = HarnessConfig::default();
+    cfg.scale_div = 64;
+    cfg.out_dir = None;
+    // Pre-warm the workspace so mesh generation cost is reported separately.
+    let mut ws = Workspace::new();
+    b.bench("tables/mesh-generation(all 3, 1/64)", || {
+        let mut fresh = Workspace::new();
+        for tp in upcsim::mesh::TestProblem::ALL {
+            std::hint::black_box(fresh.mesh(tp, cfg.scale_div, upcsim::mesh::Ordering::Natural).n);
+        }
+    });
+    for tp in upcsim::mesh::TestProblem::ALL {
+        ws.mesh(tp, cfg.scale_div, upcsim::mesh::Ordering::Natural);
+    }
+    b.bench("tables/table2", || {
+        std::hint::black_box(harness::table2(&cfg, &mut ws));
+    });
+    b.bench("tables/table3", || {
+        std::hint::black_box(harness::table3(&cfg, &mut ws));
+    });
+    b.bench("tables/table4", || {
+        std::hint::black_box(harness::table4(&cfg, &mut ws));
+    });
+    b.bench("tables/table5", || {
+        std::hint::black_box(harness::table5(&cfg));
+    });
+    b.bench("tables/figure1", || {
+        std::hint::black_box(harness::figure1(&cfg, &mut ws));
+    });
+    b.bench("tables/figure2", || {
+        std::hint::black_box(harness::figure2_volumes(&cfg, &mut ws));
+        std::hint::black_box(harness::figure2_blocksize(&cfg, &mut ws));
+    });
+    b.bench("tables/ablations", || {
+        std::hint::black_box(harness::ablation_blocksize(&cfg, &mut ws));
+        std::hint::black_box(harness::ablation_threads_per_node(&cfg, &mut ws));
+    });
+    b.finish();
+}

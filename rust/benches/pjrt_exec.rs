@@ -1,0 +1,37 @@
+//! Criterion-lite bench: PJRT execution of the AOT Pallas artifact vs the
+//! native kernel on identical block workloads. Quantifies the cost of the
+//! artifact path (staging + f32 + PJRT dispatch) so EXPERIMENTS.md can state
+//! when it pays off. Skipped without artifacts.
+
+use upcsim::benchlib::{BenchConfig, Bencher};
+use upcsim::coordinator::PjrtCompute;
+use upcsim::spmv::{spmv_block_gathered, BlockCompute};
+use upcsim::util::Rng;
+
+fn main() {
+    let Ok(mut pjrt) = PjrtCompute::discover() else {
+        println!("SKIP: artifacts missing — run `make artifacts` first");
+        return;
+    };
+    let mut b = Bencher::from_args(BenchConfig::default());
+    let bsz = pjrt.tile_rows();
+    let r = 16;
+    let n = 4 * bsz;
+    let mut rng = Rng::new(1);
+    let x_copy: Vec<f64> = (0..n).map(|_| rng.f64_in(-1.0, 1.0)).collect();
+    let d: Vec<f64> = (0..n).map(|_| rng.f64_in(0.5, 2.0)).collect();
+    let a: Vec<f64> = (0..n * r).map(|_| rng.f64_in(-0.1, 0.1)).collect();
+    let j: Vec<u32> = (0..n * r).map(|_| rng.usize_in(0, n) as u32).collect();
+    let mut y = vec![0.0f64; n];
+
+    let rows = n as f64;
+    b.bench_items("pjrt/spmv-4-tiles", rows, || {
+        pjrt.block(0, &d, &a, &j, r, &x_copy, &mut y);
+        std::hint::black_box(&y);
+    });
+    b.bench_items("native/spmv-same-work", rows, || {
+        spmv_block_gathered(0, &d, &a, &j, r, &x_copy, &mut y);
+        std::hint::black_box(&y);
+    });
+    b.finish();
+}

@@ -1,0 +1,40 @@
+//! Criterion-lite bench: the simulator + model evaluation cost per
+//! configuration (this is what bounds how fast the harness can sweep).
+
+use upcsim::benchlib::{BenchConfig, Bencher};
+use upcsim::comm::Analysis;
+use upcsim::machine::HwParams;
+use upcsim::matrix::Ellpack;
+use upcsim::mesh::{TetGridSpec, TetMesh};
+use upcsim::model::{self, SpmvInputs};
+use upcsim::pgas::{Layout, Topology};
+use upcsim::sim::{ClusterSim, DEFAULT_CACHE_WINDOW};
+use upcsim::spmv::Variant;
+
+fn main() {
+    let mut b = Bencher::from_args(BenchConfig::default());
+    let mesh = TetMesh::generate(&TetGridSpec::ventricle(400_000, 7));
+    let m = Ellpack::diffusion_from_mesh(&mesh);
+    let layout = Layout::new(m.n, 4096, 64);
+    let topo = Topology::new(4, 16);
+    let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, DEFAULT_CACHE_WINDOW);
+    let hw = HwParams::abel();
+    let inp = SpmvInputs { layout, topo, hw, r_nz: m.r_nz, analysis: &analysis };
+    let sim = ClusterSim::new(hw);
+
+    for v in Variant::ALL {
+        b.bench(&format!("sim/iteration/{}", v.name()), || {
+            std::hint::black_box(sim.spmv_iteration(v, &inp).total);
+        });
+    }
+    b.bench("model/predict_v1", || {
+        std::hint::black_box(model::predict_v1(&inp).total);
+    });
+    b.bench("model/predict_v2", || {
+        std::hint::black_box(model::predict_v2(&inp).total);
+    });
+    b.bench("model/predict_v3", || {
+        std::hint::black_box(model::predict_v3(&inp).total);
+    });
+    b.finish();
+}

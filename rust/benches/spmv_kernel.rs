@@ -1,0 +1,73 @@
+//! Criterion-lite bench: the native SpMV hot path (L3's per-block kernel).
+//!
+//! The §Perf target (EXPERIMENTS.md): sustain ≥ 60 % of the host-STREAM
+//! roofline for the eq. (6) traffic formula (216 B/row at r_nz = 16).
+
+use upcsim::benchlib::{BenchConfig, Bencher};
+use upcsim::matrix::Ellpack;
+use upcsim::mesh::{TetGridSpec, TetMesh};
+use upcsim::microbench;
+use upcsim::spmv::{spmv_block_gathered, spmv_parallel};
+use upcsim::util::fmt;
+
+fn main() {
+    let mut b = Bencher::from_args(BenchConfig::default());
+
+    // Host roofline anchor.
+    let stream = microbench::stream_host(1 << 21);
+    println!("host STREAM triad: {}\n", fmt::rate(stream.bandwidth()));
+
+    let mesh = TetMesh::generate(&TetGridSpec::ventricle(400_000, 7));
+    let m = Ellpack::diffusion_from_mesh(&mesh);
+    let x: Vec<f64> = m.initial_vector(3);
+    let mut y = vec![0.0f64; m.n];
+
+    // Whole-matrix pass: n rows × 216 B of eq.(6) traffic.
+    let bytes = m.n as f64 * m.d_min_comp_bytes();
+    b.bench_bytes("spmv/native/full-pass", bytes, || {
+        spmv_block_gathered(0, &m.diag, &m.a, &m.j, m.r_nz, &x, &mut y);
+        std::hint::black_box(&y);
+    });
+
+    // Block-tiled pass (the shape the executors drive): 4096-row blocks.
+    let bs = 4096;
+    b.bench_bytes("spmv/native/4096-blocks", bytes, || {
+        let mut off = 0;
+        while off < m.n {
+            let len = (m.n - off).min(bs);
+            spmv_block_gathered(
+                off,
+                &m.diag[off..off + len],
+                &m.a[off * 16..(off + len) * 16],
+                &m.j[off * 16..(off + len) * 16],
+                16,
+                &x,
+                &mut y[off..off + len],
+            );
+            off += len;
+        }
+        std::hint::black_box(&y);
+    });
+
+    // Host-parallel pass — the like-for-like comparison against the
+    // all-core STREAM roofline.
+    b.bench_bytes("spmv/native/parallel", bytes, || {
+        spmv_parallel(&m.diag, &m.a, &m.j, m.r_nz, &x, &mut y);
+        std::hint::black_box(&y);
+    });
+
+    // Sequential oracle (Listing 1) for reference.
+    b.bench_bytes("spmv/listing1-oracle", bytes, || {
+        m.spmv_seq(&x, &mut y);
+        std::hint::black_box(&y);
+    });
+
+    if let Some(r) = b.results().iter().find(|r| r.name.contains("parallel")) {
+        let frac = r.bandwidth().unwrap() / stream.bandwidth();
+        println!(
+            "\nparallel kernel sustains {:.1}% of host STREAM roofline (target ≥ 60%)",
+            frac * 100.0
+        );
+    }
+    b.finish();
+}

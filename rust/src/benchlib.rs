@@ -1,0 +1,235 @@
+//! Criterion-lite: a minimal benchmarking harness.
+//!
+//! The offline build ships no `criterion`, so `cargo bench` runs
+//! `harness = false` binaries (`rust/benches/*.rs`) built on this module.
+//! Each benchmark does timed warmup followed by batched measurement until a
+//! wall-clock budget or iteration cap is reached, and reports mean/σ/min/p50.
+
+use crate::util::fmt;
+use crate::util::Stats;
+use std::time::{Duration, Instant};
+
+/// Configuration for a benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup budget.
+    pub warmup: Duration,
+    /// Measurement budget.
+    pub measure: Duration,
+    /// Minimum number of measured samples.
+    pub min_samples: usize,
+    /// Maximum number of measured samples.
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_samples: 10,
+            max_samples: 200,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for heavyweight end-to-end benchmarks.
+    pub fn heavy() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(100),
+            measure: Duration::from_secs(3),
+            min_samples: 3,
+            max_samples: 20,
+        }
+    }
+}
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration time statistics, in seconds.
+    pub time: Stats,
+    /// Optional throughput denominator: items processed per iteration.
+    pub items_per_iter: Option<f64>,
+    /// Optional bytes moved per iteration (for bandwidth reporting).
+    pub bytes_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|it| it / self.time.mean)
+    }
+
+    pub fn bandwidth(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|b| b / self.time.mean)
+    }
+
+    pub fn render(&self) -> String {
+        let mut line = format!(
+            "{:<44} {:>12} ± {:>10}  (min {:>10}, n={})",
+            self.name,
+            fmt::secs(self.time.mean),
+            fmt::secs(self.time.std),
+            fmt::secs(self.time.min),
+            self.time.n,
+        );
+        if let Some(tp) = self.throughput() {
+            line.push_str(&format!("  {:>10.2} Melem/s", tp / 1e6));
+        }
+        if let Some(bw) = self.bandwidth() {
+            line.push_str(&format!("  {:>12}", fmt::rate(bw)));
+        }
+        line
+    }
+}
+
+/// A collection of benchmarks sharing one configuration; prints results as
+/// they complete and a summary at the end.
+pub struct Bencher {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+    filter: Option<String>,
+}
+
+impl Bencher {
+    /// Create a bencher; honours a substring filter passed as argv[1]
+    /// (mirroring `cargo bench -- <filter>`).
+    pub fn from_args(config: BenchConfig) -> Bencher {
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with("--"));
+        Bencher { config, results: Vec::new(), filter }
+    }
+
+    pub fn new(config: BenchConfig) -> Bencher {
+        Bencher { config, results: Vec::new(), filter: None }
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Run one benchmark. `f` is called once per iteration; use
+    /// `std::hint::black_box` inside to defeat the optimizer.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Option<&BenchResult> {
+        self.bench_with(name, None, None, &mut f)
+    }
+
+    /// Run one benchmark with a throughput denominator (`items` processed per
+    /// iteration).
+    pub fn bench_items<F: FnMut()>(&mut self, name: &str, items: f64, mut f: F) -> Option<&BenchResult> {
+        self.bench_with(name, Some(items), None, &mut f)
+    }
+
+    /// Run one benchmark with a bandwidth denominator (`bytes` moved per
+    /// iteration).
+    pub fn bench_bytes<F: FnMut()>(&mut self, name: &str, bytes: f64, mut f: F) -> Option<&BenchResult> {
+        self.bench_with(name, None, Some(bytes), &mut f)
+    }
+
+    fn bench_with(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        bytes: Option<f64>,
+        f: &mut dyn FnMut(),
+    ) -> Option<&BenchResult> {
+        if !self.enabled(name) {
+            return None;
+        }
+        // Warmup, also estimating the per-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.config.warmup || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let est = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+
+        // Choose a batch size so one sample takes ≥ ~1ms (amortizes timer cost).
+        let batch = ((1e-3 / est.max(1e-12)).ceil() as u64).clamp(1, 1_000_000);
+        let mut samples = Vec::new();
+        let measure_start = Instant::now();
+        while (measure_start.elapsed() < self.config.measure
+            || samples.len() < self.config.min_samples)
+            && samples.len() < self.config.max_samples
+        {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+        }
+
+        let result = BenchResult {
+            name: name.to_string(),
+            time: Stats::from(&samples),
+            items_per_iter: items,
+            bytes_per_iter: bytes,
+        };
+        println!("{}", result.render());
+        self.results.push(result);
+        self.results.last()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print a final summary block.
+    pub fn finish(&self) {
+        println!("\n=== {} benchmarks complete ===", self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_samples: 3,
+            max_samples: 10,
+        }
+    }
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher::new(quick());
+        let mut acc = 0u64;
+        b.bench("noop-ish", || {
+            acc = std::hint::black_box(acc.wrapping_add(1));
+        });
+        let r = &b.results()[0];
+        assert!(r.time.mean > 0.0);
+        assert!(r.time.n >= 3);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bencher::new(quick());
+        b.bench_items("items", 100.0, || {
+            std::hint::black_box(0u64);
+        });
+        assert!(b.results()[0].throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bencher::new(quick());
+        b.filter = Some("nomatch".to_string());
+        assert!(b.bench("skipped", || {}).is_none());
+        assert!(b.results().is_empty());
+    }
+}

@@ -1,0 +1,122 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline environment).
+//!
+//! Grammar: `repro <subcommand> [--flag value]...`. Flags are typed through
+//! the accessor methods; unknown flags are an error so typos fail loudly.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus `--key value` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags that were consumed by an accessor (for unknown-flag detection).
+    seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from `std::env::args` (skipping argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(name) = item.strip_prefix("--") {
+                let (key, value) = match name.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => {
+                        // boolean flags: next token missing or another flag
+                        match iter.peek() {
+                            Some(next) if !next.starts_with("--") => {
+                                (name.to_string(), iter.next().unwrap())
+                            }
+                            _ => (name.to_string(), "true".to_string()),
+                        }
+                    }
+                };
+                if out.flags.insert(key.clone(), value).is_some() {
+                    bail!("duplicate flag --{key}");
+                }
+            } else if out.subcommand.is_empty() {
+                out.subcommand = item;
+            } else {
+                out.positional.push(item);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str_flag(&self, key: &str) -> Option<&str> {
+        self.seen.borrow_mut().insert(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize_flag(&self, key: &str, default: usize) -> Result<usize> {
+        match self.str_flag(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.str_flag(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// After all accessors ran: error on flags nobody consumed.
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for key in self.flags.keys() {
+            if !seen.contains(key) {
+                bail!("unknown flag --{key} for subcommand '{}'", self.subcommand);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse("bench table3 --scale 16 --iters=500 --full");
+        assert_eq!(a.subcommand, "bench");
+        assert_eq!(a.positional, vec!["table3"]);
+        assert_eq!(a.usize_flag("scale", 1).unwrap(), 16);
+        assert_eq!(a.usize_flag("iters", 1).unwrap(), 500);
+        assert!(a.bool_flag("full"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = parse("run --oops 3");
+        let _ = a.usize_flag("scale", 1);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn duplicate_flag_rejected() {
+        assert!(Args::parse(
+            ["x", "--a", "1", "--a", "2"].iter().map(|s| s.to_string())
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn bad_int_rejected() {
+        let a = parse("x --n abc");
+        assert!(a.usize_flag("n", 0).is_err());
+    }
+}

@@ -1,0 +1,421 @@
+//! The traffic analyzer: one pass over each thread's owned rows of `J`.
+//!
+//! This is the paper's "one-time preparation step" (§4.2 pre-screening and
+//! §4.3.1), generalized to produce in a single sweep every quantity all three
+//! models need. It is deliberately implemented over the *global* `J` array +
+//! [`Layout`] rather than over executor state, so models, simulator and
+//! executors all consume the same counts (DESIGN.md §5).
+
+use super::plan::CommPlan;
+use crate::pgas::{Layout, Topology};
+
+/// Per-thread traffic statistics (counts of values/blocks/messages; byte
+/// conversions happen in the models).
+#[derive(Debug, Clone, Default)]
+pub struct ThreadTraffic {
+    /// §5.2.3: off-owner access occurrences whose owner shares the node.
+    pub c_local_indv: u64,
+    /// §5.2.3: off-owner access occurrences whose owner is on another node.
+    pub c_remote_indv: u64,
+    /// §5.2.4: needed blocks residing on this thread's node (own blocks
+    /// included — Listing 4 transports those too).
+    pub b_local: u32,
+    /// §5.2.4: needed blocks residing on other nodes.
+    pub b_remote: u32,
+    /// §5.2.5: Σ sizes (in values) of outgoing messages to same-node peers.
+    pub s_local_out: u64,
+    /// §5.2.5: Σ sizes of outgoing messages to other-node peers.
+    pub s_remote_out: u64,
+    /// §5.2.5: Σ sizes of incoming messages from same-node peers.
+    pub s_local_in: u64,
+    /// §5.2.5: Σ sizes of incoming messages from other-node peers.
+    pub s_remote_in: u64,
+    /// Number of outgoing messages to same-node peers.
+    pub c_local_out: u32,
+    /// §5.2.5 `C_thread^{remote,out}`: outgoing inter-node messages.
+    pub c_remote_out: u32,
+    /// Incoming message counts (for symmetry checks / reporting).
+    pub c_local_in: u32,
+    pub c_remote_in: u32,
+    /// Cache-locality statistic for the simulator: genuine `x` accesses
+    /// whose |row − col| exceeds the LLC reuse window (see `sim`).
+    pub far_accesses: u64,
+    /// Total genuine (non-padding) off-diagonal accesses by this thread.
+    pub total_accesses: u64,
+}
+
+impl ThreadTraffic {
+    /// All off-owner access occurrences (v1 traffic volume measure:
+    /// `(c_local_indv + c_remote_indv) · sizeof(double)` bytes move).
+    pub fn c_total_indv(&self) -> u64 {
+        self.c_local_indv + self.c_remote_indv
+    }
+
+    /// Total unique values this thread must receive (v3 traffic volume).
+    pub fn s_total_in(&self) -> u64 {
+        self.s_local_in + self.s_remote_in
+    }
+}
+
+/// The complete analysis for one (matrix pattern, layout, topology) triple.
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    pub layout: Layout,
+    pub topo: Topology,
+    pub per_thread: Vec<ThreadTraffic>,
+    pub plan: CommPlan,
+    /// `needed_blocks[t]` — bitmap over global block ids (v2's
+    /// `block_is_needed` array, Listing 4).
+    pub needed_blocks: Vec<Vec<u64>>,
+}
+
+impl Analysis {
+    /// Run the analysis. `j` is the flattened `n × r_nz` column-index table;
+    /// `layout` describes `x`/`y` (the paper couples `A`/`J` layouts to it by
+    /// construction). `cache_window`: |row−col| beyond which an `x` access
+    /// is counted as a likely LLC miss (simulator input; use
+    /// [`crate::sim::DEFAULT_CACHE_WINDOW`]).
+    pub fn build(
+        j: &[u32],
+        r_nz: usize,
+        layout: Layout,
+        topo: Topology,
+        cache_window: usize,
+    ) -> Analysis {
+        assert_eq!(topo.threads(), layout.threads);
+        assert_eq!(j.len(), layout.n * r_nz);
+        let threads = layout.threads;
+        let nblks = layout.nblks();
+        let bitmap_words = crate::util::ceil_div(nblks, 64);
+
+        // Per-thread scan, parallelized across host cores in chunks of UPC
+        // threads. Each scan produces (traffic, needed-bitmap, recv-needs).
+        let mut results: Vec<Option<(ThreadTraffic, Vec<u64>, Vec<(u32, u32)>)>> =
+            (0..threads).map(|_| None).collect();
+        let host = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        let chunk = crate::util::ceil_div(threads, host.min(threads));
+        std::thread::scope(|scope| {
+            for slab in results.chunks_mut(chunk).enumerate() {
+                let (ci, slab) = slab;
+                let first_t = ci * chunk;
+                scope.spawn(move || {
+                    for (off, slot) in slab.iter_mut().enumerate() {
+                        let t = first_t + off;
+                        *slot = Some(scan_thread(t, j, r_nz, layout, topo, cache_window, bitmap_words));
+                    }
+                });
+            }
+        });
+
+        let mut per_thread = Vec::with_capacity(threads);
+        let mut needed_blocks = Vec::with_capacity(threads);
+        let mut recv_needs = Vec::with_capacity(threads);
+        for r in results {
+            let (traffic, bitmap, needs) = r.unwrap();
+            per_thread.push(traffic);
+            needed_blocks.push(bitmap);
+            recv_needs.push(needs);
+        }
+
+        let plan = CommPlan::from_recv_needs(threads, recv_needs);
+
+        // Fill in the derived send-side and recv-side S/C statistics.
+        for t in 0..threads {
+            for m in &plan.send[t] {
+                let local = topo.same_node(t, m.peer as usize);
+                let tt = &mut per_thread[t];
+                if local {
+                    tt.s_local_out += m.indices.len() as u64;
+                    tt.c_local_out += 1;
+                } else {
+                    tt.s_remote_out += m.indices.len() as u64;
+                    tt.c_remote_out += 1;
+                }
+            }
+            for m in &plan.recv[t] {
+                let local = topo.same_node(t, m.peer as usize);
+                let tt = &mut per_thread[t];
+                if local {
+                    tt.s_local_in += m.indices.len() as u64;
+                    tt.c_local_in += 1;
+                } else {
+                    tt.s_remote_in += m.indices.len() as u64;
+                    tt.c_remote_in += 1;
+                }
+            }
+        }
+
+        Analysis { layout, topo, per_thread, plan, needed_blocks }
+    }
+
+    /// Is global block `b` needed by thread `t`?
+    #[inline]
+    pub fn block_needed(&self, t: usize, b: usize) -> bool {
+        self.needed_blocks[t][b / 64] >> (b % 64) & 1 == 1
+    }
+
+    /// Communication volume per thread in bytes for each variant, as plotted
+    /// in Figure 2 (top): v1 moves every off-owner occurrence individually;
+    /// v2 moves every needed non-own block in its entirety; v3 moves the
+    /// condensed unique values (incoming side).
+    pub fn volume_bytes(&self, t: usize) -> (f64, f64, f64) {
+        const D: f64 = 8.0;
+        let tt = &self.per_thread[t];
+        let v1 = tt.c_total_indv() as f64 * D;
+        // v2: needed blocks excluding the thread's own blocks (those move
+        // within private memory; Figure 2 plots between-thread volume).
+        let mut v2_blocks = 0.0f64;
+        for b in 0..self.layout.nblks() {
+            if self.layout.owner_of_block(b) != t && self.block_needed(t, b) {
+                v2_blocks += self.layout.block_len(b) as f64;
+            }
+        }
+        let v2 = v2_blocks * D;
+        let v3 = tt.s_total_in() as f64 * D;
+        (v1, v2, v3)
+    }
+
+    /// Global conservation / sanity checks (used by tests).
+    pub fn validate(&self) -> Result<(), String> {
+        self.plan.validate()?;
+        let sum = |f: fn(&ThreadTraffic) -> u64| -> u64 { self.per_thread.iter().map(f).sum() };
+        if sum(|t| t.s_local_out) != sum(|t| t.s_local_in) {
+            return Err("local out/in volume mismatch".into());
+        }
+        if sum(|t| t.s_remote_out) != sum(|t| t.s_remote_in) {
+            return Err("remote out/in volume mismatch".into());
+        }
+        for (t, tt) in self.per_thread.iter().enumerate() {
+            // v3 never moves more values than v1 touches occurrences.
+            if tt.s_total_in() > tt.c_total_indv() {
+                return Err(format!("thread {t}: condensed volume exceeds occurrences"));
+            }
+            if tt.far_accesses > tt.total_accesses {
+                return Err(format!("thread {t}: far > total accesses"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Scan one UPC thread's owned rows.
+fn scan_thread(
+    t: usize,
+    j: &[u32],
+    r_nz: usize,
+    layout: Layout,
+    topo: Topology,
+    cache_window: usize,
+    bitmap_words: usize,
+) -> (ThreadTraffic, Vec<u64>, Vec<(u32, u32)>) {
+    let mut traffic = ThreadTraffic::default();
+    let mut bitmap = vec![0u64; bitmap_words];
+    let mut off_owner: Vec<(u32, u32)> = Vec::new();
+    let my_node = topo.node_of_thread(t);
+    let mark = |bitmap: &mut Vec<u64>, b: usize| bitmap[b / 64] |= 1 << (b % 64);
+
+    for b in layout.blocks_of_thread(t) {
+        // Own block is always needed: every row i reads x[i] (Listing 4
+        // copies own blocks into mythread_x_copy as well).
+        mark(&mut bitmap, b);
+        let (start, len) = layout.block_range(b);
+        for i in start..start + len {
+            let row = &j[i * r_nz..(i + 1) * r_nz];
+            for &col in row {
+                let c = col as usize;
+                if c == i {
+                    continue; // EllPack padding — never a real access
+                }
+                traffic.total_accesses += 1;
+                if c.abs_diff(i) > cache_window {
+                    traffic.far_accesses += 1;
+                }
+                // §Perf fast path: with a spatially local ordering most
+                // references land in the row's own block — skip the
+                // owner computation entirely (EXPERIMENTS.md §Perf).
+                if c >= start && c < start + len {
+                    continue;
+                }
+                let owner = layout.owner_of_index(c);
+                if owner == t {
+                    continue; // private (a different own block)
+                }
+                mark(&mut bitmap, layout.block_of_index(c));
+                if topo.node_of_thread(owner) == my_node {
+                    traffic.c_local_indv += 1;
+                } else {
+                    traffic.c_remote_indv += 1;
+                }
+                off_owner.push((owner as u32, col));
+            }
+        }
+    }
+
+    // Needed-block counts by residence (B_local includes own blocks).
+    for b in 0..layout.nblks() {
+        if bitmap[b / 64] >> (b % 64) & 1 == 1 {
+            let owner = layout.owner_of_block(b);
+            if topo.node_of_thread(owner) == my_node {
+                traffic.b_local += 1;
+            } else {
+                traffic.b_remote += 1;
+            }
+        }
+    }
+
+    // Unique (owner, index) needs, sorted by owner then index — the paper's
+    // condensing step.
+    off_owner.sort_unstable();
+    off_owner.dedup();
+    (traffic, bitmap, off_owner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::Ellpack;
+    use crate::testing::check_prop;
+
+    /// Hand-checkable case: n=8, BLOCKSIZE=2, THREADS=2, 1 node.
+    /// Blocks: b0=[0,1](t0) b1=[2,3](t1) b2=[4,5](t0) b3=[6,7](t1).
+    #[test]
+    fn tiny_hand_example() {
+        let layout = Layout::new(8, 2, 2);
+        let topo = Topology::single_node(2);
+        // Row i references (i+2) % 8 — exactly one genuine access per row,
+        // always one block to the "right", hence always the other thread.
+        let r_nz = 2;
+        let mut j = vec![0u32; 8 * r_nz];
+        for i in 0..8 {
+            j[i * r_nz] = ((i + 2) % 8) as u32;
+            j[i * r_nz + 1] = i as u32; // padding
+        }
+        let a = Analysis::build(&j, r_nz, layout, topo, usize::MAX);
+        a.validate().unwrap();
+        // Every genuine access is off-owner and local (single node).
+        for t in 0..2 {
+            let tt = &a.per_thread[t];
+            assert_eq!(tt.c_local_indv, 4, "thread {t}");
+            assert_eq!(tt.c_remote_indv, 0);
+            assert_eq!(tt.b_remote, 0);
+            // Needs 2 own + 2 other blocks.
+            assert_eq!(tt.b_local, 4);
+            // Condensed: 4 unique values in, in 2 messages (one per peer
+            // block... both foreign blocks owned by the single other thread
+            // → exactly 1 consolidated message of 4 values).
+            assert_eq!(tt.s_total_in(), 4);
+            assert_eq!(a.plan.recv[t].len(), 1);
+            assert_eq!(a.plan.recv[t][0].indices.len(), 4);
+        }
+    }
+
+    #[test]
+    fn remote_vs_local_split_follows_topology() {
+        let layout = Layout::new(8, 2, 4);
+        let topo = Topology::new(2, 2); // t0,t1 node0; t2,t3 node1
+        let r_nz = 1;
+        // Row 0 (t0) references index 2 (t1, same node) — local.
+        // Row 1 (t0) references index 4 (t2, other node) — remote.
+        let mut j: Vec<u32> = (0..8u32).collect(); // default self (padding)
+        j[0] = 2;
+        j[1] = 4;
+        let a = Analysis::build(&j, r_nz, layout, topo, usize::MAX);
+        a.validate().unwrap();
+        let t0 = &a.per_thread[0];
+        assert_eq!(t0.c_local_indv, 1);
+        assert_eq!(t0.c_remote_indv, 1);
+        assert_eq!(t0.b_local, 2); // own block 0 + t1's block 1
+        assert_eq!(t0.b_remote, 1); // t2's block 2
+        assert_eq!(t0.s_local_in, 1);
+        assert_eq!(t0.s_remote_in, 1);
+        // Senders see the transposed statistics.
+        assert_eq!(a.per_thread[1].s_local_out, 1);
+        assert_eq!(a.per_thread[2].s_remote_out, 1);
+        assert_eq!(a.per_thread[2].c_remote_out, 1);
+    }
+
+    #[test]
+    fn condensing_dedups_repeated_references() {
+        // Two rows of t0 both reference index 3 (owned by t1): v1 counts 2
+        // occurrences, v3 moves 1 value.
+        // With block_size=1, owner(i) = i % THREADS; use two slots in one
+        // row so one thread references the same remote value twice.
+        let layout = Layout::new(4, 1, 2); // owners: 0,1,0,1
+        let topo = Topology::single_node(2);
+        let r_nz = 2;
+        let mut j = vec![0u32; 8];
+        for i in 0..4 {
+            j[i * 2] = i as u32;
+            j[i * 2 + 1] = i as u32;
+        }
+        j[0] = 3; // row 0 (t0) → idx 3 (t1)
+        j[1] = 3; // row 0 again
+        let a = Analysis::build(&j, r_nz, layout, topo, usize::MAX);
+        a.validate().unwrap();
+        assert_eq!(a.per_thread[0].c_local_indv, 2);
+        assert_eq!(a.per_thread[0].s_total_in(), 1);
+    }
+
+    #[test]
+    fn figure2_volume_ordering_v3_leq_v2() {
+        // On a mesh-like local pattern v3 ≤ v2 (condensed ≤ whole blocks)
+        // and typically v1 ≥ v3 (occurrences ≥ unique).
+        let mesh = crate::mesh::tiny_mesh();
+        let m = Ellpack::diffusion_from_mesh(&mesh);
+        let layout = Layout::new(m.n, 256, 8);
+        let topo = Topology::new(2, 4);
+        let a = Analysis::build(&m.j, m.r_nz, layout, topo, usize::MAX);
+        a.validate().unwrap();
+        for t in 0..8 {
+            let (v1, v2, v3) = a.volume_bytes(t);
+            assert!(v3 <= v2 + 1e-9, "t{t}: v3 {v3} > v2 {v2}");
+            assert!(v3 <= v1 + 1e-9, "t{t}: v3 {v3} > v1 {v1}");
+        }
+    }
+
+    #[test]
+    fn cache_window_counts_far_accesses() {
+        let mesh = crate::mesh::tiny_mesh();
+        let m = Ellpack::diffusion_from_mesh(&mesh);
+        let layout = Layout::new(m.n, 512, 4);
+        let topo = Topology::single_node(4);
+        let near = Analysis::build(&m.j, m.r_nz, layout, topo, usize::MAX);
+        let far = Analysis::build(&m.j, m.r_nz, layout, topo, 0);
+        let nf: u64 = near.per_thread.iter().map(|t| t.far_accesses).sum();
+        let ff: u64 = far.per_thread.iter().map(|t| t.far_accesses).sum();
+        let tot: u64 = far.per_thread.iter().map(|t| t.total_accesses).sum();
+        assert_eq!(nf, 0);
+        assert_eq!(ff, tot);
+    }
+
+    /// Property: conservation + volume ordering hold for random patterns.
+    #[test]
+    fn prop_conservation_random_patterns() {
+        check_prop(
+            "analysis-conservation",
+            24,
+            |r| {
+                let n = r.usize_in(8, 600);
+                let rnz = r.usize_in(1, 6);
+                let bs = r.usize_in(1, 64);
+                let tpn = r.usize_in(1, 4);
+                let nodes = r.usize_in(1, 4);
+                let m = Ellpack::random(n, rnz, r.next_u64());
+                (m, Layout::new(n, bs, tpn * nodes), Topology::new(nodes, tpn))
+            },
+            |(m, layout, topo)| {
+                let a = Analysis::build(&m.j, m.r_nz, *layout, *topo, 100);
+                a.validate().map_err(|e| e)?;
+                // every thread's own blocks are needed
+                for t in 0..layout.threads {
+                    for b in layout.blocks_of_thread(t) {
+                        if !a.block_needed(t, b) {
+                            return Err(format!("thread {t} misses own block {b}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

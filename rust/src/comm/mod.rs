@@ -1,0 +1,26 @@
+//! Communication-traffic analysis.
+//!
+//! Everything the paper's §5 models need is a function of *who accesses
+//! what*: given the sparsity pattern `J`, the shared-array [`Layout`] and the
+//! cluster [`Topology`], this module derives, per thread,
+//!
+//! * `C_thread^{local,indv}` / `C_thread^{remote,indv}` — occurrence counts
+//!   of individual off-owner accesses (§5.2.3, UPCv1),
+//! * `B_thread^{local}` / `B_thread^{remote}` — needed-block counts
+//!   (§5.2.4, UPCv2),
+//! * `S_thread^{local,out}` / `S_thread^{remote,out}` /
+//!   `S_thread^{local,in}` / `S_thread^{remote,in}` and message counts —
+//!   condensed/consolidated message sizes (§5.2.5, UPCv3),
+//!
+//! plus the actual [`CommPlan`] (per-pair unique index lists) that the UPCv3
+//! executor uses to pack/unpack real messages — the paper's "preparation
+//! step" of §4.3.1.
+//!
+//! [`Layout`]: crate::pgas::Layout
+//! [`Topology`]: crate::pgas::Topology
+
+mod analysis;
+mod plan;
+
+pub use analysis::{Analysis, ThreadTraffic};
+pub use plan::{CommPlan, Message};

@@ -1,0 +1,137 @@
+//! The condensed + consolidated communication plan (paper §4.3.1).
+//!
+//! For every ordered pair of threads `(sender, receiver)` the plan holds the
+//! sorted list of *unique* global `x`-indices owned by `sender` that
+//! `receiver`'s rows reference. This is exactly the content of the paper's
+//! `mythread_send_value_list` / `mythread_recv_value_list` arrays, except we
+//! keep global indices and let executors translate to local offsets through
+//! the [`Layout`](crate::pgas::Layout) (the paper does the same translation
+//! when casting `&x[MYTHREAD*BLOCKSIZE]` to a pointer-to-local).
+
+/// One consolidated message between a thread pair.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Message {
+    /// The peer thread (receiver in a send list, sender in a recv list).
+    pub peer: u32,
+    /// Sorted unique global indices of the `x` values carried.
+    pub indices: Vec<u32>,
+}
+
+/// Send/receive lists for all threads.
+#[derive(Debug, Clone, Default)]
+pub struct CommPlan {
+    /// `send[t]` — messages thread `t` packs and `upc_memput`s, sorted by
+    /// `peer`.
+    pub send: Vec<Vec<Message>>,
+    /// `recv[t]` — messages thread `t` unpacks, sorted by `peer`.
+    /// `recv[t][k].indices` are positions in `mythread_x_copy` (global
+    /// indices) the incoming values land in.
+    pub recv: Vec<Vec<Message>>,
+}
+
+impl CommPlan {
+    /// Build the send side as the transpose of per-thread receive needs.
+    /// `recv_needs[t]` = sorted unique `(owner, index)` pairs thread `t`
+    /// requires from other threads.
+    pub fn from_recv_needs(threads: usize, recv_needs: Vec<Vec<(u32, u32)>>) -> CommPlan {
+        assert_eq!(recv_needs.len(), threads);
+        let mut recv: Vec<Vec<Message>> = Vec::with_capacity(threads);
+        for needs in &recv_needs {
+            let mut msgs: Vec<Message> = Vec::new();
+            for &(owner, idx) in needs {
+                match msgs.last_mut() {
+                    Some(m) if m.peer == owner => m.indices.push(idx),
+                    _ => msgs.push(Message { peer: owner, indices: vec![idx] }),
+                }
+            }
+            recv.push(msgs);
+        }
+        // Transpose: sender side.
+        let mut send: Vec<Vec<Message>> = vec![Vec::new(); threads];
+        for (t, msgs) in recv.iter().enumerate() {
+            for m in msgs {
+                send[m.peer as usize].push(Message { peer: t as u32, indices: m.indices.clone() });
+            }
+        }
+        for s in &mut send {
+            s.sort_by_key(|m| m.peer);
+        }
+        CommPlan { send, recv }
+    }
+
+    /// Total values exchanged (Σ message lengths, counted once per message).
+    pub fn total_values(&self) -> usize {
+        self.send.iter().flatten().map(|m| m.indices.len()).sum()
+    }
+
+    /// Number of messages thread `t` sends.
+    pub fn messages_from(&self, t: usize) -> usize {
+        self.send[t].len()
+    }
+
+    /// Consistency check: send is the exact transpose of recv, lists sorted
+    /// and unique, and no self-messages.
+    pub fn validate(&self) -> Result<(), String> {
+        let threads = self.send.len();
+        if self.recv.len() != threads {
+            return Err("send/recv arity".into());
+        }
+        for (t, msgs) in self.recv.iter().enumerate() {
+            for m in msgs {
+                if m.peer as usize == t {
+                    return Err(format!("thread {t} receives from itself"));
+                }
+                if m.indices.is_empty() {
+                    return Err(format!("empty message {} → {t}", m.peer));
+                }
+                if !m.indices.windows(2).all(|w| w[0] < w[1]) {
+                    return Err(format!("recv list {} → {t} not sorted/unique", m.peer));
+                }
+                // matching send entry
+                let s = &self.send[m.peer as usize];
+                match s.iter().find(|sm| sm.peer as usize == t) {
+                    Some(sm) if sm.indices == m.indices => {}
+                    _ => return Err(format!("transpose mismatch {} → {t}", m.peer)),
+                }
+            }
+        }
+        // No send without matching recv.
+        let sends: usize = self.send.iter().map(|v| v.len()).sum();
+        let recvs: usize = self.recv.iter().map(|v| v.len()).sum();
+        if sends != recvs {
+            return Err(format!("{sends} sends vs {recvs} recvs"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_roundtrip() {
+        // t0 needs idx 5,7 from t1; t2 needs idx 5 from t1 and 0 from t0.
+        let needs = vec![
+            vec![(1u32, 5u32), (1, 7)],
+            vec![],
+            vec![(0, 0), (1, 5)],
+        ];
+        let plan = CommPlan::from_recv_needs(3, needs);
+        plan.validate().unwrap();
+        assert_eq!(plan.send[1].len(), 2);
+        assert_eq!(plan.send[1][0], Message { peer: 0, indices: vec![5, 7] });
+        assert_eq!(plan.send[1][1], Message { peer: 2, indices: vec![5] });
+        assert_eq!(plan.send[0], vec![Message { peer: 2, indices: vec![0] }]);
+        assert_eq!(plan.total_values(), 4);
+        assert_eq!(plan.messages_from(1), 2);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let needs = vec![vec![(1u32, 5u32)], vec![]];
+        let mut plan = CommPlan::from_recv_needs(2, needs);
+        plan.send[1][0].indices = vec![6]; // corrupt
+        assert!(plan.validate().is_err());
+    }
+}

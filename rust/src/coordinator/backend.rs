@@ -1,0 +1,134 @@
+//! PJRT-backed [`BlockCompute`]: executes the AOT-compiled Pallas EllPack
+//! kernel from `artifacts/spmv_block.hlo.txt`.
+//!
+//! The artifact has a fixed row-tile size `B` (manifest `meta.block`) and
+//! fixed `r_nz`; the backend chops arbitrary blocks into `B`-row tiles,
+//! gathers the needed `x` values into a dense `(B, r_nz)` tile (the gather
+//! *is* the communication and therefore belongs to this layer — DESIGN.md
+//! §Hardware-Adaptation), pads the tail, and runs the executable.
+//!
+//! The artifacts are f32 (Pallas/interpret + PJRT-CPU path); the runner
+//! compares f32 results against the f64 native path with a tolerance.
+
+use crate::runtime::Engine;
+use crate::spmv::BlockCompute;
+use anyhow::{anyhow, Result};
+
+/// Name of the SpMV artifact in the manifest.
+pub const SPMV_ARTIFACT: &str = "spmv_block";
+
+/// A [`BlockCompute`] that runs the L1 Pallas kernel through PJRT.
+pub struct PjrtCompute {
+    engine: Engine,
+    /// Row-tile size of the compiled executable.
+    b: usize,
+    r_nz: usize,
+    // Reused staging buffers (f32).
+    d_buf: Vec<f32>,
+    xd_buf: Vec<f32>,
+    a_buf: Vec<f32>,
+    xg_buf: Vec<f32>,
+    /// Executions performed (for reporting).
+    pub calls: u64,
+}
+
+impl PjrtCompute {
+    /// Build from a discovered artifacts directory.
+    pub fn discover() -> Result<PjrtCompute> {
+        Self::new(Engine::discover()?)
+    }
+
+    pub fn new(mut engine: Engine) -> Result<PjrtCompute> {
+        let spec = engine.spec(SPMV_ARTIFACT)?.clone();
+        let b = *spec
+            .meta
+            .get("block")
+            .ok_or_else(|| anyhow!("{SPMV_ARTIFACT}: manifest missing meta.block"))?;
+        let r_nz = *spec
+            .meta
+            .get("r_nz")
+            .ok_or_else(|| anyhow!("{SPMV_ARTIFACT}: manifest missing meta.r_nz"))?;
+        engine.load(SPMV_ARTIFACT)?;
+        Ok(PjrtCompute {
+            engine,
+            b,
+            r_nz,
+            d_buf: vec![0.0; b],
+            xd_buf: vec![0.0; b],
+            a_buf: vec![0.0; b * r_nz],
+            xg_buf: vec![0.0; b * r_nz],
+            calls: 0,
+        })
+    }
+
+    /// Tile size of the compiled kernel.
+    pub fn tile_rows(&self) -> usize {
+        self.b
+    }
+}
+
+impl BlockCompute for PjrtCompute {
+    fn block(
+        &mut self,
+        offset: usize,
+        d: &[f64],
+        a: &[f64],
+        j: &[u32],
+        r_nz: usize,
+        x_copy: &[f64],
+        y: &mut [f64],
+    ) {
+        assert_eq!(r_nz, self.r_nz, "artifact compiled for r_nz={}", self.r_nz);
+        let b = self.b;
+        let len = y.len();
+        let mut k0 = 0usize;
+        while k0 < len {
+            let tile = (len - k0).min(b);
+            // Stage f32 inputs, zero-padding the tail tile. Padded rows have
+            // D = A = 0 → y = 0, discarded on copy-back.
+            self.d_buf[..tile].iter_mut().zip(&d[k0..k0 + tile]).for_each(|(o, &v)| *o = v as f32);
+            self.d_buf[tile..].fill(0.0);
+            self.xd_buf[..tile]
+                .iter_mut()
+                .zip(&x_copy[offset + k0..offset + k0 + tile])
+                .for_each(|(o, &v)| *o = v as f32);
+            self.xd_buf[tile..].fill(0.0);
+            self.a_buf[..tile * r_nz]
+                .iter_mut()
+                .zip(&a[k0 * r_nz..(k0 + tile) * r_nz])
+                .for_each(|(o, &v)| *o = v as f32);
+            self.a_buf[tile * r_nz..].fill(0.0);
+            // The gather — the coordinator-side half of the kernel.
+            for (g, &col) in self.xg_buf[..tile * r_nz]
+                .iter_mut()
+                .zip(&j[k0 * r_nz..(k0 + tile) * r_nz])
+            {
+                *g = x_copy[col as usize] as f32;
+            }
+            self.xg_buf[tile * r_nz..].fill(0.0);
+
+            let outs = self
+                .engine
+                .run_f32(
+                    SPMV_ARTIFACT,
+                    &[&self.d_buf, &self.xd_buf, &self.a_buf, &self.xg_buf],
+                )
+                .expect("PJRT execution failed");
+            self.calls += 1;
+            for (slot, &v) in y[k0..k0 + tile].iter_mut().zip(outs[0].iter()) {
+                *slot = v as f64;
+            }
+            k0 += tile;
+        }
+    }
+}
+
+impl std::fmt::Debug for PjrtCompute {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtCompute")
+            .field("tile_rows", &self.b)
+            .field("r_nz", &self.r_nz)
+            .field("calls", &self.calls)
+            .finish()
+    }
+}

@@ -1,0 +1,14 @@
+//! The coordinator — configuration, the end-to-end runner, and the
+//! PJRT-backed compute backend.
+//!
+//! This is the layer a downstream user scripts against: build a
+//! [`RunConfig`], call [`Runner::run`], get a [`RunReport`] containing the
+//! simulated-cluster time, the model prediction, the numeric result of
+//! actually integrating `v^ℓ = M v^{ℓ−1}` (§6.1), and traffic statistics.
+//! The CLI (`repro run`) and the examples are thin wrappers over this.
+
+mod backend;
+mod runner;
+
+pub use backend::PjrtCompute;
+pub use runner::{Backend, Problem, RunConfig, RunReport, Runner};

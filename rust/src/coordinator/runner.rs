@@ -1,0 +1,281 @@
+//! Run configuration and the end-to-end runner.
+
+use crate::comm::Analysis;
+use crate::machine::HwParams;
+use crate::matrix::Ellpack;
+use crate::mesh::{Ordering, TestProblem, TetGridSpec, TetMesh};
+use crate::model::{self, SpmvInputs};
+use crate::pgas::{Layout, Topology};
+use crate::sim::{ClusterSim, SimMeasurement};
+use crate::spmv::{run_variant_with, NativeCompute, SpmvState, Variant};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Which workload to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Problem {
+    /// One of the paper's Table 1 test problems, scaled down by
+    /// `scale_div` (see `RunConfig`).
+    Tp(TestProblem),
+    /// A custom mesh size (target tetrahedra, unscaled).
+    Custom(usize),
+}
+
+/// Compute backend for the numeric part.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Optimized Rust kernel.
+    Native,
+    /// AOT-compiled Pallas kernel through PJRT (requires `make artifacts`).
+    Pjrt,
+}
+
+/// Everything a run needs. Construct with [`RunConfig::default_for`] and
+/// override fields.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub problem: Problem,
+    /// Divide the paper-scale problem (and BLOCKSIZE schedule) by this.
+    pub scale_div: usize,
+    /// BLOCKSIZE for x/y/D (already scaled). `None` → paper schedule.
+    pub block_size: Option<usize>,
+    pub nodes: usize,
+    pub threads_per_node: usize,
+    pub variant: Variant,
+    /// Iterations of `v^ℓ = M v^{ℓ−1}` to *account* (simulated time scales
+    /// linearly; the paper uses 1000).
+    pub iters: usize,
+    /// Iterations to actually execute numerically (≤ iters; numeric result
+    /// is per-step identical in structure, so a handful suffices for
+    /// validation while the driver can run hundreds).
+    pub exec_steps: usize,
+    pub ordering: Ordering,
+    pub backend: Backend,
+    pub hw: HwParams,
+    pub seed: u64,
+}
+
+impl RunConfig {
+    /// Paper-like defaults: TP1 at 1/16 scale, UPCv3, 2 nodes × 16 threads,
+    /// 1000 accounted iterations, 5 executed steps.
+    pub fn default_for(problem: Problem) -> RunConfig {
+        RunConfig {
+            problem,
+            scale_div: 16,
+            block_size: None,
+            nodes: 2,
+            threads_per_node: 16,
+            variant: Variant::V3,
+            iters: 1000,
+            exec_steps: 5,
+            ordering: Ordering::Natural,
+            backend: Backend::Native,
+            hw: HwParams::abel(),
+            seed: 0xC0FFEE,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.nodes * self.threads_per_node
+    }
+
+    /// The paper's BLOCKSIZE schedule (Table 4), scaled by `scale_div`.
+    pub fn paper_blocksize(threads: usize, scale_div: usize) -> usize {
+        let paper = match threads {
+            0..=64 => 65_536,
+            65..=128 => 53_200,
+            129..=256 => 26_600,
+            257..=512 => 13_300,
+            _ => 6_650,
+        };
+        (paper / scale_div).max(1)
+    }
+
+    fn resolve_blocksize(&self, n: usize) -> usize {
+        let bs = self
+            .block_size
+            .unwrap_or_else(|| Self::paper_blocksize(self.threads(), self.scale_div));
+        // A layout needs at least one block; degenerate configs clamp.
+        bs.min(n).max(1)
+    }
+}
+
+/// The result of a run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub n: usize,
+    pub threads: usize,
+    pub block_size: usize,
+    pub variant: Variant,
+    /// Simulated ("measured") time for `iters` iterations.
+    pub sim_total: f64,
+    /// Model-predicted time for `iters` iterations.
+    pub model_total: f64,
+    /// Per-iteration simulated measurement (per-thread series etc.).
+    pub sim_iter: SimMeasurement,
+    /// ∞-norm of x after the executed steps (stability check).
+    pub final_max: f64,
+    /// Σ x after the executed steps (regression checksum).
+    pub checksum: f64,
+    /// ∞-norm of (x_ℓ − x_{ℓ−1}) per executed step (decays for diffusion).
+    pub residuals: Vec<f64>,
+    /// Host wall-clock seconds spent in the numeric loop.
+    pub exec_wall: f64,
+    /// Inter-thread payload bytes per executed step.
+    pub step_bytes: u64,
+    /// Backend actually used.
+    pub backend: Backend,
+}
+
+/// The end-to-end runner.
+pub struct Runner {
+    pub config: RunConfig,
+}
+
+impl Runner {
+    pub fn new(config: RunConfig) -> Runner {
+        Runner { config }
+    }
+
+    /// Build the mesh for the configured problem.
+    pub fn build_mesh(&self) -> TetMesh {
+        let cfg = &self.config;
+        let mesh = match cfg.problem {
+            Problem::Tp(tp) => tp.generate(cfg.scale_div),
+            Problem::Custom(target) => {
+                TetMesh::generate(&TetGridSpec::ventricle(target, cfg.seed))
+            }
+        };
+        cfg.ordering.apply(&mesh)
+    }
+
+    /// Run the full pipeline: mesh → matrix → analysis → model + sim →
+    /// numeric time integration.
+    pub fn run(&self) -> Result<RunReport> {
+        let mesh = self.build_mesh();
+        self.run_on(&mesh)
+    }
+
+    /// Run on a pre-built mesh (lets callers share a mesh across configs).
+    pub fn run_on(&self, mesh: &TetMesh) -> Result<RunReport> {
+        let cfg = &self.config;
+        let m = Ellpack::diffusion_from_mesh(mesh);
+        let bs = cfg.resolve_blocksize(m.n);
+        let layout = Layout::new(m.n, bs, cfg.threads());
+        let topo = Topology::new(cfg.nodes, cfg.threads_per_node);
+        let window = crate::harness::scaled_cache_window(self.config.scale_div.max(1));
+        let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, window);
+        let inp = SpmvInputs { layout, topo, hw: cfg.hw, r_nz: m.r_nz, analysis: &analysis };
+
+        // Timing: simulated-actual and model-predicted.
+        let sim = ClusterSim::new(cfg.hw);
+        let sim_iter = sim.spmv_iteration(cfg.variant, &inp);
+        let model_iter = match cfg.variant {
+            Variant::Naive => model::predict_naive(&inp, &sim.naive).total,
+            Variant::V1 => model::predict_v1(&inp).total,
+            Variant::V2 => model::predict_v2(&inp).total,
+            Variant::V3 => model::predict_v3(&inp).total,
+        };
+
+        // Numerics: execute `exec_steps` real steps of v = Mv.
+        let x0 = m.initial_vector(cfg.seed ^ 0x11);
+        let mut state = SpmvState::new(&m, bs, cfg.threads(), &x0);
+        let mut residuals = Vec::with_capacity(cfg.exec_steps);
+        let mut step_bytes = 0u64;
+        let t0 = Instant::now();
+        let mut pjrt = match cfg.backend {
+            Backend::Pjrt => Some(super::PjrtCompute::discover()?),
+            Backend::Native => None,
+        };
+        for _ in 0..cfg.exec_steps {
+            let out = match &mut pjrt {
+                Some(p) => run_variant_with(cfg.variant, &mut state, Some(&analysis), p),
+                None => {
+                    run_variant_with(cfg.variant, &mut state, Some(&analysis), &mut NativeCompute)
+                }
+            };
+            step_bytes = out.inter_thread_bytes;
+            // Residual ‖y − x‖∞ before the swap.
+            let xg = state.x_global();
+            let res = out
+                .y
+                .iter()
+                .zip(&xg)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            residuals.push(res);
+            state.swap_xy();
+        }
+        let exec_wall = t0.elapsed().as_secs_f64();
+        let xf = state.x_global();
+        let final_max = xf.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+        let checksum = xf.iter().sum();
+
+        Ok(RunReport {
+            n: m.n,
+            threads: cfg.threads(),
+            block_size: bs,
+            variant: cfg.variant,
+            sim_total: sim_iter.total * cfg.iters as f64,
+            model_total: model_iter * cfg.iters as f64,
+            sim_iter,
+            final_max,
+            checksum,
+            residuals,
+            exec_wall,
+            step_bytes,
+            backend: cfg.backend,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_config() -> RunConfig {
+        let mut cfg = RunConfig::default_for(Problem::Custom(2_000));
+        cfg.block_size = Some(64);
+        cfg.nodes = 2;
+        cfg.threads_per_node = 4;
+        cfg.iters = 100;
+        cfg.exec_steps = 3;
+        cfg
+    }
+
+    #[test]
+    fn runner_produces_consistent_report() {
+        let report = Runner::new(quick_config()).run().unwrap();
+        assert!(report.n > 1000);
+        assert_eq!(report.threads, 8);
+        assert!(report.sim_total > 0.0 && report.model_total > 0.0);
+        assert_eq!(report.residuals.len(), 3);
+        // Diffusion is stable and smoothing: residual decays.
+        assert!(report.residuals[2] <= report.residuals[0]);
+        assert!(report.final_max.is_finite());
+    }
+
+    #[test]
+    fn variants_share_checksum() {
+        let mesh = Runner::new(quick_config()).build_mesh();
+        let mut sums = Vec::new();
+        for v in Variant::ALL {
+            let mut cfg = quick_config();
+            cfg.variant = v;
+            let r = Runner::new(cfg).run_on(&mesh).unwrap();
+            sums.push(r.checksum);
+        }
+        for w in sums.windows(2) {
+            assert_eq!(w[0].to_bits(), w[1].to_bits(), "checksum drift across variants");
+        }
+    }
+
+    #[test]
+    fn paper_blocksize_schedule() {
+        assert_eq!(RunConfig::paper_blocksize(16, 1), 65_536);
+        assert_eq!(RunConfig::paper_blocksize(64, 1), 65_536);
+        assert_eq!(RunConfig::paper_blocksize(128, 1), 53_200);
+        assert_eq!(RunConfig::paper_blocksize(1024, 1), 6_650);
+        assert_eq!(RunConfig::paper_blocksize(16, 16), 4_096);
+    }
+}

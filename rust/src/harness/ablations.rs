@@ -1,0 +1,160 @@
+//! Ablation studies beyond the paper's tables (DESIGN.md §3 "extensions"):
+//! BLOCKSIZE tuning of the *total* time, row-ordering impact, and
+//! threads-per-node sensitivity. These quantify the design choices the paper
+//! discusses qualitatively (§6.4 "tuning BLOCKSIZE by the programmer is a
+//! viable approach to performance optimization").
+
+use super::{s2, HarnessConfig, Workspace};
+use crate::comm::Analysis;
+use crate::mesh::{Ordering, TestProblem};
+use crate::model::SpmvInputs;
+use crate::pgas::{Layout, Topology};
+use crate::sim::ClusterSim;
+use crate::spmv::Variant;
+use crate::util::fmt::Table;
+
+/// Total simulated time vs BLOCKSIZE for all three transformed variants
+/// (TP1, 2 nodes × 16 threads).
+pub fn ablation_blocksize(cfg: &HarnessConfig, ws: &mut Workspace) -> Table {
+    let m = ws.matrix(TestProblem::Tp1, cfg.scale_div, Ordering::Natural);
+    let paper_bs = [8_192usize, 16_384, 32_768, 65_536, 131_072, 262_144];
+    let scaled: Vec<usize> = paper_bs
+        .iter()
+        .map(|b| (b / cfg.scale_div).max(1).min(m.n))
+        .collect();
+    let headers: Vec<String> = std::iter::once("variant".to_string())
+        .chain(scaled.iter().map(|b| format!("BS={b}")))
+        .collect();
+    let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        format!("Ablation — total time vs BLOCKSIZE, TP1, 32 threads/2 nodes, {} iters", cfg.iters),
+        &headers_ref,
+    );
+    let sim = ClusterSim::new(cfg.hw);
+    let topo = Topology::new(2, 16);
+    for variant in Variant::TRANSFORMED {
+        let mut row = vec![variant.name().to_string()];
+        for &bs in &scaled {
+            let layout = Layout::new(m.n, bs, 32);
+            let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, cfg.cache_window());
+            let inp = SpmvInputs { layout, topo, hw: cfg.hw, r_nz: m.r_nz, analysis: &analysis };
+            row.push(s2(sim.spmv_iteration(variant, &inp).total * cfg.iters as f64));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Total simulated time per ordering (natural / RCM / Morton / random) —
+/// quantifies how much the paper's "proper ordering" matters for both the
+/// communication volume and the cache behaviour.
+pub fn ablation_ordering(cfg: &HarnessConfig, ws: &mut Workspace) -> Table {
+    let headers = ["ordering", "UPCv1", "UPCv3", "v3 comm MB", "mean |i-j|"];
+    let mut t = Table::new(
+        format!(
+            "Ablation — row ordering, TP1, 32 threads/2 nodes, {} iters (simulated)",
+            cfg.iters
+        ),
+        &headers,
+    );
+    let topo = Topology::new(2, 16);
+    let sim = ClusterSim::new(cfg.hw);
+    for ordering in Ordering::ALL {
+        let mesh = ws.mesh(TestProblem::Tp1, cfg.scale_div, ordering).clone();
+        let m = ws.matrix(TestProblem::Tp1, cfg.scale_div, ordering);
+        let bs = (65_536 / cfg.scale_div).max(1).min(m.n);
+        let layout = Layout::new(m.n, bs, 32);
+        let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, cfg.cache_window());
+        let inp = SpmvInputs { layout, topo, hw: cfg.hw, r_nz: m.r_nz, analysis: &analysis };
+        let v1 = sim.spmv_iteration(Variant::V1, &inp).total * cfg.iters as f64;
+        let v3 = sim.spmv_iteration(Variant::V3, &inp).total * cfg.iters as f64;
+        let comm_mb: f64 =
+            (0..32).map(|th| analysis.volume_bytes(th).2).sum::<f64>() / 1e6;
+        t.row(vec![
+            ordering.name().to_string(),
+            s2(v1),
+            s2(v3),
+            format!("{comm_mb:.2}"),
+            format!("{:.0}", mesh.mean_index_distance()),
+        ]);
+    }
+    t
+}
+
+/// UPCv3 total vs threads-per-node at a fixed 32-thread budget — the
+/// intra/inter-node traffic trade-off the paper's topology fixes at 16.
+pub fn ablation_threads_per_node(cfg: &HarnessConfig, ws: &mut Workspace) -> Table {
+    let m = ws.matrix(TestProblem::Tp1, cfg.scale_div, Ordering::Natural);
+    let mut t = Table::new(
+        format!(
+            "Ablation — UPCv3 vs threads/node at 32 threads total, TP1, {} iters",
+            cfg.iters
+        ),
+        &["threads/node", "nodes", "UPCv3 total", "remote msgs", "remote MB"],
+    );
+    let sim = ClusterSim::new(cfg.hw);
+    for tpn in [2usize, 4, 8, 16, 32] {
+        let nodes = 32 / tpn;
+        let topo = Topology::new(nodes, tpn);
+        let hw = cfg.hw.with_threads_per_node(tpn);
+        let bs = (65_536 / cfg.scale_div).max(1).min(m.n);
+        let layout = Layout::new(m.n, bs, 32);
+        let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, cfg.cache_window());
+        let inp = SpmvInputs { layout, topo, hw, r_nz: m.r_nz, analysis: &analysis };
+        let total = sim.spmv_iteration(Variant::V3, &inp).total * cfg.iters as f64;
+        let msgs: u32 = analysis.per_thread.iter().map(|tt| tt.c_remote_out).sum();
+        let mb: f64 =
+            analysis.per_thread.iter().map(|tt| tt.s_remote_out as f64 * 8.0).sum::<f64>() / 1e6;
+        t.row(vec![
+            tpn.to_string(),
+            nodes.to_string(),
+            s2(total),
+            msgs.to_string(),
+            format!("{mb:.2}"),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_ablation_random_is_worst() {
+        let mut cfg = HarnessConfig::test_sized();
+        cfg.iters = 5000; // enough that the 2-decimal cells resolve
+        let mut ws = Workspace::new();
+        let t = ablation_ordering(&cfg, &mut ws);
+        assert_eq!(t.rows.len(), 4);
+        let v3_of = |name: &str| -> f64 {
+            t.rows
+                .iter()
+                .find(|r| r[0] == name)
+                .map(|r| r[2].parse().unwrap())
+                .unwrap()
+        };
+        assert!(v3_of("random") > v3_of("natural"), "random should be slowest");
+    }
+
+    #[test]
+    fn blocksize_ablation_runs() {
+        let cfg = HarnessConfig::test_sized();
+        let mut ws = Workspace::new();
+        let t = ablation_blocksize(&cfg, &mut ws);
+        assert_eq!(t.rows.len(), 3);
+    }
+
+    #[test]
+    fn tpn_ablation_more_nodes_more_remote_traffic() {
+        let cfg = HarnessConfig::test_sized();
+        let mut ws = Workspace::new();
+        let t = ablation_threads_per_node(&cfg, &mut ws);
+        let first_mb: f64 = t.rows.first().unwrap()[4].parse().unwrap();
+        let last_mb: f64 = t.rows.last().unwrap()[4].parse().unwrap();
+        // 2 threads/node (16 nodes) has far more inter-node traffic than
+        // 32 threads on one node (zero).
+        assert!(first_mb > last_mb);
+        assert_eq!(last_mb, 0.0);
+    }
+}

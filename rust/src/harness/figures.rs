@@ -1,0 +1,174 @@
+//! Figures 1 and 2 of the paper (emitted as per-thread CSV series).
+
+use super::{HarnessConfig, Workspace};
+use crate::comm::Analysis;
+use crate::mesh::{Ordering, TestProblem};
+use crate::model::{self, SpmvInputs};
+use crate::pgas::{Layout, Topology};
+use crate::sim::ClusterSim;
+use crate::spmv::Variant;
+use crate::util::fmt::Table;
+use crate::util::plot;
+
+/// Render a figure table as an ASCII grouped-bar chart (one bar per column
+/// beyond the first, grouped by row label) — saved as `<name>.plot.txt`.
+pub fn plot_figure(table: &Table, max_rows: usize) -> String {
+    let columns: Vec<&str> = table.headers[1..].iter().map(|s| s.as_str()).collect();
+    let rows: Vec<(String, Vec<f64>)> = table
+        .rows
+        .iter()
+        .take(max_rows)
+        .map(|r| {
+            (
+                format!("thread {}", r[0]),
+                r[1..].iter().map(|c| c.parse().unwrap_or(0.0)).collect(),
+            )
+        })
+        .collect();
+    plot::grouped_bars(&table.title, &columns, &rows, 48)
+}
+
+/// Figure 1: per-thread T_comp / T_unpack / T_pack for UPCv3, predicted vs
+/// measured; 32 threads over 2 nodes, BLOCKSIZE = 65536 (scaled).
+pub fn figure1(cfg: &HarnessConfig, ws: &mut Workspace) -> Table {
+    let m = ws.matrix(TestProblem::Tp1, cfg.scale_div, Ordering::Natural);
+    let bs = (65_536 / cfg.scale_div).max(1).min(m.n);
+    let threads = 32;
+    let layout = Layout::new(m.n, bs, threads);
+    let topo = Topology::new(2, 16);
+    let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, cfg.cache_window());
+    let inp = SpmvInputs { layout, topo, hw: cfg.hw, r_nz: m.r_nz, analysis: &analysis };
+    let sim = ClusterSim::new(cfg.hw);
+    let meas = sim.spmv_iteration(Variant::V3, &inp);
+    let pred = model::predict_v3(&inp);
+
+    let mut t = Table::new(
+        format!(
+            "Figure 1 — per-thread UPCv3 components, TP1, 32 threads / 2 nodes, BS={bs} (seconds per iteration)"
+        ),
+        &[
+            "thread", "comp measured", "comp predicted", "unpack measured", "unpack predicted",
+            "pack measured", "pack predicted",
+        ],
+    );
+    let f = |x: f64| format!("{x:.6}");
+    for th in 0..threads {
+        t.row(vec![
+            th.to_string(),
+            f(meas.t_comp[th]),
+            f(pred.t_comp[th]),
+            f(meas.t_unpack[th]),
+            f(pred.breakdown[th].t_unpack),
+            f(meas.t_pack[th]),
+            f(pred.breakdown[th].t_pack),
+        ]);
+    }
+    t
+}
+
+/// Figure 2 (top): per-thread communication volumes for the three
+/// transformed variants; 32 threads over 2 nodes, BLOCKSIZE = 65536 scaled.
+pub fn figure2_volumes(cfg: &HarnessConfig, ws: &mut Workspace) -> Table {
+    let m = ws.matrix(TestProblem::Tp1, cfg.scale_div, Ordering::Natural);
+    let bs = (65_536 / cfg.scale_div).max(1).min(m.n);
+    let threads = 32;
+    let layout = Layout::new(m.n, bs, threads);
+    let topo = Topology::new(2, 16);
+    let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, cfg.cache_window());
+    let mut t = Table::new(
+        format!("Figure 2 (top) — per-thread comm volume (MB), TP1, 32 threads, BS={bs}"),
+        &["thread", "UPCv1", "UPCv2", "UPCv3"],
+    );
+    for th in 0..threads {
+        let (v1, v2, v3) = analysis.volume_bytes(th);
+        t.row(vec![
+            th.to_string(),
+            format!("{:.3}", v1 / 1e6),
+            format!("{:.3}", v2 / 1e6),
+            format!("{:.3}", v3 / 1e6),
+        ]);
+    }
+    t
+}
+
+/// Figure 2 (bottom): UPCv3 per-thread volumes for a BLOCKSIZE sweep.
+pub fn figure2_blocksize(cfg: &HarnessConfig, ws: &mut Workspace) -> Table {
+    let m = ws.matrix(TestProblem::Tp1, cfg.scale_div, Ordering::Natural);
+    let threads = 32;
+    let paper_bs = [16_384usize, 32_768, 65_536, 131_072];
+    let scaled: Vec<usize> =
+        paper_bs.iter().map(|b| (b / cfg.scale_div).max(1).min(m.n)).collect();
+    let headers: Vec<String> = std::iter::once("thread".to_string())
+        .chain(scaled.iter().map(|b| format!("BS={b}")))
+        .collect();
+    let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Figure 2 (bottom) — UPCv3 per-thread comm volume (MB) vs BLOCKSIZE, TP1, 32 threads",
+        &headers_ref,
+    );
+    let mut columns: Vec<Vec<f64>> = Vec::new();
+    for &bs in &scaled {
+        let layout = Layout::new(m.n, bs, threads);
+        let topo = Topology::new(2, 16);
+        let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, cfg.cache_window());
+        columns.push((0..threads).map(|th| analysis.volume_bytes(th).2).collect());
+    }
+    for th in 0..threads {
+        let mut row = vec![th.to_string()];
+        for col in &columns {
+            row.push(format!("{:.3}", col[th] / 1e6));
+        }
+        t.row(row);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure1_has_32_threads() {
+        let cfg = HarnessConfig::test_sized();
+        let mut ws = Workspace::new();
+        let t = figure1(&cfg, &mut ws);
+        assert_eq!(t.rows.len(), 32);
+        // measured comp within 2x of predicted comp for thread 0
+        let meas: f64 = t.rows[0][1].parse().unwrap();
+        let pred: f64 = t.rows[0][2].parse().unwrap();
+        assert!(meas > 0.0 && pred > 0.0);
+        assert!((meas / pred) < 3.0 && (meas / pred) > 0.3, "{meas} vs {pred}");
+    }
+
+    #[test]
+    fn plot_renders_figures() {
+        let cfg = HarnessConfig::test_sized();
+        let mut ws = Workspace::new();
+        let t = figure2_volumes(&cfg, &mut ws);
+        let p = plot_figure(&t, 8);
+        assert!(p.contains("thread 0"));
+        assert!(p.contains("UPCv3"));
+        assert!(p.contains("█"));
+    }
+
+    #[test]
+    fn figure2_v3_never_exceeds_v2() {
+        let cfg = HarnessConfig::test_sized();
+        let mut ws = Workspace::new();
+        let t = figure2_volumes(&cfg, &mut ws);
+        for row in &t.rows {
+            let v2: f64 = row[2].parse().unwrap();
+            let v3: f64 = row[3].parse().unwrap();
+            assert!(v3 <= v2 + 1e-9, "thread {}: v3 {v3} > v2 {v2}", row[0]);
+        }
+    }
+
+    #[test]
+    fn figure2_blocksize_columns_monotone_threads() {
+        let cfg = HarnessConfig::test_sized();
+        let mut ws = Workspace::new();
+        let t = figure2_blocksize(&cfg, &mut ws);
+        assert_eq!(t.rows.len(), 32);
+        assert_eq!(t.headers.len(), 5);
+    }
+}

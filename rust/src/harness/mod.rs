@@ -1,0 +1,155 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (DESIGN.md §3 maps each experiment id to the function here).
+//!
+//! All outputs are [`Table`]s: rendered as aligned text for the terminal and
+//! saved as CSV under `reports/` when an output directory is configured.
+//! Paper reference values are included as columns/rows where the paper
+//! printed them, so the "same shape?" comparison is immediate.
+
+mod ablations;
+mod baselines;
+mod figures;
+mod tables;
+
+pub use ablations::{ablation_blocksize, ablation_ordering, ablation_threads_per_node};
+pub use baselines::baseline_mpi;
+pub use figures::{figure1, figure2_blocksize, figure2_volumes, plot_figure};
+pub use tables::{microbench_table, table1, table2, table3, table4, table5};
+
+use crate::machine::HwParams;
+use crate::matrix::Ellpack;
+use crate::mesh::{Ordering, TestProblem, TetMesh};
+use crate::util::fmt::Table;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Harness configuration shared by all experiments.
+#[derive(Debug, Clone)]
+pub struct HarnessConfig {
+    /// Problem scale divisor (16 = EXPERIMENTS.md default; 1 = paper scale).
+    pub scale_div: usize,
+    /// Accounted SpMV iterations (paper: 1000).
+    pub iters: usize,
+    pub hw: HwParams,
+    /// Where to save `<name>.txt` / `<name>.csv`; `None` = print only.
+    pub out_dir: Option<PathBuf>,
+}
+
+impl Default for HarnessConfig {
+    fn default() -> Self {
+        HarnessConfig {
+            scale_div: 16,
+            iters: 1000,
+            hw: HwParams::abel(),
+            out_dir: Some(PathBuf::from("reports")),
+        }
+    }
+}
+
+impl HarnessConfig {
+    /// A configuration small enough for unit/integration tests.
+    pub fn test_sized() -> HarnessConfig {
+        HarnessConfig { scale_div: 256, iters: 10, hw: HwParams::abel(), out_dir: None }
+    }
+
+    /// LLC reuse window scaled with the problem. The mesh's stencil
+    /// bandwidth (index span of a row's neighbours) scales as n^(2/3) — a
+    /// z-layer of the shell — so the window scales by `scale_div^(2/3)` to
+    /// preserve BOTH paper-regime inequalities:
+    /// `stencil span < window ≪ n`.
+    pub fn cache_window(&self) -> usize {
+        scaled_cache_window(self.scale_div)
+    }
+}
+
+/// Caches meshes and matrices across experiments in one CLI invocation
+/// (TP3 at 1/16 scale is ~1.6 M tets; we build it once).
+#[derive(Default)]
+pub struct Workspace {
+    meshes: HashMap<(TestProblem, usize, &'static str), TetMesh>,
+    matrices: HashMap<(TestProblem, usize, &'static str), Ellpack>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    pub fn mesh(&mut self, tp: TestProblem, scale_div: usize, ordering: Ordering) -> &TetMesh {
+        self.meshes
+            .entry((tp, scale_div, ordering.name()))
+            .or_insert_with(|| ordering.apply(&tp.generate(scale_div)))
+    }
+
+    pub fn matrix(&mut self, tp: TestProblem, scale_div: usize, ordering: Ordering) -> Ellpack {
+        if let Some(m) = self.matrices.get(&(tp, scale_div, ordering.name())) {
+            return m.clone();
+        }
+        let mesh = self.mesh(tp, scale_div, ordering).clone();
+        let m = Ellpack::diffusion_from_mesh(&mesh);
+        self.matrices.insert((tp, scale_div, ordering.name()), m.clone());
+        m
+    }
+}
+
+/// The scale-adjusted LLC reuse window (see [`HarnessConfig::cache_window`]).
+pub fn scaled_cache_window(scale_div: usize) -> usize {
+    let f = (scale_div as f64).powf(2.0 / 3.0);
+    ((crate::sim::DEFAULT_CACHE_WINDOW as f64 / f) as usize).max(64)
+}
+
+/// Print a table and persist it (txt + csv) if an output dir is set.
+pub fn emit(cfg: &HarnessConfig, name: &str, table: &Table) {
+    println!("{}", table.render());
+    if let Some(dir) = &cfg.out_dir {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("warning: cannot create {}: {e}", dir.display());
+            return;
+        }
+        let txt = dir.join(format!("{name}.txt"));
+        let csv = dir.join(format!("{name}.csv"));
+        let _ = std::fs::write(&txt, table.render());
+        let _ = std::fs::write(&csv, table.to_csv());
+        if name.starts_with("figure") {
+            let _ = std::fs::write(
+                dir.join(format!("{name}.plot.txt")),
+                figures::plot_figure(table, 32),
+            );
+        }
+        println!("[saved {} and {}]", txt.display(), csv.display());
+    }
+}
+
+/// Format seconds the way the paper's tables do (plain seconds, 2 decimals).
+pub(crate) fn s2(t: f64) -> String {
+    if t >= 1000.0 {
+        format!("{t:.0}")
+    } else if t >= 0.01 {
+        format!("{t:.2}")
+    } else {
+        format!("{t:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workspace_caches() {
+        let mut ws = Workspace::new();
+        let a = ws.mesh(TestProblem::Tp1, 2048, Ordering::Natural).n;
+        let b = ws.mesh(TestProblem::Tp1, 2048, Ordering::Natural).n;
+        assert_eq!(a, b);
+        assert_eq!(ws.meshes.len(), 1);
+        let m = ws.matrix(TestProblem::Tp1, 2048, Ordering::Natural);
+        assert_eq!(m.n, a);
+    }
+
+    #[test]
+    fn s2_formats() {
+        assert_eq!(s2(28.804), "28.80");
+        assert_eq!(s2(1882.01), "1882");
+        assert_eq!(s2(0.0042), "0.0042");
+    }
+}

@@ -1,0 +1,279 @@
+//! Tables 1–5 of the paper.
+
+use super::{s2, HarnessConfig, Workspace};
+use crate::comm::Analysis;
+use crate::heat2d::{partition_for, simulate_heat_step};
+use crate::machine::HwParams;
+use crate::mesh::{Ordering, TestProblem};
+use crate::microbench;
+use crate::model::{self, HeatGrid, SpmvInputs};
+use crate::pgas::{Layout, Topology};
+use crate::sim::{ClusterSim, SimParams};
+use crate::spmv::Variant;
+use crate::util::fmt::{int, Table};
+
+/// Table 1: sizes of the three test problems (paper vs generated).
+pub fn table1(cfg: &HarnessConfig, ws: &mut Workspace) -> Table {
+    let mut t = Table::new(
+        format!("Table 1 — test problem sizes (scale 1/{})", cfg.scale_div),
+        &["", "Test problem 1", "Test problem 2", "Test problem 3"],
+    );
+    t.row(vec![
+        "Paper n (tetrahedra)".into(),
+        int(TestProblem::Tp1.paper_n()),
+        int(TestProblem::Tp2.paper_n()),
+        int(TestProblem::Tp3.paper_n()),
+    ]);
+    let gen: Vec<String> = TestProblem::ALL
+        .iter()
+        .map(|&tp| int(ws.mesh(tp, cfg.scale_div, Ordering::Natural).n))
+        .collect();
+    t.row({
+        let mut r = vec![format!("Generated n (1/{})", cfg.scale_div)];
+        r.extend(gen);
+        r
+    });
+    t
+}
+
+/// Shared helper: per-iteration simulated total for one configuration.
+fn sim_total(
+    ws: &mut Workspace,
+    cfg: &HarnessConfig,
+    tp: TestProblem,
+    variant: Variant,
+    nodes: usize,
+    tpn: usize,
+    block_size: usize,
+    hw: &HwParams,
+) -> f64 {
+    let m = ws.matrix(tp, cfg.scale_div, Ordering::Natural);
+    let layout = Layout::new(m.n, block_size.min(m.n).max(1), nodes * tpn);
+    let topo = Topology::new(nodes, tpn);
+    let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, cfg.cache_window());
+    let inp = SpmvInputs { layout, topo, hw: *hw, r_nz: m.r_nz, analysis: &analysis };
+    let sim = ClusterSim::new(*hw);
+    sim.spmv_iteration(variant, &inp).total * cfg.iters as f64
+}
+
+/// Table 2: naive vs UPCv1 on one node, 1–16 threads, Test problem 1.
+pub fn table2(cfg: &HarnessConfig, ws: &mut Workspace) -> Table {
+    let threads = [1usize, 2, 4, 8, 16];
+    let mut t = Table::new(
+        format!(
+            "Table 2 — naive vs UPCv1, 1 node, TP1, BLOCKSIZE={}, {} iters (simulated)",
+            65_536 / cfg.scale_div,
+            cfg.iters
+        ),
+        &["", "1 thread", "2 threads", "4 threads", "8 threads", "16 threads"],
+    );
+    let bs = (65_536 / cfg.scale_div).max(1);
+    for variant in [Variant::Naive, Variant::V1] {
+        let mut row = vec![variant.name().to_string()];
+        for &nt in &threads {
+            // Per-thread bandwidth share depends on how many threads the
+            // node actually runs (paper §5.1).
+            let hw = cfg.hw.with_threads_per_node(nt);
+            row.push(s2(sim_total(ws, cfg, TestProblem::Tp1, variant, 1, nt, bs, &hw)));
+        }
+        t.row(row);
+    }
+    // Paper reference rows (measured on Abel at full scale).
+    t.row(vec!["paper: Naive UPC".into(), "895.44".into(), "548.57".into(), "301.17".into(), "173.08".into(), "106.10".into()]);
+    t.row(vec!["paper: UPCv1".into(), "270.40".into(), "159.51".into(), "86.37".into(), "51.10".into(), "28.80".into()]);
+    t
+}
+
+const NODE_COUNTS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// Table 3: the three transformed variants across 1–64 nodes for all three
+/// test problems.
+pub fn table3(cfg: &HarnessConfig, ws: &mut Workspace) -> Table {
+    let mut headers: Vec<String> = vec!["".into()];
+    headers.extend(NODE_COUNTS.iter().map(|n| format!("{n} node{}", if *n > 1 { "s" } else { "" })));
+    let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        format!("Table 3 — {} iters SpMV, 16 threads/node (simulated)", cfg.iters),
+        &headers_ref,
+    );
+    for tp in TestProblem::ALL {
+        let n = ws.mesh(tp, cfg.scale_div, Ordering::Natural).n;
+        t.row({
+            let mut r = vec![format!("{}: n={}", tp.name(), int(n))];
+            r.extend(std::iter::repeat_n(String::new(), NODE_COUNTS.len()));
+            r
+        });
+        for variant in Variant::TRANSFORMED {
+            let mut row = vec![format!("  {}", variant.name())];
+            for &nodes in &NODE_COUNTS {
+                let bs = crate::coordinator::RunConfig::paper_blocksize(nodes * 16, cfg.scale_div);
+                row.push(s2(sim_total(ws, cfg, tp, variant, nodes, 16, bs, &cfg.hw)));
+            }
+            t.row(row);
+        }
+    }
+    t
+}
+
+/// Table 4: actual (simulated) vs predicted (model) for Test problem 1.
+pub fn table4(cfg: &HarnessConfig, ws: &mut Workspace) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Table 4 — actual (sim) vs predicted (model), TP1, {} iters",
+            cfg.iters
+        ),
+        &[
+            "THREADS", "BLOCKSIZE", "v1 actual", "v1 predicted", "v2 actual", "v2 predicted",
+            "v3 actual", "v3 predicted",
+        ],
+    );
+    let m = ws.matrix(TestProblem::Tp1, cfg.scale_div, Ordering::Natural);
+    let sim = ClusterSim::new(cfg.hw);
+    for &nodes in &NODE_COUNTS {
+        let threads = nodes * 16;
+        let bs = crate::coordinator::RunConfig::paper_blocksize(threads, cfg.scale_div)
+            .min(m.n)
+            .max(1);
+        let layout = Layout::new(m.n, bs, threads);
+        let topo = Topology::new(nodes, 16);
+        let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, cfg.cache_window());
+        let inp = SpmvInputs { layout, topo, hw: cfg.hw, r_nz: m.r_nz, analysis: &analysis };
+        let mut row = vec![threads.to_string(), bs.to_string()];
+        for variant in Variant::TRANSFORMED {
+            let actual = sim.spmv_iteration(variant, &inp).total * cfg.iters as f64;
+            let predicted = match variant {
+                Variant::V1 => model::predict_v1(&inp).total,
+                Variant::V2 => model::predict_v2(&inp).total,
+                Variant::V3 => model::predict_v3(&inp).total,
+                Variant::Naive => unreachable!(),
+            } * cfg.iters as f64;
+            row.push(s2(actual));
+            row.push(s2(predicted));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Table 5: the 2D heat solver, actual (simulated) vs predicted, both paper
+/// meshes. Dimensions are *not* scaled — these rows are purely analytic.
+pub fn table5(cfg: &HarnessConfig) -> Table {
+    let mut t = Table::new(
+        format!("Table 5 — 2D heat equation, {} steps (sim vs model)", cfg.iters),
+        &[
+            "Mesh", "THREADS", "Partitioning", "T_halo actual", "T_halo predicted",
+            "T_comp actual", "T_comp predicted",
+        ],
+    );
+    let params = SimParams::from_hw(&cfg.hw);
+    for &(mg, ng) in &[(20_000usize, 20_000usize), (40_000, 40_000)] {
+        for &threads in &[16usize, 32, 64, 128, 256, 512] {
+            let (mp, np) = partition_for(threads).expect("schedule");
+            let grid = HeatGrid::new(mg, ng, mp, np);
+            let topo = Topology::new((threads / 16).max(1), threads.min(16));
+            let sim = simulate_heat_step(&grid, &topo, &cfg.hw, &params);
+            let model = model::predict_heat2d(&grid, &topo, &cfg.hw);
+            let k = cfg.iters as f64;
+            t.row(vec![
+                format!("{mg}x{ng}"),
+                threads.to_string(),
+                format!("{mp}x{np}"),
+                s2(sim.t_halo * k),
+                s2(model.t_halo * k),
+                s2(sim.t_comp * k),
+                s2(model.t_comp * k),
+            ]);
+        }
+    }
+    t
+}
+
+/// §6.2: the microbenchmark table — recovered hardware constants.
+pub fn microbench_table(cfg: &HarnessConfig) -> Table {
+    let mut t = Table::new(
+        "§6.2 microbenchmarks — recovered hardware constants (simulated cluster)",
+        &["Benchmark", "Measured", "Paper / injected", "Note"],
+    );
+    let hw = &cfg.hw;
+    let params = SimParams::from_hw(hw);
+    let stream = microbench::stream_sim(hw, 16, 1 << 22);
+    t.row(vec![
+        "STREAM (16 thr/node)".into(),
+        format!("{:.1} GB/s", stream.bandwidth() / 1e9),
+        "75.0 GB/s".into(),
+        "aggregate node bandwidth".into(),
+    ]);
+    let pp = microbench::pingpong_sim(hw, 64 << 20, 4);
+    t.row(vec![
+        "MPI ping-pong (64 MiB)".into(),
+        format!("{:.2} GB/s", pp.bandwidth() / 1e9),
+        "6.0 GB/s".into(),
+        "inter-node bandwidth".into(),
+    ]);
+    let tau8 = microbench::tau_sim(&params, 8, 100_000);
+    t.row(vec![
+        "Listing-6 τ (8 thr)".into(),
+        format!("{:.2} µs", tau8 * 1e6),
+        "3.40 µs".into(),
+        "individual remote op".into(),
+    ]);
+    let tau2 = microbench::tau_sim(&params, 2, 100_000);
+    t.row(vec![
+        "Listing-6 τ (2 thr)".into(),
+        format!("{:.2} µs", tau2 * 1e6),
+        "< 3.4 µs".into(),
+        "§6.4: fewer communicating threads".into(),
+    ]);
+    let host = microbench::stream_host(1 << 21);
+    t.row(vec![
+        "Host STREAM (real)".into(),
+        format!("{:.1} GB/s", host.bandwidth() / 1e9),
+        "—".into(),
+        "roofline anchor for §Perf".into(),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_both_rows() {
+        let cfg = HarnessConfig::test_sized();
+        let mut ws = Workspace::new();
+        let t = table1(&cfg, &mut ws);
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.rows[0][1].contains("6,810,586"));
+    }
+
+    #[test]
+    fn table2_shape() {
+        let cfg = HarnessConfig::test_sized();
+        let mut ws = Workspace::new();
+        let t = table2(&cfg, &mut ws);
+        assert_eq!(t.rows.len(), 4); // naive, v1, 2 paper rows
+        // Naive slower than v1 at every thread count.
+        for c in 1..6 {
+            let naive: f64 = t.rows[0][c].parse().unwrap();
+            let v1: f64 = t.rows[1][c].parse().unwrap();
+            assert!(naive > v1, "col {c}: naive {naive} v1 {v1}");
+        }
+    }
+
+    #[test]
+    fn table5_has_12_rows() {
+        let cfg = HarnessConfig::test_sized();
+        let t = table5(&cfg);
+        assert_eq!(t.rows.len(), 12);
+    }
+
+    #[test]
+    fn microbench_recovers_constants() {
+        let cfg = HarnessConfig::test_sized();
+        let t = microbench_table(&cfg);
+        assert!(t.rows[0][1].starts_with("75.0"));
+        assert!(t.rows[1][1].starts_with("6.0"));
+        assert!(t.rows[2][1].starts_with("3.40"));
+    }
+}

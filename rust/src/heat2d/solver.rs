@@ -1,0 +1,252 @@
+//! Executable heat-2D solver with per-thread storage and real halo traffic
+//! (Listings 7 & 8), validated against a sequential reference.
+
+use crate::model::HeatGrid;
+
+/// Per-thread subdomain state: `phi` (with halo) and the scratch vectors of
+/// Listing 7 for horizontal pack/unpack.
+#[derive(Debug, Clone)]
+pub struct Heat2dSolver {
+    pub grid: HeatGrid,
+    /// `phi[t]` — the m×n (halo-included) field of thread t, row-major.
+    phi: Vec<Vec<f64>>,
+    /// New-timestep buffers (`phin` in Listing 8).
+    phin: Vec<Vec<f64>>,
+    /// Halo-exchange byte counter (payload crossing thread boundaries).
+    pub inter_thread_bytes: u64,
+}
+
+impl Heat2dSolver {
+    /// Initialize from a global field of `m_glob × n_glob` values.
+    /// Boundary values of the global domain are treated as fixed (Dirichlet).
+    pub fn new(grid: HeatGrid, global: &[f64]) -> Heat2dSolver {
+        assert_eq!(global.len(), grid.m_glob * grid.n_glob);
+        let (m, n) = grid.subdomain();
+        let mut phi = Vec::with_capacity(grid.threads());
+        for t in 0..grid.threads() {
+            let (ip, kp) = grid.coords(t);
+            let (row0, col0) = (ip * (m - 2), kp * (n - 2));
+            let mut field = vec![0.0f64; m * n];
+            // Fill interior + whatever halo overlaps the global domain.
+            for i in 0..m {
+                for k in 0..n {
+                    let gi = row0 as isize + i as isize - 1;
+                    let gk = col0 as isize + k as isize - 1;
+                    if gi >= 0
+                        && (gi as usize) < grid.m_glob
+                        && gk >= 0
+                        && (gk as usize) < grid.n_glob
+                    {
+                        field[i * n + k] = global[gi as usize * grid.n_glob + gk as usize];
+                    }
+                }
+            }
+            phi.push(field);
+        }
+        let phin = phi.clone();
+        Heat2dSolver { grid, phi, phin, inter_thread_bytes: 0 }
+    }
+
+    /// One time step: halo exchange then 5-point Jacobi update.
+    pub fn step(&mut self) {
+        self.halo_exchange();
+        let (m, n) = self.grid.subdomain();
+        for t in 0..self.grid.threads() {
+            let phi = &self.phi[t];
+            let phin = &mut self.phin[t];
+            for i in 1..m - 1 {
+                for k in 1..n - 1 {
+                    phin[i * n + k] = 0.25
+                        * (phi[(i - 1) * n + k]
+                            + phi[(i + 1) * n + k]
+                            + phi[i * n + k - 1]
+                            + phi[i * n + k + 1]);
+                }
+            }
+        }
+        // Global-boundary rows/cols stay fixed: copy them through.
+        for t in 0..self.grid.threads() {
+            let (ip, kp) = self.grid.coords(t);
+            let phi = &self.phi[t];
+            let phin = &mut self.phin[t];
+            if ip == 0 {
+                for k in 0..n {
+                    phin[n + k] = phi[n + k];
+                }
+            }
+            if ip == self.grid.mprocs - 1 {
+                for k in 0..n {
+                    phin[(m - 2) * n + k] = phi[(m - 2) * n + k];
+                }
+            }
+            if kp == 0 {
+                for i in 0..m {
+                    phin[i * n + 1] = phi[i * n + 1];
+                }
+            }
+            if kp == self.grid.nprocs - 1 {
+                for i in 0..m {
+                    phin[i * n + n - 2] = phi[i * n + n - 2];
+                }
+            }
+        }
+        std::mem::swap(&mut self.phi, &mut self.phin);
+    }
+
+    /// Listing 7: vertical halos are contiguous `upc_memget`s; horizontal
+    /// halos are packed into scratch vectors, fetched, and unpacked.
+    fn halo_exchange(&mut self) {
+        let grid = self.grid;
+        let (m, n) = grid.subdomain();
+        // Pack phase: each thread exposes its first/last interior columns.
+        let mut col_first: Vec<Vec<f64>> = Vec::with_capacity(grid.threads());
+        let mut col_last: Vec<Vec<f64>> = Vec::with_capacity(grid.threads());
+        for t in 0..grid.threads() {
+            let phi = &self.phi[t];
+            col_first.push((1..m - 1).map(|i| phi[i * n + 1]).collect());
+            col_last.push((1..m - 1).map(|i| phi[i * n + n - 2]).collect());
+        }
+        // ---- upc_barrier ----
+        // Transfer + unpack phase.
+        for t in 0..grid.threads() {
+            let (ip, kp) = grid.coords(t);
+            // Left neighbour's last column → my col 0.
+            if kp > 0 {
+                let src = &col_last[grid.rank(ip, kp - 1)];
+                self.inter_thread_bytes += (src.len() * 8) as u64;
+                for (i, v) in src.iter().enumerate() {
+                    self.phi[t][(i + 1) * n] = *v;
+                }
+            }
+            // Right neighbour's first column → my col n−1.
+            if kp < grid.nprocs - 1 {
+                let src = &col_first[grid.rank(ip, kp + 1)];
+                self.inter_thread_bytes += (src.len() * 8) as u64;
+                for (i, v) in src.iter().enumerate() {
+                    self.phi[t][(i + 1) * n + n - 1] = *v;
+                }
+            }
+            // Upper neighbour's last interior row → my row 0 (contiguous).
+            if ip > 0 {
+                let peer = grid.rank(ip - 1, kp);
+                let row: Vec<f64> =
+                    self.phi[peer][(m - 2) * n + 1..(m - 2) * n + n - 1].to_vec();
+                self.inter_thread_bytes += (row.len() * 8) as u64;
+                self.phi[t][1..n - 1].copy_from_slice(&row);
+            }
+            // Lower neighbour's first interior row → my row m−1.
+            if ip < grid.mprocs - 1 {
+                let peer = grid.rank(ip + 1, kp);
+                let row: Vec<f64> = self.phi[peer][n + 1..n + n - 1].to_vec();
+                self.inter_thread_bytes += (row.len() * 8) as u64;
+                self.phi[t][(m - 1) * n + 1..(m - 1) * n + n - 1].copy_from_slice(&row);
+            }
+        }
+    }
+
+    /// Gather the global interior field (for comparison with the reference).
+    pub fn to_global(&self) -> Vec<f64> {
+        let grid = self.grid;
+        let (m, n) = grid.subdomain();
+        let mut out = vec![0.0f64; grid.m_glob * grid.n_glob];
+        for t in 0..grid.threads() {
+            let (ip, kp) = grid.coords(t);
+            let (row0, col0) = (ip * (m - 2), kp * (n - 2));
+            for i in 1..m - 1 {
+                for k in 1..n - 1 {
+                    out[(row0 + i - 1) * grid.n_glob + (col0 + k - 1)] =
+                        self.phi[t][i * n + k];
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Sequential reference: one Jacobi step on the global field (fixed global
+/// boundary).
+pub fn seq_reference_step(m_glob: usize, n_glob: usize, phi: &[f64]) -> Vec<f64> {
+    let mut out = phi.to_vec();
+    for i in 1..m_glob - 1 {
+        for k in 1..n_glob - 1 {
+            out[i * n_glob + k] = 0.25
+                * (phi[(i - 1) * n_glob + k]
+                    + phi[(i + 1) * n_glob + k]
+                    + phi[i * n_glob + k - 1]
+                    + phi[i * n_glob + k + 1]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_field(m: usize, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..m * n).map(|_| rng.f64_in(0.0, 100.0)).collect()
+    }
+
+    #[test]
+    fn parallel_matches_sequential_over_steps() {
+        let (mg, ng) = (36, 48);
+        let grid = HeatGrid::new(mg, ng, 3, 4);
+        let f0 = random_field(mg, ng, 42);
+        let mut solver = Heat2dSolver::new(grid, &f0);
+        let mut reference = f0.clone();
+        for step in 0..10 {
+            solver.step();
+            reference = seq_reference_step(mg, ng, &reference);
+            let got = solver.to_global();
+            for (idx, (a, b)) in got.iter().zip(&reference).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-12,
+                    "step {step} idx {idx}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_grid_works() {
+        let grid = HeatGrid::new(16, 16, 1, 1);
+        let f0 = random_field(16, 16, 7);
+        let mut solver = Heat2dSolver::new(grid, &f0);
+        solver.step();
+        let want = seq_reference_step(16, 16, &f0);
+        let got = solver.to_global();
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // No neighbours → no inter-thread traffic.
+        assert_eq!(solver.inter_thread_bytes, 0);
+    }
+
+    #[test]
+    fn halo_traffic_counted() {
+        let grid = HeatGrid::new(24, 24, 2, 2);
+        let f0 = random_field(24, 24, 3);
+        let mut solver = Heat2dSolver::new(grid, &f0);
+        solver.step();
+        // Each of 4 threads has 2 neighbours; message length = 12 doubles.
+        // Total = 8 messages · 12 · 8 bytes.
+        assert_eq!(solver.inter_thread_bytes, 8 * 12 * 8);
+    }
+
+    #[test]
+    fn diffusion_smooths() {
+        let grid = HeatGrid::new(32, 32, 2, 2);
+        let mut f0 = vec![0.0f64; 32 * 32];
+        f0[16 * 32 + 16] = 1000.0; // hot spot
+        let mut solver = Heat2dSolver::new(grid, &f0);
+        for _ in 0..20 {
+            solver.step();
+        }
+        let out = solver.to_global();
+        let max = out.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max < 1000.0 * 0.5, "peak should diffuse, max={max}");
+        assert!(out.iter().all(|&v| v >= -1e-12));
+    }
+}

@@ -1,0 +1,56 @@
+//! # upcsim
+//!
+//! A reproduction of *"Performance optimization and modeling of fine-grained
+//! irregular communication in UPC"* (Lagravière et al., 2019) as a
+//! Rust + JAX + Pallas three-layer system.
+//!
+//! The paper studies four implementations of sparse matrix-vector
+//! multiplication (SpMV) in the UPC PGAS language — a naive version and three
+//! increasingly aggressive transformations (thread privatization, block-wise
+//! bulk transfer, message condensing + consolidation) — and derives
+//! closed-form performance models for each from exact communication-traffic
+//! counts plus four hardware characteristic parameters.
+//!
+//! This crate provides:
+//!
+//! * [`pgas`] — block-cyclic shared-array layout math (UPC eq. (1) semantics).
+//! * [`machine`] — the hardware characteristic parameters and cost primitives
+//!   of the paper's §5.2.2, with the Abel-cluster defaults from §6.2.
+//! * [`mesh`] — synthetic unstructured tetrahedral meshes (substituting the
+//!   paper's heart-ventricle TetGen meshes) and a 2D uniform mesh.
+//! * [`matrix`] — the modified EllPack (D + A split) sparse format of §3.1.
+//! * [`comm`] — the communication-traffic analyzer producing every count the
+//!   §5 models need, and the condensed/consolidated communication plan.
+//! * [`spmv`] — executable implementations of the paper's Listings 1–5.
+//! * [`model`] — the performance-model engine (eqs. (5)–(18), (19)–(22)).
+//! * [`sim`] — the simulated cluster with per-thread clocks and per-node NIC
+//!   serialization that produces "measured" times.
+//! * [`heat2d`] — the §8 2D heat-equation solver and its model.
+//! * [`microbench`] — STREAM / ping-pong / τ microbenchmarks (§6.2).
+//! * [`runtime`] — PJRT bridge loading AOT-compiled HLO-text artifacts
+//!   produced by the Python compile path (`python/compile/`).
+//! * [`coordinator`] — run configuration + the end-to-end runner.
+//! * [`harness`] — regeneration of every table and figure in the paper.
+//! * [`util`], [`benchlib`], [`testing`], [`cli`] — self-contained
+//!   infrastructure (JSON, PRNG, stats, bench + property-test drivers).
+
+pub mod benchlib;
+pub mod cli;
+pub mod comm;
+pub mod coordinator;
+pub mod harness;
+pub mod heat2d;
+pub mod machine;
+pub mod matrix;
+pub mod mesh;
+pub mod microbench;
+pub mod model;
+pub mod pgas;
+pub mod runtime;
+pub mod sim;
+pub mod spmv;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,312 @@
+//! `repro` — the CLI entry point (leader process).
+//!
+//! Subcommands:
+//!
+//! * `repro mesh [--scale N]` — generate the Table 1 meshes, print stats.
+//! * `repro bench <table1|table2|table3|table4|table5|figure1|figure2|
+//!   ablation-blocksize|ablation-ordering|ablation-tpn|baseline-mpi|all>
+//!   [--scale N]
+//!   [--iters K]` — regenerate paper tables/figures into `reports/`.
+//! * `repro microbench` — §6.2 hardware-constant recovery.
+//! * `repro run [--variant v3] [--nodes N] [--tpn T] [--steps S]
+//!   [--backend native|pjrt] [--problem tp1|tp2|tp3] [--scale N]` —
+//!   end-to-end diffusion driver.
+//! * `repro validate` — numeric equivalence native ↔ PJRT artifacts.
+
+use anyhow::{anyhow, bail, Result};
+use upcsim::cli::Args;
+use upcsim::coordinator::{Backend, Problem, RunConfig, Runner};
+use upcsim::harness::{self, HarnessConfig, Workspace};
+use upcsim::mesh::{Ordering, TestProblem};
+use upcsim::spmv::Variant;
+use upcsim::util::fmt;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn harness_config(args: &Args) -> Result<HarnessConfig> {
+    let mut cfg = HarnessConfig::default();
+    cfg.scale_div = if args.bool_flag("full-scale") {
+        1
+    } else {
+        args.usize_flag("scale", 16)?
+    };
+    cfg.iters = args.usize_flag("iters", 1000)?;
+    if let Some(dir) = args.str_flag("out") {
+        cfg.out_dir = Some(dir.into());
+    }
+    Ok(cfg)
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "mesh" => cmd_mesh(args),
+        "bench" => cmd_bench(args),
+        "microbench" => cmd_microbench(args),
+        "run" => cmd_run(args),
+        "heat" => cmd_heat(args),
+        "validate" => cmd_validate(args),
+        "" | "help" | "--help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `repro help`)"),
+    }
+}
+
+const HELP: &str = "\
+repro — UPC fine-grained irregular communication reproduction (Lagravière et al. 2019)
+
+USAGE: repro <subcommand> [flags]
+
+SUBCOMMANDS
+  mesh        generate the Table 1 meshes and print statistics
+  bench <id>  regenerate a paper table/figure (table1..table5, figure1,
+              figure2, ablation-blocksize, ablation-ordering, ablation-tpn,
+              microbench, all)
+  microbench  §6.2 hardware-constant recovery on the simulated cluster
+  run         end-to-end 3D diffusion driver (v^l = M v^{l-1})
+  heat        §8 2D heat solver: real numerics + Table-5-style prediction
+              (--m 512 --nprocs 4 --mprocs 4 --steps 50)
+  validate    numeric equivalence: native kernel vs PJRT artifacts
+
+COMMON FLAGS
+  --scale N         problem scale divisor (default 16; --full-scale for 1)
+  --iters K         accounted SpMV iterations (default 1000)
+  --out DIR         report output directory (default reports/)
+
+RUN FLAGS
+  --problem tp1|tp2|tp3|custom   workload (default tp1)
+  --n N                          custom problem size (with --problem custom)
+  --variant naive|v1|v2|v3       implementation (default v3)
+  --nodes N --tpn T              topology (default 2 x 16)
+  --blocksize B                  override BLOCKSIZE
+  --steps S                      executed time steps (default 100)
+  --ordering natural|rcm|morton|random
+  --backend native|pjrt          compute backend (default native)
+";
+
+fn cmd_mesh(args: &Args) -> Result<()> {
+    let cfg = harness_config(args)?;
+    args.finish()?;
+    let mut ws = Workspace::new();
+    let t = harness::table1(&cfg, &mut ws);
+    harness::emit(&cfg, "table1", &t);
+    for tp in TestProblem::ALL {
+        let mesh = ws.mesh(tp, cfg.scale_div, Ordering::Natural);
+        let full = mesh.degree.iter().filter(|&&d| d as usize == upcsim::mesh::R_NZ).count();
+        println!(
+            "{}: n={} mean|i-j|={:.0} full-degree rows={:.1}%",
+            tp.name(),
+            fmt::int(mesh.n),
+            mesh.mean_index_distance(),
+            100.0 * full as f64 / mesh.n as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let cfg = harness_config(args)?;
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    args.finish()?;
+    let mut ws = Workspace::new();
+    let mut run = |id: &str| -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let table = match id {
+            "table1" => harness::table1(&cfg, &mut ws),
+            "table2" => harness::table2(&cfg, &mut ws),
+            "table3" => harness::table3(&cfg, &mut ws),
+            "table4" => harness::table4(&cfg, &mut ws),
+            "table5" => harness::table5(&cfg),
+            "figure1" => harness::figure1(&cfg, &mut ws),
+            "figure2" => {
+                let t = harness::figure2_volumes(&cfg, &mut ws);
+                harness::emit(&cfg, "figure2_volumes", &t);
+                harness::figure2_blocksize(&cfg, &mut ws)
+            }
+            "ablation-blocksize" => harness::ablation_blocksize(&cfg, &mut ws),
+            "ablation-ordering" => harness::ablation_ordering(&cfg, &mut ws),
+            "ablation-tpn" => harness::ablation_threads_per_node(&cfg, &mut ws),
+            "baseline-mpi" => harness::baseline_mpi(&cfg, &mut ws),
+            "microbench" => harness::microbench_table(&cfg),
+            other => bail!("unknown bench id '{other}'"),
+        };
+        let name = if id == "figure2" { "figure2_blocksize" } else { id };
+        harness::emit(&cfg, name, &table);
+        println!("[{id} took {}]\n", fmt::secs(t0.elapsed().as_secs_f64()));
+        Ok(())
+    };
+    if what == "all" {
+        for id in [
+            "table1", "table2", "table3", "table4", "table5", "figure1", "figure2",
+            "ablation-blocksize", "ablation-ordering", "ablation-tpn", "baseline-mpi",
+            "microbench",
+        ] {
+            run(id)?;
+        }
+        Ok(())
+    } else {
+        run(what)
+    }
+}
+
+fn cmd_microbench(args: &Args) -> Result<()> {
+    let cfg = harness_config(args)?;
+    args.finish()?;
+    let t = harness::microbench_table(&cfg);
+    harness::emit(&cfg, "microbench", &t);
+    Ok(())
+}
+
+fn parse_problem(args: &Args) -> Result<Problem> {
+    match args.str_flag("problem").unwrap_or("tp1") {
+        "tp1" => Ok(Problem::Tp(TestProblem::Tp1)),
+        "tp2" => Ok(Problem::Tp(TestProblem::Tp2)),
+        "tp3" => Ok(Problem::Tp(TestProblem::Tp3)),
+        "custom" => Ok(Problem::Custom(args.usize_flag("n", 100_000)?)),
+        other => bail!("unknown problem '{other}'"),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let problem = parse_problem(args)?;
+    let mut cfg = RunConfig::default_for(problem);
+    cfg.scale_div = if args.bool_flag("full-scale") { 1 } else { args.usize_flag("scale", 16)? };
+    cfg.nodes = args.usize_flag("nodes", 2)?;
+    cfg.threads_per_node = args.usize_flag("tpn", 16)?;
+    cfg.iters = args.usize_flag("iters", 1000)?;
+    cfg.exec_steps = args.usize_flag("steps", 100)?;
+    if let Some(bs) = args.str_flag("blocksize") {
+        cfg.block_size = Some(bs.parse().map_err(|_| anyhow!("--blocksize expects an integer"))?);
+    }
+    if let Some(v) = args.str_flag("variant") {
+        cfg.variant = Variant::parse(v).ok_or_else(|| anyhow!("unknown variant '{v}'"))?;
+    }
+    if let Some(o) = args.str_flag("ordering") {
+        cfg.ordering = Ordering::parse(o).ok_or_else(|| anyhow!("unknown ordering '{o}'"))?;
+    }
+    cfg.backend = match args.str_flag("backend").unwrap_or("native") {
+        "native" => Backend::Native,
+        "pjrt" => Backend::Pjrt,
+        other => bail!("unknown backend '{other}'"),
+    };
+    args.finish()?;
+
+    println!(
+        "# end-to-end diffusion driver: {} on {:?}, {} nodes x {} threads, backend {:?}",
+        cfg.variant.name(),
+        cfg.problem,
+        cfg.nodes,
+        cfg.threads_per_node,
+        cfg.backend
+    );
+    let iters = cfg.iters;
+    let steps = cfg.exec_steps;
+    let report = Runner::new(cfg).run()?;
+    println!("n                = {}", fmt::int(report.n));
+    println!("BLOCKSIZE        = {}", report.block_size);
+    println!("simulated total  = {} ({} iters)", fmt::secs(report.sim_total), iters);
+    println!("model predicted  = {}", fmt::secs(report.model_total));
+    println!("sim/model ratio  = {:.3}", report.sim_total / report.model_total);
+    println!("executed steps   = {} in {} host wall-clock", steps, fmt::secs(report.exec_wall));
+    println!("inter-thread     = {} per step", fmt::bytes(report.step_bytes as f64));
+    println!("checksum         = {:.9e}", report.checksum);
+    println!("final max|x|     = {:.6}", report.final_max);
+    let show = report.residuals.len().min(8);
+    println!(
+        "residuals        = {:?} ... (first {show} of {})",
+        report.residuals[..show].iter().map(|r| format!("{r:.3e}")).collect::<Vec<_>>(),
+        report.residuals.len()
+    );
+    Ok(())
+}
+
+fn cmd_heat(args: &Args) -> Result<()> {
+    use upcsim::heat2d::{seq_reference_step, simulate_heat_step, Heat2dSolver};
+    use upcsim::machine::HwParams;
+    use upcsim::model::{predict_heat2d, HeatGrid};
+    use upcsim::pgas::Topology;
+    use upcsim::sim::SimParams;
+    let mg = args.usize_flag("m", 512)?;
+    let ng = args.usize_flag("n", mg)?;
+    let mp = args.usize_flag("mprocs", 4)?;
+    let np = args.usize_flag("nprocs", 4)?;
+    let steps = args.usize_flag("steps", 50)?;
+    args.finish()?;
+    let grid = HeatGrid::new(mg, ng, mp, np);
+    let threads = grid.threads();
+    let topo = Topology::new((threads / 16).max(1), threads.min(16));
+    let hw = HwParams::abel();
+
+    // Real numerics vs the sequential stencil.
+    let mut rng = upcsim::util::Rng::new(7);
+    let f0: Vec<f64> = (0..mg * ng).map(|_| rng.f64_in(0.0, 100.0)).collect();
+    let mut solver = Heat2dSolver::new(grid, &f0);
+    let mut reference = f0.clone();
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        solver.step();
+        reference = seq_reference_step(mg, ng, &reference);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let err = solver
+        .to_global()
+        .iter()
+        .zip(&reference)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("{steps} steps on {mg}x{ng} over {mp}x{np} threads in {}", fmt::secs(wall));
+    println!("max |parallel − sequential| = {err:.3e}");
+    anyhow::ensure!(err < 1e-9, "halo exchange diverged");
+    println!("halo payload: {}", fmt::bytes(solver.inter_thread_bytes as f64));
+    let sim = simulate_heat_step(&grid, &topo, &hw, &SimParams::from_hw(&hw));
+    let model = predict_heat2d(&grid, &topo, &hw);
+    println!(
+        "per 1000 steps on the simulated cluster: T_halo {} (model {}), T_comp {} (model {})",
+        fmt::secs(sim.t_halo * 1000.0),
+        fmt::secs(model.t_halo * 1000.0),
+        fmt::secs(sim.t_comp * 1000.0),
+        fmt::secs(model.t_comp * 1000.0),
+    );
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let scale = args.usize_flag("scale", 256)?;
+    args.finish()?;
+    let mut cfg = RunConfig::default_for(Problem::Tp(TestProblem::Tp1));
+    cfg.scale_div = scale;
+    cfg.exec_steps = 3;
+    cfg.nodes = 1;
+    cfg.threads_per_node = 8;
+    cfg.backend = Backend::Native;
+    let mesh = Runner::new(cfg.clone()).build_mesh();
+    let native = Runner::new(cfg.clone()).run_on(&mesh)?;
+    cfg.backend = Backend::Pjrt;
+    let pjrt = Runner::new(cfg).run_on(&mesh)?;
+    let rel = (native.checksum - pjrt.checksum).abs() / native.checksum.abs().max(1e-30);
+    println!("native checksum = {:.12e}", native.checksum);
+    println!("pjrt   checksum = {:.12e}", pjrt.checksum);
+    println!("relative diff   = {rel:.3e}");
+    if rel > 1e-4 {
+        bail!("PJRT artifacts diverge from the native kernel (rel {rel:.3e})");
+    }
+    println!("validate OK (within f32 tolerance)");
+    Ok(())
+}

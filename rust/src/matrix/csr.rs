@@ -1,0 +1,100 @@
+//! Compressed Sparse Row format — used as an independent representation to
+//! cross-check EllPack (conversion round-trips and SpMV equivalence), and by
+//! downstream users who want a general-degree matrix.
+
+use super::Ellpack;
+
+/// A CSR matrix (diagonal stored inline like any other entry).
+#[derive(Debug, Clone)]
+pub struct Csr {
+    pub n: usize,
+    pub row_ptr: Vec<usize>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    /// Convert from modified EllPack; padded (zero-weight self) slots are
+    /// dropped, the diagonal becomes an explicit entry.
+    pub fn from_ellpack(m: &Ellpack) -> Csr {
+        let mut row_ptr = Vec::with_capacity(m.n + 1);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for i in 0..m.n {
+            cols.push(i as u32);
+            vals.push(m.diag[i]);
+            for k in 0..m.r_nz {
+                let c = m.j[i * m.r_nz + k];
+                let v = m.a[i * m.r_nz + k];
+                if c as usize != i {
+                    cols.push(c);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(cols.len());
+        }
+        Csr { n: m.n, row_ptr, cols, vals }
+    }
+
+    /// Standard CSR SpMV.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        for i in 0..self.n {
+            let mut acc = 0.0;
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                acc += self.vals[k] * x[self.cols[k] as usize];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check_prop;
+
+    #[test]
+    fn csr_matches_ellpack_spmv() {
+        check_prop(
+            "csr-vs-ellpack",
+            24,
+            |r| {
+                let n = r.usize_in(2, 200);
+                let rnz = r.usize_in(1, 8);
+                let m = Ellpack::random(n, rnz, r.next_u64());
+                let x: Vec<f64> = (0..n).map(|_| r.f64_in(-1.0, 1.0)).collect();
+                (m, x)
+            },
+            |(m, x)| {
+                let csr = Csr::from_ellpack(m);
+                let mut y1 = vec![0.0; m.n];
+                let mut y2 = vec![0.0; m.n];
+                m.spmv_seq(x, &mut y1);
+                csr.spmv(x, &mut y2);
+                for i in 0..m.n {
+                    if (y1[i] - y2[i]).abs() > 1e-12 * (1.0 + y1[i].abs()) {
+                        return Err(format!("row {i}: {} vs {}", y1[i], y2[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn nnz_counts_diagonal_plus_genuine() {
+        let m = Ellpack::random(50, 4, 3);
+        let csr = Csr::from_ellpack(&m);
+        let genuine: usize = (0..m.n)
+            .map(|i| m.row_cols(i).iter().filter(|&&c| c as usize != i).count())
+            .sum();
+        assert_eq!(csr.nnz(), genuine + m.n);
+    }
+}

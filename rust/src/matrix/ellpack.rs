@@ -1,0 +1,230 @@
+//! Modified EllPack storage (paper §3.1): `M = D + A` with the main diagonal
+//! `D` stored as a length-`n` array and the fixed-degree off-diagonal part
+//! `A` stored as two row-major `n × r_nz` tables (values + column indices),
+//! flattened to 1D arrays exactly as the paper's Listing 1 lays them out.
+
+use crate::mesh::{TetMesh, R_NZ};
+use crate::util::Rng;
+
+/// A square sparse matrix in modified EllPack format.
+#[derive(Debug, Clone)]
+pub struct Ellpack {
+    /// Matrix dimension (`n`).
+    pub n: usize,
+    /// Fixed number of off-diagonal slots per row (`r_nz`).
+    pub r_nz: usize,
+    /// Main diagonal `D`, length `n`.
+    pub diag: Vec<f64>,
+    /// Off-diagonal values `A`, length `n · r_nz`, row-major; padded slots
+    /// hold 0.0.
+    pub a: Vec<f64>,
+    /// Column indices `J`, length `n · r_nz`; padded slots hold the row
+    /// index itself (self-reference with zero weight, as in §3.1).
+    pub j: Vec<u32>,
+}
+
+impl Ellpack {
+    /// Build the diffusion time-stepping operator `M = I − Δt·L` from a mesh,
+    /// where `L` is a weighted graph Laplacian over the tet adjacency.
+    /// Row sums of `M` equal 1 and Gershgorin bounds all eigenvalues inside
+    /// `(−1, 1]` (we pick `Δt·Σw < 1`), so the §6.1 time integration
+    /// `v^ℓ = M v^{ℓ−1}` is stable — the end-to-end driver checks this.
+    pub fn diffusion_from_mesh(mesh: &TetMesh) -> Ellpack {
+        let n = mesh.n;
+        let r_nz = R_NZ;
+        let mut diag = vec![0.0f64; n];
+        let mut a = vec![0.0f64; n * r_nz];
+        let mut j = vec![0u32; n * r_nz];
+        let mut rng = Rng::new(mesh.seed ^ 0x5147_AB3D);
+        const DT: f64 = 0.9;
+        for i in 0..n {
+            let d = mesh.degree[i] as usize;
+            let mut wsum = 0.0f64;
+            // Weights mimic FV transmissibilities: positive, O(1/degree),
+            // mildly random (the paper's weights depend on tet geometry).
+            for k in 0..r_nz {
+                let col = mesh.adj[i * r_nz + k];
+                j[i * r_nz + k] = col;
+                if k < d {
+                    let w = rng.f64_in(0.5, 1.5) / (d as f64);
+                    a[i * r_nz + k] = DT * w;
+                    wsum += w;
+                } // padded slots stay 0.0 with col == i
+            }
+            diag[i] = 1.0 - DT * wsum;
+        }
+        Ellpack { n, r_nz, diag, a, j }
+    }
+
+    /// A small random matrix for tests: `n` rows, degree ≤ `r_nz`, arbitrary
+    /// (possibly long-range) column pattern.
+    pub fn random(n: usize, r_nz: usize, seed: u64) -> Ellpack {
+        assert!(n > 1);
+        let mut rng = Rng::new(seed);
+        let mut diag = vec![0.0f64; n];
+        let mut a = vec![0.0f64; n * r_nz];
+        let mut j = vec![0u32; n * r_nz];
+        for i in 0..n {
+            // A row can have at most n−1 distinct off-diagonal columns.
+            let d = rng.usize_in(0, r_nz + 1).min(n - 1);
+            let mut cols = std::collections::BTreeSet::new();
+            while cols.len() < d {
+                let c = rng.usize_in(0, n);
+                if c != i {
+                    cols.insert(c as u32);
+                }
+            }
+            for (k, c) in cols.iter().enumerate() {
+                j[i * r_nz + k] = *c;
+                a[i * r_nz + k] = rng.f64_in(-1.0, 1.0);
+            }
+            for k in cols.len()..r_nz {
+                j[i * r_nz + k] = i as u32;
+            }
+            diag[i] = rng.f64_in(1.0, 2.0);
+        }
+        Ellpack { n, r_nz, diag, a, j }
+    }
+
+    /// Sequential SpMV, the paper's Listing 1:
+    /// `y[i] = D[i]·x[i] + Σ_j A[i·r+j]·x[J[i·r+j]]`.
+    ///
+    /// This is the *oracle*: every parallel variant must produce bitwise
+    /// identical results because all variants accumulate in the same order.
+    pub fn spmv_seq(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        let r = self.r_nz;
+        for i in 0..self.n {
+            let mut tmp = 0.0f64;
+            for k in 0..r {
+                tmp += self.a[i * r + k] * x[self.j[i * r + k] as usize];
+            }
+            y[i] = self.diag[i] * x[i] + tmp;
+        }
+    }
+
+    /// Row slice of values.
+    #[inline]
+    pub fn row_vals(&self, i: usize) -> &[f64] {
+        &self.a[i * self.r_nz..(i + 1) * self.r_nz]
+    }
+
+    /// Row slice of column indices.
+    #[inline]
+    pub fn row_cols(&self, i: usize) -> &[u32] {
+        &self.j[i * self.r_nz..(i + 1) * self.r_nz]
+    }
+
+    /// Memory a row's data occupies in the paper's traffic model (eq. (6)):
+    /// `r_nz·(8+4) + 3·8` bytes.
+    pub fn d_min_comp_bytes(&self) -> f64 {
+        (self.r_nz * (8 + 4) + 3 * 8) as f64
+    }
+
+    /// Structural check: column indices in range; padded slots self-refer
+    /// with zero value.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.a.len() != self.n * self.r_nz || self.j.len() != self.n * self.r_nz {
+            return Err("table sizes".into());
+        }
+        for i in 0..self.n {
+            for k in 0..self.r_nz {
+                let c = self.j[i * self.r_nz + k] as usize;
+                if c >= self.n {
+                    return Err(format!("row {i}: col {c} out of range"));
+                }
+                if c == i && self.a[i * self.r_nz + k] != 0.0 {
+                    return Err(format!("row {i}: self column with nonzero weight"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// An initial vector for the diffusion driver: a smooth blob plus noise,
+    /// deterministic.
+    pub fn initial_vector(&self, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..self.n)
+            .map(|i| {
+                let t = i as f64 / self.n as f64;
+                (2.0 * std::f64::consts::PI * t).sin() + 0.1 * rng.f64()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::TestProblem;
+
+    fn mesh() -> TetMesh {
+        crate::mesh::TetMesh::generate(&crate::mesh::TetGridSpec::ventricle(3000, 7))
+    }
+
+    #[test]
+    fn diffusion_matrix_valid() {
+        let m = Ellpack::diffusion_from_mesh(&mesh());
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn diffusion_rows_sum_to_one() {
+        let m = Ellpack::diffusion_from_mesh(&mesh());
+        for i in (0..m.n).step_by(97) {
+            let s: f64 = m.diag[i] + m.row_vals(i).iter().sum::<f64>();
+            assert!((s - 1.0).abs() < 1e-12, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn diffusion_iteration_is_stable() {
+        let m = Ellpack::diffusion_from_mesh(&mesh());
+        let mut x = m.initial_vector(3);
+        let mut y = vec![0.0; m.n];
+        let max0 = x.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+        for _ in 0..50 {
+            m.spmv_seq(&x, &mut y);
+            std::mem::swap(&mut x, &mut y);
+        }
+        let max50 = x.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+        assert!(max50 <= max0 * 1.0 + 1e-9, "diffusion grew: {max0} -> {max50}");
+    }
+
+    #[test]
+    fn spmv_seq_tiny_known() {
+        // 2x2: M = [[2, 0.5], [0, 3]] in EllPack with r_nz=1.
+        let m = Ellpack {
+            n: 2,
+            r_nz: 1,
+            diag: vec![2.0, 3.0],
+            a: vec![0.5, 0.0],
+            j: vec![1, 1],
+        };
+        let mut y = vec![0.0; 2];
+        m.spmv_seq(&[1.0, 2.0], &mut y);
+        assert_eq!(y, vec![2.0 * 1.0 + 0.5 * 2.0, 3.0 * 2.0]);
+    }
+
+    #[test]
+    fn d_min_comp_matches_eq6() {
+        let m = Ellpack::random(10, 16, 1);
+        // 16·12 + 24 = 216 bytes (paper's r_nz = 16 case).
+        assert_eq!(m.d_min_comp_bytes(), 216.0);
+    }
+
+    #[test]
+    fn random_matrix_valid() {
+        Ellpack::random(500, 16, 99).validate().unwrap();
+    }
+
+    #[test]
+    #[ignore] // ~seconds; run with --ignored
+    fn tp1_scaled_builds() {
+        let mesh = TestProblem::Tp1.generate(64);
+        let m = Ellpack::diffusion_from_mesh(&mesh);
+        m.validate().unwrap();
+    }
+}

@@ -1,0 +1,8 @@
+//! Sparse-matrix substrate: the paper's modified EllPack format (§3.1) plus
+//! CSR (for conversion tests) and the sequential SpMV oracle (Listing 1).
+
+mod csr;
+mod ellpack;
+
+pub use csr::Csr;
+pub use ellpack::Ellpack;

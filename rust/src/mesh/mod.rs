@@ -1,0 +1,64 @@
+//! Synthetic unstructured tetrahedral meshes.
+//!
+//! The paper's three test problems are tetrahedral meshes of a human left
+//! cardiac ventricle generated with TetGen (Table 1: 6.8M / 13.0M / 25.6M
+//! tetrahedra), with up to `r_nz = 16` off-diagonal nonzeros per row after a
+//! second-order finite-volume discretization, and rows re-ordered for cache
+//! locality.
+//!
+//! We do not have those meshes (or TetGen output at that scale), so this
+//! module builds the closest synthetic equivalent (see DESIGN.md
+//! §Substitution record): a **half-ellipsoid shell** (ventricle-like wall)
+//! voxelized into hexahedra, each split into 6 Kuhn tetrahedra; the sparsity
+//! pattern couples every tetrahedron to up to 16 others chosen from those
+//! sharing ≥ 2 vertices (face/edge neighbours — the second-order FV stencil
+//! reaches exactly this neighbourhood). The generated pattern is irregular,
+//! spatially local under the natural ordering, and has the fixed-degree-16
+//! EllPack structure the paper's kernels assume.
+
+mod reorder;
+mod tetgrid;
+
+pub use reorder::{apply_permutation, Ordering};
+pub use tetgrid::{TetGridSpec, TetMesh};
+
+/// The paper's fixed number of off-diagonal nonzeros per row (§6.1).
+pub const R_NZ: usize = 16;
+
+/// The three test problems of Table 1 with their paper-scale sizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TestProblem {
+    Tp1,
+    Tp2,
+    Tp3,
+}
+
+impl TestProblem {
+    /// Number of tetrahedra at paper scale (Table 1).
+    pub fn paper_n(self) -> usize {
+        match self {
+            TestProblem::Tp1 => 6_810_586,
+            TestProblem::Tp2 => 13_009_527,
+            TestProblem::Tp3 => 25_587_400,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TestProblem::Tp1 => "Test problem 1",
+            TestProblem::Tp2 => "Test problem 2",
+            TestProblem::Tp3 => "Test problem 3",
+        }
+    }
+
+    pub const ALL: [TestProblem; 3] = [TestProblem::Tp1, TestProblem::Tp2, TestProblem::Tp3];
+
+    /// Generate the mesh at `1/scale_div` of paper size (natural ordering).
+    /// `scale_div = 16` is the default used throughout EXPERIMENTS.md.
+    pub fn generate(self, scale_div: usize) -> TetMesh {
+        assert!(scale_div >= 1);
+        let target = (self.paper_n() / scale_div).max(1000);
+        TetMesh::generate(&TetGridSpec::ventricle(target, 0x5EED ^ self.paper_n() as u64))
+    }
+}
+pub use tetgrid::tiny_mesh;

@@ -1,0 +1,267 @@
+//! Row (tetrahedron) orderings.
+//!
+//! The paper's meshes were "re-ordered … for achieving good cache behavior"
+//! (§6.1). The ordering determines both the cache behaviour of the compute
+//! phase and — decisively — the between-thread communication pattern, since
+//! thread affinity is a function of the row index (eq. (1)). We provide four
+//! orderings so the ordering ablation can quantify that effect.
+
+use super::tetgrid::TetMesh;
+use super::R_NZ;
+use crate::util::Rng;
+
+/// Available row orderings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ordering {
+    /// Generation order (z-major spatial scan) — the baseline, already
+    /// cache-friendly, analogous to the paper's "proper" ordering.
+    Natural,
+    /// Reverse Cuthill–McKee over the adjacency graph.
+    Rcm,
+    /// Morton (Z-order) curve over tet centroids.
+    Morton,
+    /// Uniform random permutation — the worst case.
+    Random,
+}
+
+impl Ordering {
+    pub const ALL: [Ordering; 4] =
+        [Ordering::Natural, Ordering::Rcm, Ordering::Morton, Ordering::Random];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Ordering::Natural => "natural",
+            Ordering::Rcm => "rcm",
+            Ordering::Morton => "morton",
+            Ordering::Random => "random",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Ordering> {
+        Ordering::ALL.iter().copied().find(|o| o.name() == s)
+    }
+
+    /// Compute the permutation `perm` with `perm[old] = new`.
+    pub fn permutation(self, mesh: &TetMesh) -> Vec<u32> {
+        match self {
+            Ordering::Natural => (0..mesh.n as u32).collect(),
+            Ordering::Rcm => rcm(mesh),
+            Ordering::Morton => morton(mesh),
+            Ordering::Random => {
+                let mut new_of_old: Vec<u32> = (0..mesh.n as u32).collect();
+                let mut rng = Rng::new(mesh.seed ^ 0xDEAD_BEEF);
+                rng.shuffle(&mut new_of_old);
+                new_of_old
+            }
+        }
+    }
+
+    /// Return a re-ordered copy of the mesh.
+    pub fn apply(self, mesh: &TetMesh) -> TetMesh {
+        if self == Ordering::Natural {
+            return mesh.clone();
+        }
+        apply_permutation(mesh, &self.permutation(mesh))
+    }
+}
+
+/// Apply a permutation (`perm[old] = new`) to a mesh: rows move, neighbour
+/// ids are relabeled, per-row genuine entries stay sorted by the ranking the
+/// generator chose (we keep their relative order).
+pub fn apply_permutation(mesh: &TetMesh, perm: &[u32]) -> TetMesh {
+    assert_eq!(perm.len(), mesh.n);
+    debug_assert!(is_permutation(perm));
+    let n = mesh.n;
+    let mut adj = vec![0u32; n * R_NZ];
+    let mut degree = vec![0u8; n];
+    let mut centroids = vec![[0f32; 3]; n];
+    for old in 0..n {
+        let new = perm[old] as usize;
+        degree[new] = mesh.degree[old];
+        centroids[new] = mesh.centroids[old];
+        let d = mesh.degree[old] as usize;
+        for k in 0..R_NZ {
+            let col_old = mesh.adj[old * R_NZ + k] as usize;
+            adj[new * R_NZ + k] = if k < d {
+                perm[col_old]
+            } else {
+                new as u32 // padding follows the row
+            };
+        }
+    }
+    TetMesh { n, adj, degree, centroids, seed: mesh.seed }
+}
+
+fn is_permutation(perm: &[u32]) -> bool {
+    let mut seen = vec![false; perm.len()];
+    for &p in perm {
+        if (p as usize) >= perm.len() || seen[p as usize] {
+            return false;
+        }
+        seen[p as usize] = true;
+    }
+    true
+}
+
+/// Reverse Cuthill–McKee: BFS from a low-degree seed, neighbours visited in
+/// increasing-degree order, final order reversed.
+fn rcm(mesh: &TetMesh) -> Vec<u32> {
+    let n = mesh.n;
+    let mut order: Vec<u32> = Vec::with_capacity(n);
+    let mut visited = vec![false; n];
+    let mut queue: std::collections::VecDeque<u32> = std::collections::VecDeque::new();
+    // Process every connected component, seeded from min degree.
+    let mut by_degree: Vec<u32> = (0..n as u32).collect();
+    by_degree.sort_unstable_by_key(|&i| mesh.degree[i as usize]);
+    let mut nbrs: Vec<u32> = Vec::with_capacity(R_NZ);
+    for &seed in &by_degree {
+        if visited[seed as usize] {
+            continue;
+        }
+        visited[seed as usize] = true;
+        queue.push_back(seed);
+        while let Some(i) = queue.pop_front() {
+            order.push(i);
+            let d = mesh.degree[i as usize] as usize;
+            nbrs.clear();
+            nbrs.extend(
+                mesh.adj[i as usize * R_NZ..i as usize * R_NZ + d]
+                    .iter()
+                    .copied()
+                    .filter(|&j| !visited[j as usize]),
+            );
+            nbrs.sort_unstable_by_key(|&j| mesh.degree[j as usize]);
+            for &j in &nbrs {
+                if !visited[j as usize] {
+                    visited[j as usize] = true;
+                    queue.push_back(j);
+                }
+            }
+        }
+    }
+    debug_assert_eq!(order.len(), n);
+    // order[k] = old index of the k-th row; reversed for RCM. Build perm.
+    let mut perm = vec![0u32; n];
+    for (k, &old) in order.iter().rev().enumerate() {
+        perm[old as usize] = k as u32;
+    }
+    perm
+}
+
+/// Morton order: quantize centroids to a 21-bit lattice and sort by the
+/// interleaved key.
+fn morton(mesh: &TetMesh) -> Vec<u32> {
+    let n = mesh.n;
+    // Bounding box.
+    let mut lo = [f32::INFINITY; 3];
+    let mut hi = [f32::NEG_INFINITY; 3];
+    for c in &mesh.centroids {
+        for a in 0..3 {
+            lo[a] = lo[a].min(c[a]);
+            hi[a] = hi[a].max(c[a]);
+        }
+    }
+    let bits = 21u32;
+    let scale: Vec<f64> = (0..3)
+        .map(|a| {
+            let span = (hi[a] - lo[a]) as f64;
+            if span > 0.0 { (((1u64 << bits) - 1) as f64) / span } else { 0.0 }
+        })
+        .collect();
+    let mut keyed: Vec<(u64, u32)> = (0..n)
+        .map(|i| {
+            let c = mesh.centroids[i];
+            let q: Vec<u64> = (0..3)
+                .map(|a| (((c[a] - lo[a]) as f64) * scale[a]) as u64)
+                .collect();
+            (interleave3(q[0], q[1], q[2]), i as u32)
+        })
+        .collect();
+    keyed.sort_unstable();
+    let mut perm = vec![0u32; n];
+    for (new, &(_, old)) in keyed.iter().enumerate() {
+        perm[old as usize] = new as u32;
+    }
+    perm
+}
+
+/// Spread the low 21 bits of `x` so consecutive bits are 3 apart.
+fn spread3(mut x: u64) -> u64 {
+    x &= (1 << 21) - 1;
+    x = (x | (x << 32)) & 0x1F00000000FFFF;
+    x = (x | (x << 16)) & 0x1F0000FF0000FF;
+    x = (x | (x << 8)) & 0x100F00F00F00F00F;
+    x = (x | (x << 4)) & 0x10C30C30C30C30C3;
+    x = (x | (x << 2)) & 0x1249249249249249;
+    x
+}
+
+fn interleave3(x: u64, y: u64, z: u64) -> u64 {
+    spread3(x) | (spread3(y) << 1) | (spread3(z) << 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::tetgrid::tiny_mesh;
+
+    #[test]
+    fn all_orderings_preserve_structure() {
+        let m = tiny_mesh();
+        for o in Ordering::ALL {
+            let r = o.apply(&m);
+            r.validate().unwrap_or_else(|e| panic!("{}: {e}", o.name()));
+            assert_eq!(r.n, m.n);
+            // Degree multiset preserved.
+            let mut a: Vec<u8> = m.degree.clone();
+            let mut b: Vec<u8> = r.degree.clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "{}", o.name());
+        }
+    }
+
+    #[test]
+    fn permutation_relabels_edges_consistently() {
+        let m = tiny_mesh();
+        let perm = Ordering::Rcm.permutation(&m);
+        let r = apply_permutation(&m, &perm);
+        // Edge (i → j) in m must appear as (perm[i] → perm[j]) in r.
+        for i in 0..m.n.min(500) {
+            let d = m.degree[i] as usize;
+            let mut expect: Vec<u32> =
+                m.adj[i * R_NZ..i * R_NZ + d].iter().map(|&j| perm[j as usize]).collect();
+            let ni = perm[i] as usize;
+            let mut got: Vec<u32> = r.adj[ni * R_NZ..ni * R_NZ + d].to_vec();
+            expect.sort_unstable();
+            got.sort_unstable();
+            assert_eq!(expect, got, "row {i}");
+        }
+    }
+
+    #[test]
+    fn random_order_destroys_locality() {
+        let m = tiny_mesh();
+        let natural = m.mean_index_distance();
+        let random = Ordering::Random.apply(&m).mean_index_distance();
+        assert!(
+            random > 4.0 * natural,
+            "random {random} should be far worse than natural {natural}"
+        );
+    }
+
+    #[test]
+    fn rcm_improves_or_matches_bandwidth_vs_random() {
+        let m = Ordering::Random.apply(&tiny_mesh());
+        let rcm = Ordering::Rcm.apply(&m);
+        assert!(rcm.mean_index_distance() < 0.5 * m.mean_index_distance());
+    }
+
+    #[test]
+    fn morton_key_interleave() {
+        assert_eq!(interleave3(1, 0, 0), 1);
+        assert_eq!(interleave3(0, 1, 0), 2);
+        assert_eq!(interleave3(0, 0, 1), 4);
+        assert_eq!(interleave3(3, 0, 0), 0b1001);
+    }
+}

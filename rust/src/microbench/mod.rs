@@ -1,0 +1,133 @@
+//! The §6.2 microbenchmarks.
+//!
+//! Three of them characterize the (simulated) cluster and recover the four
+//! hardware constants — a self-consistency check of the simulator's cost
+//! accounting:
+//!
+//! * [`stream_sim`] — multi-threaded STREAM per node → `W_node ≈ 75 GB/s`,
+//! * [`pingpong_sim`] — inter-node contiguous transfers → `W_node_remote`,
+//! * [`tau_sim`] — the Listing-6 random-remote-read benchmark → `τ`.
+//!
+//! [`stream_host`] additionally measures the *real host* machine's triad
+//! bandwidth; the §Perf pass uses it as the roofline for the native SpMV
+//! kernel (EXPERIMENTS.md §Perf).
+
+use crate::machine::HwParams;
+use crate::sim::SimParams;
+use std::time::Instant;
+
+/// Result of a bandwidth-style microbenchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BandwidthResult {
+    pub bytes: f64,
+    pub seconds: f64,
+}
+
+impl BandwidthResult {
+    pub fn bandwidth(&self) -> f64 {
+        self.bytes / self.seconds
+    }
+}
+
+/// Simulated multi-threaded STREAM: `threads` threads each stream
+/// `elems_per_thread` doubles (read + write) through private memory.
+/// Recovers `W_thread_private · threads`.
+pub fn stream_sim(hw: &HwParams, threads: usize, elems_per_thread: usize) -> BandwidthResult {
+    let bytes_per_thread = (elems_per_thread * 2 * 8) as f64; // triad-ish: load+store
+    // All threads run concurrently; each takes bytes/W_thread.
+    let seconds = bytes_per_thread / hw.w_thread_private;
+    BandwidthResult { bytes: bytes_per_thread * threads as f64, seconds }
+}
+
+/// Simulated MPI-style ping-pong between two nodes with message size
+/// `bytes`: recovers `W_node_remote` as size → ∞ and `τ` as size → 0.
+pub fn pingpong_sim(hw: &HwParams, bytes: usize, reps: usize) -> BandwidthResult {
+    let t_one_way = hw.t_remote_message(bytes as f64);
+    BandwidthResult {
+        bytes: (bytes * reps * 2) as f64,
+        seconds: t_one_way * (reps * 2) as f64,
+    }
+}
+
+/// Simulated Listing-6 benchmark: `concurrent` threads per node each perform
+/// `ops` random individual remote reads. Returns the measured per-op latency
+/// — equals `τ` when `concurrent == 8` (the paper's calibration point).
+pub fn tau_sim(params: &SimParams, concurrent: usize, ops: usize) -> f64 {
+    let per_thread = ops as f64 * params.tau_eff(concurrent);
+    per_thread / ops as f64
+}
+
+/// Real host STREAM triad (`a[i] = b[i] + s·c[i]`) over all host cores.
+/// Used as the roofline anchor for the native hot path.
+pub fn stream_host(elems_per_thread: usize) -> BandwidthResult {
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let reps = 5usize;
+    // Allocate and fault in all buffers OUTSIDE the timed region.
+    let mut buffers: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = (0..threads)
+        .map(|_| {
+            (
+                vec![0.0f64; elems_per_thread],
+                vec![1.0f64; elems_per_thread],
+                vec![2.0f64; elems_per_thread],
+            )
+        })
+        .collect();
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let start = Instant::now();
+        std::thread::scope(|scope| {
+            for (a, b, c) in buffers.iter_mut() {
+                scope.spawn(move || {
+                    for ((ai, bi), ci) in a.iter_mut().zip(b.iter()).zip(c.iter()) {
+                        *ai = *bi + 3.0 * *ci;
+                    }
+                    std::hint::black_box(&a[0]);
+                });
+            }
+        });
+        best = best.min(start.elapsed().as_secs_f64());
+    }
+    // Triad traffic: 3 arrays × 8 bytes each (2 loads + 1 store).
+    BandwidthResult { bytes: (elems_per_thread * threads * 3 * 8) as f64, seconds: best }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_recovers_node_bandwidth() {
+        let hw = HwParams::abel();
+        let r = stream_sim(&hw, 16, 1 << 20);
+        assert!((r.bandwidth() - 75.0e9).abs() / 75.0e9 < 1e-9, "{}", r.bandwidth());
+    }
+
+    #[test]
+    fn pingpong_recovers_remote_bandwidth() {
+        let hw = HwParams::abel();
+        // Large messages → bandwidth-dominated.
+        let r = pingpong_sim(&hw, 64 << 20, 4);
+        assert!((r.bandwidth() - 6.0e9).abs() / 6.0e9 < 0.01, "{}", r.bandwidth());
+        // Small messages → latency-dominated, way below peak.
+        let r8 = pingpong_sim(&hw, 8, 100);
+        assert!(r8.bandwidth() < 0.01 * 6.0e9);
+    }
+
+    #[test]
+    fn tau_recovered_at_calibration_point() {
+        let hw = HwParams::abel();
+        let params = SimParams::from_hw(&hw);
+        let tau = tau_sim(&params, 8, 10_000);
+        assert!((tau - hw.tau).abs() < 1e-12, "{tau}");
+        // Fewer communicating threads → smaller effective τ (paper §6.4).
+        assert!(tau_sim(&params, 2, 1000) < tau);
+    }
+
+    #[test]
+    fn host_stream_reports_something_sane() {
+        let r = stream_host(1 << 18);
+        let bw = r.bandwidth();
+        // Any machine (even a debug build) lands between 0.05 GB/s and 10 TB/s.
+        assert!(bw > 5e7 && bw < 1e13, "{bw}");
+    }
+}

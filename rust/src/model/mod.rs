@@ -1,0 +1,17 @@
+//! The performance-model engine — the paper's §5 (eqs. (5)–(18)) and the 2D
+//! extension of §8.2 (eqs. (19)–(22)).
+//!
+//! These are the *closed-form predictions*. They are deliberately
+//! implemented independently of the [`sim`](crate::sim) module (which
+//! executes the same traffic with contention effects), so comparing the two
+//! reproduces the paper's "actual vs. predicted" methodology — see Table 4 /
+//! Table 5 in the harness.
+
+mod heat;
+mod spmv;
+
+pub use heat::{predict_heat2d, Heat2dPrediction, HeatGrid};
+pub use spmv::{
+    predict_naive, predict_v1, predict_v2, predict_v3, t_comp_thread, SpmvInputs, SpmvPrediction,
+    V3ThreadBreakdown,
+};

@@ -1,0 +1,272 @@
+//! Block-cyclic layout math (paper §2, eq. (1)).
+
+use crate::util::{ceil_div, FastDiv};
+
+/// The block-cyclic distribution of an `n`-element shared array over
+/// `threads` UPC threads with a programmer-chosen `block_size`
+/// (the paper's `BLOCKSIZE`).
+///
+/// All index math is centralized here; every other module (comm analysis,
+/// models, executors) goes through this type, so eq. (1) exists exactly once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Layout {
+    /// Number of elements in the shared array (the paper's `n`).
+    pub n: usize,
+    /// Elements per block (the paper's `BLOCKSIZE`).
+    pub block_size: usize,
+    /// Number of UPC threads (the paper's `THREADS`).
+    pub threads: usize,
+    /// Reciprocal-multiply divider for `block_size` (§Perf: the analyzer
+    /// performs one index→owner division per nonzero).
+    bs_div: FastDiv,
+    /// Reciprocal-multiply divider for `threads`.
+    thr_div: FastDiv,
+}
+
+impl Layout {
+    pub fn new(n: usize, block_size: usize, threads: usize) -> Layout {
+        assert!(n > 0, "empty shared array");
+        assert!(block_size > 0, "BLOCKSIZE must be positive");
+        assert!(threads > 0, "THREADS must be positive");
+        assert!(n <= u32::MAX as usize, "indices must fit u32");
+        Layout {
+            n,
+            block_size,
+            threads,
+            bs_div: FastDiv::new(block_size),
+            thr_div: FastDiv::new(threads),
+        }
+    }
+
+    /// Total number of blocks (`nblks` in Listing 2).
+    #[inline]
+    pub fn nblks(&self) -> usize {
+        ceil_div(self.n, self.block_size)
+    }
+
+    /// Owner thread of global block `b` (cyclic distribution).
+    #[inline]
+    pub fn owner_of_block(&self, b: usize) -> usize {
+        debug_assert!(b < self.nblks());
+        b % self.threads
+    }
+
+    /// Owner thread of global element index `i` — the paper's eq. (1).
+    #[inline]
+    pub fn owner_of_index(&self, i: usize) -> usize {
+        debug_assert!(i < self.n);
+        self.thr_div.rem(self.bs_div.div(i))
+    }
+
+    /// Global block id containing element `i`.
+    #[inline]
+    pub fn block_of_index(&self, i: usize) -> usize {
+        self.bs_div.div(i)
+    }
+
+    /// Phase (offset within its block) of element `i`.
+    #[inline]
+    pub fn phase_of_index(&self, i: usize) -> usize {
+        self.bs_div.rem(i)
+    }
+
+    /// Number of blocks owned by `thread` — the paper's
+    /// `mythread_nblks = nblks/THREADS + (MYTHREAD < nblks%THREADS ? 1 : 0)`.
+    #[inline]
+    pub fn nblks_of_thread(&self, thread: usize) -> usize {
+        let nblks = self.nblks();
+        nblks / self.threads + usize::from(thread < nblks % self.threads)
+    }
+
+    /// Number of *elements* owned by `thread` (last block may be short).
+    pub fn nelems_of_thread(&self, thread: usize) -> usize {
+        self.blocks_of_thread(thread)
+            .map(|b| self.block_len(b))
+            .sum()
+    }
+
+    /// Iterator over the global block ids owned by `thread`, in storage order
+    /// (the order they appear in the owner's contiguous local memory).
+    pub fn blocks_of_thread(&self, thread: usize) -> impl Iterator<Item = usize> + '_ {
+        let nblks = self.nblks();
+        (thread..nblks).step_by(self.threads)
+    }
+
+    /// Global element range `[start, start+len)` covered by block `b`
+    /// (`len < block_size` only for the tail block).
+    #[inline]
+    pub fn block_range(&self, b: usize) -> (usize, usize) {
+        let start = b * self.block_size;
+        (start, self.block_len(b))
+    }
+
+    /// Length of block `b` (tail block may be short).
+    #[inline]
+    pub fn block_len(&self, b: usize) -> usize {
+        let start = b * self.block_size;
+        debug_assert!(start < self.n);
+        (self.n - start).min(self.block_size)
+    }
+
+    /// Position of block `b` within its owner's sequence of blocks
+    /// (`mb` in Listing 3: block `b = mb*THREADS + owner`).
+    #[inline]
+    pub fn local_block_index(&self, b: usize) -> usize {
+        self.thr_div.div(b)
+    }
+
+    /// Offset of element `i` inside its owner thread's contiguous local
+    /// storage. Blocks owned by a thread are stored back to back, each
+    /// occupying a full `block_size` stride except a tail block, which is
+    /// stored at its natural (non-padded) offset since it is the final one.
+    #[inline]
+    pub fn local_offset_of_index(&self, i: usize) -> usize {
+        let b = self.block_of_index(i);
+        self.local_block_index(b) * self.block_size + self.phase_of_index(i)
+    }
+
+    /// Whether indices `i` and `j` live in the same block.
+    #[inline]
+    pub fn same_block(&self, i: usize, j: usize) -> bool {
+        self.block_of_index(i) == self.block_of_index(j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check_prop;
+
+    #[test]
+    fn eq1_matches_paper_example() {
+        // n=10, BLOCKSIZE=3, THREADS=2 → blocks [0..3)(t0) [3..6)(t1)
+        // [6..9)(t0) [9..10)(t1)
+        let l = Layout::new(10, 3, 2);
+        assert_eq!(l.nblks(), 4);
+        assert_eq!(l.owner_of_index(0), 0);
+        assert_eq!(l.owner_of_index(2), 0);
+        assert_eq!(l.owner_of_index(3), 1);
+        assert_eq!(l.owner_of_index(6), 0);
+        assert_eq!(l.owner_of_index(9), 1);
+        assert_eq!(l.nblks_of_thread(0), 2);
+        assert_eq!(l.nblks_of_thread(1), 2);
+        assert_eq!(l.nelems_of_thread(0), 6);
+        assert_eq!(l.nelems_of_thread(1), 4);
+    }
+
+    #[test]
+    fn blocks_of_thread_order() {
+        let l = Layout::new(100, 10, 3);
+        assert_eq!(l.blocks_of_thread(0).collect::<Vec<_>>(), vec![0, 3, 6, 9]);
+        assert_eq!(l.blocks_of_thread(1).collect::<Vec<_>>(), vec![1, 4, 7]);
+        assert_eq!(l.blocks_of_thread(2).collect::<Vec<_>>(), vec![2, 5, 8]);
+    }
+
+    #[test]
+    fn tail_block_short() {
+        let l = Layout::new(25, 10, 2);
+        assert_eq!(l.nblks(), 3);
+        assert_eq!(l.block_len(0), 10);
+        assert_eq!(l.block_len(2), 5);
+        assert_eq!(l.block_range(2), (20, 5));
+    }
+
+    #[test]
+    fn local_offsets_are_contiguous_per_thread() {
+        let l = Layout::new(35, 10, 2);
+        // thread 0 owns blocks 0, 2 → global [0..10) ∪ [20..30)
+        // storage offsets: block0 at 0..10, block2 at 10..20
+        assert_eq!(l.local_offset_of_index(0), 0);
+        assert_eq!(l.local_offset_of_index(9), 9);
+        assert_eq!(l.local_offset_of_index(20), 10);
+        assert_eq!(l.local_offset_of_index(29), 19);
+        // thread 1 owns blocks 1, 3 → [10..20) ∪ [30..35)
+        assert_eq!(l.local_offset_of_index(10), 0);
+        assert_eq!(l.local_offset_of_index(30), 10);
+        assert_eq!(l.local_offset_of_index(34), 14);
+    }
+
+    /// Property: thread-block ownership is an exact partition of all blocks,
+    /// and per-thread element counts sum to n.
+    #[test]
+    fn prop_partition_is_exact_cover() {
+        check_prop(
+            "layout-partition",
+            crate::testing::default_cases(),
+            |r| {
+                let n = r.usize_in(1, 5000);
+                let bs = r.usize_in(1, 600);
+                let t = r.usize_in(1, 40);
+                Layout::new(n, bs, t)
+            },
+            |l| {
+                let mut seen = vec![false; l.nblks()];
+                let mut elems = 0usize;
+                for t in 0..l.threads {
+                    let mut count = 0;
+                    for b in l.blocks_of_thread(t) {
+                        if seen[b] {
+                            return Err(format!("block {b} assigned twice"));
+                        }
+                        if l.owner_of_block(b) != t {
+                            return Err(format!("block {b} owner mismatch"));
+                        }
+                        seen[b] = true;
+                        count += 1;
+                        elems += l.block_len(b);
+                    }
+                    if count != l.nblks_of_thread(t) {
+                        return Err(format!("nblks_of_thread({t}) wrong"));
+                    }
+                    if l.nelems_of_thread(t)
+                        != l.blocks_of_thread(t).map(|b| l.block_len(b)).sum::<usize>()
+                    {
+                        return Err("nelems_of_thread inconsistent".into());
+                    }
+                }
+                if !seen.iter().all(|&s| s) {
+                    return Err("unassigned block".into());
+                }
+                if elems != l.n {
+                    return Err(format!("element count {} != n {}", elems, l.n));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: per-element owner (eq. 1) agrees with block ownership, and
+    /// local storage offsets are a bijection per thread.
+    #[test]
+    fn prop_eq1_and_local_offsets() {
+        check_prop(
+            "layout-eq1-offsets",
+            crate::testing::default_cases(),
+            |r| {
+                let n = r.usize_in(1, 2000);
+                let bs = r.usize_in(1, 300);
+                let t = r.usize_in(1, 17);
+                Layout::new(n, bs, t)
+            },
+            |l| {
+                let mut per_thread: Vec<Vec<usize>> = vec![Vec::new(); l.threads];
+                for i in 0..l.n {
+                    let o = l.owner_of_index(i);
+                    if o != l.owner_of_block(l.block_of_index(i)) {
+                        return Err(format!("eq1 disagrees at {i}"));
+                    }
+                    per_thread[o].push(l.local_offset_of_index(i));
+                }
+                for (t, offs) in per_thread.iter().enumerate() {
+                    let mut s = offs.clone();
+                    s.sort_unstable();
+                    s.dedup();
+                    if s.len() != offs.len() {
+                        return Err(format!("thread {t}: local offsets collide"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

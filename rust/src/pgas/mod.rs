@@ -1,0 +1,19 @@
+//! PGAS substrate: UPC-style block-cyclic shared-array layout and storage.
+//!
+//! This module reproduces the semantics of `upc_all_alloc(nblks, nbytes)`
+//! (paper §2): a shared array of `nblks` blocks of `block_size` elements,
+//! whose blocks are distributed cyclically over threads; blocks owned by a
+//! thread are stored contiguously in that thread's local memory. The
+//! owner-thread formula is the paper's eq. (1):
+//!
+//! ```text
+//! owner_thread_id = floor(global_index / block_size) mod THREADS
+//! ```
+
+mod layout;
+mod shared_vec;
+mod topology;
+
+pub use layout::Layout;
+pub use shared_vec::SharedVec;
+pub use topology::Topology;

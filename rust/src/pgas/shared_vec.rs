@@ -1,0 +1,179 @@
+//! A UPC-style shared array with per-thread contiguous block storage.
+//!
+//! Mirrors `upc_all_alloc(nblks, BLOCKSIZE * sizeof(T))` (paper §2): each
+//! thread's blocks live back to back in that thread's own buffer, exactly as
+//! a UPC runtime lays out affinity blocks in the owner's local memory. All
+//! executors (`spmv::*`) operate on this type so that "casting a
+//! pointer-to-shared to a pointer-to-local" has a faithful analogue: handing
+//! out a slice of the owner's buffer.
+
+use super::Layout;
+
+/// A shared array of `f64`/`u32`/… distributed block-cyclically over threads.
+#[derive(Debug, Clone)]
+pub struct SharedVec<T> {
+    layout: Layout,
+    /// `store[t]` is thread t's contiguous local storage holding its blocks
+    /// in `blocks_of_thread(t)` order, each at a `block_size` stride (the
+    /// tail block simply ends early).
+    store: Vec<Vec<T>>,
+}
+
+impl<T: Copy + Default> SharedVec<T> {
+    /// Collectively allocate (zero-initialized), like `upc_all_alloc`.
+    pub fn alloc(layout: Layout) -> SharedVec<T> {
+        let store = (0..layout.threads)
+            .map(|t| vec![T::default(); layout.nelems_of_thread(t)])
+            .collect();
+        SharedVec { layout, store }
+    }
+
+    /// Build from a global vector (convenience for tests/drivers).
+    pub fn from_global(layout: Layout, global: &[T]) -> SharedVec<T> {
+        assert_eq!(global.len(), layout.n);
+        let mut v = SharedVec::alloc(layout);
+        for (i, x) in global.iter().enumerate() {
+            *v.at_mut(i) = *x;
+        }
+        v
+    }
+
+    /// Gather into a global vector (inverse of [`from_global`]).
+    pub fn to_global(&self) -> Vec<T> {
+        let mut out = vec![T::default(); self.layout.n];
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = *self.at(i);
+        }
+        out
+    }
+
+    #[inline]
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    /// Element access through the global index — the analogue of
+    /// dereferencing a pointer-to-shared (the costly path the paper's naive
+    /// code takes). The *cost* is accounted by the simulator, not here.
+    #[inline]
+    pub fn at(&self, i: usize) -> &T {
+        let t = self.layout.owner_of_index(i);
+        &self.store[t][self.layout.local_offset_of_index(i)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize) -> &mut T {
+        let t = self.layout.owner_of_index(i);
+        &mut self.store[t][self.layout.local_offset_of_index(i)]
+    }
+
+    /// The owner thread's whole local storage — the analogue of casting a
+    /// pointer-to-shared to a pointer-to-local (Listing 3).
+    #[inline]
+    pub fn local(&self, thread: usize) -> &[T] {
+        &self.store[thread]
+    }
+
+    #[inline]
+    pub fn local_mut(&mut self, thread: usize) -> &mut [T] {
+        &mut self.store[thread]
+    }
+
+    /// Contiguous slice of global block `b` inside its owner's storage —
+    /// what `upc_memget(dst, &x[b*BLOCKSIZE], len)` reads.
+    pub fn block(&self, b: usize) -> &[T] {
+        let owner = self.layout.owner_of_block(b);
+        let mb = self.layout.local_block_index(b);
+        let start = mb * self.layout.block_size;
+        let len = self.layout.block_len(b);
+        &self.store[owner][start..start + len]
+    }
+
+    /// Mutable counterpart of [`block`].
+    pub fn block_mut(&mut self, b: usize) -> &mut [T] {
+        let owner = self.layout.owner_of_block(b);
+        let mb = self.layout.local_block_index(b);
+        let start = mb * self.layout.block_size;
+        let len = self.layout.block_len(b);
+        &mut self.store[owner][start..start + len]
+    }
+
+    /// Swap the contents of two shared arrays with identical layout — the
+    /// pointer-to-shared swap fenced by barriers in the paper's §6.1 driver.
+    pub fn swap(&mut self, other: &mut SharedVec<T>) {
+        assert_eq!(self.layout, other.layout);
+        std::mem::swap(&mut self.store, &mut other.store);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check_prop;
+
+    #[test]
+    fn global_roundtrip() {
+        let l = Layout::new(23, 4, 3);
+        let data: Vec<f64> = (0..23).map(|i| i as f64).collect();
+        let v = SharedVec::from_global(l, &data);
+        assert_eq!(v.to_global(), data);
+        // spot-check affinity storage
+        assert_eq!(*v.at(0), 0.0);
+        assert_eq!(*v.at(22), 22.0);
+    }
+
+    #[test]
+    fn block_slices_match_global() {
+        let l = Layout::new(23, 4, 3);
+        let data: Vec<u32> = (0..23u32).collect();
+        let v = SharedVec::from_global(l, &data);
+        for b in 0..l.nblks() {
+            let (start, len) = l.block_range(b);
+            assert_eq!(v.block(b), &data[start..start + len], "block {b}");
+        }
+    }
+
+    #[test]
+    fn local_is_contiguous_blocks() {
+        let l = Layout::new(10, 3, 2);
+        let data: Vec<u32> = (0..10u32).collect();
+        let v = SharedVec::from_global(l, &data);
+        // thread 0 owns blocks 0 [0,1,2] and 2 [6,7,8]
+        assert_eq!(v.local(0), &[0, 1, 2, 6, 7, 8]);
+        // thread 1 owns blocks 1 [3,4,5] and 3 [9]
+        assert_eq!(v.local(1), &[3, 4, 5, 9]);
+    }
+
+    #[test]
+    fn swap_swaps() {
+        let l = Layout::new(8, 2, 2);
+        let mut a = SharedVec::from_global(l, &[1.0f64; 8]);
+        let mut b = SharedVec::from_global(l, &[2.0f64; 8]);
+        a.swap(&mut b);
+        assert_eq!(a.to_global(), vec![2.0; 8]);
+        assert_eq!(b.to_global(), vec![1.0; 8]);
+    }
+
+    /// Property: from_global → to_global is the identity for random layouts.
+    #[test]
+    fn prop_roundtrip() {
+        check_prop(
+            "sharedvec-roundtrip",
+            32,
+            |r| {
+                let n = r.usize_in(1, 800);
+                let bs = r.usize_in(1, 100);
+                let t = r.usize_in(1, 9);
+                let data: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2654435761)).collect();
+                (Layout::new(n, bs, t), data)
+            },
+            |(l, data)| {
+                let v = SharedVec::from_global(*l, data);
+                if v.to_global() != *data {
+                    return Err("roundtrip mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

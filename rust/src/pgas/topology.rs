@@ -1,0 +1,77 @@
+//! Cluster topology: how UPC threads map onto compute nodes.
+//!
+//! The paper's §5.2.1 distinction between *local inter-thread* and *remote
+//! inter-thread* memory operations hinges on this mapping. Threads are
+//! packed onto nodes in consecutive runs (the standard `upcrun` placement on
+//! Abel: threads 0..15 on node 0, 16..31 on node 1, …).
+
+/// Node/thread topology of the (simulated) cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    /// Number of compute nodes.
+    pub nodes: usize,
+    /// UPC threads per node (paper uses 16 on Abel).
+    pub threads_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(nodes: usize, threads_per_node: usize) -> Topology {
+        assert!(nodes > 0 && threads_per_node > 0);
+        Topology { nodes, threads_per_node }
+    }
+
+    /// A single-node topology with `threads` threads (Table 2 scenarios).
+    pub fn single_node(threads: usize) -> Topology {
+        Topology::new(1, threads)
+    }
+
+    /// Total number of UPC threads.
+    #[inline]
+    pub fn threads(&self) -> usize {
+        self.nodes * self.threads_per_node
+    }
+
+    /// Node hosting `thread`.
+    #[inline]
+    pub fn node_of_thread(&self, thread: usize) -> usize {
+        debug_assert!(thread < self.threads());
+        thread / self.threads_per_node
+    }
+
+    /// Whether two threads share a node (local inter-thread traffic).
+    #[inline]
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of_thread(a) == self.node_of_thread(b)
+    }
+
+    /// Iterator over the threads hosted by `node`.
+    pub fn threads_of_node(&self, node: usize) -> std::ops::Range<usize> {
+        debug_assert!(node < self.nodes);
+        node * self.threads_per_node..(node + 1) * self.threads_per_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mapping() {
+        let t = Topology::new(4, 16);
+        assert_eq!(t.threads(), 64);
+        assert_eq!(t.node_of_thread(0), 0);
+        assert_eq!(t.node_of_thread(15), 0);
+        assert_eq!(t.node_of_thread(16), 1);
+        assert_eq!(t.node_of_thread(63), 3);
+        assert!(t.same_node(17, 31));
+        assert!(!t.same_node(15, 16));
+        assert_eq!(t.threads_of_node(2), 32..48);
+    }
+
+    #[test]
+    fn single_node() {
+        let t = Topology::single_node(8);
+        assert_eq!(t.threads(), 8);
+        assert!(t.same_node(0, 7));
+    }
+}

@@ -1,0 +1,160 @@
+//! The artifact manifest written by `python/compile/aot.py`.
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "artifacts": [
+//!     {"name": "spmv_block", "file": "spmv_block.hlo.txt",
+//!      "block": 4096, "r_nz": 16,
+//!      "inputs":  [{"shape": [4096], "dtype": "f32"}, ...],
+//!      "outputs": [{"shape": [4096], "dtype": "f32"}]}
+//!   ]
+//! }
+//! ```
+
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<TensorSpec> {
+        let shape = v
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .unwrap_or("f32")
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form integer metadata (e.g. `block`, `r_nz`, `tile_m`).
+    pub meta: std::collections::BTreeMap<String, usize>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = json::parse(text).context("manifest.json is not valid JSON")?;
+        let arts = root
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = dir.join(
+                a.get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("artifact {name} missing file"))?,
+            );
+            let tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.get(key)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("artifact {name} missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let mut meta = std::collections::BTreeMap::new();
+            if let Some(Value::Obj(map)) = a.get("meta") {
+                for (k, v) in map {
+                    if let Some(x) = v.as_usize() {
+                        meta.insert(k.clone(), x);
+                    }
+                }
+            }
+            let inputs = tensors("inputs")?;
+            let outputs = tensors("outputs")?;
+            artifacts.push(ArtifactSpec { name, file, inputs, outputs, meta });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "spmv_block", "file": "spmv_block.hlo.txt",
+         "meta": {"block": 4096, "r_nz": 16},
+         "inputs": [{"shape": [4096], "dtype": "f32"},
+                    {"shape": [4096], "dtype": "f32"},
+                    {"shape": [4096, 16], "dtype": "f32"},
+                    {"shape": [4096, 16], "dtype": "f32"}],
+         "outputs": [{"shape": [4096], "dtype": "f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("spmv_block").unwrap();
+        assert_eq!(a.meta["block"], 4096);
+        assert_eq!(a.inputs[2].shape, vec![4096, 16]);
+        assert_eq!(a.inputs[2].elements(), 65536);
+        assert_eq!(a.file, Path::new("/tmp/arts/spmv_block.hlo.txt"));
+        assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse(Path::new("/tmp"), "{}").is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), "not json").is_err());
+        assert!(Manifest::parse(
+            Path::new("/tmp"),
+            r#"{"artifacts": [{"name": "x"}]}"#
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,37 @@
+//! PJRT runtime bridge — loads the AOT-compiled HLO-text artifacts produced
+//! by `python/compile/aot.py` and executes them from the Rust request path.
+//!
+//! Interchange is HLO **text** (not serialized `HloModuleProto`): jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that the image's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! `/opt/xla-example/README.md`). Python runs only at build time
+//! (`make artifacts`); this module is all that touches the artifacts at
+//! runtime.
+
+mod engine;
+mod manifest;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+/// Default artifacts directory, relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory by walking up from CWD (works from repo
+/// root, examples, and test binaries).
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(env) = std::env::var("UPCSIM_ARTIFACTS") {
+        let p = std::path::PathBuf::from(env);
+        return p.join("manifest.json").exists().then_some(p);
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let candidate = dir.join(ARTIFACTS_DIR);
+        if candidate.join("manifest.json").exists() {
+            return Some(candidate);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

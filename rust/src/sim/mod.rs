@@ -1,0 +1,35 @@
+//! The simulated cluster — produces the "measured" side of every
+//! actual-vs-predicted comparison.
+//!
+//! The closed-form models of [`crate::model`] idealize several effects the
+//! real Abel cluster exhibits in the paper's measurements. This simulator
+//! *executes* the per-thread traffic of an [`Analysis`](crate::comm::Analysis)
+//! against the same four hardware constants, adding exactly the effects the
+//! paper discusses when explaining model deviations (§6.4):
+//!
+//! 1. **Concurrency-dependent τ** — the paper measured τ = 3.4 µs with 8
+//!    threads/node communicating simultaneously and notes the effective τ is
+//!    smaller with fewer communicating threads (and implicitly larger with
+//!    more). We model `τ_eff(c) = τ_wire + (c−1)·τ_slope`, calibrated so
+//!    `τ_eff(8) = τ`.
+//! 2. **NIC message-rate floor** — a node's HCA processes individual remote
+//!    operations at a finite rate; massive fine-grained traffic (UPCv1
+//!    multi-node) is bounded by `Σ ops · τ_occ` regardless of per-thread
+//!    latency hiding. This produces UPCv1's measured collapse (Table 3).
+//! 3. **Inbound/outbound NIC sharing** — bulk transfers occupy both the
+//!    requesting and the serving node's interconnect; the models charge only
+//!    one side.
+//! 4. **Cache-imperfect compute** — eq. (6) assumes perfect last-level-cache
+//!    reuse of `x`; accesses farther than a reuse window pay an extra cache
+//!    line. Negligible for the paper's "properly ordered" meshes, large for
+//!    the random-ordering ablation.
+//! 5. **Actual (not block-rounded) row counts and software per-message
+//!    overheads.**
+
+mod cluster;
+
+pub use cluster::{ClusterSim, SimMeasurement, SimParams};
+
+/// Default LLC reuse window, in elements of `x`: 20 MB Sandy-Bridge LLC
+/// shared by 16 threads → 1.25 MB/thread → 163 840 doubles.
+pub const DEFAULT_CACHE_WINDOW: usize = 163_840;

@@ -1,0 +1,220 @@
+//! The block-local compute kernels (the hot path).
+//!
+//! Two flavours:
+//! * [`spmv_block_gathered`] — UPCv2/v3 path: all `x` values already sit in
+//!   a thread-private, globally-indexed copy. This is the kernel the L1
+//!   Pallas artifact mirrors (with the gather hoisted to the coordinator,
+//!   see `python/compile/kernels/ellpack_spmv.py`), and the one the §Perf
+//!   pass optimizes.
+//! * [`spmv_block_global`] — naive/UPCv1 path: `x` accessed element-wise
+//!   through an accessor closure (pointer-to-shared semantics).
+//!
+//! Both must produce bitwise identical results: same order of additions.
+
+/// Compute `y[k] = D[k]·x[offset+k] + Σ_j A[k·r+j]·x[J[k·r+j]]` for one
+/// block of rows, reading `x` from a private full-length copy.
+///
+/// `d`, `a`, `j`, `y` are the block-local slices; `offset` is the block's
+/// first global row.
+#[inline]
+pub fn spmv_block_gathered(
+    offset: usize,
+    d: &[f64],
+    a: &[f64],
+    j: &[u32],
+    r_nz: usize,
+    x_copy: &[f64],
+    y: &mut [f64],
+) {
+    let len = y.len();
+    assert_eq!(d.len(), len);
+    assert!(a.len() >= len * r_nz);
+    assert!(j.len() >= len * r_nz);
+    assert!(offset + len <= x_copy.len());
+    // §Perf: the r_nz = 16 case (every paper workload) takes a specialized
+    // fully-unrolled path; see EXPERIMENTS.md §Perf for the measured effect.
+    if r_nz == 16 {
+        return spmv_block_gathered_16(offset, d, a, j, x_copy, y);
+    }
+    for k in 0..len {
+        let row_a = &a[k * r_nz..(k + 1) * r_nz];
+        let row_j = &j[k * r_nz..(k + 1) * r_nz];
+        let mut tmp = 0.0f64;
+        for jj in 0..r_nz {
+            tmp += row_a[jj] * x_copy[row_j[jj] as usize];
+        }
+        y[k] = d[k] * x_copy[offset + k] + tmp;
+    }
+}
+
+/// The r_nz = 16 specialization: fixed-size row slices let the compiler
+/// unroll the FMA chain and schedule the 16 gathers ahead of the reduction.
+/// FP accumulation order is identical to the generic path (sequential sum),
+/// preserving bitwise equality with the Listing-1 oracle.
+fn spmv_block_gathered_16(
+    offset: usize,
+    d: &[f64],
+    a: &[f64],
+    j: &[u32],
+    x_copy: &[f64],
+    y: &mut [f64],
+) {
+    const R: usize = 16;
+    let len = y.len();
+    for k in 0..len {
+        // SAFETY: bounds were asserted by the caller wrapper:
+        // a.len() ≥ len·R, j.len() ≥ len·R, and every j value indexes
+        // x_copy (validated at matrix construction).
+        let row_a: &[f64; R] = unsafe { &*(a.as_ptr().add(k * R) as *const [f64; R]) };
+        let row_j: &[u32; R] = unsafe { &*(j.as_ptr().add(k * R) as *const [u32; R]) };
+        // Gather first (the loads are independent), then reduce in the same
+        // sequential order as the generic path.
+        let mut g = [0.0f64; R];
+        for jj in 0..R {
+            g[jj] = unsafe { *x_copy.get_unchecked(row_j[jj] as usize) };
+        }
+        let mut tmp = 0.0f64;
+        for jj in 0..R {
+            tmp += row_a[jj] * g[jj];
+        }
+        y[k] = d[k] * x_copy[offset + k] + tmp;
+    }
+}
+
+/// Host-parallel whole-matrix SpMV: shards rows over OS threads, each shard
+/// running [`spmv_block_gathered`]. Used by the §Perf bench and available to
+/// drivers that want wall-clock speed rather than per-UPC-thread semantics.
+pub fn spmv_parallel(
+    d: &[f64],
+    a: &[f64],
+    j: &[u32],
+    r_nz: usize,
+    x_copy: &[f64],
+    y: &mut [f64],
+) {
+    let n = y.len();
+    let host = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let shard = n.div_ceil(host);
+    std::thread::scope(|scope| {
+        let mut rest = &mut y[..];
+        let mut start = 0usize;
+        while !rest.is_empty() {
+            let take = rest.len().min(shard);
+            let (head, tail) = rest.split_at_mut(take);
+            let offset = start;
+            scope.spawn(move || {
+                spmv_block_gathered(
+                    offset,
+                    &d[offset..offset + take],
+                    &a[offset * r_nz..(offset + take) * r_nz],
+                    &j[offset * r_nz..(offset + take) * r_nz],
+                    r_nz,
+                    x_copy,
+                    head,
+                );
+            });
+            rest = tail;
+            start += take;
+        }
+    });
+}
+
+/// Same computation with `x` behind an accessor (shared-array semantics for
+/// the naive/UPCv1 executors). Must keep the exact FP order of
+/// [`spmv_block_gathered`].
+#[inline]
+pub fn spmv_block_global<F: Fn(usize) -> f64>(
+    offset: usize,
+    d: &[f64],
+    a: &[f64],
+    j: &[u32],
+    r_nz: usize,
+    x_at: F,
+    y: &mut [f64],
+) {
+    let len = y.len();
+    for k in 0..len {
+        let row_a = &a[k * r_nz..(k + 1) * r_nz];
+        let row_j = &j[k * r_nz..(k + 1) * r_nz];
+        let mut tmp = 0.0f64;
+        for jj in 0..r_nz {
+            tmp += row_a[jj] * x_at(row_j[jj] as usize);
+        }
+        y[k] = d[k] * x_at(offset + k) + tmp;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::Ellpack;
+
+    #[test]
+    fn gathered_matches_seq_oracle() {
+        let m = Ellpack::random(64, 5, 11);
+        let x: Vec<f64> = (0..64).map(|i| (i as f64).sin()).collect();
+        let mut want = vec![0.0; 64];
+        m.spmv_seq(&x, &mut want);
+        // Run as one big block.
+        let mut got = vec![0.0; 64];
+        spmv_block_gathered(0, &m.diag, &m.a, &m.j, m.r_nz, &x, &mut got);
+        assert_eq!(got, want); // bitwise
+    }
+
+    #[test]
+    fn global_accessor_bitwise_equal() {
+        let m = Ellpack::random(40, 3, 5);
+        let x: Vec<f64> = (0..40).map(|i| (i as f64).cos()).collect();
+        let mut a = vec![0.0; 40];
+        let mut b = vec![0.0; 40];
+        spmv_block_gathered(0, &m.diag, &m.a, &m.j, m.r_nz, &x, &mut a);
+        spmv_block_global(0, &m.diag, &m.a, &m.j, m.r_nz, |i| x[i], &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn specialized_16_bitwise_equals_generic_order() {
+        // r_nz = 16 takes the unrolled path; compare against a manual
+        // generic-order evaluation.
+        let m = Ellpack::random(300, 16, 12);
+        let x: Vec<f64> = (0..300).map(|i| (i as f64 * 0.7).sin()).collect();
+        let mut want = vec![0.0; 300];
+        m.spmv_seq(&x, &mut want);
+        let mut got = vec![0.0; 300];
+        spmv_block_gathered(0, &m.diag, &m.a, &m.j, 16, &x, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let m = Ellpack::random(5000, 16, 5);
+        let x: Vec<f64> = (0..5000).map(|i| (i as f64 * 0.3).cos()).collect();
+        let mut serial = vec![0.0; 5000];
+        spmv_block_gathered(0, &m.diag, &m.a, &m.j, 16, &x, &mut serial);
+        let mut par = vec![0.0; 5000];
+        spmv_parallel(&m.diag, &m.a, &m.j, 16, &x, &mut par);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn blocked_equals_monolithic() {
+        let m = Ellpack::random(50, 4, 2);
+        let x: Vec<f64> = (0..50).map(|i| i as f64 * 0.1).collect();
+        let mut mono = vec![0.0; 50];
+        spmv_block_gathered(0, &m.diag, &m.a, &m.j, m.r_nz, &x, &mut mono);
+        let mut blocked = vec![0.0; 50];
+        for (start, len) in [(0usize, 13usize), (13, 17), (30, 20)] {
+            let r = m.r_nz;
+            spmv_block_gathered(
+                start,
+                &m.diag[start..start + len],
+                &m.a[start * r..(start + len) * r],
+                &m.j[start * r..(start + len) * r],
+                r,
+                &x,
+                &mut blocked[start..start + len],
+            );
+        }
+        assert_eq!(mono, blocked);
+    }
+}

@@ -1,0 +1,396 @@
+//! MPI-style two-sided baseline (the comparator of the paper's §9).
+//!
+//! The paper's concluding discussion contrasts UPCv3 with "an MPI
+//! counterpart, where all arrays are explicitly partitioned among processes
+//! [and] have to map the global indices to local indices", noting MPI's
+//! "persistent advantages … better data locality and more flexible data
+//! partitionings". This module implements that counterpart so the claim is
+//! measurable:
+//!
+//! * **contiguous partitioning** — rank `r` owns rows
+//!   `[r·⌈n/P⌉, (r+1)·⌈n/P⌉)` (no block-cyclic constraint);
+//! * **global→local relabeling** — at setup, each rank rewrites its slice
+//!   of `J` into local row indices, with off-rank references pointing into a
+//!   **ghost region** appended after the owned rows (the programming cost
+//!   the paper says UPC avoids);
+//! * **two-sided exchange** — per step, each rank packs the owned values its
+//!   neighbours need (same condensed lists as UPCv3) and receives its ghost
+//!   values as one contiguous append — no scattered unpack, which is exactly
+//!   where the MPI model beats eq. (15)'s cache-line-per-value term.
+//!
+//! The executor produces bitwise-identical results to the UPC variants.
+
+use crate::machine::{HwParams, SIZEOF_DOUBLE, SIZEOF_INT};
+use crate::matrix::Ellpack;
+use crate::pgas::Topology;
+use crate::sim::SimParams;
+
+/// Contiguous partition of `n` rows over `ranks`.
+#[derive(Debug, Clone, Copy)]
+pub struct ContigPartition {
+    pub n: usize,
+    pub ranks: usize,
+    chunk: usize,
+}
+
+impl ContigPartition {
+    pub fn new(n: usize, ranks: usize) -> ContigPartition {
+        assert!(n > 0 && ranks > 0);
+        ContigPartition { n, ranks, chunk: n.div_ceil(ranks) }
+    }
+
+    #[inline]
+    pub fn owner(&self, i: usize) -> usize {
+        i / self.chunk
+    }
+
+    /// Row range `[start, end)` of `rank`.
+    pub fn range(&self, rank: usize) -> (usize, usize) {
+        let start = (rank * self.chunk).min(self.n);
+        ((start), ((rank + 1) * self.chunk).min(self.n))
+    }
+
+    pub fn len(&self, rank: usize) -> usize {
+        let (s, e) = self.range(rank);
+        e - s
+    }
+}
+
+/// Per-rank state after setup: relabeled matrix slice + ghost map + plan.
+#[derive(Debug, Clone)]
+struct RankState {
+    start: usize,
+    rows: usize,
+    diag: Vec<f64>,
+    a: Vec<f64>,
+    /// Local column indices: `< rows` → owned, `rows + g` → ghost slot g.
+    jl: Vec<u32>,
+    /// Global index of each ghost slot (sorted).
+    ghosts: Vec<u32>,
+    /// Send lists: (peer, local offsets of owned values to pack).
+    send: Vec<(u32, Vec<u32>)>,
+    /// Receive counts per peer (ghost slots arrive sorted by peer,global).
+    recv: Vec<(u32, u32)>,
+}
+
+/// The MPI-style solver: setup once, then `step` repeatedly.
+#[derive(Debug, Clone)]
+pub struct MpiSolver {
+    part: ContigPartition,
+    r_nz: usize,
+    ranks: Vec<RankState>,
+    /// Local x per rank: owned values followed by ghost values.
+    x: Vec<Vec<f64>>,
+    /// Traffic statistics (per step, constant).
+    pub values_exchanged: u64,
+    pub messages: u64,
+}
+
+impl MpiSolver {
+    /// Partition + relabel + build the exchange plan (the paper's "map the
+    /// global indices to local indices" cost, paid once).
+    pub fn new(m: &Ellpack, ranks: usize, x0: &[f64]) -> MpiSolver {
+        assert_eq!(x0.len(), m.n);
+        let part = ContigPartition::new(m.n, ranks);
+        let mut states = Vec::with_capacity(ranks);
+        let mut xs = Vec::with_capacity(ranks);
+        let mut values_exchanged = 0u64;
+        let mut messages = 0u64;
+
+        // Pass 1: per rank, find unique external references.
+        let mut needs: Vec<Vec<(u32, u32)>> = Vec::with_capacity(ranks); // (owner, global)
+        for rank in 0..ranks {
+            let (s, e) = part.range(rank);
+            let mut ext: Vec<(u32, u32)> = Vec::new();
+            for i in s..e {
+                for &c in m.row_cols(i) {
+                    let cu = c as usize;
+                    if (cu < s || cu >= e) && cu != i {
+                        ext.push((part.owner(cu) as u32, c));
+                    }
+                }
+            }
+            ext.sort_unstable();
+            ext.dedup();
+            needs.push(ext);
+        }
+
+        // Pass 2: transpose into send lists.
+        let mut send: Vec<Vec<(u32, Vec<u32>)>> = vec![Vec::new(); ranks];
+        for (rank, ext) in needs.iter().enumerate() {
+            let mut k = 0;
+            while k < ext.len() {
+                let owner = ext[k].0;
+                let mut vals = Vec::new();
+                while k < ext.len() && ext[k].0 == owner {
+                    let (os, _) = part.range(owner as usize);
+                    vals.push(ext[k].1 - os as u32); // local offset at owner
+                    k += 1;
+                }
+                values_exchanged += vals.len() as u64;
+                messages += 1;
+                send[owner as usize].push((rank as u32, vals));
+            }
+        }
+
+        // Pass 3: relabel J and build per-rank state + local x.
+        for rank in 0..ranks {
+            let (s, e) = part.range(rank);
+            let rows = e - s;
+            let ghosts: Vec<u32> = needs[rank].iter().map(|&(_, g)| g).collect();
+            let ghost_slot = |g: u32| -> u32 {
+                rows as u32 + ghosts.binary_search(&g).expect("ghost listed") as u32
+            };
+            let mut jl = Vec::with_capacity(rows * m.r_nz);
+            for i in s..e {
+                for &c in m.row_cols(i) {
+                    let cu = c as usize;
+                    jl.push(if cu >= s && cu < e {
+                        (cu - s) as u32
+                    } else if cu == i {
+                        (i - s) as u32 // padding keeps pointing at the row
+                    } else {
+                        ghost_slot(c)
+                    });
+                }
+            }
+            let recv: Vec<(u32, u32)> = {
+                let mut counts: Vec<(u32, u32)> = Vec::new();
+                for &(owner, _) in &needs[rank] {
+                    match counts.last_mut() {
+                        Some((o, c)) if *o == owner => *c += 1,
+                        _ => counts.push((owner, 1)),
+                    }
+                }
+                counts
+            };
+            let mut x_local: Vec<f64> = x0[s..e].to_vec();
+            x_local.resize(rows + ghosts.len(), 0.0);
+            xs.push(x_local);
+            states.push(RankState {
+                start: s,
+                rows,
+                diag: m.diag[s..e].to_vec(),
+                a: m.a[s * m.r_nz..e * m.r_nz].to_vec(),
+                jl,
+                ghosts,
+                send: std::mem::take(&mut send[rank]),
+                recv,
+            });
+        }
+        MpiSolver { part, r_nz: m.r_nz, ranks: states, x: xs, values_exchanged, messages }
+    }
+
+    /// One step `x ← Mx`: exchange ghosts, compute locally.
+    pub fn step(&mut self) {
+        let ranks = self.ranks.len();
+        // Exchange: pack from owners, "receive" as contiguous ghost fills.
+        let mut inbox: Vec<Vec<(u32, Vec<f64>)>> = vec![Vec::new(); ranks];
+        for (rank, st) in self.ranks.iter().enumerate() {
+            for (peer, offsets) in &st.send {
+                let buf: Vec<f64> =
+                    offsets.iter().map(|&o| self.x[rank][o as usize]).collect();
+                inbox[*peer as usize].push((rank as u32, buf));
+            }
+        }
+        for (rank, st) in self.ranks.iter().enumerate() {
+            let mut cursor = st.rows;
+            // Ghost slots are sorted by (owner, global); inbox arrives in
+            // rank order — sort to be deterministic.
+            let mut msgs = std::mem::take(&mut inbox[rank]);
+            msgs.sort_by_key(|(peer, _)| *peer);
+            for ((peer, buf), (want_peer, want_len)) in msgs.iter().zip(&st.recv) {
+                assert_eq!(peer, want_peer, "rank {rank}: unexpected sender");
+                assert_eq!(buf.len() as u32, *want_len, "rank {rank}: short message");
+                self.x[rank][cursor..cursor + buf.len()].copy_from_slice(buf);
+                cursor += buf.len();
+            }
+        }
+        // Compute into fresh owned buffers, then commit (Jacobi semantics).
+        let r = self.r_nz;
+        let mut new_owned: Vec<Vec<f64>> = Vec::with_capacity(ranks);
+        for (rank, st) in self.ranks.iter().enumerate() {
+            let x = &self.x[rank];
+            let mut y = vec![0.0f64; st.rows];
+            for k in 0..st.rows {
+                let mut tmp = 0.0;
+                for jj in 0..r {
+                    tmp += st.a[k * r + jj] * x[st.jl[k * r + jj] as usize];
+                }
+                y[k] = st.diag[k] * x[k] + tmp;
+            }
+            new_owned.push(y);
+        }
+        for (rank, y) in new_owned.into_iter().enumerate() {
+            let rows = self.ranks[rank].rows;
+            self.x[rank][..rows].copy_from_slice(&y);
+        }
+    }
+
+    /// Gather the current solution to global indexing.
+    pub fn x_global(&self) -> Vec<f64> {
+        let mut out = vec![0.0f64; self.part.n];
+        for (rank, st) in self.ranks.iter().enumerate() {
+            out[st.start..st.start + st.rows].copy_from_slice(&self.x[rank][..st.rows]);
+        }
+        out
+    }
+
+    /// Per-step time on the simulated cluster + the eq.(12)-(18)-style
+    /// closed-form model, adapted to two-sided contiguous semantics:
+    /// unpack is a contiguous append (no per-value cache-line penalty) and
+    /// there is no own-block copy (x is already local).
+    pub fn predict_step(&self, topo: &Topology, hw: &HwParams, params: &SimParams) -> (f64, f64) {
+        assert_eq!(topo.threads(), self.ranks.len());
+        const D: f64 = SIZEOF_DOUBLE as f64;
+        const I: f64 = SIZEOF_INT as f64;
+        let w = hw.w_thread_private;
+        let d_min = (self.r_nz * (SIZEOF_DOUBLE + SIZEOF_INT) + 3 * SIZEOF_DOUBLE) as f64;
+
+        let mut phase1_model = 0.0f64;
+        let mut phase1_sim = 0.0f64;
+        for node in 0..topo.nodes {
+            let communicating = topo
+                .threads_of_node(node)
+                .filter(|&t| {
+                    self.ranks[t].send.iter().any(|(p, _)| !topo.same_node(t, *p as usize))
+                })
+                .count();
+            let tau_eff = params.tau_eff(communicating);
+            let mut pack_max = 0.0f64;
+            let mut local_max = 0.0f64;
+            let mut remote = 0.0f64;
+            let mut remote_sim = 0.0f64;
+            for t in topo.threads_of_node(node) {
+                let st = &self.ranks[t];
+                let mut s_local = 0usize;
+                let mut s_remote = 0usize;
+                let mut c_remote = 0usize;
+                for (peer, vals) in &st.send {
+                    if topo.same_node(t, *peer as usize) {
+                        s_local += vals.len();
+                    } else {
+                        s_remote += vals.len();
+                        c_remote += 1;
+                    }
+                }
+                let pack = (s_local + s_remote) as f64 * (2.0 * D + I) / w;
+                pack_max = pack_max.max(pack);
+                local_max = local_max.max(2.0 * s_local as f64 * D / w);
+                remote += c_remote as f64 * hw.tau + s_remote as f64 * D / hw.w_node_remote;
+                remote_sim += c_remote as f64 * tau_eff + s_remote as f64 * D / hw.w_node_remote;
+            }
+            phase1_model = phase1_model.max(pack_max + local_max + remote);
+            phase1_sim = phase1_sim.max(pack_max + local_max + remote_sim);
+        }
+        // Phase 2: contiguous ghost append (D+I per value, no cache-line
+        // scatter) + compute. No own-copy term.
+        let mut phase2 = 0.0f64;
+        for st in &self.ranks {
+            let unpack = st.ghosts.len() as f64 * (D + I) / w;
+            let comp = st.rows as f64 * d_min / w;
+            phase2 = phase2.max(unpack + comp);
+        }
+        (phase1_sim + phase2, phase1_model + phase2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check_prop;
+
+    #[test]
+    fn contig_partition_covers() {
+        let p = ContigPartition::new(103, 8);
+        let mut total = 0;
+        for r in 0..8 {
+            total += p.len(r);
+            let (s, e) = p.range(r);
+            for i in s..e {
+                assert_eq!(p.owner(i), r);
+            }
+        }
+        assert_eq!(total, 103);
+    }
+
+    #[test]
+    fn mpi_matches_upc_variants_bitwise() {
+        let mesh = crate::mesh::tiny_mesh();
+        let m = Ellpack::diffusion_from_mesh(&mesh);
+        let x0 = m.initial_vector(9);
+        // Reference: 5 steps of the sequential oracle.
+        let mut xref = x0.clone();
+        let mut y = vec![0.0; m.n];
+        for _ in 0..5 {
+            m.spmv_seq(&xref, &mut y);
+            std::mem::swap(&mut xref, &mut y);
+        }
+        let mut solver = MpiSolver::new(&m, 8, &x0);
+        for _ in 0..5 {
+            solver.step();
+        }
+        assert_eq!(solver.x_global(), xref, "MPI baseline diverged");
+    }
+
+    #[test]
+    fn exchange_is_condensed() {
+        let mesh = crate::mesh::tiny_mesh();
+        let m = Ellpack::diffusion_from_mesh(&mesh);
+        let x0 = m.initial_vector(1);
+        let solver = MpiSolver::new(&m, 8, &x0);
+        // Unique external references only: strictly fewer values than total
+        // off-rank occurrences.
+        let part = ContigPartition::new(m.n, 8);
+        let occurrences: u64 = (0..m.n)
+            .map(|i| {
+                m.row_cols(i)
+                    .iter()
+                    .filter(|&&c| c as usize != i && part.owner(c as usize) != part.owner(i))
+                    .count() as u64
+            })
+            .sum();
+        assert!(solver.values_exchanged > 0);
+        assert!(solver.values_exchanged <= occurrences);
+    }
+
+    #[test]
+    fn prop_mpi_equals_oracle_random() {
+        check_prop(
+            "mpi-baseline",
+            12,
+            |r| {
+                let n = r.usize_in(20, 300);
+                let rnz = r.usize_in(1, 5);
+                let ranks = r.usize_in(1, 7);
+                let m = Ellpack::random(n, rnz, r.next_u64());
+                let x0: Vec<f64> = (0..n).map(|_| r.f64_in(-1.0, 1.0)).collect();
+                (m, ranks, x0)
+            },
+            |(m, ranks, x0)| {
+                let mut want = vec![0.0; m.n];
+                m.spmv_seq(x0, &mut want);
+                let mut solver = MpiSolver::new(m, *ranks, x0);
+                solver.step();
+                if solver.x_global() != want {
+                    return Err("one step diverged".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prediction_is_positive_and_model_close_to_sim() {
+        let mesh = crate::mesh::tiny_mesh();
+        let m = Ellpack::diffusion_from_mesh(&mesh);
+        let x0 = m.initial_vector(1);
+        let solver = MpiSolver::new(&m, 32, &x0);
+        let topo = Topology::new(2, 16);
+        let hw = HwParams::abel();
+        let params = SimParams::from_hw(&hw);
+        let (sim, model) = solver.predict_step(&topo, &hw, &params);
+        assert!(sim > 0.0 && model > 0.0);
+        assert!((sim / model) < 2.0 && (sim / model) > 0.5);
+    }
+}

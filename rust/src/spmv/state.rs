@@ -1,0 +1,89 @@
+//! The five shared arrays of Listing 2, allocated with consistent layouts.
+
+use crate::matrix::Ellpack;
+use crate::pgas::{Layout, SharedVec};
+
+/// UPC-side state for SpMV: `x`, `y`, `D` with block size `BLOCKSIZE`, and
+/// `A`, `J` with block size `r_nz · BLOCKSIZE` (Listing 2's allocation).
+#[derive(Debug, Clone)]
+pub struct SpmvState {
+    /// Layout of `x`, `y`, `D`.
+    pub layout: Layout,
+    /// Layout of `A`, `J` (`n·r_nz` elements, `r_nz·BLOCKSIZE` blocks).
+    pub layout_aj: Layout,
+    pub r_nz: usize,
+    pub x: SharedVec<f64>,
+    pub y: SharedVec<f64>,
+    pub d: SharedVec<f64>,
+    pub a: SharedVec<f64>,
+    pub j: SharedVec<u32>,
+}
+
+impl SpmvState {
+    /// Distribute a matrix over `threads` UPC threads with the given
+    /// `BLOCKSIZE`, and load `x0` as the initial vector.
+    pub fn new(m: &Ellpack, block_size: usize, threads: usize, x0: &[f64]) -> SpmvState {
+        assert_eq!(x0.len(), m.n);
+        let layout = Layout::new(m.n, block_size, threads);
+        let layout_aj = Layout::new(m.n * m.r_nz, block_size * m.r_nz, threads);
+        // The consistent distribution of Listing 2: row i's A/J entries live
+        // on the same thread as y[i] — guaranteed because block k of x/y/D
+        // maps to block k of A/J.
+        SpmvState {
+            layout,
+            layout_aj,
+            r_nz: m.r_nz,
+            x: SharedVec::from_global(layout, x0),
+            y: SharedVec::alloc(layout),
+            d: SharedVec::from_global(layout, &m.diag),
+            a: SharedVec::from_global(layout_aj, &m.a),
+            j: SharedVec::from_global(layout_aj, &m.j),
+        }
+    }
+
+    /// Swap `x` and `y` (the §6.1 time-stepping pointer swap).
+    pub fn swap_xy(&mut self) {
+        self.x.swap(&mut self.y);
+    }
+
+    /// Current `x` as a global vector (drivers/tests).
+    pub fn x_global(&self) -> Vec<f64> {
+        self.x.to_global()
+    }
+
+    /// Current `y` as a global vector (drivers/tests).
+    pub fn y_global(&self) -> Vec<f64> {
+        self.y.to_global()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consistent_distribution() {
+        let m = Ellpack::random(100, 4, 3);
+        let x0 = vec![1.0; 100];
+        let s = SpmvState::new(&m, 8, 4, &x0);
+        // Row i's A/J data must be owned by the same thread as y[i].
+        for i in 0..100 {
+            let ty = s.layout.owner_of_index(i);
+            for k in 0..4 {
+                let taj = s.layout_aj.owner_of_index(i * 4 + k);
+                assert_eq!(ty, taj, "row {i} slot {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn arrays_roundtrip() {
+        let m = Ellpack::random(57, 3, 2);
+        let x0: Vec<f64> = (0..57).map(|i| i as f64).collect();
+        let s = SpmvState::new(&m, 10, 4, &x0);
+        assert_eq!(s.x_global(), x0);
+        assert_eq!(s.d.to_global(), m.diag);
+        assert_eq!(s.a.to_global(), m.a);
+        assert_eq!(s.j.to_global(), m.j);
+    }
+}

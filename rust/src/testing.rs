@@ -1,0 +1,100 @@
+//! Property-test driver (proptest-lite).
+//!
+//! The offline build ships no `proptest`; this module provides a small
+//! deterministic harness: a seeded [`Rng`]-backed case generator runs a
+//! property closure over many random cases and reports the first failing
+//! case's seed so it can be replayed exactly.
+
+use crate::util::Rng;
+
+/// Number of cases per property, overridable via `UPCSIM_PROP_CASES`.
+pub fn default_cases() -> usize {
+    std::env::var("UPCSIM_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` randomized inputs produced by `gen`.
+///
+/// On failure, panics with the property name, the case index and the exact
+/// per-case seed (replay with [`replay`]). `gen` receives a fresh
+/// deterministic RNG per case so shrinking-by-seed is trivial.
+pub fn check_prop<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base_seed = 0xC0FFEE_u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Replay a single case of a property by seed (for debugging failures).
+pub fn replay<T: std::fmt::Debug>(
+    seed: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) -> Result<(), String> {
+    let mut rng = Rng::new(seed);
+    let input = gen(&mut rng);
+    prop(&input)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check_prop(
+            "add-commutes",
+            32,
+            |r| (r.usize_in(0, 1000), r.usize_in(0, 1000)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math is broken".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        check_prop(
+            "always-fails",
+            4,
+            |r| r.usize_in(0, 10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        // The same seed regenerates the same input.
+        let gen = |r: &mut Rng| r.usize_in(0, 1_000_000);
+        let mut first = None;
+        replay(1234, gen, |&x| {
+            first = Some(x);
+            Ok(())
+        })
+        .unwrap();
+        replay(1234, gen, |&x| {
+            assert_eq!(Some(x), first);
+            Ok(())
+        })
+        .unwrap();
+    }
+}

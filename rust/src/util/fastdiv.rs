@@ -1,0 +1,90 @@
+//! Branch-free division by a runtime constant (libdivide-style).
+//!
+//! The traffic analyzer performs one `index / BLOCKSIZE` per nonzero —
+//! tens of millions of divisions per analysis. A 64-bit reciprocal multiply
+//! replaces the hardware divide (§Perf: see EXPERIMENTS.md).
+//!
+//! Correctness: for a divisor `d ≥ 1` and numerators `n < 2^32`, computing
+//! `m = ⌊2^64 / d⌋ + 1` gives `⌊n/d⌋ = (n · m) >> 64` exactly (standard
+//! round-up-magic argument: the error of `m·d − 2^64 ∈ (0, d]` scaled by
+//! `n < 2^32 ≤ 2^64/d · …` never reaches the next integer). The property
+//! test below exercises the edges.
+
+/// Precomputed reciprocal for dividing `u32`-ranged numerators by a fixed
+/// divisor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FastDiv {
+    d: u64,
+    magic: u64,
+}
+
+impl FastDiv {
+    pub fn new(d: usize) -> FastDiv {
+        assert!(d >= 1 && d <= u32::MAX as usize, "divisor out of range");
+        let d = d as u64;
+        // ⌊2^64 / d⌋ + 1, computed in u128 to avoid overflow.
+        let magic = ((1u128 << 64) / d as u128) as u64 + 1;
+        FastDiv { d, magic }
+    }
+
+    /// `n / d` for `n < 2^32`.
+    #[inline(always)]
+    pub fn div(&self, n: usize) -> usize {
+        debug_assert!(n <= u32::MAX as usize);
+        if self.d == 1 {
+            return n; // magic overflows for d = 1
+        }
+        ((n as u64 as u128 * self.magic as u128) >> 64) as usize
+    }
+
+    /// `n % d` for `n < 2^32`.
+    #[inline(always)]
+    pub fn rem(&self, n: usize) -> usize {
+        n - self.div(n) * self.d as usize
+    }
+
+    pub fn divisor(&self) -> usize {
+        self.d as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check_prop;
+
+    #[test]
+    fn edges() {
+        for d in [1usize, 2, 3, 7, 415, 831, 4096, 65_536, u32::MAX as usize] {
+            let f = FastDiv::new(d);
+            let candidates = [0usize, 1, d - 1, d, d + 1, 2 * d, u32::MAX as usize];
+            for n in candidates.into_iter().map(|n| n.min(u32::MAX as usize)) {
+                assert_eq!(f.div(n), n / d, "{n}/{d}");
+                assert_eq!(f.rem(n), n % d, "{n}%{d}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_matches_hardware_division() {
+        check_prop(
+            "fastdiv",
+            256,
+            |r| {
+                let d = r.usize_in(1, u32::MAX as usize);
+                let n = r.usize_in(0, u32::MAX as usize);
+                (d, n)
+            },
+            |&(d, n)| {
+                let f = FastDiv::new(d);
+                if f.div(n) != n / d {
+                    return Err(format!("{n}/{d}: got {}", f.div(n)));
+                }
+                if f.rem(n) != n % d {
+                    return Err(format!("{n}%{d}: got {}", f.rem(n)));
+                }
+                Ok(())
+            },
+        );
+    }
+}

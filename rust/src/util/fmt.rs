@@ -1,0 +1,182 @@
+//! Human-readable formatting helpers and a plain-text table renderer used by
+//! the harness to print paper tables.
+
+/// Format seconds with adaptive units (`ns`, `µs`, `ms`, `s`).
+pub fn secs(t: f64) -> String {
+    let a = t.abs();
+    if !t.is_finite() {
+        format!("{t}")
+    } else if a == 0.0 {
+        "0 s".to_string()
+    } else if a < 1e-6 {
+        format!("{:.2} ns", t * 1e9)
+    } else if a < 1e-3 {
+        format!("{:.2} µs", t * 1e6)
+    } else if a < 1.0 {
+        format!("{:.2} ms", t * 1e3)
+    } else {
+        format!("{t:.2} s")
+    }
+}
+
+/// Format a byte count with adaptive units.
+pub fn bytes(b: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b;
+    let mut u = 0;
+    while v.abs() >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{v:.0} {}", UNITS[u])
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a rate in bytes/second.
+pub fn rate(bps: f64) -> String {
+    format!("{}/s", bytes(bps))
+}
+
+/// Format a large integer with thousands separators (e.g. `6,810,586`).
+pub fn int(n: usize) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    let digits = s.as_bytes();
+    for (i, d) in digits.iter().enumerate() {
+        if i > 0 && (digits.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*d as char);
+    }
+    out
+}
+
+/// A plain-text table with a title, column headers and rows; renders with
+/// per-column alignment. Mirrors the layout of the paper's tables so the
+/// harness output is directly comparable.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned plain-text table.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                // Right-align all but the first column (first is labels).
+                if i == 0 {
+                    line.push_str(&format!("{:<w$}", cells[i], w = widths[i]));
+                } else {
+                    line.push_str(&format!("{:>w$}", cells[i], w = widths[i]));
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (for `reports/*.csv`).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(secs(2.0), "2.00 s");
+        assert_eq!(secs(2.5e-3), "2.50 ms");
+        assert_eq!(secs(3.4e-6), "3.40 µs");
+        assert_eq!(secs(5e-9), "5.00 ns");
+    }
+
+    #[test]
+    fn int_separators() {
+        assert_eq!(int(6_810_586), "6,810,586");
+        assert_eq!(int(999), "999");
+        assert_eq!(int(1_000), "1,000");
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512.0), "512 B");
+        assert_eq!(bytes(75e9), "69.85 GiB");
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("demo", &["name", "v"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["bb".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("## demo"));
+        assert!(r.contains("bb    22")); // col0 width 4 ("name"), col1 width 2
+        let csv = t.to_csv();
+        assert!(csv.starts_with("name,v\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

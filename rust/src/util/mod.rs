@@ -1,0 +1,48 @@
+//! Small self-contained infrastructure: PRNG, statistics, JSON, formatting.
+//!
+//! The offline build environment ships no `rand`/`serde`/`serde_json`, so the
+//! crate carries its own minimal, well-tested replacements.
+
+pub mod fastdiv;
+pub mod fmt;
+pub mod json;
+pub mod plot;
+pub mod rng;
+pub mod stats;
+
+pub use fastdiv::FastDiv;
+pub use rng::Rng;
+pub use stats::Stats;
+
+/// Integer ceiling division.
+#[inline]
+pub const fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `b` (`b > 0`).
+#[inline]
+pub const fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+}

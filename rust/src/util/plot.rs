@@ -1,0 +1,90 @@
+//! ASCII bar/series plots for the figure reports.
+//!
+//! The paper's Figures 1–2 are bar charts over thread ids; the harness
+//! emits CSVs for external plotting, plus these terminal renderings so the
+//! shape is visible in CI logs and reports/*.txt.
+
+/// Render one horizontal-bar chart: one bar per (label, value).
+pub fn bar_chart(title: &str, series: &[(String, f64)], width: usize) -> String {
+    let max = series.iter().map(|(_, v)| *v).fold(0.0f64, f64::max);
+    let label_w = series.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("## {title}\n");
+    if max <= 0.0 {
+        out.push_str("(all zero)\n");
+        return out;
+    }
+    for (label, v) in series {
+        let filled = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{label:<label_w$} |{}{} {v:.4}\n",
+            "█".repeat(filled),
+            " ".repeat(width - filled),
+        ));
+    }
+    out
+}
+
+/// Render grouped bars: for each row label, one bar per column (prefixed
+/// with the column's name), groups separated by blank lines.
+pub fn grouped_bars(
+    title: &str,
+    columns: &[&str],
+    rows: &[(String, Vec<f64>)],
+    width: usize,
+) -> String {
+    let max = rows
+        .iter()
+        .flat_map(|(_, vs)| vs.iter().copied())
+        .fold(0.0f64, f64::max);
+    let col_w = columns.iter().map(|c| c.len()).max().unwrap_or(0);
+    let mut out = format!("## {title}\n");
+    if max <= 0.0 {
+        out.push_str("(all zero)\n");
+        return out;
+    }
+    for (label, vs) in rows {
+        out.push_str(&format!("{label}\n"));
+        for (c, v) in columns.iter().zip(vs) {
+            let filled = ((v / max) * width as f64).round() as usize;
+            out.push_str(&format!("  {c:<col_w$} |{} {v:.4}\n", "█".repeat(filled)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bars_scale_to_max() {
+        let s = bar_chart(
+            "t",
+            &[("a".into(), 1.0), ("b".into(), 2.0)],
+            10,
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[1].contains("█████ ")); // a = half of b
+        assert!(lines[2].contains("██████████"));
+    }
+
+    #[test]
+    fn empty_and_zero_safe() {
+        assert!(bar_chart("t", &[], 10).contains("(all zero)"));
+        let z = bar_chart("t", &[("x".into(), 0.0)], 10);
+        assert!(z.contains("(all zero)"));
+    }
+
+    #[test]
+    fn grouped_renders_every_column() {
+        let g = grouped_bars(
+            "g",
+            &["v1", "v2"],
+            &[("thread 0".into(), vec![1.0, 3.0])],
+            8,
+        );
+        assert!(g.contains("thread 0"));
+        assert!(g.contains("v1"));
+        assert!(g.contains("v2"));
+    }
+}

@@ -1,0 +1,96 @@
+//! Summary statistics over f64 samples (used by `benchlib` and the harness).
+
+/// Summary statistics of a sample set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+}
+
+impl Stats {
+    /// Compute statistics from samples. Returns an all-NaN record for an
+    /// empty slice (callers treat that as "no data").
+    pub fn from(samples: &[f64]) -> Stats {
+        let n = samples.len();
+        if n == 0 {
+            return Stats { n: 0, mean: f64::NAN, std: f64::NAN, min: f64::NAN, max: f64::NAN, p50: f64::NAN };
+        }
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50,
+        }
+    }
+
+    /// Relative standard deviation (coefficient of variation).
+    pub fn rsd(&self) -> f64 {
+        if self.mean == 0.0 { 0.0 } else { self.std / self.mean.abs() }
+    }
+}
+
+/// Weighted max-abs relative error between two series (used when comparing
+/// model predictions against simulated measurements).
+pub fn max_rel_err(actual: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(actual.len(), predicted.len());
+    actual
+        .iter()
+        .zip(predicted)
+        .map(|(a, p)| if *a == 0.0 { 0.0 } else { ((a - p) / a).abs() })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_simple() {
+        let s = Stats::from(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+        // sample std of 1,2,3,4 = sqrt(5/3)
+        assert!((s.std - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_single() {
+        let s = Stats::from(&[7.0]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p50, 7.0);
+    }
+
+    #[test]
+    fn stats_empty() {
+        let s = Stats::from(&[]);
+        assert_eq!(s.n, 0);
+        assert!(s.mean.is_nan());
+    }
+
+    #[test]
+    fn rel_err() {
+        assert!((max_rel_err(&[2.0, 4.0], &[1.0, 4.4]) - 0.5).abs() < 1e-12);
+    }
+}

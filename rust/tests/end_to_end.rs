@@ -1,0 +1,129 @@
+//! Integration: the coordinator's end-to-end pipeline and the harness table
+//! generators on test-scale problems.
+
+use upcsim::coordinator::{Backend, Problem, RunConfig, Runner};
+use upcsim::harness::{self, HarnessConfig, Workspace};
+use upcsim::mesh::TestProblem;
+use upcsim::spmv::Variant;
+
+fn quick() -> RunConfig {
+    let mut cfg = RunConfig::default_for(Problem::Custom(5_000));
+    cfg.block_size = Some(128);
+    cfg.nodes = 2;
+    cfg.threads_per_node = 8;
+    cfg.iters = 1000;
+    cfg.exec_steps = 10;
+    cfg.backend = Backend::Native;
+    cfg
+}
+
+#[test]
+fn runner_all_variants_stable_and_ordered() {
+    let mesh = Runner::new(quick()).build_mesh();
+    let mut totals = Vec::new();
+    for v in Variant::ALL {
+        let mut cfg = quick();
+        cfg.variant = v;
+        let r = Runner::new(cfg).run_on(&mesh).unwrap();
+        // Diffusion decays.
+        assert!(
+            r.residuals.last().unwrap() <= &r.residuals[0],
+            "{}: residual grew",
+            v.name()
+        );
+        totals.push((v, r.sim_total, r.checksum));
+    }
+    // All variants produce the identical numeric state.
+    for w in totals.windows(2) {
+        assert_eq!(w[0].2.to_bits(), w[1].2.to_bits());
+    }
+    // Multi-node: naive slowest, v3 fastest.
+    let t = |v: Variant| totals.iter().find(|(x, _, _)| *x == v).unwrap().1;
+    assert!(t(Variant::Naive) > t(Variant::V1));
+    assert!(t(Variant::V1) > t(Variant::V3));
+}
+
+#[test]
+fn table3_shape_holds_at_test_scale() {
+    // The headline qualitative claims of Table 3, checked end-to-end from
+    // mesh generation through the simulator:
+    //  (a) multi-node v1 ≫ v3; (b) v3 scales (2 nodes < 1 node);
+    //  (c) single-node v1 beats v2.
+    let cfg = HarnessConfig::test_sized();
+    let mut ws = Workspace::new();
+    let t = harness::table3(&cfg, &mut ws);
+    let row = |name: &str| -> Vec<f64> {
+        t.rows
+            .iter()
+            .find(|r| r[0].trim() == name)
+            .unwrap()
+            .iter()
+            .skip(1)
+            .map(|c| c.parse().unwrap())
+            .collect()
+    };
+    // First problem block only (rows repeat per problem).
+    let v1 = row("UPCv1");
+    let v2 = row("UPCv2");
+    let v3 = row("UPCv3");
+    // (a) multi-node fine-grained collapse: v1 ≫ v3 at 2 and 4 nodes.
+    assert!(v1[1] > 2.0 * v3[1], "2 nodes: v1 {} vs v3 {}", v1[1], v3[1]);
+    assert!(v1[2] > 2.0 * v3[2], "4 nodes: v1 {} vs v3 {}", v1[2], v3[2]);
+    // (b) condensing beats whole blocks where remote traffic matters
+    //     (2–16 nodes; at the extremes the two converge at test scale).
+    for c in 1..5 {
+        assert!(v3[c] <= v2[c] * 1.05, "col {c}: v3 {} vs v2 {}", v3[c], v2[c]);
+    }
+    // (c) the single-node v1 < v2 exception needs the paper's
+    //     BLOCKSIZE ≫ stencil-span regime, which a 1/256-scale problem with
+    //     the scaled BLOCKSIZE schedule cannot reach; it is asserted at the
+    //     proper regime by model::spmv::tests::single_node_v1_beats_v2 and
+    //     sim::cluster::tests::single_node_v1_beats_v2_like_table3.
+    // (d) v1's 1 → 2 node cliff (the paper's 28.8 s → 522 s).
+    assert!(v1[1] > 5.0 * v1[0], "v1 cliff missing: {:?}", v1);
+}
+
+#[test]
+fn table4_model_tracks_sim_at_small_thread_counts() {
+    let cfg = HarnessConfig::test_sized();
+    let mut ws = Workspace::new();
+    let t = harness::table4(&cfg, &mut ws);
+    // Row 0 = 16 threads. Columns: THREADS BS v1a v1p v2a v2p v3a v3p.
+    let r0: Vec<f64> = t.rows[0].iter().map(|c| c.parse().unwrap_or(f64::NAN)).collect();
+    for (a, p, name) in [(r0[2], r0[3], "v1"), (r0[4], r0[5], "v2"), (r0[6], r0[7], "v3")] {
+        let ratio = a / p;
+        assert!(
+            (0.4..2.5).contains(&ratio),
+            "{name}: actual {a} predicted {p} ratio {ratio}"
+        );
+    }
+}
+
+#[test]
+fn reports_are_persisted() {
+    let dir = std::env::temp_dir().join(format!("upcsim-reports-{}", std::process::id()));
+    let mut cfg = HarnessConfig::test_sized();
+    cfg.out_dir = Some(dir.clone());
+    let mut ws = Workspace::new();
+    let t = harness::table1(&cfg, &mut ws);
+    harness::emit(&cfg, "table1", &t);
+    assert!(dir.join("table1.txt").exists());
+    assert!(dir.join("table1.csv").exists());
+    let csv = std::fs::read_to_string(dir.join("table1.csv")).unwrap();
+    assert!(csv.contains("Test problem 1"));
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn full_tp_pipeline_smoke() {
+    // TP1 at 1/512 scale through the whole Runner.
+    let mut cfg = RunConfig::default_for(Problem::Tp(TestProblem::Tp1));
+    cfg.scale_div = 512;
+    cfg.exec_steps = 3;
+    cfg.iters = 1000;
+    let r = Runner::new(cfg).run().unwrap();
+    assert!(r.n > 5_000);
+    assert!(r.sim_total > 0.0 && r.model_total > 0.0);
+    let ratio = r.sim_total / r.model_total;
+    assert!((0.3..4.0).contains(&ratio), "sim/model ratio {ratio}");
+}

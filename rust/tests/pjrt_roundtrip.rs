@@ -1,0 +1,131 @@
+//! Integration: the full AOT bridge — python-lowered HLO-text artifacts
+//! loaded and executed through PJRT, numerically cross-checked against the
+//! native Rust kernel and the paper's Listing-1 oracle.
+//!
+//! Skipped (with a notice) when `make artifacts` has not been run.
+
+use upcsim::coordinator::PjrtCompute;
+use upcsim::matrix::Ellpack;
+use upcsim::runtime::{find_artifacts_dir, Engine};
+use upcsim::spmv::{spmv_block_gathered, BlockCompute};
+use upcsim::util::Rng;
+
+fn artifacts_available() -> bool {
+    if find_artifacts_dir().is_none() {
+        eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts`");
+        return false;
+    }
+    true
+}
+
+#[test]
+fn spmv_artifact_matches_native_kernel() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut pjrt = PjrtCompute::discover().expect("engine");
+    let b = pjrt.tile_rows();
+    let r = 16;
+    let mut rng = Rng::new(99);
+    // Random block data, including an n > b x_copy with out-of-block
+    // column references.
+    let n = 3 * b + 777; // force tile padding in the last chunk
+    let x_copy: Vec<f64> = (0..n).map(|_| rng.f64_in(-1.0, 1.0)).collect();
+    let d: Vec<f64> = (0..n).map(|_| rng.f64_in(0.5, 2.0)).collect();
+    let a: Vec<f64> = (0..n * r).map(|_| rng.f64_in(-0.1, 0.1)).collect();
+    let j: Vec<u32> = (0..n * r).map(|_| rng.usize_in(0, n) as u32).collect();
+
+    let mut y_native = vec![0.0f64; n];
+    spmv_block_gathered(0, &d, &a, &j, r, &x_copy, &mut y_native);
+    let mut y_pjrt = vec![0.0f64; n];
+    pjrt.block(0, &d, &a, &j, r, &x_copy, &mut y_pjrt);
+
+    let mut max_rel = 0.0f64;
+    for i in 0..n {
+        let rel = (y_native[i] - y_pjrt[i]).abs() / (1.0 + y_native[i].abs());
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 1e-5, "PJRT vs native max rel err {max_rel}");
+    assert!(pjrt.calls >= 4, "expected ≥4 tile executions, got {}", pjrt.calls);
+}
+
+#[test]
+fn heat_artifact_matches_reference() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut engine = Engine::discover().expect("engine");
+    let spec = engine.spec("heat2d_step").expect("spec").clone();
+    let tile = spec.meta["tile"];
+    let m = tile + 2;
+    let mut rng = Rng::new(5);
+    let phi: Vec<f32> = (0..m * m).map(|_| rng.f64_in(0.0, 1.0) as f32).collect();
+    let outs = engine.run_f32("heat2d_step", &[&phi]).expect("run");
+    let out = &outs[0];
+    assert_eq!(out.len(), tile * tile);
+    // Reference 5-point update.
+    for i in 1..m - 1 {
+        for k in 1..m - 1 {
+            let want = 0.25
+                * (phi[(i - 1) * m + k]
+                    + phi[(i + 1) * m + k]
+                    + phi[i * m + k - 1]
+                    + phi[i * m + k + 1]);
+            let got = out[(i - 1) * tile + (k - 1)];
+            assert!(
+                (want - got).abs() < 1e-5,
+                "tile ({i},{k}): {got} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn residual_artifact_sums_squares() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut engine = Engine::discover().expect("engine");
+    let spec = engine.spec("diffusion_residual").expect("spec").clone();
+    let b = spec.meta["block"];
+    let y: Vec<f32> = (0..b).map(|i| (i % 7) as f32 * 0.25).collect();
+    let x: Vec<f32> = (0..b).map(|i| (i % 5) as f32 * 0.5).collect();
+    let outs = engine.run_f32("diffusion_residual", &[&y, &x]).expect("run");
+    let want: f32 = y.iter().zip(&x).map(|(a, b)| (a - b) * (a - b)).sum();
+    let got = outs[0][0];
+    assert!(
+        (got - want).abs() / want.max(1.0) < 1e-4,
+        "{got} vs {want}"
+    );
+}
+
+#[test]
+fn full_variant_run_through_pjrt_matches_oracle() {
+    if !artifacts_available() {
+        return;
+    }
+    use upcsim::comm::Analysis;
+    use upcsim::pgas::{Layout, Topology};
+    use upcsim::spmv::{run_variant_with, SpmvState, Variant};
+
+    let mesh = upcsim::mesh::tiny_mesh();
+    let m = Ellpack::diffusion_from_mesh(&mesh);
+    let x0 = m.initial_vector(17);
+    let mut oracle = vec![0.0; m.n];
+    m.spmv_seq(&x0, &mut oracle);
+
+    let layout = Layout::new(m.n, 256, 8);
+    let topo = Topology::new(2, 4);
+    let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, usize::MAX);
+    let mut state = SpmvState::new(&m, 256, 8, &x0);
+    let mut pjrt = PjrtCompute::discover().expect("engine");
+    let out = run_variant_with(Variant::V3, &mut state, Some(&analysis), &mut pjrt);
+
+    // f32 artifact → tolerance, not bitwise.
+    let mut max_rel = 0.0f64;
+    for i in 0..m.n {
+        let rel = (out.y[i] - oracle[i]).abs() / (1.0 + oracle[i].abs());
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 1e-4, "UPCv3+PJRT vs oracle max rel err {max_rel}");
+}
