@@ -3,10 +3,12 @@
 
 use upcsim::benchlib::{BenchConfig, Bencher};
 use upcsim::comm::Analysis;
+use upcsim::engine::{Engine, SpmvEngine};
 use upcsim::matrix::Ellpack;
 use upcsim::mesh::{TetGridSpec, TetMesh};
 use upcsim::pgas::{Layout, Topology};
 use upcsim::sim::DEFAULT_CACHE_WINDOW;
+use upcsim::spmv::{SpmvState, Variant};
 
 fn main() {
     let mut b = Bencher::from_args(BenchConfig::heavy());
@@ -25,6 +27,21 @@ fn main() {
                 std::hint::black_box(&a);
             },
         );
+    }
+
+    // The executed V3 data path (pack → put → barrier → unpack + compute)
+    // on both engines — the consumer of the compiled plan built above.
+    let layout = Layout::new(m.n, 4096, 16);
+    let topo = Topology::new(1, 16);
+    let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, DEFAULT_CACHE_WINDOW);
+    let x0 = m.initial_vector(9);
+    for engine in Engine::ALL {
+        let mut eng = SpmvEngine::new(engine);
+        let mut state = SpmvState::new(&m, 4096, 16, &x0);
+        b.bench_items(&format!("exec-v3/{}", engine.name()), nnz, || {
+            let out = eng.run(Variant::V3, &mut state, Some(&analysis));
+            std::hint::black_box(&out);
+        });
     }
     b.finish();
 }

@@ -4,11 +4,15 @@
 //! roofline for the eq. (6) traffic formula (216 B/row at r_nz = 16).
 
 use upcsim::benchlib::{BenchConfig, Bencher};
+use upcsim::comm::Analysis;
+use upcsim::engine::{Engine, SpmvEngine};
 use upcsim::matrix::Ellpack;
 use upcsim::mesh::{TetGridSpec, TetMesh};
 use upcsim::microbench;
-use upcsim::spmv::{spmv_block_gathered, spmv_parallel};
+use upcsim::pgas::{Layout, Topology};
+use upcsim::spmv::{spmv_block_gathered, spmv_parallel, SpmvState, Variant};
 use upcsim::util::fmt;
+use upcsim::util::json::Value;
 
 fn main() {
     let mut b = Bencher::from_args(BenchConfig::default());
@@ -69,5 +73,72 @@ fn main() {
             frac * 100.0
         );
     }
+
+    // --- Engine comparison: sequential oracle vs the worker pool ---------
+    //
+    // Full UPC-variant execution (transport + compute) at 8 logical
+    // threads, both engines, all four variants. Medians land in
+    // BENCH_engine.json at the repo root so the perf trajectory is
+    // machine-readable.
+    let threads = 8;
+    let bs = 4096;
+    let layout = Layout::new(m.n, bs, threads);
+    let topo = Topology::new(2, 4);
+    let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, usize::MAX);
+    let x0 = m.initial_vector(5);
+    let mut entries: Vec<(Engine, Variant, f64)> = Vec::new();
+    for engine in Engine::ALL {
+        let mut eng = SpmvEngine::new(engine);
+        for v in Variant::ALL {
+            let mut state = SpmvState::new(&m, bs, threads, &x0);
+            let name = format!("engine/{}/{}", engine.name(), v.name());
+            if let Some(r) = b.bench(&name, || {
+                let out = eng.run(v, &mut state, Some(&analysis));
+                std::hint::black_box(&out);
+            }) {
+                entries.push((engine, v, r.time.p50));
+            }
+        }
+    }
+
+    let median_of = |e: Engine, v: Variant| {
+        entries
+            .iter()
+            .find(|&&(xe, xv, _)| xe == e && xv == v)
+            .map(|&(_, _, p50)| p50)
+    };
+    let mut root = Value::obj();
+    root.set("bench", Value::Str("spmv_kernel/engine".to_string()));
+    root.set("n", Value::Num(m.n as f64));
+    root.set("r_nz", Value::Num(m.r_nz as f64));
+    root.set("threads", Value::Num(threads as f64));
+    root.set("block_size", Value::Num(bs as f64));
+    let mut results = Vec::new();
+    for (engine, variant, p50) in &entries {
+        let mut o = Value::obj();
+        o.set("engine", Value::Str(engine.name().to_string()));
+        o.set("variant", Value::Str(variant.name().to_string()));
+        o.set("median_ns_per_iter", Value::Num((p50 * 1e9).round()));
+        results.push(o);
+    }
+    root.set("results", Value::Arr(results));
+    for v in Variant::ALL {
+        if let (Some(s), Some(p)) = (median_of(Engine::Sequential, v), median_of(Engine::Parallel, v))
+        {
+            root.set(
+                &format!("speedup_{}", v.name().replace(' ', "_")),
+                Value::Num(s / p),
+            );
+            println!("{}: parallel speedup over sequential = {:.2}x", v.name(), s / p);
+        }
+    }
+    if !entries.is_empty() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
+        match std::fs::write(path, root.pretty()) {
+            Ok(()) => println!("[engine medians saved to {path}]"),
+            Err(e) => eprintln!("warning: cannot write {path}: {e}"),
+        }
+    }
+
     b.finish();
 }

@@ -117,29 +117,29 @@ impl Analysis {
             recv_needs.push(needs);
         }
 
-        let plan = CommPlan::from_recv_needs(threads, recv_needs);
+        let plan = CommPlan::from_recv_needs(&layout, &recv_needs);
 
         // Fill in the derived send-side and recv-side S/C statistics.
         for t in 0..threads {
-            for m in &plan.send[t] {
+            for m in plan.send_msgs(t) {
                 let local = topo.same_node(t, m.peer as usize);
                 let tt = &mut per_thread[t];
                 if local {
-                    tt.s_local_out += m.indices.len() as u64;
+                    tt.s_local_out += m.len() as u64;
                     tt.c_local_out += 1;
                 } else {
-                    tt.s_remote_out += m.indices.len() as u64;
+                    tt.s_remote_out += m.len() as u64;
                     tt.c_remote_out += 1;
                 }
             }
-            for m in &plan.recv[t] {
+            for m in plan.recv_msgs(t) {
                 let local = topo.same_node(t, m.peer as usize);
                 let tt = &mut per_thread[t];
                 if local {
-                    tt.s_local_in += m.indices.len() as u64;
+                    tt.s_local_in += m.len() as u64;
                     tt.c_local_in += 1;
                 } else {
-                    tt.s_remote_in += m.indices.len() as u64;
+                    tt.s_remote_in += m.len() as u64;
                     tt.c_remote_in += 1;
                 }
             }
@@ -304,8 +304,8 @@ mod tests {
             // block... both foreign blocks owned by the single other thread
             // → exactly 1 consolidated message of 4 values).
             assert_eq!(tt.s_total_in(), 4);
-            assert_eq!(a.plan.recv[t].len(), 1);
-            assert_eq!(a.plan.recv[t][0].indices.len(), 4);
+            assert_eq!(a.plan.messages_to(t), 1);
+            assert_eq!(a.plan.recv_msgs(t).next().unwrap().len(), 4);
         }
     }
 

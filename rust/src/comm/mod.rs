@@ -23,4 +23,4 @@ mod analysis;
 mod plan;
 
 pub use analysis::{Analysis, ThreadTraffic};
-pub use plan::{CommPlan, Message};
+pub use plan::{CommPlan, PlanMsg};

@@ -1,105 +1,277 @@
-//! The condensed + consolidated communication plan (paper §4.3.1).
+//! The condensed + consolidated communication plan (paper §4.3.1), compiled
+//! into a flat CSR-style arena.
 //!
 //! For every ordered pair of threads `(sender, receiver)` the plan holds the
 //! sorted list of *unique* global `x`-indices owned by `sender` that
-//! `receiver`'s rows reference. This is exactly the content of the paper's
-//! `mythread_send_value_list` / `mythread_recv_value_list` arrays, except we
-//! keep global indices and let executors translate to local offsets through
-//! the [`Layout`](crate::pgas::Layout) (the paper does the same translation
-//! when casting `&x[MYTHREAD*BLOCKSIZE]` to a pointer-to-local).
+//! `receiver`'s rows reference — the content of the paper's
+//! `mythread_send_value_list` / `mythread_recv_value_list` arrays. Unlike
+//! the original `Vec<Vec<Message>>` representation (per-message heap
+//! allocations built with a cloning transpose), the compiled plan stores
+//! **one** `indices` arena plus per-`(thread, peer)` offset ranges:
+//!
+//! * `indices[start..end]` — global `x`-indices of one message, receiver-major
+//!   order (all of receiver 0's messages first, sorted by sender, then
+//!   receiver 1's, …);
+//! * `local_src[start..end]` — the same values translated **once** to the
+//!   sender's owner-local storage offsets (the paper translates through
+//!   `&x[MYTHREAD*BLOCKSIZE]` on every pack; here the translation is paid at
+//!   plan-compile time, never per iteration);
+//! * the send side is a CSR permutation (`send_off`/`send_ids`) over the same
+//!   message descriptors — no index list is ever duplicated.
+//!
+//! A message's `start..end` range doubles as its slot range in a *staging
+//! arena* of `total_values()` doubles: executors exchange values by writing
+//! disjoint slices of one flat buffer (the shared-memory analogue of POSH's
+//! per-thread segments), which is what makes the parallel engine's
+//! pack/put/unpack phases zero-copy and lock-free.
 
-/// One consolidated message between a thread pair.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct Message {
-    /// The peer thread (receiver in a send list, sender in a recv list).
-    pub peer: u32,
-    /// Sorted unique global indices of the `x` values carried.
-    pub indices: Vec<u32>,
+use crate::pgas::Layout;
+use std::ops::Range;
+
+/// One message's descriptor: who talks to whom, and where its values live
+/// in the arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct MsgDesc {
+    sender: u32,
+    receiver: u32,
+    start: u32,
+    end: u32,
 }
 
-/// Send/receive lists for all threads.
+/// A borrowed view of one consolidated message.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanMsg<'a> {
+    /// The peer thread (receiver in a send list, sender in a recv list).
+    pub peer: u32,
+    /// Sorted unique global `x`-indices carried by this message.
+    pub indices: &'a [u32],
+    /// The same values as offsets into the **sender's** contiguous local
+    /// storage (pre-translated through the [`Layout`] at compile time).
+    pub local_src: &'a [u32],
+    /// First slot of this message in a staging arena of
+    /// [`CommPlan::total_values`] doubles.
+    pub start: usize,
+}
+
+impl PlanMsg<'_> {
+    /// Number of values carried.
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// This message's slot range in the staging arena.
+    pub fn range(&self) -> Range<usize> {
+        self.start..self.start + self.indices.len()
+    }
+}
+
+/// The compiled send/receive plan for all threads.
 #[derive(Debug, Clone, Default)]
 pub struct CommPlan {
-    /// `send[t]` — messages thread `t` packs and `upc_memput`s, sorted by
-    /// `peer`.
-    pub send: Vec<Vec<Message>>,
-    /// `recv[t]` — messages thread `t` unpacks, sorted by `peer`.
-    /// `recv[t][k].indices` are positions in `mythread_x_copy` (global
-    /// indices) the incoming values land in.
-    pub recv: Vec<Vec<Message>>,
+    threads: usize,
+    /// Global `x`-indices, one contiguous range per message, receiver-major.
+    indices: Vec<u32>,
+    /// Owner-local offsets of the same values (parallel to `indices`).
+    local_src: Vec<u32>,
+    /// Message descriptors sorted by `(receiver, sender)`; ranges are
+    /// consecutive and partition `0..indices.len()`.
+    msgs: Vec<MsgDesc>,
+    /// `msgs[recv_off[t]..recv_off[t+1]]` are the messages received by `t`.
+    recv_off: Vec<u32>,
+    /// `send_ids[send_off[t]..send_off[t+1]]` are the ids (into `msgs`) of
+    /// the messages sent by `t`, sorted by receiver.
+    send_off: Vec<u32>,
+    send_ids: Vec<u32>,
 }
 
 impl CommPlan {
-    /// Build the send side as the transpose of per-thread receive needs.
+    /// Compile the plan from per-thread receive needs.
     /// `recv_needs[t]` = sorted unique `(owner, index)` pairs thread `t`
-    /// requires from other threads.
-    pub fn from_recv_needs(threads: usize, recv_needs: Vec<Vec<(u32, u32)>>) -> CommPlan {
+    /// requires from other threads. The send side is derived as a CSR
+    /// permutation over the same arena — no index list is cloned.
+    pub fn from_recv_needs(layout: &Layout, recv_needs: &[Vec<(u32, u32)>]) -> CommPlan {
+        let threads = layout.threads;
         assert_eq!(recv_needs.len(), threads);
-        let mut recv: Vec<Vec<Message>> = Vec::with_capacity(threads);
-        for needs in &recv_needs {
-            let mut msgs: Vec<Message> = Vec::new();
+        let total: usize = recv_needs.iter().map(|v| v.len()).sum();
+        let mut indices = Vec::with_capacity(total);
+        let mut local_src = Vec::with_capacity(total);
+        let mut msgs: Vec<MsgDesc> = Vec::new();
+        let mut recv_off = Vec::with_capacity(threads + 1);
+        recv_off.push(0u32);
+        for (t, needs) in recv_needs.iter().enumerate() {
             for &(owner, idx) in needs {
+                debug_assert_ne!(owner as usize, t, "thread {t} receives from itself");
+                debug_assert_eq!(
+                    layout.owner_of_index(idx as usize),
+                    owner as usize,
+                    "recv need ({owner}, {idx}) names the wrong owner"
+                );
                 match msgs.last_mut() {
-                    Some(m) if m.peer == owner => m.indices.push(idx),
-                    _ => msgs.push(Message { peer: owner, indices: vec![idx] }),
+                    Some(m) if m.receiver as usize == t && m.sender == owner => m.end += 1,
+                    _ => {
+                        let s = indices.len() as u32;
+                        msgs.push(MsgDesc { sender: owner, receiver: t as u32, start: s, end: s + 1 });
+                    }
                 }
+                indices.push(idx);
+                local_src.push(layout.local_offset_of_index(idx as usize) as u32);
             }
-            recv.push(msgs);
+            recv_off.push(msgs.len() as u32);
         }
-        // Transpose: sender side.
-        let mut send: Vec<Vec<Message>> = vec![Vec::new(); threads];
-        for (t, msgs) in recv.iter().enumerate() {
-            for m in msgs {
-                send[m.peer as usize].push(Message { peer: t as u32, indices: m.indices.clone() });
-            }
+        // Sender-side CSR over message ids. Iterating receiver-major keeps
+        // each sender's id list sorted by receiver.
+        let mut send_count = vec![0u32; threads];
+        for m in &msgs {
+            send_count[m.sender as usize] += 1;
         }
-        for s in &mut send {
-            s.sort_by_key(|m| m.peer);
+        let mut send_off = Vec::with_capacity(threads + 1);
+        send_off.push(0u32);
+        for t in 0..threads {
+            send_off.push(send_off[t] + send_count[t]);
         }
-        CommPlan { send, recv }
+        let mut cursor: Vec<u32> = send_off[..threads].to_vec();
+        let mut send_ids = vec![0u32; msgs.len()];
+        for (id, m) in msgs.iter().enumerate() {
+            let c = &mut cursor[m.sender as usize];
+            send_ids[*c as usize] = id as u32;
+            *c += 1;
+        }
+        CommPlan { threads, indices, local_src, msgs, recv_off, send_off, send_ids }
+    }
+
+    fn view<'a>(&'a self, m: &MsgDesc, peer: u32) -> PlanMsg<'a> {
+        let (s, e) = (m.start as usize, m.end as usize);
+        PlanMsg { peer, indices: &self.indices[s..e], local_src: &self.local_src[s..e], start: s }
+    }
+
+    /// Number of UPC threads the plan was compiled for.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Messages thread `t` unpacks, sorted by sending peer.
+    pub fn recv_msgs(&self, t: usize) -> impl Iterator<Item = PlanMsg<'_>> + '_ {
+        self.msgs[self.recv_off[t] as usize..self.recv_off[t + 1] as usize]
+            .iter()
+            .map(move |m| self.view(m, m.sender))
+    }
+
+    /// Messages thread `t` packs and puts, sorted by receiving peer.
+    pub fn send_msgs(&self, t: usize) -> impl Iterator<Item = PlanMsg<'_>> + '_ {
+        self.send_ids[self.send_off[t] as usize..self.send_off[t + 1] as usize]
+            .iter()
+            .map(move |&id| {
+                let m = &self.msgs[id as usize];
+                self.view(m, m.receiver)
+            })
+    }
+
+    /// All messages in arena (staging-buffer) order as
+    /// `(sender, receiver, msg)` — what the parallel engine uses to carve
+    /// the staging buffer into disjoint per-message slices.
+    pub fn arena_msgs(&self) -> impl Iterator<Item = (usize, usize, PlanMsg<'_>)> + '_ {
+        self.msgs
+            .iter()
+            .map(move |m| (m.sender as usize, m.receiver as usize, self.view(m, m.receiver)))
     }
 
     /// Total values exchanged (Σ message lengths, counted once per message).
     pub fn total_values(&self) -> usize {
-        self.send.iter().flatten().map(|m| m.indices.len()).sum()
+        self.indices.len()
+    }
+
+    /// Total number of consolidated messages.
+    pub fn num_messages(&self) -> usize {
+        self.msgs.len()
     }
 
     /// Number of messages thread `t` sends.
     pub fn messages_from(&self, t: usize) -> usize {
-        self.send[t].len()
+        (self.send_off[t + 1] - self.send_off[t]) as usize
     }
 
-    /// Consistency check: send is the exact transpose of recv, lists sorted
-    /// and unique, and no self-messages.
+    /// Number of messages thread `t` receives.
+    pub fn messages_to(&self, t: usize) -> usize {
+        (self.recv_off[t + 1] - self.recv_off[t]) as usize
+    }
+
+    /// Consistency check: descriptors partition the arena, lists are sorted
+    /// and unique, no self-messages, and the send side is an exact
+    /// permutation of the receive side.
     pub fn validate(&self) -> Result<(), String> {
-        let threads = self.send.len();
-        if self.recv.len() != threads {
-            return Err("send/recv arity".into());
+        let threads = self.threads;
+        if self.recv_off.len() != threads + 1 || self.send_off.len() != threads + 1 {
+            return Err("offset table arity".into());
         }
-        for (t, msgs) in self.recv.iter().enumerate() {
-            for m in msgs {
-                if m.peer as usize == t {
-                    return Err(format!("thread {t} receives from itself"));
-                }
-                if m.indices.is_empty() {
-                    return Err(format!("empty message {} → {t}", m.peer));
-                }
-                if !m.indices.windows(2).all(|w| w[0] < w[1]) {
-                    return Err(format!("recv list {} → {t} not sorted/unique", m.peer));
-                }
-                // matching send entry
-                let s = &self.send[m.peer as usize];
-                match s.iter().find(|sm| sm.peer as usize == t) {
-                    Some(sm) if sm.indices == m.indices => {}
-                    _ => return Err(format!("transpose mismatch {} → {t}", m.peer)),
-                }
+        if self.indices.len() != self.local_src.len() {
+            return Err("indices/local_src length mismatch".into());
+        }
+        if self.send_ids.len() != self.msgs.len() {
+            return Err("send permutation arity".into());
+        }
+        if self.recv_off[threads] as usize != self.msgs.len()
+            || self.send_off[threads] as usize != self.send_ids.len()
+        {
+            return Err("offset tables do not cover all messages".into());
+        }
+        let mut cursor = 0u32;
+        for (id, m) in self.msgs.iter().enumerate() {
+            if m.sender == m.receiver {
+                return Err(format!("message {id} is a self-message ({})", m.sender));
+            }
+            if m.sender as usize >= threads || m.receiver as usize >= threads {
+                return Err(format!("message {id} names an out-of-range thread"));
+            }
+            if m.start != cursor || m.end <= m.start {
+                return Err(format!("message {id} range [{}, {}) breaks the arena", m.start, m.end));
+            }
+            cursor = m.end;
+            let idx = &self.indices[m.start as usize..m.end as usize];
+            if !idx.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("message {} → {} not sorted/unique", m.sender, m.receiver));
             }
         }
-        // No send without matching recv.
-        let sends: usize = self.send.iter().map(|v| v.len()).sum();
-        let recvs: usize = self.recv.iter().map(|v| v.len()).sum();
-        if sends != recvs {
-            return Err(format!("{sends} sends vs {recvs} recvs"));
+        if cursor as usize != self.indices.len() {
+            return Err("arena not fully covered by messages".into());
+        }
+        for t in 0..threads {
+            if self.recv_off[t] > self.recv_off[t + 1] || self.send_off[t] > self.send_off[t + 1] {
+                return Err(format!("offsets not monotone at thread {t}"));
+            }
+            let mut prev: Option<u32> = None;
+            for m in &self.msgs[self.recv_off[t] as usize..self.recv_off[t + 1] as usize] {
+                if m.receiver as usize != t {
+                    return Err(format!("recv list of {t} holds a foreign message"));
+                }
+                if prev.is_some_and(|p| p >= m.sender) {
+                    return Err(format!("recv list of {t} not sorted by sender"));
+                }
+                prev = Some(m.sender);
+            }
+            let mut prev: Option<u32> = None;
+            for &id in &self.send_ids[self.send_off[t] as usize..self.send_off[t + 1] as usize] {
+                let m = &self.msgs[id as usize];
+                if m.sender as usize != t {
+                    return Err(format!("send list of {t} holds a foreign message"));
+                }
+                if prev.is_some_and(|p| p >= m.receiver) {
+                    return Err(format!("send list of {t} not sorted by receiver"));
+                }
+                prev = Some(m.receiver);
+            }
+        }
+        // Every message appears exactly once on the send side.
+        let mut seen = vec![false; self.msgs.len()];
+        for &id in &self.send_ids {
+            let slot = &mut seen[id as usize];
+            if *slot {
+                return Err(format!("message {id} sent twice"));
+            }
+            *slot = true;
         }
         Ok(())
     }
@@ -109,29 +281,149 @@ impl CommPlan {
 mod tests {
     use super::*;
 
+    /// Layout 12 elements × blocksize 2 × 3 threads:
+    /// b0[0,1]→t0 b1[2,3]→t1 b2[4,5]→t2 b3[6,7]→t0 b4[8,9]→t1 b5[10,11]→t2.
+    fn layout() -> Layout {
+        Layout::new(12, 2, 3)
+    }
+
     #[test]
     fn transpose_roundtrip() {
-        // t0 needs idx 5,7 from t1; t2 needs idx 5 from t1 and 0 from t0.
+        // t0 needs idx 2,3 from t1 and 4 from t2; t2 needs 0 from t0 and 8
+        // from t1.
         let needs = vec![
-            vec![(1u32, 5u32), (1, 7)],
+            vec![(1u32, 2u32), (1, 3), (2, 4)],
             vec![],
-            vec![(0, 0), (1, 5)],
+            vec![(0, 0), (1, 8)],
         ];
-        let plan = CommPlan::from_recv_needs(3, needs);
+        let plan = CommPlan::from_recv_needs(&layout(), &needs);
         plan.validate().unwrap();
-        assert_eq!(plan.send[1].len(), 2);
-        assert_eq!(plan.send[1][0], Message { peer: 0, indices: vec![5, 7] });
-        assert_eq!(plan.send[1][1], Message { peer: 2, indices: vec![5] });
-        assert_eq!(plan.send[0], vec![Message { peer: 2, indices: vec![0] }]);
-        assert_eq!(plan.total_values(), 4);
+        assert_eq!(plan.total_values(), 5);
+        assert_eq!(plan.num_messages(), 4);
+        assert_eq!(plan.messages_from(0), 1);
         assert_eq!(plan.messages_from(1), 2);
+        assert_eq!(plan.messages_from(2), 1);
+        assert_eq!(plan.messages_to(0), 2);
+        assert_eq!(plan.messages_to(1), 0);
+        assert_eq!(plan.messages_to(2), 2);
+
+        let r0: Vec<_> = plan.recv_msgs(0).collect();
+        assert_eq!(r0[0].peer, 1);
+        assert_eq!(r0[0].indices, &[2, 3]);
+        assert_eq!(r0[1].peer, 2);
+        assert_eq!(r0[1].indices, &[4]);
+
+        // Send side is the exact transpose, sharing the same arena ranges.
+        let s1: Vec<_> = plan.send_msgs(1).collect();
+        assert_eq!(s1[0].peer, 0);
+        assert_eq!(s1[0].indices, &[2, 3]);
+        assert_eq!(s1[0].range(), 0..2);
+        assert_eq!(s1[1].peer, 2);
+        assert_eq!(s1[1].indices, &[8]);
+
+        // Owner-local offsets were pre-translated: idx 2,3 are t1's first
+        // block (offsets 0,1); idx 8 is t1's second block (offset 2); idx 4
+        // is t2's first block (offset 0); idx 0 is t0's offset 0.
+        assert_eq!(s1[0].local_src, &[0, 1]);
+        assert_eq!(s1[1].local_src, &[2]);
+        let s2: Vec<_> = plan.send_msgs(2).collect();
+        assert_eq!(s2[0].local_src, &[0]);
+    }
+
+    #[test]
+    fn arena_order_is_receiver_major() {
+        let needs = vec![
+            vec![(1u32, 2u32), (2, 4)],
+            vec![(2, 10)],
+            vec![(0, 6)],
+        ];
+        let plan = CommPlan::from_recv_needs(&layout(), &needs);
+        plan.validate().unwrap();
+        let order: Vec<(usize, usize)> =
+            plan.arena_msgs().map(|(s, r, _)| (s, r)).collect();
+        assert_eq!(order, vec![(1, 0), (2, 0), (2, 1), (0, 2)]);
+        // Ranges tile the arena consecutively.
+        let mut cursor = 0;
+        for (_, _, m) in plan.arena_msgs() {
+            assert_eq!(m.range().start, cursor);
+            cursor = m.range().end;
+        }
+        assert_eq!(cursor, plan.total_values());
     }
 
     #[test]
     fn validate_catches_corruption() {
-        let needs = vec![vec![(1u32, 5u32)], vec![]];
-        let mut plan = CommPlan::from_recv_needs(2, needs);
-        plan.send[1][0].indices = vec![6]; // corrupt
+        let needs = vec![vec![(1u32, 2u32)], vec![]];
+        let l = Layout::new(4, 2, 2);
+        let mut plan = CommPlan::from_recv_needs(&l, &needs);
+        plan.validate().unwrap();
+        plan.indices = vec![3, 2]; // unsorted + wrong arity for the message
         assert!(plan.validate().is_err());
+        let mut plan = CommPlan::from_recv_needs(&l, &needs);
+        plan.msgs[0].receiver = 1; // self-message
+        assert!(plan.validate().is_err());
+    }
+
+    /// Property: for random layouts and synthetic needs, the compiled plan
+    /// validates, local offsets agree with the layout, and per-pair lists
+    /// survive the send-side permutation intact.
+    #[test]
+    fn prop_compiled_plan_is_faithful() {
+        crate::testing::check_prop(
+            "commplan-compile",
+            48,
+            |r| {
+                let n = r.usize_in(4, 2000);
+                let bs = r.usize_in(1, 100);
+                let threads = r.usize_in(2, 12);
+                let l = Layout::new(n, bs, threads);
+                // Synthesize needs: every thread samples some off-owner
+                // indices, then sorts/dedups by (owner, index) like the
+                // analyzer does.
+                let mut needs: Vec<Vec<(u32, u32)>> = Vec::with_capacity(threads);
+                for t in 0..threads {
+                    let mut v: Vec<(u32, u32)> = (0..r.usize_in(0, 50))
+                        .filter_map(|_| {
+                            let idx = r.usize_in(0, n);
+                            let owner = l.owner_of_index(idx);
+                            (owner != t).then_some((owner as u32, idx as u32))
+                        })
+                        .collect();
+                    v.sort_unstable();
+                    v.dedup();
+                    needs.push(v);
+                }
+                (l, needs)
+            },
+            |(l, needs)| {
+                let plan = CommPlan::from_recv_needs(l, needs);
+                plan.validate()?;
+                let total: usize = needs.iter().map(|v| v.len()).sum();
+                if plan.total_values() != total {
+                    return Err(format!("{} values, want {total}", plan.total_values()));
+                }
+                for t in 0..l.threads {
+                    // Receive side reproduces the needs exactly.
+                    let flat: Vec<(u32, u32)> = plan
+                        .recv_msgs(t)
+                        .flat_map(|m| m.indices.iter().map(move |&i| (m.peer, i)))
+                        .collect();
+                    if flat != needs[t] {
+                        return Err(format!("thread {t}: recv lists diverge from needs"));
+                    }
+                    for m in plan.send_msgs(t) {
+                        for (&g, &loc) in m.indices.iter().zip(m.local_src) {
+                            if l.owner_of_index(g as usize) != t {
+                                return Err(format!("send list of {t} carries a foreign index"));
+                            }
+                            if l.local_offset_of_index(g as usize) != loc as usize {
+                                return Err(format!("local offset of {g} mistranslated"));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -1,13 +1,14 @@
 //! Run configuration and the end-to-end runner.
 
 use crate::comm::Analysis;
+use crate::engine::{Engine, SpmvEngine};
 use crate::machine::HwParams;
 use crate::matrix::Ellpack;
 use crate::mesh::{Ordering, TestProblem, TetGridSpec, TetMesh};
 use crate::model::{self, SpmvInputs};
 use crate::pgas::{Layout, Topology};
 use crate::sim::{ClusterSim, SimMeasurement};
-use crate::spmv::{run_variant_with, NativeCompute, SpmvState, Variant};
+use crate::spmv::{run_variant_with, SpmvState, Variant};
 use anyhow::Result;
 use std::time::Instant;
 
@@ -51,6 +52,9 @@ pub struct RunConfig {
     pub exec_steps: usize,
     pub ordering: Ordering,
     pub backend: Backend,
+    /// Execution engine for the numeric time loop (native backend only —
+    /// the PJRT backend always runs on the sequential oracle path).
+    pub engine: Engine,
     pub hw: HwParams,
     pub seed: u64,
 }
@@ -70,6 +74,7 @@ impl RunConfig {
             exec_steps: 5,
             ordering: Ordering::Natural,
             backend: Backend::Native,
+            engine: Engine::Sequential,
             hw: HwParams::abel(),
             seed: 0xC0FFEE,
         }
@@ -187,12 +192,16 @@ impl Runner {
             Backend::Pjrt => Some(super::PjrtCompute::discover()?),
             Backend::Native => None,
         };
+        // One engine for the whole loop so the parallel pool's workspaces
+        // persist across time steps.
+        let mut engine = SpmvEngine::new(match cfg.backend {
+            Backend::Pjrt => Engine::Sequential,
+            Backend::Native => cfg.engine,
+        });
         for _ in 0..cfg.exec_steps {
             let out = match &mut pjrt {
                 Some(p) => run_variant_with(cfg.variant, &mut state, Some(&analysis), p),
-                None => {
-                    run_variant_with(cfg.variant, &mut state, Some(&analysis), &mut NativeCompute)
-                }
+                None => engine.run(cfg.variant, &mut state, Some(&analysis)),
             };
             step_bytes = out.inter_thread_bytes;
             // Residual ‖y − x‖∞ before the swap.
@@ -268,6 +277,20 @@ mod tests {
         for w in sums.windows(2) {
             assert_eq!(w[0].to_bits(), w[1].to_bits(), "checksum drift across variants");
         }
+    }
+
+    #[test]
+    fn engine_choice_does_not_change_numerics() {
+        let mesh = Runner::new(quick_config()).build_mesh();
+        let mut cfg = quick_config();
+        cfg.engine = Engine::Sequential;
+        let seq = Runner::new(cfg).run_on(&mesh).unwrap();
+        let mut cfg = quick_config();
+        cfg.engine = Engine::Parallel;
+        let par = Runner::new(cfg).run_on(&mesh).unwrap();
+        assert_eq!(seq.checksum.to_bits(), par.checksum.to_bits());
+        assert_eq!(seq.step_bytes, par.step_bytes);
+        assert_eq!(seq.residuals, par.residuals);
     }
 
     #[test]

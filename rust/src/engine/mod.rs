@@ -1,0 +1,186 @@
+//! Execution-engine selection: sequential oracle vs the parallel worker
+//! pool.
+//!
+//! The sequential executors in [`crate::spmv::run_variant`] replay every
+//! logical UPC thread on one OS thread — perfect as a correctness oracle,
+//! useless as a performance claim. This module adds the other half of the
+//! paper's story: [`Engine::Parallel`] runs the same four variants with
+//! **one real OS thread per logical UPC thread**, each worker owning its
+//! `x`/`y` shards privately, with values exchanged through the compiled
+//! [`CommPlan`](crate::comm::CommPlan)'s flat staging arena (pack → put →
+//! barrier → unpack, exactly Listing 5's phase structure). Remote operations
+//! become plain `memcpy` between per-thread segments — the shared-memory
+//! PGAS execution model of POSH (Coti 2014) driven by a precompiled
+//! irregular-access schedule (Rolinger et al. 2023).
+//!
+//! Both engines produce **bitwise identical** results (`y`, byte counts,
+//! message counts); the equivalence is enforced by
+//! `rust/tests/engine_equivalence.rs` and the property tests below.
+
+mod parallel;
+
+pub use parallel::ParallelPool;
+
+use crate::comm::Analysis;
+use crate::spmv::{run_variant, ExecOutcome, SpmvState, Variant};
+
+/// Which execution engine drives the UPC-thread variants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// Replay all logical threads on the calling OS thread (the oracle).
+    #[default]
+    Sequential,
+    /// One OS thread per logical UPC thread over a scoped worker pool.
+    Parallel,
+}
+
+impl Engine {
+    pub const ALL: [Engine; 2] = [Engine::Sequential, Engine::Parallel];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::Sequential => "sequential",
+            Engine::Parallel => "parallel",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s.to_ascii_lowercase().as_str() {
+            "seq" | "sequential" => Some(Engine::Sequential),
+            "par" | "parallel" => Some(Engine::Parallel),
+            _ => None,
+        }
+    }
+}
+
+/// A reusable engine handle: mode plus the persistent per-worker state
+/// (workspaces, staging arena) the parallel pool keeps across time steps.
+#[derive(Debug, Default)]
+pub struct SpmvEngine {
+    mode: Engine,
+    pool: ParallelPool,
+}
+
+impl SpmvEngine {
+    pub fn new(mode: Engine) -> SpmvEngine {
+        SpmvEngine { mode, pool: ParallelPool::new() }
+    }
+
+    pub fn mode(&self) -> Engine {
+        self.mode
+    }
+
+    /// Run one SpMV `y = Mx` with the chosen variant on this engine.
+    /// Semantics and outputs are bitwise identical across engines.
+    pub fn run(
+        &mut self,
+        variant: Variant,
+        state: &mut SpmvState,
+        analysis: Option<&Analysis>,
+    ) -> ExecOutcome {
+        match self.mode {
+            Engine::Sequential => run_variant(variant, state, analysis),
+            Engine::Parallel => self.pool.run(variant, state, analysis),
+        }
+    }
+}
+
+/// One-shot convenience: run a variant on a fresh engine of the given mode.
+/// Time-stepping callers should hold a [`SpmvEngine`] instead so the
+/// parallel pool's workspaces persist across steps.
+pub fn run_variant_on(
+    engine: Engine,
+    variant: Variant,
+    state: &mut SpmvState,
+    analysis: Option<&Analysis>,
+) -> ExecOutcome {
+    SpmvEngine::new(engine).run(variant, state, analysis)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::Ellpack;
+    use crate::pgas::{Layout, Topology};
+
+    fn analysis_for(m: &Ellpack, bs: usize, nodes: usize, tpn: usize) -> Analysis {
+        let layout = Layout::new(m.n, bs, nodes * tpn);
+        Analysis::build(&m.j, m.r_nz, layout, Topology::new(nodes, tpn), usize::MAX)
+    }
+
+    #[test]
+    fn parallel_engine_matches_oracle_bitwise() {
+        let mesh = crate::mesh::tiny_mesh();
+        let m = Ellpack::diffusion_from_mesh(&mesh);
+        let x0 = m.initial_vector(23);
+        let analysis = analysis_for(&m, 128, 2, 4);
+        let mut pool = SpmvEngine::new(Engine::Parallel);
+        for v in Variant::ALL {
+            let mut seq_state = SpmvState::new(&m, 128, 8, &x0);
+            let want = run_variant(v, &mut seq_state, Some(&analysis));
+            let mut par_state = SpmvState::new(&m, 128, 8, &x0);
+            let got = pool.run(v, &mut par_state, Some(&analysis));
+            assert_eq!(got.y, want.y, "{}: y diverges", v.name());
+            assert_eq!(
+                got.inter_thread_bytes, want.inter_thread_bytes,
+                "{}: byte counts diverge",
+                v.name()
+            );
+            assert_eq!(got.transfers, want.transfers, "{}: transfer counts diverge", v.name());
+            assert_eq!(par_state.y_global(), seq_state.y_global(), "{}: shared y", v.name());
+        }
+    }
+
+    #[test]
+    fn pool_survives_layout_changes() {
+        // One pool reused across different (n, threads) shapes must resize
+        // its workspaces, not corrupt results.
+        let mut pool = SpmvEngine::new(Engine::Parallel);
+        for (n, rnz, bs, threads, seed) in
+            [(60usize, 3usize, 4usize, 6usize, 1u64), (200, 5, 16, 3, 2), (97, 2, 8, 5, 3)]
+        {
+            let m = Ellpack::random(n, rnz, seed);
+            let x0 = m.initial_vector(seed);
+            let layout = Layout::new(n, bs, threads);
+            let analysis =
+                Analysis::build(&m.j, m.r_nz, layout, Topology::single_node(threads), usize::MAX);
+            let mut want = vec![0.0; n];
+            m.spmv_seq(&x0, &mut want);
+            for v in Variant::ALL {
+                let mut state = SpmvState::new(&m, bs, threads, &x0);
+                let out = pool.run(v, &mut state, Some(&analysis));
+                assert_eq!(out.y, want, "{} diverges at n={n}", v.name());
+            }
+        }
+    }
+
+    #[test]
+    fn time_loop_parallel_equals_sequential() {
+        let mesh = crate::mesh::tiny_mesh();
+        let m = Ellpack::diffusion_from_mesh(&mesh);
+        let x0 = m.initial_vector(4);
+        let analysis = analysis_for(&m, 64, 1, 4);
+        let mut finals: Vec<Vec<f64>> = Vec::new();
+        for mode in Engine::ALL {
+            let mut engine = SpmvEngine::new(mode);
+            let mut state = SpmvState::new(&m, 64, 4, &x0);
+            for _ in 0..5 {
+                engine.run(Variant::V3, &mut state, Some(&analysis));
+                state.swap_xy();
+            }
+            finals.push(state.x_global());
+        }
+        assert_eq!(finals[0], finals[1]);
+    }
+
+    #[test]
+    fn engine_parse_roundtrip() {
+        assert_eq!(Engine::parse("seq"), Some(Engine::Sequential));
+        assert_eq!(Engine::parse("Parallel"), Some(Engine::Parallel));
+        assert_eq!(Engine::parse("par"), Some(Engine::Parallel));
+        assert_eq!(Engine::parse("bogus"), None);
+        for e in Engine::ALL {
+            assert_eq!(Engine::parse(e.name()), Some(e));
+        }
+    }
+}

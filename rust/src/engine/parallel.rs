@@ -1,0 +1,325 @@
+//! The parallel worker pool: one OS thread per logical UPC thread.
+//!
+//! Execution model, per variant:
+//!
+//! * **Naive / V1** — one scope, one worker per UPC thread. Every worker
+//!   computes its own rows (the `upc_forall` affinity set) straight into its
+//!   private shard of `y` ([`SharedVec::locals_mut`]); off-owner `x` reads go
+//!   through the shared-array interface exactly as in the sequential
+//!   executor, so the byte/transfer counters match occurrence for
+//!   occurrence.
+//! * **V2** — one scope; each worker `upc_memget`s its needed blocks into
+//!   its persistent private workspace, then computes. The workspace is
+//!   **not** zero-filled between calls: a thread only ever reads positions
+//!   its own transport pass refreshed, which removes the O(threads·n)
+//!   refill traffic per iteration.
+//! * **V3** — two scopes with the scope join as the `upc_barrier` of
+//!   Listing 5. Phase 1: the staging arena is carved into disjoint
+//!   per-message `&mut` slices (the compiled plan's ranges) and every sender
+//!   packs through its pre-translated `local_src` offsets — a plain gather
+//!   from the pointer-to-local, no allocation, no slot search. Phase 2:
+//!   every receiver copies its own blocks, scatters its incoming arena
+//!   ranges, and computes.
+//!
+//! All floating-point evaluation orders are identical to the sequential
+//! executors, so `y` is bitwise identical; counters are per-worker sums of
+//! the same per-thread quantities, so they are exactly equal too.
+
+use crate::comm::Analysis;
+use crate::machine::SIZEOF_DOUBLE;
+use crate::spmv::{spmv_block_gathered, spmv_block_global, ExecOutcome, SpmvState, Variant};
+
+/// Persistent per-worker state, reused across calls/time steps.
+#[derive(Debug, Default)]
+pub struct ParallelPool {
+    /// `x_copies[t]` — thread t's private full-length x workspace (V2/V3).
+    x_copies: Vec<Vec<f64>>,
+    /// Flat staging arena for V3 message payloads (`plan.total_values()`).
+    staging: Vec<f64>,
+}
+
+impl ParallelPool {
+    pub fn new() -> ParallelPool {
+        ParallelPool::default()
+    }
+
+    /// Size the persistent workspaces for the run's shape. Contents are
+    /// never read before being written within a call, so no zero-fill.
+    fn ensure(&mut self, threads: usize, n: usize) {
+        if self.x_copies.len() != threads || self.x_copies.first().is_some_and(|v| v.len() != n) {
+            self.x_copies = (0..threads).map(|_| vec![0.0f64; n]).collect();
+        }
+    }
+
+    /// Run one SpMV `y = Mx` on the worker pool. Bitwise identical to
+    /// [`crate::spmv::run_variant`] in `y`, byte counts and transfer counts.
+    pub fn run(
+        &mut self,
+        variant: Variant,
+        state: &mut SpmvState,
+        analysis: Option<&Analysis>,
+    ) -> ExecOutcome {
+        match variant {
+            Variant::Naive => run_naive(state),
+            Variant::V1 => run_v1(state),
+            Variant::V2 => self.run_v2(state, analysis.expect("V2 needs an Analysis")),
+            Variant::V3 => self.run_v3(state, analysis.expect("V3 needs an Analysis")),
+        }
+    }
+
+    /// Listing 4 on the pool: per-worker block transport into the private
+    /// workspace, then fully private compute.
+    fn run_v2(&mut self, state: &mut SpmvState, analysis: &Analysis) -> ExecOutcome {
+        let layout = state.layout;
+        let r = state.r_nz;
+        self.ensure(layout.threads, layout.n);
+        let x = &state.x;
+        let d = &state.d;
+        let a = &state.a;
+        let j = &state.j;
+        let y_locals = state.y.locals_mut();
+        let mut counts = vec![(0u64, 0u64); layout.threads];
+        std::thread::scope(|s| {
+            for ((t, y_local), (ws, cnt)) in y_locals
+                .into_iter()
+                .enumerate()
+                .zip(self.x_copies.iter_mut().zip(counts.iter_mut()))
+            {
+                s.spawn(move || {
+                    let bs = layout.block_size;
+                    let mut inter = 0u64;
+                    let mut transfers = 0u64;
+                    for b in 0..layout.nblks() {
+                        if !analysis.block_needed(t, b) {
+                            continue;
+                        }
+                        let (start, len) = layout.block_range(b);
+                        ws[start..start + len].copy_from_slice(x.block(b));
+                        if layout.owner_of_block(b) != t {
+                            inter += (len * SIZEOF_DOUBLE) as u64;
+                            transfers += 1;
+                        }
+                    }
+                    for b in layout.blocks_of_thread(t) {
+                        let (offset, len) = layout.block_range(b);
+                        let mb = layout.local_block_index(b);
+                        spmv_block_gathered(
+                            offset,
+                            d.block(b),
+                            a.block(b),
+                            j.block(b),
+                            r,
+                            ws,
+                            &mut y_local[mb * bs..mb * bs + len],
+                        );
+                    }
+                    *cnt = (inter, transfers);
+                });
+            }
+        });
+        finish(state, &counts)
+    }
+
+    /// Listing 5 on the pool: pack/put scope, barrier (the scope join),
+    /// then unpack + compute scope.
+    fn run_v3(&mut self, state: &mut SpmvState, analysis: &Analysis) -> ExecOutcome {
+        let layout = state.layout;
+        let r = state.r_nz;
+        let threads = layout.threads;
+        let plan = &analysis.plan;
+        self.ensure(threads, layout.n);
+        self.staging.resize(plan.total_values(), 0.0);
+
+        // The byte/transfer counters are pure functions of the plan; summing
+        // them in thread order reproduces the sequential executor's counts.
+        let mut inter = 0u64;
+        let mut transfers = 0u64;
+        for t in 0..threads {
+            for m in plan.send_msgs(t) {
+                inter += (m.len() * SIZEOF_DOUBLE) as u64;
+                transfers += 1;
+            }
+        }
+
+        let x = &state.x;
+        // Carve the staging arena into disjoint per-message slices, grouped
+        // by sender: each worker ends up owning exactly the `&mut` ranges it
+        // must fill — the zero-copy `upc_memput`.
+        let mut jobs: Vec<Vec<(&[u32], &mut [f64])>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        {
+            let mut rest: &mut [f64] = &mut self.staging;
+            for (sender, _receiver, m) in plan.arena_msgs() {
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(m.len());
+                jobs[sender].push((m.local_src, head));
+                rest = tail;
+            }
+            debug_assert!(rest.is_empty(), "staging arena not fully carved");
+        }
+
+        // Phase 1: pack + put.
+        std::thread::scope(|s| {
+            for (t, thread_jobs) in jobs.into_iter().enumerate() {
+                if thread_jobs.is_empty() {
+                    continue;
+                }
+                s.spawn(move || {
+                    let local_x = x.local(t);
+                    for (src, buf) in thread_jobs {
+                        for (slot, &off) in buf.iter_mut().zip(src) {
+                            *slot = local_x[off as usize];
+                        }
+                    }
+                });
+            }
+        });
+
+        // ---- upc_barrier (the scope join) ----
+
+        // Phase 2: own-block copy + scatter + compute.
+        let staging = &self.staging;
+        let d = &state.d;
+        let a = &state.a;
+        let j = &state.j;
+        let y_locals = state.y.locals_mut();
+        std::thread::scope(|s| {
+            for ((t, y_local), ws) in
+                y_locals.into_iter().enumerate().zip(self.x_copies.iter_mut())
+            {
+                s.spawn(move || {
+                    let bs = layout.block_size;
+                    for b in layout.blocks_of_thread(t) {
+                        let (start, len) = layout.block_range(b);
+                        ws[start..start + len].copy_from_slice(x.block(b));
+                    }
+                    for m in plan.recv_msgs(t) {
+                        let vals = &staging[m.range()];
+                        for (&gidx, &v) in m.indices.iter().zip(vals) {
+                            ws[gidx as usize] = v;
+                        }
+                    }
+                    for b in layout.blocks_of_thread(t) {
+                        let (offset, len) = layout.block_range(b);
+                        let mb = layout.local_block_index(b);
+                        spmv_block_gathered(
+                            offset,
+                            d.block(b),
+                            a.block(b),
+                            j.block(b),
+                            r,
+                            ws,
+                            &mut y_local[mb * bs..mb * bs + len],
+                        );
+                    }
+                });
+            }
+        });
+        finish_counted(state, inter, transfers)
+    }
+}
+
+/// Listing 2 on the pool: every worker executes the rows with its affinity,
+/// reading through the shared-array interface.
+fn run_naive(state: &mut SpmvState) -> ExecOutcome {
+    let layout = state.layout;
+    let r = state.r_nz;
+    let x = &state.x;
+    let d = &state.d;
+    let a = &state.a;
+    let j = &state.j;
+    let y_locals = state.y.locals_mut();
+    let mut counts = vec![(0u64, 0u64); layout.threads];
+    std::thread::scope(|s| {
+        for ((t, y_local), cnt) in y_locals.into_iter().enumerate().zip(counts.iter_mut()) {
+            s.spawn(move || {
+                let bs = layout.block_size;
+                let mut inter = 0u64;
+                let mut transfers = 0u64;
+                for b in layout.blocks_of_thread(t) {
+                    let (start, len) = layout.block_range(b);
+                    let mb = layout.local_block_index(b);
+                    for (k, slot) in y_local[mb * bs..mb * bs + len].iter_mut().enumerate() {
+                        let i = start + k;
+                        let mut tmp = 0.0f64;
+                        for jj in 0..r {
+                            let col = *j.at(i * r + jj) as usize;
+                            if col != i && layout.owner_of_index(col) != t {
+                                inter += SIZEOF_DOUBLE as u64;
+                                transfers += 1;
+                            }
+                            tmp += *a.at(i * r + jj) * *x.at(col);
+                        }
+                        *slot = *d.at(i) * *x.at(i) + tmp;
+                    }
+                }
+                *cnt = (inter, transfers);
+            });
+        }
+    });
+    finish(state, &counts)
+}
+
+/// Listing 3 on the pool: per-worker block loop with `y,D,A,J` privatized,
+/// `x` accessed element-wise through the shared interface.
+fn run_v1(state: &mut SpmvState) -> ExecOutcome {
+    let layout = state.layout;
+    let r = state.r_nz;
+    let x = &state.x;
+    let d = &state.d;
+    let a = &state.a;
+    let j = &state.j;
+    let y_locals = state.y.locals_mut();
+    let mut counts = vec![(0u64, 0u64); layout.threads];
+    std::thread::scope(|s| {
+        for ((t, y_local), cnt) in y_locals.into_iter().enumerate().zip(counts.iter_mut()) {
+            s.spawn(move || {
+                let bs = layout.block_size;
+                let mut inter = 0u64;
+                let mut transfers = 0u64;
+                for b in layout.blocks_of_thread(t) {
+                    let (offset, len) = layout.block_range(b);
+                    for i in offset..offset + len {
+                        for jj in 0..r {
+                            let col = *j.at(i * r + jj) as usize;
+                            if col != i && layout.owner_of_index(col) != t {
+                                inter += SIZEOF_DOUBLE as u64;
+                                transfers += 1;
+                            }
+                        }
+                    }
+                    let mb = layout.local_block_index(b);
+                    spmv_block_global(
+                        offset,
+                        d.block(b),
+                        a.block(b),
+                        j.block(b),
+                        r,
+                        |i| *x.at(i),
+                        &mut y_local[mb * bs..mb * bs + len],
+                    );
+                }
+                *cnt = (inter, transfers);
+            });
+        }
+    });
+    finish(state, &counts)
+}
+
+/// Gather the freshly written shared `y` to global indexing and fold the
+/// per-worker counters (in thread order, so sums match the oracle exactly).
+fn finish(state: &SpmvState, counts: &[(u64, u64)]) -> ExecOutcome {
+    let (inter, transfers) = counts
+        .iter()
+        .fold((0u64, 0u64), |acc, c| (acc.0 + c.0, acc.1 + c.1));
+    finish_counted(state, inter, transfers)
+}
+
+fn finish_counted(state: &SpmvState, inter: u64, transfers: u64) -> ExecOutcome {
+    let layout = state.layout;
+    let mut y = vec![0.0f64; layout.n];
+    for b in 0..layout.nblks() {
+        let (start, len) = layout.block_range(b);
+        y[start..start + len].copy_from_slice(state.y.block(b));
+    }
+    ExecOutcome { y, inter_thread_bytes: inter, transfers }
+}

@@ -46,7 +46,11 @@ pub fn baseline_mpi(cfg: &HarnessConfig, ws: &mut Workspace) -> Table {
         let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, cfg.cache_window());
         let inp = SpmvInputs { layout, topo, hw: cfg.hw, r_nz: m.r_nz, analysis: &analysis };
         row_v3.push(s2(sim.spmv_iteration(Variant::V3, &inp).total * cfg.iters as f64));
-        let solver = MpiSolver::new(&m, threads, &x0);
+        let mut solver = MpiSolver::new(&m, threads, &x0);
+        // One real exchange step on the configured engine: the table's
+        // numbers are simulated, but this keeps the actual data path (and
+        // its engine selection) exercised by every harness run.
+        solver.step_with(cfg.engine);
         let (mpi_sim, mpi_model) = solver.predict_step(&topo, &cfg.hw, &params);
         row_mpi.push(s2(mpi_sim * cfg.iters as f64));
         row_mpi_m.push(s2(mpi_model * cfg.iters as f64));

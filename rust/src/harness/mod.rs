@@ -16,6 +16,7 @@ pub use baselines::baseline_mpi;
 pub use figures::{figure1, figure2_blocksize, figure2_volumes, plot_figure};
 pub use tables::{microbench_table, table1, table2, table3, table4, table5};
 
+use crate::engine::Engine;
 use crate::machine::HwParams;
 use crate::matrix::Ellpack;
 use crate::mesh::{Ordering, TestProblem, TetMesh};
@@ -31,6 +32,9 @@ pub struct HarnessConfig {
     /// Accounted SpMV iterations (paper: 1000).
     pub iters: usize,
     pub hw: HwParams,
+    /// Execution engine for the real data-movement steps some experiments
+    /// run alongside the simulated timings (e.g. `baseline-mpi`).
+    pub engine: Engine,
     /// Where to save `<name>.txt` / `<name>.csv`; `None` = print only.
     pub out_dir: Option<PathBuf>,
 }
@@ -41,15 +45,24 @@ impl Default for HarnessConfig {
             scale_div: 16,
             iters: 1000,
             hw: HwParams::abel(),
+            engine: Engine::Sequential,
             out_dir: Some(PathBuf::from("reports")),
         }
     }
 }
 
 impl HarnessConfig {
-    /// A configuration small enough for unit/integration tests.
+    /// A configuration small enough for unit/integration tests. Runs the
+    /// parallel engine so the worker pool is exercised end-to-end by every
+    /// harness test.
     pub fn test_sized() -> HarnessConfig {
-        HarnessConfig { scale_div: 256, iters: 10, hw: HwParams::abel(), out_dir: None }
+        HarnessConfig {
+            scale_div: 256,
+            iters: 10,
+            hw: HwParams::abel(),
+            engine: Engine::Parallel,
+            out_dir: None,
+        }
     }
 
     /// LLC reuse window scaled with the problem. The mesh's stencil

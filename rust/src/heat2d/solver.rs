@@ -1,6 +1,7 @@
 //! Executable heat-2D solver with per-thread storage and real halo traffic
 //! (Listings 7 & 8), validated against a sequential reference.
 
+use crate::engine::Engine;
 use crate::model::HeatGrid;
 
 /// Per-thread subdomain state: `phi` (with halo) and the scratch vectors of
@@ -47,49 +48,140 @@ impl Heat2dSolver {
         Heat2dSolver { grid, phi, phin, inter_thread_bytes: 0 }
     }
 
-    /// One time step: halo exchange then 5-point Jacobi update.
+    /// One time step: halo exchange then 5-point Jacobi update (on the
+    /// sequential oracle engine).
     pub fn step(&mut self) {
+        self.step_with(Engine::Sequential);
+    }
+
+    /// One time step on the chosen engine. Both engines produce bitwise
+    /// identical fields and identical halo byte counts;
+    /// [`Engine::Parallel`] runs one OS thread per grid thread.
+    pub fn step_with(&mut self, engine: Engine) {
+        match engine {
+            Engine::Sequential => self.step_seq(),
+            Engine::Parallel => self.step_par(),
+        }
+    }
+
+    fn step_seq(&mut self) {
         self.halo_exchange();
-        let (m, n) = self.grid.subdomain();
         for t in 0..self.grid.threads() {
-            let phi = &self.phi[t];
-            let phin = &mut self.phin[t];
-            for i in 1..m - 1 {
-                for k in 1..n - 1 {
-                    phin[i * n + k] = 0.25
-                        * (phi[(i - 1) * n + k]
-                            + phi[(i + 1) * n + k]
-                            + phi[i * n + k - 1]
-                            + phi[i * n + k + 1]);
-                }
+            Self::jacobi_update(self.grid, t, &self.phi[t], &mut self.phin[t]);
+        }
+        std::mem::swap(&mut self.phi, &mut self.phin);
+    }
+
+    /// Listing 8 for one thread: the 5-point Jacobi update of the interior
+    /// plus the fixed global-boundary copy-through. Shared by both engines —
+    /// it only touches thread `t`'s own `(phi, phin)` pair, so fusing it
+    /// per-thread is order-independent.
+    fn jacobi_update(grid: HeatGrid, t: usize, phi: &[f64], phin: &mut [f64]) {
+        let (m, n) = grid.subdomain();
+        for i in 1..m - 1 {
+            for k in 1..n - 1 {
+                phin[i * n + k] = 0.25
+                    * (phi[(i - 1) * n + k]
+                        + phi[(i + 1) * n + k]
+                        + phi[i * n + k - 1]
+                        + phi[i * n + k + 1]);
             }
         }
         // Global-boundary rows/cols stay fixed: copy them through.
-        for t in 0..self.grid.threads() {
-            let (ip, kp) = self.grid.coords(t);
-            let phi = &self.phi[t];
-            let phin = &mut self.phin[t];
-            if ip == 0 {
-                for k in 0..n {
-                    phin[n + k] = phi[n + k];
-                }
-            }
-            if ip == self.grid.mprocs - 1 {
-                for k in 0..n {
-                    phin[(m - 2) * n + k] = phi[(m - 2) * n + k];
-                }
-            }
-            if kp == 0 {
-                for i in 0..m {
-                    phin[i * n + 1] = phi[i * n + 1];
-                }
-            }
-            if kp == self.grid.nprocs - 1 {
-                for i in 0..m {
-                    phin[i * n + n - 2] = phi[i * n + n - 2];
-                }
+        let (ip, kp) = grid.coords(t);
+        if ip == 0 {
+            for k in 0..n {
+                phin[n + k] = phi[n + k];
             }
         }
+        if ip == grid.mprocs - 1 {
+            for k in 0..n {
+                phin[(m - 2) * n + k] = phi[(m - 2) * n + k];
+            }
+        }
+        if kp == 0 {
+            for i in 0..m {
+                phin[i * n + 1] = phi[i * n + 1];
+            }
+        }
+        if kp == grid.nprocs - 1 {
+            for i in 0..m {
+                phin[i * n + n - 2] = phi[i * n + n - 2];
+            }
+        }
+    }
+
+    /// Parallel step: stage every boundary strip before the barrier (the
+    /// Listing 7 pack phase, extended to the row strips `upc_memget` reads),
+    /// then run one worker per thread that unpacks its halos and applies the
+    /// Jacobi update on its own `(phi, phin)` pair — all cross-thread reads
+    /// go through the staged strips, so workers share nothing mutable.
+    fn step_par(&mut self) {
+        let grid = self.grid;
+        let (m, n) = grid.subdomain();
+        struct Strips {
+            col_first: Vec<f64>,
+            col_last: Vec<f64>,
+            row_first: Vec<f64>,
+            row_last: Vec<f64>,
+        }
+        let strips: Vec<Strips> = (0..grid.threads())
+            .map(|t| {
+                let phi = &self.phi[t];
+                Strips {
+                    col_first: (1..m - 1).map(|i| phi[i * n + 1]).collect(),
+                    col_last: (1..m - 1).map(|i| phi[i * n + n - 2]).collect(),
+                    row_first: phi[n + 1..n + n - 1].to_vec(),
+                    row_last: phi[(m - 2) * n + 1..(m - 2) * n + n - 1].to_vec(),
+                }
+            })
+            .collect();
+        // ---- upc_barrier ----
+        let strips = &strips;
+        let mut bytes = vec![0u64; grid.threads()];
+        std::thread::scope(|s| {
+            for ((t, (phi, phin)), byt) in self
+                .phi
+                .iter_mut()
+                .zip(self.phin.iter_mut())
+                .enumerate()
+                .zip(bytes.iter_mut())
+            {
+                s.spawn(move || {
+                    let (ip, kp) = grid.coords(t);
+                    let mut local_bytes = 0u64;
+                    // Halo unpack, same neighbour order as the sequential
+                    // path (left, right, up, down).
+                    if kp > 0 {
+                        let src = &strips[grid.rank(ip, kp - 1)].col_last;
+                        local_bytes += (src.len() * 8) as u64;
+                        for (i, v) in src.iter().enumerate() {
+                            phi[(i + 1) * n] = *v;
+                        }
+                    }
+                    if kp < grid.nprocs - 1 {
+                        let src = &strips[grid.rank(ip, kp + 1)].col_first;
+                        local_bytes += (src.len() * 8) as u64;
+                        for (i, v) in src.iter().enumerate() {
+                            phi[(i + 1) * n + n - 1] = *v;
+                        }
+                    }
+                    if ip > 0 {
+                        let src = &strips[grid.rank(ip - 1, kp)].row_last;
+                        local_bytes += (src.len() * 8) as u64;
+                        phi[1..n - 1].copy_from_slice(src);
+                    }
+                    if ip < grid.mprocs - 1 {
+                        let src = &strips[grid.rank(ip + 1, kp)].row_first;
+                        local_bytes += (src.len() * 8) as u64;
+                        phi[(m - 1) * n + 1..(m - 1) * n + n - 1].copy_from_slice(src);
+                    }
+                    Self::jacobi_update(grid, t, phi, phin);
+                    *byt = local_bytes;
+                });
+            }
+        });
+        self.inter_thread_bytes += bytes.iter().sum::<u64>();
         std::mem::swap(&mut self.phi, &mut self.phin);
     }
 
@@ -233,6 +325,20 @@ mod tests {
         // Each of 4 threads has 2 neighbours; message length = 12 doubles.
         // Total = 8 messages · 12 · 8 bytes.
         assert_eq!(solver.inter_thread_bytes, 8 * 12 * 8);
+    }
+
+    #[test]
+    fn parallel_engine_matches_sequential_bitwise() {
+        let grid = HeatGrid::new(36, 48, 3, 4);
+        let f0 = random_field(36, 48, 11);
+        let mut seq = Heat2dSolver::new(grid, &f0);
+        let mut par = Heat2dSolver::new(grid, &f0);
+        for step in 0..6 {
+            seq.step_with(Engine::Sequential);
+            par.step_with(Engine::Parallel);
+            assert_eq!(seq.to_global(), par.to_global(), "step {step}");
+            assert_eq!(seq.inter_thread_bytes, par.inter_thread_bytes, "step {step}");
+        }
     }
 
     #[test]

@@ -22,6 +22,9 @@
 //! * [`comm`] — the communication-traffic analyzer producing every count the
 //!   §5 models need, and the condensed/consolidated communication plan.
 //! * [`spmv`] — executable implementations of the paper's Listings 1–5.
+//! * [`engine`] — execution-engine selection: the sequential oracle vs the
+//!   parallel worker pool (one OS thread per UPC thread over the compiled
+//!   communication plan).
 //! * [`model`] — the performance-model engine (eqs. (5)–(18), (19)–(22)).
 //! * [`sim`] — the simulated cluster with per-thread clocks and per-node NIC
 //!   serialization that produces "measured" times.
@@ -38,6 +41,7 @@ pub mod benchlib;
 pub mod cli;
 pub mod comm;
 pub mod coordinator;
+pub mod engine;
 pub mod harness;
 pub mod heat2d;
 pub mod machine;

@@ -16,6 +16,7 @@
 use anyhow::{anyhow, bail, Result};
 use upcsim::cli::Args;
 use upcsim::coordinator::{Backend, Problem, RunConfig, Runner};
+use upcsim::engine::Engine;
 use upcsim::harness::{self, HarnessConfig, Workspace};
 use upcsim::mesh::{Ordering, TestProblem};
 use upcsim::spmv::Variant;
@@ -43,10 +44,18 @@ fn harness_config(args: &Args) -> Result<HarnessConfig> {
         args.usize_flag("scale", 16)?
     };
     cfg.iters = args.usize_flag("iters", 1000)?;
+    cfg.engine = parse_engine(args)?;
     if let Some(dir) = args.str_flag("out") {
         cfg.out_dir = Some(dir.into());
     }
     Ok(cfg)
+}
+
+fn parse_engine(args: &Args) -> Result<Engine> {
+    match args.str_flag("engine") {
+        None => Ok(Engine::Sequential),
+        Some(e) => Engine::parse(e).ok_or_else(|| anyhow!("unknown engine '{e}' (seq|par)")),
+    }
 }
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -85,6 +94,8 @@ COMMON FLAGS
   --scale N         problem scale divisor (default 16; --full-scale for 1)
   --iters K         accounted SpMV iterations (default 1000)
   --out DIR         report output directory (default reports/)
+  --engine seq|par  execution engine for real data movement: sequential
+                    oracle or one OS thread per UPC thread (default seq)
 
 RUN FLAGS
   --problem tp1|tp2|tp3|custom   workload (default tp1)
@@ -206,15 +217,26 @@ fn cmd_run(args: &Args) -> Result<()> {
         "pjrt" => Backend::Pjrt,
         other => bail!("unknown backend '{other}'"),
     };
+    cfg.engine = parse_engine(args)?;
     args.finish()?;
 
+    // The PJRT backend always runs the sequential oracle path; report the
+    // engine that will actually execute, not the one requested.
+    let effective_engine = match cfg.backend {
+        Backend::Pjrt => Engine::Sequential,
+        Backend::Native => cfg.engine,
+    };
+    if cfg.backend == Backend::Pjrt && cfg.engine == Engine::Parallel {
+        eprintln!("note: --backend pjrt runs on the sequential engine; --engine par is ignored");
+    }
     println!(
-        "# end-to-end diffusion driver: {} on {:?}, {} nodes x {} threads, backend {:?}",
+        "# end-to-end diffusion driver: {} on {:?}, {} nodes x {} threads, backend {:?}, engine {}",
         cfg.variant.name(),
         cfg.problem,
         cfg.nodes,
         cfg.threads_per_node,
-        cfg.backend
+        cfg.backend,
+        effective_engine.name()
     );
     let iters = cfg.iters;
     let steps = cfg.exec_steps;
@@ -248,6 +270,7 @@ fn cmd_heat(args: &Args) -> Result<()> {
     let mp = args.usize_flag("mprocs", 4)?;
     let np = args.usize_flag("nprocs", 4)?;
     let steps = args.usize_flag("steps", 50)?;
+    let engine = parse_engine(args)?;
     args.finish()?;
     let grid = HeatGrid::new(mg, ng, mp, np);
     let threads = grid.threads();
@@ -261,7 +284,7 @@ fn cmd_heat(args: &Args) -> Result<()> {
     let mut reference = f0.clone();
     let t0 = std::time::Instant::now();
     for _ in 0..steps {
-        solver.step();
+        solver.step_with(engine);
         reference = seq_reference_step(mg, ng, &reference);
     }
     let wall = t0.elapsed().as_secs_f64();

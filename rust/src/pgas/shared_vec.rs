@@ -79,6 +79,13 @@ impl<T: Copy + Default> SharedVec<T> {
         &mut self.store[thread]
     }
 
+    /// Every thread's local storage at once, as disjoint mutable slices —
+    /// what the parallel engine hands its workers so each UPC thread writes
+    /// its own shard with no synchronization (the owner-computes rule).
+    pub fn locals_mut(&mut self) -> Vec<&mut [T]> {
+        self.store.iter_mut().map(|v| v.as_mut_slice()).collect()
+    }
+
     /// Contiguous slice of global block `b` inside its owner's storage —
     /// what `upc_memget(dst, &x[b*BLOCKSIZE], len)` reads.
     pub fn block(&self, b: usize) -> &[T] {

@@ -1,136 +1,224 @@
 //! The PJRT execution engine: compile-once, execute-many.
+//!
+//! The real implementation binds to the `xla` crate, which only exists in
+//! the full image's toolchain. It is gated behind the `pjrt` cargo feature;
+//! the default build compiles an API-identical stub that still loads and
+//! validates manifests but reports execution as unavailable, so every
+//! caller (coordinator, CLI `--backend pjrt`, integration tests) degrades
+//! with a clear error instead of failing to link.
 
 use super::manifest::{ArtifactSpec, Manifest};
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
 use std::path::Path;
 
-/// Wraps a PJRT CPU client plus a cache of compiled executables, one per
-/// artifact. Compilation happens on first use; the hot path is
-/// [`Engine::run_f32`].
-pub struct Engine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-}
+#[cfg(feature = "pjrt")]
+pub use real::Engine;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Engine;
 
-impl Engine {
-    /// Create an engine over an artifacts directory (must contain
-    /// `manifest.json`).
-    pub fn new(dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Engine { client, manifest, cache: HashMap::new() })
+#[cfg(feature = "pjrt")]
+mod real {
+    use super::*;
+    use std::collections::HashMap;
+
+    /// Wraps a PJRT CPU client plus a cache of compiled executables, one per
+    /// artifact. Compilation happens on first use; the hot path is
+    /// [`Engine::run_f32`].
+    pub struct Engine {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    /// Create an engine by discovering the artifacts directory.
-    pub fn discover() -> Result<Engine> {
-        let dir = super::find_artifacts_dir()
-            .ok_or_else(|| anyhow!("no artifacts/manifest.json found — run `make artifacts`"))?;
-        Engine::new(&dir)
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
-        self.manifest
-            .find(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
-    }
-
-    /// Ensure `name` is compiled and cached.
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.cache.contains_key(name) {
-            return Ok(());
+    impl Engine {
+        /// Whether this build can execute artifacts (true: `pjrt` feature on).
+        pub fn available() -> bool {
+            true
         }
-        let spec = self.spec(name)?.clone();
-        let path = spec
-            .file
-            .to_str()
-            .ok_or_else(|| anyhow!("non-UTF8 artifact path"))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parsing {}: {e:?}", spec.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        self.cache.insert(name.to_string(), exe);
-        Ok(())
-    }
 
-    /// Execute artifact `name` with f32 inputs; returns the flattened f32
-    /// outputs. Inputs are validated against the manifest's shapes.
-    ///
-    /// AOT functions are lowered with `return_tuple=True`, so the raw output
-    /// is a 1-tuple (or n-tuple) that we unpack.
-    pub fn run_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-        self.load(name)?;
-        let spec = self.spec(name)?.clone();
-        if inputs.len() != spec.inputs.len() {
-            return Err(anyhow!(
-                "artifact {name}: {} inputs given, {} expected",
-                inputs.len(),
-                spec.inputs.len()
-            ));
+        /// Create an engine over an artifacts directory (must contain
+        /// `manifest.json`).
+        pub fn new(dir: &Path) -> Result<Engine> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(Engine { client, manifest, cache: HashMap::new() })
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (k, (data, tspec)) in inputs.iter().zip(&spec.inputs).enumerate() {
-            if data.len() != tspec.elements() {
+
+        /// Create an engine by discovering the artifacts directory.
+        pub fn discover() -> Result<Engine> {
+            let dir = super::super::find_artifacts_dir()
+                .ok_or_else(|| anyhow!("no artifacts/manifest.json found — run `make artifacts`"))?;
+            Engine::new(&dir)
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+            self.manifest
+                .find(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+        }
+
+        /// Ensure `name` is compiled and cached.
+        pub fn load(&mut self, name: &str) -> Result<()> {
+            if self.cache.contains_key(name) {
+                return Ok(());
+            }
+            let spec = self.spec(name)?.clone();
+            let path = spec
+                .file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-UTF8 artifact path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        /// Execute artifact `name` with f32 inputs; returns the flattened f32
+        /// outputs. Inputs are validated against the manifest's shapes.
+        ///
+        /// AOT functions are lowered with `return_tuple=True`, so the raw
+        /// output is a 1-tuple (or n-tuple) that we unpack.
+        pub fn run_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+            self.load(name)?;
+            let spec = self.spec(name)?.clone();
+            if inputs.len() != spec.inputs.len() {
                 return Err(anyhow!(
-                    "artifact {name} input {k}: {} elements given, {} expected",
-                    data.len(),
-                    tspec.elements()
+                    "artifact {name}: {} inputs given, {} expected",
+                    inputs.len(),
+                    spec.inputs.len()
                 ));
             }
-            let dims: Vec<i64> = tspec.shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .map_err(|e| anyhow!("reshape input {k}: {e:?}"))?;
-            literals.push(lit);
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (k, (data, tspec)) in inputs.iter().zip(&spec.inputs).enumerate() {
+                if data.len() != tspec.elements() {
+                    return Err(anyhow!(
+                        "artifact {name} input {k}: {} elements given, {} expected",
+                        data.len(),
+                        tspec.elements()
+                    ));
+                }
+                let dims: Vec<i64> = tspec.shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape input {k}: {e:?}"))?;
+                literals.push(lit);
+            }
+            let exe = self.cache.get(name).expect("loaded above");
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+            let mut lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+            // Unpack the tuple of outputs.
+            let parts = lit
+                .decompose_tuple()
+                .map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
+            if parts.len() != spec.outputs.len() {
+                return Err(anyhow!(
+                    "artifact {name}: {} outputs, {} expected",
+                    parts.len(),
+                    spec.outputs.len()
+                ));
+            }
+            let mut out = Vec::with_capacity(parts.len());
+            for (k, part) in parts.iter().enumerate() {
+                let v = part
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("reading output {k} of {name}: {e:?}"))?;
+                out.push(v);
+            }
+            Ok(out)
         }
-        let exe = self.cache.get(name).expect("loaded above");
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let mut lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
-        // Unpack the tuple of outputs.
-        let parts = lit
-            .decompose_tuple()
-            .map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
-        if parts.len() != spec.outputs.len() {
-            return Err(anyhow!(
-                "artifact {name}: {} outputs, {} expected",
-                parts.len(),
-                spec.outputs.len()
-            ));
+
+        /// PJRT platform string (for logs).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        let mut out = Vec::with_capacity(parts.len());
-        for (k, part) in parts.iter().enumerate() {
-            let v = part
-                .to_vec::<f32>()
-                .map_err(|e| anyhow!("reading output {k} of {name}: {e:?}"))?;
-            out.push(v);
-        }
-        Ok(out)
     }
 
-    /// PJRT platform string (for logs).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    impl std::fmt::Debug for Engine {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Engine")
+                .field("artifacts", &self.manifest.artifacts.len())
+                .field("cached", &self.cache.len())
+                .finish()
+        }
     }
 }
 
-impl std::fmt::Debug for Engine {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Engine")
-            .field("artifacts", &self.manifest.artifacts.len())
-            .field("cached", &self.cache.len())
-            .finish()
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::*;
+
+    /// Featureless stand-in: manifest handling works, execution errors out.
+    pub struct Engine {
+        manifest: Manifest,
+    }
+
+    impl Engine {
+        /// Whether this build can execute artifacts (false: stub build).
+        pub fn available() -> bool {
+            false
+        }
+
+        pub fn new(dir: &Path) -> Result<Engine> {
+            let manifest = Manifest::load(dir)?;
+            Ok(Engine { manifest })
+        }
+
+        pub fn discover() -> Result<Engine> {
+            let dir = super::super::find_artifacts_dir()
+                .ok_or_else(|| anyhow!("no artifacts/manifest.json found — run `make artifacts`"))?;
+            Engine::new(&dir)
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+            self.manifest
+                .find(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+        }
+
+        pub fn load(&mut self, name: &str) -> Result<()> {
+            self.spec(name)?;
+            Err(anyhow!(
+                "cannot compile '{name}': built without the `pjrt` feature. \
+                 Enabling it needs the full image's `xla` bindings: add \
+                 `xla = {{ path = \"...\" }}` to rust/Cargo.toml [dependencies], \
+                 then `cargo build --features pjrt`"
+            ))
+        }
+
+        pub fn run_f32(&mut self, name: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+            self.load(name)?;
+            unreachable!("load always errors in the stub build")
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (pjrt feature disabled)".to_string()
+        }
+    }
+
+    impl std::fmt::Debug for Engine {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Engine")
+                .field("artifacts", &self.manifest.artifacts.len())
+                .field("pjrt", &"disabled")
+                .finish()
+        }
     }
 }
 
@@ -146,7 +234,7 @@ mod tests {
 
     // Execution against real artifacts is covered by the integration test
     // `rust/tests/pjrt_roundtrip.rs`, which is skipped when `make artifacts`
-    // has not run.
+    // has not run (or when the `pjrt` feature is off).
     #[test]
     fn discover_is_optional() {
         // Must not panic either way.

@@ -60,9 +60,14 @@ pub struct ExecOutcome {
     pub transfers: u64,
 }
 
-/// Run one SpMV `y = Mx` with the chosen variant. `analysis` must be built
-/// for the same layout/topology and is required by V2 (needed blocks) and V3
-/// (communication plan).
+/// Run one SpMV `y = Mx` with the chosen variant on the **sequential
+/// oracle engine** (all logical UPC threads replayed on the calling
+/// thread). `analysis` must be built for the same layout/topology and is
+/// required by V2 (needed blocks) and V3 (communication plan).
+///
+/// For real parallel execution — one OS thread per UPC thread — go through
+/// [`crate::engine::SpmvEngine`] / [`crate::engine::run_variant_on`], which
+/// dispatch to this function for [`crate::engine::Engine::Sequential`].
 pub fn run_variant(
     variant: Variant,
     state: &mut SpmvState,
@@ -164,11 +169,15 @@ fn run_v2(state: &mut SpmvState, analysis: &Analysis, compute: &mut dyn BlockCom
     let mut inter = 0u64;
     let mut transfers = 0u64;
     let mut y_new = vec![0.0f64; layout.n];
+    // One private copy reused across logical threads. No zero-fill between
+    // threads: every position thread t's rows read is freshly transported
+    // for t (its own blocks plus every needed block), so stale values from
+    // the previous logical thread are never observed. This removes the
+    // O(threads·n) refill traffic the seed executor paid per iteration.
     let mut x_copy = vec![0.0f64; layout.n];
     for t in 0..layout.threads {
         // Transport the needed blocks (own blocks included, as Listing 4
         // does) — upc_memget is a straight contiguous copy.
-        x_copy.fill(0.0);
         for b in 0..layout.nblks() {
             if !analysis.block_needed(t, b) {
                 continue;
@@ -208,51 +217,42 @@ fn run_v3(state: &mut SpmvState, analysis: &Analysis, compute: &mut dyn BlockCom
     let mut transfers = 0u64;
 
     // Phase 1 (before the barrier): every thread packs and "puts" its
-    // outgoing messages into the receivers' shared_recv_buffers.
-    // inbox[receiver] holds (sender, payload) in receiver's recv-list order.
-    let mut inbox: Vec<Vec<Vec<f64>>> = (0..threads)
-        .map(|t| Vec::with_capacity(plan.recv[t].len()))
-        .collect();
-    for t in 0..threads {
-        inbox[t] = plan.recv[t].iter().map(|m| Vec::with_capacity(m.indices.len())).collect();
-    }
+    // outgoing messages into the flat staging arena. The compiled plan's
+    // per-message ranges *are* the receivers' shared_recv_buffer slots, and
+    // the pre-translated `local_src` offsets replace the per-value layout
+    // translation (and the per-message heap allocation plus the
+    // receiver-slot search) the seed executor performed on every pack.
+    let mut staging = vec![0.0f64; plan.total_values()];
     for t in 0..threads {
         let local_x = state.x.local(t);
-        for msg in &plan.send[t] {
-            // Pack from the pointer-to-local using local offsets
-            // (mythread_send_value_list translated through the layout).
-            let mut buf = Vec::with_capacity(msg.indices.len());
-            for &gidx in &msg.indices {
-                debug_assert_eq!(layout.owner_of_index(gidx as usize), t);
-                buf.push(local_x[layout.local_offset_of_index(gidx as usize)]);
+        for msg in plan.send_msgs(t) {
+            // upc_memput into the receiver's arena range for this sender.
+            let buf = &mut staging[msg.range()];
+            for (slot, &src) in buf.iter_mut().zip(msg.local_src) {
+                *slot = local_x[src as usize];
             }
             inter += (buf.len() * SIZEOF_DOUBLE) as u64;
             transfers += 1;
-            // upc_memput into the receiver's buffer slot for this sender.
-            let slot = plan.recv[msg.peer as usize]
-                .iter()
-                .position(|m| m.peer as usize == t)
-                .expect("plan transpose");
-            inbox[msg.peer as usize][slot] = buf;
         }
     }
 
     // ---- upc_barrier ----
 
-    // Phase 2: copy own blocks + unpack incoming, then compute.
+    // Phase 2: copy own blocks + unpack incoming, then compute. As in V2,
+    // `x_copy` is reused across logical threads without a zero-fill: thread
+    // t's rows only ever read its own blocks (copied below) and the
+    // condensed indices its recv messages scatter.
     let mut y_new = vec![0.0f64; layout.n];
     let mut x_copy = vec![0.0f64; layout.n];
     for t in 0..threads {
-        x_copy.fill(0.0);
         for b in layout.blocks_of_thread(t) {
             let (start, len) = layout.block_range(b);
             x_copy[start..start + len].copy_from_slice(state.x.block(b));
         }
-        for (slot, msg) in plan.recv[t].iter().enumerate() {
-            let buf = &inbox[t][slot];
-            assert_eq!(buf.len(), msg.indices.len(), "message {} → {t} lost", msg.peer);
-            for (k, &gidx) in msg.indices.iter().enumerate() {
-                x_copy[gidx as usize] = buf[k];
+        for msg in plan.recv_msgs(t) {
+            let vals = &staging[msg.range()];
+            for (&gidx, &v) in msg.indices.iter().zip(vals) {
+                x_copy[gidx as usize] = v;
             }
         }
         for b in layout.blocks_of_thread(t) {

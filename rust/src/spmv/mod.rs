@@ -9,6 +9,10 @@
 //! the simulated clock accounting lives in [`crate::sim`], driven by the
 //! same [`Analysis`](crate::comm::Analysis).
 //!
+//! The functions here are the sequential oracle; [`crate::engine`] runs the
+//! same variants on a real worker pool (one OS thread per UPC thread) with
+//! bitwise-identical results.
+//!
 //! | Variant | Paper listing | x access |
 //! |---|---|---|
 //! | [`Variant::Naive`] | Listing 2 | element-wise through pointer-to-shared, `upc_forall` |

@@ -20,10 +20,12 @@
 //!
 //! The executor produces bitwise-identical results to the UPC variants.
 
+use crate::engine::Engine;
 use crate::machine::{HwParams, SIZEOF_DOUBLE, SIZEOF_INT};
 use crate::matrix::Ellpack;
 use crate::pgas::Topology;
 use crate::sim::SimParams;
+use crate::util::FastDiv;
 
 /// Contiguous partition of `n` rows over `ranks`.
 #[derive(Debug, Clone, Copy)]
@@ -31,17 +33,24 @@ pub struct ContigPartition {
     pub n: usize,
     pub ranks: usize,
     chunk: usize,
+    /// §Perf: `owner()` runs once per nonzero during setup; the
+    /// reciprocal-multiply divider avoids a hardware `div` per call
+    /// (same treatment as [`crate::pgas::Layout::owner_of_index`]).
+    chunk_div: FastDiv,
 }
 
 impl ContigPartition {
     pub fn new(n: usize, ranks: usize) -> ContigPartition {
         assert!(n > 0 && ranks > 0);
-        ContigPartition { n, ranks, chunk: n.div_ceil(ranks) }
+        assert!(n <= u32::MAX as usize, "row indices must fit u32");
+        let chunk = n.div_ceil(ranks);
+        ContigPartition { n, ranks, chunk, chunk_div: FastDiv::new(chunk) }
     }
 
     #[inline]
     pub fn owner(&self, i: usize) -> usize {
-        i / self.chunk
+        debug_assert!(i < self.n);
+        self.chunk_div.div(i)
     }
 
     /// Row range `[start, end)` of `rank`.
@@ -181,8 +190,23 @@ impl MpiSolver {
         MpiSolver { part, r_nz: m.r_nz, ranks: states, x: xs, values_exchanged, messages }
     }
 
-    /// One step `x ← Mx`: exchange ghosts, compute locally.
+    /// One step `x ← Mx`: exchange ghosts, compute locally (on the
+    /// sequential oracle engine).
     pub fn step(&mut self) {
+        self.step_with(Engine::Sequential);
+    }
+
+    /// One step on the chosen engine. Both engines are bitwise identical;
+    /// [`Engine::Parallel`] runs one OS thread per MPI-style rank with the
+    /// same pack → exchange → compute phase structure.
+    pub fn step_with(&mut self, engine: Engine) {
+        match engine {
+            Engine::Sequential => self.step_seq(),
+            Engine::Parallel => self.step_par(),
+        }
+    }
+
+    fn step_seq(&mut self) {
         let ranks = self.ranks.len();
         // Exchange: pack from owners, "receive" as contiguous ghost fills.
         let mut inbox: Vec<Vec<(u32, Vec<f64>)>> = vec![Vec::new(); ranks];
@@ -193,38 +217,84 @@ impl MpiSolver {
                 inbox[*peer as usize].push((rank as u32, buf));
             }
         }
+        // Ghost fill + compute + commit per rank. The compute reads only the
+        // rank's own buffer (owned values are old until its own commit), so
+        // the per-rank fusion is order-independent across ranks.
         for (rank, st) in self.ranks.iter().enumerate() {
-            let mut cursor = st.rows;
+            let mut msgs = std::mem::take(&mut inbox[rank]);
             // Ghost slots are sorted by (owner, global); inbox arrives in
             // rank order — sort to be deterministic.
-            let mut msgs = std::mem::take(&mut inbox[rank]);
             msgs.sort_by_key(|(peer, _)| *peer);
-            for ((peer, buf), (want_peer, want_len)) in msgs.iter().zip(&st.recv) {
-                assert_eq!(peer, want_peer, "rank {rank}: unexpected sender");
-                assert_eq!(buf.len() as u32, *want_len, "rank {rank}: short message");
-                self.x[rank][cursor..cursor + buf.len()].copy_from_slice(buf);
-                cursor += buf.len();
-            }
+            Self::rank_step(st, self.r_nz, &msgs, &mut self.x[rank]);
         }
-        // Compute into fresh owned buffers, then commit (Jacobi semantics).
-        let r = self.r_nz;
-        let mut new_owned: Vec<Vec<f64>> = Vec::with_capacity(ranks);
-        for (rank, st) in self.ranks.iter().enumerate() {
-            let x = &self.x[rank];
-            let mut y = vec![0.0f64; st.rows];
-            for k in 0..st.rows {
-                let mut tmp = 0.0;
-                for jj in 0..r {
-                    tmp += st.a[k * r + jj] * x[st.jl[k * r + jj] as usize];
+    }
+
+    /// Ghost fill + ELLPACK compute + commit for one rank (shared by both
+    /// engines). `msgs` are the incoming `(sender, payload)` pairs, sorted
+    /// by sender; `x` is the rank's owned-then-ghost buffer.
+    fn rank_step(st: &RankState, r_nz: usize, msgs: &[(u32, Vec<f64>)], x: &mut [f64]) {
+        let mut cursor = st.rows;
+        for ((peer, buf), (want_peer, want_len)) in msgs.iter().zip(&st.recv) {
+            assert_eq!(peer, want_peer, "unexpected sender");
+            assert_eq!(buf.len() as u32, *want_len, "short message");
+            x[cursor..cursor + buf.len()].copy_from_slice(buf);
+            cursor += buf.len();
+        }
+        // Compute into a fresh owned buffer, then commit (Jacobi semantics).
+        let mut y = vec![0.0f64; st.rows];
+        for k in 0..st.rows {
+            let mut tmp = 0.0;
+            for jj in 0..r_nz {
+                tmp += st.a[k * r_nz + jj] * x[st.jl[k * r_nz + jj] as usize];
+            }
+            y[k] = st.diag[k] * x[k] + tmp;
+        }
+        x[..st.rows].copy_from_slice(&y);
+    }
+
+    /// Parallel step: rank workers pack concurrently (reads only), messages
+    /// are rerouted to receivers between the scopes (the two-sided
+    /// exchange), then every rank fills its ghosts and computes fully
+    /// locally — ghost region and owned rows live in the rank's own buffer,
+    /// so phase 2 needs no synchronization at all.
+    fn step_par(&mut self) {
+        let ranks = self.ranks.len();
+        // Phase 1: pack, one worker per sending rank.
+        let mut outbox: Vec<Vec<(u32, Vec<f64>)>> = vec![Vec::new(); ranks];
+        {
+            let x = &self.x;
+            std::thread::scope(|s| {
+                for ((rank, out), st) in outbox.iter_mut().enumerate().zip(&self.ranks) {
+                    if st.send.is_empty() {
+                        continue;
+                    }
+                    s.spawn(move || {
+                        for (peer, offsets) in &st.send {
+                            let buf: Vec<f64> =
+                                offsets.iter().map(|&o| x[rank][o as usize]).collect();
+                            out.push((*peer, buf));
+                        }
+                    });
                 }
-                y[k] = st.diag[k] * x[k] + tmp;
+            });
+        }
+        // Exchange: reroute messages to their receivers (pointer moves only).
+        let mut inbox: Vec<Vec<(u32, Vec<f64>)>> = vec![Vec::new(); ranks];
+        for (rank, msgs) in outbox.into_iter().enumerate() {
+            for (peer, buf) in msgs {
+                inbox[peer as usize].push((rank as u32, buf));
             }
-            new_owned.push(y);
         }
-        for (rank, y) in new_owned.into_iter().enumerate() {
-            let rows = self.ranks[rank].rows;
-            self.x[rank][..rows].copy_from_slice(&y);
-        }
+        // Phase 2: ghost fill + compute + commit, one worker per rank.
+        let r = self.r_nz;
+        std::thread::scope(|s| {
+            for ((xr, st), mut msgs) in self.x.iter_mut().zip(&self.ranks).zip(inbox) {
+                s.spawn(move || {
+                    msgs.sort_by_key(|(peer, _)| *peer);
+                    Self::rank_step(st, r, &msgs, xr);
+                });
+            }
+        });
     }
 
     /// Gather the current solution to global indexing.
@@ -378,6 +448,20 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn parallel_step_matches_sequential_bitwise() {
+        let mesh = crate::mesh::tiny_mesh();
+        let m = Ellpack::diffusion_from_mesh(&mesh);
+        let x0 = m.initial_vector(3);
+        let mut seq = MpiSolver::new(&m, 8, &x0);
+        let mut par = MpiSolver::new(&m, 8, &x0);
+        for _ in 0..4 {
+            seq.step_with(Engine::Sequential);
+            par.step_with(Engine::Parallel);
+            assert_eq!(seq.x_global(), par.x_global());
+        }
     }
 
     #[test]

@@ -1,0 +1,128 @@
+//! Integration: the parallel execution engine is bitwise equivalent to the
+//! sequential oracle — `y`, inter-thread byte counts, and transfer counts —
+//! for every variant across a grid of (n, r_nz, threads, blocksize)
+//! shapes, on single time steps and through multi-step time loops.
+
+use upcsim::comm::Analysis;
+use upcsim::engine::{Engine, SpmvEngine};
+use upcsim::matrix::Ellpack;
+use upcsim::pgas::{Layout, Topology};
+use upcsim::spmv::{run_variant, SpmvState, Variant};
+
+fn check_combo(m: &Ellpack, bs: usize, nodes: usize, tpn: usize, pool: &mut SpmvEngine, seed: u64) {
+    let threads = nodes * tpn;
+    let layout = Layout::new(m.n, bs, threads);
+    let topo = Topology::new(nodes, tpn);
+    let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, usize::MAX);
+    analysis.validate().unwrap();
+    let x0 = m.initial_vector(seed);
+    for v in Variant::ALL {
+        let mut seq = SpmvState::new(m, bs, threads, &x0);
+        let want = run_variant(v, &mut seq, Some(&analysis));
+        let mut par = SpmvState::new(m, bs, threads, &x0);
+        let got = pool.run(v, &mut par, Some(&analysis));
+        let shape = format!("{} n={} bs={bs} threads={threads}", v.name(), m.n);
+        assert_eq!(got.y, want.y, "{shape}: y diverges");
+        assert_eq!(
+            got.inter_thread_bytes, want.inter_thread_bytes,
+            "{shape}: byte counts diverge"
+        );
+        assert_eq!(got.transfers, want.transfers, "{shape}: transfer counts diverge");
+        assert_eq!(par.y_global(), seq.y_global(), "{shape}: shared y diverges");
+    }
+}
+
+#[test]
+fn engines_agree_across_shapes() {
+    // One pool reused throughout: its persistent workspaces must survive
+    // shape changes between calls.
+    let mut pool = SpmvEngine::new(Engine::Parallel);
+    for &(n, rnz, bs, nodes, tpn, seed) in &[
+        (64usize, 2usize, 4usize, 2usize, 2usize, 1u64),
+        (301, 5, 16, 1, 8, 2),
+        (1000, 4, 64, 2, 4, 3),
+        (50, 1, 1, 3, 1, 4),
+        // r_nz = 16 exercises the unrolled kernel specialization.
+        (513, 16, 32, 1, 4, 5),
+        // More threads than blocks for some threads (idle workers).
+        (97, 3, 8, 1, 12, 6),
+    ] {
+        let m = Ellpack::random(n, rnz, seed);
+        check_combo(&m, bs, nodes, tpn, &mut pool, seed);
+    }
+}
+
+#[test]
+fn engines_agree_on_mesh_problem() {
+    let mesh = upcsim::mesh::tiny_mesh();
+    let m = Ellpack::diffusion_from_mesh(&mesh);
+    let mut pool = SpmvEngine::new(Engine::Parallel);
+    for &(bs, nodes, tpn) in &[(128usize, 2usize, 4usize), (64, 1, 16), (256, 4, 2)] {
+        check_combo(&m, bs, nodes, tpn, &mut pool, 7);
+    }
+}
+
+#[test]
+fn time_loop_agrees_bitwise() {
+    let mesh = upcsim::mesh::tiny_mesh();
+    let m = Ellpack::diffusion_from_mesh(&mesh);
+    let layout = Layout::new(m.n, 128, 8);
+    let analysis = Analysis::build(&m.j, m.r_nz, layout, Topology::new(2, 4), usize::MAX);
+    let x0 = m.initial_vector(42);
+    for v in Variant::ALL {
+        let mut seq_state = SpmvState::new(&m, 128, 8, &x0);
+        let mut par_state = SpmvState::new(&m, 128, 8, &x0);
+        let mut pool = SpmvEngine::new(Engine::Parallel);
+        for step in 0..5 {
+            run_variant(v, &mut seq_state, Some(&analysis));
+            seq_state.swap_xy();
+            pool.run(v, &mut par_state, Some(&analysis));
+            par_state.swap_xy();
+            assert_eq!(
+                seq_state.x_global(),
+                par_state.x_global(),
+                "{} diverges at step {step}",
+                v.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_engines_agree_on_random_problems() {
+    let mut pool = SpmvEngine::new(Engine::Parallel);
+    upcsim::testing::check_prop(
+        "engine-equivalence",
+        12,
+        |r| {
+            let n = r.usize_in(10, 400);
+            let rnz = r.usize_in(1, 6);
+            let bs = r.usize_in(1, 60);
+            let tpn = r.usize_in(1, 4);
+            let nodes = r.usize_in(1, 3);
+            (Ellpack::random(n, rnz, r.next_u64()), bs, nodes, tpn)
+        },
+        |(m, bs, nodes, tpn)| {
+            let threads = nodes * tpn;
+            let layout = Layout::new(m.n, *bs, threads);
+            let analysis =
+                Analysis::build(&m.j, m.r_nz, layout, Topology::new(*nodes, *tpn), usize::MAX);
+            let x0 = m.initial_vector(1);
+            for v in Variant::ALL {
+                let mut seq = SpmvState::new(m, *bs, threads, &x0);
+                let want = run_variant(v, &mut seq, Some(&analysis));
+                let mut par = SpmvState::new(m, *bs, threads, &x0);
+                let got = pool.run(v, &mut par, Some(&analysis));
+                if got.y != want.y {
+                    return Err(format!("{}: y diverges", v.name()));
+                }
+                if got.inter_thread_bytes != want.inter_thread_bytes
+                    || got.transfers != want.transfers
+                {
+                    return Err(format!("{}: counters diverge", v.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}

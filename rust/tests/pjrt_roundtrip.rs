@@ -11,6 +11,10 @@ use upcsim::spmv::{spmv_block_gathered, BlockCompute};
 use upcsim::util::Rng;
 
 fn artifacts_available() -> bool {
+    if !Engine::available() {
+        eprintln!("SKIP: built without the `pjrt` feature — rebuild with --features pjrt");
+        return false;
+    }
     if find_artifacts_dir().is_none() {
         eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts`");
         return false;
