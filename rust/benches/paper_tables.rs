@@ -10,6 +10,11 @@ fn main() {
     let mut cfg = HarnessConfig::default();
     cfg.scale_div = 64;
     cfg.out_dir = None;
+    // UPCSIM_HW=abel|host|file:<path> regenerates every table on a different
+    // hardware parameter set (see `repro calibrate`).
+    let src = upcsim::machine::HwSource::from_env().expect("UPCSIM_HW");
+    cfg.hw = src.resolve(true).expect("hw resolution");
+    cfg.hw_label = src.label();
     // Pre-warm the workspace so mesh generation cost is reported separately.
     let mut ws = Workspace::new();
     b.bench("tables/mesh-generation(all 3, 1/64)", || {

@@ -3,7 +3,7 @@
 
 use upcsim::benchlib::{BenchConfig, Bencher};
 use upcsim::comm::Analysis;
-use upcsim::machine::HwParams;
+use upcsim::machine::HwSource;
 use upcsim::matrix::Ellpack;
 use upcsim::mesh::{TetGridSpec, TetMesh};
 use upcsim::model::{self, SpmvInputs};
@@ -18,7 +18,12 @@ fn main() {
     let layout = Layout::new(m.n, 4096, 64);
     let topo = Topology::new(4, 16);
     let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, DEFAULT_CACHE_WINDOW);
-    let hw = HwParams::abel();
+    // UPCSIM_HW=abel|host|file:<path> selects the parameter set (see
+    // `repro calibrate`); default is the paper's Abel constants.
+    let src = HwSource::from_env().expect("UPCSIM_HW");
+    // Rescaled to the simulated 16-threads/node topology (§5.1).
+    let hw = src.resolve(true).expect("hw resolution").with_threads_per_node(16);
+    println!("hardware parameters: {}\n", src.label());
     let inp = SpmvInputs { layout, topo, hw, r_nz: m.r_nz, analysis: &analysis };
     let sim = ClusterSim::new(hw);
 

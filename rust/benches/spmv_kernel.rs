@@ -109,6 +109,9 @@ fn main() {
     };
     let mut root = Value::obj();
     root.set("bench", Value::Str("spmv_kernel/engine".to_string()));
+    // Stamp the host roofline so BENCH_engine.json is comparable across
+    // machines (same anchor `repro calibrate` measures as W_node).
+    root.set("host_stream_bps", Value::Num(stream.bandwidth()));
     root.set("n", Value::Num(m.n as f64));
     root.set("r_nz", Value::Num(m.r_nz as f64));
     root.set("threads", Value::Num(threads as f64));

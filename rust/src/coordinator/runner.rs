@@ -170,17 +170,17 @@ impl Runner {
         let topo = Topology::new(cfg.nodes, cfg.threads_per_node);
         let window = crate::harness::scaled_cache_window(self.config.scale_div.max(1));
         let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, window);
-        let inp = SpmvInputs { layout, topo, hw: cfg.hw, r_nz: m.r_nz, analysis: &analysis };
+        // Per-thread bandwidth share depends on how many threads actually
+        // run on a node (§5.1): rescale the injected parameter set to the
+        // run's topology, as the harness consumers do (table2, ablations,
+        // validate).
+        let hw = cfg.hw.with_threads_per_node(cfg.threads_per_node);
+        let inp = SpmvInputs { layout, topo, hw, r_nz: m.r_nz, analysis: &analysis };
 
         // Timing: simulated-actual and model-predicted.
-        let sim = ClusterSim::new(cfg.hw);
+        let sim = ClusterSim::new(hw);
         let sim_iter = sim.spmv_iteration(cfg.variant, &inp);
-        let model_iter = match cfg.variant {
-            Variant::Naive => model::predict_naive(&inp, &sim.naive).total,
-            Variant::V1 => model::predict_v1(&inp).total,
-            Variant::V2 => model::predict_v2(&inp).total,
-            Variant::V3 => model::predict_v3(&inp).total,
-        };
+        let model_iter = model::predict(cfg.variant, &inp).total;
 
         // Numerics: execute `exec_steps` real steps of v = Mv.
         let x0 = m.initial_vector(cfg.seed ^ 0x11);

@@ -30,14 +30,15 @@ pub fn ablation_blocksize(cfg: &HarnessConfig, ws: &mut Workspace) -> Table {
         format!("Ablation — total time vs BLOCKSIZE, TP1, 32 threads/2 nodes, {} iters", cfg.iters),
         &headers_ref,
     );
-    let sim = ClusterSim::new(cfg.hw);
+    let hw = cfg.hw_for_tpn(16);
+    let sim = ClusterSim::new(hw);
     let topo = Topology::new(2, 16);
     for variant in Variant::TRANSFORMED {
         let mut row = vec![variant.name().to_string()];
         for &bs in &scaled {
             let layout = Layout::new(m.n, bs, 32);
             let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, cfg.cache_window());
-            let inp = SpmvInputs { layout, topo, hw: cfg.hw, r_nz: m.r_nz, analysis: &analysis };
+            let inp = SpmvInputs { layout, topo, hw, r_nz: m.r_nz, analysis: &analysis };
             row.push(s2(sim.spmv_iteration(variant, &inp).total * cfg.iters as f64));
         }
         t.row(row);
@@ -58,14 +59,15 @@ pub fn ablation_ordering(cfg: &HarnessConfig, ws: &mut Workspace) -> Table {
         &headers,
     );
     let topo = Topology::new(2, 16);
-    let sim = ClusterSim::new(cfg.hw);
+    let hw = cfg.hw_for_tpn(16);
+    let sim = ClusterSim::new(hw);
     for ordering in Ordering::ALL {
         let mesh = ws.mesh(TestProblem::Tp1, cfg.scale_div, ordering).clone();
         let m = ws.matrix(TestProblem::Tp1, cfg.scale_div, ordering);
         let bs = (65_536 / cfg.scale_div).max(1).min(m.n);
         let layout = Layout::new(m.n, bs, 32);
         let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, cfg.cache_window());
-        let inp = SpmvInputs { layout, topo, hw: cfg.hw, r_nz: m.r_nz, analysis: &analysis };
+        let inp = SpmvInputs { layout, topo, hw, r_nz: m.r_nz, analysis: &analysis };
         let v1 = sim.spmv_iteration(Variant::V1, &inp).total * cfg.iters as f64;
         let v3 = sim.spmv_iteration(Variant::V3, &inp).total * cfg.iters as f64;
         let comm_mb: f64 =
@@ -92,11 +94,14 @@ pub fn ablation_threads_per_node(cfg: &HarnessConfig, ws: &mut Workspace) -> Tab
         ),
         &["threads/node", "nodes", "UPCv3 total", "remote msgs", "remote MB"],
     );
-    let sim = ClusterSim::new(cfg.hw);
     for tpn in [2usize, 4, 8, 16, 32] {
         let nodes = 32 / tpn;
         let topo = Topology::new(nodes, tpn);
-        let hw = cfg.hw.with_threads_per_node(tpn);
+        let hw = cfg.hw_for_tpn(tpn);
+        // The simulator reads its own copy of the parameters, so it must be
+        // built per tpn too — one sim at 16 threads/node would price every
+        // row's compute at the wrong bandwidth share.
+        let sim = ClusterSim::new(hw);
         let bs = (65_536 / cfg.scale_div).max(1).min(m.n);
         let layout = Layout::new(m.n, bs, 32);
         let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, cfg.cache_window());

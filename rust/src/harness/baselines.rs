@@ -31,8 +31,9 @@ pub fn baseline_mpi(cfg: &HarnessConfig, ws: &mut Workspace) -> Table {
         ),
         &headers_ref,
     );
-    let sim = ClusterSim::new(cfg.hw);
-    let params = SimParams::from_hw(&cfg.hw);
+    let hw = cfg.hw_for_tpn(16);
+    let sim = ClusterSim::new(hw);
+    let params = SimParams::from_hw(&hw);
     let mut row_v3 = vec!["UPCv3 (block-cyclic, one-sided)".to_string()];
     let mut row_mpi = vec!["MPI-style (contiguous, two-sided)".to_string()];
     let mut row_mpi_m = vec!["MPI-style model prediction".to_string()];
@@ -44,14 +45,14 @@ pub fn baseline_mpi(cfg: &HarnessConfig, ws: &mut Workspace) -> Table {
         let layout = Layout::new(m.n, bs, threads);
         let topo = Topology::new(nodes, 16);
         let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, cfg.cache_window());
-        let inp = SpmvInputs { layout, topo, hw: cfg.hw, r_nz: m.r_nz, analysis: &analysis };
+        let inp = SpmvInputs { layout, topo, hw, r_nz: m.r_nz, analysis: &analysis };
         row_v3.push(s2(sim.spmv_iteration(Variant::V3, &inp).total * cfg.iters as f64));
         let mut solver = MpiSolver::new(&m, threads, &x0);
         // One real exchange step on the configured engine: the table's
         // numbers are simulated, but this keeps the actual data path (and
         // its engine selection) exercised by every harness run.
         solver.step_with(cfg.engine);
-        let (mpi_sim, mpi_model) = solver.predict_step(&topo, &cfg.hw, &params);
+        let (mpi_sim, mpi_model) = solver.predict_step(&topo, &hw, &params);
         row_mpi.push(s2(mpi_sim * cfg.iters as f64));
         row_mpi_m.push(s2(mpi_model * cfg.iters as f64));
     }

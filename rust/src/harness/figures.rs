@@ -37,8 +37,9 @@ pub fn figure1(cfg: &HarnessConfig, ws: &mut Workspace) -> Table {
     let layout = Layout::new(m.n, bs, threads);
     let topo = Topology::new(2, 16);
     let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, cfg.cache_window());
-    let inp = SpmvInputs { layout, topo, hw: cfg.hw, r_nz: m.r_nz, analysis: &analysis };
-    let sim = ClusterSim::new(cfg.hw);
+    let hw = cfg.hw_for_tpn(16);
+    let inp = SpmvInputs { layout, topo, hw, r_nz: m.r_nz, analysis: &analysis };
+    let sim = ClusterSim::new(hw);
     let meas = sim.spmv_iteration(Variant::V3, &inp);
     let pred = model::predict_v3(&inp);
 

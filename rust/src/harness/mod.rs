@@ -10,11 +10,13 @@ mod ablations;
 mod baselines;
 mod figures;
 mod tables;
+mod validate;
 
 pub use ablations::{ablation_blocksize, ablation_ordering, ablation_threads_per_node};
 pub use baselines::baseline_mpi;
 pub use figures::{figure1, figure2_blocksize, figure2_volumes, plot_figure};
 pub use tables::{microbench_table, table1, table2, table3, table4, table5};
+pub use validate::{model_validation, ValidationPoint, ValidationReport};
 
 use crate::engine::Engine;
 use crate::machine::HwParams;
@@ -32,6 +34,9 @@ pub struct HarnessConfig {
     /// Accounted SpMV iterations (paper: 1000).
     pub iters: usize,
     pub hw: HwParams,
+    /// Where `hw` came from (`abel`, `host`, `file:<path>`) — stamped into
+    /// table titles and JSON reports so outputs are self-describing.
+    pub hw_label: String,
     /// Execution engine for the real data-movement steps some experiments
     /// run alongside the simulated timings (e.g. `baseline-mpi`).
     pub engine: Engine,
@@ -45,6 +50,7 @@ impl Default for HarnessConfig {
             scale_div: 16,
             iters: 1000,
             hw: HwParams::abel(),
+            hw_label: "abel".to_string(),
             engine: Engine::Sequential,
             out_dir: Some(PathBuf::from("reports")),
         }
@@ -60,6 +66,7 @@ impl HarnessConfig {
             scale_div: 256,
             iters: 10,
             hw: HwParams::abel(),
+            hw_label: "abel".to_string(),
             engine: Engine::Parallel,
             out_dir: None,
         }
@@ -72,6 +79,16 @@ impl HarnessConfig {
     /// `stencil span < window ≪ n`.
     pub fn cache_window(&self) -> usize {
         scaled_cache_window(self.scale_div)
+    }
+
+    /// `hw` rescaled to a topology's threads-per-node (§5.1): the per-thread
+    /// bandwidth share depends on how many threads actually run on a node,
+    /// so every experiment simulating or predicting a `tpn`-thread node must
+    /// consume this, not the raw parameter set. Identity for the Abel
+    /// defaults at `tpn = 16`; load-bearing for injected calibrations whose
+    /// `threads_per_node` is the host's core count.
+    pub fn hw_for_tpn(&self, tpn: usize) -> HwParams {
+        self.hw.with_threads_per_node(tpn)
     }
 }
 

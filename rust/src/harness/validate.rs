@@ -1,0 +1,258 @@
+//! `repro validate` — the calibration loop closed: run the four variants on
+//! the *real* parallel engine, predict each with the eqs. (5)–(18) models
+//! under a calibrated [`HwParams`](crate::machine::HwParams), and report
+//! measured vs predicted.
+//!
+//! This is the Tables-3/4 methodology pointed at the machine running the
+//! binary instead of the paper's Abel cluster: "measured" is the wall-clock
+//! median of `Engine::Parallel` iterations (one OS thread per UPC thread,
+//! real data movement; `--engine seq` times the sequential oracle instead),
+//! "predicted" comes from the same closed forms the paper derives, fed with
+//! the host's four characteristic parameters. On
+//! the shared-memory engine a "remote" operation is a cross-thread memcpy /
+//! cache-line transfer — exactly what the host calibration's `W_node_remote`
+//! and `τ` measure — so the models remain dimensionally honest.
+
+use super::{HarnessConfig, Workspace};
+use crate::comm::Analysis;
+use crate::engine::SpmvEngine;
+use crate::mesh::{Ordering, TestProblem};
+use crate::model::{self, SpmvInputs};
+use crate::pgas::{Layout, Topology};
+use crate::spmv::{SpmvState, Variant};
+use crate::util::fmt::{self, int, Table};
+use crate::util::json::Value;
+use crate::util::Stats;
+use std::time::Instant;
+
+/// One measured-vs-predicted data point.
+#[derive(Debug, Clone)]
+pub struct ValidationPoint {
+    pub problem: TestProblem,
+    pub n: usize,
+    pub nodes: usize,
+    pub threads_per_node: usize,
+    pub block_size: usize,
+    pub variant: Variant,
+    /// Median wall-clock seconds of one engine iteration.
+    pub measured: f64,
+    /// Model-predicted seconds for one iteration.
+    pub predicted: f64,
+}
+
+impl ValidationPoint {
+    /// Accuracy ratio measured/predicted (1.0 = perfect; the paper's models
+    /// land within tens of percent on Abel, §6.3).
+    pub fn ratio(&self) -> f64 {
+        self.measured / self.predicted
+    }
+}
+
+/// The full validation outcome: every point plus the rendered artifacts.
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    pub points: Vec<ValidationPoint>,
+    pub table: Table,
+    /// `BENCH_model.json` document.
+    pub json: Value,
+}
+
+impl ValidationReport {
+    /// Geometric-mean accuracy ratio for one variant across all layouts
+    /// (NaN when the variant has no finite points).
+    pub fn geomean_ratio(&self, variant: Variant) -> f64 {
+        geomean_for(&self.points, variant)
+    }
+}
+
+fn geomean_for(points: &[ValidationPoint], variant: Variant) -> f64 {
+    geomean(points.iter().filter(|p| p.variant == variant).map(ValidationPoint::ratio))
+}
+
+fn geomean(ratios: impl Iterator<Item = f64>) -> f64 {
+    let mut sum_ln = 0.0f64;
+    let mut n = 0usize;
+    for r in ratios {
+        if r.is_finite() && r > 0.0 {
+            sum_ln += r.ln();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        (sum_ln / n as f64).exp()
+    }
+}
+
+/// The layouts/meshes the validation sweeps: two test problems, single- and
+/// two-"node" topologies over the engine's OS threads, and two BLOCKSIZE
+/// regimes (the paper schedule and a 4× finer blocking). Thread counts are
+/// capped by the host so every logical UPC thread gets a real core.
+fn sweep(cfg: &HarnessConfig) -> Vec<(TestProblem, usize, usize, usize)> {
+    let host = crate::microbench::host_threads();
+    // Largest power of two ≤ min(host, 8): keeps one OS thread per core and
+    // the topologies cleanly divisible.
+    let mut t_all = 1usize;
+    while t_all * 2 <= host.min(8) {
+        t_all *= 2;
+    }
+    let paper_bs = |threads: usize| {
+        crate::coordinator::RunConfig::paper_blocksize(threads, cfg.scale_div)
+    };
+    let mut configs = vec![(TestProblem::Tp1, 1, t_all, paper_bs(t_all))];
+    if t_all >= 2 {
+        configs.push((TestProblem::Tp1, 2, t_all / 2, (paper_bs(t_all) / 4).max(1)));
+        configs.push((TestProblem::Tp2, 1, t_all, (paper_bs(t_all) / 4).max(1)));
+        configs.push((TestProblem::Tp2, 2, t_all / 2, paper_bs(t_all)));
+    }
+    configs
+}
+
+/// Run the validation: all four variants on `cfg.engine` (the parallel
+/// worker pool unless `--engine seq` asks for the oracle) across the
+/// `sweep` layouts, each predicted with `cfg.hw`. `steps` wall-clock
+/// samples are taken per point (median reported); one extra warmup
+/// iteration primes the pool's workspaces.
+pub fn model_validation(cfg: &HarnessConfig, ws: &mut Workspace, steps: usize) -> ValidationReport {
+    let steps = steps.max(3);
+    let mut points = Vec::new();
+    let mut table = Table::new(
+        format!(
+            "Model validation — {} engine wall-clock vs eqs. (5)–(18), hw={}, scale 1/{}, {} samples/point",
+            cfg.engine.name(), cfg.hw_label, cfg.scale_div, steps
+        ),
+        &[
+            "Problem", "n", "Topology", "BLOCKSIZE", "Variant", "measured/iter",
+            "predicted/iter", "meas/pred",
+        ],
+    );
+    for (tp, nodes, tpn, bs) in sweep(cfg) {
+        let m = ws.matrix(tp, cfg.scale_div, Ordering::Natural);
+        let threads = nodes * tpn;
+        let bs = bs.min(m.n).max(1);
+        let layout = Layout::new(m.n, bs, threads);
+        let topo = Topology::new(nodes, tpn);
+        let analysis = Analysis::build(&m.j, m.r_nz, layout, topo, cfg.cache_window());
+        // All `threads` OS threads contend for this host's memory system
+        // simultaneously, so the per-thread bandwidth share is taken at the
+        // *total* engine thread count on the saturation curve.
+        let hw_run = cfg.hw.with_threads_per_node(threads);
+        let inp = SpmvInputs { layout, topo, hw: hw_run, r_nz: m.r_nz, analysis: &analysis };
+        let x0 = m.initial_vector(0xCA11B);
+        for variant in Variant::ALL {
+            let mut engine = SpmvEngine::new(cfg.engine);
+            let mut state = SpmvState::new(&m, bs, threads, &x0);
+            engine.run(variant, &mut state, Some(&analysis)); // warmup
+            state.swap_xy();
+            let mut samples = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                let t0 = Instant::now();
+                engine.run(variant, &mut state, Some(&analysis));
+                samples.push(t0.elapsed().as_secs_f64());
+                state.swap_xy();
+            }
+            let measured = Stats::from(&samples).p50;
+            let predicted = model::predict(variant, &inp).total;
+            let point = ValidationPoint {
+                problem: tp,
+                n: m.n,
+                nodes,
+                threads_per_node: tpn,
+                block_size: bs,
+                variant,
+                measured,
+                predicted,
+            };
+            table.row(vec![
+                tp.name().to_string(),
+                int(m.n),
+                format!("{nodes}x{tpn}"),
+                bs.to_string(),
+                variant.name().to_string(),
+                fmt::secs(measured),
+                fmt::secs(predicted),
+                format!("{:.2}x", point.ratio()),
+            ]);
+            points.push(point);
+        }
+    }
+    // Per-variant accuracy summary (geometric mean across layouts).
+    let mut accuracy = Value::obj();
+    for variant in Variant::ALL {
+        let g = geomean_for(&points, variant);
+        table.row(vec![
+            "accuracy".to_string(),
+            String::new(),
+            String::new(),
+            String::new(),
+            variant.name().to_string(),
+            String::new(),
+            String::new(),
+            format!("{g:.2}x"),
+        ]);
+        accuracy.set(variant.name(), Value::Num(g));
+    }
+
+    let json = report_json(cfg, steps, &points, &accuracy);
+    ValidationReport { points, table, json }
+}
+
+fn report_json(
+    cfg: &HarnessConfig,
+    steps: usize,
+    points: &[ValidationPoint],
+    accuracy: &Value,
+) -> Value {
+    let mut results = Vec::with_capacity(points.len());
+    for p in points {
+        let mut o = Value::obj();
+        o.set("problem", Value::Str(p.problem.name().to_string()));
+        o.set("n", Value::Num(p.n as f64));
+        o.set("nodes", Value::Num(p.nodes as f64));
+        o.set("threads_per_node", Value::Num(p.threads_per_node as f64));
+        o.set("block_size", Value::Num(p.block_size as f64));
+        o.set("variant", Value::Str(p.variant.name().to_string()));
+        o.set("measured_s_per_iter", Value::Num(p.measured));
+        o.set("predicted_s_per_iter", Value::Num(p.predicted));
+        o.set("ratio", Value::Num(p.ratio()));
+        results.push(o);
+    }
+    let mut root = Value::obj();
+    root.set("bench", Value::Str("validate/model".to_string()));
+    root.set("engine", Value::Str(cfg.engine.name().to_string()));
+    root.set("hw_source", Value::Str(cfg.hw_label.clone()));
+    root.set("hw", cfg.hw.to_json());
+    root.set("scale_div", Value::Num(cfg.scale_div as f64));
+    root.set("samples_per_point", Value::Num(steps as f64));
+    root.set("results", Value::Arr(results));
+    root.set("accuracy_geomean", accuracy.clone());
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean([2.0, 0.5].into_iter()) - 1.0).abs() < 1e-12);
+        assert!((geomean([4.0].into_iter()) - 4.0).abs() < 1e-12);
+        assert!(geomean([f64::NAN].into_iter()).is_nan());
+        assert!(geomean(std::iter::empty()).is_nan());
+    }
+
+    #[test]
+    fn sweep_respects_host_and_scale() {
+        let cfg = HarnessConfig::test_sized();
+        let configs = sweep(&cfg);
+        assert!(!configs.is_empty());
+        let host = crate::microbench::host_threads();
+        for (_, nodes, tpn, bs) in configs {
+            let threads = nodes * tpn;
+            assert!(threads.is_power_of_two() && threads <= 8, "{nodes}x{tpn}");
+            assert!(threads <= host || host < 2, "{nodes}x{tpn} on {host} cores");
+            assert!(bs >= 1);
+        }
+    }
+}

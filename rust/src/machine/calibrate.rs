@@ -1,0 +1,296 @@
+//! Host calibration: measure the four hardware characteristic parameters on
+//! the machine actually running the binary.
+//!
+//! The paper's modeling philosophy (§5.2.2) is that a target system is
+//! represented by four easily obtainable numbers. [`HwParams::abel`] carries
+//! the paper's measured Abel values; [`Calibration`] measures the same four
+//! numbers with the real-host microbenchmarks in [`crate::microbench`], so
+//! the eqs. (5)–(18) models can predict the wall-clock behaviour of the
+//! parallel engine on *this* machine (`repro calibrate` / `repro validate`).
+//!
+//! A calibration is measured once and persisted as JSON (`util::json`), so
+//! later runs can load it with `--hw file:<path>` instead of re-measuring.
+
+use super::HwParams;
+use crate::microbench;
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Version tag written into calibration files; bump when the schema changes.
+const CALIBRATION_VERSION: f64 = 1.0;
+
+/// A measured host calibration: the raw microbenchmark readings plus the
+/// [`HwParams`] derived from them. τ, the cache line size and the thread
+/// count live only inside `hw` (they are the measurement, not derived), so
+/// a loaded file cannot carry two disagreeing copies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    /// The derived model parameters (what every consumer wants).
+    pub hw: HwParams,
+    /// Aggregate all-thread STREAM triad bandwidth, bytes/s.
+    pub stream_node: f64,
+    /// Single-thread STREAM triad bandwidth, bytes/s (the raw reading
+    /// behind the clamped `hw.w_node_single`).
+    pub stream_single: f64,
+    /// Cross-thread contiguous-copy bandwidth, bytes/s (ping-pong analog).
+    pub memcpy_cross: f64,
+    /// Whether the quick (reduced working set) profile was used.
+    pub quick: bool,
+}
+
+impl Calibration {
+    /// Run all four host microbenchmarks and derive an [`HwParams`].
+    ///
+    /// `quick` trims repetitions and sample counts (several × faster,
+    /// slightly noisier) while keeping every working set LLC-defeating —
+    /// the profile CI and the test suite use. A full measurement takes a
+    /// few seconds on an idle machine.
+    pub fn measure(quick: bool) -> Calibration {
+        let threads = microbench::host_threads();
+        // Bandwidth/latency working sets must defeat the LLC, not just the
+        // L2, in BOTH profiles — an LLC-resident pass reports cache
+        // bandwidth as W and skews every prediction derived from the
+        // calibration. STREAM moves 3 × 16 MiB per thread, memcpy 32/64 MiB,
+        // and the τ arena (slots × 128 B) is 16/32 MiB; "quick" economizes
+        // on repetitions and the τ/cache-line sample counts instead.
+        let (stream_elems, memcpy_bytes, tau_slots, tau_ops, line_buf) = if quick {
+            (1 << 21, 32 << 20, 1 << 17, 50_000, 4 << 20)
+        } else {
+            (1 << 21, 64 << 20, 1 << 18, 400_000, 32 << 20)
+        };
+        let stream_node = microbench::stream_host_threads(threads, stream_elems).bandwidth();
+        let stream_single = microbench::stream_host_threads(1, stream_elems).bandwidth();
+        let memcpy_cross = microbench::memcpy_cross_thread(memcpy_bytes, 4).bandwidth();
+        let tau = microbench::tau_cross_thread(tau_slots, tau_ops);
+        let cache_line = microbench::cache_line_host(line_buf);
+        let hw = HwParams {
+            w_thread_private: stream_node / threads as f64,
+            w_node_remote: memcpy_cross,
+            tau,
+            cache_line,
+            threads_per_node: threads,
+            // A 1-thread triad can exceed the per-thread share but never the
+            // aggregate; clamp against measurement noise.
+            w_node_single: stream_single.min(stream_node),
+        };
+        Calibration { hw, stream_node, stream_single, memcpy_cross, quick }
+    }
+
+    /// Serialize to the JSON document `save`/`load` exchange.
+    pub fn to_json(&self) -> Value {
+        let mut root = Value::obj();
+        root.set("version", Value::Num(CALIBRATION_VERSION));
+        root.set("hw", self.hw.to_json());
+        root.set("stream_node", Value::Num(self.stream_node));
+        root.set("stream_single", Value::Num(self.stream_single));
+        root.set("memcpy_cross", Value::Num(self.memcpy_cross));
+        root.set("quick", Value::Bool(self.quick));
+        root
+    }
+
+    /// Deserialize from the [`Calibration::to_json`] document.
+    pub fn from_json(v: &Value) -> Result<Calibration> {
+        let num = |obj: &Value, key: &str| -> Result<f64> {
+            obj.get(key)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| anyhow!("calibration JSON missing numeric field '{key}'"))
+        };
+        let version = num(v, "version")?;
+        if version != CALIBRATION_VERSION {
+            bail!("calibration file version {version} (this build reads {CALIBRATION_VERSION})");
+        }
+        let hw_obj = v.get("hw").ok_or_else(|| anyhow!("calibration JSON missing 'hw'"))?;
+        let hw = HwParams::from_json(hw_obj)?;
+        Ok(Calibration {
+            hw,
+            stream_node: num(v, "stream_node")?,
+            stream_single: num(v, "stream_single")?,
+            memcpy_cross: num(v, "memcpy_cross")?,
+            quick: matches!(v.get("quick"), Some(Value::Bool(true))),
+        })
+    }
+
+    /// Write the calibration to `path` as pretty-printed JSON.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+            .with_context(|| format!("writing calibration to {}", path.display()))
+    }
+
+    /// Load a calibration previously written by [`Calibration::save`].
+    pub fn load(path: &Path) -> Result<Calibration> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading calibration from {}", path.display()))?;
+        let v = json::parse(&text)
+            .with_context(|| format!("parsing calibration {}", path.display()))?;
+        Calibration::from_json(&v)
+    }
+}
+
+impl HwParams {
+    /// Measure this host's four characteristic parameters (quick profile).
+    /// Prefer `repro calibrate` + `--hw file:<path>` when the same
+    /// calibration should be reused across runs.
+    pub fn calibrate_host() -> HwParams {
+        Calibration::measure(true).hw
+    }
+
+    /// The single JSON shape for a parameter set — shared by calibration
+    /// files and the `BENCH_model.json` report, so the two cannot drift.
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("w_thread_private", Value::Num(self.w_thread_private));
+        o.set("w_node_remote", Value::Num(self.w_node_remote));
+        o.set("tau", Value::Num(self.tau));
+        o.set("cache_line", Value::Num(self.cache_line as f64));
+        o.set("threads_per_node", Value::Num(self.threads_per_node as f64));
+        o.set("w_node_single", Value::Num(self.w_node_single));
+        o
+    }
+
+    /// Inverse of [`HwParams::to_json`]; rejects non-positive parameters.
+    pub fn from_json(v: &Value) -> Result<HwParams> {
+        let num = |key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| anyhow!("hw JSON missing numeric field '{key}'"))
+        };
+        let hw = HwParams {
+            w_thread_private: num("w_thread_private")?,
+            w_node_remote: num("w_node_remote")?,
+            tau: num("tau")?,
+            cache_line: num("cache_line")? as usize,
+            threads_per_node: num("threads_per_node")? as usize,
+            w_node_single: num("w_node_single")?,
+        };
+        anyhow::ensure!(
+            hw.w_thread_private > 0.0
+                && hw.w_node_remote > 0.0
+                && hw.tau > 0.0
+                && hw.cache_line > 0
+                && hw.threads_per_node > 0
+                && hw.w_node_single > 0.0,
+            "hw JSON contains non-positive hardware parameters"
+        );
+        Ok(hw)
+    }
+}
+
+/// Where a run's [`HwParams`] come from: the paper's Abel constants, a fresh
+/// host calibration, or a saved calibration file. Parsed from the CLI
+/// `--hw abel|host|file:<path>` flag (and the `UPCSIM_HW` environment
+/// variable for the benches).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HwSource {
+    /// The paper's measured Abel-cluster constants (§6.2).
+    Abel,
+    /// Calibrate the running host now.
+    Host,
+    /// Load a calibration JSON written by `repro calibrate`.
+    File(PathBuf),
+}
+
+impl HwSource {
+    pub fn parse(s: &str) -> Result<HwSource> {
+        if let Some(path) = s.strip_prefix("file:") {
+            anyhow::ensure!(!path.is_empty(), "--hw file: needs a path");
+            return Ok(HwSource::File(PathBuf::from(path)));
+        }
+        match s.to_ascii_lowercase().as_str() {
+            "abel" => Ok(HwSource::Abel),
+            "host" => Ok(HwSource::Host),
+            _ => bail!("unknown hw source '{s}' (abel | host | file:<path>)"),
+        }
+    }
+
+    /// The benches read `UPCSIM_HW` (same grammar as `--hw`, default
+    /// `abel`) so a table/figure regeneration can run on either parameter
+    /// set without new flags in every bench binary.
+    pub fn from_env() -> Result<HwSource> {
+        match std::env::var("UPCSIM_HW") {
+            Ok(s) if !s.is_empty() => HwSource::parse(&s),
+            _ => Ok(HwSource::Abel),
+        }
+    }
+
+    /// Short label for table titles and JSON reports.
+    pub fn label(&self) -> String {
+        match self {
+            HwSource::Abel => "abel".to_string(),
+            HwSource::Host => "host".to_string(),
+            HwSource::File(p) => format!("file:{}", p.display()),
+        }
+    }
+
+    /// Produce the parameters. `quick` selects the reduced measurement
+    /// profile when the source is `Host`.
+    pub fn resolve(&self, quick: bool) -> Result<HwParams> {
+        match self {
+            HwSource::Abel => Ok(HwParams::abel()),
+            HwSource::Host => Ok(Calibration::measure(quick).hw),
+            HwSource::File(p) => Ok(Calibration::load(p)?.hw),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic() -> Calibration {
+        Calibration {
+            hw: HwParams {
+                w_thread_private: 3.25e9,
+                w_node_remote: 11.5e9,
+                tau: 8.25e-8,
+                cache_line: 128,
+                threads_per_node: 6,
+                w_node_single: 9.0e9,
+            },
+            stream_node: 19.5e9,
+            stream_single: 9.0e9,
+            memcpy_cross: 11.5e9,
+            quick: true,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_identical() {
+        let cal = synthetic();
+        let back = Calibration::from_json(&cal.to_json()).unwrap();
+        assert_eq!(cal, back);
+        // And through the textual form, exactly as save/load exchange it.
+        let text = cal.to_json().pretty();
+        let back2 = Calibration::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(cal.hw, back2.hw);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_documents() {
+        let mut v = synthetic().to_json();
+        v.set("version", Value::Num(99.0));
+        assert!(Calibration::from_json(&v).is_err());
+        let mut v = synthetic().to_json();
+        v.set("stream_node", Value::Str("fast".into()));
+        assert!(Calibration::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn hw_source_parses() {
+        assert_eq!(HwSource::parse("abel").unwrap(), HwSource::Abel);
+        assert_eq!(HwSource::parse("HOST").unwrap(), HwSource::Host);
+        assert_eq!(
+            HwSource::parse("file:cal.json").unwrap(),
+            HwSource::File(PathBuf::from("cal.json"))
+        );
+        assert!(HwSource::parse("file:").is_err());
+        assert!(HwSource::parse("cluster9").is_err());
+        assert_eq!(HwSource::parse("file:cal.json").unwrap().label(), "file:cal.json");
+    }
+
+    #[test]
+    fn abel_source_resolves_without_measuring() {
+        let hw = HwSource::Abel.resolve(true).unwrap();
+        assert_eq!(hw, HwParams::abel());
+    }
+}

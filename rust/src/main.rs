@@ -8,16 +8,25 @@
 //!   [--scale N]
 //!   [--iters K]` — regenerate paper tables/figures into `reports/`.
 //! * `repro microbench` — §6.2 hardware-constant recovery.
+//! * `repro calibrate [--quick] [--save PATH]` — measure this host's four
+//!   hardware characteristic parameters, save them as JSON.
 //! * `repro run [--variant v3] [--nodes N] [--tpn T] [--steps S]
 //!   [--backend native|pjrt] [--problem tp1|tp2|tp3] [--scale N]` —
 //!   end-to-end diffusion driver.
-//! * `repro validate` — numeric equivalence native ↔ PJRT artifacts.
+//! * `repro validate [model]` — measured (parallel engine wall-clock) vs
+//!   predicted (calibrated models) for all four variants.
+//! * `repro validate pjrt` — numeric equivalence native ↔ PJRT artifacts.
+//!
+//! Every model/simulator consumer takes `--hw abel|host|file:<path>` to
+//! select the hardware parameter set (paper constants, a fresh host
+//! calibration, or a saved calibration file).
 
 use anyhow::{anyhow, bail, Result};
 use upcsim::cli::Args;
 use upcsim::coordinator::{Backend, Problem, RunConfig, Runner};
 use upcsim::engine::Engine;
 use upcsim::harness::{self, HarnessConfig, Workspace};
+use upcsim::machine::{Calibration, HwParams, HwSource};
 use upcsim::mesh::{Ordering, TestProblem};
 use upcsim::spmv::Variant;
 use upcsim::util::fmt;
@@ -36,7 +45,28 @@ fn main() {
     }
 }
 
+/// Resolve `--hw abel|host|file:<path>` (and the `--quick` measurement
+/// profile) into concrete parameters plus a provenance label.
+fn resolve_hw(args: &Args, default: HwSource) -> Result<(HwParams, String)> {
+    let src = match args.str_flag("hw") {
+        None => default,
+        Some(s) => HwSource::parse(s)?,
+    };
+    let quick = args.bool_flag("quick");
+    if src == HwSource::Host {
+        eprintln!(
+            "[calibrating host hardware parameters ({} profile)...]",
+            if quick { "quick" } else { "full" }
+        );
+    }
+    Ok((src.resolve(quick)?, src.label()))
+}
+
 fn harness_config(args: &Args) -> Result<HarnessConfig> {
+    harness_config_with_hw(args, HwSource::Abel)
+}
+
+fn harness_config_with_hw(args: &Args, default_hw: HwSource) -> Result<HarnessConfig> {
     let mut cfg = HarnessConfig::default();
     cfg.scale_div = if args.bool_flag("full-scale") {
         1
@@ -45,6 +75,9 @@ fn harness_config(args: &Args) -> Result<HarnessConfig> {
     };
     cfg.iters = args.usize_flag("iters", 1000)?;
     cfg.engine = parse_engine(args)?;
+    let (hw, label) = resolve_hw(args, default_hw)?;
+    cfg.hw = hw;
+    cfg.hw_label = label;
     if let Some(dir) = args.str_flag("out") {
         cfg.out_dir = Some(dir.into());
     }
@@ -63,9 +96,14 @@ fn dispatch(args: &Args) -> Result<()> {
         "mesh" => cmd_mesh(args),
         "bench" => cmd_bench(args),
         "microbench" => cmd_microbench(args),
+        "calibrate" => cmd_calibrate(args),
         "run" => cmd_run(args),
         "heat" => cmd_heat(args),
-        "validate" => cmd_validate(args),
+        "validate" => match args.positional.first().map(|s| s.as_str()) {
+            None | Some("model") => cmd_validate_model(args),
+            Some("pjrt") => cmd_validate_pjrt(args),
+            Some(other) => bail!("unknown validate target '{other}' (model | pjrt)"),
+        },
         "" | "help" | "--help" => {
             print!("{HELP}");
             Ok(())
@@ -85,10 +123,17 @@ SUBCOMMANDS
               figure2, ablation-blocksize, ablation-ordering, ablation-tpn,
               microbench, all)
   microbench  §6.2 hardware-constant recovery on the simulated cluster
+  calibrate   measure THIS host's four hardware characteristic parameters
+              (--quick for the fast profile; --save PATH, default
+              calibration.json)
   run         end-to-end 3D diffusion driver (v^l = M v^{l-1})
   heat        §8 2D heat solver: real numerics + Table-5-style prediction
               (--m 512 --nprocs 4 --mprocs 4 --steps 50)
-  validate    numeric equivalence: native kernel vs PJRT artifacts
+  validate [model]  measured-vs-predicted: all four variants on the parallel
+              engine, wall-clock vs the calibrated eqs. (5)-(18) models
+              (--hw host by default; --steps S samples/point; emits
+              BENCH_model.json, --json PATH to move it)
+  validate pjrt     numeric equivalence: native kernel vs PJRT artifacts
 
 COMMON FLAGS
   --scale N         problem scale divisor (default 16; --full-scale for 1)
@@ -96,6 +141,10 @@ COMMON FLAGS
   --out DIR         report output directory (default reports/)
   --engine seq|par  execution engine for real data movement: sequential
                     oracle or one OS thread per UPC thread (default seq)
+  --hw SRC          hardware parameters for models/simulator: abel (paper
+                    constants, default), host (calibrate now), or
+                    file:<path> (a saved `repro calibrate` JSON)
+  --quick           use the fast, slightly noisier calibration profile
 
 RUN FLAGS
   --problem tp1|tp2|tp3|custom   workload (default tp1)
@@ -185,6 +234,79 @@ fn cmd_microbench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let quick = args.bool_flag("quick");
+    let save: std::path::PathBuf = args.str_flag("save").unwrap_or("calibration.json").into();
+    args.finish()?;
+    println!(
+        "# measuring host hardware characteristic parameters ({} profile)",
+        if quick { "quick" } else { "full" }
+    );
+    let t0 = std::time::Instant::now();
+    let cal = Calibration::measure(quick);
+    let threads = cal.hw.threads_per_node;
+    let mut t = fmt::Table::new(
+        format!("host calibration — {threads} hardware threads"),
+        &["Parameter", "Value", "Microbenchmark"],
+    );
+    t.row(vec![
+        "W_thread_private".into(),
+        fmt::rate(cal.hw.w_thread_private),
+        format!("STREAM triad x{threads} (aggregate {})", fmt::rate(cal.stream_node)),
+    ]);
+    t.row(vec![
+        "W_node(1)".into(),
+        fmt::rate(cal.hw.w_node_single),
+        "STREAM triad, 1 thread (saturation-curve anchor)".into(),
+    ]);
+    t.row(vec![
+        "W_node_remote".into(),
+        fmt::rate(cal.hw.w_node_remote),
+        "cross-thread contiguous memcpy (ping-pong analog)".into(),
+    ]);
+    t.row(vec![
+        "tau".into(),
+        fmt::secs(cal.hw.tau),
+        "random individual cross-thread access (Listing-6 analog)".into(),
+    ]);
+    t.row(vec![
+        "cache line".into(),
+        format!("{} B", cal.hw.cache_line),
+        "strided-access knee".into(),
+    ]);
+    println!("{}", t.render());
+    cal.save(&save)?;
+    println!("[calibration took {}]", fmt::secs(t0.elapsed().as_secs_f64()));
+    println!("[saved {} — reuse it with --hw file:{}]", save.display(), save.display());
+    Ok(())
+}
+
+fn cmd_validate_model(args: &Args) -> Result<()> {
+    // Host parameters by default: validating the paper's Abel constants
+    // against this machine's wall-clock would be comparing different
+    // hardware. Likewise the engine defaults to the parallel pool — the
+    // models predict concurrent execution — but `--engine seq` times the
+    // sequential oracle for comparison.
+    let mut cfg = harness_config_with_hw(args, HwSource::Host)?;
+    if args.str_flag("engine").is_none() {
+        cfg.engine = Engine::Parallel;
+    }
+    let steps = args.usize_flag("steps", 12)?;
+    let json_path: std::path::PathBuf = args.str_flag("json").unwrap_or("BENCH_model.json").into();
+    args.finish()?;
+    let mut ws = Workspace::new();
+    let report = harness::model_validation(&cfg, &mut ws, steps);
+    harness::emit(&cfg, "validate_model", &report.table);
+    std::fs::write(&json_path, report.json.pretty())
+        .map_err(|e| anyhow!("cannot write {}: {e}", json_path.display()))?;
+    println!("[model accuracy saved to {}]", json_path.display());
+    for variant in Variant::ALL {
+        let g = report.geomean_ratio(variant);
+        println!("{:<9} measured/predicted geomean = {g:.2}x", variant.name());
+    }
+    Ok(())
+}
+
 fn parse_problem(args: &Args) -> Result<Problem> {
     match args.str_flag("problem").unwrap_or("tp1") {
         "tp1" => Ok(Problem::Tp(TestProblem::Tp1)),
@@ -218,6 +340,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         other => bail!("unknown backend '{other}'"),
     };
     cfg.engine = parse_engine(args)?;
+    let (hw, hw_label) = resolve_hw(args, HwSource::Abel)?;
+    cfg.hw = hw;
     args.finish()?;
 
     // The PJRT backend always runs the sequential oracle path; report the
@@ -230,13 +354,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         eprintln!("note: --backend pjrt runs on the sequential engine; --engine par is ignored");
     }
     println!(
-        "# end-to-end diffusion driver: {} on {:?}, {} nodes x {} threads, backend {:?}, engine {}",
+        "# end-to-end diffusion driver: {} on {:?}, {} nodes x {} threads, backend {:?}, engine {}, hw {}",
         cfg.variant.name(),
         cfg.problem,
         cfg.nodes,
         cfg.threads_per_node,
         cfg.backend,
-        effective_engine.name()
+        effective_engine.name(),
+        hw_label
     );
     let iters = cfg.iters;
     let steps = cfg.exec_steps;
@@ -261,7 +386,6 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_heat(args: &Args) -> Result<()> {
     use upcsim::heat2d::{seq_reference_step, simulate_heat_step, Heat2dSolver};
-    use upcsim::machine::HwParams;
     use upcsim::model::{predict_heat2d, HeatGrid};
     use upcsim::pgas::Topology;
     use upcsim::sim::SimParams;
@@ -271,11 +395,14 @@ fn cmd_heat(args: &Args) -> Result<()> {
     let np = args.usize_flag("nprocs", 4)?;
     let steps = args.usize_flag("steps", 50)?;
     let engine = parse_engine(args)?;
+    let (hw, hw_label) = resolve_hw(args, HwSource::Abel)?;
     args.finish()?;
     let grid = HeatGrid::new(mg, ng, mp, np);
     let threads = grid.threads();
     let topo = Topology::new((threads / 16).max(1), threads.min(16));
-    let hw = HwParams::abel();
+    // Rescale the per-thread bandwidth share to the threads actually
+    // sharing a node (§5.1), as the SpMV consumers do.
+    let hw = hw.with_threads_per_node(threads.min(16));
 
     // Real numerics vs the sequential stencil.
     let mut rng = upcsim::util::Rng::new(7);
@@ -301,7 +428,7 @@ fn cmd_heat(args: &Args) -> Result<()> {
     let sim = simulate_heat_step(&grid, &topo, &hw, &SimParams::from_hw(&hw));
     let model = predict_heat2d(&grid, &topo, &hw);
     println!(
-        "per 1000 steps on the simulated cluster: T_halo {} (model {}), T_comp {} (model {})",
+        "per 1000 steps on the simulated cluster (hw {hw_label}): T_halo {} (model {}), T_comp {} (model {})",
         fmt::secs(sim.t_halo * 1000.0),
         fmt::secs(model.t_halo * 1000.0),
         fmt::secs(sim.t_comp * 1000.0),
@@ -310,7 +437,7 @@ fn cmd_heat(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_validate(args: &Args) -> Result<()> {
+fn cmd_validate_pjrt(args: &Args) -> Result<()> {
     let scale = args.usize_flag("scale", 256)?;
     args.finish()?;
     let mut cfg = RunConfig::default_for(Problem::Tp(TestProblem::Tp1));

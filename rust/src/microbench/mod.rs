@@ -8,13 +8,24 @@
 //! * [`pingpong_sim`] — inter-node contiguous transfers → `W_node_remote`,
 //! * [`tau_sim`] — the Listing-6 random-remote-read benchmark → `τ`.
 //!
-//! [`stream_host`] additionally measures the *real host* machine's triad
-//! bandwidth; the §Perf pass uses it as the roofline for the native SpMV
-//! kernel (EXPERIMENTS.md §Perf).
+//! The `host` submodule adds *real host* counterparts of the same four
+//! probes — [`stream_host`] / [`stream_host_threads`] (triad bandwidth,
+//! also the §Perf roofline anchor), [`memcpy_cross_thread`] (contiguous
+//! cross-thread bandwidth, the ping-pong analog), [`tau_cross_thread`]
+//! (random individual cross-thread access latency, the Listing-6 analog)
+//! and [`cache_line_host`] (strided-access knee) — which
+//! [`crate::machine::Calibration`] composes into an [`HwParams`] for the
+//! machine actually running the binary.
+
+mod host;
+
+pub use host::{
+    cache_line_host, host_threads, memcpy_cross_thread, stream_host, stream_host_threads,
+    tau_cross_thread,
+};
 
 use crate::machine::HwParams;
 use crate::sim::SimParams;
-use std::time::Instant;
 
 /// Result of a bandwidth-style microbenchmark.
 #[derive(Debug, Clone, Copy)]
@@ -55,40 +66,6 @@ pub fn pingpong_sim(hw: &HwParams, bytes: usize, reps: usize) -> BandwidthResult
 pub fn tau_sim(params: &SimParams, concurrent: usize, ops: usize) -> f64 {
     let per_thread = ops as f64 * params.tau_eff(concurrent);
     per_thread / ops as f64
-}
-
-/// Real host STREAM triad (`a[i] = b[i] + s·c[i]`) over all host cores.
-/// Used as the roofline anchor for the native hot path.
-pub fn stream_host(elems_per_thread: usize) -> BandwidthResult {
-    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-    let reps = 5usize;
-    // Allocate and fault in all buffers OUTSIDE the timed region.
-    let mut buffers: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = (0..threads)
-        .map(|_| {
-            (
-                vec![0.0f64; elems_per_thread],
-                vec![1.0f64; elems_per_thread],
-                vec![2.0f64; elems_per_thread],
-            )
-        })
-        .collect();
-    let mut best = f64::INFINITY;
-    for _ in 0..reps {
-        let start = Instant::now();
-        std::thread::scope(|scope| {
-            for (a, b, c) in buffers.iter_mut() {
-                scope.spawn(move || {
-                    for ((ai, bi), ci) in a.iter_mut().zip(b.iter()).zip(c.iter()) {
-                        *ai = *bi + 3.0 * *ci;
-                    }
-                    std::hint::black_box(&a[0]);
-                });
-            }
-        });
-        best = best.min(start.elapsed().as_secs_f64());
-    }
-    // Triad traffic: 3 arrays × 8 bytes each (2 loads + 1 store).
-    BandwidthResult { bytes: (elems_per_thread * threads * 3 * 8) as f64, seconds: best }
 }
 
 #[cfg(test)]

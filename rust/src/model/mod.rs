@@ -15,3 +15,18 @@ pub use spmv::{
     predict_naive, predict_v1, predict_v2, predict_v3, t_comp_thread, SpmvInputs, SpmvPrediction,
     V3ThreadBreakdown,
 };
+
+use crate::machine::NaiveOverheads;
+use crate::spmv::Variant;
+
+/// Dispatch to the per-variant SpMV model. The naive variant uses the
+/// calibrated `upc_forall` + pointer-to-shared overheads (the paper measures
+/// but does not model it; see [`crate::machine::NaiveOverheads`]).
+pub fn predict(variant: Variant, inp: &SpmvInputs) -> SpmvPrediction {
+    match variant {
+        Variant::Naive => predict_naive(inp, &NaiveOverheads::calibrated()),
+        Variant::V1 => predict_v1(inp),
+        Variant::V2 => predict_v2(inp),
+        Variant::V3 => predict_v3(inp),
+    }
+}

@@ -26,7 +26,9 @@ impl Stats {
             0.0
         };
         let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp is NaN-safe: a stray NaN sample (e.g. a failed wall-clock
+        // probe) sorts last instead of panicking the whole harness.
+        sorted.sort_by(f64::total_cmp);
         let p50 = if n % 2 == 1 {
             sorted[n / 2]
         } else {
@@ -48,13 +50,16 @@ impl Stats {
     }
 }
 
-/// Weighted max-abs relative error between two series (used when comparing
-/// model predictions against simulated measurements).
+/// Max-abs relative error between two series (used when comparing model
+/// predictions against simulated measurements). Pairs where either side is
+/// NaN are skipped rather than propagated — one bad sample must not poison
+/// the whole comparison.
 pub fn max_rel_err(actual: &[f64], predicted: &[f64]) -> f64 {
     assert_eq!(actual.len(), predicted.len());
     actual
         .iter()
         .zip(predicted)
+        .filter(|(a, p)| !a.is_nan() && !p.is_nan())
         .map(|(a, p)| if *a == 0.0 { 0.0 } else { ((a - p) / a).abs() })
         .fold(0.0, f64::max)
 }
@@ -92,5 +97,23 @@ mod tests {
     #[test]
     fn rel_err() {
         assert!((max_rel_err(&[2.0, 4.0], &[1.0, 4.4]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_survive_nan_samples() {
+        // Regression: the old partial_cmp().unwrap() sort panicked here.
+        let s = Stats::from(&[3.0, f64::NAN, 1.0, 2.0]);
+        assert_eq!(s.n, 4);
+        // total_cmp sorts NaN last, so min and p50 stay finite.
+        assert_eq!(s.min, 1.0);
+        assert!(s.p50.is_finite());
+    }
+
+    #[test]
+    fn rel_err_skips_nan_pairs() {
+        let e = max_rel_err(&[2.0, f64::NAN, 4.0], &[1.0, 9.9, f64::NAN]);
+        assert!((e - 0.5).abs() < 1e-12, "{e}");
+        // All-NaN input: nothing to compare, error is zero, not NaN.
+        assert_eq!(max_rel_err(&[f64::NAN], &[f64::NAN]), 0.0);
     }
 }

@@ -1,0 +1,94 @@
+//! Integration tests for the host calibration + model-validation pipeline
+//! (`repro calibrate` / `repro validate`).
+
+use upcsim::harness::{self, HarnessConfig, Workspace};
+use upcsim::machine::{Calibration, HwParams, HwSource};
+use upcsim::spmv::Variant;
+
+/// A deterministic host-like parameter set, so the validation test does not
+/// depend on actually measuring the (possibly noisy, debug-built) test host.
+fn synthetic_host_hw() -> HwParams {
+    HwParams {
+        w_thread_private: 4.0e9,
+        w_node_remote: 8.0e9,
+        tau: 1.0e-7,
+        cache_line: 64,
+        threads_per_node: 8,
+        w_node_single: 6.0e9,
+    }
+}
+
+#[test]
+fn calibration_measures_finite_positive_values() {
+    // Quick profile: must stay cheap enough for debug-build test runs.
+    let cal = Calibration::measure(true);
+    for (name, v) in [
+        ("w_thread_private", cal.hw.w_thread_private),
+        ("w_node_remote", cal.hw.w_node_remote),
+        ("tau", cal.hw.tau),
+        ("w_node_single", cal.hw.w_node_single),
+        ("stream_node", cal.stream_node),
+        ("stream_single", cal.stream_single),
+        ("memcpy_cross", cal.memcpy_cross),
+    ] {
+        assert!(v.is_finite() && v > 0.0, "{name} = {v}");
+    }
+    assert!(cal.hw.cache_line.is_power_of_two(), "{}", cal.hw.cache_line);
+    assert!((8..=1024).contains(&cal.hw.cache_line), "{}", cal.hw.cache_line);
+    assert!(cal.hw.threads_per_node >= 1);
+    // The single-thread point never exceeds the aggregate (clamped).
+    assert!(cal.hw.w_node_single <= cal.stream_node * (1.0 + 1e-12));
+    assert!(cal.quick);
+}
+
+#[test]
+fn calibration_json_roundtrip_through_file() {
+    let cal = Calibration::measure(true);
+    let path = std::env::temp_dir().join(format!("upcsim_cal_{}.json", std::process::id()));
+    cal.save(&path).expect("save calibration");
+    let loaded = Calibration::load(&path).expect("load calibration");
+    // The JSON emitter prints floats with Rust's shortest-roundtrip
+    // formatting, so the reloaded HwParams must be *identical*.
+    assert_eq!(cal.hw, loaded.hw);
+    assert_eq!(cal, loaded);
+    // And the file is what `--hw file:<path>` consumes.
+    let via_source = HwSource::File(path.clone()).resolve(true).expect("resolve file source");
+    assert_eq!(via_source, cal.hw);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn model_validation_tiny_mesh_covers_all_variants() {
+    let mut cfg = HarnessConfig::test_sized();
+    cfg.scale_div = 2048; // a few thousand rows: fast even in debug builds
+    cfg.hw = synthetic_host_hw();
+    cfg.hw_label = "synthetic".to_string();
+    let mut ws = Workspace::new();
+    let report = harness::model_validation(&cfg, &mut ws, 3);
+    assert!(!report.points.is_empty());
+    for variant in Variant::ALL {
+        let points: Vec<_> = report.points.iter().filter(|p| p.variant == variant).collect();
+        assert!(!points.is_empty(), "{} missing from the sweep", variant.name());
+        for p in &points {
+            assert!(p.measured.is_finite() && p.measured > 0.0, "{}", variant.name());
+            assert!(p.predicted.is_finite() && p.predicted > 0.0, "{}", variant.name());
+            assert!(p.ratio().is_finite() && p.ratio() > 0.0, "{}", variant.name());
+        }
+        let g = report.geomean_ratio(variant);
+        assert!(g.is_finite() && g > 0.0, "{}: geomean {g}", variant.name());
+    }
+    // The BENCH_model.json document carries one entry per point plus the
+    // per-variant accuracy block.
+    let json = &report.json;
+    assert_eq!(json.get("bench").unwrap().as_str().unwrap(), "validate/model");
+    assert_eq!(json.get("hw_source").unwrap().as_str().unwrap(), "synthetic");
+    let results = json.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(results.len(), report.points.len());
+    let acc = json.get("accuracy_geomean").unwrap();
+    for variant in Variant::ALL {
+        let g = acc.get(variant.name()).and_then(|v| v.as_f64()).unwrap();
+        assert!(g.is_finite() && g > 0.0, "{}: {g}", variant.name());
+    }
+    // The table mirrors the points (plus 4 accuracy summary rows).
+    assert_eq!(report.table.rows.len(), report.points.len() + 4);
+}
