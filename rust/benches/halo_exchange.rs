@@ -1,0 +1,279 @@
+//! Criterion-lite bench: per-step halo-exchange cost of the grid workloads
+//! on the unified exchange runtime, plus the spawn-per-step → persistent
+//! pool comparison.
+//!
+//! Emits `BENCH_halo.json` at the repo root:
+//!
+//! * per-step medians for heat-2D and the 3D stencil on both engines;
+//! * a legacy heat-2D step (the seed implementation: per-step `Vec` strip
+//!   allocations + one `std::thread::scope` spawn per step) vs the
+//!   pool-based solver — `speedup_pool_vs_spawn` is the headline number;
+//! * the raw dispatch microbenchmark: `thread::scope` spawn/join of N no-op
+//!   workers vs one no-op pool dispatch at the same width.
+
+use upcsim::benchlib::{BenchConfig, Bencher};
+use upcsim::engine::{Engine, WorkerPool};
+use upcsim::heat2d::Heat2dSolver;
+use upcsim::model::HeatGrid;
+use upcsim::stencil3d::{Stencil3dGrid, Stencil3dSolver};
+use upcsim::util::json::Value;
+use upcsim::util::Rng;
+
+/// The seed implementation of the parallel heat-2D step: stage every
+/// boundary strip into freshly allocated `Vec`s, then spawn one scoped OS
+/// thread per grid thread — per step. Kept here as the bench baseline the
+/// persistent runtime is measured against.
+struct LegacySpawnHeat2d {
+    grid: HeatGrid,
+    phi: Vec<Vec<f64>>,
+    phin: Vec<Vec<f64>>,
+}
+
+impl LegacySpawnHeat2d {
+    fn new(grid: HeatGrid, global: &[f64]) -> LegacySpawnHeat2d {
+        let (m, n) = grid.subdomain();
+        let mut phi = Vec::with_capacity(grid.threads());
+        for t in 0..grid.threads() {
+            let (ip, kp) = grid.coords(t);
+            let (row0, col0) = (ip * (m - 2), kp * (n - 2));
+            let mut field = vec![0.0f64; m * n];
+            for i in 0..m {
+                for k in 0..n {
+                    let gi = row0 as isize + i as isize - 1;
+                    let gk = col0 as isize + k as isize - 1;
+                    if gi >= 0
+                        && (gi as usize) < grid.m_glob
+                        && gk >= 0
+                        && (gk as usize) < grid.n_glob
+                    {
+                        field[i * n + k] = global[gi as usize * grid.n_glob + gk as usize];
+                    }
+                }
+            }
+            phi.push(field);
+        }
+        let phin = phi.clone();
+        LegacySpawnHeat2d { grid, phi, phin }
+    }
+
+    fn step(&mut self) {
+        let grid = self.grid;
+        let (m, n) = grid.subdomain();
+        struct Strips {
+            col_first: Vec<f64>,
+            col_last: Vec<f64>,
+            row_first: Vec<f64>,
+            row_last: Vec<f64>,
+        }
+        let strips: Vec<Strips> = (0..grid.threads())
+            .map(|t| {
+                let phi = &self.phi[t];
+                Strips {
+                    col_first: (1..m - 1).map(|i| phi[i * n + 1]).collect(),
+                    col_last: (1..m - 1).map(|i| phi[i * n + n - 2]).collect(),
+                    row_first: phi[n + 1..n + n - 1].to_vec(),
+                    row_last: phi[(m - 2) * n + 1..(m - 2) * n + n - 1].to_vec(),
+                }
+            })
+            .collect();
+        let strips = &strips;
+        std::thread::scope(|s| {
+            for (t, (phi, phin)) in
+                self.phi.iter_mut().zip(self.phin.iter_mut()).enumerate()
+            {
+                s.spawn(move || {
+                    let (ip, kp) = grid.coords(t);
+                    if kp > 0 {
+                        let src = &strips[grid.rank(ip, kp - 1)].col_last;
+                        for (i, v) in src.iter().enumerate() {
+                            phi[(i + 1) * n] = *v;
+                        }
+                    }
+                    if kp < grid.nprocs - 1 {
+                        let src = &strips[grid.rank(ip, kp + 1)].col_first;
+                        for (i, v) in src.iter().enumerate() {
+                            phi[(i + 1) * n + n - 1] = *v;
+                        }
+                    }
+                    if ip > 0 {
+                        let src = &strips[grid.rank(ip - 1, kp)].row_last;
+                        phi[1..n - 1].copy_from_slice(src);
+                    }
+                    if ip < grid.mprocs - 1 {
+                        let src = &strips[grid.rank(ip + 1, kp)].row_first;
+                        phi[(m - 1) * n + 1..(m - 1) * n + n - 1].copy_from_slice(src);
+                    }
+                    // The 5-point Jacobi update + fixed-boundary copy-through.
+                    for i in 1..m - 1 {
+                        for k in 1..n - 1 {
+                            phin[i * n + k] = 0.25
+                                * (phi[(i - 1) * n + k]
+                                    + phi[(i + 1) * n + k]
+                                    + phi[i * n + k - 1]
+                                    + phi[i * n + k + 1]);
+                        }
+                    }
+                    if ip == 0 {
+                        for k in 0..n {
+                            phin[n + k] = phi[n + k];
+                        }
+                    }
+                    if ip == grid.mprocs - 1 {
+                        for k in 0..n {
+                            phin[(m - 2) * n + k] = phi[(m - 2) * n + k];
+                        }
+                    }
+                    if kp == 0 {
+                        for i in 0..m {
+                            phin[i * n + 1] = phi[i * n + 1];
+                        }
+                    }
+                    if kp == grid.nprocs - 1 {
+                        for i in 0..m {
+                            phin[i * n + n - 2] = phi[i * n + n - 2];
+                        }
+                    }
+                });
+            }
+        });
+        std::mem::swap(&mut self.phi, &mut self.phin);
+    }
+}
+
+fn main() {
+    let mut b = Bencher::from_args(BenchConfig::default());
+    let mut entries: Vec<(String, f64)> = Vec::new();
+    let record = |entries: &mut Vec<(String, f64)>, name: &str, p50: Option<f64>| {
+        if let Some(p50) = p50 {
+            entries.push((name.to_string(), p50));
+        }
+    };
+
+    // --- heat-2D: per-step medians on both engines + the legacy baseline --
+    let (mg, ng, mp, np) = (384usize, 384usize, 2usize, 2usize);
+    let grid = HeatGrid::new(mg, ng, mp, np);
+    let mut rng = Rng::new(42);
+    let f0: Vec<f64> = (0..mg * ng).map(|_| rng.f64_in(0.0, 100.0)).collect();
+
+    for engine in Engine::ALL {
+        let mut solver = Heat2dSolver::new(grid, &f0);
+        solver.step_with(engine); // warmup: compiles nothing, spawns the pool
+        let name = format!("heat2d/{}/{}x{}", engine.name(), mg, ng);
+        let r = b.bench(&name, || {
+            solver.step_with(engine);
+            std::hint::black_box(&solver.inter_thread_bytes);
+        });
+        record(&mut entries, &name, r.map(|r| r.time.p50));
+    }
+    {
+        let mut legacy = LegacySpawnHeat2d::new(grid, &f0);
+        legacy.step();
+        let name = format!("heat2d/spawn-per-step/{mg}x{ng}");
+        let r = b.bench(&name, || {
+            legacy.step();
+            std::hint::black_box(&legacy.phi);
+        });
+        record(&mut entries, &name, r.map(|r| r.time.p50));
+        // Sanity: the legacy baseline and the runtime solver agree bitwise.
+        let mut a = LegacySpawnHeat2d::new(grid, &f0);
+        let mut c = Heat2dSolver::new(grid, &f0);
+        for _ in 0..3 {
+            a.step();
+            c.step_with(Engine::Parallel);
+        }
+        let ga = {
+            let (m, n) = grid.subdomain();
+            let mut out = vec![0.0f64; mg * ng];
+            for t in 0..grid.threads() {
+                let (ip, kp) = grid.coords(t);
+                let (row0, col0) = (ip * (m - 2), kp * (n - 2));
+                for i in 1..m - 1 {
+                    for k in 1..n - 1 {
+                        out[(row0 + i - 1) * ng + (col0 + k - 1)] = a.phi[t][i * n + k];
+                    }
+                }
+            }
+            out
+        };
+        let gc = c.to_global();
+        assert!(
+            ga.iter().zip(&gc).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "legacy and runtime heat2d solvers diverged"
+        );
+    }
+
+    // --- 3D stencil: per-step medians on both engines ---------------------
+    let (pg3, mg3, ng3) = (48usize, 48usize, 48usize);
+    let grid3 = Stencil3dGrid::new(pg3, mg3, ng3, 1, 2, 2);
+    let f03: Vec<f64> = (0..pg3 * mg3 * ng3).map(|_| rng.f64_in(0.0, 100.0)).collect();
+    for engine in Engine::ALL {
+        let mut solver = Stencil3dSolver::new(grid3, &f03);
+        solver.step_with(engine);
+        let name = format!("stencil3d/{}/{}^3", engine.name(), pg3);
+        let r = b.bench(&name, || {
+            solver.step_with(engine);
+            std::hint::black_box(&solver.inter_thread_bytes);
+        });
+        record(&mut entries, &name, r.map(|r| r.time.p50));
+    }
+
+    // --- dispatch overhead: thread::scope spawn vs pool wakeup ------------
+    let workers = grid.threads();
+    {
+        let name = format!("dispatch/scope-spawn/{workers}");
+        let r = b.bench(&name, || {
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(|| std::hint::black_box(0u64));
+                }
+            });
+        });
+        record(&mut entries, &name, r.map(|r| r.time.p50));
+        let mut pool = WorkerPool::new();
+        pool.run(workers, &|_| {});
+        let name = format!("dispatch/pool/{workers}");
+        let r = b.bench(&name, || {
+            pool.run(workers, &|ctx| {
+                std::hint::black_box(ctx.id);
+            });
+        });
+        record(&mut entries, &name, r.map(|r| r.time.p50));
+    }
+
+    // --- BENCH_halo.json --------------------------------------------------
+    let median_of = |needle: &str| {
+        entries.iter().find(|(n, _)| n.starts_with(needle)).map(|&(_, p50)| p50)
+    };
+    let mut root = Value::obj();
+    root.set("bench", Value::Str("halo_exchange".to_string()));
+    root.set("heat2d_grid", Value::Str(format!("{mg}x{ng} over {mp}x{np}")));
+    root.set("stencil3d_grid", Value::Str(format!("{pg3}x{mg3}x{ng3} over 1x2x2")));
+    let mut results = Vec::new();
+    for (name, p50) in &entries {
+        let mut o = Value::obj();
+        o.set("name", Value::Str(name.clone()));
+        o.set("median_ns_per_step", Value::Num((p50 * 1e9).round()));
+        results.push(o);
+    }
+    root.set("results", Value::Arr(results));
+    if let (Some(spawn), Some(pool)) =
+        (median_of("heat2d/spawn-per-step"), median_of("heat2d/parallel"))
+    {
+        root.set("speedup_pool_vs_spawn", Value::Num(spawn / pool));
+        println!("\nheat2d: persistent pool vs spawn-per-step = {:.2}x", spawn / pool);
+    }
+    if let (Some(spawn), Some(pool)) =
+        (median_of("dispatch/scope-spawn"), median_of("dispatch/pool"))
+    {
+        root.set("speedup_dispatch", Value::Num(spawn / pool));
+        println!("dispatch: pool wakeup vs scope spawn = {:.2}x", spawn / pool);
+    }
+    if !entries.is_empty() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_halo.json");
+        match std::fs::write(path, root.pretty()) {
+            Ok(()) => println!("[halo medians saved to {path}]"),
+            Err(e) => eprintln!("warning: cannot write {path}: {e}"),
+        }
+    }
+    b.finish();
+}

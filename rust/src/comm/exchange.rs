@@ -1,0 +1,576 @@
+//! Workload-agnostic exchange plans: the compiled-communication idea of
+//! §4.3.1 generalized past SpMV.
+//!
+//! The paper's methodology — analyze the access pattern once, compile it
+//! into condensed/consolidated bulk messages, execute those messages through
+//! per-thread local buffers every step — is "not limited to UPC" and, as §8
+//! shows with the heat solver, not limited to irregular gathers either.
+//! [`ExchangePlan`] captures that: one staging-arena contract with two
+//! compiled forms.
+//!
+//! * [`ExchangePlan::Gather`] — the irregular form ([`CommPlan`]): sorted
+//!   unique `x`-indices per `(sender, receiver)` pair, packed through
+//!   pre-translated owner-local offsets (SpMV UPCv3, Listing 5).
+//! * [`ExchangePlan::Strided`] — the regular form ([`StridedPlan`]): halo
+//!   strips/faces as `(offset, stride, count)` block-copy descriptors
+//!   compiled once from the grid geometry (heat-2D's Listing 7 pack /
+//!   `upc_memget` / unpack, and the 3D stencil's faces).
+//!
+//! Both forms share the arena contract of [`CommPlan`]: every message owns a
+//! `start..start+len` slot range in a flat staging buffer of
+//! `total_values()` doubles; ranges tile the arena receiver-major. Senders
+//! fill their ranges before the barrier, receivers drain them after — which
+//! is what lets one engine ([`crate::engine::WorkerPool`] +
+//! [`crate::engine::ArenaView`]) execute any compiled workload.
+
+use super::CommPlan;
+use crate::machine::SIZEOF_DOUBLE;
+use std::ops::Range;
+
+/// A strided 2-level block inside one thread's local field: element `(r, c)`
+/// lives at `offset + r·row_stride + c·col_stride`.
+///
+/// Covers every halo shape the grid workloads need: a contiguous row strip
+/// (`rows = 1, col_stride = 1`), a strided column (`cols = 1`), a 3D face
+/// plane (both levels strided).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StridedBlock {
+    pub offset: usize,
+    pub rows: usize,
+    pub row_stride: usize,
+    pub cols: usize,
+    pub col_stride: usize,
+}
+
+impl StridedBlock {
+    /// A contiguous strip of `cols` elements at `offset`.
+    pub fn row(offset: usize, cols: usize) -> StridedBlock {
+        StridedBlock { offset, rows: 1, row_stride: 0, cols, col_stride: 1 }
+    }
+
+    /// A single strided column: `rows` elements spaced `stride` apart.
+    pub fn column(offset: usize, rows: usize, stride: usize) -> StridedBlock {
+        StridedBlock { offset, rows, row_stride: stride, cols: 1, col_stride: 1 }
+    }
+
+    /// A general 2-level plane (3D faces).
+    pub fn plane(
+        offset: usize,
+        rows: usize,
+        row_stride: usize,
+        cols: usize,
+        col_stride: usize,
+    ) -> StridedBlock {
+        StridedBlock { offset, rows, row_stride, cols, col_stride }
+    }
+
+    /// Number of elements the block covers.
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Highest element index touched, plus one (for bounds validation).
+    pub fn end(&self) -> usize {
+        if self.is_empty() {
+            return self.offset;
+        }
+        self.offset + (self.rows - 1) * self.row_stride + (self.cols - 1) * self.col_stride + 1
+    }
+
+    /// Gather this block from `field` into `out` (the pack side of
+    /// Listing 7). `out.len()` must equal `self.len()`.
+    pub fn gather(&self, field: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.len());
+        if self.col_stride == 1 {
+            // Row chunks are contiguous — the `upc_memget` fast path.
+            for (r, dst) in out.chunks_exact_mut(self.cols).enumerate() {
+                let base = self.offset + r * self.row_stride;
+                dst.copy_from_slice(&field[base..base + self.cols]);
+            }
+        } else {
+            let mut k = 0;
+            for r in 0..self.rows {
+                let base = self.offset + r * self.row_stride;
+                for c in 0..self.cols {
+                    out[k] = field[base + c * self.col_stride];
+                    k += 1;
+                }
+            }
+        }
+    }
+
+    /// Scatter `vals` into this block of `field` (the unpack side).
+    pub fn scatter(&self, vals: &[f64], field: &mut [f64]) {
+        debug_assert_eq!(vals.len(), self.len());
+        if self.col_stride == 1 {
+            for (r, src) in vals.chunks_exact(self.cols).enumerate() {
+                let base = self.offset + r * self.row_stride;
+                field[base..base + self.cols].copy_from_slice(src);
+            }
+        } else {
+            let mut k = 0;
+            for r in 0..self.rows {
+                let base = self.offset + r * self.row_stride;
+                for c in 0..self.cols {
+                    field[base + c * self.col_stride] = vals[k];
+                    k += 1;
+                }
+            }
+        }
+    }
+}
+
+/// One compiled block-copy message's descriptor.
+#[derive(Debug, Clone, Copy)]
+struct StridedDesc {
+    sender: u32,
+    receiver: u32,
+    /// Block in the sender's local field.
+    src: StridedBlock,
+    /// Block in the receiver's local field.
+    dst: StridedBlock,
+    /// First slot in the staging arena.
+    start: u32,
+}
+
+/// A borrowed view of one compiled block-copy message.
+#[derive(Debug, Clone, Copy)]
+pub struct StridedMsg<'a> {
+    /// The peer thread (receiver in a send list, sender in a recv list).
+    pub peer: u32,
+    /// Source block in the **sender's** local field.
+    pub src: &'a StridedBlock,
+    /// Destination block in the **receiver's** local field.
+    pub dst: &'a StridedBlock,
+    /// First slot of this message in the staging arena.
+    pub start: usize,
+}
+
+impl StridedMsg<'_> {
+    /// Number of values carried.
+    pub fn len(&self) -> usize {
+        self.src.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.src.is_empty()
+    }
+
+    /// This message's slot range in the staging arena.
+    pub fn range(&self) -> Range<usize> {
+        self.start..self.start + self.len()
+    }
+
+    /// Pack: gather the source block from the sender's field into this
+    /// message's arena slots.
+    pub fn pack(&self, sender_field: &[f64], arena_slots: &mut [f64]) {
+        self.src.gather(sender_field, arena_slots);
+    }
+
+    /// Unpack: scatter this message's arena slots into the destination
+    /// block of the receiver's field.
+    pub fn unpack(&self, arena_slots: &[f64], receiver_field: &mut [f64]) {
+        self.dst.scatter(arena_slots, receiver_field);
+    }
+}
+
+/// The compiled strided block-copy plan: the regular-workload counterpart of
+/// [`CommPlan`], sharing its arena contract.
+#[derive(Debug, Clone, Default)]
+pub struct StridedPlan {
+    threads: usize,
+    /// Descriptors in arena (receiver-major) order; ranges are consecutive
+    /// and partition `0..total`.
+    msgs: Vec<StridedDesc>,
+    /// `msgs[recv_off[t]..recv_off[t+1]]` are the messages received by `t`.
+    recv_off: Vec<u32>,
+    /// `send_ids[send_off[t]..send_off[t+1]]` index the messages sent by `t`.
+    send_off: Vec<u32>,
+    send_ids: Vec<u32>,
+    total: usize,
+}
+
+impl StridedPlan {
+    /// Compile from `(sender, receiver, src, dst)` copies. Messages are laid
+    /// out receiver-major in the arena (stable within a receiver, so the
+    /// caller's neighbour order is the unpack order). Each `src`/`dst` pair
+    /// must carry the same number of values.
+    pub fn from_msgs(
+        threads: usize,
+        copies: &[(usize, usize, StridedBlock, StridedBlock)],
+    ) -> StridedPlan {
+        let mut order: Vec<usize> = (0..copies.len()).collect();
+        order.sort_by_key(|&i| copies[i].1); // stable: keeps per-receiver order
+        let mut msgs = Vec::with_capacity(copies.len());
+        let mut recv_off = vec![0u32; threads + 1];
+        let mut total = 0usize;
+        for &i in &order {
+            let (sender, receiver, src, dst) = copies[i];
+            assert!(sender < threads && receiver < threads, "thread id out of range");
+            assert_ne!(sender, receiver, "self-message in a strided plan");
+            assert_eq!(src.len(), dst.len(), "src/dst length mismatch");
+            msgs.push(StridedDesc {
+                sender: sender as u32,
+                receiver: receiver as u32,
+                src,
+                dst,
+                start: total as u32,
+            });
+            total += src.len();
+            recv_off[receiver + 1] += 1;
+        }
+        for t in 0..threads {
+            recv_off[t + 1] += recv_off[t];
+        }
+        // Sender-side CSR permutation over message ids, arena order within a
+        // sender.
+        let mut send_off = vec![0u32; threads + 1];
+        for m in &msgs {
+            send_off[m.sender as usize + 1] += 1;
+        }
+        for t in 0..threads {
+            send_off[t + 1] += send_off[t];
+        }
+        let mut cursor = send_off[..threads].to_vec();
+        let mut send_ids = vec![0u32; msgs.len()];
+        for (id, m) in msgs.iter().enumerate() {
+            let c = &mut cursor[m.sender as usize];
+            send_ids[*c as usize] = id as u32;
+            *c += 1;
+        }
+        StridedPlan { threads, msgs, recv_off, send_off, send_ids, total }
+    }
+
+    fn view<'a>(&'a self, m: &'a StridedDesc, peer: u32) -> StridedMsg<'a> {
+        StridedMsg { peer, src: &m.src, dst: &m.dst, start: m.start as usize }
+    }
+
+    /// Number of threads the plan was compiled for.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Messages thread `t` unpacks, in compile (neighbour) order.
+    pub fn recv_msgs(&self, t: usize) -> impl Iterator<Item = StridedMsg<'_>> + '_ {
+        self.msgs[self.recv_off[t] as usize..self.recv_off[t + 1] as usize]
+            .iter()
+            .map(move |m| self.view(m, m.sender))
+    }
+
+    /// Messages thread `t` packs, in arena order.
+    pub fn send_msgs(&self, t: usize) -> impl Iterator<Item = StridedMsg<'_>> + '_ {
+        self.send_ids[self.send_off[t] as usize..self.send_off[t + 1] as usize]
+            .iter()
+            .map(move |&id| {
+                let m = &self.msgs[id as usize];
+                self.view(m, m.receiver)
+            })
+    }
+
+    /// Total values exchanged per step (the staging-arena length).
+    pub fn total_values(&self) -> usize {
+        self.total
+    }
+
+    /// Total number of compiled messages.
+    pub fn num_messages(&self) -> usize {
+        self.msgs.len()
+    }
+
+    /// Number of messages thread `t` sends.
+    pub fn messages_from(&self, t: usize) -> usize {
+        (self.send_off[t + 1] - self.send_off[t]) as usize
+    }
+
+    /// Number of messages thread `t` receives.
+    pub fn messages_to(&self, t: usize) -> usize {
+        (self.recv_off[t + 1] - self.recv_off[t]) as usize
+    }
+
+    /// Payload bytes crossing thread boundaries per executed step.
+    pub fn payload_bytes(&self) -> u64 {
+        (self.total * SIZEOF_DOUBLE) as u64
+    }
+
+    /// Consistency check: arena tiling, offset tables, block bounds against
+    /// per-thread field lengths, and the send-side permutation.
+    pub fn validate(&self, field_len: &dyn Fn(usize) -> usize) -> Result<(), String> {
+        let threads = self.threads;
+        if self.recv_off.len() != threads + 1 || self.send_off.len() != threads + 1 {
+            return Err("offset table arity".into());
+        }
+        if self.send_ids.len() != self.msgs.len() {
+            return Err("send permutation arity".into());
+        }
+        if self.recv_off[threads] as usize != self.msgs.len()
+            || self.send_off[threads] as usize != self.send_ids.len()
+        {
+            return Err("offset tables do not cover all messages".into());
+        }
+        let mut cursor = 0usize;
+        for (id, m) in self.msgs.iter().enumerate() {
+            if m.sender == m.receiver {
+                return Err(format!("message {id} is a self-message ({})", m.sender));
+            }
+            if m.sender as usize >= threads || m.receiver as usize >= threads {
+                return Err(format!("message {id} names an out-of-range thread"));
+            }
+            if m.start as usize != cursor || m.src.is_empty() {
+                return Err(format!("message {id} breaks the arena tiling"));
+            }
+            if m.src.len() != m.dst.len() {
+                return Err(format!("message {id} src/dst length mismatch"));
+            }
+            if m.src.end() > field_len(m.sender as usize) {
+                return Err(format!("message {id} src block exceeds the sender's field"));
+            }
+            if m.dst.end() > field_len(m.receiver as usize) {
+                return Err(format!("message {id} dst block exceeds the receiver's field"));
+            }
+            cursor += m.src.len();
+        }
+        if cursor != self.total {
+            return Err("arena not fully covered by messages".into());
+        }
+        for t in 0..threads {
+            if self.recv_off[t] > self.recv_off[t + 1] || self.send_off[t] > self.send_off[t + 1] {
+                return Err(format!("offsets not monotone at thread {t}"));
+            }
+            for m in &self.msgs[self.recv_off[t] as usize..self.recv_off[t + 1] as usize] {
+                if m.receiver as usize != t {
+                    return Err(format!("recv list of {t} holds a foreign message"));
+                }
+            }
+            for &id in &self.send_ids[self.send_off[t] as usize..self.send_off[t + 1] as usize] {
+                if self.msgs[id as usize].sender as usize != t {
+                    return Err(format!("send list of {t} holds a foreign message"));
+                }
+            }
+        }
+        let mut seen = vec![false; self.msgs.len()];
+        for &id in &self.send_ids {
+            let slot = &mut seen[id as usize];
+            if *slot {
+                return Err(format!("message {id} sent twice"));
+            }
+            *slot = true;
+        }
+        Ok(())
+    }
+}
+
+/// A compiled exchange plan in one of its two forms. The common interface
+/// is the accounting + arena contract; executors match on the form for the
+/// pack/unpack semantics.
+#[derive(Debug, Clone)]
+pub enum ExchangePlan {
+    /// Irregular indexed gather (SpMV UPCv3).
+    Gather(CommPlan),
+    /// Regular strided block copies (halo exchange).
+    Strided(StridedPlan),
+}
+
+impl ExchangePlan {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExchangePlan::Gather(_) => "gather",
+            ExchangePlan::Strided(_) => "strided",
+        }
+    }
+
+    /// Number of threads the plan was compiled for.
+    pub fn threads(&self) -> usize {
+        match self {
+            ExchangePlan::Gather(p) => p.threads(),
+            ExchangePlan::Strided(p) => p.threads(),
+        }
+    }
+
+    /// Total values exchanged per step — the staging-arena length shared by
+    /// both forms.
+    pub fn total_values(&self) -> usize {
+        match self {
+            ExchangePlan::Gather(p) => p.total_values(),
+            ExchangePlan::Strided(p) => p.total_values(),
+        }
+    }
+
+    /// Total number of consolidated messages per step.
+    pub fn num_messages(&self) -> usize {
+        match self {
+            ExchangePlan::Gather(p) => p.num_messages(),
+            ExchangePlan::Strided(p) => p.num_messages(),
+        }
+    }
+
+    /// Payload bytes crossing thread boundaries per executed step.
+    pub fn payload_bytes(&self) -> u64 {
+        (self.total_values() * SIZEOF_DOUBLE) as u64
+    }
+
+    pub fn as_strided(&self) -> Option<&StridedPlan> {
+        match self {
+            ExchangePlan::Strided(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    pub fn as_gather(&self) -> Option<&CommPlan> {
+        match self {
+            ExchangePlan::Gather(p) => Some(p),
+            _ => None,
+        }
+    }
+}
+
+impl From<CommPlan> for ExchangePlan {
+    fn from(p: CommPlan) -> ExchangePlan {
+        ExchangePlan::Gather(p)
+    }
+}
+
+impl From<StridedPlan> for ExchangePlan {
+    fn from(p: StridedPlan) -> ExchangePlan {
+        ExchangePlan::Strided(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_gather_scatter_roundtrip() {
+        // A 4×5 field; gather its strided column 2 and scatter it back into
+        // column 0.
+        let field: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let col2 = StridedBlock::column(2, 4, 5);
+        assert_eq!(col2.len(), 4);
+        assert_eq!(col2.end(), 18);
+        let mut buf = vec![0.0; 4];
+        col2.gather(&field, &mut buf);
+        assert_eq!(buf, vec![2.0, 7.0, 12.0, 17.0]);
+        let mut dst = field.clone();
+        StridedBlock::column(0, 4, 5).scatter(&buf, &mut dst);
+        assert_eq!(dst[0], 2.0);
+        assert_eq!(dst[5], 7.0);
+        assert_eq!(dst[15], 17.0);
+
+        // A contiguous row strip.
+        let row = StridedBlock::row(6, 3);
+        let mut buf = vec![0.0; 3];
+        row.gather(&field, &mut buf);
+        assert_eq!(buf, vec![6.0, 7.0, 8.0]);
+
+        // A doubly-strided plane (every other element of two rows).
+        let plane = StridedBlock::plane(0, 2, 10, 3, 2);
+        let mut buf = vec![0.0; 6];
+        plane.gather(&field, &mut buf);
+        assert_eq!(buf, vec![0.0, 2.0, 4.0, 10.0, 12.0, 14.0]);
+        let mut dst = vec![0.0; 20];
+        plane.scatter(&buf, &mut dst);
+        assert_eq!(dst[2], 2.0);
+        assert_eq!(dst[14], 14.0);
+        assert_eq!(dst[1], 0.0);
+    }
+
+    #[test]
+    fn strided_plan_compiles_receiver_major() {
+        // 3 threads in a ring of length-2 row strips.
+        let strip = |o| StridedBlock::row(o, 2);
+        let copies = vec![
+            (1usize, 0usize, strip(0), strip(4)),
+            (2, 1, strip(0), strip(4)),
+            (0, 2, strip(0), strip(4)),
+        ];
+        let plan = StridedPlan::from_msgs(3, &copies);
+        plan.validate(&|_| 6).unwrap();
+        assert_eq!(plan.total_values(), 6);
+        assert_eq!(plan.num_messages(), 3);
+        assert_eq!(plan.payload_bytes(), 48);
+        // Receiver-major arena order.
+        let starts: Vec<usize> = (0..3).flat_map(|t| plan.recv_msgs(t).map(|m| m.start)).collect();
+        assert_eq!(starts, vec![0, 2, 4]);
+        // Send side is a permutation of the same descriptors.
+        let s0: Vec<_> = plan.send_msgs(0).collect();
+        assert_eq!(s0.len(), 1);
+        assert_eq!(s0[0].peer, 2);
+        assert_eq!(s0[0].range(), 4..6);
+        assert_eq!(plan.messages_from(1), 1);
+        assert_eq!(plan.messages_to(1), 1);
+    }
+
+    #[test]
+    fn strided_plan_moves_values_end_to_end() {
+        // Two threads exchange their first interior column (3×4 fields).
+        let n = 4;
+        let copies = vec![
+            (0usize, 1usize, StridedBlock::column(2, 3, n), StridedBlock::column(0, 3, n)),
+            (1, 0, StridedBlock::column(1, 3, n), StridedBlock::column(3, 3, n)),
+        ];
+        let plan = StridedPlan::from_msgs(2, &copies);
+        plan.validate(&|_| 12).unwrap();
+        let mut fields = vec![
+            (0..12).map(|i| i as f64).collect::<Vec<_>>(),
+            (0..12).map(|i| (100 + i) as f64).collect::<Vec<_>>(),
+        ];
+        let mut arena = vec![0.0; plan.total_values()];
+        for t in 0..2 {
+            for m in plan.send_msgs(t) {
+                let r = m.range();
+                m.pack(&fields[t], &mut arena[r]);
+            }
+        }
+        for t in 0..2 {
+            for m in plan.recv_msgs(t) {
+                let r = m.range();
+                let vals = arena[r].to_vec();
+                m.unpack(&vals, &mut fields[t]);
+            }
+        }
+        // Thread 1's column 0 got thread 0's column 2: values 2, 6, 10.
+        assert_eq!(fields[1][0], 2.0);
+        assert_eq!(fields[1][4], 6.0);
+        assert_eq!(fields[1][8], 10.0);
+        // Thread 0's column 3 got thread 1's column 1: 101, 105, 109.
+        assert_eq!(fields[0][3], 101.0);
+        assert_eq!(fields[0][7], 105.0);
+        assert_eq!(fields[0][11], 109.0);
+    }
+
+    #[test]
+    fn validate_catches_out_of_bounds_blocks() {
+        let copies =
+            vec![(0usize, 1usize, StridedBlock::row(0, 4), StridedBlock::row(0, 4))];
+        let plan = StridedPlan::from_msgs(2, &copies);
+        assert!(plan.validate(&|_| 4).is_ok());
+        assert!(plan.validate(&|_| 3).is_err());
+    }
+
+    #[test]
+    fn exchange_plan_unifies_both_forms() {
+        let strided = StridedPlan::from_msgs(
+            2,
+            &[(0, 1, StridedBlock::row(0, 3), StridedBlock::row(3, 3))],
+        );
+        let plan: ExchangePlan = strided.into();
+        assert_eq!(plan.name(), "strided");
+        assert_eq!(plan.threads(), 2);
+        assert_eq!(plan.total_values(), 3);
+        assert_eq!(plan.num_messages(), 1);
+        assert_eq!(plan.payload_bytes(), 24);
+        assert!(plan.as_strided().is_some());
+        assert!(plan.as_gather().is_none());
+
+        let layout = crate::pgas::Layout::new(4, 2, 2);
+        let gather = CommPlan::from_recv_needs(&layout, &[vec![(1u32, 2u32)], vec![]]);
+        let plan: ExchangePlan = gather.into();
+        assert_eq!(plan.name(), "gather");
+        assert_eq!(plan.total_values(), 1);
+        assert!(plan.as_gather().is_some());
+    }
+}

@@ -16,11 +16,19 @@
 //! executor uses to pack/unpack real messages — the paper's "preparation
 //! step" of §4.3.1.
 //!
+//! The compiled-plan idea is workload-agnostic: [`ExchangePlan`] unifies the
+//! irregular gather form ([`CommPlan`], SpMV) with the regular strided
+//! block-copy form ([`StridedPlan`], heat-2D / 3D-stencil halos) behind one
+//! staging-arena contract, so a single engine executes any compiled
+//! workload.
+//!
 //! [`Layout`]: crate::pgas::Layout
 //! [`Topology`]: crate::pgas::Topology
 
 mod analysis;
+mod exchange;
 mod plan;
 
 pub use analysis::{Analysis, ThreadTraffic};
+pub use exchange::{ExchangePlan, StridedBlock, StridedMsg, StridedPlan};
 pub use plan::{CommPlan, PlanMsg};

@@ -16,10 +16,29 @@
 //! Both engines produce **bitwise identical** results (`y`, byte counts,
 //! message counts); the equivalence is enforced by
 //! `rust/tests/engine_equivalence.rs` and the property tests below.
+//!
+//! The engine layer is workload-agnostic. Its pieces:
+//!
+//! * [`WorkerPool`] — long-lived workers + a reusable barrier; a dispatch
+//!   costs a condvar wakeup, not `threads` thread creations. Shared by the
+//!   SpMV executors and every grid workload.
+//! * [`PerWorker`] / [`ArenaView`] — the disjoint-access views that let one
+//!   shared job closure hand each worker its own field shard and its own
+//!   compiled staging-arena ranges, with no locks and no per-step boxing.
+//! * [`ParallelPool`] — the four SpMV variants on the pool (gather-form
+//!   plans).
+//! * [`ExchangeRuntime`] — plan + staging arena + pool bundled for the
+//!   strided-form workloads (heat-2D, the 3D stencil): one `step_strided`
+//!   call runs pack → barrier → unpack → per-thread stencil update on
+//!   either engine.
 
+mod exchange;
 mod parallel;
+mod pool;
 
+pub use exchange::ExchangeRuntime;
 pub use parallel::ParallelPool;
+pub use pool::{ArenaView, PerWorker, WorkerCtx, WorkerPool};
 
 use crate::comm::Analysis;
 use crate::spmv::{run_variant, ExecOutcome, SpmvState, Variant};

@@ -1,41 +1,54 @@
-//! The parallel worker pool: one OS thread per logical UPC thread.
+//! The parallel SpMV executors on the persistent worker pool: one logical
+//! UPC thread per pool worker.
 //!
 //! Execution model, per variant:
 //!
-//! * **Naive / V1** — one scope, one worker per UPC thread. Every worker
+//! * **Naive / V1** — one dispatch, one worker per UPC thread. Every worker
 //!   computes its own rows (the `upc_forall` affinity set) straight into its
 //!   private shard of `y` ([`SharedVec::locals_mut`]); off-owner `x` reads go
 //!   through the shared-array interface exactly as in the sequential
 //!   executor, so the byte/transfer counters match occurrence for
 //!   occurrence.
-//! * **V2** — one scope; each worker `upc_memget`s its needed blocks into
+//! * **V2** — one dispatch; each worker `upc_memget`s its needed blocks into
 //!   its persistent private workspace, then computes. The workspace is
 //!   **not** zero-filled between calls: a thread only ever reads positions
 //!   its own transport pass refreshed, which removes the O(threads·n)
 //!   refill traffic per iteration.
-//! * **V3** — two scopes with the scope join as the `upc_barrier` of
-//!   Listing 5. Phase 1: the staging arena is carved into disjoint
-//!   per-message `&mut` slices (the compiled plan's ranges) and every sender
-//!   packs through its pre-translated `local_src` offsets — a plain gather
-//!   from the pointer-to-local, no allocation, no slot search. Phase 2:
-//!   every receiver copies its own blocks, scatters its incoming arena
-//!   ranges, and computes.
+//! * **V3** — one dispatch with an internal [`WorkerCtx::barrier`] as the
+//!   `upc_barrier` of Listing 5. Phase 1: every sender fills its compiled
+//!   arena ranges ([`ArenaView`]) through the plan's pre-translated
+//!   `local_src` offsets — a plain gather from the pointer-to-local, no
+//!   allocation, no slot search. Phase 2: every receiver copies its own
+//!   blocks, scatters its incoming arena ranges, and computes.
+//!
+//! The workers, their stacks, the barrier, the staging arena and the private
+//! workspaces all persist across calls ([`WorkerPool`]), so a steady-state
+//! time step performs **zero thread spawns and zero heap allocations** on
+//! the transport path — a step costs barrier waits, not thread creation.
 //!
 //! All floating-point evaluation orders are identical to the sequential
 //! executors, so `y` is bitwise identical; counters are per-worker sums of
 //! the same per-thread quantities, so they are exactly equal too.
+//!
+//! [`SharedVec::locals_mut`]: crate::pgas::SharedVec::locals_mut
 
+use super::pool::{ArenaView, PerWorker, WorkerCtx, WorkerPool};
 use crate::comm::Analysis;
 use crate::machine::SIZEOF_DOUBLE;
 use crate::spmv::{spmv_block_gathered, spmv_block_global, ExecOutcome, SpmvState, Variant};
 
-/// Persistent per-worker state, reused across calls/time steps.
+/// Persistent engine state, reused across calls/time steps: the worker pool
+/// plus the per-worker workspaces.
 #[derive(Debug, Default)]
 pub struct ParallelPool {
+    /// The long-lived workers (one per logical UPC thread).
+    pool: WorkerPool,
     /// `x_copies[t]` — thread t's private full-length x workspace (V2/V3).
     x_copies: Vec<Vec<f64>>,
     /// Flat staging arena for V3 message payloads (`plan.total_values()`).
     staging: Vec<f64>,
+    /// Per-worker `(bytes, transfers)` counters (naive/V1/V2).
+    counts: Vec<(u64, u64)>,
 }
 
 impl ParallelPool {
@@ -49,6 +62,7 @@ impl ParallelPool {
         if self.x_copies.len() != threads || self.x_copies.first().is_some_and(|v| v.len() != n) {
             self.x_copies = (0..threads).map(|_| vec![0.0f64; n]).collect();
         }
+        self.counts.resize(threads, (0, 0));
     }
 
     /// Run one SpMV `y = Mx` on the worker pool. Bitwise identical to
@@ -60,11 +74,102 @@ impl ParallelPool {
         analysis: Option<&Analysis>,
     ) -> ExecOutcome {
         match variant {
-            Variant::Naive => run_naive(state),
-            Variant::V1 => run_v1(state),
+            Variant::Naive => self.run_naive(state),
+            Variant::V1 => self.run_v1(state),
             Variant::V2 => self.run_v2(state, analysis.expect("V2 needs an Analysis")),
             Variant::V3 => self.run_v3(state, analysis.expect("V3 needs an Analysis")),
         }
+    }
+
+    /// Listing 2 on the pool: every worker executes the rows with its
+    /// affinity, reading through the shared-array interface.
+    fn run_naive(&mut self, state: &mut SpmvState) -> ExecOutcome {
+        let layout = state.layout;
+        let r = state.r_nz;
+        self.counts.resize(layout.threads, (0, 0));
+        let x = &state.x;
+        let d = &state.d;
+        let a = &state.a;
+        let j = &state.j;
+        let mut y_locals = state.y.locals_mut();
+        let y = PerWorker::new(&mut y_locals);
+        let counts = PerWorker::new(&mut self.counts);
+        self.pool.run(layout.threads, &|ctx: WorkerCtx| {
+            let t = ctx.id;
+            // SAFETY: worker t claims only its own shard/counter slot.
+            let y_local = unsafe { y.take(t) };
+            let cnt = unsafe { counts.take(t) };
+            let bs = layout.block_size;
+            let mut inter = 0u64;
+            let mut transfers = 0u64;
+            for b in layout.blocks_of_thread(t) {
+                let (start, len) = layout.block_range(b);
+                let mb = layout.local_block_index(b);
+                for (k, slot) in y_local[mb * bs..mb * bs + len].iter_mut().enumerate() {
+                    let i = start + k;
+                    let mut tmp = 0.0f64;
+                    for jj in 0..r {
+                        let col = *j.at(i * r + jj) as usize;
+                        if col != i && layout.owner_of_index(col) != t {
+                            inter += SIZEOF_DOUBLE as u64;
+                            transfers += 1;
+                        }
+                        tmp += *a.at(i * r + jj) * *x.at(col);
+                    }
+                    *slot = *d.at(i) * *x.at(i) + tmp;
+                }
+            }
+            *cnt = (inter, transfers);
+        });
+        finish(state, &self.counts)
+    }
+
+    /// Listing 3 on the pool: per-worker block loop with `y,D,A,J`
+    /// privatized, `x` accessed element-wise through the shared interface.
+    fn run_v1(&mut self, state: &mut SpmvState) -> ExecOutcome {
+        let layout = state.layout;
+        let r = state.r_nz;
+        self.counts.resize(layout.threads, (0, 0));
+        let x = &state.x;
+        let d = &state.d;
+        let a = &state.a;
+        let j = &state.j;
+        let mut y_locals = state.y.locals_mut();
+        let y = PerWorker::new(&mut y_locals);
+        let counts = PerWorker::new(&mut self.counts);
+        self.pool.run(layout.threads, &|ctx: WorkerCtx| {
+            let t = ctx.id;
+            // SAFETY: worker t claims only its own shard/counter slot.
+            let y_local = unsafe { y.take(t) };
+            let cnt = unsafe { counts.take(t) };
+            let bs = layout.block_size;
+            let mut inter = 0u64;
+            let mut transfers = 0u64;
+            for b in layout.blocks_of_thread(t) {
+                let (offset, len) = layout.block_range(b);
+                for i in offset..offset + len {
+                    for jj in 0..r {
+                        let col = *j.at(i * r + jj) as usize;
+                        if col != i && layout.owner_of_index(col) != t {
+                            inter += SIZEOF_DOUBLE as u64;
+                            transfers += 1;
+                        }
+                    }
+                }
+                let mb = layout.local_block_index(b);
+                spmv_block_global(
+                    offset,
+                    d.block(b),
+                    a.block(b),
+                    j.block(b),
+                    r,
+                    |i| *x.at(i),
+                    &mut y_local[mb * bs..mb * bs + len],
+                );
+            }
+            *cnt = (inter, transfers);
+        });
+        finish(state, &self.counts)
     }
 
     /// Listing 4 on the pool: per-worker block transport into the private
@@ -77,51 +182,51 @@ impl ParallelPool {
         let d = &state.d;
         let a = &state.a;
         let j = &state.j;
-        let y_locals = state.y.locals_mut();
-        let mut counts = vec![(0u64, 0u64); layout.threads];
-        std::thread::scope(|s| {
-            for ((t, y_local), (ws, cnt)) in y_locals
-                .into_iter()
-                .enumerate()
-                .zip(self.x_copies.iter_mut().zip(counts.iter_mut()))
-            {
-                s.spawn(move || {
-                    let bs = layout.block_size;
-                    let mut inter = 0u64;
-                    let mut transfers = 0u64;
-                    for b in 0..layout.nblks() {
-                        if !analysis.block_needed(t, b) {
-                            continue;
-                        }
-                        let (start, len) = layout.block_range(b);
-                        ws[start..start + len].copy_from_slice(x.block(b));
-                        if layout.owner_of_block(b) != t {
-                            inter += (len * SIZEOF_DOUBLE) as u64;
-                            transfers += 1;
-                        }
-                    }
-                    for b in layout.blocks_of_thread(t) {
-                        let (offset, len) = layout.block_range(b);
-                        let mb = layout.local_block_index(b);
-                        spmv_block_gathered(
-                            offset,
-                            d.block(b),
-                            a.block(b),
-                            j.block(b),
-                            r,
-                            ws,
-                            &mut y_local[mb * bs..mb * bs + len],
-                        );
-                    }
-                    *cnt = (inter, transfers);
-                });
+        let mut y_locals = state.y.locals_mut();
+        let y = PerWorker::new(&mut y_locals);
+        let ws = PerWorker::new(&mut self.x_copies);
+        let counts = PerWorker::new(&mut self.counts);
+        self.pool.run(layout.threads, &|ctx: WorkerCtx| {
+            let t = ctx.id;
+            // SAFETY: worker t claims only its own shard/workspace/counter.
+            let y_local = unsafe { y.take(t) };
+            let ws = unsafe { ws.take(t) };
+            let cnt = unsafe { counts.take(t) };
+            let bs = layout.block_size;
+            let mut inter = 0u64;
+            let mut transfers = 0u64;
+            for b in 0..layout.nblks() {
+                if !analysis.block_needed(t, b) {
+                    continue;
+                }
+                let (start, len) = layout.block_range(b);
+                ws[start..start + len].copy_from_slice(x.block(b));
+                if layout.owner_of_block(b) != t {
+                    inter += (len * SIZEOF_DOUBLE) as u64;
+                    transfers += 1;
+                }
             }
+            for b in layout.blocks_of_thread(t) {
+                let (offset, len) = layout.block_range(b);
+                let mb = layout.local_block_index(b);
+                spmv_block_gathered(
+                    offset,
+                    d.block(b),
+                    a.block(b),
+                    j.block(b),
+                    r,
+                    ws,
+                    &mut y_local[mb * bs..mb * bs + len],
+                );
+            }
+            *cnt = (inter, transfers);
         });
-        finish(state, &counts)
+        finish(state, &self.counts)
     }
 
-    /// Listing 5 on the pool: pack/put scope, barrier (the scope join),
-    /// then unpack + compute scope.
+    /// Listing 5 on the pool: pack + put phase, [`WorkerCtx::barrier`] (the
+    /// `upc_barrier`), then unpack + compute — one dispatch, no per-step
+    /// allocation.
     fn run_v3(&mut self, state: &mut SpmvState, analysis: &Analysis) -> ExecOutcome {
         let layout = state.layout;
         let r = state.r_nz;
@@ -142,167 +247,60 @@ impl ParallelPool {
         }
 
         let x = &state.x;
-        // Carve the staging arena into disjoint per-message slices, grouped
-        // by sender: each worker ends up owning exactly the `&mut` ranges it
-        // must fill — the zero-copy `upc_memput`.
-        let mut jobs: Vec<Vec<(&[u32], &mut [f64])>> =
-            (0..threads).map(|_| Vec::new()).collect();
-        {
-            let mut rest: &mut [f64] = &mut self.staging;
-            for (sender, _receiver, m) in plan.arena_msgs() {
-                let (head, tail) = std::mem::take(&mut rest).split_at_mut(m.len());
-                jobs[sender].push((m.local_src, head));
-                rest = tail;
-            }
-            debug_assert!(rest.is_empty(), "staging arena not fully carved");
-        }
-
-        // Phase 1: pack + put.
-        std::thread::scope(|s| {
-            for (t, thread_jobs) in jobs.into_iter().enumerate() {
-                if thread_jobs.is_empty() {
-                    continue;
-                }
-                s.spawn(move || {
-                    let local_x = x.local(t);
-                    for (src, buf) in thread_jobs {
-                        for (slot, &off) in buf.iter_mut().zip(src) {
-                            *slot = local_x[off as usize];
-                        }
-                    }
-                });
-            }
-        });
-
-        // ---- upc_barrier (the scope join) ----
-
-        // Phase 2: own-block copy + scatter + compute.
-        let staging = &self.staging;
         let d = &state.d;
         let a = &state.a;
         let j = &state.j;
-        let y_locals = state.y.locals_mut();
-        std::thread::scope(|s| {
-            for ((t, y_local), ws) in
-                y_locals.into_iter().enumerate().zip(self.x_copies.iter_mut())
-            {
-                s.spawn(move || {
-                    let bs = layout.block_size;
-                    for b in layout.blocks_of_thread(t) {
-                        let (start, len) = layout.block_range(b);
-                        ws[start..start + len].copy_from_slice(x.block(b));
-                    }
-                    for m in plan.recv_msgs(t) {
-                        let vals = &staging[m.range()];
-                        for (&gidx, &v) in m.indices.iter().zip(vals) {
-                            ws[gidx as usize] = v;
-                        }
-                    }
-                    for b in layout.blocks_of_thread(t) {
-                        let (offset, len) = layout.block_range(b);
-                        let mb = layout.local_block_index(b);
-                        spmv_block_gathered(
-                            offset,
-                            d.block(b),
-                            a.block(b),
-                            j.block(b),
-                            r,
-                            ws,
-                            &mut y_local[mb * bs..mb * bs + len],
-                        );
-                    }
-                });
+        let arena = ArenaView::new(&mut self.staging);
+        let mut y_locals = state.y.locals_mut();
+        let y = PerWorker::new(&mut y_locals);
+        let ws = PerWorker::new(&mut self.x_copies);
+        self.pool.run(threads, &|ctx: WorkerCtx| {
+            let t = ctx.id;
+            // Phase 1: pack + put — each sender owns exactly the arena
+            // ranges of its own messages (the zero-copy `upc_memput`).
+            let local_x = x.local(t);
+            for m in plan.send_msgs(t) {
+                // SAFETY: plan ranges are disjoint; message sent by t only.
+                let buf = unsafe { arena.slice_mut(m.range()) };
+                for (slot, &off) in buf.iter_mut().zip(m.local_src) {
+                    *slot = local_x[off as usize];
+                }
+            }
+
+            ctx.barrier(); // ---- upc_barrier ----
+
+            // Phase 2: own-block copy + scatter + compute.
+            // SAFETY: worker t claims only its own workspace/shard.
+            let ws = unsafe { ws.take(t) };
+            let bs = layout.block_size;
+            for b in layout.blocks_of_thread(t) {
+                let (start, len) = layout.block_range(b);
+                ws[start..start + len].copy_from_slice(x.block(b));
+            }
+            for m in plan.recv_msgs(t) {
+                // SAFETY: arena writes ended at the barrier; reads shared.
+                let vals = unsafe { arena.slice(m.range()) };
+                for (&gidx, &v) in m.indices.iter().zip(vals) {
+                    ws[gidx as usize] = v;
+                }
+            }
+            let y_local = unsafe { y.take(t) };
+            for b in layout.blocks_of_thread(t) {
+                let (offset, len) = layout.block_range(b);
+                let mb = layout.local_block_index(b);
+                spmv_block_gathered(
+                    offset,
+                    d.block(b),
+                    a.block(b),
+                    j.block(b),
+                    r,
+                    ws,
+                    &mut y_local[mb * bs..mb * bs + len],
+                );
             }
         });
         finish_counted(state, inter, transfers)
     }
-}
-
-/// Listing 2 on the pool: every worker executes the rows with its affinity,
-/// reading through the shared-array interface.
-fn run_naive(state: &mut SpmvState) -> ExecOutcome {
-    let layout = state.layout;
-    let r = state.r_nz;
-    let x = &state.x;
-    let d = &state.d;
-    let a = &state.a;
-    let j = &state.j;
-    let y_locals = state.y.locals_mut();
-    let mut counts = vec![(0u64, 0u64); layout.threads];
-    std::thread::scope(|s| {
-        for ((t, y_local), cnt) in y_locals.into_iter().enumerate().zip(counts.iter_mut()) {
-            s.spawn(move || {
-                let bs = layout.block_size;
-                let mut inter = 0u64;
-                let mut transfers = 0u64;
-                for b in layout.blocks_of_thread(t) {
-                    let (start, len) = layout.block_range(b);
-                    let mb = layout.local_block_index(b);
-                    for (k, slot) in y_local[mb * bs..mb * bs + len].iter_mut().enumerate() {
-                        let i = start + k;
-                        let mut tmp = 0.0f64;
-                        for jj in 0..r {
-                            let col = *j.at(i * r + jj) as usize;
-                            if col != i && layout.owner_of_index(col) != t {
-                                inter += SIZEOF_DOUBLE as u64;
-                                transfers += 1;
-                            }
-                            tmp += *a.at(i * r + jj) * *x.at(col);
-                        }
-                        *slot = *d.at(i) * *x.at(i) + tmp;
-                    }
-                }
-                *cnt = (inter, transfers);
-            });
-        }
-    });
-    finish(state, &counts)
-}
-
-/// Listing 3 on the pool: per-worker block loop with `y,D,A,J` privatized,
-/// `x` accessed element-wise through the shared interface.
-fn run_v1(state: &mut SpmvState) -> ExecOutcome {
-    let layout = state.layout;
-    let r = state.r_nz;
-    let x = &state.x;
-    let d = &state.d;
-    let a = &state.a;
-    let j = &state.j;
-    let y_locals = state.y.locals_mut();
-    let mut counts = vec![(0u64, 0u64); layout.threads];
-    std::thread::scope(|s| {
-        for ((t, y_local), cnt) in y_locals.into_iter().enumerate().zip(counts.iter_mut()) {
-            s.spawn(move || {
-                let bs = layout.block_size;
-                let mut inter = 0u64;
-                let mut transfers = 0u64;
-                for b in layout.blocks_of_thread(t) {
-                    let (offset, len) = layout.block_range(b);
-                    for i in offset..offset + len {
-                        for jj in 0..r {
-                            let col = *j.at(i * r + jj) as usize;
-                            if col != i && layout.owner_of_index(col) != t {
-                                inter += SIZEOF_DOUBLE as u64;
-                                transfers += 1;
-                            }
-                        }
-                    }
-                    let mb = layout.local_block_index(b);
-                    spmv_block_global(
-                        offset,
-                        d.block(b),
-                        a.block(b),
-                        j.block(b),
-                        r,
-                        |i| *x.at(i),
-                        &mut y_local[mb * bs..mb * bs + len],
-                    );
-                }
-                *cnt = (inter, transfers);
-            });
-        }
-    });
-    finish(state, &counts)
 }
 
 /// Gather the freshly written shared `y` to global indexing and fold the

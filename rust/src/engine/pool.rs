@@ -1,0 +1,469 @@
+//! The persistent worker pool: long-lived OS threads, a reusable barrier,
+//! and the disjoint-access views the zero-copy executors hand their workers.
+//!
+//! The seed engine paid one `std::thread::scope` — thread creation, stack
+//! allocation, scheduler wakeup and join — per time step *and per phase*.
+//! [`WorkerPool`] amortizes all of that to once per run shape: workers are
+//! spawned the first time a shape is dispatched and then sit on a condvar;
+//! a step costs one lock + wakeup on dispatch, a [`WorkerCtx::barrier`] wait
+//! per phase boundary (the `upc_barrier` of Listings 5 & 7), and one
+//! completion notification — no allocation, no thread creation.
+//!
+//! Two small unsafe views make the shared-closure dispatch model work
+//! without per-step boxing:
+//!
+//! * [`PerWorker`] — hands worker `t` the `&mut` element `t` of a slice
+//!   (per-thread fields, workspaces, counters). Sound because worker ids are
+//!   distinct, so each element is claimed by exactly one thread per
+//!   dispatch.
+//! * [`ArenaView`] — hands out disjoint `&mut` ranges of the flat staging
+//!   arena (a compiled plan's per-message slots). Sound because plan ranges
+//!   partition the arena, every range is packed by exactly one sender before
+//!   the barrier and only read after it.
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::ops::Range;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Per-dispatch context a worker receives: its id, the dispatch width, and
+/// the pool's reusable barrier for intra-step phase boundaries.
+pub struct WorkerCtx<'p> {
+    /// This worker's id in `0..workers` (the logical UPC thread it plays).
+    pub id: usize,
+    /// Number of workers in this dispatch.
+    pub workers: usize,
+    barrier: &'p PoolBarrier,
+}
+
+impl WorkerCtx<'_> {
+    /// Block until every worker of the dispatch reaches this point — the
+    /// `upc_barrier` between a plan's pack and unpack phases. The job
+    /// closure must call it unconditionally (same count on every worker) or
+    /// the pool deadlocks. Panics if a peer worker panicked this dispatch,
+    /// so a failing worker releases the others instead of stranding them.
+    pub fn barrier(&self) {
+        self.barrier.wait(self.workers);
+    }
+}
+
+/// A reusable sense-counting barrier that can be poisoned: when a worker
+/// panics, [`poison`](PoolBarrier::poison) wakes every waiter and makes
+/// every current and future `wait` of the dispatch panic too, so the whole
+/// job unwinds instead of deadlocking (`std::sync::Barrier` has no
+/// equivalent).
+struct PoolBarrier {
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+struct BarrierState {
+    /// Workers currently parked in `wait`.
+    count: usize,
+    /// Bumped each time a full cohort is released.
+    generation: u64,
+    poisoned: bool,
+}
+
+impl PoolBarrier {
+    fn new() -> PoolBarrier {
+        PoolBarrier {
+            state: Mutex::new(BarrierState { count: 0, generation: 0, poisoned: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn wait(&self, workers: usize) {
+        let mut st = self.state.lock().unwrap();
+        let mut poisoned = st.poisoned;
+        if !poisoned {
+            st.count += 1;
+            if st.count == workers {
+                st.count = 0;
+                st.generation += 1;
+                self.cv.notify_all();
+                return;
+            }
+            let gen = st.generation;
+            while st.generation == gen && !st.poisoned {
+                st = self.cv.wait(st).unwrap();
+            }
+            poisoned = st.poisoned;
+        }
+        // Panic only after the guard is gone, so the mutex is never
+        // poisoned (waiters and `reset` keep using plain `unwrap`).
+        drop(st);
+        if poisoned {
+            panic!("a pool worker panicked during this dispatch");
+        }
+    }
+
+    fn poison(&self) {
+        self.state.lock().unwrap().poisoned = true;
+        self.cv.notify_all();
+    }
+
+    /// Arm the barrier for a fresh dispatch. Sound because `run` only
+    /// returns (and so only re-dispatches) once every worker has left the
+    /// job — no thread can still be inside `wait`.
+    fn reset(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.count = 0;
+        st.poisoned = false;
+    }
+}
+
+/// The job pointer stored while a dispatch is in flight. The lifetime is
+/// erased; soundness comes from `run` blocking until every worker finished.
+type RawJob = *const (dyn Fn(WorkerCtx) + Sync);
+
+struct State {
+    /// Bumped once per dispatch; workers run the job when it advances.
+    epoch: u64,
+    job: Option<RawJob>,
+    /// Workers that have not yet finished the current epoch.
+    remaining: usize,
+    /// First panic payload caught this dispatch; re-raised by `run`.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+// SAFETY: the raw job pointer only crosses threads while `run` blocks the
+// owner; the pointee is `Sync`, so shared calls from workers are sound.
+unsafe impl Send for State {}
+
+struct Control {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    barrier: PoolBarrier,
+}
+
+/// A persistent pool of worker threads, one per logical UPC thread.
+///
+/// Created empty; `run(n, job)` lazily (re)spawns exactly `n` workers and
+/// keeps them across calls, so steady-state time stepping never creates a
+/// thread. Resizing (a run shape change) tears the old workers down and
+/// spawns fresh ones — paid once per shape, like the plan compile itself.
+#[derive(Default)]
+pub struct WorkerPool {
+    workers: Vec<JoinHandle<()>>,
+    control: Option<Arc<Control>>,
+}
+
+impl fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WorkerPool").field("workers", &self.workers.len()).finish()
+    }
+}
+
+impl WorkerPool {
+    pub fn new() -> WorkerPool {
+        WorkerPool::default()
+    }
+
+    /// Number of currently spawned workers (0 until the first dispatch).
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `job(ctx)` on every one of `n` persistent workers and block until
+    /// all of them finished. The closure is shared (`Fn + Sync`): per-worker
+    /// mutable state goes through [`PerWorker`] / [`ArenaView`].
+    ///
+    /// A panic inside the job is caught on the worker, poisons the barrier
+    /// (releasing peers parked at a phase boundary), and is re-raised here
+    /// once every worker has drained — the same observable behavior as the
+    /// `std::thread::scope` join this pool replaced. Workers survive the
+    /// panic, so the pool stays usable.
+    pub fn run(&mut self, n: usize, job: &(dyn Fn(WorkerCtx) + Sync)) {
+        assert!(n > 0, "cannot dispatch on zero workers");
+        self.ensure(n);
+        let control = self.control.as_ref().expect("ensure spawned workers");
+        control.barrier.reset();
+        // SAFETY: erase the borrow lifetime. The pointer is cleared and
+        // never dereferenced again after the wait below observes that every
+        // worker completed the epoch, which happens before `run` returns.
+        let raw: RawJob = unsafe {
+            std::mem::transmute::<&(dyn Fn(WorkerCtx) + Sync), RawJob>(job)
+        };
+        let mut st = control.state.lock().unwrap();
+        st.job = Some(raw);
+        st.remaining = n;
+        st.epoch += 1;
+        control.work_cv.notify_all();
+        while st.remaining > 0 {
+            st = control.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+        if let Some(payload) = st.panic.take() {
+            drop(st);
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.workers.len() == n {
+            return;
+        }
+        self.teardown();
+        let control = Arc::new(Control {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            barrier: PoolBarrier::new(),
+        });
+        self.workers = (0..n)
+            .map(|id| {
+                let control = Arc::clone(&control);
+                std::thread::Builder::new()
+                    .name(format!("upc-worker-{id}"))
+                    .spawn(move || worker_loop(id, n, &control))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        self.control = Some(control);
+    }
+
+    fn teardown(&mut self) {
+        if let Some(control) = self.control.take() {
+            control.state.lock().unwrap().shutdown = true;
+            control.work_cv.notify_all();
+            for w in self.workers.drain(..) {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+fn worker_loop(id: usize, workers: usize, control: &Control) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = control.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.expect("epoch advanced without a job");
+                }
+                st = control.work_cv.wait(st).unwrap();
+            }
+        };
+        // SAFETY: the leader keeps the closure alive until every worker
+        // reports completion below. AssertUnwindSafe: on panic the leader
+        // re-raises before any torn state can be observed (scope semantics).
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            (unsafe { &*job })(WorkerCtx { id, workers, barrier: &control.barrier });
+        }));
+        if result.is_err() {
+            control.barrier.poison();
+        }
+        let mut st = control.state.lock().unwrap();
+        if let Err(payload) = result {
+            st.panic.get_or_insert(payload);
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            control.done_cv.notify_one();
+        }
+    }
+}
+
+/// A view over a slice that hands worker `i` the `&mut` element `i`.
+///
+/// Used for everything "one per logical thread": subdomain fields, private
+/// workspaces, per-worker counters.
+pub struct PerWorker<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _life: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: disjoint `&mut` access is guaranteed by the `take` contract;
+// moving those borrows across threads needs `T: Send`.
+unsafe impl<T: Send> Sync for PerWorker<'_, T> {}
+
+impl<'a, T> PerWorker<'a, T> {
+    pub fn new(items: &'a mut [T]) -> PerWorker<'a, T> {
+        PerWorker { ptr: items.as_mut_ptr(), len: items.len(), _life: PhantomData }
+    }
+
+    /// Element `i`, mutably.
+    ///
+    /// # Safety
+    /// Each index must be claimed by at most one worker per dispatch (pool
+    /// workers claim their `ctx.id`), and the borrow must end before the
+    /// dispatch completes.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn take(&self, i: usize) -> &mut T {
+        assert!(i < self.len, "worker index {i} out of {}", self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+/// A view over the flat staging arena that hands out per-message ranges.
+pub struct ArenaView<'a> {
+    ptr: *mut f64,
+    len: usize,
+    _life: PhantomData<&'a mut [f64]>,
+}
+
+// SAFETY: see the `slice_mut`/`slice` contracts — compiled-plan ranges are
+// disjoint, and reads happen only after the barrier that ends the writes.
+unsafe impl Sync for ArenaView<'_> {}
+
+impl<'a> ArenaView<'a> {
+    pub fn new(arena: &'a mut [f64]) -> ArenaView<'a> {
+        ArenaView { ptr: arena.as_mut_ptr(), len: arena.len(), _life: PhantomData }
+    }
+
+    /// One message's slot range, mutably (the sender's `upc_memput` target).
+    ///
+    /// # Safety
+    /// Ranges handed out mutably in one phase must be pairwise disjoint
+    /// (compiled plans guarantee their messages partition the arena), and
+    /// must not overlap concurrent `slice` reads — separate the phases with
+    /// [`WorkerCtx::barrier`].
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, r: Range<usize>) -> &mut [f64] {
+        assert!(r.start <= r.end && r.end <= self.len, "arena range {r:?} out of {}", self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(r.start), r.end - r.start)
+    }
+
+    /// One message's slot range, shared (the receiver's unpack source).
+    ///
+    /// # Safety
+    /// No worker may hold a `slice_mut` overlapping `r` concurrently.
+    pub unsafe fn slice(&self, r: Range<usize>) -> &[f64] {
+        assert!(r.start <= r.end && r.end <= self.len, "arena range {r:?} out of {}", self.len);
+        std::slice::from_raw_parts(self.ptr.add(r.start), r.end - r.start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn dispatch_runs_every_worker_once() {
+        let mut pool = WorkerPool::new();
+        for round in 1..=3u64 {
+            let hits = AtomicU64::new(0);
+            pool.run(4, &|ctx| {
+                hits.fetch_add(1 << (8 * ctx.id), Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 0x01010101, "round {round}");
+        }
+        assert_eq!(pool.size(), 4);
+    }
+
+    #[test]
+    fn per_worker_gives_disjoint_muts() {
+        let mut pool = WorkerPool::new();
+        let mut data = vec![0usize; 6];
+        let view = PerWorker::new(&mut data);
+        pool.run(6, &|ctx| {
+            // SAFETY: each worker claims only its own id.
+            let slot = unsafe { view.take(ctx.id) };
+            *slot = ctx.id * 10;
+        });
+        assert_eq!(data, vec![0, 10, 20, 30, 40, 50]);
+    }
+
+    #[test]
+    fn barrier_separates_phases() {
+        // Phase 1 writes arena[id]; phase 2 reads the *next* worker's slot.
+        // Without the barrier this would race; with it the read is ordered.
+        let mut pool = WorkerPool::new();
+        let n = 5usize;
+        let mut arena = vec![0.0f64; n];
+        let mut out = vec![0.0f64; n];
+        let av = ArenaView::new(&mut arena);
+        let ov = PerWorker::new(&mut out);
+        pool.run(n, &|ctx| {
+            let t = ctx.id;
+            // SAFETY: slot t written only by worker t before the barrier.
+            unsafe { av.slice_mut(t..t + 1) }[0] = (t * t) as f64;
+            ctx.barrier();
+            // SAFETY: writes ended at the barrier; reads are shared.
+            let peer = (t + 1) % ctx.workers;
+            let v = unsafe { av.slice(peer..peer + 1) }[0];
+            // SAFETY: each worker claims only its own output slot.
+            *unsafe { ov.take(t) } = v;
+        });
+        for t in 0..n {
+            assert_eq!(out[t], (((t + 1) % n) * ((t + 1) % n)) as f64);
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let mut pool = WorkerPool::new();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, &|ctx| {
+                if ctx.id == 2 {
+                    panic!("boom");
+                }
+                // Peers parked here must be released by the poison, not
+                // stranded waiting for the panicked worker.
+                ctx.barrier();
+            });
+        }));
+        assert!(res.is_err(), "worker panic must reach the dispatcher");
+        // The pool (workers, barrier) remains usable afterwards.
+        let hits = AtomicU64::new(0);
+        pool.run(4, &|ctx| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            ctx.barrier();
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn pool_resizes_across_dispatch_widths() {
+        let mut pool = WorkerPool::new();
+        for &n in &[3usize, 8, 1, 8] {
+            let hits = AtomicU64::new(0);
+            pool.run(n, &|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed) as usize, n);
+            assert_eq!(pool.size(), n);
+        }
+    }
+
+    #[test]
+    fn borrowed_state_survives_dispatch() {
+        // The job borrows stack data; `run` must not return before workers
+        // stopped touching it.
+        let mut pool = WorkerPool::new();
+        for _ in 0..50 {
+            let mut sums = vec![0u64; 4];
+            let view = PerWorker::new(&mut sums);
+            pool.run(4, &|ctx| {
+                let s = unsafe { view.take(ctx.id) };
+                for k in 0..1000u64 {
+                    *s += k;
+                }
+            });
+            assert!(sums.iter().all(|&s| s == 499_500));
+        }
+    }
+}

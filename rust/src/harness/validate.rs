@@ -16,10 +16,12 @@
 use super::{HarnessConfig, Workspace};
 use crate::comm::Analysis;
 use crate::engine::SpmvEngine;
+use crate::heat2d::Heat2dSolver;
 use crate::mesh::{Ordering, TestProblem};
-use crate::model::{self, SpmvInputs};
+use crate::model::{self, HeatGrid, SpmvInputs};
 use crate::pgas::{Layout, Topology};
 use crate::spmv::{SpmvState, Variant};
+use crate::stencil3d::{Stencil3dGrid, Stencil3dSolver};
 use crate::util::fmt::{self, int, Table};
 use crate::util::json::Value;
 use crate::util::Stats;
@@ -48,10 +50,36 @@ impl ValidationPoint {
     }
 }
 
+/// One measured-vs-predicted point for a grid workload on the exchange
+/// runtime (heat-2D, the 3D stencil).
+#[derive(Debug, Clone)]
+pub struct WorkloadPoint {
+    /// `"heat2d"` or `"stencil3d"`.
+    pub workload: &'static str,
+    /// Human-readable geometry, e.g. `"624x624 / 2x4"`.
+    pub geometry: String,
+    /// Interior cells per step.
+    pub cells: usize,
+    pub nodes: usize,
+    pub threads_per_node: usize,
+    /// Median wall-clock seconds of one solver step.
+    pub measured: f64,
+    /// Model-predicted seconds for one step (halo + compute).
+    pub predicted: f64,
+}
+
+impl WorkloadPoint {
+    pub fn ratio(&self) -> f64 {
+        self.measured / self.predicted
+    }
+}
+
 /// The full validation outcome: every point plus the rendered artifacts.
 #[derive(Debug, Clone)]
 pub struct ValidationReport {
     pub points: Vec<ValidationPoint>,
+    /// Grid workloads on the exchange runtime, same methodology.
+    pub workloads: Vec<WorkloadPoint>,
     pub table: Table,
     /// `BENCH_model.json` document.
     pub json: Value,
@@ -62,6 +90,11 @@ impl ValidationReport {
     /// (NaN when the variant has no finite points).
     pub fn geomean_ratio(&self, variant: Variant) -> f64 {
         geomean_for(&self.points, variant)
+    }
+
+    /// Geometric-mean accuracy ratio for one grid workload.
+    pub fn workload_geomean(&self, workload: &str) -> f64 {
+        geomean(self.workloads.iter().filter(|p| p.workload == workload).map(WorkloadPoint::ratio))
     }
 }
 
@@ -90,13 +123,7 @@ fn geomean(ratios: impl Iterator<Item = f64>) -> f64 {
 /// regimes (the paper schedule and a 4× finer blocking). Thread counts are
 /// capped by the host so every logical UPC thread gets a real core.
 fn sweep(cfg: &HarnessConfig) -> Vec<(TestProblem, usize, usize, usize)> {
-    let host = crate::microbench::host_threads();
-    // Largest power of two ≤ min(host, 8): keeps one OS thread per core and
-    // the topologies cleanly divisible.
-    let mut t_all = 1usize;
-    while t_all * 2 <= host.min(8) {
-        t_all *= 2;
-    }
+    let t_all = host_pow2_threads();
     let paper_bs = |threads: usize| {
         crate::coordinator::RunConfig::paper_blocksize(threads, cfg.scale_div)
     };
@@ -109,9 +136,117 @@ fn sweep(cfg: &HarnessConfig) -> Vec<(TestProblem, usize, usize, usize)> {
     configs
 }
 
+/// Largest power of two ≤ min(host cores, 8): one OS thread per core and
+/// cleanly divisible topologies.
+fn host_pow2_threads() -> usize {
+    let host = crate::microbench::host_threads();
+    let mut t_all = 1usize;
+    while t_all * 2 <= host.min(8) {
+        t_all *= 2;
+    }
+    t_all
+}
+
+/// Median wall-clock seconds of one `step()` call, after one warmup step
+/// (which spawns the persistent pool and primes its workspaces). The one
+/// sampling protocol every grid workload is measured with.
+fn median_step_seconds(mut step: impl FnMut(), steps: usize) -> f64 {
+    step(); // warmup
+    let mut samples = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let t0 = Instant::now();
+        step();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from(&samples).p50
+}
+
+/// Measure the grid workloads (heat-2D and the 3D stencil, both on the
+/// shared exchange runtime) and predict each with the eqs. (19)–(22)
+/// models. One solver per workload through [`median_step_seconds`]; the
+/// median is compared against each sweep topology's prediction.
+fn workload_validation(cfg: &HarnessConfig, steps: usize) -> Vec<WorkloadPoint> {
+    let t_all = host_pow2_threads();
+    let hw_run = cfg.hw.with_threads_per_node(t_all);
+    let mut topos = vec![(1usize, t_all)];
+    if t_all >= 2 {
+        topos.push((2, t_all / 2));
+    }
+    // Round a global extent down to a multiple of the axis split, keeping
+    // at least 4 cells per subdomain.
+    let fit = |g: usize, parts: usize| ((g / parts).max(4)) * parts;
+    let mut out = Vec::new();
+
+    // heat-2D on a near-square thread grid, mesh scaled like the problems.
+    let (mp, np) = {
+        let mut mp = 1usize;
+        while mp * 2 * mp <= t_all {
+            mp *= 2;
+        }
+        (mp, t_all / mp)
+    };
+    let base2 = (20_000 / cfg.scale_div.max(1)).clamp(8, 4096);
+    let grid2 = HeatGrid::new(fit(base2, mp), fit(base2, np), mp, np);
+    let mut rng = crate::util::Rng::new(0x41EA7);
+    let f0: Vec<f64> = (0..grid2.m_glob * grid2.n_glob).map(|_| rng.f64_in(0.0, 100.0)).collect();
+    let mut solver = Heat2dSolver::new(grid2, &f0);
+    let measured = median_step_seconds(|| solver.step_with(cfg.engine), steps);
+    for &(nodes, tpn) in &topos {
+        let p = model::predict_heat2d(&grid2, &Topology::new(nodes, tpn), &hw_run);
+        out.push(WorkloadPoint {
+            workload: "heat2d",
+            geometry: format!("{}x{} / {mp}x{np}", grid2.m_glob, grid2.n_glob),
+            cells: grid2.m_glob * grid2.n_glob,
+            nodes,
+            threads_per_node: tpn,
+            measured,
+            predicted: p.t_halo + p.t_comp,
+        });
+    }
+
+    // 3D stencil: split the same thread budget across three axes.
+    let (pp, mp3, np3) = {
+        let l = t_all.trailing_zeros() as usize;
+        let pp = 1usize << (l / 3);
+        let mp3 = 1usize << ((l + 1) / 3);
+        (pp, mp3, t_all / (pp * mp3))
+    };
+    let base3 = (2_560 / cfg.scale_div.max(1)).clamp(10, 192);
+    let grid3 = Stencil3dGrid::new(
+        fit(base3, pp),
+        fit(base3, mp3),
+        fit(base3, np3),
+        pp,
+        mp3,
+        np3,
+    );
+    let f0: Vec<f64> = (0..grid3.p_glob * grid3.m_glob * grid3.n_glob)
+        .map(|_| rng.f64_in(0.0, 100.0))
+        .collect();
+    let mut solver = Stencil3dSolver::new(grid3, &f0);
+    let measured = median_step_seconds(|| solver.step_with(cfg.engine), steps);
+    for &(nodes, tpn) in &topos {
+        let p = model::predict_stencil3d(&grid3, &Topology::new(nodes, tpn), &hw_run);
+        out.push(WorkloadPoint {
+            workload: "stencil3d",
+            geometry: format!(
+                "{}x{}x{} / {pp}x{mp3}x{np3}",
+                grid3.p_glob, grid3.m_glob, grid3.n_glob
+            ),
+            cells: grid3.p_glob * grid3.m_glob * grid3.n_glob,
+            nodes,
+            threads_per_node: tpn,
+            measured,
+            predicted: p.t_halo + p.t_comp,
+        });
+    }
+    out
+}
+
 /// Run the validation: all four variants on `cfg.engine` (the parallel
 /// worker pool unless `--engine seq` asks for the oracle) across the
-/// `sweep` layouts, each predicted with `cfg.hw`. `steps` wall-clock
+/// `sweep` layouts, each predicted with `cfg.hw`, plus the heat-2D and
+/// 3D-stencil workloads on the exchange runtime. `steps` wall-clock
 /// samples are taken per point (median reported); one extra warmup
 /// iteration primes the pool's workspaces.
 pub fn model_validation(cfg: &HarnessConfig, ws: &mut Workspace, steps: usize) -> ValidationReport {
@@ -177,6 +312,22 @@ pub fn model_validation(cfg: &HarnessConfig, ws: &mut Workspace, steps: usize) -
             points.push(point);
         }
     }
+    // Grid workloads on the exchange runtime: same measured-vs-predicted
+    // methodology, one row per sweep topology.
+    let workloads = workload_validation(cfg, steps);
+    for p in &workloads {
+        table.row(vec![
+            p.workload.to_string(),
+            p.geometry.clone(),
+            format!("{}x{}", p.nodes, p.threads_per_node),
+            "-".to_string(),
+            "halo+comp".to_string(),
+            fmt::secs(p.measured),
+            fmt::secs(p.predicted),
+            format!("{:.2}x", p.ratio()),
+        ]);
+    }
+
     // Per-variant accuracy summary (geometric mean across layouts).
     let mut accuracy = Value::obj();
     for variant in Variant::ALL {
@@ -193,16 +344,33 @@ pub fn model_validation(cfg: &HarnessConfig, ws: &mut Workspace, steps: usize) -
         ]);
         accuracy.set(variant.name(), Value::Num(g));
     }
+    let mut workload_accuracy = Value::obj();
+    for w in ["heat2d", "stencil3d"] {
+        let g = geomean(workloads.iter().filter(|p| p.workload == w).map(WorkloadPoint::ratio));
+        table.row(vec![
+            "accuracy".to_string(),
+            String::new(),
+            String::new(),
+            String::new(),
+            w.to_string(),
+            String::new(),
+            String::new(),
+            format!("{g:.2}x"),
+        ]);
+        workload_accuracy.set(w, Value::Num(g));
+    }
 
-    let json = report_json(cfg, steps, &points, &accuracy);
-    ValidationReport { points, table, json }
+    let json = report_json(cfg, steps, &points, &workloads, &accuracy, &workload_accuracy);
+    ValidationReport { points, workloads, table, json }
 }
 
 fn report_json(
     cfg: &HarnessConfig,
     steps: usize,
     points: &[ValidationPoint],
+    workloads: &[WorkloadPoint],
     accuracy: &Value,
+    workload_accuracy: &Value,
 ) -> Value {
     let mut results = Vec::with_capacity(points.len());
     for p in points {
@@ -226,7 +394,22 @@ fn report_json(
     root.set("scale_div", Value::Num(cfg.scale_div as f64));
     root.set("samples_per_point", Value::Num(steps as f64));
     root.set("results", Value::Arr(results));
+    let mut wl = Vec::with_capacity(workloads.len());
+    for p in workloads {
+        let mut o = Value::obj();
+        o.set("workload", Value::Str(p.workload.to_string()));
+        o.set("geometry", Value::Str(p.geometry.clone()));
+        o.set("cells", Value::Num(p.cells as f64));
+        o.set("nodes", Value::Num(p.nodes as f64));
+        o.set("threads_per_node", Value::Num(p.threads_per_node as f64));
+        o.set("measured_s_per_step", Value::Num(p.measured));
+        o.set("predicted_s_per_step", Value::Num(p.predicted));
+        o.set("ratio", Value::Num(p.ratio()));
+        wl.push(o);
+    }
+    root.set("workloads", Value::Arr(wl));
     root.set("accuracy_geomean", accuracy.clone());
+    root.set("workload_accuracy_geomean", workload_accuracy.clone());
     root
 }
 
@@ -240,6 +423,19 @@ mod tests {
         assert!((geomean([4.0].into_iter()) - 4.0).abs() < 1e-12);
         assert!(geomean([f64::NAN].into_iter()).is_nan());
         assert!(geomean(std::iter::empty()).is_nan());
+    }
+
+    #[test]
+    fn workload_points_cover_both_grid_workloads() {
+        let cfg = HarnessConfig::test_sized();
+        let points = workload_validation(&cfg, 3);
+        assert!(points.iter().any(|p| p.workload == "heat2d"));
+        assert!(points.iter().any(|p| p.workload == "stencil3d"));
+        for p in &points {
+            assert!(p.measured > 0.0, "{}: non-positive measurement", p.workload);
+            assert!(p.predicted > 0.0, "{}: non-positive prediction", p.workload);
+            assert!(p.ratio().is_finite());
+        }
     }
 
     #[test]

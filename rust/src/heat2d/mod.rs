@@ -7,8 +7,13 @@
 //! (pack horizontal → barrier → `upc_memget` from all ≤ 4 neighbours +
 //! unpack) followed by the 5-point Jacobi update (Listing 8).
 //!
-//! * [`Heat2dSolver`] executes real numerics on per-thread storage and is
-//!   validated against a sequential reference.
+//! * [`Heat2dSolver`] executes real numerics on per-thread storage through
+//!   the unified exchange runtime — the halo pattern is compiled once into
+//!   a [`StridedPlan`](crate::comm::StridedPlan) and replayed through the
+//!   persistent staging arena + worker pool
+//!   ([`ExchangeRuntime`](crate::engine::ExchangeRuntime)), so a steady
+//!   time step allocates and spawns nothing — and is validated against a
+//!   sequential reference.
 //! * [`simulate_heat_step`] produces the "measured" per-step times for
 //!   Table 5 on the simulated cluster (the model side is
 //!   [`crate::model::predict_heat2d`]).

@@ -1,18 +1,81 @@
-//! Executable heat-2D solver with per-thread storage and real halo traffic
-//! (Listings 7 & 8), validated against a sequential reference.
+//! Executable heat-2D solver on the unified exchange runtime (Listings 7 &
+//! 8), validated against a sequential reference.
+//!
+//! The halo pattern is compiled **once** from the grid into a
+//! [`StridedPlan`] — vertical halos as contiguous row strips (the
+//! `upc_memget` of Listing 7), horizontal halos as strided columns (the
+//! pack/unpack scratch arrays) — and every time step replays it through the
+//! [`ExchangeRuntime`]'s persistent staging arena and worker pool. A
+//! steady-state step allocates nothing and spawns nothing on either engine.
 
-use crate::engine::Engine;
+use crate::comm::{StridedBlock, StridedPlan};
+use crate::engine::{Engine, ExchangeRuntime};
 use crate::model::HeatGrid;
 
-/// Per-thread subdomain state: `phi` (with halo) and the scratch vectors of
-/// Listing 7 for horizontal pack/unpack.
-#[derive(Debug, Clone)]
+/// Compile the grid's halo exchange into a strided block-copy plan.
+///
+/// Per thread, in the legacy unpack order (left, right, up, down):
+/// neighbours' boundary interior columns/rows → this thread's halo
+/// column/row. Column strips are strided (`col_stride = n`), row strips
+/// contiguous — exactly the shapes eq. (19) charges pack time for.
+fn halo_plan(grid: &HeatGrid) -> StridedPlan {
+    let (m, n) = grid.subdomain();
+    let mut copies = Vec::new();
+    for t in 0..grid.threads() {
+        let (ip, kp) = grid.coords(t);
+        // Left neighbour's last interior column → my col 0.
+        if kp > 0 {
+            copies.push((
+                grid.rank(ip, kp - 1),
+                t,
+                StridedBlock::column(n + (n - 2), m - 2, n),
+                StridedBlock::column(n, m - 2, n),
+            ));
+        }
+        // Right neighbour's first interior column → my col n−1.
+        if kp < grid.nprocs - 1 {
+            copies.push((
+                grid.rank(ip, kp + 1),
+                t,
+                StridedBlock::column(n + 1, m - 2, n),
+                StridedBlock::column(n + (n - 1), m - 2, n),
+            ));
+        }
+        // Upper neighbour's last interior row → my row 0 (contiguous).
+        if ip > 0 {
+            copies.push((
+                grid.rank(ip - 1, kp),
+                t,
+                StridedBlock::row((m - 2) * n + 1, n - 2),
+                StridedBlock::row(1, n - 2),
+            ));
+        }
+        // Lower neighbour's first interior row → my row m−1.
+        if ip < grid.mprocs - 1 {
+            copies.push((
+                grid.rank(ip + 1, kp),
+                t,
+                StridedBlock::row(n + 1, n - 2),
+                StridedBlock::row((m - 1) * n + 1, n - 2),
+            ));
+        }
+    }
+    let plan = StridedPlan::from_msgs(grid.threads(), &copies);
+    debug_assert!(plan.validate(&|_| m * n).is_ok());
+    plan
+}
+
+/// Per-thread subdomain state (`phi`/`phin` of Listing 8) plus the compiled
+/// exchange runtime.
+#[derive(Debug)]
 pub struct Heat2dSolver {
     pub grid: HeatGrid,
     /// `phi[t]` — the m×n (halo-included) field of thread t, row-major.
     phi: Vec<Vec<f64>>,
     /// New-timestep buffers (`phin` in Listing 8).
     phin: Vec<Vec<f64>>,
+    /// Compiled halo plan + staging arena + persistent worker pool.
+    runtime: ExchangeRuntime,
     /// Halo-exchange byte counter (payload crossing thread boundaries).
     pub inter_thread_bytes: u64,
 }
@@ -45,7 +108,13 @@ impl Heat2dSolver {
             phi.push(field);
         }
         let phin = phi.clone();
-        Heat2dSolver { grid, phi, phin, inter_thread_bytes: 0 }
+        let runtime = ExchangeRuntime::new(halo_plan(&grid));
+        Heat2dSolver { grid, phi, phin, runtime, inter_thread_bytes: 0 }
+    }
+
+    /// The compiled exchange runtime (plan + arena + pool).
+    pub fn runtime(&self) -> &ExchangeRuntime {
+        &self.runtime
     }
 
     /// One time step: halo exchange then 5-point Jacobi update (on the
@@ -54,21 +123,16 @@ impl Heat2dSolver {
         self.step_with(Engine::Sequential);
     }
 
-    /// One time step on the chosen engine. Both engines produce bitwise
-    /// identical fields and identical halo byte counts;
-    /// [`Engine::Parallel`] runs one OS thread per grid thread.
+    /// One time step on the chosen engine. Both engines replay the same
+    /// compiled plan with the same pack/unpack/update code, so fields and
+    /// halo byte counts are bitwise identical; [`Engine::Parallel`] runs one
+    /// persistent pool worker per grid thread.
     pub fn step_with(&mut self, engine: Engine) {
-        match engine {
-            Engine::Sequential => self.step_seq(),
-            Engine::Parallel => self.step_par(),
-        }
-    }
-
-    fn step_seq(&mut self) {
-        self.halo_exchange();
-        for t in 0..self.grid.threads() {
-            Self::jacobi_update(self.grid, t, &self.phi[t], &mut self.phin[t]);
-        }
+        let grid = self.grid;
+        self.runtime.step_strided(engine, &mut self.phi, &mut self.phin, |t, phi, phin| {
+            Self::jacobi_update(grid, t, phi, phin);
+        });
+        self.inter_thread_bytes += self.runtime.payload_bytes();
         std::mem::swap(&mut self.phi, &mut self.phin);
     }
 
@@ -107,131 +171,6 @@ impl Heat2dSolver {
         if kp == grid.nprocs - 1 {
             for i in 0..m {
                 phin[i * n + n - 2] = phi[i * n + n - 2];
-            }
-        }
-    }
-
-    /// Parallel step: stage every boundary strip before the barrier (the
-    /// Listing 7 pack phase, extended to the row strips `upc_memget` reads),
-    /// then run one worker per thread that unpacks its halos and applies the
-    /// Jacobi update on its own `(phi, phin)` pair — all cross-thread reads
-    /// go through the staged strips, so workers share nothing mutable.
-    fn step_par(&mut self) {
-        let grid = self.grid;
-        let (m, n) = grid.subdomain();
-        struct Strips {
-            col_first: Vec<f64>,
-            col_last: Vec<f64>,
-            row_first: Vec<f64>,
-            row_last: Vec<f64>,
-        }
-        let strips: Vec<Strips> = (0..grid.threads())
-            .map(|t| {
-                let phi = &self.phi[t];
-                Strips {
-                    col_first: (1..m - 1).map(|i| phi[i * n + 1]).collect(),
-                    col_last: (1..m - 1).map(|i| phi[i * n + n - 2]).collect(),
-                    row_first: phi[n + 1..n + n - 1].to_vec(),
-                    row_last: phi[(m - 2) * n + 1..(m - 2) * n + n - 1].to_vec(),
-                }
-            })
-            .collect();
-        // ---- upc_barrier ----
-        let strips = &strips;
-        let mut bytes = vec![0u64; grid.threads()];
-        std::thread::scope(|s| {
-            for ((t, (phi, phin)), byt) in self
-                .phi
-                .iter_mut()
-                .zip(self.phin.iter_mut())
-                .enumerate()
-                .zip(bytes.iter_mut())
-            {
-                s.spawn(move || {
-                    let (ip, kp) = grid.coords(t);
-                    let mut local_bytes = 0u64;
-                    // Halo unpack, same neighbour order as the sequential
-                    // path (left, right, up, down).
-                    if kp > 0 {
-                        let src = &strips[grid.rank(ip, kp - 1)].col_last;
-                        local_bytes += (src.len() * 8) as u64;
-                        for (i, v) in src.iter().enumerate() {
-                            phi[(i + 1) * n] = *v;
-                        }
-                    }
-                    if kp < grid.nprocs - 1 {
-                        let src = &strips[grid.rank(ip, kp + 1)].col_first;
-                        local_bytes += (src.len() * 8) as u64;
-                        for (i, v) in src.iter().enumerate() {
-                            phi[(i + 1) * n + n - 1] = *v;
-                        }
-                    }
-                    if ip > 0 {
-                        let src = &strips[grid.rank(ip - 1, kp)].row_last;
-                        local_bytes += (src.len() * 8) as u64;
-                        phi[1..n - 1].copy_from_slice(src);
-                    }
-                    if ip < grid.mprocs - 1 {
-                        let src = &strips[grid.rank(ip + 1, kp)].row_first;
-                        local_bytes += (src.len() * 8) as u64;
-                        phi[(m - 1) * n + 1..(m - 1) * n + n - 1].copy_from_slice(src);
-                    }
-                    Self::jacobi_update(grid, t, phi, phin);
-                    *byt = local_bytes;
-                });
-            }
-        });
-        self.inter_thread_bytes += bytes.iter().sum::<u64>();
-        std::mem::swap(&mut self.phi, &mut self.phin);
-    }
-
-    /// Listing 7: vertical halos are contiguous `upc_memget`s; horizontal
-    /// halos are packed into scratch vectors, fetched, and unpacked.
-    fn halo_exchange(&mut self) {
-        let grid = self.grid;
-        let (m, n) = grid.subdomain();
-        // Pack phase: each thread exposes its first/last interior columns.
-        let mut col_first: Vec<Vec<f64>> = Vec::with_capacity(grid.threads());
-        let mut col_last: Vec<Vec<f64>> = Vec::with_capacity(grid.threads());
-        for t in 0..grid.threads() {
-            let phi = &self.phi[t];
-            col_first.push((1..m - 1).map(|i| phi[i * n + 1]).collect());
-            col_last.push((1..m - 1).map(|i| phi[i * n + n - 2]).collect());
-        }
-        // ---- upc_barrier ----
-        // Transfer + unpack phase.
-        for t in 0..grid.threads() {
-            let (ip, kp) = grid.coords(t);
-            // Left neighbour's last column → my col 0.
-            if kp > 0 {
-                let src = &col_last[grid.rank(ip, kp - 1)];
-                self.inter_thread_bytes += (src.len() * 8) as u64;
-                for (i, v) in src.iter().enumerate() {
-                    self.phi[t][(i + 1) * n] = *v;
-                }
-            }
-            // Right neighbour's first column → my col n−1.
-            if kp < grid.nprocs - 1 {
-                let src = &col_first[grid.rank(ip, kp + 1)];
-                self.inter_thread_bytes += (src.len() * 8) as u64;
-                for (i, v) in src.iter().enumerate() {
-                    self.phi[t][(i + 1) * n + n - 1] = *v;
-                }
-            }
-            // Upper neighbour's last interior row → my row 0 (contiguous).
-            if ip > 0 {
-                let peer = grid.rank(ip - 1, kp);
-                let row: Vec<f64> =
-                    self.phi[peer][(m - 2) * n + 1..(m - 2) * n + n - 1].to_vec();
-                self.inter_thread_bytes += (row.len() * 8) as u64;
-                self.phi[t][1..n - 1].copy_from_slice(&row);
-            }
-            // Lower neighbour's first interior row → my row m−1.
-            if ip < grid.mprocs - 1 {
-                let peer = grid.rank(ip + 1, kp);
-                let row: Vec<f64> = self.phi[peer][n + 1..n + n - 1].to_vec();
-                self.inter_thread_bytes += (row.len() * 8) as u64;
-                self.phi[t][(m - 1) * n + 1..(m - 1) * n + n - 1].copy_from_slice(&row);
             }
         }
     }
@@ -325,6 +264,23 @@ mod tests {
         // Each of 4 threads has 2 neighbours; message length = 12 doubles.
         // Total = 8 messages · 12 · 8 bytes.
         assert_eq!(solver.inter_thread_bytes, 8 * 12 * 8);
+        assert_eq!(solver.runtime().plan().num_messages(), 8);
+        assert_eq!(solver.runtime().plan().total_values(), 8 * 12);
+    }
+
+    #[test]
+    fn compiled_plan_is_consistent() {
+        for (mg, ng, mp, np) in
+            [(36usize, 48usize, 3usize, 4usize), (16, 16, 1, 1), (12, 60, 1, 6), (60, 12, 6, 1)]
+        {
+            let grid = HeatGrid::new(mg, ng, mp, np);
+            let (m, n) = grid.subdomain();
+            let plan = halo_plan(&grid);
+            plan.validate(&|_| m * n).unwrap();
+            // One message per directed neighbour pair.
+            let expected: usize = (0..grid.threads()).map(|t| grid.neighbours(t).len()).sum();
+            assert_eq!(plan.num_messages(), expected, "{mp}x{np}");
+        }
     }
 
     #[test]

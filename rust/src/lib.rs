@@ -23,12 +23,15 @@
 //!   §5 models need, and the condensed/consolidated communication plan.
 //! * [`spmv`] — executable implementations of the paper's Listings 1–5.
 //! * [`engine`] — execution-engine selection: the sequential oracle vs the
-//!   parallel worker pool (one OS thread per UPC thread over the compiled
-//!   communication plan).
+//!   persistent parallel worker pool (one long-lived OS thread per UPC
+//!   thread over the compiled communication plan), plus the
+//!   workload-agnostic exchange runtime all grid workloads share.
 //! * [`model`] — the performance-model engine (eqs. (5)–(18), (19)–(22)).
 //! * [`sim`] — the simulated cluster with per-thread clocks and per-node NIC
 //!   serialization that produces "measured" times.
 //! * [`heat2d`] — the §8 2D heat-equation solver and its model.
+//! * [`stencil3d`] — a 3D 7-point-stencil diffusion workload compiled onto
+//!   the same exchange runtime (the "not limited to UPC" demonstration).
 //! * [`microbench`] — STREAM / ping-pong / τ microbenchmarks (§6.2).
 //! * [`runtime`] — PJRT bridge loading AOT-compiled HLO-text artifacts
 //!   produced by the Python compile path (`python/compile/`).
@@ -53,6 +56,7 @@ pub mod pgas;
 pub mod runtime;
 pub mod sim;
 pub mod spmv;
+pub mod stencil3d;
 pub mod testing;
 pub mod util;
 

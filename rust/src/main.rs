@@ -13,8 +13,11 @@
 //! * `repro run [--variant v3] [--nodes N] [--tpn T] [--steps S]
 //!   [--backend native|pjrt] [--problem tp1|tp2|tp3] [--scale N]` —
 //!   end-to-end diffusion driver.
+//! * `repro heat` / `repro stencil` — the grid workloads (§8 2D heat, 3D
+//!   7-point stencil) on the unified exchange runtime.
 //! * `repro validate [model]` — measured (parallel engine wall-clock) vs
-//!   predicted (calibrated models) for all four variants.
+//!   predicted (calibrated models) for all four variants plus the grid
+//!   workloads.
 //! * `repro validate pjrt` — numeric equivalence native ↔ PJRT artifacts.
 //!
 //! Every model/simulator consumer takes `--hw abel|host|file:<path>` to
@@ -99,6 +102,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "calibrate" => cmd_calibrate(args),
         "run" => cmd_run(args),
         "heat" => cmd_heat(args),
+        "stencil" => cmd_stencil(args),
         "validate" => match args.positional.first().map(|s| s.as_str()) {
             None | Some("model") => cmd_validate_model(args),
             Some("pjrt") => cmd_validate_pjrt(args),
@@ -129,6 +133,8 @@ SUBCOMMANDS
   run         end-to-end 3D diffusion driver (v^l = M v^{l-1})
   heat        §8 2D heat solver: real numerics + Table-5-style prediction
               (--m 512 --nprocs 4 --mprocs 4 --steps 50)
+  stencil     3D 7-point-stencil diffusion on the same exchange runtime
+              (--p 64 --pprocs 1 --mprocs 2 --nprocs 2 --steps 20)
   validate [model]  measured-vs-predicted: all four variants on the parallel
               engine, wall-clock vs the calibrated eqs. (5)-(18) models
               (--hw host by default; --steps S samples/point; emits
@@ -304,6 +310,10 @@ fn cmd_validate_model(args: &Args) -> Result<()> {
         let g = report.geomean_ratio(variant);
         println!("{:<9} measured/predicted geomean = {g:.2}x", variant.name());
     }
+    for workload in ["heat2d", "stencil3d"] {
+        let g = report.workload_geomean(workload);
+        println!("{workload:<9} measured/predicted geomean = {g:.2}x");
+    }
     Ok(())
 }
 
@@ -384,6 +394,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Map a logical thread count onto a simulated cluster shape: the most
+/// threads per node the Abel-style 16-core nodes can hold **while exactly
+/// factoring `threads`** (the models assert `nodes · tpn == threads`, so
+/// `threads/16` rounding is not an option for, say, 24 threads).
+fn cluster_shape(threads: usize) -> (usize, usize) {
+    let tpn = (1..=threads.min(16)).rev().find(|d| threads % d == 0).unwrap_or(1);
+    (threads / tpn, tpn)
+}
+
 fn cmd_heat(args: &Args) -> Result<()> {
     use upcsim::heat2d::{seq_reference_step, simulate_heat_step, Heat2dSolver};
     use upcsim::model::{predict_heat2d, HeatGrid};
@@ -399,10 +418,11 @@ fn cmd_heat(args: &Args) -> Result<()> {
     args.finish()?;
     let grid = HeatGrid::new(mg, ng, mp, np);
     let threads = grid.threads();
-    let topo = Topology::new((threads / 16).max(1), threads.min(16));
+    let (nodes, tpn) = cluster_shape(threads);
+    let topo = Topology::new(nodes, tpn);
     // Rescale the per-thread bandwidth share to the threads actually
     // sharing a node (§5.1), as the SpMV consumers do.
-    let hw = hw.with_threads_per_node(threads.min(16));
+    let hw = hw.with_threads_per_node(tpn);
 
     // Real numerics vs the sequential stencil.
     let mut rng = upcsim::util::Rng::new(7);
@@ -432,6 +452,69 @@ fn cmd_heat(args: &Args) -> Result<()> {
         fmt::secs(sim.t_halo * 1000.0),
         fmt::secs(model.t_halo * 1000.0),
         fmt::secs(sim.t_comp * 1000.0),
+        fmt::secs(model.t_comp * 1000.0),
+    );
+    Ok(())
+}
+
+fn cmd_stencil(args: &Args) -> Result<()> {
+    use upcsim::model::predict_stencil3d;
+    use upcsim::pgas::Topology;
+    use upcsim::stencil3d::{seq_reference_step3d, Stencil3dGrid, Stencil3dSolver};
+    let pg = args.usize_flag("p", 64)?;
+    let mg = args.usize_flag("m", pg)?;
+    let ng = args.usize_flag("n", mg)?;
+    let pp = args.usize_flag("pprocs", 1)?;
+    let mp = args.usize_flag("mprocs", 2)?;
+    let np = args.usize_flag("nprocs", 2)?;
+    let steps = args.usize_flag("steps", 20)?;
+    let engine = parse_engine(args)?;
+    let (hw, hw_label) = resolve_hw(args, HwSource::Abel)?;
+    args.finish()?;
+    anyhow::ensure!(
+        pg % pp == 0 && mg % mp == 0 && ng % np == 0,
+        "box {pg}x{mg}x{ng} does not partition over {pp}x{mp}x{np} threads"
+    );
+    let grid = Stencil3dGrid::new(pg, mg, ng, pp, mp, np);
+    let threads = grid.threads();
+    let (nodes, tpn) = cluster_shape(threads);
+    let topo = Topology::new(nodes, tpn);
+    let hw = hw.with_threads_per_node(tpn);
+
+    // Real numerics vs the sequential 7-point stencil.
+    let mut rng = upcsim::util::Rng::new(11);
+    let f0: Vec<f64> = (0..pg * mg * ng).map(|_| rng.f64_in(0.0, 100.0)).collect();
+    let mut solver = Stencil3dSolver::new(grid, &f0);
+    let mut reference = f0.clone();
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        solver.step_with(engine);
+        reference = seq_reference_step3d(pg, mg, ng, &reference);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let err = solver
+        .to_global()
+        .iter()
+        .zip(&reference)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "{steps} steps on {pg}x{mg}x{ng} over {pp}x{mp}x{np} threads ({} engine) in {}",
+        engine.name(),
+        fmt::secs(wall)
+    );
+    println!("max |solver − sequential| = {err:.3e}");
+    anyhow::ensure!(err < 1e-9, "face exchange diverged");
+    println!("halo payload: {}", fmt::bytes(solver.inter_thread_bytes as f64));
+    println!(
+        "compiled plan: {} messages, {} doubles/step",
+        solver.runtime().plan().num_messages(),
+        solver.runtime().plan().total_values()
+    );
+    let model = predict_stencil3d(&grid, &topo, &hw);
+    println!(
+        "per 1000 steps on the simulated cluster (hw {hw_label}): T_halo {} T_comp {}",
+        fmt::secs(model.t_halo * 1000.0),
         fmt::secs(model.t_comp * 1000.0),
     );
     Ok(())

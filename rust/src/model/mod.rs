@@ -9,8 +9,10 @@
 
 mod heat;
 mod spmv;
+mod stencil;
 
 pub use heat::{predict_heat2d, Heat2dPrediction, HeatGrid};
+pub use stencil::{predict_stencil3d, Stencil3dPrediction};
 pub use spmv::{
     predict_naive, predict_v1, predict_v2, predict_v3, t_comp_thread, SpmvInputs, SpmvPrediction,
     V3ThreadBreakdown,

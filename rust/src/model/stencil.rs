@@ -1,0 +1,149 @@
+//! 3D 7-point-stencil performance model — the §8.2 methodology
+//! (eqs. (19)–(22)) generalized to the third workload.
+//!
+//! Same decomposition as the heat-2D model: per-thread pack/unpack time for
+//! the strided faces (eq. (19)), per-node memget time with local transfers
+//! concurrent and remote ones serialized on the NIC (eq. (20)), halo = max
+//! over nodes of pack + memget + unpack (eq. (21)), compute from streamed
+//! interior traffic (eq. (22)).
+//!
+//! The only 3D-specific choice is *which* faces pay pack time: x/y-faces
+//! are row-chunked (contiguous runs of `n−2` doubles — executed as
+//! `upc_memget`-style block copies), while z-faces touch one double per
+//! cache line (`col_stride = n`), the same access shape as the 2D
+//! horizontal halos. So, as in eq. (19), only the doubly-strided faces are
+//! charged `(s·(D + cl))/W_thread`.
+
+use crate::machine::{HwParams, SIZEOF_DOUBLE};
+use crate::pgas::Topology;
+use crate::stencil3d::Stencil3dGrid;
+
+/// Output of the 3D stencil model.
+#[derive(Debug, Clone)]
+pub struct Stencil3dPrediction {
+    /// Eq. (21) analogue: face-exchange time per step.
+    pub t_halo: f64,
+    /// Eq. (22) analogue: computation time per step.
+    pub t_comp: f64,
+    /// Per-thread pack (= unpack) times, eq. (19) analogue.
+    pub t_pack: Vec<f64>,
+    /// Per-node memget times, eq. (20) analogue.
+    pub t_memget_node: Vec<f64>,
+}
+
+/// Evaluate the model for one time step.
+pub fn predict_stencil3d(
+    grid: &Stencil3dGrid,
+    topo: &Topology,
+    hw: &HwParams,
+) -> Stencil3dPrediction {
+    assert_eq!(topo.threads(), grid.threads());
+    const D: f64 = SIZEOF_DOUBLE as f64;
+    let w = hw.w_thread_private;
+    let cl = hw.cache_line as f64;
+    let threads = grid.threads();
+
+    // Eq. (19) analogue: per-thread pack/unpack — doubly-strided faces only.
+    let mut t_pack = vec![0.0f64; threads];
+    for (t, tp) in t_pack.iter_mut().enumerate() {
+        let s_strided: usize = grid
+            .neighbours(t)
+            .iter()
+            .filter(|&&(_, _, strided)| strided)
+            .map(|&(_, len, _)| len)
+            .sum();
+        *tp = s_strided as f64 * (D + cl) / w;
+    }
+
+    // Eq. (20) analogue: per-node memget — local transfers concurrent
+    // (max), remote serialized on the NIC (sum), each remote message paying
+    // τ.
+    let mut t_memget_node = vec![0.0f64; topo.nodes];
+    for node in 0..topo.nodes {
+        let mut local_max = 0.0f64;
+        let mut remote_sum = 0.0f64;
+        for t in topo.threads_of_node(node) {
+            let mut s_local = 0usize;
+            let mut s_remote = 0usize;
+            let mut c_remote = 0usize;
+            for (peer, len, _) in grid.neighbours(t) {
+                if topo.same_node(t, peer) {
+                    s_local += len;
+                } else {
+                    s_remote += len;
+                    c_remote += 1;
+                }
+            }
+            local_max = local_max.max(2.0 * s_local as f64 * D / w);
+            remote_sum += c_remote as f64 * hw.tau + s_remote as f64 * D / hw.w_node_remote;
+        }
+        t_memget_node[node] = local_max + remote_sum;
+    }
+
+    // Eq. (21) analogue: max over nodes of (max pack + memget + max unpack).
+    let mut t_halo = 0.0f64;
+    for node in 0..topo.nodes {
+        let pack_max = topo
+            .threads_of_node(node)
+            .map(|t| t_pack[t])
+            .fold(0.0, f64::max);
+        t_halo = t_halo.max(pack_max + t_memget_node[node] + pack_max);
+    }
+
+    // Eq. (22) analogue: 3 streamed passes over the interior (read phi with
+    // plane reuse in cache, write phin, write-allocate), as in the 2D count.
+    let (p, m, n) = grid.subdomain();
+    let t_comp = 3.0 * ((p - 2) * (m - 2) * (n - 2)) as f64 * D / w;
+
+    Stencil3dPrediction { t_halo, t_comp, t_pack, t_memget_node }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn halo_shrinks_with_more_threads_held_mesh() {
+        let hw = HwParams::abel();
+        let g8 = Stencil3dGrid::new(480, 480, 480, 2, 2, 2);
+        let g64 = Stencil3dGrid::new(480, 480, 480, 4, 4, 4);
+        let h8 = predict_stencil3d(&g8, &Topology::new(1, 8), &hw).t_halo;
+        let h64 = predict_stencil3d(&g64, &Topology::new(4, 16), &hw).t_halo;
+        // Faces shrink quadratically with the per-axis split.
+        assert!(h64 < h8, "{h64} !< {h8}");
+    }
+
+    #[test]
+    fn comp_scales_with_interior() {
+        let hw = HwParams::abel();
+        let small = Stencil3dGrid::new(96, 96, 96, 2, 2, 2);
+        let big = Stencil3dGrid::new(192, 192, 192, 2, 2, 2);
+        let ts = predict_stencil3d(&small, &Topology::new(1, 8), &hw).t_comp;
+        let tb = predict_stencil3d(&big, &Topology::new(1, 8), &hw).t_comp;
+        assert!((tb / ts - 8.0).abs() < 0.2, "8x interior -> 8x comp, got {}", tb / ts);
+    }
+
+    #[test]
+    fn only_strided_faces_pay_pack() {
+        let hw = HwParams::abel();
+        // Split along z only: every thread has z-faces (strided).
+        let gz = Stencil3dGrid::new(48, 48, 96, 1, 1, 4);
+        let pz = predict_stencil3d(&gz, &Topology::new(1, 4), &hw);
+        assert!(pz.t_pack.iter().all(|&t| t > 0.0));
+        // Split along x only: faces are row-chunked, no pack cost.
+        let gx = Stencil3dGrid::new(96, 48, 48, 4, 1, 1);
+        let px = predict_stencil3d(&gx, &Topology::new(1, 4), &hw);
+        assert!(px.t_pack.iter().all(|&t| t == 0.0));
+        // But the x-split still moves bytes: memget time is non-zero.
+        assert!(px.t_memget_node.iter().any(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn remote_topology_costs_more() {
+        let hw = HwParams::abel();
+        let g = Stencil3dGrid::new(96, 96, 96, 2, 2, 2);
+        let one_node = predict_stencil3d(&g, &Topology::new(1, 8), &hw).t_halo;
+        let two_nodes = predict_stencil3d(&g, &Topology::new(2, 4), &hw).t_halo;
+        assert!(two_nodes > one_node, "{two_nodes} !> {one_node}");
+    }
+}

@@ -1,0 +1,135 @@
+//! A 3D 7-point-stencil diffusion workload on the unified exchange runtime.
+//!
+//! This is the "not limited to UPC" — and not limited to 2D — demonstration:
+//! a third workload compiled onto the *same* machinery as SpMV and heat-2D.
+//! The global `P × M × N` box is partitioned over a
+//! `pprocs × mprocs × nprocs` thread grid; each thread owns a
+//! `(p−2) × (m−2) × (n−2)` interior plus a one-cell halo. The six face
+//! exchanges compile to [`StridedBlock`](crate::comm::StridedBlock) plane
+//! descriptors (z-faces doubly strided, x/y-faces row-chunked) in a
+//! [`StridedPlan`](crate::comm::StridedPlan); time stepping is one
+//! [`ExchangeRuntime::step_strided`](crate::engine::ExchangeRuntime) call —
+//! zero per-step allocations, zero per-step thread spawns, on either engine.
+//!
+//! * [`Stencil3dGrid`] — the geometry (dims, coords, faces).
+//! * [`Stencil3dSolver`] — per-thread storage + the compiled runtime,
+//!   validated against [`seq_reference_step3d`].
+//! * [`crate::model::predict_stencil3d`] — the eqs. (19)–(22) analogue.
+
+mod solver;
+
+pub use solver::{seq_reference_step3d, Stencil3dSolver};
+
+/// Geometry of a 3D stencil run: global box and thread-grid partitioning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Stencil3dGrid {
+    /// Global box dimensions (x-major: index = x·M·N + y·N + z).
+    pub p_glob: usize,
+    pub m_glob: usize,
+    pub n_glob: usize,
+    /// Thread-grid partitioning along x, y, z.
+    pub pprocs: usize,
+    pub mprocs: usize,
+    pub nprocs: usize,
+}
+
+impl Stencil3dGrid {
+    pub fn new(
+        p_glob: usize,
+        m_glob: usize,
+        n_glob: usize,
+        pprocs: usize,
+        mprocs: usize,
+        nprocs: usize,
+    ) -> Stencil3dGrid {
+        assert!(
+            p_glob % pprocs == 0 && m_glob % mprocs == 0 && n_glob % nprocs == 0,
+            "uneven partitioning"
+        );
+        Stencil3dGrid { p_glob, m_glob, n_glob, pprocs, mprocs, nprocs }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pprocs * self.mprocs * self.nprocs
+    }
+
+    /// Per-thread subdomain dims including the halo layer.
+    pub fn subdomain(&self) -> (usize, usize, usize) {
+        (
+            self.p_glob / self.pprocs + 2,
+            self.m_glob / self.mprocs + 2,
+            self.n_glob / self.nprocs + 2,
+        )
+    }
+
+    /// Grid coordinates of a thread (x-major rank order).
+    pub fn coords(&self, t: usize) -> (usize, usize, usize) {
+        let per_plane = self.mprocs * self.nprocs;
+        (t / per_plane, (t / self.nprocs) % self.mprocs, t % self.nprocs)
+    }
+
+    pub fn rank(&self, ip: usize, jp: usize, kp: usize) -> usize {
+        (ip * self.mprocs + jp) * self.nprocs + kp
+    }
+
+    /// The ≤ 6 face neighbours of thread `t`:
+    /// `(neighbour id, face size in doubles, doubly-strided?)`. Only the
+    /// z-faces (`kp ± 1`) are doubly strided — their fastest axis jumps by
+    /// `n` — so only they pay the eq. (19) pack penalty in the model.
+    pub fn neighbours(&self, t: usize) -> Vec<(usize, usize, bool)> {
+        let (ip, jp, kp) = self.coords(t);
+        let (p, m, n) = self.subdomain();
+        let (pi, mi, ni) = (p - 2, m - 2, n - 2);
+        let mut out = Vec::with_capacity(6);
+        if ip > 0 {
+            out.push((self.rank(ip - 1, jp, kp), mi * ni, false));
+        }
+        if ip < self.pprocs - 1 {
+            out.push((self.rank(ip + 1, jp, kp), mi * ni, false));
+        }
+        if jp > 0 {
+            out.push((self.rank(ip, jp - 1, kp), pi * ni, false));
+        }
+        if jp < self.mprocs - 1 {
+            out.push((self.rank(ip, jp + 1, kp), pi * ni, false));
+        }
+        if kp > 0 {
+            out.push((self.rank(ip, jp, kp - 1), pi * mi, true));
+        }
+        if kp < self.nprocs - 1 {
+            out.push((self.rank(ip, jp, kp + 1), pi * mi, true));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coords_rank_roundtrip() {
+        let g = Stencil3dGrid::new(8, 12, 16, 2, 3, 4);
+        assert_eq!(g.threads(), 24);
+        for t in 0..g.threads() {
+            let (ip, jp, kp) = g.coords(t);
+            assert_eq!(g.rank(ip, jp, kp), t);
+            assert!(ip < 2 && jp < 3 && kp < 4);
+        }
+        assert_eq!(g.subdomain(), (6, 6, 6));
+    }
+
+    #[test]
+    fn neighbour_counts_and_sizes() {
+        let g = Stencil3dGrid::new(12, 12, 12, 3, 3, 3);
+        // Corner thread: 3 neighbours; center thread: 6.
+        assert_eq!(g.neighbours(0).len(), 3);
+        let center = g.rank(1, 1, 1);
+        let nb = g.neighbours(center);
+        assert_eq!(nb.len(), 6);
+        // All faces are 4×4 = 16 doubles on this cubic split.
+        assert!(nb.iter().all(|&(_, len, _)| len == 16));
+        // Exactly the two z-faces are doubly strided.
+        assert_eq!(nb.iter().filter(|&&(_, _, s)| s).count(), 2);
+    }
+}

@@ -1,0 +1,317 @@
+//! The executable 3D 7-point-stencil solver: per-thread halo-extended
+//! boxes, a compiled face-exchange plan, and Jacobi diffusion steps on the
+//! shared [`ExchangeRuntime`].
+
+use super::Stencil3dGrid;
+use crate::comm::{StridedBlock, StridedPlan};
+use crate::engine::{Engine, ExchangeRuntime};
+
+/// Compile the six face exchanges into a strided block-copy plan.
+///
+/// Local layout is x-major: `idx = x·m·n + y·n + z` with halo-extended dims
+/// `(p, m, n)`. Faces carry the *interior* of the boundary plane only (the
+/// 7-point stencil needs no edges or corners):
+///
+/// * x-faces — rows over y (`row_stride = n`), contiguous in z;
+/// * y-faces — rows over x (`row_stride = m·n`), contiguous in z;
+/// * z-faces — rows over x (`row_stride = m·n`), strided in y
+///   (`col_stride = n`): the doubly-strided shape that pays pack time.
+fn face_plan(grid: &Stencil3dGrid) -> StridedPlan {
+    let (p, m, n) = grid.subdomain();
+    let mn = m * n;
+    let (pi, mi, ni) = (p - 2, m - 2, n - 2);
+    // The interior of plane x = X / y = Y / z = Z, as a StridedBlock.
+    let x_face = |x: usize| StridedBlock::plane(x * mn + n + 1, mi, n, ni, 1);
+    let y_face = |y: usize| StridedBlock::plane(mn + y * n + 1, pi, mn, ni, 1);
+    let z_face = |z: usize| StridedBlock::plane(mn + n + z, pi, mn, mi, n);
+    let mut copies = Vec::new();
+    for t in 0..grid.threads() {
+        let (ip, jp, kp) = grid.coords(t);
+        // x− neighbour's last interior plane → my x = 0 plane, and so on.
+        if ip > 0 {
+            copies.push((grid.rank(ip - 1, jp, kp), t, x_face(p - 2), x_face(0)));
+        }
+        if ip < grid.pprocs - 1 {
+            copies.push((grid.rank(ip + 1, jp, kp), t, x_face(1), x_face(p - 1)));
+        }
+        if jp > 0 {
+            copies.push((grid.rank(ip, jp - 1, kp), t, y_face(m - 2), y_face(0)));
+        }
+        if jp < grid.mprocs - 1 {
+            copies.push((grid.rank(ip, jp + 1, kp), t, y_face(1), y_face(m - 1)));
+        }
+        if kp > 0 {
+            copies.push((grid.rank(ip, jp, kp - 1), t, z_face(n - 2), z_face(0)));
+        }
+        if kp < grid.nprocs - 1 {
+            copies.push((grid.rank(ip, jp, kp + 1), t, z_face(1), z_face(n - 1)));
+        }
+    }
+    let plan = StridedPlan::from_msgs(grid.threads(), &copies);
+    debug_assert!(plan.validate(&|_| p * mn).is_ok());
+    plan
+}
+
+/// Per-thread subdomain state plus the compiled exchange runtime.
+#[derive(Debug)]
+pub struct Stencil3dSolver {
+    pub grid: Stencil3dGrid,
+    /// `phi[t]` — thread t's p×m×n (halo-included) box, x-major.
+    phi: Vec<Vec<f64>>,
+    phin: Vec<Vec<f64>>,
+    runtime: ExchangeRuntime,
+    /// Halo-exchange byte counter (payload crossing thread boundaries).
+    pub inter_thread_bytes: u64,
+}
+
+impl Stencil3dSolver {
+    /// Initialize from a global field of `p_glob × m_glob × n_glob` values.
+    /// Boundary values of the global domain are treated as fixed (Dirichlet).
+    pub fn new(grid: Stencil3dGrid, global: &[f64]) -> Stencil3dSolver {
+        assert_eq!(global.len(), grid.p_glob * grid.m_glob * grid.n_glob);
+        let (p, m, n) = grid.subdomain();
+        let mut phi = Vec::with_capacity(grid.threads());
+        for t in 0..grid.threads() {
+            let (ip, jp, kp) = grid.coords(t);
+            let (x0, y0, z0) = (ip * (p - 2), jp * (m - 2), kp * (n - 2));
+            let mut field = vec![0.0f64; p * m * n];
+            for x in 0..p {
+                for y in 0..m {
+                    for z in 0..n {
+                        let gx = x0 as isize + x as isize - 1;
+                        let gy = y0 as isize + y as isize - 1;
+                        let gz = z0 as isize + z as isize - 1;
+                        if gx >= 0
+                            && (gx as usize) < grid.p_glob
+                            && gy >= 0
+                            && (gy as usize) < grid.m_glob
+                            && gz >= 0
+                            && (gz as usize) < grid.n_glob
+                        {
+                            field[(x * m + y) * n + z] = global
+                                [(gx as usize * grid.m_glob + gy as usize) * grid.n_glob
+                                    + gz as usize];
+                        }
+                    }
+                }
+            }
+            phi.push(field);
+        }
+        let phin = phi.clone();
+        let runtime = ExchangeRuntime::new(face_plan(&grid));
+        Stencil3dSolver { grid, phi, phin, runtime, inter_thread_bytes: 0 }
+    }
+
+    /// The compiled exchange runtime (plan + arena + pool).
+    pub fn runtime(&self) -> &ExchangeRuntime {
+        &self.runtime
+    }
+
+    /// One time step on the sequential oracle engine.
+    pub fn step(&mut self) {
+        self.step_with(Engine::Sequential);
+    }
+
+    /// One time step on the chosen engine: face exchange through the
+    /// compiled plan, then the 7-point Jacobi update. Both engines are
+    /// bitwise identical in fields and byte counts.
+    pub fn step_with(&mut self, engine: Engine) {
+        let grid = self.grid;
+        self.runtime.step_strided(engine, &mut self.phi, &mut self.phin, |t, phi, phin| {
+            Self::jacobi_update(grid, t, phi, phin);
+        });
+        self.inter_thread_bytes += self.runtime.payload_bytes();
+        std::mem::swap(&mut self.phi, &mut self.phin);
+    }
+
+    /// 7-point Jacobi for one thread: average of the six face neighbours on
+    /// the interior, plus the fixed global-boundary copy-through.
+    fn jacobi_update(grid: Stencil3dGrid, t: usize, phi: &[f64], phin: &mut [f64]) {
+        let (p, m, n) = grid.subdomain();
+        let mn = m * n;
+        for x in 1..p - 1 {
+            for y in 1..m - 1 {
+                let base = x * mn + y * n;
+                for z in 1..n - 1 {
+                    let c = base + z;
+                    phin[c] = (phi[c - mn]
+                        + phi[c + mn]
+                        + phi[c - n]
+                        + phi[c + n]
+                        + phi[c - 1]
+                        + phi[c + 1])
+                        / 6.0;
+                }
+            }
+        }
+        // Global-boundary planes stay fixed: copy them through.
+        let (ip, jp, kp) = grid.coords(t);
+        if ip == 0 {
+            phin[mn..2 * mn].copy_from_slice(&phi[mn..2 * mn]);
+        }
+        if ip == grid.pprocs - 1 {
+            phin[(p - 2) * mn..(p - 1) * mn].copy_from_slice(&phi[(p - 2) * mn..(p - 1) * mn]);
+        }
+        if jp == 0 {
+            for x in 0..p {
+                let base = x * mn + n;
+                phin[base..base + n].copy_from_slice(&phi[base..base + n]);
+            }
+        }
+        if jp == grid.mprocs - 1 {
+            for x in 0..p {
+                let base = x * mn + (m - 2) * n;
+                phin[base..base + n].copy_from_slice(&phi[base..base + n]);
+            }
+        }
+        if kp == 0 {
+            for x in 0..p {
+                for y in 0..m {
+                    phin[x * mn + y * n + 1] = phi[x * mn + y * n + 1];
+                }
+            }
+        }
+        if kp == grid.nprocs - 1 {
+            for x in 0..p {
+                for y in 0..m {
+                    phin[x * mn + y * n + n - 2] = phi[x * mn + y * n + n - 2];
+                }
+            }
+        }
+    }
+
+    /// Gather the global interior field (for comparison with the reference).
+    pub fn to_global(&self) -> Vec<f64> {
+        let grid = self.grid;
+        let (p, m, n) = grid.subdomain();
+        let mut out = vec![0.0f64; grid.p_glob * grid.m_glob * grid.n_glob];
+        for t in 0..grid.threads() {
+            let (ip, jp, kp) = grid.coords(t);
+            let (x0, y0, z0) = (ip * (p - 2), jp * (m - 2), kp * (n - 2));
+            for x in 1..p - 1 {
+                for y in 1..m - 1 {
+                    for z in 1..n - 1 {
+                        out[((x0 + x - 1) * grid.m_glob + (y0 + y - 1)) * grid.n_glob
+                            + (z0 + z - 1)] = self.phi[t][(x * m + y) * n + z];
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Sequential reference: one 7-point Jacobi step on the global field (fixed
+/// global boundary). Uses the same expression order as the solver.
+pub fn seq_reference_step3d(p: usize, m: usize, n: usize, phi: &[f64]) -> Vec<f64> {
+    let mut out = phi.to_vec();
+    let mn = m * n;
+    for x in 1..p - 1 {
+        for y in 1..m - 1 {
+            let base = x * mn + y * n;
+            for z in 1..n - 1 {
+                let c = base + z;
+                out[c] = (phi[c - mn]
+                    + phi[c + mn]
+                    + phi[c - n]
+                    + phi[c + n]
+                    + phi[c - 1]
+                    + phi[c + 1])
+                    / 6.0;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_field(len: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..len).map(|_| rng.f64_in(0.0, 100.0)).collect()
+    }
+
+    #[test]
+    fn matches_reference_over_steps() {
+        let (pg, mg, ng) = (8, 12, 16);
+        let grid = Stencil3dGrid::new(pg, mg, ng, 2, 3, 4);
+        let f0 = random_field(pg * mg * ng, 5);
+        let mut solver = Stencil3dSolver::new(grid, &f0);
+        let mut reference = f0.clone();
+        for step in 0..8 {
+            solver.step();
+            reference = seq_reference_step3d(pg, mg, ng, &reference);
+            let got = solver.to_global();
+            for (idx, (a, b)) in got.iter().zip(&reference).enumerate() {
+                assert!((a - b).abs() < 1e-12, "step {step} idx {idx}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn engines_bitwise_identical() {
+        let grid = Stencil3dGrid::new(8, 8, 8, 2, 2, 2);
+        let f0 = random_field(512, 9);
+        let mut seq = Stencil3dSolver::new(grid, &f0);
+        let mut par = Stencil3dSolver::new(grid, &f0);
+        for step in 0..6 {
+            seq.step_with(Engine::Sequential);
+            par.step_with(Engine::Parallel);
+            assert_eq!(seq.to_global(), par.to_global(), "step {step}");
+            assert_eq!(seq.inter_thread_bytes, par.inter_thread_bytes, "step {step}");
+        }
+    }
+
+    #[test]
+    fn face_traffic_counted() {
+        // 2×2×2 split of an 8³ box: every thread has 3 neighbours with 4×4
+        // faces → 24 messages of 16 doubles.
+        let grid = Stencil3dGrid::new(8, 8, 8, 2, 2, 2);
+        let f0 = random_field(512, 1);
+        let mut solver = Stencil3dSolver::new(grid, &f0);
+        assert_eq!(solver.runtime().plan().num_messages(), 24);
+        assert_eq!(solver.runtime().plan().total_values(), 24 * 16);
+        solver.step();
+        assert_eq!(solver.inter_thread_bytes, 24 * 16 * 8);
+    }
+
+    #[test]
+    fn single_thread_box_works() {
+        let grid = Stencil3dGrid::new(6, 6, 6, 1, 1, 1);
+        let f0 = random_field(216, 3);
+        let mut solver = Stencil3dSolver::new(grid, &f0);
+        solver.step();
+        let want = seq_reference_step3d(6, 6, 6, &f0);
+        let got = solver.to_global();
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        assert_eq!(solver.inter_thread_bytes, 0);
+    }
+
+    #[test]
+    fn compiled_plan_matches_geometry() {
+        for (dims, procs) in [
+            ((8usize, 12usize, 16usize), (2usize, 3usize, 4usize)),
+            ((4, 4, 12), (1, 1, 6)),
+            ((12, 4, 4), (6, 1, 1)),
+            ((3, 3, 3), (3, 3, 3)), // minimum 1-cell interiors
+        ] {
+            let grid = Stencil3dGrid::new(dims.0, dims.1, dims.2, procs.0, procs.1, procs.2);
+            let plan = super::face_plan(&grid);
+            let (p, m, n) = grid.subdomain();
+            plan.validate(&|_| p * m * n).unwrap();
+            let expected_msgs: usize =
+                (0..grid.threads()).map(|t| grid.neighbours(t).len()).sum();
+            let expected_values: usize = (0..grid.threads())
+                .flat_map(|t| grid.neighbours(t))
+                .map(|(_, len, _)| len)
+                .sum();
+            assert_eq!(plan.num_messages(), expected_msgs);
+            assert_eq!(plan.total_values(), expected_values);
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Edge-layout equivalence for the grid workloads on the unified exchange
+//! runtime: the sequential oracle and the persistent-pool parallel engine
+//! must agree **bitwise** — fields *and* `inter_thread_bytes` — on
+//! non-square grids, degenerate 1×N / N×1 thread layouts, and
+//! minimum-size subdomains, over many steps.
+
+use upcsim::engine::Engine;
+use upcsim::heat2d::{seq_reference_step, Heat2dSolver};
+use upcsim::model::HeatGrid;
+use upcsim::stencil3d::{seq_reference_step3d, Stencil3dGrid, Stencil3dSolver};
+use upcsim::util::Rng;
+
+fn random_field(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.f64_in(0.0, 100.0)).collect()
+}
+
+/// Run both engines side by side for `steps` steps, asserting bitwise
+/// equality of the gathered fields and the traffic counters every step.
+fn check_heat2d(mg: usize, ng: usize, mp: usize, np: usize, steps: usize, seed: u64) {
+    let grid = HeatGrid::new(mg, ng, mp, np);
+    let f0 = random_field(mg * ng, seed);
+    let mut seq = Heat2dSolver::new(grid, &f0);
+    let mut par = Heat2dSolver::new(grid, &f0);
+    for step in 0..steps {
+        seq.step_with(Engine::Sequential);
+        par.step_with(Engine::Parallel);
+        let (gs, gp) = (seq.to_global(), par.to_global());
+        assert!(
+            gs.iter().zip(&gp).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{mg}x{ng}/{mp}x{np}: fields diverge at step {step}"
+        );
+        assert_eq!(
+            seq.inter_thread_bytes, par.inter_thread_bytes,
+            "{mg}x{ng}/{mp}x{np}: byte counters diverge at step {step}"
+        );
+    }
+}
+
+#[test]
+fn heat2d_non_square_grids() {
+    check_heat2d(24, 60, 3, 4, 30, 1);
+    check_heat2d(60, 24, 4, 3, 30, 2);
+    check_heat2d(18, 80, 2, 8, 20, 3);
+}
+
+#[test]
+fn heat2d_degenerate_thread_layouts() {
+    // 1×N: only horizontal (strided-column) halos.
+    check_heat2d(16, 60, 1, 6, 25, 4);
+    // N×1: only vertical (contiguous-row) halos.
+    check_heat2d(60, 16, 6, 1, 25, 5);
+    // Single thread: no halos at all.
+    check_heat2d(16, 16, 1, 1, 10, 6);
+}
+
+#[test]
+fn heat2d_minimum_subdomains() {
+    // 1-cell interiors: every interior cell is adjacent to every halo.
+    check_heat2d(4, 4, 4, 4, 20, 7);
+    check_heat2d(1, 8, 1, 8, 20, 8);
+    check_heat2d(3, 6, 3, 2, 20, 9);
+}
+
+#[test]
+fn heat2d_long_run_stays_on_reference() {
+    // 50 steps against the global-field reference (tolerance), while both
+    // engines stay bitwise-equal (exact).
+    let (mg, ng) = (30, 42);
+    let grid = HeatGrid::new(mg, ng, 3, 2);
+    let f0 = random_field(mg * ng, 10);
+    let mut par = Heat2dSolver::new(grid, &f0);
+    let mut reference = f0;
+    for step in 0..50 {
+        par.step_with(Engine::Parallel);
+        reference = seq_reference_step(mg, ng, &reference);
+        let got = par.to_global();
+        for (idx, (a, b)) in got.iter().zip(&reference).enumerate() {
+            assert!((a - b).abs() < 1e-11, "step {step} idx {idx}: {a} vs {b}");
+        }
+    }
+}
+
+fn check_stencil3d(
+    dims: (usize, usize, usize),
+    procs: (usize, usize, usize),
+    steps: usize,
+    seed: u64,
+) {
+    let grid = Stencil3dGrid::new(dims.0, dims.1, dims.2, procs.0, procs.1, procs.2);
+    let f0 = random_field(dims.0 * dims.1 * dims.2, seed);
+    let mut seq = Stencil3dSolver::new(grid, &f0);
+    let mut par = Stencil3dSolver::new(grid, &f0);
+    for step in 0..steps {
+        seq.step_with(Engine::Sequential);
+        par.step_with(Engine::Parallel);
+        let (gs, gp) = (seq.to_global(), par.to_global());
+        assert!(
+            gs.iter().zip(&gp).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{dims:?}/{procs:?}: fields diverge at step {step}"
+        );
+        assert_eq!(
+            seq.inter_thread_bytes, par.inter_thread_bytes,
+            "{dims:?}/{procs:?}: byte counters diverge at step {step}"
+        );
+    }
+}
+
+#[test]
+fn stencil3d_engine_equivalence_layouts() {
+    check_stencil3d((8, 12, 16), (2, 3, 4), 10, 11);
+    // Degenerate splits along a single axis.
+    check_stencil3d((4, 4, 16), (1, 1, 8), 12, 12);
+    check_stencil3d((16, 4, 4), (8, 1, 1), 12, 13);
+    // Minimum 1-cell interiors.
+    check_stencil3d((3, 3, 3), (3, 3, 3), 10, 14);
+}
+
+#[test]
+fn stencil3d_tracks_reference() {
+    let (pg, mg, ng) = (10, 8, 12);
+    let grid = Stencil3dGrid::new(pg, mg, ng, 2, 2, 3);
+    let f0 = random_field(pg * mg * ng, 15);
+    let mut par = Stencil3dSolver::new(grid, &f0);
+    let mut reference = f0;
+    for step in 0..25 {
+        par.step_with(Engine::Parallel);
+        reference = seq_reference_step3d(pg, mg, ng, &reference);
+        let got = par.to_global();
+        for (idx, (a, b)) in got.iter().zip(&reference).enumerate() {
+            assert!((a - b).abs() < 1e-11, "step {step} idx {idx}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn traffic_counters_match_geometry() {
+    // heat2d: one message per directed neighbour pair, sized by the shared
+    // edge; stencil3d: sized by the shared face. Counters are linear in the
+    // step count.
+    let grid = HeatGrid::new(24, 60, 3, 4);
+    let f0 = random_field(24 * 60, 16);
+    let mut solver = Heat2dSolver::new(grid, &f0);
+    let per_step: u64 = (0..grid.threads())
+        .flat_map(|t| grid.neighbours(t))
+        .map(|(_, len, _)| (len * 8) as u64)
+        .sum();
+    for k in 1..=4u64 {
+        solver.step_with(Engine::Parallel);
+        assert_eq!(solver.inter_thread_bytes, k * per_step);
+    }
+
+    let grid3 = Stencil3dGrid::new(8, 12, 16, 2, 3, 4);
+    let f0 = random_field(8 * 12 * 16, 17);
+    let mut solver3 = Stencil3dSolver::new(grid3, &f0);
+    let per_step3: u64 = (0..grid3.threads())
+        .flat_map(|t| grid3.neighbours(t))
+        .map(|(_, len, _)| (len * 8) as u64)
+        .sum();
+    for k in 1..=4u64 {
+        solver3.step_with(Engine::Parallel);
+        assert_eq!(solver3.inter_thread_bytes, k * per_step3);
+    }
+}
