@@ -1,6 +1,6 @@
 //! Criterion-lite bench: per-step halo-exchange cost of the grid workloads
 //! on the unified exchange runtime, plus the spawn-per-step → persistent
-//! pool comparison.
+//! pool comparison and the synchronous → split-phase-overlap comparison.
 //!
 //! Emits `BENCH_halo.json` at the repo root:
 //!
@@ -10,11 +10,21 @@
 //!   pool-based solver — `speedup_pool_vs_spawn` is the headline number;
 //! * the raw dispatch microbenchmark: `thread::scope` spawn/join of N no-op
 //!   workers vs one no-op pool dispatch at the same width.
+//!
+//! And `BENCH_overlap.json`:
+//!
+//! * sync vs split-phase-overlapped per-step medians for heat-2D (several
+//!   thread layouts), the 3D stencil, and SpMV V3 on the parallel engine,
+//!   with per-layout `speedup` ratios and the best ratio as the headline.
 
 use upcsim::benchlib::{BenchConfig, Bencher};
-use upcsim::engine::{Engine, WorkerPool};
+use upcsim::comm::Analysis;
+use upcsim::engine::{Engine, SpmvEngine, WorkerPool};
 use upcsim::heat2d::Heat2dSolver;
+use upcsim::matrix::Ellpack;
 use upcsim::model::HeatGrid;
+use upcsim::pgas::{Layout, Topology};
+use upcsim::spmv::{SpmvState, Variant};
 use upcsim::stencil3d::{Stencil3dGrid, Stencil3dSolver};
 use upcsim::util::json::Value;
 use upcsim::util::Rng;
@@ -217,6 +227,90 @@ fn main() {
         record(&mut entries, &name, r.map(|r| r.time.p50));
     }
 
+    // --- split-phase overlap: sync vs overlapped on the parallel engine ---
+    // One (sync, overlap) median pair per workload/layout; layouts exercise
+    // row-only, column-only and mixed halo shapes.
+    let mut overlap_pairs: Vec<(String, f64, f64)> = Vec::new();
+    for &(mp, np) in &[(2usize, 2usize), (1, 4), (4, 1)] {
+        let grid = HeatGrid::new(mg, ng, mp, np);
+        let mut sync = Heat2dSolver::new(grid, &f0);
+        sync.step_with(Engine::Parallel);
+        let sync_name = format!("heat2d/sync/{mp}x{np}");
+        let rs = b
+            .bench(&sync_name, || {
+                sync.step_with(Engine::Parallel);
+                std::hint::black_box(&sync.inter_thread_bytes);
+            })
+            .map(|r| r.time.p50);
+        let mut ovl = Heat2dSolver::new(grid, &f0);
+        ovl.step_overlapped_with(Engine::Parallel);
+        let ovl_name = format!("heat2d/overlap/{mp}x{np}");
+        let ro = b
+            .bench(&ovl_name, || {
+                ovl.step_overlapped_with(Engine::Parallel);
+                std::hint::black_box(&ovl.inter_thread_bytes);
+            })
+            .map(|r| r.time.p50);
+        if let (Some(rs), Some(ro)) = (rs, ro) {
+            overlap_pairs.push((format!("heat2d/{mp}x{np}"), rs, ro));
+        }
+    }
+    {
+        let mut sync = Stencil3dSolver::new(grid3, &f03);
+        sync.step_with(Engine::Parallel);
+        let rs = b
+            .bench("stencil3d/sync/1x2x2", || {
+                sync.step_with(Engine::Parallel);
+                std::hint::black_box(&sync.inter_thread_bytes);
+            })
+            .map(|r| r.time.p50);
+        let mut ovl = Stencil3dSolver::new(grid3, &f03);
+        ovl.step_overlapped_with(Engine::Parallel);
+        let ro = b
+            .bench("stencil3d/overlap/1x2x2", || {
+                ovl.step_overlapped_with(Engine::Parallel);
+                std::hint::black_box(&ovl.inter_thread_bytes);
+            })
+            .map(|r| r.time.p50);
+        if let (Some(rs), Some(ro)) = (rs, ro) {
+            overlap_pairs.push(("stencil3d/1x2x2".to_string(), rs, ro));
+        }
+    }
+    {
+        // SpMV V3: synchronous barrier step vs the split-phase overlapped
+        // step on the same compiled plan.
+        let threads = 4usize;
+        let m = Ellpack::random(20_000, 16, 3);
+        let bs = m.n.div_ceil(threads * 4);
+        let layout = Layout::new(m.n, bs, threads);
+        let analysis =
+            Analysis::build(&m.j, m.r_nz, layout, Topology::single_node(threads), usize::MAX);
+        let x0 = m.initial_vector(9);
+        let mut engine = SpmvEngine::new(Engine::Parallel);
+        let mut state = SpmvState::new(&m, bs, threads, &x0);
+        engine.run(Variant::V3, &mut state, Some(&analysis));
+        state.swap_xy();
+        let rs = b
+            .bench("spmv-v3/sync/4t", || {
+                engine.run(Variant::V3, &mut state, Some(&analysis));
+                state.swap_xy();
+            })
+            .map(|r| r.time.p50);
+        let mut engine = SpmvEngine::new(Engine::Parallel);
+        let mut state = SpmvState::new(&m, bs, threads, &x0);
+        engine.run_overlapped(&mut state, &analysis);
+        state.swap_xy();
+        let ro = b
+            .bench("spmv-v3/overlap/4t", || {
+                engine.run_overlapped(&mut state, &analysis);
+                state.swap_xy();
+            })
+            .map(|r| r.time.p50);
+        if let (Some(rs), Some(ro)) = (rs, ro) {
+            overlap_pairs.push(("spmv-v3/4t".to_string(), rs, ro));
+        }
+    }
+
     // --- dispatch overhead: thread::scope spawn vs pool wakeup ------------
     let workers = grid.threads();
     {
@@ -272,6 +366,39 @@ fn main() {
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_halo.json");
         match std::fs::write(path, root.pretty()) {
             Ok(()) => println!("[halo medians saved to {path}]"),
+            Err(e) => eprintln!("warning: cannot write {path}: {e}"),
+        }
+    }
+
+    // --- BENCH_overlap.json -----------------------------------------------
+    if !overlap_pairs.is_empty() {
+        let mut root = Value::obj();
+        root.set("bench", Value::Str("halo_exchange/overlap".to_string()));
+        root.set("engine", Value::Str("parallel".to_string()));
+        let mut results = Vec::new();
+        let mut best = f64::NEG_INFINITY;
+        let mut best_name = String::new();
+        println!();
+        for (name, sync, ovl) in &overlap_pairs {
+            let speedup = sync / ovl;
+            let mut o = Value::obj();
+            o.set("workload", Value::Str(name.clone()));
+            o.set("sync_median_ns_per_step", Value::Num((sync * 1e9).round()));
+            o.set("overlap_median_ns_per_step", Value::Num((ovl * 1e9).round()));
+            o.set("speedup_overlap_vs_sync", Value::Num(speedup));
+            results.push(o);
+            println!("{name}: overlapped vs sync = {speedup:.2}x");
+            if speedup > best {
+                best = speedup;
+                best_name = name.clone();
+            }
+        }
+        root.set("results", Value::Arr(results));
+        root.set("best_speedup", Value::Num(best));
+        root.set("best_workload", Value::Str(best_name));
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_overlap.json");
+        match std::fs::write(path, root.pretty()) {
+            Ok(()) => println!("[overlap medians saved to {path}]"),
             Err(e) => eprintln!("warning: cannot write {path}: {e}"),
         }
     }

@@ -57,6 +57,37 @@ impl ThreadTraffic {
     }
 }
 
+/// One contiguous run of rows inside a single block (`start` is the global
+/// index of the first row). Runs never cross block boundaries, so a run maps
+/// to contiguous slices of the block-cyclic `D`/`A`/`J`/`y` storage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowRun {
+    pub start: u32,
+    pub len: u32,
+}
+
+impl RowRun {
+    /// Total rows across a run list.
+    pub fn total(runs: &[RowRun]) -> usize {
+        runs.iter().map(|r| r.len as usize).sum()
+    }
+}
+
+/// The interior/boundary decomposition of one thread's owned rows — the
+/// irregular-gather counterpart of [`crate::comm::ComputeSplit`], computed
+/// once during the analysis sweep.
+///
+/// *Interior* rows reference only owner-local `x` values, so the split-phase
+/// executor can compute them while the condensed messages are still in
+/// flight; *boundary* rows read at least one off-owner value and must wait
+/// for `finish_exchange`. Together the runs cover every owned row exactly
+/// once, in ascending order.
+#[derive(Debug, Clone, Default)]
+pub struct RowSplit {
+    pub interior: Vec<RowRun>,
+    pub boundary: Vec<RowRun>,
+}
+
 /// The complete analysis for one (matrix pattern, layout, topology) triple.
 #[derive(Debug, Clone)]
 pub struct Analysis {
@@ -67,6 +98,9 @@ pub struct Analysis {
     /// `needed_blocks[t]` — bitmap over global block ids (v2's
     /// `block_is_needed` array, Listing 4).
     pub needed_blocks: Vec<Vec<u64>>,
+    /// `row_split[t]` — thread t's interior/boundary row decomposition for
+    /// the overlapped UPCv3 executor.
+    pub row_split: Vec<RowSplit>,
 }
 
 impl Analysis {
@@ -89,8 +123,9 @@ impl Analysis {
         let bitmap_words = crate::util::ceil_div(nblks, 64);
 
         // Per-thread scan, parallelized across host cores in chunks of UPC
-        // threads. Each scan produces (traffic, needed-bitmap, recv-needs).
-        let mut results: Vec<Option<(ThreadTraffic, Vec<u64>, Vec<(u32, u32)>)>> =
+        // threads. Each scan produces (traffic, needed-bitmap, recv-needs,
+        // row-split).
+        let mut results: Vec<Option<(ThreadTraffic, Vec<u64>, Vec<(u32, u32)>, RowSplit)>> =
             (0..threads).map(|_| None).collect();
         let host = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
         let chunk = crate::util::ceil_div(threads, host.min(threads));
@@ -110,11 +145,13 @@ impl Analysis {
         let mut per_thread = Vec::with_capacity(threads);
         let mut needed_blocks = Vec::with_capacity(threads);
         let mut recv_needs = Vec::with_capacity(threads);
+        let mut row_split = Vec::with_capacity(threads);
         for r in results {
-            let (traffic, bitmap, needs) = r.unwrap();
+            let (traffic, bitmap, needs, split) = r.unwrap();
             per_thread.push(traffic);
             needed_blocks.push(bitmap);
             recv_needs.push(needs);
+            row_split.push(split);
         }
 
         let plan = CommPlan::from_recv_needs(&layout, &recv_needs);
@@ -145,7 +182,8 @@ impl Analysis {
             }
         }
 
-        Analysis { layout, topo, per_thread, plan, needed_blocks }
+        debug_assert!(plan.validate().is_ok(), "compiled CommPlan failed validation");
+        Analysis { layout, topo, per_thread, plan, needed_blocks, row_split }
     }
 
     /// Is global block `b` needed by thread `t`?
@@ -194,6 +232,29 @@ impl Analysis {
                 return Err(format!("thread {t}: far > total accesses"));
             }
         }
+        // Interior/boundary row runs cover each owned row exactly once and
+        // never cross a block boundary.
+        for (t, split) in self.row_split.iter().enumerate() {
+            let covered = RowRun::total(&split.interior) + RowRun::total(&split.boundary);
+            if covered != self.layout.nelems_of_thread(t) {
+                return Err(format!(
+                    "thread {t}: row split covers {covered} of {} rows",
+                    self.layout.nelems_of_thread(t)
+                ));
+            }
+            for run in split.interior.iter().chain(&split.boundary) {
+                if run.len == 0 {
+                    return Err(format!("thread {t}: zero-length run at {}", run.start));
+                }
+                let (i0, last) = (run.start as usize, run.start as usize + run.len as usize - 1);
+                if self.layout.owner_of_index(i0) != t {
+                    return Err(format!("thread {t}: run at {i0} starts on a foreign row"));
+                }
+                if !self.layout.same_block(i0, last) {
+                    return Err(format!("thread {t}: run at {i0} crosses a block boundary"));
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -207,10 +268,11 @@ fn scan_thread(
     topo: Topology,
     cache_window: usize,
     bitmap_words: usize,
-) -> (ThreadTraffic, Vec<u64>, Vec<(u32, u32)>) {
+) -> (ThreadTraffic, Vec<u64>, Vec<(u32, u32)>, RowSplit) {
     let mut traffic = ThreadTraffic::default();
     let mut bitmap = vec![0u64; bitmap_words];
     let mut off_owner: Vec<(u32, u32)> = Vec::new();
+    let mut split = RowSplit::default();
     let my_node = topo.node_of_thread(t);
     let mark = |bitmap: &mut Vec<u64>, b: usize| bitmap[b / 64] |= 1 << (b % 64);
 
@@ -219,8 +281,12 @@ fn scan_thread(
         // copies own blocks into mythread_x_copy as well).
         mark(&mut bitmap, b);
         let (start, len) = layout.block_range(b);
+        // Current (interior?, start, len) run; flushed on class change and
+        // at the block boundary so runs stay block-contiguous.
+        let mut cur: Option<(bool, u32, u32)> = None;
         for i in start..start + len {
             let row = &j[i * r_nz..(i + 1) * r_nz];
+            let mut row_is_interior = true;
             for &col in row {
                 let c = col as usize;
                 if c == i {
@@ -240,6 +306,7 @@ fn scan_thread(
                 if owner == t {
                     continue; // private (a different own block)
                 }
+                row_is_interior = false;
                 mark(&mut bitmap, layout.block_of_index(c));
                 if topo.node_of_thread(owner) == my_node {
                     traffic.c_local_indv += 1;
@@ -248,7 +315,17 @@ fn scan_thread(
                 }
                 off_owner.push((owner as u32, col));
             }
+            match cur {
+                Some((interior, _, ref mut run_len)) if interior == row_is_interior => {
+                    *run_len += 1
+                }
+                _ => {
+                    flush_run(&mut split, cur.take());
+                    cur = Some((row_is_interior, i as u32, 1));
+                }
+            }
         }
+        flush_run(&mut split, cur.take());
     }
 
     // Needed-block counts by residence (B_local includes own blocks).
@@ -267,7 +344,16 @@ fn scan_thread(
     // condensing step.
     off_owner.sort_unstable();
     off_owner.dedup();
-    (traffic, bitmap, off_owner)
+    (traffic, bitmap, off_owner, split)
+}
+
+/// Append a finished run to its class list. Runs stay within one block by
+/// construction — the caller flushes at every block end.
+fn flush_run(split: &mut RowSplit, cur: Option<(bool, u32, u32)>) {
+    if let Some((interior, start, len)) = cur {
+        let list = if interior { &mut split.interior } else { &mut split.boundary };
+        list.push(RowRun { start, len });
+    }
 }
 
 #[cfg(test)]
@@ -386,6 +472,44 @@ mod tests {
         let tot: u64 = far.per_thread.iter().map(|t| t.total_accesses).sum();
         assert_eq!(nf, 0);
         assert_eq!(ff, tot);
+    }
+
+    #[test]
+    fn row_split_classifies_rows() {
+        // Same hand example as `tiny_hand_example`: row i references
+        // (i+2) % 8, which always lands on the other thread → every row is
+        // boundary.
+        let layout = Layout::new(8, 2, 2);
+        let topo = Topology::single_node(2);
+        let r_nz = 2;
+        let mut j = vec![0u32; 8 * r_nz];
+        for i in 0..8 {
+            j[i * r_nz] = ((i + 2) % 8) as u32;
+            j[i * r_nz + 1] = i as u32;
+        }
+        let a = Analysis::build(&j, r_nz, layout, topo, usize::MAX);
+        a.validate().unwrap();
+        for t in 0..2 {
+            assert!(a.row_split[t].interior.is_empty());
+            assert_eq!(RowRun::total(&a.row_split[t].boundary), 4);
+        }
+        // Pure-diagonal pattern: every row is interior.
+        let j: Vec<u32> = (0..8u32).flat_map(|i| [i, i]).collect();
+        let a = Analysis::build(&j, r_nz, layout, topo, usize::MAX);
+        a.validate().unwrap();
+        for t in 0..2 {
+            assert!(a.row_split[t].boundary.is_empty());
+            assert_eq!(RowRun::total(&a.row_split[t].interior), 4);
+            // Two own blocks → two runs (runs never cross blocks).
+            assert_eq!(a.row_split[t].interior.len(), 2);
+        }
+        // Mixed: only row 0 references off-owner (idx 2, owned by t1).
+        let mut j: Vec<u32> = (0..8u32).flat_map(|i| [i, i]).collect();
+        j[0] = 2;
+        let a = Analysis::build(&j, r_nz, layout, topo, usize::MAX);
+        a.validate().unwrap();
+        assert_eq!(a.row_split[0].boundary, vec![RowRun { start: 0, len: 1 }]);
+        assert_eq!(RowRun::total(&a.row_split[0].interior), 3);
     }
 
     /// Property: conservation + volume ordering hold for random patterns.

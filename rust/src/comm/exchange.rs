@@ -363,6 +363,154 @@ impl StridedPlan {
     }
 }
 
+/// The interior/boundary decomposition of one thread's owned compute cells,
+/// compiled once from the subdomain geometry alongside the exchange plan.
+///
+/// *Interior* cells read no halo value, so their update can overlap the
+/// in-flight exchange of a split-phase step (`begin_exchange` → interior
+/// compute → `finish_exchange` → boundary compute). *Boundary* cells sit
+/// within stencil reach of the halo and must wait for `finish_exchange`.
+/// The split is purely geometric — every owned cell appears in exactly one
+/// block of exactly one of the two sets — so an overlapped step computes
+/// each cell once with the same expression as the synchronous step, keeping
+/// the results bitwise identical.
+#[derive(Debug, Clone, Default)]
+pub struct ComputeSplit {
+    /// Cells with no halo dependence (safe to update before the exchange
+    /// completes). Empty when the owned region is too thin to have any.
+    pub interior: Vec<StridedBlock>,
+    /// Cells within one stencil radius of the subdomain edge.
+    pub boundary: Vec<StridedBlock>,
+}
+
+impl ComputeSplit {
+    /// Split a 2D halo-extended `m × n` subdomain (owned region
+    /// `(1..m−1) × (1..n−1)`, 5-point stencil). Handles degenerate shapes:
+    /// a 1-cell-thick owned region is all boundary.
+    pub fn grid2d(m: usize, n: usize) -> ComputeSplit {
+        assert!(m >= 3 && n >= 3, "subdomain {m}x{n} has no owned cells");
+        let mut split = ComputeSplit::default();
+        split.push_plane_split(0, n, m, n);
+        split
+    }
+
+    /// Split a 3D halo-extended `p × m × n` subdomain (owned region
+    /// `(1..p−1) × (1..m−1) × (1..n−1)`, 7-point stencil). The outermost
+    /// owned x-planes are boundary; each middle x-slab splits like a 2D
+    /// plane.
+    pub fn grid3d(p: usize, m: usize, n: usize) -> ComputeSplit {
+        assert!(p >= 3 && m >= 3 && n >= 3, "subdomain {p}x{m}x{n} has no owned cells");
+        let mn = m * n;
+        let mut split = ComputeSplit::default();
+        // Owned interior of plane x: rows 1..m−1, cols 1..n−1.
+        let owned_plane = |x: usize| StridedBlock::plane(x * mn + n + 1, m - 2, n, n - 2, 1);
+        split.boundary.push(owned_plane(1));
+        if p - 2 > 1 {
+            split.boundary.push(owned_plane(p - 2));
+        }
+        for x in 2..p.saturating_sub(2) {
+            split.push_plane_split(x * mn, n, m, n);
+        }
+        split
+    }
+
+    /// Split one owned plane at `base` (rows `1..m−1` × cols `1..n−1`, row
+    /// stride `stride`): the one-cell ring goes to boundary, the rest to
+    /// interior.
+    fn push_plane_split(&mut self, base: usize, stride: usize, m: usize, n: usize) {
+        // Top owned row; bottom owned row when distinct.
+        self.boundary.push(StridedBlock::row(base + stride + 1, n - 2));
+        if m - 2 > 1 {
+            self.boundary.push(StridedBlock::row(base + (m - 2) * stride + 1, n - 2));
+        }
+        let mid_rows = m.saturating_sub(4); // rows 2..=m−3
+        if mid_rows == 0 {
+            return;
+        }
+        self.boundary.push(StridedBlock::column(base + 2 * stride + 1, mid_rows, stride));
+        if n - 2 > 1 {
+            self.boundary.push(StridedBlock::column(base + 2 * stride + (n - 2), mid_rows, stride));
+        }
+        let mid_cols = n.saturating_sub(4);
+        if mid_cols > 0 {
+            let inner = StridedBlock::plane(base + 2 * stride + 2, mid_rows, stride, mid_cols, 1);
+            self.interior.push(inner);
+        }
+    }
+
+    /// The owned compute region of a 2D halo-extended `m × n` subdomain
+    /// (rows `1..m−1` × cols `1..n−1`) — the canonical reference
+    /// [`ComputeSplit::validate`] checks a [`grid2d`](ComputeSplit::grid2d)
+    /// split against.
+    pub fn owned2d(m: usize, n: usize) -> Vec<StridedBlock> {
+        vec![StridedBlock::plane(n + 1, m - 2, n, n - 2, 1)]
+    }
+
+    /// The owned compute region of a 3D halo-extended `p × m × n` box: the
+    /// interior of every owned x-plane.
+    pub fn owned3d(p: usize, m: usize, n: usize) -> Vec<StridedBlock> {
+        let mn = m * n;
+        (1..p - 1).map(|x| StridedBlock::plane(x * mn + n + 1, m - 2, n, n - 2, 1)).collect()
+    }
+
+    /// Cells in the interior set.
+    pub fn interior_cells(&self) -> usize {
+        self.interior.iter().map(StridedBlock::len).sum()
+    }
+
+    /// Cells in the boundary set.
+    pub fn boundary_cells(&self) -> usize {
+        self.boundary.iter().map(StridedBlock::len).sum()
+    }
+
+    /// The split validator: every block within `field_len`, and
+    /// interior ∪ boundary covers each cell of `owned` **exactly once**
+    /// (no overlap, no gap). O(field_len) — debug builds and tests.
+    pub fn validate(&self, owned: &[StridedBlock], field_len: usize) -> Result<(), String> {
+        let mut count = vec![0u8; field_len];
+        for (what, blocks) in [("interior", &self.interior), ("boundary", &self.boundary)] {
+            for b in blocks {
+                if b.is_empty() {
+                    return Err(format!("{what} holds an empty block {b:?}"));
+                }
+                if b.end() > field_len {
+                    return Err(format!("{what} block {b:?} exceeds field length {field_len}"));
+                }
+                for c in block_cells(b) {
+                    if count[c] != 0 {
+                        return Err(format!("cell {c} covered twice (second in {what})"));
+                    }
+                    count[c] = 1;
+                }
+            }
+        }
+        let mut owned_cells = 0usize;
+        for b in owned {
+            if b.end() > field_len {
+                return Err(format!("owned block {b:?} exceeds field length {field_len}"));
+            }
+            for c in block_cells(b) {
+                owned_cells += 1;
+                if count[c] == 0 {
+                    return Err(format!("owned cell {c} not covered by the split"));
+                }
+            }
+        }
+        let covered = self.interior_cells() + self.boundary_cells();
+        if covered != owned_cells {
+            return Err(format!("split covers {covered} cells, owned region has {owned_cells}"));
+        }
+        Ok(())
+    }
+}
+
+/// All cell indices a block touches, in gather order.
+fn block_cells(b: &StridedBlock) -> impl Iterator<Item = usize> + '_ {
+    (0..b.rows).flat_map(move |r| {
+        (0..b.cols).map(move |c| b.offset + r * b.row_stride + c * b.col_stride)
+    })
+}
+
 /// A compiled exchange plan in one of its two forms. The common interface
 /// is the accounting + arena contract; executors match on the form for the
 /// pack/unpack semantics.
@@ -410,6 +558,17 @@ impl ExchangePlan {
     /// Payload bytes crossing thread boundaries per executed step.
     pub fn payload_bytes(&self) -> u64 {
         (self.total_values() * SIZEOF_DOUBLE) as u64
+    }
+
+    /// Form-dispatched consistency check. `field_len(t)` bounds thread t's
+    /// local field for the strided form (pass `|_| usize::MAX` when the
+    /// field lengths are unknown — structural checks still run); the gather
+    /// form validates against its own layout-derived invariants.
+    pub fn validate(&self, field_len: &dyn Fn(usize) -> usize) -> Result<(), String> {
+        match self {
+            ExchangePlan::Gather(p) => p.validate(),
+            ExchangePlan::Strided(p) => p.validate(field_len),
+        }
     }
 
     pub fn as_strided(&self) -> Option<&StridedPlan> {
@@ -549,6 +708,91 @@ mod tests {
         let plan = StridedPlan::from_msgs(2, &copies);
         assert!(plan.validate(&|_| 4).is_ok());
         assert!(plan.validate(&|_| 3).is_err());
+    }
+
+    fn owned2d(m: usize, n: usize) -> Vec<StridedBlock> {
+        ComputeSplit::owned2d(m, n)
+    }
+
+    fn owned3d(p: usize, m: usize, n: usize) -> Vec<StridedBlock> {
+        ComputeSplit::owned3d(p, m, n)
+    }
+
+    #[test]
+    fn split2d_covers_exactly() {
+        for (m, n) in [(5usize, 7usize), (3, 3), (3, 9), (9, 3), (4, 4), (5, 4), (64, 48)] {
+            let split = ComputeSplit::grid2d(m, n);
+            split.validate(&owned2d(m, n), m * n).unwrap_or_else(|e| panic!("{m}x{n}: {e}"));
+            assert_eq!(split.interior_cells() + split.boundary_cells(), (m - 2) * (n - 2));
+        }
+        // Known interior size on a comfortable subdomain.
+        let split = ComputeSplit::grid2d(10, 12);
+        assert_eq!(split.interior_cells(), 6 * 8);
+        assert_eq!(split.boundary_cells(), 8 * 10 - 6 * 8);
+        // 1-cell-thick owned regions have no interior.
+        assert_eq!(ComputeSplit::grid2d(3, 20).interior_cells(), 0);
+        assert_eq!(ComputeSplit::grid2d(20, 3).interior_cells(), 0);
+        // The degenerate 1×1 owned region (1-cell interior of the issue
+        // statement: a single owned cell, all boundary).
+        let tiny = ComputeSplit::grid2d(3, 3);
+        assert_eq!(tiny.boundary_cells(), 1);
+    }
+
+    #[test]
+    fn split3d_covers_exactly() {
+        for (p, m, n) in [
+            (5usize, 6usize, 7usize),
+            (3, 3, 3),
+            (3, 8, 8),
+            (8, 3, 8),
+            (8, 8, 3),
+            (4, 4, 4),
+            (6, 5, 9),
+        ] {
+            let split = ComputeSplit::grid3d(p, m, n);
+            split
+                .validate(&owned3d(p, m, n), p * m * n)
+                .unwrap_or_else(|e| panic!("{p}x{m}x{n}: {e}"));
+            assert_eq!(
+                split.interior_cells() + split.boundary_cells(),
+                (p - 2) * (m - 2) * (n - 2)
+            );
+        }
+        let split = ComputeSplit::grid3d(8, 8, 8);
+        assert_eq!(split.interior_cells(), 4 * 4 * 4);
+    }
+
+    #[test]
+    fn split_validator_catches_overlap_and_gap() {
+        let mut split = ComputeSplit::grid2d(6, 6);
+        let owned = owned2d(6, 6);
+        split.validate(&owned, 36).unwrap();
+        // Duplicate a boundary block → double coverage.
+        let dup = split.boundary[0];
+        split.boundary.push(dup);
+        assert!(split.validate(&owned, 36).is_err());
+        // Drop the interior → gap.
+        let mut split = ComputeSplit::grid2d(6, 6);
+        split.interior.clear();
+        assert!(split.validate(&owned, 36).is_err());
+        // Out-of-bounds field.
+        let split = ComputeSplit::grid2d(6, 6);
+        assert!(split.validate(&owned, 20).is_err());
+    }
+
+    #[test]
+    fn exchange_plan_validate_dispatches() {
+        let strided = StridedPlan::from_msgs(
+            2,
+            &[(0, 1, StridedBlock::row(0, 3), StridedBlock::row(3, 3))],
+        );
+        let plan: ExchangePlan = strided.into();
+        assert!(plan.validate(&|_| 6).is_ok());
+        assert!(plan.validate(&|_| 2).is_err());
+        let layout = crate::pgas::Layout::new(4, 2, 2);
+        let gather = CommPlan::from_recv_needs(&layout, &[vec![(1u32, 2u32)], vec![]]);
+        let plan: ExchangePlan = gather.into();
+        assert!(plan.validate(&|_| usize::MAX).is_ok());
     }
 
     #[test]

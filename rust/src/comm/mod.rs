@@ -29,6 +29,6 @@ mod analysis;
 mod exchange;
 mod plan;
 
-pub use analysis::{Analysis, ThreadTraffic};
-pub use exchange::{ExchangePlan, StridedBlock, StridedMsg, StridedPlan};
+pub use analysis::{Analysis, RowRun, RowSplit, ThreadTraffic};
+pub use exchange::{ComputeSplit, ExchangePlan, StridedBlock, StridedMsg, StridedPlan};
 pub use plan::{CommPlan, PlanMsg};

@@ -1,8 +1,11 @@
 //! The workload-agnostic exchange runtime: a compiled [`ExchangePlan`], its
-//! flat staging arena, and a persistent [`WorkerPool`] — everything a
-//! grid/halo workload needs to execute time steps on either engine.
+//! double-buffered staging arena, and a persistent [`WorkerPool`] —
+//! everything a grid/halo workload needs to execute time steps on either
+//! engine.
 //!
-//! One step is the Listing 7 phase structure, driven entirely by the plan:
+//! Two step protocols, both driven entirely by the plan:
+//!
+//! **Synchronous** ([`step_strided`]) — the Listing 7 phase structure:
 //!
 //! ```text
 //! pack: every sender gathers its compiled blocks into its arena ranges
@@ -11,41 +14,103 @@
 //! update: per-thread stencil kernel on the thread's own (field, out) pair
 //! ```
 //!
+//! **Split-phase overlapped** ([`step_overlapped`]) — the nonblocking
+//! begin/finish protocol that hides the exchange behind halo-independent
+//! compute:
+//!
+//! ```text
+//! begin_exchange:  pack into the current epoch's arena half, publish the
+//!                  per-thread epoch flag (seqcst)
+//! overlap window:  compute the interior (no halo dependence)
+//! finish_exchange: wait on the flags of this thread's actual senders only
+//!                  (no global barrier), unpack
+//! boundary:        compute the halo-adjacent cells
+//! ```
+//!
 //! On [`Engine::Sequential`] the phases are replayed on the calling thread
 //! (the correctness oracle); on [`Engine::Parallel`] each logical thread is
-//! a persistent pool worker and the barrier is real. Both paths run the
-//! same pack/unpack/update code on the same data in the same order, so the
-//! results are **bitwise identical** — and neither allocates nor spawns
-//! anything per step: plan, arena, and workers all persist.
+//! a persistent pool worker. Both paths run the same pack/unpack/update
+//! code on the same data — and because interior ∪ boundary covers every
+//! owned cell exactly once with the unchanged per-cell expression, the
+//! overlapped step is **bitwise identical** to the synchronous one. Neither
+//! allocates nor spawns anything per step: plan, arena, flags and workers
+//! all persist.
+//!
+//! The staging arena is double-buffered receiver-major: epoch `k` packs
+//! into half `k mod 2`, so a sender beginning epoch `k+1` writes the other
+//! half and never overwrites slots a slow receiver is still reading from
+//! epoch `k`.
+//!
+//! [`step_strided`]: ExchangeRuntime::step_strided
+//! [`step_overlapped`]: ExchangeRuntime::step_overlapped
 
-use super::pool::{ArenaView, PerWorker, WorkerCtx, WorkerPool};
+use super::pool::{ArenaView, EpochFlags, PerWorker, WorkerCtx, WorkerPool};
 use super::Engine;
 use crate::comm::ExchangePlan;
 
 /// A compiled plan bound to its staging arena and worker pool. Workloads
-/// (heat-2D, the 3D stencil) own one and call [`step_strided`] per time
-/// step; the SpMV engine shares the same pool/arena machinery through
-/// [`crate::engine::ParallelPool`].
+/// (heat-2D, the 3D stencil) own one and call [`step_strided`] or
+/// [`step_overlapped`] per time step; the SpMV engine shares the same
+/// pool/arena machinery through [`crate::engine::ParallelPool`].
 ///
 /// [`step_strided`]: ExchangeRuntime::step_strided
+/// [`step_overlapped`]: ExchangeRuntime::step_overlapped
 #[derive(Debug)]
 pub struct ExchangeRuntime {
     plan: ExchangePlan,
-    /// Flat staging arena of `plan.total_values()` doubles, allocated once.
+    /// Double-buffered staging arena: `2 × plan.total_values()` doubles,
+    /// allocated once. Epoch `k` uses the half at `(k mod 2) · total`.
     staging: Vec<f64>,
     /// Long-lived workers; empty until the first parallel step.
     pool: WorkerPool,
+    /// Per-thread published-epoch counters for the split-phase protocol.
+    flags: EpochFlags,
+    /// Exchange epoch of the last overlapped step (0 = none yet).
+    epoch: u64,
+    /// `senders[t]` — the distinct threads that send to `t`, i.e. exactly
+    /// the flags `finish_exchange` waits on. Compiled once from the plan.
+    senders: Vec<Vec<u32>>,
 }
 
 impl ExchangeRuntime {
     pub fn new(plan: impl Into<ExchangePlan>) -> ExchangeRuntime {
         let plan = plan.into();
-        let staging = vec![0.0f64; plan.total_values()];
-        ExchangeRuntime { plan, staging, pool: WorkerPool::new() }
+        debug_assert!(
+            plan.validate(&|_| usize::MAX).is_ok(),
+            "compiled exchange plan failed validation: {:?}",
+            plan.validate(&|_| usize::MAX)
+        );
+        let threads = plan.threads();
+        let staging = vec![0.0f64; 2 * plan.total_values()];
+        let senders = (0..threads)
+            .map(|t| {
+                let mut s: Vec<u32> = match &plan {
+                    ExchangePlan::Gather(p) => p.recv_msgs(t).map(|m| m.peer).collect(),
+                    ExchangePlan::Strided(p) => p.recv_msgs(t).map(|m| m.peer).collect(),
+                };
+                s.sort_unstable();
+                s.dedup();
+                s
+            })
+            .collect();
+        ExchangeRuntime {
+            plan,
+            staging,
+            pool: WorkerPool::new(),
+            flags: EpochFlags::new(threads),
+            epoch: 0,
+            senders,
+        }
     }
 
     pub fn plan(&self) -> &ExchangePlan {
         &self.plan
+    }
+
+    /// The distinct senders of thread `t` (the peers `finish_exchange`
+    /// waits on).
+    pub fn senders_of(&self, t: usize) -> &[u32] {
+        &self.senders[t]
     }
 
     /// Payload bytes every step moves across thread boundaries (a constant
@@ -76,7 +141,7 @@ impl ExchangeRuntime {
         let threads = plan.threads();
         assert_eq!(fields.len(), threads, "one field per thread");
         assert_eq!(out.len(), threads, "one output field per thread");
-        debug_assert_eq!(self.staging.len(), plan.total_values());
+        debug_assert_eq!(self.staging.len(), 2 * plan.total_values());
         match engine {
             Engine::Sequential => {
                 for (t, field) in fields.iter().enumerate() {
@@ -116,6 +181,103 @@ impl ExchangeRuntime {
                         m.unpack(unsafe { arena.slice(m.range()) }, field);
                     }
                     update(t, field, unsafe { ow.take(t) }.as_mut_slice());
+                });
+            }
+        }
+    }
+
+    /// One split-phase overlapped time step of a strided plan:
+    /// `begin_exchange` (pack + publish) → interior compute (overlaps the
+    /// exchange) → `finish_exchange` (per-peer epoch waits, no global
+    /// barrier) → unpack → boundary compute.
+    ///
+    /// `interior(t, field, out)` must update exactly the cells with no halo
+    /// dependence and `boundary(t, field, out)` exactly the rest, each cell
+    /// once with the synchronous step's expression — then the result is
+    /// bitwise identical to [`step_strided`](ExchangeRuntime::step_strided).
+    /// Panics if the plan is not the strided form.
+    pub fn step_overlapped<UI, UB>(
+        &mut self,
+        engine: Engine,
+        fields: &mut [Vec<f64>],
+        out: &mut [Vec<f64>],
+        interior: UI,
+        boundary: UB,
+    ) where
+        UI: Fn(usize, &mut [f64], &mut [f64]) + Sync,
+        UB: Fn(usize, &mut [f64], &mut [f64]) + Sync,
+    {
+        let plan = self
+            .plan
+            .as_strided()
+            .expect("step_overlapped needs a strided exchange plan");
+        let threads = plan.threads();
+        assert_eq!(fields.len(), threads, "one field per thread");
+        assert_eq!(out.len(), threads, "one output field per thread");
+        let total = plan.total_values();
+        debug_assert_eq!(self.staging.len(), 2 * total);
+        self.epoch += 1;
+        let epoch = self.epoch;
+        // Double buffering: this epoch's receiver-major half.
+        let half = (epoch % 2) as usize * total;
+        match engine {
+            Engine::Sequential => {
+                for (t, field) in fields.iter().enumerate() {
+                    for m in plan.send_msgs(t) {
+                        let r = m.range();
+                        m.pack(field, &mut self.staging[half + r.start..half + r.end]);
+                    }
+                    self.flags.publish(t, epoch);
+                }
+                for (t, (field, o)) in fields.iter_mut().zip(out.iter_mut()).enumerate() {
+                    interior(t, field.as_mut_slice(), o.as_mut_slice());
+                }
+                // finish_exchange is trivially satisfied on one OS thread.
+                for (t, field) in fields.iter_mut().enumerate() {
+                    for m in plan.recv_msgs(t) {
+                        let r = m.range();
+                        m.unpack(&self.staging[half + r.start..half + r.end], field);
+                    }
+                }
+                for (t, (field, o)) in fields.iter_mut().zip(out.iter_mut()).enumerate() {
+                    boundary(t, field.as_mut_slice(), o.as_mut_slice());
+                }
+            }
+            Engine::Parallel => {
+                let arena = ArenaView::new(&mut self.staging);
+                let fw = PerWorker::new(fields);
+                let ow = PerWorker::new(out);
+                let (interior, boundary) = (&interior, &boundary);
+                let (flags, senders) = (&self.flags, &self.senders);
+                self.pool.run(threads, &|ctx: WorkerCtx| {
+                    let t = ctx.id;
+                    // SAFETY: worker t claims only its own field/out pair,
+                    // exactly once per dispatch.
+                    let field = unsafe { fw.take(t) }.as_mut_slice();
+                    let o = unsafe { ow.take(t) }.as_mut_slice();
+                    // begin_exchange: pack into this epoch's half + publish.
+                    for m in plan.send_msgs(t) {
+                        let r = m.range();
+                        // SAFETY: plan ranges are disjoint per message and
+                        // halved per epoch parity; packed by the sender only.
+                        m.pack(field, unsafe { arena.slice_mut(half + r.start..half + r.end) });
+                    }
+                    flags.publish(t, epoch);
+
+                    // Overlap window: halo-independent compute.
+                    interior(t, field, o);
+
+                    // finish_exchange: wait on actual senders only.
+                    for &peer in &senders[t] {
+                        ctx.wait_for_epoch(flags.flag(peer as usize), epoch);
+                    }
+                    for m in plan.recv_msgs(t) {
+                        let r = m.range();
+                        // SAFETY: the sender's seqcst publish ordered its
+                        // pack writes before this read.
+                        m.unpack(unsafe { arena.slice(half + r.start..half + r.end) }, field);
+                    }
+                    boundary(t, field, o);
                 });
             }
         }
@@ -168,6 +330,69 @@ mod tests {
             f_seq = o_seq;
             f_par = o_par;
         }
+    }
+
+    /// The overlapped version of [`step`]: cells 2..4 never read a ghost
+    /// (interior), cells 1 and 4 do (boundary).
+    fn step_ovl(
+        rt: &mut ExchangeRuntime,
+        engine: Engine,
+        fields: &mut [Vec<f64>],
+    ) -> Vec<Vec<f64>> {
+        let mut out = fields.to_vec();
+        rt.step_overlapped(
+            engine,
+            fields,
+            &mut out,
+            |_t, field, out| {
+                for i in 2..4 {
+                    out[i] = 0.5 * (field[i - 1] + field[i + 1]);
+                }
+            },
+            |_t, field, out| {
+                for i in [1usize, 4] {
+                    out[i] = 0.5 * (field[i - 1] + field[i + 1]);
+                }
+            },
+        );
+        out
+    }
+
+    #[test]
+    fn overlapped_matches_synchronous_bitwise() {
+        let init = vec![
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 0.0],
+            vec![0.0, 5.0, 6.0, 7.0, 8.0, 0.0],
+        ];
+        let mut rt_sync = ring_runtime();
+        let mut rt_seq = ring_runtime();
+        let mut rt_par = ring_runtime();
+        let mut f_sync = init.clone();
+        let mut f_seq = init.clone();
+        let mut f_par = init.clone();
+        for step in 0..6 {
+            let o_sync = step(&mut rt_sync, Engine::Sequential, &mut f_sync);
+            let o_seq = step_ovl(&mut rt_seq, Engine::Sequential, &mut f_seq);
+            let o_par = step_ovl(&mut rt_par, Engine::Parallel, &mut f_par);
+            assert_eq!(o_sync, o_seq, "seq overlap diverges at step {step}");
+            assert_eq!(o_sync, o_par, "par overlap diverges at step {step}");
+            assert_eq!(f_sync, f_seq);
+            assert_eq!(f_sync, f_par);
+            f_sync = o_sync;
+            f_seq = o_seq;
+            f_par = o_par;
+        }
+        // Epochs advanced once per overlapped step.
+        assert_eq!(rt_par.epoch, 6);
+    }
+
+    #[test]
+    fn senders_compiled_from_plan() {
+        let rt = ring_runtime();
+        assert_eq!(rt.senders_of(0), &[1]);
+        assert_eq!(rt.senders_of(1), &[0]);
+        // Double-buffered arena.
+        assert_eq!(rt.staging.len(), 2 * rt.plan().total_values());
     }
 
     #[test]

@@ -38,7 +38,7 @@ mod pool;
 
 pub use exchange::ExchangeRuntime;
 pub use parallel::ParallelPool;
-pub use pool::{ArenaView, PerWorker, WorkerCtx, WorkerPool};
+pub use pool::{ArenaView, EpochFlags, PerWorker, WorkerCtx, WorkerPool};
 
 use crate::comm::Analysis;
 use crate::spmv::{run_variant, ExecOutcome, SpmvState, Variant};
@@ -101,6 +101,15 @@ impl SpmvEngine {
             Engine::Sequential => run_variant(variant, state, analysis),
             Engine::Parallel => self.pool.run(variant, state, analysis),
         }
+    }
+
+    /// Run one split-phase overlapped UPCv3 SpMV (`begin_exchange` →
+    /// interior rows → `finish_exchange` → boundary rows) on this engine.
+    /// Output and counters are bitwise identical to `run(Variant::V3, ..)`;
+    /// only the synchronization structure differs — see
+    /// [`ParallelPool::run_v3_overlapped`].
+    pub fn run_overlapped(&mut self, state: &mut SpmvState, analysis: &Analysis) -> ExecOutcome {
+        self.pool.run_v3_overlapped(self.mode, state, analysis)
     }
 }
 

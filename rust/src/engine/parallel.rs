@@ -32,9 +32,11 @@
 //!
 //! [`SharedVec::locals_mut`]: crate::pgas::SharedVec::locals_mut
 
-use super::pool::{ArenaView, PerWorker, WorkerCtx, WorkerPool};
-use crate::comm::Analysis;
+use super::pool::{ArenaView, EpochFlags, PerWorker, WorkerCtx, WorkerPool};
+use super::Engine;
+use crate::comm::{Analysis, RowRun};
 use crate::machine::SIZEOF_DOUBLE;
+use crate::pgas::Layout;
 use crate::spmv::{spmv_block_gathered, spmv_block_global, ExecOutcome, SpmvState, Variant};
 
 /// Persistent engine state, reused across calls/time steps: the worker pool
@@ -45,10 +47,16 @@ pub struct ParallelPool {
     pool: WorkerPool,
     /// `x_copies[t]` — thread t's private full-length x workspace (V2/V3).
     x_copies: Vec<Vec<f64>>,
-    /// Flat staging arena for V3 message payloads (`plan.total_values()`).
+    /// Staging arena for V3 message payloads: `plan.total_values()` doubles
+    /// for the synchronous path, doubled (two epoch halves) for the
+    /// split-phase overlapped path.
     staging: Vec<f64>,
     /// Per-worker `(bytes, transfers)` counters (naive/V1/V2).
     counts: Vec<(u64, u64)>,
+    /// Per-thread published-epoch flags for the overlapped V3 path.
+    flags: EpochFlags,
+    /// Exchange epoch of the last overlapped step (0 = none yet).
+    epoch: u64,
 }
 
 impl ParallelPool {
@@ -300,6 +308,180 @@ impl ParallelPool {
             }
         });
         finish_counted(state, inter, transfers)
+    }
+
+    /// The split-phase overlapped Listing 5: pack + publish
+    /// (`begin_exchange`), own-block copy + interior rows (the overlap
+    /// window), per-peer epoch waits + scatter (`finish_exchange`), then
+    /// boundary rows.
+    ///
+    /// Interior rows — rows whose column indices are all owner-local,
+    /// classified once at analysis time ([`Analysis::row_split`]) — never
+    /// read a scattered ghost, so computing them before the messages arrive
+    /// changes nothing: every row runs the same kernel expression and `y`
+    /// is bitwise identical to the synchronous V3 on either engine, with
+    /// the same byte/transfer counters. The staging arena is
+    /// double-buffered by epoch parity and there is **no global barrier**:
+    /// a thread waits only on the peers that actually send to it.
+    pub fn run_v3_overlapped(
+        &mut self,
+        engine: Engine,
+        state: &mut SpmvState,
+        analysis: &Analysis,
+    ) -> ExecOutcome {
+        let layout = state.layout;
+        let r = state.r_nz;
+        let threads = layout.threads;
+        let plan = &analysis.plan;
+        assert_eq!(analysis.row_split.len(), threads, "analysis/layout thread mismatch");
+        self.ensure(threads, layout.n);
+        let total = plan.total_values();
+        self.staging.resize(2 * total, 0.0);
+        if self.flags.len() != threads {
+            self.flags = EpochFlags::new(threads);
+            self.epoch = 0;
+        }
+        self.epoch += 1;
+        let epoch = self.epoch;
+        let half = (epoch % 2) as usize * total;
+
+        // Counters: the same pure function of the plan as the synchronous
+        // path, so both protocols report identical traffic.
+        let mut inter = 0u64;
+        let mut transfers = 0u64;
+        for t in 0..threads {
+            for m in plan.send_msgs(t) {
+                inter += (m.len() * SIZEOF_DOUBLE) as u64;
+                transfers += 1;
+            }
+        }
+
+        let x = &state.x;
+        let d = &state.d;
+        let a = &state.a;
+        let j = &state.j;
+        let split = &analysis.row_split;
+        match engine {
+            Engine::Sequential => {
+                // Replay the split-phase schedule on the calling thread:
+                // all begins, all interior computes, all finishes, all
+                // boundary computes — the correctness oracle.
+                for t in 0..threads {
+                    let local_x = x.local(t);
+                    for m in plan.send_msgs(t) {
+                        let rng = m.range();
+                        let buf = &mut self.staging[half + rng.start..half + rng.end];
+                        for (slot, &off) in buf.iter_mut().zip(m.local_src) {
+                            *slot = local_x[off as usize];
+                        }
+                    }
+                    self.flags.publish(t, epoch);
+                }
+                let mut y_locals = state.y.locals_mut();
+                for t in 0..threads {
+                    let ws = &mut self.x_copies[t];
+                    for b in layout.blocks_of_thread(t) {
+                        let (start, len) = layout.block_range(b);
+                        ws[start..start + len].copy_from_slice(x.block(b));
+                    }
+                    let y_local = &mut y_locals[t][..];
+                    compute_row_runs(&layout, r, d, a, j, &split[t].interior, ws, y_local);
+                }
+                for t in 0..threads {
+                    let ws = &mut self.x_copies[t];
+                    for m in plan.recv_msgs(t) {
+                        let rng = m.range();
+                        let vals = &self.staging[half + rng.start..half + rng.end];
+                        for (&gidx, &v) in m.indices.iter().zip(vals) {
+                            ws[gidx as usize] = v;
+                        }
+                    }
+                    let y_local = &mut y_locals[t][..];
+                    compute_row_runs(&layout, r, d, a, j, &split[t].boundary, ws, y_local);
+                }
+            }
+            Engine::Parallel => {
+                let arena = ArenaView::new(&mut self.staging);
+                let mut y_locals = state.y.locals_mut();
+                let y = PerWorker::new(&mut y_locals);
+                let ws_view = PerWorker::new(&mut self.x_copies);
+                let flags = &self.flags;
+                self.pool.run(threads, &|ctx: WorkerCtx| {
+                    let t = ctx.id;
+                    // begin_exchange: pack into this epoch's half + publish.
+                    let local_x = x.local(t);
+                    for m in plan.send_msgs(t) {
+                        let rng = m.range();
+                        // SAFETY: plan ranges are disjoint per message (and
+                        // halved by epoch parity); packed by sender t only.
+                        let buf = unsafe { arena.slice_mut(half + rng.start..half + rng.end) };
+                        for (slot, &off) in buf.iter_mut().zip(m.local_src) {
+                            *slot = local_x[off as usize];
+                        }
+                    }
+                    flags.publish(t, epoch);
+
+                    // Overlap window: own-block copy + interior rows.
+                    // SAFETY: worker t claims only its own workspace/shard,
+                    // each exactly once per dispatch.
+                    let ws = unsafe { ws_view.take(t) };
+                    let y_local = unsafe { y.take(t) };
+                    for b in layout.blocks_of_thread(t) {
+                        let (start, len) = layout.block_range(b);
+                        ws[start..start + len].copy_from_slice(x.block(b));
+                    }
+                    compute_row_runs(&layout, r, d, a, j, &split[t].interior, ws, y_local);
+
+                    // finish_exchange: per-peer waits, scatter as published.
+                    for m in plan.recv_msgs(t) {
+                        ctx.wait_for_epoch(flags.flag(m.peer as usize), epoch);
+                        let rng = m.range();
+                        // SAFETY: the sender's seqcst publish ordered its
+                        // pack writes before this read.
+                        let vals = unsafe { arena.slice(half + rng.start..half + rng.end) };
+                        for (&gidx, &v) in m.indices.iter().zip(vals) {
+                            ws[gidx as usize] = v;
+                        }
+                    }
+                    compute_row_runs(&layout, r, d, a, j, &split[t].boundary, ws, y_local);
+                });
+            }
+        }
+        finish_counted(state, inter, transfers)
+    }
+}
+
+/// Run the gathered kernel over a list of block-contiguous row runs,
+/// carving the `D`/`A`/`J`/`y` slices from each run's block. Kernel and FP
+/// order are identical to the whole-block path, so a split row set produces
+/// bitwise-identical `y` values.
+fn compute_row_runs(
+    layout: &Layout,
+    r_nz: usize,
+    d: &crate::pgas::SharedVec<f64>,
+    a: &crate::pgas::SharedVec<f64>,
+    j: &crate::pgas::SharedVec<u32>,
+    runs: &[RowRun],
+    ws: &[f64],
+    y_local: &mut [f64],
+) {
+    let bs = layout.block_size;
+    for run in runs {
+        let i0 = run.start as usize;
+        let len = run.len as usize;
+        let b = layout.block_of_index(i0);
+        let (bstart, _) = layout.block_range(b);
+        let off = i0 - bstart;
+        let ypos = layout.local_block_index(b) * bs + off;
+        spmv_block_gathered(
+            i0,
+            &d.block(b)[off..off + len],
+            &a.block(b)[off * r_nz..(off + len) * r_nz],
+            &j.block(b)[off * r_nz..(off + len) * r_nz],
+            r_nz,
+            ws,
+            &mut y_local[ypos..ypos + len],
+        );
     }
 }
 

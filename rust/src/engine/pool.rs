@@ -24,6 +24,7 @@
 use std::fmt;
 use std::marker::PhantomData;
 use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -46,6 +47,72 @@ impl WorkerCtx<'_> {
     pub fn barrier(&self) {
         self.barrier.wait(self.workers);
     }
+
+    /// The split-phase wait primitive: spin (then yield) until `flag`
+    /// reaches `target` — the per-peer arrival wait of `finish_exchange`,
+    /// replacing the global barrier with a wait on exactly the peers that
+    /// send to this worker.
+    ///
+    /// Preserves the poisoned-barrier panic-propagation semantics: if a peer
+    /// worker panics before publishing, the pool poisons the dispatch and
+    /// this wait panics too instead of spinning forever.
+    pub fn wait_for_epoch(&self, flag: &AtomicU64, target: u64) {
+        let mut spins = 0u32;
+        while flag.load(Ordering::SeqCst) < target {
+            if self.barrier.is_poisoned() {
+                panic!("a pool worker panicked during this dispatch");
+            }
+            spins += 1;
+            if spins < 128 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+/// One cache-line-padded seqcst epoch counter per logical thread: thread
+/// `t`'s counter is the epoch of the last exchange `t` fully published
+/// (packed every outgoing message of). Receivers in `finish_exchange` wait
+/// on the counters of their actual senders only.
+///
+/// The counters are monotone across steps and survive pool dispatches, so a
+/// runtime can keep one `EpochFlags` for its whole lifetime; padding keeps
+/// the per-thread stores from false-sharing the waiters' loads.
+#[derive(Debug, Default)]
+pub struct EpochFlags {
+    flags: Vec<PaddedEpoch>,
+}
+
+#[derive(Debug, Default)]
+#[repr(align(64))]
+struct PaddedEpoch(AtomicU64);
+
+impl EpochFlags {
+    /// Flags for `threads` logical threads, all at epoch 0 (nothing
+    /// published yet).
+    pub fn new(threads: usize) -> EpochFlags {
+        EpochFlags { flags: (0..threads).map(|_| PaddedEpoch::default()).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.flags.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.flags.is_empty()
+    }
+
+    /// Thread `t`'s published-epoch counter.
+    pub fn flag(&self, t: usize) -> &AtomicU64 {
+        &self.flags[t].0
+    }
+
+    /// Publish: thread `t` finished packing every message of `epoch`.
+    pub fn publish(&self, t: usize, epoch: u64) {
+        self.flags[t].0.store(epoch, Ordering::SeqCst);
+    }
 }
 
 /// A reusable sense-counting barrier that can be poisoned: when a worker
@@ -56,6 +123,10 @@ impl WorkerCtx<'_> {
 struct PoolBarrier {
     state: Mutex<BarrierState>,
     cv: Condvar,
+    /// Lock-free mirror of `BarrierState::poisoned` for the spin-wait of
+    /// [`WorkerCtx::wait_for_epoch`] (checking the mutex per spin would
+    /// serialize the waiters).
+    poisoned_fast: AtomicBool,
 }
 
 struct BarrierState {
@@ -71,7 +142,12 @@ impl PoolBarrier {
         PoolBarrier {
             state: Mutex::new(BarrierState { count: 0, generation: 0, poisoned: false }),
             cv: Condvar::new(),
+            poisoned_fast: AtomicBool::new(false),
         }
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.poisoned_fast.load(Ordering::SeqCst)
     }
 
     fn wait(&self, workers: usize) {
@@ -100,6 +176,7 @@ impl PoolBarrier {
     }
 
     fn poison(&self) {
+        self.poisoned_fast.store(true, Ordering::SeqCst);
         self.state.lock().unwrap().poisoned = true;
         self.cv.notify_all();
     }
@@ -111,6 +188,7 @@ impl PoolBarrier {
         let mut st = self.state.lock().unwrap();
         st.count = 0;
         st.poisoned = false;
+        self.poisoned_fast.store(false, Ordering::SeqCst);
     }
 }
 
@@ -428,6 +506,62 @@ mod tests {
         }));
         assert!(res.is_err(), "worker panic must reach the dispatcher");
         // The pool (workers, barrier) remains usable afterwards.
+        let hits = AtomicU64::new(0);
+        pool.run(4, &|ctx| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            ctx.barrier();
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn epoch_flags_order_split_phase_exchange() {
+        // A ring exchange with no barrier: each worker publishes its slot,
+        // then waits only on its left neighbour's flag before reading.
+        let mut pool = WorkerPool::new();
+        let n = 6usize;
+        let flags = EpochFlags::new(n);
+        let mut arena = vec![0.0f64; n];
+        let mut out = vec![0.0f64; n];
+        let av = ArenaView::new(&mut arena);
+        let ov = PerWorker::new(&mut out);
+        for epoch in 1..=3u64 {
+            pool.run(n, &|ctx| {
+                let t = ctx.id;
+                // SAFETY: slot t written only by worker t before publishing.
+                unsafe { av.slice_mut(t..t + 1) }[0] = (epoch as usize * 100 + t) as f64;
+                flags.publish(t, epoch);
+                let peer = (t + 1) % ctx.workers;
+                ctx.wait_for_epoch(flags.flag(peer), epoch);
+                // SAFETY: peer's write happened before its publish (SeqCst).
+                let v = unsafe { av.slice(peer..peer + 1) }[0];
+                // SAFETY: each worker claims only its own output slot.
+                *unsafe { ov.take(t) } = v;
+            });
+            for t in 0..n {
+                assert_eq!(out[t], (epoch as usize * 100 + (t + 1) % n) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_wait_released_by_poison() {
+        // Worker 2 panics before publishing; the peers spinning on its flag
+        // must be released by the poison and panic, not hang — the same
+        // semantics as the poisoned barrier.
+        let mut pool = WorkerPool::new();
+        let flags = EpochFlags::new(4);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, &|ctx| {
+                if ctx.id == 2 {
+                    panic!("boom before publish");
+                }
+                flags.publish(ctx.id, 1);
+                ctx.wait_for_epoch(flags.flag(2), 1);
+            });
+        }));
+        assert!(res.is_err(), "worker panic must reach the dispatcher");
+        // The pool stays usable afterwards (reset clears the fast flag).
         let hits = AtomicU64::new(0);
         pool.run(4, &|ctx| {
             hits.fetch_add(1, Ordering::Relaxed);

@@ -16,7 +16,9 @@ pub use ablations::{ablation_blocksize, ablation_ordering, ablation_threads_per_
 pub use baselines::baseline_mpi;
 pub use figures::{figure1, figure2_blocksize, figure2_volumes, plot_figure};
 pub use tables::{microbench_table, table1, table2, table3, table4, table5};
-pub use validate::{model_validation, ValidationPoint, ValidationReport};
+pub use validate::{
+    model_validation, ValidationPoint, ValidationReport, WorkloadPoint, WORKLOAD_LABELS,
+};
 
 use crate::engine::Engine;
 use crate::machine::HwParams;

@@ -50,11 +50,17 @@ impl ValidationPoint {
     }
 }
 
-/// One measured-vs-predicted point for a grid workload on the exchange
-/// runtime (heat-2D, the 3D stencil).
+/// Workload labels validated through [`WorkloadPoint`]s: the two grid
+/// workloads, their split-phase overlapped steps, and the overlapped SpMV
+/// V3 (`T_step ≈ max(T_comm, T_comp^interior) + T_comp^boundary`).
+pub const WORKLOAD_LABELS: [&str; 5] =
+    ["heat2d", "heat2d-ovl", "stencil3d", "stencil3d-ovl", "spmv-v3-ovl"];
+
+/// One measured-vs-predicted point for a workload on the exchange runtime
+/// (heat-2D, the 3D stencil, their overlapped variants, overlapped SpMV).
 #[derive(Debug, Clone)]
 pub struct WorkloadPoint {
-    /// `"heat2d"` or `"stencil3d"`.
+    /// One of [`WORKLOAD_LABELS`].
     pub workload: &'static str,
     /// Human-readable geometry, e.g. `"624x624 / 2x4"`.
     pub geometry: String,
@@ -161,6 +167,17 @@ fn median_step_seconds(mut step: impl FnMut(), steps: usize) -> f64 {
     Stats::from(&samples).p50
 }
 
+/// The SpMV sampling protocol: median of `steps` timed samples after one
+/// discarded warmup sample. `sample` runs one engine iteration and returns
+/// its timed seconds — work it does after stopping the clock (the `swap_xy`
+/// between iterations) stays untimed. Shared by the per-variant and the
+/// overlapped measurement so both columns use one methodology.
+fn median_sample_seconds(steps: usize, mut sample: impl FnMut() -> f64) -> f64 {
+    sample(); // warmup: primes the pool + workspaces
+    let samples: Vec<f64> = (0..steps).map(|_| sample()).collect();
+    Stats::from(&samples).p50
+}
+
 /// Measure the grid workloads (heat-2D and the 3D stencil, both on the
 /// shared exchange runtime) and predict each with the eqs. (19)–(22)
 /// models. One solver per workload through [`median_step_seconds`]; the
@@ -191,16 +208,31 @@ fn workload_validation(cfg: &HarnessConfig, steps: usize) -> Vec<WorkloadPoint> 
     let f0: Vec<f64> = (0..grid2.m_glob * grid2.n_glob).map(|_| rng.f64_in(0.0, 100.0)).collect();
     let mut solver = Heat2dSolver::new(grid2, &f0);
     let measured = median_step_seconds(|| solver.step_with(cfg.engine), steps);
+    let mut solver_ovl = Heat2dSolver::new(grid2, &f0);
+    let measured_ovl =
+        median_step_seconds(|| solver_ovl.step_overlapped_with(cfg.engine), steps);
     for &(nodes, tpn) in &topos {
-        let p = model::predict_heat2d(&grid2, &Topology::new(nodes, tpn), &hw_run);
+        let topo = Topology::new(nodes, tpn);
+        let p = model::predict_heat2d(&grid2, &topo, &hw_run);
+        let geometry = format!("{}x{} / {mp}x{np}", grid2.m_glob, grid2.n_glob);
         out.push(WorkloadPoint {
             workload: "heat2d",
-            geometry: format!("{}x{} / {mp}x{np}", grid2.m_glob, grid2.n_glob),
+            geometry: geometry.clone(),
             cells: grid2.m_glob * grid2.n_glob,
             nodes,
             threads_per_node: tpn,
             measured,
             predicted: p.t_halo + p.t_comp,
+        });
+        let p_ovl = model::predict_heat2d_overlap(&grid2, &topo, &hw_run);
+        out.push(WorkloadPoint {
+            workload: "heat2d-ovl",
+            geometry,
+            cells: grid2.m_glob * grid2.n_glob,
+            nodes,
+            threads_per_node: tpn,
+            measured: measured_ovl,
+            predicted: p_ovl.t_step,
         });
     }
 
@@ -225,19 +257,34 @@ fn workload_validation(cfg: &HarnessConfig, steps: usize) -> Vec<WorkloadPoint> 
         .collect();
     let mut solver = Stencil3dSolver::new(grid3, &f0);
     let measured = median_step_seconds(|| solver.step_with(cfg.engine), steps);
+    let mut solver_ovl = Stencil3dSolver::new(grid3, &f0);
+    let measured_ovl =
+        median_step_seconds(|| solver_ovl.step_overlapped_with(cfg.engine), steps);
     for &(nodes, tpn) in &topos {
-        let p = model::predict_stencil3d(&grid3, &Topology::new(nodes, tpn), &hw_run);
+        let topo = Topology::new(nodes, tpn);
+        let p = model::predict_stencil3d(&grid3, &topo, &hw_run);
+        let geometry = format!(
+            "{}x{}x{} / {pp}x{mp3}x{np3}",
+            grid3.p_glob, grid3.m_glob, grid3.n_glob
+        );
         out.push(WorkloadPoint {
             workload: "stencil3d",
-            geometry: format!(
-                "{}x{}x{} / {pp}x{mp3}x{np3}",
-                grid3.p_glob, grid3.m_glob, grid3.n_glob
-            ),
+            geometry: geometry.clone(),
             cells: grid3.p_glob * grid3.m_glob * grid3.n_glob,
             nodes,
             threads_per_node: tpn,
             measured,
             predicted: p.t_halo + p.t_comp,
+        });
+        let p_ovl = model::predict_stencil3d_overlap(&grid3, &topo, &hw_run);
+        out.push(WorkloadPoint {
+            workload: "stencil3d-ovl",
+            geometry,
+            cells: grid3.p_glob * grid3.m_glob * grid3.n_glob,
+            nodes,
+            threads_per_node: tpn,
+            measured: measured_ovl,
+            predicted: p_ovl.t_step,
         });
     }
     out
@@ -252,6 +299,7 @@ fn workload_validation(cfg: &HarnessConfig, steps: usize) -> Vec<WorkloadPoint> 
 pub fn model_validation(cfg: &HarnessConfig, ws: &mut Workspace, steps: usize) -> ValidationReport {
     let steps = steps.max(3);
     let mut points = Vec::new();
+    let mut spmv_overlap: Vec<WorkloadPoint> = Vec::new();
     let mut table = Table::new(
         format!(
             "Model validation — {} engine wall-clock vs eqs. (5)–(18), hw={}, scale 1/{}, {} samples/point",
@@ -278,16 +326,13 @@ pub fn model_validation(cfg: &HarnessConfig, ws: &mut Workspace, steps: usize) -
         for variant in Variant::ALL {
             let mut engine = SpmvEngine::new(cfg.engine);
             let mut state = SpmvState::new(&m, bs, threads, &x0);
-            engine.run(variant, &mut state, Some(&analysis)); // warmup
-            state.swap_xy();
-            let mut samples = Vec::with_capacity(steps);
-            for _ in 0..steps {
+            let measured = median_sample_seconds(steps, || {
                 let t0 = Instant::now();
                 engine.run(variant, &mut state, Some(&analysis));
-                samples.push(t0.elapsed().as_secs_f64());
+                let dt = t0.elapsed().as_secs_f64();
                 state.swap_xy();
-            }
-            let measured = Stats::from(&samples).p50;
+                dt
+            });
             let predicted = model::predict(variant, &inp).total;
             let point = ValidationPoint {
                 problem: tp,
@@ -311,10 +356,34 @@ pub fn model_validation(cfg: &HarnessConfig, ws: &mut Workspace, steps: usize) -
             ]);
             points.push(point);
         }
+        // Split-phase overlapped V3 on the same layout: measured against
+        // the overlap model T_step ≈ max(T_comm, T_comp^int) + T_comp^bnd.
+        {
+            let mut engine = SpmvEngine::new(cfg.engine);
+            let mut state = SpmvState::new(&m, bs, threads, &x0);
+            let measured = median_sample_seconds(steps, || {
+                let t0 = Instant::now();
+                engine.run_overlapped(&mut state, &analysis);
+                let dt = t0.elapsed().as_secs_f64();
+                state.swap_xy();
+                dt
+            });
+            let predicted = model::predict_overlapped(Variant::V3, &inp).t_step;
+            spmv_overlap.push(WorkloadPoint {
+                workload: "spmv-v3-ovl",
+                geometry: format!("{} n={}", tp.name(), m.n),
+                cells: m.n,
+                nodes,
+                threads_per_node: tpn,
+                measured,
+                predicted,
+            });
+        }
     }
     // Grid workloads on the exchange runtime: same measured-vs-predicted
-    // methodology, one row per sweep topology.
-    let workloads = workload_validation(cfg, steps);
+    // methodology, one row per sweep topology — synchronous and overlapped.
+    let mut workloads = workload_validation(cfg, steps);
+    workloads.extend(spmv_overlap);
     for p in &workloads {
         table.row(vec![
             p.workload.to_string(),
@@ -345,7 +414,7 @@ pub fn model_validation(cfg: &HarnessConfig, ws: &mut Workspace, steps: usize) -
         accuracy.set(variant.name(), Value::Num(g));
     }
     let mut workload_accuracy = Value::obj();
-    for w in ["heat2d", "stencil3d"] {
+    for w in WORKLOAD_LABELS {
         let g = geomean(workloads.iter().filter(|p| p.workload == w).map(WorkloadPoint::ratio));
         table.row(vec![
             "accuracy".to_string(),
@@ -429,8 +498,10 @@ mod tests {
     fn workload_points_cover_both_grid_workloads() {
         let cfg = HarnessConfig::test_sized();
         let points = workload_validation(&cfg, 3);
-        assert!(points.iter().any(|p| p.workload == "heat2d"));
-        assert!(points.iter().any(|p| p.workload == "stencil3d"));
+        // Both grid workloads, each in synchronous and overlapped form.
+        for w in ["heat2d", "heat2d-ovl", "stencil3d", "stencil3d-ovl"] {
+            assert!(points.iter().any(|p| p.workload == w), "missing {w}");
+        }
         for p in &points {
             assert!(p.measured > 0.0, "{}: non-positive measurement", p.workload);
             assert!(p.predicted > 0.0, "{}: non-positive prediction", p.workload);

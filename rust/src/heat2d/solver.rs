@@ -8,7 +8,7 @@
 //! [`ExchangeRuntime`]'s persistent staging arena and worker pool. A
 //! steady-state step allocates nothing and spawns nothing on either engine.
 
-use crate::comm::{StridedBlock, StridedPlan};
+use crate::comm::{ComputeSplit, StridedBlock, StridedPlan};
 use crate::engine::{Engine, ExchangeRuntime};
 use crate::model::HeatGrid;
 
@@ -65,6 +65,19 @@ fn halo_plan(grid: &HeatGrid) -> StridedPlan {
     plan
 }
 
+/// Compile the interior/boundary decomposition for the overlapped step and
+/// validate it (debug builds) against the canonical owned region.
+fn compute_split(grid: &HeatGrid) -> ComputeSplit {
+    let (m, n) = grid.subdomain();
+    let split = ComputeSplit::grid2d(m, n);
+    debug_assert!(
+        split.validate(&ComputeSplit::owned2d(m, n), m * n).is_ok(),
+        "heat2d split invalid: {:?}",
+        split.validate(&ComputeSplit::owned2d(m, n), m * n)
+    );
+    split
+}
+
 /// Per-thread subdomain state (`phi`/`phin` of Listing 8) plus the compiled
 /// exchange runtime.
 #[derive(Debug)]
@@ -76,6 +89,8 @@ pub struct Heat2dSolver {
     phin: Vec<Vec<f64>>,
     /// Compiled halo plan + staging arena + persistent worker pool.
     runtime: ExchangeRuntime,
+    /// Interior/boundary decomposition for the split-phase overlapped step.
+    split: ComputeSplit,
     /// Halo-exchange byte counter (payload crossing thread boundaries).
     pub inter_thread_bytes: u64,
 }
@@ -109,12 +124,18 @@ impl Heat2dSolver {
         }
         let phin = phi.clone();
         let runtime = ExchangeRuntime::new(halo_plan(&grid));
-        Heat2dSolver { grid, phi, phin, runtime, inter_thread_bytes: 0 }
+        let split = compute_split(&grid);
+        Heat2dSolver { grid, phi, phin, runtime, split, inter_thread_bytes: 0 }
     }
 
     /// The compiled exchange runtime (plan + arena + pool).
     pub fn runtime(&self) -> &ExchangeRuntime {
         &self.runtime
+    }
+
+    /// The compiled interior/boundary decomposition.
+    pub fn split(&self) -> &ComputeSplit {
+        &self.split
     }
 
     /// One time step: halo exchange then 5-point Jacobi update (on the
@@ -136,6 +157,32 @@ impl Heat2dSolver {
         std::mem::swap(&mut self.phi, &mut self.phin);
     }
 
+    /// One split-phase overlapped time step: pack + publish, interior
+    /// Jacobi (overlapping the exchange), per-peer waits + unpack, boundary
+    /// Jacobi + the fixed-boundary copy-through. Interior and boundary
+    /// kernels run the same per-cell expression as [`Self::step_with`] over
+    /// the compiled [`ComputeSplit`], so fields and byte counters stay
+    /// bitwise identical to the synchronous step and the sequential oracle.
+    pub fn step_overlapped_with(&mut self, engine: Engine) {
+        let grid = self.grid;
+        let (_, n) = grid.subdomain();
+        let split = &self.split;
+        self.runtime.step_overlapped(
+            engine,
+            &mut self.phi,
+            &mut self.phin,
+            |_t, phi, phin| {
+                jacobi_blocks(n, &split.interior, phi, phin);
+            },
+            |t, phi, phin| {
+                jacobi_blocks(n, &split.boundary, phi, phin);
+                Self::fixed_boundary_copy(grid, t, phi, phin);
+            },
+        );
+        self.inter_thread_bytes += self.runtime.payload_bytes();
+        std::mem::swap(&mut self.phi, &mut self.phin);
+    }
+
     /// Listing 8 for one thread: the 5-point Jacobi update of the interior
     /// plus the fixed global-boundary copy-through. Shared by both engines —
     /// it only touches thread `t`'s own `(phi, phin)` pair, so fusing it
@@ -151,7 +198,14 @@ impl Heat2dSolver {
                         + phi[i * n + k + 1]);
             }
         }
-        // Global-boundary rows/cols stay fixed: copy them through.
+        Self::fixed_boundary_copy(grid, t, phi, phin);
+    }
+
+    /// Global-boundary rows/cols stay fixed (Dirichlet): copy them through.
+    /// Runs after every cell update on both step protocols, reading the
+    /// freshly exchanged halo, so its final-write order is unchanged.
+    fn fixed_boundary_copy(grid: HeatGrid, t: usize, phi: &[f64], phin: &mut [f64]) {
+        let (m, n) = grid.subdomain();
         let (ip, kp) = grid.coords(t);
         if ip == 0 {
             for k in 0..n {
@@ -191,6 +245,23 @@ impl Heat2dSolver {
             }
         }
         out
+    }
+}
+
+/// The 5-point Jacobi expression over a list of [`StridedBlock`] cell sets
+/// (row stride `n`). Per-cell expression and operand order are identical to
+/// [`Heat2dSolver::jacobi_update`]'s nested loops, and Jacobi writes each
+/// cell once, so any partition of the owned region evaluates bitwise
+/// identically.
+fn jacobi_blocks(n: usize, blocks: &[StridedBlock], phi: &[f64], phin: &mut [f64]) {
+    for b in blocks {
+        for r in 0..b.rows {
+            let base = b.offset + r * b.row_stride;
+            for cc in 0..b.cols {
+                let c = base + cc * b.col_stride;
+                phin[c] = 0.25 * (phi[c - n] + phi[c + n] + phi[c - 1] + phi[c + 1]);
+            }
+        }
     }
 }
 
@@ -277,9 +348,37 @@ mod tests {
             let (m, n) = grid.subdomain();
             let plan = halo_plan(&grid);
             plan.validate(&|_| m * n).unwrap();
+            crate::comm::ExchangePlan::from(plan.clone()).validate(&|_| m * n).unwrap();
             // One message per directed neighbour pair.
             let expected: usize = (0..grid.threads()).map(|t| grid.neighbours(t).len()).sum();
             assert_eq!(plan.num_messages(), expected, "{mp}x{np}");
+            // The interior/boundary split covers the owned region exactly.
+            let split = compute_split(&grid);
+            split.validate(&ComputeSplit::owned2d(m, n), m * n).unwrap();
+        }
+    }
+
+    #[test]
+    fn overlapped_step_bitwise_identical() {
+        let grid = HeatGrid::new(36, 48, 3, 4);
+        let f0 = random_field(36, 48, 21);
+        let mut sync = Heat2dSolver::new(grid, &f0);
+        let mut ovl_seq = Heat2dSolver::new(grid, &f0);
+        let mut ovl_par = Heat2dSolver::new(grid, &f0);
+        for step in 0..6 {
+            sync.step_with(Engine::Sequential);
+            ovl_seq.step_overlapped_with(Engine::Sequential);
+            ovl_par.step_overlapped_with(Engine::Parallel);
+            let want = sync.to_global();
+            assert!(
+                want.iter().zip(&ovl_seq.to_global()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "seq overlap diverges at step {step}"
+            );
+            assert!(
+                want.iter().zip(&ovl_par.to_global()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "par overlap diverges at step {step}"
+            );
+            assert_eq!(sync.inter_thread_bytes, ovl_par.inter_thread_bytes, "step {step}");
         }
     }
 

@@ -132,13 +132,16 @@ SUBCOMMANDS
               calibration.json)
   run         end-to-end 3D diffusion driver (v^l = M v^{l-1})
   heat        §8 2D heat solver: real numerics + Table-5-style prediction
-              (--m 512 --nprocs 4 --mprocs 4 --steps 50)
+              (--m 512 --nprocs 4 --mprocs 4 --steps 50; --overlap runs the
+              split-phase overlapped step protocol)
   stencil     3D 7-point-stencil diffusion on the same exchange runtime
-              (--p 64 --pprocs 1 --mprocs 2 --nprocs 2 --steps 20)
-  validate [model]  measured-vs-predicted: all four variants on the parallel
-              engine, wall-clock vs the calibrated eqs. (5)-(18) models
-              (--hw host by default; --steps S samples/point; emits
-              BENCH_model.json, --json PATH to move it)
+              (--p 64 --pprocs 1 --mprocs 2 --nprocs 2 --steps 20;
+              --overlap as above)
+  validate [model]  measured-vs-predicted: all four variants plus the
+              split-phase overlapped paths (V3, heat2d, stencil3d) on the
+              parallel engine, wall-clock vs the calibrated eqs. (5)-(18)
+              and overlap models (--hw host by default; --steps S
+              samples/point; emits BENCH_model.json, --json PATH to move it)
   validate pjrt     numeric equivalence: native kernel vs PJRT artifacts
 
 COMMON FLAGS
@@ -310,9 +313,9 @@ fn cmd_validate_model(args: &Args) -> Result<()> {
         let g = report.geomean_ratio(variant);
         println!("{:<9} measured/predicted geomean = {g:.2}x", variant.name());
     }
-    for workload in ["heat2d", "stencil3d"] {
+    for workload in harness::WORKLOAD_LABELS {
         let g = report.workload_geomean(workload);
-        println!("{workload:<9} measured/predicted geomean = {g:.2}x");
+        println!("{workload:<13} measured/predicted geomean = {g:.2}x");
     }
     Ok(())
 }
@@ -405,7 +408,7 @@ fn cluster_shape(threads: usize) -> (usize, usize) {
 
 fn cmd_heat(args: &Args) -> Result<()> {
     use upcsim::heat2d::{seq_reference_step, simulate_heat_step, Heat2dSolver};
-    use upcsim::model::{predict_heat2d, HeatGrid};
+    use upcsim::model::{predict_heat2d, predict_heat2d_overlap, HeatGrid};
     use upcsim::pgas::Topology;
     use upcsim::sim::SimParams;
     let mg = args.usize_flag("m", 512)?;
@@ -413,6 +416,7 @@ fn cmd_heat(args: &Args) -> Result<()> {
     let mp = args.usize_flag("mprocs", 4)?;
     let np = args.usize_flag("nprocs", 4)?;
     let steps = args.usize_flag("steps", 50)?;
+    let overlap = args.bool_flag("overlap");
     let engine = parse_engine(args)?;
     let (hw, hw_label) = resolve_hw(args, HwSource::Abel)?;
     args.finish()?;
@@ -431,7 +435,11 @@ fn cmd_heat(args: &Args) -> Result<()> {
     let mut reference = f0.clone();
     let t0 = std::time::Instant::now();
     for _ in 0..steps {
-        solver.step_with(engine);
+        if overlap {
+            solver.step_overlapped_with(engine);
+        } else {
+            solver.step_with(engine);
+        }
         reference = seq_reference_step(mg, ng, &reference);
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -441,7 +449,11 @@ fn cmd_heat(args: &Args) -> Result<()> {
         .zip(&reference)
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f64, f64::max);
-    println!("{steps} steps on {mg}x{ng} over {mp}x{np} threads in {}", fmt::secs(wall));
+    println!(
+        "{steps} {}steps on {mg}x{ng} over {mp}x{np} threads in {}",
+        if overlap { "split-phase overlapped " } else { "" },
+        fmt::secs(wall)
+    );
     println!("max |parallel − sequential| = {err:.3e}");
     anyhow::ensure!(err < 1e-9, "halo exchange diverged");
     println!("halo payload: {}", fmt::bytes(solver.inter_thread_bytes as f64));
@@ -454,11 +466,18 @@ fn cmd_heat(args: &Args) -> Result<()> {
         fmt::secs(sim.t_comp * 1000.0),
         fmt::secs(model.t_comp * 1000.0),
     );
+    let ovl = predict_heat2d_overlap(&grid, &topo, &hw);
+    println!(
+        "overlap model: T_step {} vs sync {} per 1000 steps ({:.2}x modeled speedup)",
+        fmt::secs(ovl.t_step * 1000.0),
+        fmt::secs(ovl.t_step_sync * 1000.0),
+        ovl.speedup(),
+    );
     Ok(())
 }
 
 fn cmd_stencil(args: &Args) -> Result<()> {
-    use upcsim::model::predict_stencil3d;
+    use upcsim::model::{predict_stencil3d, predict_stencil3d_overlap};
     use upcsim::pgas::Topology;
     use upcsim::stencil3d::{seq_reference_step3d, Stencil3dGrid, Stencil3dSolver};
     let pg = args.usize_flag("p", 64)?;
@@ -468,6 +487,7 @@ fn cmd_stencil(args: &Args) -> Result<()> {
     let mp = args.usize_flag("mprocs", 2)?;
     let np = args.usize_flag("nprocs", 2)?;
     let steps = args.usize_flag("steps", 20)?;
+    let overlap = args.bool_flag("overlap");
     let engine = parse_engine(args)?;
     let (hw, hw_label) = resolve_hw(args, HwSource::Abel)?;
     args.finish()?;
@@ -488,7 +508,11 @@ fn cmd_stencil(args: &Args) -> Result<()> {
     let mut reference = f0.clone();
     let t0 = std::time::Instant::now();
     for _ in 0..steps {
-        solver.step_with(engine);
+        if overlap {
+            solver.step_overlapped_with(engine);
+        } else {
+            solver.step_with(engine);
+        }
         reference = seq_reference_step3d(pg, mg, ng, &reference);
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -499,7 +523,8 @@ fn cmd_stencil(args: &Args) -> Result<()> {
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f64, f64::max);
     println!(
-        "{steps} steps on {pg}x{mg}x{ng} over {pp}x{mp}x{np} threads ({} engine) in {}",
+        "{steps} {}steps on {pg}x{mg}x{ng} over {pp}x{mp}x{np} threads ({} engine) in {}",
+        if overlap { "split-phase overlapped " } else { "" },
         engine.name(),
         fmt::secs(wall)
     );
@@ -516,6 +541,13 @@ fn cmd_stencil(args: &Args) -> Result<()> {
         "per 1000 steps on the simulated cluster (hw {hw_label}): T_halo {} T_comp {}",
         fmt::secs(model.t_halo * 1000.0),
         fmt::secs(model.t_comp * 1000.0),
+    );
+    let ovl = predict_stencil3d_overlap(&grid, &topo, &hw);
+    println!(
+        "overlap model: T_step {} vs sync {} per 1000 steps ({:.2}x modeled speedup)",
+        fmt::secs(ovl.t_step * 1000.0),
+        fmt::secs(ovl.t_step_sync * 1000.0),
+        ovl.speedup(),
     );
     Ok(())
 }

@@ -8,10 +8,14 @@
 //! Table 5 in the harness.
 
 mod heat;
+mod overlap;
 mod spmv;
 mod stencil;
 
 pub use heat::{predict_heat2d, Heat2dPrediction, HeatGrid};
+pub use overlap::{
+    predict_heat2d_overlap, predict_stencil3d_overlap, predict_v3_overlap, OverlapPrediction,
+};
 pub use stencil::{predict_stencil3d, Stencil3dPrediction};
 pub use spmv::{
     predict_naive, predict_v1, predict_v2, predict_v3, t_comp_thread, SpmvInputs, SpmvPrediction,
@@ -31,4 +35,16 @@ pub fn predict(variant: Variant, inp: &SpmvInputs) -> SpmvPrediction {
         Variant::V2 => predict_v2(inp),
         Variant::V3 => predict_v3(inp),
     }
+}
+
+/// Dispatch to the per-variant overlap model. Only UPCv3 has a split-phase
+/// protocol (the other variants have no compiled exchange to overlap), so
+/// only it is accepted.
+pub fn predict_overlapped(variant: Variant, inp: &SpmvInputs) -> OverlapPrediction {
+    assert_eq!(
+        variant,
+        Variant::V3,
+        "the split-phase overlap model exists for UPCv3 only"
+    );
+    predict_v3_overlap(inp)
 }

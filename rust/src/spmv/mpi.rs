@@ -83,6 +83,12 @@ struct RankState {
 }
 
 /// The MPI-style solver: setup once, then `step` repeatedly.
+///
+/// All exchange buffers are persistent: `send_bufs[rank][k]` is the packed
+/// payload of rank's k-th send list and `recv_route` pre-resolves which
+/// buffer each expected incoming message lives in, so a steady-state step
+/// performs **zero heap allocations** on the transport path — the same
+/// discipline as the engine paths.
 #[derive(Debug, Clone)]
 pub struct MpiSolver {
     part: ContigPartition,
@@ -90,6 +96,13 @@ pub struct MpiSolver {
     ranks: Vec<RankState>,
     /// Local x per rank: owned values followed by ghost values.
     x: Vec<Vec<f64>>,
+    /// Persistent per-send message payloads, parallel to `RankState::send`.
+    send_bufs: Vec<Vec<Vec<f64>>>,
+    /// `recv_route[r][j] = (peer, k)`: receiver r's j-th expected message
+    /// (the order of `RankState::recv`) is `send_bufs[peer][k]`.
+    recv_route: Vec<Vec<(u32, u32)>>,
+    /// Persistent per-rank compute scratch (the Jacobi commit buffer).
+    y_scratch: Vec<Vec<f64>>,
     /// Traffic statistics (per step, constant).
     pub values_exchanged: u64,
     pub messages: u64,
@@ -142,6 +155,21 @@ impl MpiSolver {
             }
         }
 
+        // Persistent message payload buffers, and the receive routing:
+        // iterating owners in ascending order hands every receiver its
+        // `(peer, send-index)` pairs sorted by peer — exactly the order of
+        // its ghost region and its `recv` count list.
+        let send_bufs: Vec<Vec<Vec<f64>>> = send
+            .iter()
+            .map(|sends| sends.iter().map(|(_, vals)| vec![0.0f64; vals.len()]).collect())
+            .collect();
+        let mut recv_route: Vec<Vec<(u32, u32)>> = vec![Vec::new(); ranks];
+        for (owner, sends) in send.iter().enumerate() {
+            for (k, (peer, _)) in sends.iter().enumerate() {
+                recv_route[*peer as usize].push((owner as u32, k as u32));
+            }
+        }
+
         // Pass 3: relabel J and build per-rank state + local x.
         for rank in 0..ranks {
             let (s, e) = part.range(rank);
@@ -187,7 +215,18 @@ impl MpiSolver {
                 recv,
             });
         }
-        MpiSolver { part, r_nz: m.r_nz, ranks: states, x: xs, values_exchanged, messages }
+        let y_scratch = states.iter().map(|st| vec![0.0f64; st.rows]).collect();
+        MpiSolver {
+            part,
+            r_nz: m.r_nz,
+            ranks: states,
+            x: xs,
+            send_bufs,
+            recv_route,
+            y_scratch,
+            values_exchanged,
+            messages,
+        }
     }
 
     /// One step `x ← Mx`: exchange ghosts, compute locally (on the
@@ -207,41 +246,54 @@ impl MpiSolver {
     }
 
     fn step_seq(&mut self) {
-        let ranks = self.ranks.len();
-        // Exchange: pack from owners, "receive" as contiguous ghost fills.
-        let mut inbox: Vec<Vec<(u32, Vec<f64>)>> = vec![Vec::new(); ranks];
-        for (rank, st) in self.ranks.iter().enumerate() {
-            for (peer, offsets) in &st.send {
-                let buf: Vec<f64> =
-                    offsets.iter().map(|&o| self.x[rank][o as usize]).collect();
-                inbox[*peer as usize].push((rank as u32, buf));
+        // Exchange: pack from owners into the persistent payload buffers
+        // ("receive" is a contiguous ghost fill through the routing table).
+        for ((st, bufs), x) in self.ranks.iter().zip(&mut self.send_bufs).zip(&self.x) {
+            for ((_, offsets), buf) in st.send.iter().zip(bufs.iter_mut()) {
+                for (slot, &o) in buf.iter_mut().zip(offsets) {
+                    *slot = x[o as usize];
+                }
             }
         }
         // Ghost fill + compute + commit per rank. The compute reads only the
         // rank's own buffer (owned values are old until its own commit), so
         // the per-rank fusion is order-independent across ranks.
         for (rank, st) in self.ranks.iter().enumerate() {
-            let mut msgs = std::mem::take(&mut inbox[rank]);
-            // Ghost slots are sorted by (owner, global); inbox arrives in
-            // rank order — sort to be deterministic.
-            msgs.sort_by_key(|(peer, _)| *peer);
-            Self::rank_step(st, self.r_nz, &msgs, &mut self.x[rank]);
+            Self::rank_step(
+                st,
+                self.r_nz,
+                &self.recv_route[rank],
+                &self.send_bufs,
+                &mut self.x[rank],
+                &mut self.y_scratch[rank],
+            );
         }
     }
 
     /// Ghost fill + ELLPACK compute + commit for one rank (shared by both
-    /// engines). `msgs` are the incoming `(sender, payload)` pairs, sorted
-    /// by sender; `x` is the rank's owned-then-ghost buffer.
-    fn rank_step(st: &RankState, r_nz: usize, msgs: &[(u32, Vec<f64>)], x: &mut [f64]) {
+    /// engines). `route` resolves the rank's expected incoming messages
+    /// (the order of `st.recv`, sorted by sender) to packed payloads in
+    /// `bufs`; `x` is the rank's owned-then-ghost buffer; `y` its persistent
+    /// commit scratch.
+    fn rank_step(
+        st: &RankState,
+        r_nz: usize,
+        route: &[(u32, u32)],
+        bufs: &[Vec<Vec<f64>>],
+        x: &mut [f64],
+        y: &mut [f64],
+    ) {
+        debug_assert_eq!(route.len(), st.recv.len(), "routing table arity");
         let mut cursor = st.rows;
-        for ((peer, buf), (want_peer, want_len)) in msgs.iter().zip(&st.recv) {
-            assert_eq!(peer, want_peer, "unexpected sender");
+        for (&(peer, k), (want_peer, want_len)) in route.iter().zip(&st.recv) {
+            let buf = &bufs[peer as usize][k as usize];
+            assert_eq!(peer, *want_peer, "unexpected sender");
             assert_eq!(buf.len() as u32, *want_len, "short message");
             x[cursor..cursor + buf.len()].copy_from_slice(buf);
             cursor += buf.len();
         }
-        // Compute into a fresh owned buffer, then commit (Jacobi semantics).
-        let mut y = vec![0.0f64; st.rows];
+        // Compute into the persistent scratch, then commit (Jacobi
+        // semantics).
         for k in 0..st.rows {
             let mut tmp = 0.0;
             for jj in 0..r_nz {
@@ -249,49 +301,52 @@ impl MpiSolver {
             }
             y[k] = st.diag[k] * x[k] + tmp;
         }
-        x[..st.rows].copy_from_slice(&y);
+        x[..st.rows].copy_from_slice(y);
     }
 
-    /// Parallel step: rank workers pack concurrently (reads only), messages
-    /// are rerouted to receivers between the scopes (the two-sided
-    /// exchange), then every rank fills its ghosts and computes fully
-    /// locally — ghost region and owned rows live in the rank's own buffer,
-    /// so phase 2 needs no synchronization at all.
+    /// Parallel step: rank workers pack concurrently into their persistent
+    /// payload buffers (reads only), then every rank fills its ghosts
+    /// through the precomputed routing table and computes fully locally —
+    /// ghost region and owned rows live in the rank's own buffer, so
+    /// phase 2 needs no synchronization at all. No per-step allocation: the
+    /// payload buffers, routing table and commit scratch all persist.
     fn step_par(&mut self) {
-        let ranks = self.ranks.len();
         // Phase 1: pack, one worker per sending rank.
-        let mut outbox: Vec<Vec<(u32, Vec<f64>)>> = vec![Vec::new(); ranks];
         {
             let x = &self.x;
             std::thread::scope(|s| {
-                for ((rank, out), st) in outbox.iter_mut().enumerate().zip(&self.ranks) {
+                for ((rank, bufs), st) in
+                    self.send_bufs.iter_mut().enumerate().zip(&self.ranks)
+                {
                     if st.send.is_empty() {
                         continue;
                     }
                     s.spawn(move || {
-                        for (peer, offsets) in &st.send {
-                            let buf: Vec<f64> =
-                                offsets.iter().map(|&o| x[rank][o as usize]).collect();
-                            out.push((*peer, buf));
+                        for ((_, offsets), buf) in st.send.iter().zip(bufs.iter_mut()) {
+                            for (slot, &o) in buf.iter_mut().zip(offsets) {
+                                *slot = x[rank][o as usize];
+                            }
                         }
                     });
                 }
             });
         }
-        // Exchange: reroute messages to their receivers (pointer moves only).
-        let mut inbox: Vec<Vec<(u32, Vec<f64>)>> = vec![Vec::new(); ranks];
-        for (rank, msgs) in outbox.into_iter().enumerate() {
-            for (peer, buf) in msgs {
-                inbox[peer as usize].push((rank as u32, buf));
-            }
-        }
-        // Phase 2: ghost fill + compute + commit, one worker per rank.
+        // Phase 2: ghost fill + compute + commit, one worker per rank. The
+        // two-sided "exchange" is the routing table: receivers read the
+        // senders' payload buffers directly.
         let r = self.r_nz;
+        let bufs = &self.send_bufs;
+        let route = &self.recv_route;
         std::thread::scope(|s| {
-            for ((xr, st), mut msgs) in self.x.iter_mut().zip(&self.ranks).zip(inbox) {
+            for (((xr, st), rt), y) in self
+                .x
+                .iter_mut()
+                .zip(&self.ranks)
+                .zip(route)
+                .zip(&mut self.y_scratch)
+            {
                 s.spawn(move || {
-                    msgs.sort_by_key(|(peer, _)| *peer);
-                    Self::rank_step(st, r, &msgs, xr);
+                    Self::rank_step(st, r, rt, bufs, xr, y);
                 });
             }
         });

@@ -3,7 +3,7 @@
 //! shared [`ExchangeRuntime`].
 
 use super::Stencil3dGrid;
-use crate::comm::{StridedBlock, StridedPlan};
+use crate::comm::{ComputeSplit, StridedBlock, StridedPlan};
 use crate::engine::{Engine, ExchangeRuntime};
 
 /// Compile the six face exchanges into a strided block-copy plan.
@@ -52,6 +52,19 @@ fn face_plan(grid: &Stencil3dGrid) -> StridedPlan {
     plan
 }
 
+/// Compile the interior/boundary decomposition for the overlapped step and
+/// validate it (debug builds) against the canonical owned region.
+fn compute_split(grid: &Stencil3dGrid) -> ComputeSplit {
+    let (p, m, n) = grid.subdomain();
+    let split = ComputeSplit::grid3d(p, m, n);
+    debug_assert!(
+        split.validate(&ComputeSplit::owned3d(p, m, n), p * m * n).is_ok(),
+        "stencil3d split invalid: {:?}",
+        split.validate(&ComputeSplit::owned3d(p, m, n), p * m * n)
+    );
+    split
+}
+
 /// Per-thread subdomain state plus the compiled exchange runtime.
 #[derive(Debug)]
 pub struct Stencil3dSolver {
@@ -60,6 +73,8 @@ pub struct Stencil3dSolver {
     phi: Vec<Vec<f64>>,
     phin: Vec<Vec<f64>>,
     runtime: ExchangeRuntime,
+    /// Interior/boundary decomposition for the split-phase overlapped step.
+    split: ComputeSplit,
     /// Halo-exchange byte counter (payload crossing thread boundaries).
     pub inter_thread_bytes: u64,
 }
@@ -99,12 +114,18 @@ impl Stencil3dSolver {
         }
         let phin = phi.clone();
         let runtime = ExchangeRuntime::new(face_plan(&grid));
-        Stencil3dSolver { grid, phi, phin, runtime, inter_thread_bytes: 0 }
+        let split = compute_split(&grid);
+        Stencil3dSolver { grid, phi, phin, runtime, split, inter_thread_bytes: 0 }
     }
 
     /// The compiled exchange runtime (plan + arena + pool).
     pub fn runtime(&self) -> &ExchangeRuntime {
         &self.runtime
+    }
+
+    /// The compiled interior/boundary decomposition.
+    pub fn split(&self) -> &ComputeSplit {
+        &self.split
     }
 
     /// One time step on the sequential oracle engine.
@@ -120,6 +141,32 @@ impl Stencil3dSolver {
         self.runtime.step_strided(engine, &mut self.phi, &mut self.phin, |t, phi, phin| {
             Self::jacobi_update(grid, t, phi, phin);
         });
+        self.inter_thread_bytes += self.runtime.payload_bytes();
+        std::mem::swap(&mut self.phi, &mut self.phin);
+    }
+
+    /// One split-phase overlapped time step: pack + publish, interior
+    /// 7-point Jacobi (overlapping the face exchange), per-peer waits +
+    /// unpack, boundary-shell Jacobi + the fixed-boundary copy-through.
+    /// Bitwise identical to [`Self::step_with`] — see
+    /// [`crate::engine::ExchangeRuntime::step_overlapped`].
+    pub fn step_overlapped_with(&mut self, engine: Engine) {
+        let grid = self.grid;
+        let (_, m, n) = grid.subdomain();
+        let mn = m * n;
+        let split = &self.split;
+        self.runtime.step_overlapped(
+            engine,
+            &mut self.phi,
+            &mut self.phin,
+            |_t, phi, phin| {
+                jacobi_blocks3d(mn, n, &split.interior, phi, phin);
+            },
+            |t, phi, phin| {
+                jacobi_blocks3d(mn, n, &split.boundary, phi, phin);
+                Self::fixed_boundary_copy(grid, t, phi, phin);
+            },
+        );
         self.inter_thread_bytes += self.runtime.payload_bytes();
         std::mem::swap(&mut self.phi, &mut self.phin);
     }
@@ -144,7 +191,14 @@ impl Stencil3dSolver {
                 }
             }
         }
-        // Global-boundary planes stay fixed: copy them through.
+        Self::fixed_boundary_copy(grid, t, phi, phin);
+    }
+
+    /// Global-boundary planes stay fixed (Dirichlet): copy them through.
+    /// Runs after every cell update on both step protocols.
+    fn fixed_boundary_copy(grid: Stencil3dGrid, t: usize, phi: &[f64], phin: &mut [f64]) {
+        let (p, m, n) = grid.subdomain();
+        let mn = m * n;
         let (ip, jp, kp) = grid.coords(t);
         if ip == 0 {
             phin[mn..2 * mn].copy_from_slice(&phi[mn..2 * mn]);
@@ -198,6 +252,28 @@ impl Stencil3dSolver {
             }
         }
         out
+    }
+}
+
+/// The 7-point Jacobi expression over a list of [`StridedBlock`] cell sets
+/// (x stride `mn`, y stride `n`). Per-cell expression and operand order are
+/// identical to [`Stencil3dSolver::jacobi_update`]'s nested loops, so any
+/// partition of the owned region evaluates bitwise identically.
+fn jacobi_blocks3d(mn: usize, n: usize, blocks: &[StridedBlock], phi: &[f64], phin: &mut [f64]) {
+    for b in blocks {
+        for r in 0..b.rows {
+            let base = b.offset + r * b.row_stride;
+            for cc in 0..b.cols {
+                let c = base + cc * b.col_stride;
+                phin[c] = (phi[c - mn]
+                    + phi[c + mn]
+                    + phi[c - n]
+                    + phi[c + n]
+                    + phi[c - 1]
+                    + phi[c + 1])
+                    / 6.0;
+            }
+        }
     }
 }
 
@@ -293,6 +369,30 @@ mod tests {
     }
 
     #[test]
+    fn overlapped_step_bitwise_identical() {
+        let grid = Stencil3dGrid::new(8, 12, 16, 2, 3, 4);
+        let f0 = random_field(8 * 12 * 16, 19);
+        let mut sync = Stencil3dSolver::new(grid, &f0);
+        let mut ovl_seq = Stencil3dSolver::new(grid, &f0);
+        let mut ovl_par = Stencil3dSolver::new(grid, &f0);
+        for step in 0..5 {
+            sync.step_with(Engine::Sequential);
+            ovl_seq.step_overlapped_with(Engine::Sequential);
+            ovl_par.step_overlapped_with(Engine::Parallel);
+            let want = sync.to_global();
+            assert!(
+                want.iter().zip(&ovl_seq.to_global()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "seq overlap diverges at step {step}"
+            );
+            assert!(
+                want.iter().zip(&ovl_par.to_global()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "par overlap diverges at step {step}"
+            );
+            assert_eq!(sync.inter_thread_bytes, ovl_par.inter_thread_bytes, "step {step}");
+        }
+    }
+
+    #[test]
     fn compiled_plan_matches_geometry() {
         for (dims, procs) in [
             ((8usize, 12usize, 16usize), (2usize, 3usize, 4usize)),
@@ -304,6 +404,10 @@ mod tests {
             let plan = super::face_plan(&grid);
             let (p, m, n) = grid.subdomain();
             plan.validate(&|_| p * m * n).unwrap();
+            crate::comm::ExchangePlan::from(plan.clone()).validate(&|_| p * m * n).unwrap();
+            // The interior/boundary split covers the owned region exactly.
+            let split = super::compute_split(&grid);
+            split.validate(&ComputeSplit::owned3d(p, m, n), p * m * n).unwrap();
             let expected_msgs: usize =
                 (0..grid.threads()).map(|t| grid.neighbours(t).len()).sum();
             let expected_values: usize = (0..grid.threads())

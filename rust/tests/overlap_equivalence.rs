@@ -1,0 +1,187 @@
+//! Split-phase overlap equivalence: the overlapped step protocol
+//! (`begin_exchange` → interior compute → `finish_exchange` → boundary
+//! compute) must be **bitwise identical** — fields/vectors *and* traffic
+//! counters — to the synchronous protocol and the sequential oracle, on all
+//! three workloads (heat-2D, 3D stencil, SpMV V3), across edge layouts.
+//! Plus the decomposition property: interior ∪ boundary covers every owned
+//! cell exactly once for arbitrary subdomain shapes.
+
+use upcsim::comm::{Analysis, ComputeSplit};
+use upcsim::engine::{Engine, SpmvEngine};
+use upcsim::heat2d::Heat2dSolver;
+use upcsim::matrix::Ellpack;
+use upcsim::model::HeatGrid;
+use upcsim::pgas::{Layout, Topology};
+use upcsim::spmv::{run_variant, SpmvState, Variant};
+use upcsim::stencil3d::{Stencil3dGrid, Stencil3dSolver};
+use upcsim::testing::check_prop;
+use upcsim::util::Rng;
+
+fn random_field(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.f64_in(0.0, 100.0)).collect()
+}
+
+/// Property: for arbitrary 2D subdomain shapes (including 1-cell-thick and
+/// single-cell owned regions), the split covers the owned region exactly
+/// once.
+#[test]
+fn prop_split2d_covers_owned_exactly_once() {
+    check_prop(
+        "compute-split-2d",
+        96,
+        |r| (r.usize_in(3, 40), r.usize_in(3, 40)),
+        |&(m, n)| {
+            let split = ComputeSplit::grid2d(m, n);
+            split.validate(&ComputeSplit::owned2d(m, n), m * n)?;
+            let covered = split.interior_cells() + split.boundary_cells();
+            if covered != (m - 2) * (n - 2) {
+                return Err(format!("covered {covered} of {} cells", (m - 2) * (n - 2)));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property: same for arbitrary 3D box shapes.
+#[test]
+fn prop_split3d_covers_owned_exactly_once() {
+    check_prop(
+        "compute-split-3d",
+        64,
+        |r| (r.usize_in(3, 14), r.usize_in(3, 14), r.usize_in(3, 14)),
+        |&(p, m, n)| {
+            let split = ComputeSplit::grid3d(p, m, n);
+            split.validate(&ComputeSplit::owned3d(p, m, n), p * m * n)?;
+            let covered = split.interior_cells() + split.boundary_cells();
+            if covered != (p - 2) * (m - 2) * (n - 2) {
+                return Err(format!("covered {covered} cells"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Run three heat-2D solvers in lockstep — synchronous sequential oracle,
+/// overlapped sequential, overlapped parallel — asserting bitwise equality
+/// every step.
+fn check_heat2d(mg: usize, ng: usize, mp: usize, np: usize, steps: usize, seed: u64) {
+    let grid = HeatGrid::new(mg, ng, mp, np);
+    let f0 = random_field(mg * ng, seed);
+    let mut sync = Heat2dSolver::new(grid, &f0);
+    let mut ovl_seq = Heat2dSolver::new(grid, &f0);
+    let mut ovl_par = Heat2dSolver::new(grid, &f0);
+    for step in 0..steps {
+        sync.step_with(Engine::Sequential);
+        ovl_seq.step_overlapped_with(Engine::Sequential);
+        ovl_par.step_overlapped_with(Engine::Parallel);
+        let want = sync.to_global();
+        for (label, got) in [("seq", ovl_seq.to_global()), ("par", ovl_par.to_global())] {
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{mg}x{ng}/{mp}x{np}: overlapped {label} diverges at step {step}"
+            );
+        }
+        assert_eq!(sync.inter_thread_bytes, ovl_seq.inter_thread_bytes);
+        assert_eq!(sync.inter_thread_bytes, ovl_par.inter_thread_bytes);
+    }
+}
+
+#[test]
+fn heat2d_overlap_bitwise_across_layouts() {
+    check_heat2d(24, 60, 3, 4, 20, 1); // non-square
+    check_heat2d(16, 60, 1, 6, 15, 2); // 1×N: column halos only
+    check_heat2d(60, 16, 6, 1, 15, 3); // N×1: row halos only
+    check_heat2d(16, 16, 1, 1, 10, 4); // single thread, no halos
+    check_heat2d(4, 4, 4, 4, 15, 5); // 1-cell interiors (all boundary)
+    check_heat2d(3, 6, 3, 2, 15, 6);
+}
+
+fn check_stencil3d(
+    dims: (usize, usize, usize),
+    procs: (usize, usize, usize),
+    steps: usize,
+    seed: u64,
+) {
+    let grid = Stencil3dGrid::new(dims.0, dims.1, dims.2, procs.0, procs.1, procs.2);
+    let f0 = random_field(dims.0 * dims.1 * dims.2, seed);
+    let mut sync = Stencil3dSolver::new(grid, &f0);
+    let mut ovl_seq = Stencil3dSolver::new(grid, &f0);
+    let mut ovl_par = Stencil3dSolver::new(grid, &f0);
+    for step in 0..steps {
+        sync.step_with(Engine::Sequential);
+        ovl_seq.step_overlapped_with(Engine::Sequential);
+        ovl_par.step_overlapped_with(Engine::Parallel);
+        let want = sync.to_global();
+        for (label, got) in [("seq", ovl_seq.to_global()), ("par", ovl_par.to_global())] {
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{dims:?}/{procs:?}: overlapped {label} diverges at step {step}"
+            );
+        }
+        assert_eq!(sync.inter_thread_bytes, ovl_par.inter_thread_bytes);
+    }
+}
+
+#[test]
+fn stencil3d_overlap_bitwise_across_layouts() {
+    check_stencil3d((8, 12, 16), (2, 3, 4), 8, 11);
+    check_stencil3d((4, 4, 16), (1, 1, 8), 10, 12); // single-axis split
+    check_stencil3d((16, 4, 4), (8, 1, 1), 10, 13);
+    check_stencil3d((3, 3, 3), (3, 3, 3), 8, 14); // 1-cell interiors
+    check_stencil3d((6, 6, 6), (1, 1, 1), 6, 15); // single thread
+}
+
+/// SpMV V3: the overlapped executor must reproduce the sequential oracle's
+/// `y`, byte and transfer counts bitwise, on both engines, across layouts
+/// and over multi-step runs.
+#[test]
+fn spmv_v3_overlap_bitwise() {
+    let mesh = upcsim::mesh::tiny_mesh();
+    let m = Ellpack::diffusion_from_mesh(&mesh);
+    let x0 = m.initial_vector(23);
+    for (bs, nodes, tpn) in [(128usize, 2usize, 4usize), (64, 1, 4), (256, 1, 2)] {
+        let threads = nodes * tpn;
+        let layout = Layout::new(m.n, bs, threads);
+        let analysis =
+            Analysis::build(&m.j, m.r_nz, layout, Topology::new(nodes, tpn), usize::MAX);
+        analysis.validate().unwrap();
+        let mut seq_state = SpmvState::new(&m, bs, threads, &x0);
+        let want = run_variant(Variant::V3, &mut seq_state, Some(&analysis));
+        for engine in Engine::ALL {
+            let mut eng = SpmvEngine::new(engine);
+            let mut state = SpmvState::new(&m, bs, threads, &x0);
+            let got = eng.run_overlapped(&mut state, &analysis);
+            assert_eq!(got.y, want.y, "{} bs={bs}: y diverges", engine.name());
+            assert_eq!(got.inter_thread_bytes, want.inter_thread_bytes, "{}", engine.name());
+            assert_eq!(got.transfers, want.transfers, "{}", engine.name());
+        }
+    }
+}
+
+/// Time-stepped SpMV: overlapped and synchronous V3 stay bitwise locked
+/// over many iterations (double-buffered arena halves alternate).
+#[test]
+fn spmv_v3_overlap_time_loop() {
+    let m = Ellpack::random(600, 5, 77);
+    let x0 = m.initial_vector(5);
+    let (bs, threads) = (32usize, 6usize);
+    let layout = Layout::new(m.n, bs, threads);
+    let analysis =
+        Analysis::build(&m.j, m.r_nz, layout, Topology::single_node(threads), usize::MAX);
+    let mut sync_eng = SpmvEngine::new(Engine::Parallel);
+    let mut sync_state = SpmvState::new(&m, bs, threads, &x0);
+    let mut ovl_eng = SpmvEngine::new(Engine::Parallel);
+    let mut ovl_state = SpmvState::new(&m, bs, threads, &x0);
+    for step in 0..9 {
+        sync_eng.run(Variant::V3, &mut sync_state, Some(&analysis));
+        sync_state.swap_xy();
+        ovl_eng.run_overlapped(&mut ovl_state, &analysis);
+        ovl_state.swap_xy();
+        assert_eq!(
+            sync_state.x_global(),
+            ovl_state.x_global(),
+            "overlapped V3 diverges at step {step}"
+        );
+    }
+}
