@@ -16,6 +16,13 @@
 //! * sync vs split-phase-overlapped per-step medians for heat-2D (several
 //!   thread layouts), the 3D stencil, and SpMV V3 on the parallel engine,
 //!   with per-layout `speedup` ratios and the best ratio as the headline.
+//!
+//! And `BENCH_pipeline.json`:
+//!
+//! * sync vs overlapped vs multi-step-pipelined per-step medians on the
+//!   same workloads/layouts — the pipelined value amortizes one 8-step
+//!   batch dispatch (the consumed-epoch ack protocol) over its steps, with
+//!   per-layout speedups vs both single-step protocols.
 
 use upcsim::benchlib::{BenchConfig, Bencher};
 use upcsim::comm::Analysis;
@@ -227,10 +234,14 @@ fn main() {
         record(&mut entries, &name, r.map(|r| r.time.p50));
     }
 
-    // --- split-phase overlap: sync vs overlapped on the parallel engine ---
-    // One (sync, overlap) median pair per workload/layout; layouts exercise
-    // row-only, column-only and mixed halo shapes.
+    // --- split-phase overlap + multi-step pipeline vs sync ----------------
+    // One (sync, overlap, pipeline) median triple per workload/layout;
+    // layouts exercise row-only, column-only and mixed halo shapes. The
+    // pipelined column times one PIPE-step batch (a single pool dispatch)
+    // and reports it per step.
+    const PIPE: usize = 8;
     let mut overlap_pairs: Vec<(String, f64, f64)> = Vec::new();
+    let mut pipeline_rows: Vec<(String, f64, f64, f64)> = Vec::new();
     for &(mp, np) in &[(2usize, 2usize), (1, 4), (4, 1)] {
         let grid = HeatGrid::new(mg, ng, mp, np);
         let mut sync = Heat2dSolver::new(grid, &f0);
@@ -251,8 +262,20 @@ fn main() {
                 std::hint::black_box(&ovl.inter_thread_bytes);
             })
             .map(|r| r.time.p50);
+        let mut pipe = Heat2dSolver::new(grid, &f0);
+        pipe.run_pipelined_with(Engine::Parallel, PIPE);
+        let pipe_name = format!("heat2d/pipeline/{mp}x{np}");
+        let rp = b
+            .bench(&pipe_name, || {
+                pipe.run_pipelined_with(Engine::Parallel, PIPE);
+                std::hint::black_box(&pipe.inter_thread_bytes);
+            })
+            .map(|r| r.time.p50 / PIPE as f64);
         if let (Some(rs), Some(ro)) = (rs, ro) {
             overlap_pairs.push((format!("heat2d/{mp}x{np}"), rs, ro));
+            if let Some(rp) = rp {
+                pipeline_rows.push((format!("heat2d/{mp}x{np}"), rs, ro, rp));
+            }
         }
     }
     {
@@ -272,13 +295,24 @@ fn main() {
                 std::hint::black_box(&ovl.inter_thread_bytes);
             })
             .map(|r| r.time.p50);
+        let mut pipe = Stencil3dSolver::new(grid3, &f03);
+        pipe.run_pipelined_with(Engine::Parallel, PIPE);
+        let rp = b
+            .bench("stencil3d/pipeline/1x2x2", || {
+                pipe.run_pipelined_with(Engine::Parallel, PIPE);
+                std::hint::black_box(&pipe.inter_thread_bytes);
+            })
+            .map(|r| r.time.p50 / PIPE as f64);
         if let (Some(rs), Some(ro)) = (rs, ro) {
             overlap_pairs.push(("stencil3d/1x2x2".to_string(), rs, ro));
+            if let Some(rp) = rp {
+                pipeline_rows.push(("stencil3d/1x2x2".to_string(), rs, ro, rp));
+            }
         }
     }
     {
         // SpMV V3: synchronous barrier step vs the split-phase overlapped
-        // step on the same compiled plan.
+        // step vs the pipelined batch on the same compiled plan.
         let threads = 4usize;
         let m = Ellpack::random(20_000, 16, 3);
         let bs = m.n.div_ceil(threads * 4);
@@ -306,8 +340,21 @@ fn main() {
                 state.swap_xy();
             })
             .map(|r| r.time.p50);
+        let mut engine = SpmvEngine::new(Engine::Parallel);
+        let mut state = SpmvState::new(&m, bs, threads, &x0);
+        engine.run_pipelined(PIPE, &mut state, &analysis);
+        state.swap_xy();
+        let rp = b
+            .bench("spmv-v3/pipeline/4t", || {
+                engine.run_pipelined(PIPE, &mut state, &analysis);
+                state.swap_xy();
+            })
+            .map(|r| r.time.p50 / PIPE as f64);
         if let (Some(rs), Some(ro)) = (rs, ro) {
             overlap_pairs.push(("spmv-v3/4t".to_string(), rs, ro));
+            if let Some(rp) = rp {
+                pipeline_rows.push(("spmv-v3/4t".to_string(), rs, ro, rp));
+            }
         }
     }
 
@@ -399,6 +446,47 @@ fn main() {
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_overlap.json");
         match std::fs::write(path, root.pretty()) {
             Ok(()) => println!("[overlap medians saved to {path}]"),
+            Err(e) => eprintln!("warning: cannot write {path}: {e}"),
+        }
+    }
+
+    // --- BENCH_pipeline.json ----------------------------------------------
+    // Sync vs overlapped vs pipelined per-step medians; the pipelined value
+    // amortizes one PIPE-step dispatch over its steps.
+    if !pipeline_rows.is_empty() {
+        let mut root = Value::obj();
+        root.set("bench", Value::Str("halo_exchange/pipeline".to_string()));
+        root.set("engine", Value::Str("parallel".to_string()));
+        root.set("pipeline_steps", Value::Num(PIPE as f64));
+        let mut results = Vec::new();
+        let mut best = f64::NEG_INFINITY;
+        let mut best_name = String::new();
+        println!();
+        for (name, sync, ovl, pipe) in &pipeline_rows {
+            let vs_sync = sync / pipe;
+            let vs_ovl = ovl / pipe;
+            let mut o = Value::obj();
+            o.set("workload", Value::Str(name.clone()));
+            o.set("sync_median_ns_per_step", Value::Num((sync * 1e9).round()));
+            o.set("overlap_median_ns_per_step", Value::Num((ovl * 1e9).round()));
+            o.set("pipeline_median_ns_per_step", Value::Num((pipe * 1e9).round()));
+            o.set("speedup_pipeline_vs_sync", Value::Num(vs_sync));
+            o.set("speedup_pipeline_vs_overlap", Value::Num(vs_ovl));
+            results.push(o);
+            println!(
+                "{name}: pipelined vs sync = {vs_sync:.2}x, vs overlapped = {vs_ovl:.2}x"
+            );
+            if vs_ovl > best {
+                best = vs_ovl;
+                best_name = name.clone();
+            }
+        }
+        root.set("results", Value::Arr(results));
+        root.set("best_speedup_vs_overlap", Value::Num(best));
+        root.set("best_workload", Value::Str(best_name));
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pipeline.json");
+        match std::fs::write(path, root.pretty()) {
+            Ok(()) => println!("[pipeline medians saved to {path}]"),
             Err(e) => eprintln!("warning: cannot write {path}: {e}"),
         }
     }

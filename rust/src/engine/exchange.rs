@@ -3,7 +3,7 @@
 //! everything a grid/halo workload needs to execute time steps on either
 //! engine.
 //!
-//! Two step protocols, both driven entirely by the plan:
+//! Three step protocols, all driven entirely by the plan:
 //!
 //! **Synchronous** ([`step_strided`]) — the Listing 7 phase structure:
 //!
@@ -27,34 +27,50 @@
 //! boundary:        compute the halo-adjacent cells
 //! ```
 //!
+//! **Multi-step pipelined** ([`run_pipelined`]) — S split-phase steps in
+//! **one** pool dispatch. Fast threads start epoch `k+1` while slow peers
+//! finish epoch `k`; the only back-pressure is the consumed-epoch
+//! acknowledgment: before packing epoch `k` a sender waits until every one
+//! of its receivers has *unpacked* epoch `k − 2`, because that is when the
+//! arena half `k mod 2` was last read. This bounds any sender to at most 2
+//! epochs ahead of its slowest receiver — exactly the depth the
+//! double-buffered arena supports — and removes the per-step pool dispatch,
+//! the last global synchronization on the critical path.
+//!
 //! On [`Engine::Sequential`] the phases are replayed on the calling thread
 //! (the correctness oracle); on [`Engine::Parallel`] each logical thread is
-//! a persistent pool worker. Both paths run the same pack/unpack/update
+//! a persistent pool worker. All paths run the same pack/unpack/update
 //! code on the same data — and because interior ∪ boundary covers every
 //! owned cell exactly once with the unchanged per-cell expression, the
-//! overlapped step is **bitwise identical** to the synchronous one. Neither
-//! allocates nor spawns anything per step: plan, arena, flags and workers
-//! all persist.
+//! overlapped and pipelined steps are **bitwise identical** to the
+//! synchronous one. None of them allocates or spawns anything per step:
+//! plan, arena, flags, acks and workers all persist.
 //!
 //! The staging arena is double-buffered receiver-major: epoch `k` packs
 //! into half `k mod 2`, so a sender beginning epoch `k+1` writes the other
 //! half and never overwrites slots a slow receiver is still reading from
-//! epoch `k`.
+//! epoch `k`. Every protocol advances the epoch uniformly (a synchronous
+//! step too), so they can be mixed freely on one runtime without pairing a
+//! stale parity half with fresh flags.
 //!
 //! [`step_strided`]: ExchangeRuntime::step_strided
 //! [`step_overlapped`]: ExchangeRuntime::step_overlapped
+//! [`run_pipelined`]: ExchangeRuntime::run_pipelined
 
 use super::pool::{ArenaView, EpochFlags, PerWorker, WorkerCtx, WorkerPool};
 use super::Engine;
 use crate::comm::ExchangePlan;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// A compiled plan bound to its staging arena and worker pool. Workloads
 /// (heat-2D, the 3D stencil) own one and call [`step_strided`] or
-/// [`step_overlapped`] per time step; the SpMV engine shares the same
-/// pool/arena machinery through [`crate::engine::ParallelPool`].
+/// [`step_overlapped`] per time step, or [`run_pipelined`] for a whole
+/// batch; the SpMV engine shares the same pool/arena machinery through
+/// [`crate::engine::ParallelPool`].
 ///
 /// [`step_strided`]: ExchangeRuntime::step_strided
 /// [`step_overlapped`]: ExchangeRuntime::step_overlapped
+/// [`run_pipelined`]: ExchangeRuntime::run_pipelined
 #[derive(Debug)]
 pub struct ExchangeRuntime {
     plan: ExchangePlan,
@@ -65,11 +81,24 @@ pub struct ExchangeRuntime {
     pool: WorkerPool,
     /// Per-thread published-epoch counters for the split-phase protocol.
     flags: EpochFlags,
-    /// Exchange epoch of the last overlapped step (0 = none yet).
+    /// Per-thread consumed-epoch counters (the pipelined ack protocol:
+    /// thread t has unpacked every message of epoch `acks[t]`).
+    acks: EpochFlags,
+    /// Exchange epoch of the last executed step (0 = none yet). Every step
+    /// protocol bumps it uniformly, so mixing `step_strided`,
+    /// `step_overlapped` and `run_pipelined` on one runtime keeps arena
+    /// parity, flags and acks consistent.
     epoch: u64,
     /// `senders[t]` — the distinct threads that send to `t`, i.e. exactly
     /// the flags `finish_exchange` waits on. Compiled once from the plan.
     senders: Vec<Vec<u32>>,
+    /// `receivers[t]` — the distinct threads `t` sends to, i.e. exactly the
+    /// acks a pipelined sender waits on before reusing an arena half.
+    receivers: Vec<Vec<u32>>,
+    /// Diagnostics: the largest `published − consumed` distance any
+    /// receiver ever observed against one of its senders (pipelined steps
+    /// only). The ack protocol bounds it by the pipeline depth, 2.
+    max_lead: AtomicU64,
 }
 
 impl ExchangeRuntime {
@@ -82,15 +111,25 @@ impl ExchangeRuntime {
         );
         let threads = plan.threads();
         let staging = vec![0.0f64; 2 * plan.total_values()];
-        let senders = (0..threads)
+        let dedup_peers = |mut s: Vec<u32>| {
+            s.sort_unstable();
+            s.dedup();
+            s
+        };
+        let senders: Vec<Vec<u32>> = (0..threads)
             .map(|t| {
-                let mut s: Vec<u32> = match &plan {
+                dedup_peers(match &plan {
                     ExchangePlan::Gather(p) => p.recv_msgs(t).map(|m| m.peer).collect(),
                     ExchangePlan::Strided(p) => p.recv_msgs(t).map(|m| m.peer).collect(),
-                };
-                s.sort_unstable();
-                s.dedup();
-                s
+                })
+            })
+            .collect();
+        let receivers: Vec<Vec<u32>> = (0..threads)
+            .map(|t| {
+                dedup_peers(match &plan {
+                    ExchangePlan::Gather(p) => p.send_msgs(t).map(|m| m.peer).collect(),
+                    ExchangePlan::Strided(p) => p.send_msgs(t).map(|m| m.peer).collect(),
+                })
             })
             .collect();
         ExchangeRuntime {
@@ -98,8 +137,11 @@ impl ExchangeRuntime {
             staging,
             pool: WorkerPool::new(),
             flags: EpochFlags::new(threads),
+            acks: EpochFlags::new(threads),
             epoch: 0,
             senders,
+            receivers,
+            max_lead: AtomicU64::new(0),
         }
     }
 
@@ -111,6 +153,27 @@ impl ExchangeRuntime {
     /// waits on).
     pub fn senders_of(&self, t: usize) -> &[u32] {
         &self.senders[t]
+    }
+
+    /// The distinct receivers of thread `t` (the peers whose consumed-epoch
+    /// acks a pipelined sender waits on before reusing an arena half).
+    pub fn receivers_of(&self, t: usize) -> &[u32] {
+        &self.receivers[t]
+    }
+
+    /// Pool dispatches issued so far — `run_pipelined` costs exactly one
+    /// per S-step batch on the parallel engine (and zero on the oracle).
+    pub fn dispatches(&self) -> u64 {
+        self.pool.dispatches()
+    }
+
+    /// Largest `published − consumed` epoch distance any receiver observed
+    /// against one of its senders during pipelined steps. The consumed-epoch
+    /// ack protocol bounds this by the pipeline depth: a sender packs epoch
+    /// `e` only after every receiver acked `e − 2`, so the lead never
+    /// exceeds 2.
+    pub fn max_sender_lead(&self) -> u64 {
+        self.max_lead.load(Ordering::Relaxed)
     }
 
     /// Payload bytes every step moves across thread boundaries (a constant
@@ -125,6 +188,15 @@ impl ExchangeRuntime {
     /// `update(t, field, out)` is the per-thread stencil kernel, called
     /// after t's halo is complete. Panics if the plan is not the strided
     /// form.
+    ///
+    /// Epoch-uniform with the split-phase protocols: the step bumps the
+    /// exchange epoch, packs into that epoch's arena parity half, and
+    /// publishes both the published- and consumed-epoch counters (the
+    /// global barrier already provides the synchronization, so the
+    /// publishes are pure bookkeeping). Without this, a synchronous step
+    /// sandwiched between overlapped/pipelined ones would silently reuse an
+    /// arena half while leaving the flags describing the *previous* epoch —
+    /// a stale parity/flag pairing the mixed-protocol tests pin down.
     pub fn step_strided<U>(
         &mut self,
         engine: Engine,
@@ -141,19 +213,27 @@ impl ExchangeRuntime {
         let threads = plan.threads();
         assert_eq!(fields.len(), threads, "one field per thread");
         assert_eq!(out.len(), threads, "one output field per thread");
-        debug_assert_eq!(self.staging.len(), 2 * plan.total_values());
+        let total = plan.total_values();
+        debug_assert_eq!(self.staging.len(), 2 * total);
+        self.epoch += 1;
+        let epoch = self.epoch;
+        let half = (epoch % 2) as usize * total;
         match engine {
             Engine::Sequential => {
                 for (t, field) in fields.iter().enumerate() {
                     for m in plan.send_msgs(t) {
-                        m.pack(field, &mut self.staging[m.range()]);
+                        let r = m.range();
+                        m.pack(field, &mut self.staging[half + r.start..half + r.end]);
                     }
+                    self.flags.publish(t, epoch);
                 }
                 // ---- upc_barrier ----
                 for (t, field) in fields.iter_mut().enumerate() {
                     for m in plan.recv_msgs(t) {
-                        m.unpack(&self.staging[m.range()], field);
+                        let r = m.range();
+                        m.unpack(&self.staging[half + r.start..half + r.end], field);
                     }
+                    self.acks.publish(t, epoch);
                 }
                 for (t, (field, o)) in fields.iter_mut().zip(out.iter_mut()).enumerate() {
                     update(t, field.as_mut_slice(), o.as_mut_slice());
@@ -164,22 +244,29 @@ impl ExchangeRuntime {
                 let fw = PerWorker::new(fields);
                 let ow = PerWorker::new(out);
                 let update = &update;
+                let (flags, acks) = (&self.flags, &self.acks);
                 self.pool.run(threads, &|ctx: WorkerCtx| {
                     let t = ctx.id;
                     // SAFETY: worker t claims only its own field/out pair.
                     let field = unsafe { fw.take(t) }.as_mut_slice();
                     for m in plan.send_msgs(t) {
-                        // SAFETY: plan ranges are disjoint per message, and
-                        // each message is packed by its sender only.
-                        m.pack(field, unsafe { arena.slice_mut(m.range()) });
+                        let r = m.range();
+                        // SAFETY: plan ranges are disjoint per message (and
+                        // halved per epoch parity); packed by sender only.
+                        m.pack(field, unsafe {
+                            arena.slice_mut(half + r.start..half + r.end)
+                        });
                     }
+                    flags.publish(t, epoch);
 
                     ctx.barrier(); // ---- upc_barrier ----
 
                     for m in plan.recv_msgs(t) {
+                        let r = m.range();
                         // SAFETY: arena writes ended at the barrier.
-                        m.unpack(unsafe { arena.slice(m.range()) }, field);
+                        m.unpack(unsafe { arena.slice(half + r.start..half + r.end) }, field);
                     }
+                    acks.publish(t, epoch);
                     update(t, field, unsafe { ow.take(t) }.as_mut_slice());
                 });
             }
@@ -238,6 +325,7 @@ impl ExchangeRuntime {
                         let r = m.range();
                         m.unpack(&self.staging[half + r.start..half + r.end], field);
                     }
+                    self.acks.publish(t, epoch);
                 }
                 for (t, (field, o)) in fields.iter_mut().zip(out.iter_mut()).enumerate() {
                     boundary(t, field.as_mut_slice(), o.as_mut_slice());
@@ -248,7 +336,8 @@ impl ExchangeRuntime {
                 let fw = PerWorker::new(fields);
                 let ow = PerWorker::new(out);
                 let (interior, boundary) = (&interior, &boundary);
-                let (flags, senders) = (&self.flags, &self.senders);
+                let (flags, acks) = (&self.flags, &self.acks);
+                let senders = &self.senders;
                 self.pool.run(threads, &|ctx: WorkerCtx| {
                     let t = ctx.id;
                     // SAFETY: worker t claims only its own field/out pair,
@@ -273,12 +362,176 @@ impl ExchangeRuntime {
                     }
                     for m in plan.recv_msgs(t) {
                         let r = m.range();
-                        // SAFETY: the sender's seqcst publish ordered its
-                        // pack writes before this read.
+                        // SAFETY: the sender's Release publish ordered its
+                        // pack writes before this Acquire-observed read.
                         m.unpack(unsafe { arena.slice(half + r.start..half + r.end) }, field);
                     }
+                    acks.publish(t, epoch);
                     boundary(t, field, o);
                 });
+            }
+        }
+    }
+
+    /// The multi-step pipelined driver: run `steps` split-phase time steps
+    /// inside **one** pool dispatch. No global barrier and no per-step
+    /// dispatch remain on the hot path — a worker's only synchronization is
+    /// the per-peer epoch waits of `finish_exchange` plus the consumed-epoch
+    /// acknowledgment gate:
+    ///
+    /// ```text
+    /// per worker t, for each epoch e of the batch:
+    ///   ack gate   wait until every receiver of t acked epoch e − 2
+    ///              (the arena half of e was last drained at e − 2)
+    ///   begin      pack epoch e into arena half (e mod 2), publish flag
+    ///   overlap    interior compute of the step
+    ///   finish     wait on t's senders' flags ≥ e, unpack, publish ack
+    ///   boundary   boundary compute, flip (field, out) roles
+    /// ```
+    ///
+    /// The ack gate is what makes the depth-2 arena reuse sound *without*
+    /// re-synchronizing the pool: a fast sender may run ahead of its
+    /// slowest receiver, but by at most 2 epochs — exactly the number of
+    /// buffered halves. The first two epochs of a batch skip the gate (both
+    /// halves are quiescent at dispatch entry, since `run` only returns
+    /// once every worker finished the previous batch), which also makes the
+    /// driver robust to ack counters left stale by earlier single-step
+    /// protocols.
+    ///
+    /// `interior`/`boundary` are the same kernels as
+    /// [`step_overlapped`](ExchangeRuntime::step_overlapped); each epoch
+    /// computes every owned cell exactly once with the unchanged
+    /// expression, so the batch is **bitwise identical** to `steps`
+    /// synchronous (or overlapped) steps on either engine. On return,
+    /// `fields` holds the final state and `out` the previous step's — the
+    /// same post-swap convention as `steps` calls of a single-step protocol
+    /// each followed by the caller's buffer swap.
+    pub fn run_pipelined<UI, UB>(
+        &mut self,
+        engine: Engine,
+        steps: usize,
+        fields: &mut [Vec<f64>],
+        out: &mut [Vec<f64>],
+        interior: UI,
+        boundary: UB,
+    ) where
+        UI: Fn(usize, &mut [f64], &mut [f64]) + Sync,
+        UB: Fn(usize, &mut [f64], &mut [f64]) + Sync,
+    {
+        let plan = self
+            .plan
+            .as_strided()
+            .expect("run_pipelined needs a strided exchange plan");
+        let threads = plan.threads();
+        assert_eq!(fields.len(), threads, "one field per thread");
+        assert_eq!(out.len(), threads, "one output field per thread");
+        if steps == 0 {
+            return;
+        }
+        let total = plan.total_values();
+        debug_assert_eq!(self.staging.len(), 2 * total);
+        match engine {
+            Engine::Sequential => {
+                // The oracle is one overlapped step at a time — literally
+                // the same single-step body (phases, epoch/flag/ack
+                // bookkeeping and all), plus the per-step buffer-role swap
+                // the parallel workers perform locally. Sharing the body
+                // keeps the two oracle schedules from drifting apart.
+                for _ in 0..steps {
+                    self.step_overlapped(engine, fields, out, &interior, &boundary);
+                    for (field, o) in fields.iter_mut().zip(out.iter_mut()) {
+                        std::mem::swap(field, o);
+                    }
+                }
+            }
+            Engine::Parallel => {
+                let base = self.epoch;
+                self.epoch += steps as u64;
+                let arena = ArenaView::new(&mut self.staging);
+                let fw = PerWorker::new(fields);
+                let ow = PerWorker::new(out);
+                let (interior, boundary) = (&interior, &boundary);
+                let (flags, acks) = (&self.flags, &self.acks);
+                let (senders, receivers) = (&self.senders, &self.receivers);
+                let max_lead = &self.max_lead;
+                self.pool.run(threads, &|ctx: WorkerCtx| {
+                    let t = ctx.id;
+                    // SAFETY: worker t claims only its own field/out pair,
+                    // exactly once per dispatch; the per-epoch role flip
+                    // below only swaps which local name points where.
+                    let mut cur = unsafe { fw.take(t) };
+                    let mut nxt = unsafe { ow.take(t) };
+                    // Thread-local max of the depth-bound diagnostic; folded
+                    // into the shared counter once per batch, so the hot
+                    // loop never touches a contended cache line.
+                    let mut local_lead = 0u64;
+                    for k in 1..=steps as u64 {
+                        let epoch = base + k;
+                        let half = (epoch % 2) as usize * total;
+                        let field = cur.as_mut_slice();
+                        let o = nxt.as_mut_slice();
+
+                        // Ack gate: half (epoch mod 2) was last packed at
+                        // epoch − 2; every receiver must have drained it.
+                        // The first two epochs skip the gate — at dispatch
+                        // entry both halves are quiescent.
+                        if k > 2 {
+                            for &r in &receivers[t] {
+                                ctx.wait_for_ack(acks.flag(r as usize), epoch - 2);
+                            }
+                        }
+
+                        // begin_exchange: pack this epoch's half + publish.
+                        for m in plan.send_msgs(t) {
+                            let r = m.range();
+                            // SAFETY: plan ranges are disjoint per message
+                            // and halved by epoch parity; the ack gate
+                            // ordered the previous tenant's reads before
+                            // this overwrite.
+                            m.pack(field, unsafe {
+                                arena.slice_mut(half + r.start..half + r.end)
+                            });
+                        }
+                        flags.publish(t, epoch);
+
+                        // Overlap window: halo-independent compute.
+                        interior(t, field, o);
+
+                        // finish_exchange: wait on actual senders only.
+                        for &peer in &senders[t] {
+                            ctx.wait_for_epoch(flags.flag(peer as usize), epoch);
+                        }
+                        for m in plan.recv_msgs(t) {
+                            let r = m.range();
+                            // SAFETY: the sender's Release publish ordered
+                            // its pack writes before this read.
+                            m.unpack(
+                                unsafe { arena.slice(half + r.start..half + r.end) },
+                                field,
+                            );
+                        }
+                        acks.publish(t, epoch);
+
+                        // Depth-bound diagnostic: how far ahead of this
+                        // just-consumed epoch has any of t's senders
+                        // published? The ack protocol caps this at 2.
+                        for &peer in &senders[t] {
+                            let lead = flags.load(peer as usize).saturating_sub(epoch);
+                            local_lead = local_lead.max(lead);
+                        }
+
+                        boundary(t, field, o);
+                        std::mem::swap(&mut cur, &mut nxt);
+                    }
+                    max_lead.fetch_max(local_lead, Ordering::Relaxed);
+                });
+                if steps % 2 == 1 {
+                    // Workers flipped roles an odd number of times: move the
+                    // final state under the caller's `fields` name.
+                    for (field, o) in fields.iter_mut().zip(out.iter_mut()) {
+                        std::mem::swap(field, o);
+                    }
+                }
             }
         }
     }
@@ -370,12 +623,14 @@ mod tests {
         let mut f_sync = init.clone();
         let mut f_seq = init.clone();
         let mut f_par = init.clone();
-        for step in 0..6 {
+        // NB: don't name the loop variable `step` — it would shadow the
+        // `step` helper fn and turn the calls below into E0618.
+        for s in 0..6 {
             let o_sync = step(&mut rt_sync, Engine::Sequential, &mut f_sync);
             let o_seq = step_ovl(&mut rt_seq, Engine::Sequential, &mut f_seq);
             let o_par = step_ovl(&mut rt_par, Engine::Parallel, &mut f_par);
-            assert_eq!(o_sync, o_seq, "seq overlap diverges at step {step}");
-            assert_eq!(o_sync, o_par, "par overlap diverges at step {step}");
+            assert_eq!(o_sync, o_seq, "seq overlap diverges at step {s}");
+            assert_eq!(o_sync, o_par, "par overlap diverges at step {s}");
             assert_eq!(f_sync, f_seq);
             assert_eq!(f_sync, f_par);
             f_sync = o_sync;
@@ -391,8 +646,124 @@ mod tests {
         let rt = ring_runtime();
         assert_eq!(rt.senders_of(0), &[1]);
         assert_eq!(rt.senders_of(1), &[0]);
+        assert_eq!(rt.receivers_of(0), &[1]);
+        assert_eq!(rt.receivers_of(1), &[0]);
         // Double-buffered arena.
         assert_eq!(rt.staging.len(), 2 * rt.plan().total_values());
+    }
+
+    /// The pipelined version of [`step_ovl`]: one call drives S steps.
+    fn steps_pipelined(
+        rt: &mut ExchangeRuntime,
+        engine: Engine,
+        steps: usize,
+        fields: &mut [Vec<f64>],
+    ) {
+        let mut out = fields.to_vec();
+        rt.run_pipelined(
+            engine,
+            steps,
+            fields,
+            &mut out,
+            |_t, field, out| {
+                for i in 2..4 {
+                    out[i] = 0.5 * (field[i - 1] + field[i + 1]);
+                }
+            },
+            |_t, field, out| {
+                for i in [1usize, 4] {
+                    out[i] = 0.5 * (field[i - 1] + field[i + 1]);
+                }
+            },
+        );
+    }
+
+    /// The owned (non-ghost) cells of every thread — what the protocols
+    /// must agree on bitwise. Ghost-cell *contents* between steps are
+    /// protocol-internal (each step overwrites them before reading).
+    fn owned_cells(fields: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        fields.iter().map(|f| f[1..5].to_vec()).collect()
+    }
+
+    #[test]
+    fn pipelined_matches_synchronous_bitwise() {
+        let init = vec![
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 0.0],
+            vec![0.0, 5.0, 6.0, 7.0, 8.0, 0.0],
+        ];
+        for steps in [1usize, 2, 3, 7] {
+            let mut rt_sync = ring_runtime();
+            let mut f_sync = init.clone();
+            for _ in 0..steps {
+                f_sync = step(&mut rt_sync, Engine::Sequential, &mut f_sync);
+            }
+            for engine in Engine::ALL {
+                let mut rt = ring_runtime();
+                let mut f = init.clone();
+                steps_pipelined(&mut rt, engine, steps, &mut f);
+                assert_eq!(
+                    owned_cells(&f),
+                    owned_cells(&f_sync),
+                    "{} S={steps}",
+                    engine.name()
+                );
+                assert_eq!(rt.epoch, steps as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_batch_is_one_dispatch() {
+        let mut rt = ring_runtime();
+        let mut f = vec![
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 0.0],
+            vec![0.0, 5.0, 6.0, 7.0, 8.0, 0.0],
+        ];
+        steps_pipelined(&mut rt, Engine::Parallel, 5, &mut f); // spawns pool
+        let before = rt.dispatches();
+        steps_pipelined(&mut rt, Engine::Parallel, 6, &mut f);
+        assert_eq!(rt.dispatches(), before + 1, "one dispatch per batch");
+        assert!(rt.max_sender_lead() <= 2, "lead {}", rt.max_sender_lead());
+    }
+
+    #[test]
+    fn mixed_protocols_stay_bitwise_locked() {
+        // Interleave all three protocols (and both engines) on ONE runtime
+        // against a pure-synchronous oracle: the epoch-uniform accounting
+        // must keep arena parity, flags and acks consistent throughout.
+        let init = vec![
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 0.0],
+            vec![0.0, 5.0, 6.0, 7.0, 8.0, 0.0],
+        ];
+        let mut rt_oracle = ring_runtime();
+        let mut f_oracle = init.clone();
+        let mut rt = ring_runtime();
+        let mut f = init.clone();
+        let schedule: &[(&str, Engine, usize)] = &[
+            ("sync", Engine::Parallel, 1),
+            ("ovl", Engine::Parallel, 1),
+            ("sync", Engine::Sequential, 1),
+            ("pipe", Engine::Parallel, 3),
+            ("ovl", Engine::Sequential, 1),
+            ("pipe", Engine::Sequential, 2),
+            ("sync", Engine::Parallel, 1),
+            ("pipe", Engine::Parallel, 4),
+            ("ovl", Engine::Parallel, 1),
+        ];
+        for &(proto, engine, steps) in schedule {
+            match proto {
+                "sync" => f = step(&mut rt, engine, &mut f),
+                "ovl" => f = step_ovl(&mut rt, engine, &mut f),
+                _ => steps_pipelined(&mut rt, engine, steps, &mut f),
+            }
+            for _ in 0..steps {
+                f_oracle = step(&mut rt_oracle, Engine::Sequential, &mut f_oracle);
+            }
+            assert_eq!(owned_cells(&f), owned_cells(&f_oracle), "{proto} x{steps} diverged");
+        }
+        // Every protocol advanced the shared epoch uniformly.
+        let total: usize = schedule.iter().map(|&(_, _, s)| s).sum();
+        assert_eq!(rt.epoch, total as u64);
     }
 
     #[test]

@@ -111,6 +111,27 @@ impl SpmvEngine {
     pub fn run_overlapped(&mut self, state: &mut SpmvState, analysis: &Analysis) -> ExecOutcome {
         self.pool.run_v3_overlapped(self.mode, state, analysis)
     }
+
+    /// Run `steps` pipelined UPCv3 iterations (each with the §6.1 `x`/`y`
+    /// swap) in one pool dispatch, bounded only by the consumed-epoch ack
+    /// protocol. Bitwise identical to `steps` × (`run(Variant::V3, ..)` +
+    /// `swap_xy`), with the final iterate left in `state.y` like a single
+    /// `run` — see [`ParallelPool::run_v3_pipelined`].
+    pub fn run_pipelined(
+        &mut self,
+        steps: usize,
+        state: &mut SpmvState,
+        analysis: &Analysis,
+    ) -> ExecOutcome {
+        self.pool.run_v3_pipelined(self.mode, steps, state, analysis)
+    }
+
+    /// Largest `published − consumed` epoch distance observed across this
+    /// engine's pipelined batches — bounded by the consumed-epoch ack
+    /// protocol's depth, 2. See [`ParallelPool::max_sender_lead`].
+    pub fn max_sender_lead(&self) -> u64 {
+        self.pool.max_sender_lead()
+    }
 }
 
 /// One-shot convenience: run a variant on a fresh engine of the given mode.

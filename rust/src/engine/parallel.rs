@@ -47,15 +47,25 @@ pub struct ParallelPool {
     pool: WorkerPool,
     /// `x_copies[t]` — thread t's private full-length x workspace (V2/V3).
     x_copies: Vec<Vec<f64>>,
-    /// Staging arena for V3 message payloads: `plan.total_values()` doubles
-    /// for the synchronous path, doubled (two epoch halves) for the
-    /// split-phase overlapped path.
+    /// Staging arena for V3 message payloads: `2 × plan.total_values()`
+    /// doubles (two epoch-parity halves), shared by the synchronous,
+    /// overlapped and pipelined paths.
     staging: Vec<f64>,
     /// Per-worker `(bytes, transfers)` counters (naive/V1/V2).
     counts: Vec<(u64, u64)>,
-    /// Per-thread published-epoch flags for the overlapped V3 path.
+    /// Per-thread published-epoch flags for the split-phase V3 paths.
     flags: EpochFlags,
-    /// Exchange epoch of the last overlapped step (0 = none yet).
+    /// Per-thread consumed-epoch acks for the pipelined V3 path.
+    acks: EpochFlags,
+    /// Diagnostics: largest `published − consumed` distance any receiver
+    /// observed against one of its senders (pipelined batches only); the
+    /// ack protocol bounds it by the pipeline depth, 2. Folded once per
+    /// worker per batch, never touched in the per-epoch hot loop.
+    max_lead: std::sync::atomic::AtomicU64,
+    /// Exchange epoch of the last V3 step (0 = none yet). Bumped uniformly
+    /// by the synchronous, overlapped and pipelined paths so they can be
+    /// mixed on one pool without pairing a stale arena half with fresh
+    /// flags.
     epoch: u64,
 }
 
@@ -71,6 +81,26 @@ impl ParallelPool {
             self.x_copies = (0..threads).map(|_| vec![0.0f64; n]).collect();
         }
         self.counts.resize(threads, (0, 0));
+    }
+
+    /// Size the split-phase protocol state (flags, acks, epoch) for the
+    /// run's thread count. A shape change resets the epoch: the old
+    /// counters describe a different plan.
+    fn ensure_protocol(&mut self, threads: usize) {
+        if self.flags.len() != threads {
+            self.flags = EpochFlags::new(threads);
+            self.acks = EpochFlags::new(threads);
+            self.epoch = 0;
+        }
+    }
+
+    /// Largest `published − consumed` epoch distance any receiver observed
+    /// against one of its senders across pipelined batches. The
+    /// consumed-epoch ack protocol bounds this by the pipeline depth, 2 —
+    /// the V3 counterpart of
+    /// [`ExchangeRuntime::max_sender_lead`](crate::engine::ExchangeRuntime::max_sender_lead).
+    pub fn max_sender_lead(&self) -> u64 {
+        self.max_lead.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Run one SpMV `y = Mx` on the worker pool. Bitwise identical to
@@ -235,13 +265,26 @@ impl ParallelPool {
     /// Listing 5 on the pool: pack + put phase, [`WorkerCtx::barrier`] (the
     /// `upc_barrier`), then unpack + compute — one dispatch, no per-step
     /// allocation.
+    ///
+    /// Epoch-uniform with the split-phase paths: the step bumps the shared
+    /// exchange epoch, packs into that epoch's arena parity half (the
+    /// staging buffer is always sized for both halves, so mixing protocols
+    /// never resizes it), and publishes the flag/ack counters — pure
+    /// bookkeeping under the global barrier, but it keeps a later
+    /// overlapped or pipelined step from pairing a stale parity half with
+    /// fresh flags.
     fn run_v3(&mut self, state: &mut SpmvState, analysis: &Analysis) -> ExecOutcome {
         let layout = state.layout;
         let r = state.r_nz;
         let threads = layout.threads;
         let plan = &analysis.plan;
         self.ensure(threads, layout.n);
-        self.staging.resize(plan.total_values(), 0.0);
+        self.ensure_protocol(threads);
+        let total = plan.total_values();
+        self.staging.resize(2 * total, 0.0);
+        self.epoch += 1;
+        let epoch = self.epoch;
+        let half = (epoch % 2) as usize * total;
 
         // The byte/transfer counters are pure functions of the plan; summing
         // them in thread order reproduces the sequential executor's counts.
@@ -262,18 +305,22 @@ impl ParallelPool {
         let mut y_locals = state.y.locals_mut();
         let y = PerWorker::new(&mut y_locals);
         let ws = PerWorker::new(&mut self.x_copies);
+        let (flags, acks) = (&self.flags, &self.acks);
         self.pool.run(threads, &|ctx: WorkerCtx| {
             let t = ctx.id;
             // Phase 1: pack + put — each sender owns exactly the arena
             // ranges of its own messages (the zero-copy `upc_memput`).
             let local_x = x.local(t);
             for m in plan.send_msgs(t) {
-                // SAFETY: plan ranges are disjoint; message sent by t only.
-                let buf = unsafe { arena.slice_mut(m.range()) };
+                let rng = m.range();
+                // SAFETY: plan ranges are disjoint (and halved by epoch
+                // parity); message sent by t only.
+                let buf = unsafe { arena.slice_mut(half + rng.start..half + rng.end) };
                 for (slot, &off) in buf.iter_mut().zip(m.local_src) {
                     *slot = local_x[off as usize];
                 }
             }
+            flags.publish(t, epoch);
 
             ctx.barrier(); // ---- upc_barrier ----
 
@@ -286,12 +333,14 @@ impl ParallelPool {
                 ws[start..start + len].copy_from_slice(x.block(b));
             }
             for m in plan.recv_msgs(t) {
+                let rng = m.range();
                 // SAFETY: arena writes ended at the barrier; reads shared.
-                let vals = unsafe { arena.slice(m.range()) };
+                let vals = unsafe { arena.slice(half + rng.start..half + rng.end) };
                 for (&gidx, &v) in m.indices.iter().zip(vals) {
                     ws[gidx as usize] = v;
                 }
             }
+            acks.publish(t, epoch);
             let y_local = unsafe { y.take(t) };
             for b in layout.blocks_of_thread(t) {
                 let (offset, len) = layout.block_range(b);
@@ -329,18 +378,23 @@ impl ParallelPool {
         state: &mut SpmvState,
         analysis: &Analysis,
     ) -> ExecOutcome {
+        // On the parallel engine a single overlapped step IS a depth-1
+        // pipelined batch (the ack gate is skipped for the first two epochs
+        // of any batch, so the protocols coincide exactly) — share the one
+        // unsafe protocol body instead of maintaining a second copy.
+        if engine == Engine::Parallel {
+            return self.run_v3_pipelined(Engine::Parallel, 1, state, analysis);
+        }
+
         let layout = state.layout;
         let r = state.r_nz;
         let threads = layout.threads;
         let plan = &analysis.plan;
         assert_eq!(analysis.row_split.len(), threads, "analysis/layout thread mismatch");
         self.ensure(threads, layout.n);
+        self.ensure_protocol(threads);
         let total = plan.total_values();
         self.staging.resize(2 * total, 0.0);
-        if self.flags.len() != threads {
-            self.flags = EpochFlags::new(threads);
-            self.epoch = 0;
-        }
         self.epoch += 1;
         let epoch = self.epoch;
         let half = (epoch % 2) as usize * total;
@@ -356,95 +410,231 @@ impl ParallelPool {
             }
         }
 
+        // Replay the split-phase schedule on the calling thread: all
+        // begins, all interior computes, all finishes, all boundary
+        // computes — the correctness oracle.
         let x = &state.x;
         let d = &state.d;
         let a = &state.a;
         let j = &state.j;
         let split = &analysis.row_split;
+        for t in 0..threads {
+            let local_x = x.local(t);
+            for m in plan.send_msgs(t) {
+                let rng = m.range();
+                let buf = &mut self.staging[half + rng.start..half + rng.end];
+                for (slot, &off) in buf.iter_mut().zip(m.local_src) {
+                    *slot = local_x[off as usize];
+                }
+            }
+            self.flags.publish(t, epoch);
+        }
+        let mut y_locals = state.y.locals_mut();
+        for t in 0..threads {
+            let ws = &mut self.x_copies[t];
+            for b in layout.blocks_of_thread(t) {
+                let (start, len) = layout.block_range(b);
+                ws[start..start + len].copy_from_slice(x.block(b));
+            }
+            let y_local = &mut y_locals[t][..];
+            compute_row_runs(&layout, r, d, a, j, &split[t].interior, ws, y_local);
+        }
+        for t in 0..threads {
+            let ws = &mut self.x_copies[t];
+            for m in plan.recv_msgs(t) {
+                let rng = m.range();
+                let vals = &self.staging[half + rng.start..half + rng.end];
+                for (&gidx, &v) in m.indices.iter().zip(vals) {
+                    ws[gidx as usize] = v;
+                }
+            }
+            self.acks.publish(t, epoch);
+            let y_local = &mut y_locals[t][..];
+            compute_row_runs(&layout, r, d, a, j, &split[t].boundary, ws, y_local);
+        }
+        drop(y_locals);
+        finish_counted(state, inter, transfers)
+    }
+
+    /// The multi-step pipelined Listing 5: `steps` split-phase V3
+    /// iterations (each followed by the §6.1 `x`/`y` pointer swap) inside
+    /// **one** pool dispatch. Per epoch a worker runs the same
+    /// pack → publish → own-copy + interior rows → per-peer waits +
+    /// scatter → boundary rows schedule as
+    /// [`run_v3_overlapped`](ParallelPool::run_v3_overlapped); across
+    /// epochs the only back-pressure is the consumed-epoch acknowledgment
+    /// (pack of epoch `e` waits for every receiver's ack of `e − 2`, the
+    /// last tenant of that arena parity half), so a fast thread runs at
+    /// most 2 epochs ahead of its slowest receiver and no global barrier or
+    /// per-step dispatch remains.
+    ///
+    /// Each epoch's arithmetic is identical to the synchronous V3, so the
+    /// batch is bitwise identical to `steps` oracle iterations. On return
+    /// `state.y` holds the final iterate and `state.x` the previous one —
+    /// the same convention as a single `run` (the caller's `swap_xy`
+    /// completes the last pointer swap); byte/transfer counters accumulate
+    /// over the batch.
+    pub fn run_v3_pipelined(
+        &mut self,
+        engine: Engine,
+        steps: usize,
+        state: &mut SpmvState,
+        analysis: &Analysis,
+    ) -> ExecOutcome {
+        if steps == 0 {
+            // An empty batch is the identity, matching
+            // `ExchangeRuntime::run_pipelined`'s no-op convention.
+            return finish_counted(state, 0, 0);
+        }
+        let layout = state.layout;
+        let r = state.r_nz;
+        let threads = layout.threads;
+        let plan = &analysis.plan;
+        assert_eq!(analysis.row_split.len(), threads, "analysis/layout thread mismatch");
+        self.ensure(threads, layout.n);
+        self.ensure_protocol(threads);
+        let total = plan.total_values();
+        self.staging.resize(2 * total, 0.0);
+
+        // Counters: the same pure function of the plan as the single-step
+        // paths, accumulated over the batch.
+        let mut inter = 0u64;
+        let mut transfers = 0u64;
+        for t in 0..threads {
+            for m in plan.send_msgs(t) {
+                inter += (m.len() * SIZEOF_DOUBLE) as u64;
+                transfers += 1;
+            }
+        }
+        inter *= steps as u64;
+        transfers *= steps as u64;
+
+        let split = &analysis.row_split;
+        let bs = layout.block_size;
         match engine {
             Engine::Sequential => {
-                // Replay the split-phase schedule on the calling thread:
-                // all begins, all interior computes, all finishes, all
-                // boundary computes — the correctness oracle.
-                for t in 0..threads {
-                    let local_x = x.local(t);
-                    for m in plan.send_msgs(t) {
-                        let rng = m.range();
-                        let buf = &mut self.staging[half + rng.start..half + rng.end];
-                        for (slot, &off) in buf.iter_mut().zip(m.local_src) {
-                            *slot = local_x[off as usize];
-                        }
+                // The oracle chains single overlapped steps — the same
+                // body, epoch/flag/ack bookkeeping and all, so the two
+                // oracle schedules cannot drift apart — with the §6.1
+                // pointer swap *between* iterations (not after the last:
+                // the contract leaves the final iterate in `y`, like a
+                // single `run`).
+                for k in 0..steps {
+                    if k > 0 {
+                        state.swap_xy();
                     }
-                    self.flags.publish(t, epoch);
-                }
-                let mut y_locals = state.y.locals_mut();
-                for t in 0..threads {
-                    let ws = &mut self.x_copies[t];
-                    for b in layout.blocks_of_thread(t) {
-                        let (start, len) = layout.block_range(b);
-                        ws[start..start + len].copy_from_slice(x.block(b));
-                    }
-                    let y_local = &mut y_locals[t][..];
-                    compute_row_runs(&layout, r, d, a, j, &split[t].interior, ws, y_local);
-                }
-                for t in 0..threads {
-                    let ws = &mut self.x_copies[t];
-                    for m in plan.recv_msgs(t) {
-                        let rng = m.range();
-                        let vals = &self.staging[half + rng.start..half + rng.end];
-                        for (&gidx, &v) in m.indices.iter().zip(vals) {
-                            ws[gidx as usize] = v;
-                        }
-                    }
-                    let y_local = &mut y_locals[t][..];
-                    compute_row_runs(&layout, r, d, a, j, &split[t].boundary, ws, y_local);
+                    self.run_v3_overlapped(Engine::Sequential, state, analysis);
                 }
             }
             Engine::Parallel => {
+                let base = self.epoch;
+                self.epoch += steps as u64;
                 let arena = ArenaView::new(&mut self.staging);
+                let mut x_locals = state.x.locals_mut();
                 let mut y_locals = state.y.locals_mut();
-                let y = PerWorker::new(&mut y_locals);
+                let xw = PerWorker::new(&mut x_locals);
+                let yw = PerWorker::new(&mut y_locals);
                 let ws_view = PerWorker::new(&mut self.x_copies);
-                let flags = &self.flags;
+                let (flags, acks) = (&self.flags, &self.acks);
+                let (d, a, j) = (&state.d, &state.a, &state.j);
+                let max_lead = &self.max_lead;
                 self.pool.run(threads, &|ctx: WorkerCtx| {
                     let t = ctx.id;
-                    // begin_exchange: pack into this epoch's half + publish.
-                    let local_x = x.local(t);
-                    for m in plan.send_msgs(t) {
-                        let rng = m.range();
-                        // SAFETY: plan ranges are disjoint per message (and
-                        // halved by epoch parity); packed by sender t only.
-                        let buf = unsafe { arena.slice_mut(half + rng.start..half + rng.end) };
-                        for (slot, &off) in buf.iter_mut().zip(m.local_src) {
-                            *slot = local_x[off as usize];
-                        }
-                    }
-                    flags.publish(t, epoch);
-
-                    // Overlap window: own-block copy + interior rows.
-                    // SAFETY: worker t claims only its own workspace/shard,
-                    // each exactly once per dispatch.
+                    // SAFETY: worker t claims only its own x/y shards and
+                    // workspace, each exactly once per dispatch; the
+                    // per-epoch role flip below only swaps which local
+                    // name points at which shard.
+                    let src_ref = unsafe { xw.take(t) };
+                    let dst_ref = unsafe { yw.take(t) };
+                    let mut src: &mut [f64] = &mut **src_ref;
+                    let mut dst: &mut [f64] = &mut **dst_ref;
                     let ws = unsafe { ws_view.take(t) };
-                    let y_local = unsafe { y.take(t) };
-                    for b in layout.blocks_of_thread(t) {
-                        let (start, len) = layout.block_range(b);
-                        ws[start..start + len].copy_from_slice(x.block(b));
-                    }
-                    compute_row_runs(&layout, r, d, a, j, &split[t].interior, ws, y_local);
+                    // Thread-local max of the depth-bound diagnostic;
+                    // folded into the shared counter once per batch.
+                    let mut local_lead = 0u64;
+                    for k in 1..=steps as u64 {
+                        let epoch = base + k;
+                        let half = (epoch % 2) as usize * total;
 
-                    // finish_exchange: per-peer waits, scatter as published.
-                    for m in plan.recv_msgs(t) {
-                        ctx.wait_for_epoch(flags.flag(m.peer as usize), epoch);
-                        let rng = m.range();
-                        // SAFETY: the sender's seqcst publish ordered its
-                        // pack writes before this read.
-                        let vals = unsafe { arena.slice(half + rng.start..half + rng.end) };
-                        for (&gidx, &v) in m.indices.iter().zip(vals) {
-                            ws[gidx as usize] = v;
+                        // Ack gate: the arena half of this epoch was last
+                        // drained at epoch − 2, so every receiver must have
+                        // acked it. A consolidated gather plan has exactly
+                        // one send message per receiver, so waiting per
+                        // message is waiting per distinct receiver — no
+                        // adjacency list, no allocation. The first two
+                        // epochs skip the gate: both halves are quiescent
+                        // at dispatch entry.
+                        if k > 2 {
+                            for m in plan.send_msgs(t) {
+                                ctx.wait_for_ack(acks.flag(m.peer as usize), epoch - 2);
+                            }
                         }
+
+                        // begin_exchange: pack this epoch's half + publish.
+                        for m in plan.send_msgs(t) {
+                            let rng = m.range();
+                            // SAFETY: plan ranges are disjoint per message
+                            // and halved by epoch parity; the ack gate
+                            // ordered the previous tenant's reads before
+                            // this overwrite.
+                            let buf =
+                                unsafe { arena.slice_mut(half + rng.start..half + rng.end) };
+                            for (slot, &off) in buf.iter_mut().zip(m.local_src) {
+                                *slot = src[off as usize];
+                            }
+                        }
+                        flags.publish(t, epoch);
+
+                        // Overlap window: own-block copy + interior rows.
+                        for b in layout.blocks_of_thread(t) {
+                            let (start, len) = layout.block_range(b);
+                            let mb = layout.local_block_index(b);
+                            ws[start..start + len]
+                                .copy_from_slice(&src[mb * bs..mb * bs + len]);
+                        }
+                        compute_row_runs(&layout, r, d, a, j, &split[t].interior, ws, dst);
+
+                        // finish_exchange: per-peer waits, scatter, ack.
+                        for m in plan.recv_msgs(t) {
+                            ctx.wait_for_epoch(flags.flag(m.peer as usize), epoch);
+                            let rng = m.range();
+                            // SAFETY: the sender's Release publish ordered
+                            // its pack writes before this read.
+                            let vals =
+                                unsafe { arena.slice(half + rng.start..half + rng.end) };
+                            for (&gidx, &v) in m.indices.iter().zip(vals) {
+                                ws[gidx as usize] = v;
+                            }
+                        }
+                        acks.publish(t, epoch);
+
+                        // Depth-bound diagnostic: how far ahead of this
+                        // just-consumed epoch has any of t's senders
+                        // published? The ack protocol caps this at 2.
+                        for m in plan.recv_msgs(t) {
+                            let lead =
+                                flags.load(m.peer as usize).saturating_sub(epoch);
+                            local_lead = local_lead.max(lead);
+                        }
+
+                        compute_row_runs(&layout, r, d, a, j, &split[t].boundary, ws, dst);
+
+                        // The §6.1 pointer swap, thread-locally.
+                        std::mem::swap(&mut src, &mut dst);
                     }
-                    compute_row_runs(&layout, r, d, a, j, &split[t].boundary, ws, y_local);
+                    max_lead.fetch_max(
+                        local_lead,
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
                 });
+                drop(x_locals);
+                drop(y_locals);
+                if steps % 2 == 0 {
+                    // An even batch leaves the final iterate in the shard
+                    // the workers called `src` last — the x storage. Swap
+                    // so `y` holds it, per the single-run convention.
+                    state.swap_xy();
+                }
             }
         }
         finish_counted(state, inter, transfers)

@@ -53,12 +53,45 @@ impl WorkerCtx<'_> {
     /// replacing the global barrier with a wait on exactly the peers that
     /// send to this worker.
     ///
+    /// Ordering: the load is `Acquire` and pairs with the sender's `Release`
+    /// publish ([`EpochFlags::publish`]). The sender's pack writes are
+    /// sequenced before its publish; observing `flag >= target` therefore
+    /// gives a happens-before edge that makes every packed arena value of
+    /// that epoch visible to the unpack reads that follow this wait. No
+    /// stronger (SeqCst) ordering is needed: each flag is a single-writer
+    /// monotone counter and the protocol never reasons about the relative
+    /// order of *different* threads' publishes.
+    ///
     /// Preserves the poisoned-barrier panic-propagation semantics: if a peer
     /// worker panics before publishing, the pool poisons the dispatch and
     /// this wait panics too instead of spinning forever.
     pub fn wait_for_epoch(&self, flag: &AtomicU64, target: u64) {
+        self.spin_until(flag, target);
+    }
+
+    /// The pipeline back-pressure wait: spin until a *consumed-epoch* flag
+    /// (a receiver's "I have unpacked epoch k" counter) reaches `target`.
+    /// A sender packing epoch `e` into the depth-2 arena waits for each of
+    /// its receivers' acks to reach `e − 2` first, so it never overwrites a
+    /// parity half a slow receiver is still draining — and, equivalently,
+    /// never runs more than two epochs ahead of its slowest receiver.
+    ///
+    /// Ordering: `Acquire`, pairing with the receiver's `Release` ack
+    /// publish. The receiver's unpack *reads* are sequenced before its ack;
+    /// observing `ack >= target` orders those reads before this sender's
+    /// subsequent overwrites of the same arena slots — the reuse edge of the
+    /// pipelined protocol (the publish edge is documented on
+    /// [`wait_for_epoch`](WorkerCtx::wait_for_epoch)).
+    ///
+    /// Poison-aware exactly like `wait_for_epoch`: a peer panic releases
+    /// this wait with a panic instead of a hang.
+    pub fn wait_for_ack(&self, flag: &AtomicU64, target: u64) {
+        self.spin_until(flag, target);
+    }
+
+    fn spin_until(&self, flag: &AtomicU64, target: u64) {
         let mut spins = 0u32;
-        while flag.load(Ordering::SeqCst) < target {
+        while flag.load(Ordering::Acquire) < target {
             if self.barrier.is_poisoned() {
                 panic!("a pool worker panicked during this dispatch");
             }
@@ -72,10 +105,18 @@ impl WorkerCtx<'_> {
     }
 }
 
-/// One cache-line-padded seqcst epoch counter per logical thread: thread
-/// `t`'s counter is the epoch of the last exchange `t` fully published
-/// (packed every outgoing message of). Receivers in `finish_exchange` wait
-/// on the counters of their actual senders only.
+/// One cache-line-padded monotone epoch counter per logical thread. Two
+/// instances drive the split-phase protocols: a *published* set (thread
+/// `t`'s counter is the epoch of the last exchange `t` fully packed every
+/// outgoing message of; receivers in `finish_exchange` wait on the counters
+/// of their actual senders) and, for the pipelined driver, a *consumed* set
+/// (the epoch `t` last finished unpacking; senders wait on the counters of
+/// their actual receivers before reusing an arena half).
+///
+/// Publishes are `Release` stores and waits are `Acquire` loads — the
+/// required happens-before edges are documented on
+/// [`WorkerCtx::wait_for_epoch`] and [`WorkerCtx::wait_for_ack`]; each
+/// counter has exactly one writer, so no stronger ordering is needed.
 ///
 /// The counters are monotone across steps and survive pool dispatches, so a
 /// runtime can keep one `EpochFlags` for its whole lifetime; padding keeps
@@ -109,9 +150,18 @@ impl EpochFlags {
         &self.flags[t].0
     }
 
-    /// Publish: thread `t` finished packing every message of `epoch`.
+    /// Publish: thread `t` finished packing (published set) or unpacking
+    /// (consumed set) every message of `epoch`. `Release`: orders the pack
+    /// writes / unpack reads of the epoch before the store — see
+    /// [`WorkerCtx::wait_for_epoch`] / [`WorkerCtx::wait_for_ack`] for the
+    /// matching `Acquire` side.
     pub fn publish(&self, t: usize, epoch: u64) {
-        self.flags[t].0.store(epoch, Ordering::SeqCst);
+        self.flags[t].0.store(epoch, Ordering::Release);
+    }
+
+    /// Snapshot of thread `t`'s counter (`Acquire`, same edge as the waits).
+    pub fn load(&self, t: usize) -> u64 {
+        self.flags[t].0.load(Ordering::Acquire)
     }
 }
 
@@ -146,8 +196,13 @@ impl PoolBarrier {
         }
     }
 
+    /// `Acquire`/`Release` with [`poison`](PoolBarrier::poison): the waiter
+    /// only acts on the boolean itself (it panics), so even `Relaxed` would
+    /// be correct — acquire is kept so the unwinding waiter also observes
+    /// everything the panicking worker did first, which keeps panic messages
+    /// and poisoned state coherent.
     fn is_poisoned(&self) -> bool {
-        self.poisoned_fast.load(Ordering::SeqCst)
+        self.poisoned_fast.load(Ordering::Acquire)
     }
 
     fn wait(&self, workers: usize) {
@@ -176,7 +231,7 @@ impl PoolBarrier {
     }
 
     fn poison(&self) {
-        self.poisoned_fast.store(true, Ordering::SeqCst);
+        self.poisoned_fast.store(true, Ordering::Release);
         self.state.lock().unwrap().poisoned = true;
         self.cv.notify_all();
     }
@@ -188,7 +243,7 @@ impl PoolBarrier {
         let mut st = self.state.lock().unwrap();
         st.count = 0;
         st.poisoned = false;
-        self.poisoned_fast.store(false, Ordering::SeqCst);
+        self.poisoned_fast.store(false, Ordering::Release);
     }
 }
 
@@ -228,6 +283,10 @@ struct Control {
 pub struct WorkerPool {
     workers: Vec<JoinHandle<()>>,
     control: Option<Arc<Control>>,
+    /// Completed `run` calls — the protocol-level "how many wakeups did
+    /// this cost" counter the pipelined driver's tests assert on (one
+    /// dispatch per S-step batch).
+    dispatches: u64,
 }
 
 impl fmt::Debug for WorkerPool {
@@ -246,6 +305,11 @@ impl WorkerPool {
         self.workers.len()
     }
 
+    /// Number of `run` dispatches issued over the pool's lifetime.
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches
+    }
+
     /// Run `job(ctx)` on every one of `n` persistent workers and block until
     /// all of them finished. The closure is shared (`Fn + Sync`): per-worker
     /// mutable state goes through [`PerWorker`] / [`ArenaView`].
@@ -258,6 +322,7 @@ impl WorkerPool {
     pub fn run(&mut self, n: usize, job: &(dyn Fn(WorkerCtx) + Sync)) {
         assert!(n > 0, "cannot dispatch on zero workers");
         self.ensure(n);
+        self.dispatches += 1;
         let control = self.control.as_ref().expect("ensure spawned workers");
         control.barrier.reset();
         // SAFETY: erase the borrow lifetime. The pointer is cleared and
@@ -533,7 +598,8 @@ mod tests {
                 flags.publish(t, epoch);
                 let peer = (t + 1) % ctx.workers;
                 ctx.wait_for_epoch(flags.flag(peer), epoch);
-                // SAFETY: peer's write happened before its publish (SeqCst).
+                // SAFETY: peer's write is ordered before its Release
+                // publish, and the Acquire wait observed it.
                 let v = unsafe { av.slice(peer..peer + 1) }[0];
                 // SAFETY: each worker claims only its own output slot.
                 *unsafe { ov.take(t) } = v;
@@ -542,6 +608,84 @@ mod tests {
                 assert_eq!(out[t], (epoch as usize * 100 + (t + 1) % n) as f64);
             }
         }
+    }
+
+    #[test]
+    fn ack_flags_gate_buffer_reuse() {
+        // A depth-2 producer/consumer pair on one slot pair: the producer
+        // may write slot (e mod 2) only after the consumer acked epoch e−2.
+        // The consumer checks it always reads the value of the epoch it
+        // waited for — an overwrite racing ahead of the ack would break it.
+        let mut pool = WorkerPool::new();
+        let flags = EpochFlags::new(2);
+        let acks = EpochFlags::new(2);
+        let mut slots = vec![0.0f64; 2];
+        let av = ArenaView::new(&mut slots);
+        let flags_ref = &flags;
+        let acks_ref = &acks;
+        pool.run(2, &|ctx| {
+            for epoch in 1..=20u64 {
+                if ctx.id == 0 {
+                    // Producer: respect the consumer's consumed-epoch ack.
+                    if epoch > 2 {
+                        ctx.wait_for_ack(acks_ref.flag(1), epoch - 2);
+                    }
+                    let half = (epoch % 2) as usize;
+                    // SAFETY: the ack wait ordered the consumer's reads of
+                    // this slot (epoch − 2) before this overwrite.
+                    unsafe { av.slice_mut(half..half + 1) }[0] = epoch as f64;
+                    flags_ref.publish(0, epoch);
+                } else {
+                    ctx.wait_for_epoch(flags_ref.flag(0), epoch);
+                    let half = (epoch % 2) as usize;
+                    // SAFETY: the publish wait ordered the producer's write
+                    // before this read; the ack below orders the read
+                    // before any reuse.
+                    let got = unsafe { av.slice(half..half + 1) }[0];
+                    // Exactly this epoch's value: the *next* write to this
+                    // slot (epoch + 2) is gated on the ack published below.
+                    assert!(got == epoch as f64, "epoch {epoch}: read {got}");
+                    acks_ref.publish(1, epoch);
+                }
+            }
+        });
+        assert_eq!(flags.load(0), 20);
+        assert_eq!(acks.load(1), 20);
+    }
+
+    #[test]
+    fn ack_wait_released_by_poison() {
+        // Worker 2 panics before acking; a sender spinning in wait_for_ack
+        // on its flag must be released by the poison and panic, not hang.
+        let mut pool = WorkerPool::new();
+        let acks = EpochFlags::new(4);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, &|ctx| {
+                if ctx.id == 2 {
+                    panic!("boom before ack");
+                }
+                acks.publish(ctx.id, 1);
+                ctx.wait_for_ack(acks.flag(2), 1);
+            });
+        }));
+        assert!(res.is_err(), "worker panic must reach the dispatcher");
+        // The pool stays usable afterwards (reset clears the fast flag).
+        let hits = AtomicU64::new(0);
+        pool.run(4, &|ctx| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            ctx.barrier();
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn dispatch_counter_counts_runs() {
+        let mut pool = WorkerPool::new();
+        assert_eq!(pool.dispatches(), 0);
+        for _ in 0..3 {
+            pool.run(2, &|_| {});
+        }
+        assert_eq!(pool.dispatches(), 3);
     }
 
     #[test]

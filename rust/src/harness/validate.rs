@@ -51,10 +51,21 @@ impl ValidationPoint {
 }
 
 /// Workload labels validated through [`WorkloadPoint`]s: the two grid
-/// workloads, their split-phase overlapped steps, and the overlapped SpMV
-/// V3 (`T_step ≈ max(T_comm, T_comp^interior) + T_comp^boundary`).
-pub const WORKLOAD_LABELS: [&str; 5] =
-    ["heat2d", "heat2d-ovl", "stencil3d", "stencil3d-ovl", "spmv-v3-ovl"];
+/// workloads, their split-phase overlapped steps
+/// (`T_step ≈ T_pack + max(T_transfer, T_comp^int) + T_unpack +
+/// T_comp^bnd`), their multi-step pipelined batches
+/// (`T_total ≈ S·max(T_comm, T_serial) + fill/drain`, reported per step),
+/// and the overlapped/pipelined SpMV V3.
+pub const WORKLOAD_LABELS: [&str; 8] = [
+    "heat2d",
+    "heat2d-ovl",
+    "heat2d-pipe",
+    "stencil3d",
+    "stencil3d-ovl",
+    "stencil3d-pipe",
+    "spmv-v3-ovl",
+    "spmv-v3-pipe",
+];
 
 /// One measured-vs-predicted point for a workload on the exchange runtime
 /// (heat-2D, the 3D stencil, their overlapped variants, overlapped SpMV).
@@ -180,9 +191,12 @@ fn median_sample_seconds(steps: usize, mut sample: impl FnMut() -> f64) -> f64 {
 
 /// Measure the grid workloads (heat-2D and the 3D stencil, both on the
 /// shared exchange runtime) and predict each with the eqs. (19)–(22)
-/// models. One solver per workload through [`median_step_seconds`]; the
-/// median is compared against each sweep topology's prediction.
-fn workload_validation(cfg: &HarnessConfig, steps: usize) -> Vec<WorkloadPoint> {
+/// models — synchronous, split-phase overlapped, and multi-step pipelined
+/// (batches of `pipeline` steps, reported per step). One solver per
+/// workload/protocol through [`median_step_seconds`]; the median is
+/// compared against each sweep topology's prediction.
+fn workload_validation(cfg: &HarnessConfig, steps: usize, pipeline: usize) -> Vec<WorkloadPoint> {
+    let pipeline = pipeline.max(1);
     let t_all = host_pow2_threads();
     let hw_run = cfg.hw.with_threads_per_node(t_all);
     let mut topos = vec![(1usize, t_all)];
@@ -211,6 +225,10 @@ fn workload_validation(cfg: &HarnessConfig, steps: usize) -> Vec<WorkloadPoint> 
     let mut solver_ovl = Heat2dSolver::new(grid2, &f0);
     let measured_ovl =
         median_step_seconds(|| solver_ovl.step_overlapped_with(cfg.engine), steps);
+    let mut solver_pipe = Heat2dSolver::new(grid2, &f0);
+    let measured_pipe =
+        median_step_seconds(|| solver_pipe.run_pipelined_with(cfg.engine, pipeline), steps)
+            / pipeline as f64;
     for &(nodes, tpn) in &topos {
         let topo = Topology::new(nodes, tpn);
         let p = model::predict_heat2d(&grid2, &topo, &hw_run);
@@ -227,12 +245,22 @@ fn workload_validation(cfg: &HarnessConfig, steps: usize) -> Vec<WorkloadPoint> 
         let p_ovl = model::predict_heat2d_overlap(&grid2, &topo, &hw_run);
         out.push(WorkloadPoint {
             workload: "heat2d-ovl",
-            geometry,
+            geometry: geometry.clone(),
             cells: grid2.m_glob * grid2.n_glob,
             nodes,
             threads_per_node: tpn,
             measured: measured_ovl,
             predicted: p_ovl.t_step,
+        });
+        let p_pipe = model::predict_heat2d_pipelined(&grid2, &topo, &hw_run, pipeline);
+        out.push(WorkloadPoint {
+            workload: "heat2d-pipe",
+            geometry,
+            cells: grid2.m_glob * grid2.n_glob,
+            nodes,
+            threads_per_node: tpn,
+            measured: measured_pipe,
+            predicted: p_pipe.t_per_step,
         });
     }
 
@@ -260,6 +288,10 @@ fn workload_validation(cfg: &HarnessConfig, steps: usize) -> Vec<WorkloadPoint> 
     let mut solver_ovl = Stencil3dSolver::new(grid3, &f0);
     let measured_ovl =
         median_step_seconds(|| solver_ovl.step_overlapped_with(cfg.engine), steps);
+    let mut solver_pipe = Stencil3dSolver::new(grid3, &f0);
+    let measured_pipe =
+        median_step_seconds(|| solver_pipe.run_pipelined_with(cfg.engine, pipeline), steps)
+            / pipeline as f64;
     for &(nodes, tpn) in &topos {
         let topo = Topology::new(nodes, tpn);
         let p = model::predict_stencil3d(&grid3, &topo, &hw_run);
@@ -279,12 +311,22 @@ fn workload_validation(cfg: &HarnessConfig, steps: usize) -> Vec<WorkloadPoint> 
         let p_ovl = model::predict_stencil3d_overlap(&grid3, &topo, &hw_run);
         out.push(WorkloadPoint {
             workload: "stencil3d-ovl",
-            geometry,
+            geometry: geometry.clone(),
             cells: grid3.p_glob * grid3.m_glob * grid3.n_glob,
             nodes,
             threads_per_node: tpn,
             measured: measured_ovl,
             predicted: p_ovl.t_step,
+        });
+        let p_pipe = model::predict_stencil3d_pipelined(&grid3, &topo, &hw_run, pipeline);
+        out.push(WorkloadPoint {
+            workload: "stencil3d-pipe",
+            geometry,
+            cells: grid3.p_glob * grid3.m_glob * grid3.n_glob,
+            nodes,
+            threads_per_node: tpn,
+            measured: measured_pipe,
+            predicted: p_pipe.t_per_step,
         });
     }
     out
@@ -293,17 +335,24 @@ fn workload_validation(cfg: &HarnessConfig, steps: usize) -> Vec<WorkloadPoint> 
 /// Run the validation: all four variants on `cfg.engine` (the parallel
 /// worker pool unless `--engine seq` asks for the oracle) across the
 /// `sweep` layouts, each predicted with `cfg.hw`, plus the heat-2D and
-/// 3D-stencil workloads on the exchange runtime. `steps` wall-clock
-/// samples are taken per point (median reported); one extra warmup
-/// iteration primes the pool's workspaces.
-pub fn model_validation(cfg: &HarnessConfig, ws: &mut Workspace, steps: usize) -> ValidationReport {
+/// 3D-stencil workloads on the exchange runtime — each in synchronous,
+/// overlapped, and pipelined (`pipeline`-step batches) form. `steps`
+/// wall-clock samples are taken per point (median reported); one extra
+/// warmup iteration primes the pool's workspaces.
+pub fn model_validation(
+    cfg: &HarnessConfig,
+    ws: &mut Workspace,
+    steps: usize,
+    pipeline: usize,
+) -> ValidationReport {
     let steps = steps.max(3);
+    let pipeline = pipeline.max(1);
     let mut points = Vec::new();
     let mut spmv_overlap: Vec<WorkloadPoint> = Vec::new();
     let mut table = Table::new(
         format!(
-            "Model validation — {} engine wall-clock vs eqs. (5)–(18), hw={}, scale 1/{}, {} samples/point",
-            cfg.engine.name(), cfg.hw_label, cfg.scale_div, steps
+            "Model validation — {} engine wall-clock vs eqs. (5)–(18), hw={}, scale 1/{}, {} samples/point, pipeline depth {}",
+            cfg.engine.name(), cfg.hw_label, cfg.scale_div, steps, pipeline
         ),
         &[
             "Problem", "n", "Topology", "BLOCKSIZE", "Variant", "measured/iter",
@@ -379,10 +428,35 @@ pub fn model_validation(cfg: &HarnessConfig, ws: &mut Workspace, steps: usize) -
                 predicted,
             });
         }
+        // Multi-step pipelined V3: one `pipeline`-step batch per timed
+        // sample (a single pool dispatch), reported per step against the
+        // pipeline model.
+        {
+            let mut engine = SpmvEngine::new(cfg.engine);
+            let mut state = SpmvState::new(&m, bs, threads, &x0);
+            let measured = median_sample_seconds(steps, || {
+                let t0 = Instant::now();
+                engine.run_pipelined(pipeline, &mut state, &analysis);
+                let dt = t0.elapsed().as_secs_f64();
+                state.swap_xy();
+                dt
+            }) / pipeline as f64;
+            let predicted = model::predict_pipelined(Variant::V3, &inp, pipeline).t_per_step;
+            spmv_overlap.push(WorkloadPoint {
+                workload: "spmv-v3-pipe",
+                geometry: format!("{} n={}", tp.name(), m.n),
+                cells: m.n,
+                nodes,
+                threads_per_node: tpn,
+                measured,
+                predicted,
+            });
+        }
     }
     // Grid workloads on the exchange runtime: same measured-vs-predicted
-    // methodology, one row per sweep topology — synchronous and overlapped.
-    let mut workloads = workload_validation(cfg, steps);
+    // methodology, one row per sweep topology — synchronous, overlapped,
+    // and pipelined.
+    let mut workloads = workload_validation(cfg, steps, pipeline);
     workloads.extend(spmv_overlap);
     for p in &workloads {
         table.row(vec![
@@ -429,13 +503,15 @@ pub fn model_validation(cfg: &HarnessConfig, ws: &mut Workspace, steps: usize) -
         workload_accuracy.set(w, Value::Num(g));
     }
 
-    let json = report_json(cfg, steps, &points, &workloads, &accuracy, &workload_accuracy);
+    let json =
+        report_json(cfg, steps, pipeline, &points, &workloads, &accuracy, &workload_accuracy);
     ValidationReport { points, workloads, table, json }
 }
 
 fn report_json(
     cfg: &HarnessConfig,
     steps: usize,
+    pipeline: usize,
     points: &[ValidationPoint],
     workloads: &[WorkloadPoint],
     accuracy: &Value,
@@ -462,6 +538,7 @@ fn report_json(
     root.set("hw", cfg.hw.to_json());
     root.set("scale_div", Value::Num(cfg.scale_div as f64));
     root.set("samples_per_point", Value::Num(steps as f64));
+    root.set("pipeline_steps", Value::Num(pipeline as f64));
     root.set("results", Value::Arr(results));
     let mut wl = Vec::with_capacity(workloads.len());
     for p in workloads {
@@ -497,9 +574,17 @@ mod tests {
     #[test]
     fn workload_points_cover_both_grid_workloads() {
         let cfg = HarnessConfig::test_sized();
-        let points = workload_validation(&cfg, 3);
-        // Both grid workloads, each in synchronous and overlapped form.
-        for w in ["heat2d", "heat2d-ovl", "stencil3d", "stencil3d-ovl"] {
+        let points = workload_validation(&cfg, 3, 4);
+        // Both grid workloads, each in synchronous, overlapped, and
+        // pipelined form.
+        for w in [
+            "heat2d",
+            "heat2d-ovl",
+            "heat2d-pipe",
+            "stencil3d",
+            "stencil3d-ovl",
+            "stencil3d-pipe",
+        ] {
             assert!(points.iter().any(|p| p.workload == w), "missing {w}");
         }
         for p in &points {

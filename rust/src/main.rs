@@ -133,15 +133,18 @@ SUBCOMMANDS
   run         end-to-end 3D diffusion driver (v^l = M v^{l-1})
   heat        §8 2D heat solver: real numerics + Table-5-style prediction
               (--m 512 --nprocs 4 --mprocs 4 --steps 50; --overlap runs the
-              split-phase overlapped step protocol)
+              split-phase overlapped step protocol, --pipeline S the
+              multi-step pipelined protocol in S-step batches)
   stencil     3D 7-point-stencil diffusion on the same exchange runtime
               (--p 64 --pprocs 1 --mprocs 2 --nprocs 2 --steps 20;
-              --overlap as above)
+              --overlap / --pipeline S as above)
   validate [model]  measured-vs-predicted: all four variants plus the
-              split-phase overlapped paths (V3, heat2d, stencil3d) on the
-              parallel engine, wall-clock vs the calibrated eqs. (5)-(18)
-              and overlap models (--hw host by default; --steps S
-              samples/point; emits BENCH_model.json, --json PATH to move it)
+              split-phase overlapped and multi-step pipelined paths (V3,
+              heat2d, stencil3d) on the parallel engine, wall-clock vs the
+              calibrated eqs. (5)-(18), overlap, and pipeline models
+              (--hw host by default; --steps S samples/point; --pipeline P
+              batch depth, default 8; emits BENCH_model.json, --json PATH
+              to move it)
   validate pjrt     numeric equivalence: native kernel vs PJRT artifacts
 
 COMMON FLAGS
@@ -301,10 +304,11 @@ fn cmd_validate_model(args: &Args) -> Result<()> {
         cfg.engine = Engine::Parallel;
     }
     let steps = args.usize_flag("steps", 12)?;
+    let pipeline = args.usize_flag("pipeline", 8)?.max(1);
     let json_path: std::path::PathBuf = args.str_flag("json").unwrap_or("BENCH_model.json").into();
     args.finish()?;
     let mut ws = Workspace::new();
-    let report = harness::model_validation(&cfg, &mut ws, steps);
+    let report = harness::model_validation(&cfg, &mut ws, steps, pipeline);
     harness::emit(&cfg, "validate_model", &report.table);
     std::fs::write(&json_path, report.json.pretty())
         .map_err(|e| anyhow!("cannot write {}: {e}", json_path.display()))?;
@@ -408,7 +412,9 @@ fn cluster_shape(threads: usize) -> (usize, usize) {
 
 fn cmd_heat(args: &Args) -> Result<()> {
     use upcsim::heat2d::{seq_reference_step, simulate_heat_step, Heat2dSolver};
-    use upcsim::model::{predict_heat2d, predict_heat2d_overlap, HeatGrid};
+    use upcsim::model::{
+        predict_heat2d, predict_heat2d_overlap, predict_heat2d_pipelined, HeatGrid,
+    };
     use upcsim::pgas::Topology;
     use upcsim::sim::SimParams;
     let mg = args.usize_flag("m", 512)?;
@@ -417,9 +423,14 @@ fn cmd_heat(args: &Args) -> Result<()> {
     let np = args.usize_flag("nprocs", 4)?;
     let steps = args.usize_flag("steps", 50)?;
     let overlap = args.bool_flag("overlap");
+    let pipeline = args.usize_flag("pipeline", 0)?;
     let engine = parse_engine(args)?;
     let (hw, hw_label) = resolve_hw(args, HwSource::Abel)?;
     args.finish()?;
+    anyhow::ensure!(
+        !(overlap && pipeline > 0),
+        "--overlap and --pipeline are mutually exclusive step protocols"
+    );
     let grid = HeatGrid::new(mg, ng, mp, np);
     let threads = grid.threads();
     let (nodes, tpn) = cluster_shape(threads);
@@ -434,26 +445,41 @@ fn cmd_heat(args: &Args) -> Result<()> {
     let mut solver = Heat2dSolver::new(grid, &f0);
     let mut reference = f0.clone();
     let t0 = std::time::Instant::now();
-    for _ in 0..steps {
-        if overlap {
-            solver.step_overlapped_with(engine);
-        } else {
-            solver.step_with(engine);
+    if pipeline > 0 {
+        // Multi-step pipelined batches: one pool dispatch per batch.
+        let mut left = steps;
+        while left > 0 {
+            let batch = left.min(pipeline);
+            solver.run_pipelined_with(engine, batch);
+            left -= batch;
         }
-        reference = seq_reference_step(mg, ng, &reference);
+    } else {
+        for _ in 0..steps {
+            if overlap {
+                solver.step_overlapped_with(engine);
+            } else {
+                solver.step_with(engine);
+            }
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
+    for _ in 0..steps {
+        reference = seq_reference_step(mg, ng, &reference);
+    }
     let err = solver
         .to_global()
         .iter()
         .zip(&reference)
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f64, f64::max);
-    println!(
-        "{steps} {}steps on {mg}x{ng} over {mp}x{np} threads in {}",
-        if overlap { "split-phase overlapped " } else { "" },
-        fmt::secs(wall)
-    );
+    let protocol = if pipeline > 0 {
+        format!("pipelined (depth {pipeline}) ")
+    } else if overlap {
+        "split-phase overlapped ".to_string()
+    } else {
+        String::new()
+    };
+    println!("{steps} {protocol}steps on {mg}x{ng} over {mp}x{np} threads in {}", fmt::secs(wall));
     println!("max |parallel − sequential| = {err:.3e}");
     anyhow::ensure!(err < 1e-9, "halo exchange diverged");
     println!("halo payload: {}", fmt::bytes(solver.inter_thread_bytes as f64));
@@ -473,11 +499,21 @@ fn cmd_heat(args: &Args) -> Result<()> {
         fmt::secs(ovl.t_step_sync * 1000.0),
         ovl.speedup(),
     );
+    let depth = if pipeline > 0 { pipeline } else { 8 };
+    let pipe = predict_heat2d_pipelined(&grid, &topo, &hw, depth);
+    println!(
+        "pipeline model (depth {depth}): {} per step steady-state ({:.2}x vs sync, {:.2}x vs overlapped)",
+        fmt::secs(pipe.t_per_step),
+        pipe.speedup_vs_sync(),
+        pipe.speedup_vs_overlapped(),
+    );
     Ok(())
 }
 
 fn cmd_stencil(args: &Args) -> Result<()> {
-    use upcsim::model::{predict_stencil3d, predict_stencil3d_overlap};
+    use upcsim::model::{
+        predict_stencil3d, predict_stencil3d_overlap, predict_stencil3d_pipelined,
+    };
     use upcsim::pgas::Topology;
     use upcsim::stencil3d::{seq_reference_step3d, Stencil3dGrid, Stencil3dSolver};
     let pg = args.usize_flag("p", 64)?;
@@ -488,12 +524,17 @@ fn cmd_stencil(args: &Args) -> Result<()> {
     let np = args.usize_flag("nprocs", 2)?;
     let steps = args.usize_flag("steps", 20)?;
     let overlap = args.bool_flag("overlap");
+    let pipeline = args.usize_flag("pipeline", 0)?;
     let engine = parse_engine(args)?;
     let (hw, hw_label) = resolve_hw(args, HwSource::Abel)?;
     args.finish()?;
     anyhow::ensure!(
         pg % pp == 0 && mg % mp == 0 && ng % np == 0,
         "box {pg}x{mg}x{ng} does not partition over {pp}x{mp}x{np} threads"
+    );
+    anyhow::ensure!(
+        !(overlap && pipeline > 0),
+        "--overlap and --pipeline are mutually exclusive step protocols"
     );
     let grid = Stencil3dGrid::new(pg, mg, ng, pp, mp, np);
     let threads = grid.threads();
@@ -507,24 +548,41 @@ fn cmd_stencil(args: &Args) -> Result<()> {
     let mut solver = Stencil3dSolver::new(grid, &f0);
     let mut reference = f0.clone();
     let t0 = std::time::Instant::now();
-    for _ in 0..steps {
-        if overlap {
-            solver.step_overlapped_with(engine);
-        } else {
-            solver.step_with(engine);
+    if pipeline > 0 {
+        let mut left = steps;
+        while left > 0 {
+            let batch = left.min(pipeline);
+            solver.run_pipelined_with(engine, batch);
+            left -= batch;
         }
-        reference = seq_reference_step3d(pg, mg, ng, &reference);
+    } else {
+        for _ in 0..steps {
+            if overlap {
+                solver.step_overlapped_with(engine);
+            } else {
+                solver.step_with(engine);
+            }
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
+    for _ in 0..steps {
+        reference = seq_reference_step3d(pg, mg, ng, &reference);
+    }
     let err = solver
         .to_global()
         .iter()
         .zip(&reference)
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f64, f64::max);
+    let protocol = if pipeline > 0 {
+        format!("pipelined (depth {pipeline}) ")
+    } else if overlap {
+        "split-phase overlapped ".to_string()
+    } else {
+        String::new()
+    };
     println!(
-        "{steps} {}steps on {pg}x{mg}x{ng} over {pp}x{mp}x{np} threads ({} engine) in {}",
-        if overlap { "split-phase overlapped " } else { "" },
+        "{steps} {protocol}steps on {pg}x{mg}x{ng} over {pp}x{mp}x{np} threads ({} engine) in {}",
         engine.name(),
         fmt::secs(wall)
     );
@@ -548,6 +606,14 @@ fn cmd_stencil(args: &Args) -> Result<()> {
         fmt::secs(ovl.t_step * 1000.0),
         fmt::secs(ovl.t_step_sync * 1000.0),
         ovl.speedup(),
+    );
+    let depth = if pipeline > 0 { pipeline } else { 8 };
+    let pipe = predict_stencil3d_pipelined(&grid, &topo, &hw, depth);
+    println!(
+        "pipeline model (depth {depth}): {} per step steady-state ({:.2}x vs sync, {:.2}x vs overlapped)",
+        fmt::secs(pipe.t_per_step),
+        pipe.speedup_vs_sync(),
+        pipe.speedup_vs_overlapped(),
     );
     Ok(())
 }

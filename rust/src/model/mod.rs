@@ -9,12 +9,17 @@
 
 mod heat;
 mod overlap;
+mod pipeline;
 mod spmv;
 mod stencil;
 
 pub use heat::{predict_heat2d, Heat2dPrediction, HeatGrid};
 pub use overlap::{
     predict_heat2d_overlap, predict_stencil3d_overlap, predict_v3_overlap, OverlapPrediction,
+};
+pub use pipeline::{
+    predict_heat2d_pipelined, predict_stencil3d_pipelined, predict_v3_pipelined,
+    PipelinePrediction,
 };
 pub use stencil::{predict_stencil3d, Stencil3dPrediction};
 pub use spmv::{
@@ -47,4 +52,16 @@ pub fn predict_overlapped(variant: Variant, inp: &SpmvInputs) -> OverlapPredicti
         "the split-phase overlap model exists for UPCv3 only"
     );
     predict_v3_overlap(inp)
+}
+
+/// Dispatch to the per-variant pipeline model (a batch of `steps` pipelined
+/// iterations). As with the overlap model, only UPCv3 has a compiled
+/// exchange to pipeline.
+pub fn predict_pipelined(variant: Variant, inp: &SpmvInputs, steps: usize) -> PipelinePrediction {
+    assert_eq!(
+        variant,
+        Variant::V3,
+        "the multi-step pipeline model exists for UPCv3 only"
+    );
+    predict_v3_pipelined(inp, steps)
 }

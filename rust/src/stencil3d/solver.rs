@@ -171,6 +171,33 @@ impl Stencil3dSolver {
         std::mem::swap(&mut self.phi, &mut self.phin);
     }
 
+    /// Run `steps` split-phase time steps in **one** pool dispatch — the
+    /// multi-step pipelined protocol, with the same interior/boundary
+    /// kernels as [`Self::step_overlapped_with`] per epoch and the
+    /// consumed-epoch ack protocol bounding fast threads to 2 epochs ahead.
+    /// Bitwise identical to `steps` sequential steps; the driver leaves the
+    /// final field under `phi`.
+    pub fn run_pipelined_with(&mut self, engine: Engine, steps: usize) {
+        let grid = self.grid;
+        let (_, m, n) = grid.subdomain();
+        let mn = m * n;
+        let split = &self.split;
+        self.runtime.run_pipelined(
+            engine,
+            steps,
+            &mut self.phi,
+            &mut self.phin,
+            |_t, phi, phin| {
+                jacobi_blocks3d(mn, n, &split.interior, phi, phin);
+            },
+            |t, phi, phin| {
+                jacobi_blocks3d(mn, n, &split.boundary, phi, phin);
+                Self::fixed_boundary_copy(grid, t, phi, phin);
+            },
+        );
+        self.inter_thread_bytes += steps as u64 * self.runtime.payload_bytes();
+    }
+
     /// 7-point Jacobi for one thread: average of the six face neighbours on
     /// the interior, plus the fixed global-boundary copy-through.
     fn jacobi_update(grid: Stencil3dGrid, t: usize, phi: &[f64], phin: &mut [f64]) {
@@ -390,6 +417,33 @@ mod tests {
             );
             assert_eq!(sync.inter_thread_bytes, ovl_par.inter_thread_bytes, "step {step}");
         }
+    }
+
+    #[test]
+    fn pipelined_batch_bitwise_identical() {
+        let grid = Stencil3dGrid::new(8, 12, 16, 2, 3, 4);
+        let f0 = random_field(8 * 12 * 16, 29);
+        let mut sync = Stencil3dSolver::new(grid, &f0);
+        let mut pipe_seq = Stencil3dSolver::new(grid, &f0);
+        let mut pipe_par = Stencil3dSolver::new(grid, &f0);
+        for (round, steps) in [(0usize, 2usize), (1, 1), (2, 3)] {
+            for _ in 0..steps {
+                sync.step_with(Engine::Sequential);
+            }
+            pipe_seq.run_pipelined_with(Engine::Sequential, steps);
+            pipe_par.run_pipelined_with(Engine::Parallel, steps);
+            let want = sync.to_global();
+            assert!(
+                want.iter().zip(&pipe_seq.to_global()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "seq pipeline diverges in round {round}"
+            );
+            assert!(
+                want.iter().zip(&pipe_par.to_global()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "par pipeline diverges in round {round}"
+            );
+            assert_eq!(sync.inter_thread_bytes, pipe_par.inter_thread_bytes, "round {round}");
+        }
+        assert!(pipe_par.runtime().max_sender_lead() <= 2);
     }
 
     #[test]

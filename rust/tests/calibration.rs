@@ -64,7 +64,7 @@ fn model_validation_tiny_mesh_covers_all_variants() {
     cfg.hw = synthetic_host_hw();
     cfg.hw_label = "synthetic".to_string();
     let mut ws = Workspace::new();
-    let report = harness::model_validation(&cfg, &mut ws, 3);
+    let report = harness::model_validation(&cfg, &mut ws, 3, 2);
     assert!(!report.points.is_empty());
     for variant in Variant::ALL {
         let points: Vec<_> = report.points.iter().filter(|p| p.variant == variant).collect();
@@ -89,6 +89,17 @@ fn model_validation_tiny_mesh_covers_all_variants() {
         let g = acc.get(variant.name()).and_then(|v| v.as_f64()).unwrap();
         assert!(g.is_finite() && g > 0.0, "{}: {g}", variant.name());
     }
-    // The table mirrors the points (plus 4 accuracy summary rows).
-    assert_eq!(report.table.rows.len(), report.points.len() + 4);
+    // The table mirrors the SpMV points and workload rows, plus the 4
+    // per-variant and per-workload-label accuracy summary rows.
+    assert_eq!(
+        report.table.rows.len(),
+        report.points.len() + report.workloads.len() + 4 + harness::WORKLOAD_LABELS.len()
+    );
+    // Every workload label (sync, overlapped, pipelined) is represented.
+    for w in harness::WORKLOAD_LABELS {
+        assert!(
+            report.workloads.iter().any(|p| p.workload == w),
+            "missing workload rows for {w}"
+        );
+    }
 }

@@ -1,0 +1,334 @@
+//! Multi-step pipeline equivalence: a `run_pipelined` batch of S steps must
+//! be **bitwise identical** — fields/vectors *and* traffic counters — to S
+//! synchronous steps, on all three workloads (heat-2D, 3D stencil, SpMV
+//! V3), on both engines, across edge layouts. Plus the protocol
+//! properties: one pool dispatch per batch, the consumed-epoch ack bound
+//! (no sender ever observed more than 2 epochs ahead of a receiver that
+//! just consumed), and mixed-protocol equivalence when synchronous,
+//! overlapped and pipelined steps interleave on one runtime.
+
+use upcsim::comm::{Analysis, StridedBlock, StridedPlan};
+use upcsim::engine::{Engine, ExchangeRuntime, SpmvEngine};
+use upcsim::heat2d::Heat2dSolver;
+use upcsim::matrix::Ellpack;
+use upcsim::model::HeatGrid;
+use upcsim::pgas::{Layout, Topology};
+use upcsim::spmv::{run_variant, SpmvState, Variant};
+use upcsim::stencil3d::{Stencil3dGrid, Stencil3dSolver};
+use upcsim::testing::check_prop;
+use upcsim::util::Rng;
+
+fn random_field(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.f64_in(0.0, 100.0)).collect()
+}
+
+/// Drive a heat-2D solver `steps` steps with a synchronous oracle, a
+/// sequential pipelined batch, and a parallel pipelined batch; assert
+/// bitwise equality of fields and byte counters.
+fn check_heat2d(mg: usize, ng: usize, mp: usize, np: usize, steps: usize, seed: u64) {
+    let grid = HeatGrid::new(mg, ng, mp, np);
+    let f0 = random_field(mg * ng, seed);
+    let mut sync = Heat2dSolver::new(grid, &f0);
+    for _ in 0..steps {
+        sync.step_with(Engine::Sequential);
+    }
+    let want = sync.to_global();
+    for engine in Engine::ALL {
+        let mut pipe = Heat2dSolver::new(grid, &f0);
+        pipe.run_pipelined_with(engine, steps);
+        let got = pipe.to_global();
+        assert!(
+            want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{mg}x{ng}/{mp}x{np} S={steps}: pipelined {} diverges",
+            engine.name()
+        );
+        assert_eq!(sync.inter_thread_bytes, pipe.inter_thread_bytes, "{}", engine.name());
+        assert!(pipe.runtime().max_sender_lead() <= 2);
+    }
+}
+
+#[test]
+fn heat2d_pipeline_bitwise_across_layouts() {
+    check_heat2d(24, 60, 3, 4, 9, 1); // non-square, mixed halos
+    check_heat2d(16, 60, 1, 6, 8, 2); // 1×N: column halos only
+    check_heat2d(60, 16, 6, 1, 8, 3); // N×1: row halos only
+    check_heat2d(24, 24, 2, 2, 7, 4); // 2×2
+    check_heat2d(16, 16, 1, 1, 5, 5); // single thread, no halos
+    check_heat2d(4, 4, 4, 4, 6, 6); // 1-cell interiors (all boundary)
+}
+
+/// Property: random small layouts and batch sizes stay bitwise locked on
+/// the parallel engine.
+#[test]
+fn prop_heat2d_pipeline_equivalence() {
+    check_prop(
+        "heat2d-pipeline",
+        24,
+        |r| {
+            let mp = r.usize_in(1, 3);
+            let np = r.usize_in(1, 3);
+            let mg = mp * r.usize_in(3, 9);
+            let ng = np * r.usize_in(3, 9);
+            let steps = r.usize_in(1, 6);
+            (mg, ng, mp, np, steps, r.usize_in(0, 1_000_000) as u64)
+        },
+        |&(mg, ng, mp, np, steps, seed)| {
+            let grid = HeatGrid::new(mg, ng, mp, np);
+            let f0 = random_field(mg * ng, seed);
+            let mut sync = Heat2dSolver::new(grid, &f0);
+            for _ in 0..steps {
+                sync.step_with(Engine::Sequential);
+            }
+            let mut pipe = Heat2dSolver::new(grid, &f0);
+            pipe.run_pipelined_with(Engine::Parallel, steps);
+            let want = sync.to_global();
+            let got = pipe.to_global();
+            if !want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()) {
+                return Err(format!("{mg}x{ng}/{mp}x{np} S={steps} diverged"));
+            }
+            if sync.inter_thread_bytes != pipe.inter_thread_bytes {
+                return Err("byte counters diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+fn check_stencil3d(
+    dims: (usize, usize, usize),
+    procs: (usize, usize, usize),
+    steps: usize,
+    seed: u64,
+) {
+    let grid = Stencil3dGrid::new(dims.0, dims.1, dims.2, procs.0, procs.1, procs.2);
+    let f0 = random_field(dims.0 * dims.1 * dims.2, seed);
+    let mut sync = Stencil3dSolver::new(grid, &f0);
+    for _ in 0..steps {
+        sync.step_with(Engine::Sequential);
+    }
+    let want = sync.to_global();
+    for engine in Engine::ALL {
+        let mut pipe = Stencil3dSolver::new(grid, &f0);
+        pipe.run_pipelined_with(engine, steps);
+        let got = pipe.to_global();
+        assert!(
+            want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{dims:?}/{procs:?} S={steps}: pipelined {} diverges",
+            engine.name()
+        );
+        assert_eq!(sync.inter_thread_bytes, pipe.inter_thread_bytes, "{}", engine.name());
+        assert!(pipe.runtime().max_sender_lead() <= 2);
+    }
+}
+
+#[test]
+fn stencil3d_pipeline_bitwise_across_layouts() {
+    check_stencil3d((8, 12, 16), (2, 3, 4), 6, 11);
+    check_stencil3d((4, 4, 16), (1, 1, 8), 7, 12); // single-axis split
+    check_stencil3d((16, 4, 4), (8, 1, 1), 7, 13);
+    check_stencil3d((3, 3, 3), (3, 3, 3), 6, 14); // 1-cell interiors
+    check_stencil3d((6, 6, 6), (1, 1, 1), 4, 15); // single thread
+}
+
+/// SpMV V3: a pipelined batch must reproduce S oracle iterations (each
+/// followed by the x/y swap) bitwise — final vector, byte and transfer
+/// counts — on both engines, across layouts.
+#[test]
+fn spmv_v3_pipeline_bitwise() {
+    let mesh = upcsim::mesh::tiny_mesh();
+    let m = Ellpack::diffusion_from_mesh(&mesh);
+    let x0 = m.initial_vector(23);
+    for (bs, nodes, tpn, steps) in
+        [(128usize, 2usize, 4usize, 5usize), (64, 1, 4, 4), (256, 1, 2, 3), (128, 1, 8, 1)]
+    {
+        let threads = nodes * tpn;
+        let layout = Layout::new(m.n, bs, threads);
+        let analysis =
+            Analysis::build(&m.j, m.r_nz, layout, Topology::new(nodes, tpn), usize::MAX);
+
+        // Oracle: S sequential V3 iterations with the §6.1 swap.
+        let mut oracle_state = SpmvState::new(&m, bs, threads, &x0);
+        let mut oracle_bytes = 0u64;
+        let mut oracle_transfers = 0u64;
+        for _ in 0..steps {
+            let out = run_variant(Variant::V3, &mut oracle_state, Some(&analysis));
+            oracle_bytes += out.inter_thread_bytes;
+            oracle_transfers += out.transfers;
+            oracle_state.swap_xy();
+        }
+
+        for engine in Engine::ALL {
+            let mut eng = SpmvEngine::new(engine);
+            let mut state = SpmvState::new(&m, bs, threads, &x0);
+            let got = eng.run_pipelined(steps, &mut state, &analysis);
+            state.swap_xy(); // complete the last pointer swap, like the oracle
+            assert_eq!(
+                state.x_global(),
+                oracle_state.x_global(),
+                "{} bs={bs} S={steps}: final vector diverges",
+                engine.name()
+            );
+            assert_eq!(got.inter_thread_bytes, oracle_bytes, "{}", engine.name());
+            assert_eq!(got.transfers, oracle_transfers, "{}", engine.name());
+            // The V3 ack gate held the depth-2 bound too.
+            assert!(eng.max_sender_lead() <= 2, "lead {}", eng.max_sender_lead());
+        }
+    }
+}
+
+/// Chained pipelined batches interleaved with single-step protocols stay
+/// locked to the oracle over a long run (arena parity, flags and acks stay
+/// coherent across protocol switches).
+#[test]
+fn spmv_v3_pipeline_time_loop_mixed() {
+    let m = Ellpack::random(600, 5, 77);
+    let x0 = m.initial_vector(5);
+    let (bs, threads) = (32usize, 6usize);
+    let layout = Layout::new(m.n, bs, threads);
+    let analysis =
+        Analysis::build(&m.j, m.r_nz, layout, Topology::single_node(threads), usize::MAX);
+    let mut sync_eng = SpmvEngine::new(Engine::Parallel);
+    let mut sync_state = SpmvState::new(&m, bs, threads, &x0);
+    let mut mix_eng = SpmvEngine::new(Engine::Parallel);
+    let mut mix_state = SpmvState::new(&m, bs, threads, &x0);
+    // (protocol, steps): sync and overlapped are single steps.
+    let schedule: &[(&str, usize)] =
+        &[("pipe", 3), ("sync", 1), ("pipe", 2), ("ovl", 1), ("pipe", 4), ("sync", 1)];
+    for &(proto, steps) in schedule {
+        match proto {
+            "sync" => {
+                mix_eng.run(Variant::V3, &mut mix_state, Some(&analysis));
+            }
+            "ovl" => {
+                mix_eng.run_overlapped(&mut mix_state, &analysis);
+            }
+            _ => {
+                mix_eng.run_pipelined(steps, &mut mix_state, &analysis);
+            }
+        }
+        mix_state.swap_xy();
+        for _ in 0..steps {
+            sync_eng.run(Variant::V3, &mut sync_state, Some(&analysis));
+            sync_state.swap_xy();
+        }
+        assert_eq!(
+            sync_state.x_global(),
+            mix_state.x_global(),
+            "mixed run diverges after {proto} x{steps}"
+        );
+    }
+    assert!(mix_eng.max_sender_lead() <= 2, "lead {}", mix_eng.max_sender_lead());
+}
+
+/// Depth-bound under an artificially slow receiver: thread 0's boundary
+/// kernel sleeps every epoch, so the other threads race ahead — the ack
+/// protocol must cap the observed sender lead at 2 epochs, and the batch
+/// must still be bitwise correct.
+#[test]
+fn pipeline_depth_bounded_with_slow_receiver() {
+    // A 4-thread ring: t sends its last owned cell right, first owned cell
+    // left — every thread has two senders and two receivers.
+    let threads = 4usize;
+    let n = 6usize; // 4 owned cells + 2 ghosts per thread
+    let mut copies = Vec::new();
+    for t in 0..threads {
+        let right = (t + 1) % threads;
+        let left = (t + threads - 1) % threads;
+        copies.push((t, right, StridedBlock::row(4, 1), StridedBlock::row(0, 1)));
+        copies.push((t, left, StridedBlock::row(1, 1), StridedBlock::row(5, 1)));
+    }
+    let plan = StridedPlan::from_msgs(threads, &copies);
+    let steps = 12usize;
+
+    let run = |slow: bool| -> (Vec<Vec<f64>>, u64) {
+        let mut rt = ExchangeRuntime::new(plan.clone());
+        let mut fields: Vec<Vec<f64>> = (0..threads)
+            .map(|t| (0..n).map(|i| (t * 10 + i) as f64).collect())
+            .collect();
+        let mut out = fields.clone();
+        rt.run_pipelined(
+            Engine::Parallel,
+            steps,
+            &mut fields,
+            &mut out,
+            |_t, field, out| {
+                for i in 2..4 {
+                    out[i] = 0.5 * (field[i - 1] + field[i + 1]);
+                }
+            },
+            move |t, field, out| {
+                if slow && t == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                for i in [1usize, 4] {
+                    out[i] = 0.5 * (field[i - 1] + field[i + 1]);
+                }
+            },
+        );
+        let owned = fields.iter().map(|f| f[1..5].to_vec()).collect();
+        (owned, rt.max_sender_lead())
+    };
+
+    let (fast_fields, fast_lead) = run(false);
+    let (slow_fields, slow_lead) = run(true);
+    assert_eq!(fast_fields, slow_fields, "a slow receiver must not change results");
+    assert!(fast_lead <= 2, "lead {fast_lead} > 2");
+    assert!(slow_lead <= 2, "lead {slow_lead} > 2 with a slow receiver");
+}
+
+/// The pipelined parallel batch costs exactly one pool dispatch, and the
+/// sequential oracle costs none.
+#[test]
+fn pipeline_batch_dispatch_accounting() {
+    let grid = HeatGrid::new(24, 24, 2, 2);
+    let f0 = random_field(24 * 24, 8);
+    let mut solver = Heat2dSolver::new(grid, &f0);
+    assert_eq!(solver.runtime().dispatches(), 0);
+    solver.run_pipelined_with(Engine::Sequential, 5);
+    assert_eq!(solver.runtime().dispatches(), 0, "the oracle never dispatches");
+    solver.run_pipelined_with(Engine::Parallel, 7);
+    assert_eq!(solver.runtime().dispatches(), 1, "one dispatch per batch");
+    solver.run_pipelined_with(Engine::Parallel, 3);
+    assert_eq!(solver.runtime().dispatches(), 2);
+    // Single-step protocols cost one dispatch per step, for contrast.
+    solver.step_with(Engine::Parallel);
+    solver.step_overlapped_with(Engine::Parallel);
+    assert_eq!(solver.runtime().dispatches(), 4);
+}
+
+/// Mixed protocols on the grid solvers: interleave synchronous, overlapped
+/// and pipelined steps (both engines) against a pure-synchronous oracle.
+#[test]
+fn heat2d_mixed_protocols_bitwise() {
+    let grid = HeatGrid::new(24, 36, 2, 3);
+    let f0 = random_field(24 * 36, 21);
+    let mut oracle = Heat2dSolver::new(grid, &f0);
+    let mut mixed = Heat2dSolver::new(grid, &f0);
+    let schedule: &[(&str, Engine, usize)] = &[
+        ("sync", Engine::Parallel, 1),
+        ("pipe", Engine::Parallel, 3),
+        ("ovl", Engine::Sequential, 1),
+        ("pipe", Engine::Sequential, 2),
+        ("ovl", Engine::Parallel, 1),
+        ("pipe", Engine::Parallel, 4),
+        ("sync", Engine::Sequential, 1),
+    ];
+    for &(proto, engine, steps) in schedule {
+        match proto {
+            "sync" => mixed.step_with(engine),
+            "ovl" => mixed.step_overlapped_with(engine),
+            _ => mixed.run_pipelined_with(engine, steps),
+        }
+        for _ in 0..steps {
+            oracle.step_with(Engine::Sequential);
+        }
+        let want = oracle.to_global();
+        let got = mixed.to_global();
+        assert!(
+            want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "mixed heat2d diverges after {proto} x{steps}"
+        );
+        assert_eq!(oracle.inter_thread_bytes, mixed.inter_thread_bytes);
+    }
+}
