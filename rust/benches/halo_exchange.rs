@@ -23,6 +23,13 @@
 //!   same workloads/layouts — the pipelined value amortizes one 8-step
 //!   batch dispatch (the consumed-epoch ack protocol) over its steps, with
 //!   per-layout speedups vs both single-step protocols.
+//!
+//! And `BENCH_chaos.json`:
+//!
+//! * the cost of the deadline-aware wait ladder: heat-2D pipelined per-step
+//!   median with the default wait deadline armed vs deadlines disabled
+//!   (infinite waits, the pre-fault-tolerance behaviour), with the
+//!   `overhead_pct` headline against a 3% budget.
 
 use upcsim::benchlib::{BenchConfig, Bencher};
 use upcsim::comm::Analysis;
@@ -488,6 +495,49 @@ fn main() {
         match std::fs::write(path, root.pretty()) {
             Ok(()) => println!("[pipeline medians saved to {path}]"),
             Err(e) => eprintln!("warning: cannot write {path}: {e}"),
+        }
+    }
+    // --- BENCH_chaos.json -------------------------------------------------
+    // What the deadline-aware wait ladder costs on the fault-free fast
+    // path: the same pipelined heat-2D batch with the default deadline
+    // armed vs deadlines disabled (infinite waits). Budget: <= 3%.
+    {
+        let mut armed = Heat2dSolver::new(grid, &f0);
+        armed.run_pipelined_with(Engine::Parallel, PIPE);
+        let ra = b
+            .bench("heat2d/pipeline-deadline/2x2", || {
+                armed.run_pipelined_with(Engine::Parallel, PIPE);
+                std::hint::black_box(&armed.inter_thread_bytes);
+            })
+            .map(|r| r.time.p50 / PIPE as f64);
+        let mut bare = Heat2dSolver::new(grid, &f0);
+        bare.runtime_mut().set_wait_deadline(None);
+        bare.run_pipelined_with(Engine::Parallel, PIPE);
+        let rb = b
+            .bench("heat2d/pipeline-no-deadline/2x2", || {
+                bare.run_pipelined_with(Engine::Parallel, PIPE);
+                std::hint::black_box(&bare.inter_thread_bytes);
+            })
+            .map(|r| r.time.p50 / PIPE as f64);
+        if let (Some(with_deadline), Some(without)) = (ra, rb) {
+            let overhead_pct = (with_deadline / without - 1.0) * 100.0;
+            let mut root = Value::obj();
+            root.set("bench", Value::Str("halo_exchange/chaos".to_string()));
+            root.set("workload", Value::Str(format!("heat2d/pipeline/{mg}x{ng} over 2x2")));
+            root.set("pipeline_steps", Value::Num(PIPE as f64));
+            root.set(
+                "deadline_median_ns_per_step",
+                Value::Num((with_deadline * 1e9).round()),
+            );
+            root.set("no_deadline_median_ns_per_step", Value::Num((without * 1e9).round()));
+            root.set("overhead_pct", Value::Num(overhead_pct));
+            root.set("overhead_budget_pct", Value::Num(3.0));
+            println!("\nheat2d: deadline-aware waits overhead = {overhead_pct:.2}%");
+            let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_chaos.json");
+            match std::fs::write(path, root.pretty()) {
+                Ok(()) => println!("[chaos overhead saved to {path}]"),
+                Err(e) => eprintln!("warning: cannot write {path}: {e}"),
+            }
         }
     }
     b.finish();

@@ -296,6 +296,31 @@ impl StridedPlan {
         (self.total * SIZEOF_DOUBLE) as u64
     }
 
+    /// Structural FNV-1a fingerprint: thread count plus every message's
+    /// endpoints and src/dst block geometry, in arena order. Stable across
+    /// runs (no RNG, no addresses) — the counterpart of
+    /// [`CommPlan::fingerprint`](crate::comm::CommPlan::fingerprint) for the
+    /// checkpoint/restart layer.
+    pub fn fingerprint(&self) -> u64 {
+        fn write_block(h: &mut crate::util::Fnv64, b: &StridedBlock) {
+            h.write_usize(b.offset);
+            h.write_usize(b.rows);
+            h.write_usize(b.row_stride);
+            h.write_usize(b.cols);
+            h.write_usize(b.col_stride);
+        }
+        let mut h = crate::util::Fnv64::new();
+        h.write_usize(self.threads);
+        h.write_usize(self.msgs.len());
+        for m in &self.msgs {
+            h.write_u64(m.sender as u64);
+            h.write_u64(m.receiver as u64);
+            write_block(&mut h, &m.src);
+            write_block(&mut h, &m.dst);
+        }
+        h.finish()
+    }
+
     /// Consistency check: arena tiling, offset tables, block bounds against
     /// per-thread field lengths, and the send-side permutation.
     pub fn validate(&self, field_len: &dyn Fn(usize) -> usize) -> Result<(), String> {
@@ -569,6 +594,25 @@ impl ExchangePlan {
             ExchangePlan::Gather(p) => p.validate(),
             ExchangePlan::Strided(p) => p.validate(field_len),
         }
+    }
+
+    /// Structural FNV-1a fingerprint: a form tag followed by the form's own
+    /// fingerprint, so a gather plan and a strided plan can never collide by
+    /// construction. Stable across runs and processes; used by the
+    /// checkpoint layer to refuse restoring onto a different plan.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        match self {
+            ExchangePlan::Gather(p) => {
+                h.write_u8(1);
+                h.write_u64(p.fingerprint());
+            }
+            ExchangePlan::Strided(p) => {
+                h.write_u8(2);
+                h.write_u64(p.fingerprint());
+            }
+        }
+        h.finish()
     }
 
     pub fn as_strided(&self) -> Option<&StridedPlan> {

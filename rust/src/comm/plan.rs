@@ -199,6 +199,30 @@ impl CommPlan {
         (self.recv_off[t + 1] - self.recv_off[t]) as usize
     }
 
+    /// Structural FNV-1a fingerprint of the plan: thread count plus every
+    /// message's endpoints and index lists, in arena order. RNG-free and
+    /// address-free, so two plans compiled from the same needs hash equal
+    /// across runs and processes — the checkpoint/restart layer uses this
+    /// to refuse restoring a snapshot onto a different decomposition.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        h.write_usize(self.threads);
+        h.write_usize(self.msgs.len());
+        for m in &self.msgs {
+            h.write_u64(m.sender as u64);
+            h.write_u64(m.receiver as u64);
+            let (s, e) = (m.start as usize, m.end as usize);
+            h.write_usize(e - s);
+            for &idx in &self.indices[s..e] {
+                h.write_u64(idx as u64);
+            }
+            for &off in &self.local_src[s..e] {
+                h.write_u64(off as u64);
+            }
+        }
+        h.finish()
+    }
+
     /// Consistency check: descriptors partition the arena, lists are sorted
     /// and unique, no self-messages, and the send side is an exact
     /// permutation of the receive side.
@@ -349,6 +373,25 @@ mod tests {
             cursor = m.range().end;
         }
         assert_eq!(cursor, plan.total_values());
+    }
+
+    #[test]
+    fn fingerprint_is_structural() {
+        let needs = vec![
+            vec![(1u32, 2u32), (1, 3), (2, 4)],
+            vec![],
+            vec![(0, 0), (1, 8)],
+        ];
+        let a = CommPlan::from_recv_needs(&layout(), &needs);
+        let b = CommPlan::from_recv_needs(&layout(), &needs);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same needs must hash equal");
+        let shrunk = vec![
+            vec![(1u32, 2u32), (1, 3)],
+            vec![],
+            vec![(0, 0), (1, 8)],
+        ];
+        let c = CommPlan::from_recv_needs(&layout(), &shrunk);
+        assert_ne!(a.fingerprint(), c.fingerprint(), "different needs must hash apart");
     }
 
     #[test]

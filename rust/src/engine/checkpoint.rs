@@ -1,0 +1,78 @@
+//! Checkpoint/restart for the pipelined solver drivers.
+//!
+//! A checkpoint is an in-memory snapshot of everything a solver needs to
+//! resume a killed pipelined batch bitwise-identically: both field buffers
+//! (current *and* scratch — the Jacobi update reads one and writes the
+//! other, and fixed-boundary points are copied through, so both halves
+//! carry state), the step count, the byte counter, and a structural
+//! fingerprint of the compiled exchange plan
+//! ([`ExchangePlan::fingerprint`](crate::comm::ExchangePlan::fingerprint)).
+//!
+//! The fingerprint is RNG-free and address-free, so it is stable across
+//! runs and processes; `restore` refuses a checkpoint whose fingerprint
+//! does not match the live plan, which catches "resumed onto a different
+//! decomposition" bugs before they corrupt fields.
+//!
+//! Checkpoints deliberately stay in memory as `f64` vectors rather than a
+//! serialized file format: the acceptance bar is *bitwise* identity with an
+//! uninterrupted run, and a text round-trip (JSON) cannot guarantee that.
+//! Restore is safe from any epoch: a restored runtime keeps its monotone
+//! epoch counters (they are never reset), and the pipelined ack gate skips
+//! a batch's first two epochs, so no stale ack can gate a resumed batch.
+
+/// Snapshot of a grid solver (heat2d / stencil3d) between pipelined
+/// batches.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Completed time steps at the moment of the snapshot.
+    pub step: u64,
+    /// [`ExchangePlan::fingerprint`](crate::comm::ExchangePlan::fingerprint)
+    /// of the plan the snapshot was taken under.
+    pub plan_hash: u64,
+    /// Per-thread primary fields (`phi`).
+    pub fields: Vec<Vec<f64>>,
+    /// Per-thread scratch fields (`phin`).
+    pub scratch: Vec<Vec<f64>>,
+    /// The solver's cumulative traffic counter, restored so resumed runs
+    /// report the same totals as uninterrupted ones.
+    pub inter_thread_bytes: u64,
+}
+
+/// Snapshot of the SpMV pipelined driver between batches: the global `x`
+/// and `y` vectors (the per-thread shared blocks are rebuilt from them on
+/// restore).
+#[derive(Debug, Clone)]
+pub struct SpmvCheckpoint {
+    /// Completed SpMV applications at the moment of the snapshot.
+    pub step: u64,
+    /// Fingerprint of the communication plan
+    /// ([`crate::comm::CommPlan::fingerprint`]).
+    pub plan_hash: u64,
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+}
+
+/// Shared restore-time validation: a checkpoint taken under one plan must
+/// not be restored under another.
+pub(crate) fn check_plan_hash(kind: &str, expected: u64, got: u64) -> Result<(), String> {
+    if expected == got {
+        Ok(())
+    } else {
+        Err(format!(
+            "{kind} checkpoint plan hash {got:#018x} does not match the live plan {expected:#018x}"
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_hash_check() {
+        assert!(check_plan_hash("heat2d", 7, 7).is_ok());
+        let err = check_plan_hash("spmv", 1, 2).unwrap_err();
+        assert!(err.contains("spmv"), "{err}");
+        assert!(err.contains("does not match"), "{err}");
+    }
+}

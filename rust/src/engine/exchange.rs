@@ -57,10 +57,12 @@
 //! [`step_overlapped`]: ExchangeRuntime::step_overlapped
 //! [`run_pipelined`]: ExchangeRuntime::run_pipelined
 
-use super::pool::{ArenaView, EpochFlags, PerWorker, WorkerCtx, WorkerPool};
+use super::fault::FaultPlan;
+use super::pool::{ArenaView, EpochFlags, PerWorker, Phase, PoolHealth, WorkerCtx, WorkerPool};
 use super::Engine;
 use crate::comm::ExchangePlan;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 /// A compiled plan bound to its staging arena and worker pool. Workloads
 /// (heat-2D, the 3D stencil) own one and call [`step_strided`] or
@@ -99,6 +101,13 @@ pub struct ExchangeRuntime {
     /// receiver ever observed against one of its senders (pipelined steps
     /// only). The ack protocol bounds it by the pipeline depth, 2.
     max_lead: AtomicU64,
+    /// Injected faults consulted by the parallel protocol arms (empty by
+    /// default — the hooks are length checks). The sequential oracle never
+    /// consults it.
+    faults: FaultPlan,
+    /// Structural fingerprint of `plan`, cached at construction; checkpoint
+    /// restore verifies against it.
+    plan_hash: u64,
 }
 
 impl ExchangeRuntime {
@@ -132,6 +141,7 @@ impl ExchangeRuntime {
                 })
             })
             .collect();
+        let plan_hash = plan.fingerprint();
         ExchangeRuntime {
             plan,
             staging,
@@ -142,6 +152,8 @@ impl ExchangeRuntime {
             senders,
             receivers,
             max_lead: AtomicU64::new(0),
+            faults: FaultPlan::default(),
+            plan_hash,
         }
     }
 
@@ -180,6 +192,58 @@ impl ExchangeRuntime {
     /// of the compiled plan — the workloads' traffic counters add this).
     pub fn payload_bytes(&self) -> u64 {
         self.plan.payload_bytes()
+    }
+
+    /// Structural fingerprint of the compiled plan
+    /// ([`ExchangePlan::fingerprint`], cached at construction). Checkpoints
+    /// record it so restore can refuse a snapshot from a different
+    /// decomposition.
+    pub fn plan_fingerprint(&self) -> u64 {
+        self.plan_hash
+    }
+
+    /// The exchange epoch of the last executed step (0 = none yet).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Thread `t`'s published-epoch counter (diagnostics).
+    pub fn published_epoch(&self, t: usize) -> u64 {
+        self.flags.load(t)
+    }
+
+    /// Thread `t`'s consumed-epoch counter (diagnostics).
+    pub fn consumed_epoch(&self, t: usize) -> u64 {
+        self.acks.load(t)
+    }
+
+    /// Set (or with `None`, disable) the deadline on every wait the
+    /// parallel protocol arms perform. See
+    /// [`WorkerPool::set_wait_deadline`].
+    pub fn set_wait_deadline(&mut self, deadline: Option<Duration>) {
+        self.pool.set_wait_deadline(deadline);
+    }
+
+    /// The configured wait deadline.
+    pub fn wait_deadline(&self) -> Option<Duration> {
+        self.pool.wait_deadline()
+    }
+
+    /// Install a fault-injection plan consulted by the parallel protocol
+    /// arms (testing/chaos only; an empty plan is free).
+    pub fn set_fault_plan(&mut self, faults: FaultPlan) {
+        self.faults = faults;
+    }
+
+    /// Remove any installed fault plan.
+    pub fn clear_faults(&mut self) {
+        self.faults = FaultPlan::default();
+    }
+
+    /// Snapshot the worker pool's health (per-worker phase/epoch progress
+    /// plus the watchdog's stall report, if any).
+    pub fn health(&self) -> PoolHealth {
+        self.pool.health()
     }
 
     /// One full exchange-then-update time step of a strided plan.
@@ -245,8 +309,11 @@ impl ExchangeRuntime {
                 let ow = PerWorker::new(out);
                 let update = &update;
                 let (flags, acks) = (&self.flags, &self.acks);
+                let faults = &self.faults;
                 self.pool.run(threads, &|ctx: WorkerCtx| {
                     let t = ctx.id;
+                    ctx.note_phase(Phase::Pack, epoch);
+                    faults.on_phase(t, epoch, Phase::Pack);
                     // SAFETY: worker t claims only its own field/out pair.
                     let field = unsafe { fw.take(t) }.as_mut_slice();
                     for m in plan.send_msgs(t) {
@@ -257,16 +324,26 @@ impl ExchangeRuntime {
                             arena.slice_mut(half + r.start..half + r.end)
                         });
                     }
-                    flags.publish(t, epoch);
+                    if faults.before_publish(t, epoch) {
+                        flags.publish(t, epoch);
+                    }
 
+                    ctx.note_phase(Phase::Barrier, epoch);
                     ctx.barrier(); // ---- upc_barrier ----
 
+                    ctx.note_phase(Phase::Unpack, epoch);
+                    faults.on_phase(t, epoch, Phase::Unpack);
+                    faults.before_unpack(t, epoch);
                     for m in plan.recv_msgs(t) {
                         let r = m.range();
                         // SAFETY: arena writes ended at the barrier.
                         m.unpack(unsafe { arena.slice(half + r.start..half + r.end) }, field);
                     }
-                    acks.publish(t, epoch);
+                    if faults.before_ack(t, epoch) {
+                        acks.publish(t, epoch);
+                    }
+                    ctx.note_phase(Phase::Boundary, epoch);
+                    faults.on_phase(t, epoch, Phase::Boundary);
                     update(t, field, unsafe { ow.take(t) }.as_mut_slice());
                 });
             }
@@ -338,8 +415,11 @@ impl ExchangeRuntime {
                 let (interior, boundary) = (&interior, &boundary);
                 let (flags, acks) = (&self.flags, &self.acks);
                 let senders = &self.senders;
+                let faults = &self.faults;
                 self.pool.run(threads, &|ctx: WorkerCtx| {
                     let t = ctx.id;
+                    ctx.note_phase(Phase::Pack, epoch);
+                    faults.on_phase(t, epoch, Phase::Pack);
                     // SAFETY: worker t claims only its own field/out pair,
                     // exactly once per dispatch.
                     let field = unsafe { fw.take(t) }.as_mut_slice();
@@ -351,22 +431,32 @@ impl ExchangeRuntime {
                         // halved per epoch parity; packed by the sender only.
                         m.pack(field, unsafe { arena.slice_mut(half + r.start..half + r.end) });
                     }
-                    flags.publish(t, epoch);
+                    if faults.before_publish(t, epoch) {
+                        flags.publish(t, epoch);
+                    }
 
                     // Overlap window: halo-independent compute.
                     interior(t, field, o);
 
                     // finish_exchange: wait on actual senders only.
+                    ctx.note_phase(Phase::Transfer, epoch);
+                    faults.on_phase(t, epoch, Phase::Transfer);
                     for &peer in &senders[t] {
-                        ctx.wait_for_epoch(flags.flag(peer as usize), epoch);
+                        ctx.wait_for_epoch(flags.flag(peer as usize), epoch, peer as usize);
                     }
+                    ctx.note_phase(Phase::Unpack, epoch);
+                    faults.before_unpack(t, epoch);
                     for m in plan.recv_msgs(t) {
                         let r = m.range();
                         // SAFETY: the sender's Release publish ordered its
                         // pack writes before this Acquire-observed read.
                         m.unpack(unsafe { arena.slice(half + r.start..half + r.end) }, field);
                     }
-                    acks.publish(t, epoch);
+                    if faults.before_ack(t, epoch) {
+                        acks.publish(t, epoch);
+                    }
+                    ctx.note_phase(Phase::Boundary, epoch);
+                    faults.on_phase(t, epoch, Phase::Boundary);
                     boundary(t, field, o);
                 });
             }
@@ -454,6 +544,7 @@ impl ExchangeRuntime {
                 let (flags, acks) = (&self.flags, &self.acks);
                 let (senders, receivers) = (&self.senders, &self.receivers);
                 let max_lead = &self.max_lead;
+                let faults = &self.faults;
                 self.pool.run(threads, &|ctx: WorkerCtx| {
                     let t = ctx.id;
                     // SAFETY: worker t claims only its own field/out pair,
@@ -476,12 +567,15 @@ impl ExchangeRuntime {
                         // The first two epochs skip the gate — at dispatch
                         // entry both halves are quiescent.
                         if k > 2 {
+                            ctx.note_phase(Phase::AckGate, epoch);
                             for &r in &receivers[t] {
-                                ctx.wait_for_ack(acks.flag(r as usize), epoch - 2);
+                                ctx.wait_for_ack(acks.flag(r as usize), epoch - 2, r as usize);
                             }
                         }
 
                         // begin_exchange: pack this epoch's half + publish.
+                        ctx.note_phase(Phase::Pack, epoch);
+                        faults.on_phase(t, epoch, Phase::Pack);
                         for m in plan.send_msgs(t) {
                             let r = m.range();
                             // SAFETY: plan ranges are disjoint per message
@@ -492,15 +586,21 @@ impl ExchangeRuntime {
                                 arena.slice_mut(half + r.start..half + r.end)
                             });
                         }
-                        flags.publish(t, epoch);
+                        if faults.before_publish(t, epoch) {
+                            flags.publish(t, epoch);
+                        }
 
                         // Overlap window: halo-independent compute.
                         interior(t, field, o);
 
                         // finish_exchange: wait on actual senders only.
+                        ctx.note_phase(Phase::Transfer, epoch);
+                        faults.on_phase(t, epoch, Phase::Transfer);
                         for &peer in &senders[t] {
-                            ctx.wait_for_epoch(flags.flag(peer as usize), epoch);
+                            ctx.wait_for_epoch(flags.flag(peer as usize), epoch, peer as usize);
                         }
+                        ctx.note_phase(Phase::Unpack, epoch);
+                        faults.before_unpack(t, epoch);
                         for m in plan.recv_msgs(t) {
                             let r = m.range();
                             // SAFETY: the sender's Release publish ordered
@@ -510,7 +610,9 @@ impl ExchangeRuntime {
                                 field,
                             );
                         }
-                        acks.publish(t, epoch);
+                        if faults.before_ack(t, epoch) {
+                            acks.publish(t, epoch);
+                        }
 
                         // Depth-bound diagnostic: how far ahead of this
                         // just-consumed epoch has any of t's senders
@@ -520,6 +622,8 @@ impl ExchangeRuntime {
                             local_lead = local_lead.max(lead);
                         }
 
+                        ctx.note_phase(Phase::Boundary, epoch);
+                        faults.on_phase(t, epoch, Phase::Boundary);
                         boundary(t, field, o);
                         std::mem::swap(&mut cur, &mut nxt);
                     }
@@ -764,6 +868,55 @@ mod tests {
         // Every protocol advanced the shared epoch uniformly.
         let total: usize = schedule.iter().map(|&(_, _, s)| s).sum();
         assert_eq!(rt.epoch, total as u64);
+    }
+
+    #[test]
+    fn injected_drop_publish_stalls_cleanly() {
+        use super::super::fault::FaultKind;
+        use super::super::pool::StallError;
+        // Thread 0 stops publishing from epoch 2 onward; the pipelined
+        // batch must convert into a StallError at the transfer wait within
+        // the deadline, not hang. (Which worker's deadline fires first is
+        // timing-dependent; the phase and the structured payload are not.)
+        let mut rt = ring_runtime();
+        rt.set_wait_deadline(Some(std::time::Duration::from_millis(60)));
+        rt.set_fault_plan(FaultPlan::none().with(0, 2, FaultKind::DropPublish));
+        let mut f = vec![
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 0.0],
+            vec![0.0, 5.0, 6.0, 7.0, 8.0, 0.0],
+        ];
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            steps_pipelined(&mut rt, Engine::Parallel, 4, &mut f);
+        }));
+        let payload = res.expect_err("dropped publish must unwind the batch");
+        let stall = StallError::from_panic(payload.as_ref())
+            .expect("payload must carry the structured StallError");
+        assert_eq!(stall.phase, Phase::Transfer);
+        assert!(stall.peer.is_some());
+        // The runtime (pool included) stays usable once faults are cleared.
+        rt.clear_faults();
+        let mut f2 = vec![
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 0.0],
+            vec![0.0, 5.0, 6.0, 7.0, 8.0, 0.0],
+        ];
+        f2 = step(&mut rt, Engine::Parallel, &mut f2);
+        assert!(f2.iter().all(|v| v.iter().all(|x| x.is_finite())));
+    }
+
+    #[test]
+    fn plan_fingerprint_is_stable_and_structural() {
+        let a = ring_runtime();
+        let b = ring_runtime();
+        assert_eq!(a.plan_fingerprint(), b.plan_fingerprint());
+        // A structurally different plan (extra message) fingerprints
+        // differently.
+        let copies = vec![
+            (0usize, 1usize, StridedBlock::row(4, 1), StridedBlock::row(0, 1)),
+            (1, 0, StridedBlock::row(1, 1), StridedBlock::row(5, 1)),
+            (0, 1, StridedBlock::row(3, 1), StridedBlock::row(5, 1)),
+        ];
+        let c = ExchangeRuntime::new(StridedPlan::from_msgs(2, &copies));
+        assert_ne!(a.plan_fingerprint(), c.plan_fingerprint());
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! Deterministic fault injection for the exchange runtime.
+//!
+//! A [`FaultPlan`] is a small, seedable list of [`Fault`]s threaded through
+//! [`ExchangeRuntime`](super::ExchangeRuntime) and
+//! [`ParallelPool`](super::ParallelPool). The protocol drivers consult it at
+//! every phase transition, publish and ack, so a test (or the `repro chaos`
+//! subcommand) can wedge one worker in a precisely chosen way — delay or
+//! drop a publish/ack, panic at a protocol phase, slow a receiver — and
+//! assert that the deadline/watchdog machinery converts the fault into a
+//! structured [`StallError`](super::StallError) or poisoned dispatch
+//! instead of a hang.
+//!
+//! Faults only act on the parallel engine's protocol paths; the sequential
+//! oracle never consults the plan (there is no concurrency to wedge).
+//!
+//! Drop faults are *sticky*: `DropPublish`/`DropAck` suppress every publish
+//! from the chosen epoch onward. A one-shot drop would self-heal on a
+//! monotone flag — the very next epoch's publish satisfies any waiter
+//! stalled on the dropped one — which is not what a wedged peer looks like.
+//! Delay and slow faults are sticky for the same reason, except
+//! `DelayPublish`/`DelayAck`, which fire once at their exact epoch (one
+//! long stall is what they model).
+
+use std::time::Duration;
+
+use super::pool::Phase;
+use crate::util::Rng;
+
+/// What the injected fault does to the chosen thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Sleep for the duration just before publishing the chosen epoch.
+    DelayPublish(Duration),
+    /// Suppress the publish of the chosen epoch and every later one.
+    DropPublish,
+    /// Sleep for the duration just before acking the chosen epoch.
+    DelayAck(Duration),
+    /// Suppress the ack of the chosen epoch and every later one.
+    DropAck,
+    /// Panic when the thread enters the given phase at the chosen epoch.
+    PanicAt(Phase),
+    /// Sleep for the duration before unpacking, at the chosen epoch and
+    /// every later one — a persistently slow receiver.
+    SlowReceiver(Duration),
+}
+
+/// One injected fault: which logical thread, from which epoch, doing what.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fault {
+    pub thread: usize,
+    pub epoch: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic set of injected faults (usually one). Cheap to clone and
+/// consult; an empty plan's hooks are a length check.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+}
+
+/// Delay used by [`FaultPlan::random`]'s delay/slow faults: long enough to
+/// blow any test-sized deadline, short enough that the sleeping worker
+/// drains quickly once the dispatch is poisoned.
+pub const INJECTED_DELAY: Duration = Duration::from_millis(250);
+
+impl FaultPlan {
+    /// An empty plan (injects nothing). Same as `FaultPlan::default()`.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Builder: add one fault.
+    pub fn with(mut self, thread: usize, epoch: u64, kind: FaultKind) -> FaultPlan {
+        self.faults.push(Fault { thread, epoch, kind });
+        self
+    }
+
+    /// One random fault, fully determined by `seed`, targeting a thread in
+    /// `0..threads` and an epoch in `1..=epochs`. Delay/slow kinds use
+    /// [`INJECTED_DELAY`].
+    pub fn random(seed: u64, threads: usize, epochs: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed);
+        let thread = rng.usize_in(0, threads.max(1));
+        let epoch = 1 + rng.next_below(epochs.max(1));
+        let kind = match rng.next_below(6) {
+            0 => FaultKind::DelayPublish(INJECTED_DELAY),
+            1 => FaultKind::DropPublish,
+            2 => FaultKind::DelayAck(INJECTED_DELAY),
+            3 => FaultKind::DropAck,
+            4 => FaultKind::PanicAt(Phase::Pack),
+            _ => FaultKind::SlowReceiver(INJECTED_DELAY),
+        };
+        FaultPlan::default().with(thread, epoch, kind)
+    }
+
+    /// Whether the plan injects anything at all.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// The faults, for reporting.
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// Hook: thread `t` enters `phase` at `epoch`. Panics if a matching
+    /// [`FaultKind::PanicAt`] is planned.
+    pub fn on_phase(&self, t: usize, epoch: u64, phase: Phase) {
+        for f in &self.faults {
+            if f.thread != t || f.epoch != epoch || f.kind != FaultKind::PanicAt(phase) {
+                continue;
+            }
+            panic!("injected fault: worker {t} panics at phase {phase}, epoch {epoch}");
+        }
+    }
+
+    /// Hook: thread `t` is about to publish `epoch`. Sleeps through a
+    /// matching delay; returns `false` if the publish must be suppressed
+    /// (sticky drop).
+    #[must_use]
+    pub fn before_publish(&self, t: usize, epoch: u64) -> bool {
+        let mut go = true;
+        for f in &self.faults {
+            if f.thread != t {
+                continue;
+            }
+            match f.kind {
+                FaultKind::DelayPublish(d) if f.epoch == epoch => std::thread::sleep(d),
+                FaultKind::DropPublish if epoch >= f.epoch => go = false,
+                _ => {}
+            }
+        }
+        go
+    }
+
+    /// Hook: thread `t` is about to publish its consumed-epoch ack for
+    /// `epoch`. Same semantics as [`before_publish`](Self::before_publish).
+    #[must_use]
+    pub fn before_ack(&self, t: usize, epoch: u64) -> bool {
+        let mut go = true;
+        for f in &self.faults {
+            if f.thread != t {
+                continue;
+            }
+            match f.kind {
+                FaultKind::DelayAck(d) if f.epoch == epoch => std::thread::sleep(d),
+                FaultKind::DropAck if epoch >= f.epoch => go = false,
+                _ => {}
+            }
+        }
+        go
+    }
+
+    /// Hook: thread `t` is about to unpack `epoch` — a
+    /// [`FaultKind::SlowReceiver`] sleeps here, every epoch from its chosen
+    /// one onward.
+    pub fn before_unpack(&self, t: usize, epoch: u64) {
+        for f in &self.faults {
+            if f.thread == t {
+                if let FaultKind::SlowReceiver(d) = f.kind {
+                    if epoch >= f.epoch {
+                        std::thread::sleep(d);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_inert() {
+        let plan = FaultPlan::none();
+        assert!(plan.is_empty());
+        assert!(plan.before_publish(0, 1));
+        assert!(plan.before_ack(3, 9));
+        plan.on_phase(0, 1, Phase::Pack);
+        plan.before_unpack(2, 4);
+    }
+
+    #[test]
+    fn drop_publish_is_sticky() {
+        let plan = FaultPlan::none().with(1, 3, FaultKind::DropPublish);
+        assert!(plan.before_publish(1, 1));
+        assert!(plan.before_publish(1, 2));
+        assert!(!plan.before_publish(1, 3));
+        assert!(!plan.before_publish(1, 4), "drop must persist past its epoch");
+        assert!(plan.before_publish(0, 3), "other threads unaffected");
+        assert!(plan.before_ack(1, 3), "acks unaffected by a publish drop");
+    }
+
+    #[test]
+    fn drop_ack_is_sticky() {
+        let plan = FaultPlan::none().with(0, 2, FaultKind::DropAck);
+        assert!(plan.before_ack(0, 1));
+        assert!(!plan.before_ack(0, 2));
+        assert!(!plan.before_ack(0, 7));
+        assert!(plan.before_publish(0, 2), "publishes unaffected by an ack drop");
+    }
+
+    #[test]
+    #[should_panic(expected = "injected fault")]
+    fn panic_at_matching_phase_fires() {
+        let plan = FaultPlan::none().with(2, 5, FaultKind::PanicAt(Phase::Boundary));
+        plan.on_phase(2, 5, Phase::Pack); // wrong phase: no-op
+        plan.on_phase(2, 4, Phase::Boundary); // wrong epoch: no-op
+        plan.on_phase(2, 5, Phase::Boundary); // fires
+    }
+
+    #[test]
+    fn random_plans_are_deterministic() {
+        let a = FaultPlan::random(99, 4, 8);
+        let b = FaultPlan::random(99, 4, 8);
+        assert_eq!(a.faults(), b.faults());
+        assert_eq!(a.faults().len(), 1);
+        let f = a.faults()[0];
+        assert!(f.thread < 4);
+        assert!((1..=8).contains(&f.epoch));
+        // Different seeds eventually cover every kind.
+        let mut kinds = std::collections::BTreeSet::new();
+        for seed in 0..64u64 {
+            let f = FaultPlan::random(seed, 4, 8).faults()[0];
+            kinds.insert(match f.kind {
+                FaultKind::DelayPublish(_) => 0u8,
+                FaultKind::DropPublish => 1,
+                FaultKind::DelayAck(_) => 2,
+                FaultKind::DropAck => 3,
+                FaultKind::PanicAt(_) => 4,
+                FaultKind::SlowReceiver(_) => 5,
+            });
+        }
+        assert_eq!(kinds.len(), 6, "64 seeds must cover all fault kinds");
+    }
+}

@@ -32,16 +32,25 @@
 //!   call runs pack → barrier → unpack → per-thread stencil update on
 //!   either engine.
 
+mod checkpoint;
 mod exchange;
+mod fault;
 mod parallel;
 mod pool;
 
+pub(crate) use checkpoint::check_plan_hash;
+pub use checkpoint::{Checkpoint, SpmvCheckpoint};
 pub use exchange::ExchangeRuntime;
+pub use fault::{Fault, FaultKind, FaultPlan, INJECTED_DELAY};
 pub use parallel::ParallelPool;
-pub use pool::{ArenaView, EpochFlags, PerWorker, WorkerCtx, WorkerPool};
+pub use pool::{
+    ArenaView, EpochFlags, PerWorker, Phase, PoolHealth, StallError, StallReport, WorkerCtx,
+    WorkerHealth, WorkerPool, DEFAULT_WAIT_DEADLINE,
+};
 
 use crate::comm::Analysis;
 use crate::spmv::{run_variant, ExecOutcome, SpmvState, Variant};
+use std::time::Duration;
 
 /// Which execution engine drives the UPC-thread variants.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -131,6 +140,105 @@ impl SpmvEngine {
     /// protocol's depth, 2. See [`ParallelPool::max_sender_lead`].
     pub fn max_sender_lead(&self) -> u64 {
         self.pool.max_sender_lead()
+    }
+
+    /// Bound every protocol wait by `deadline` (`None` = unbounded). See
+    /// [`WorkerPool::set_wait_deadline`].
+    pub fn set_wait_deadline(&mut self, deadline: Option<Duration>) {
+        self.pool.set_wait_deadline(deadline);
+    }
+
+    /// The current wait deadline.
+    pub fn wait_deadline(&self) -> Option<Duration> {
+        self.pool.wait_deadline()
+    }
+
+    /// Install a fault plan for chaos testing ([`ParallelPool::set_fault_plan`]).
+    pub fn set_fault_plan(&mut self, faults: FaultPlan) {
+        self.pool.set_fault_plan(faults);
+    }
+
+    /// Remove any installed fault plan.
+    pub fn clear_faults(&mut self) {
+        self.pool.clear_faults();
+    }
+
+    /// Watchdog + progress snapshot of the underlying worker pool.
+    pub fn health(&self) -> PoolHealth {
+        self.pool.health()
+    }
+
+    /// Take a checkpoint of the SpMV time-stepping state as of `step`
+    /// completed applications, stamped with the live plan's fingerprint.
+    pub fn checkpoint(&self, step: u64, state: &SpmvState, analysis: &Analysis) -> SpmvCheckpoint {
+        SpmvCheckpoint {
+            step,
+            plan_hash: analysis.plan.fingerprint(),
+            x: state.x_global(),
+            y: state.y_global(),
+        }
+    }
+
+    /// Restore a checkpoint taken by
+    /// [`run_pipelined_checkpointed`](Self::run_pipelined_checkpointed):
+    /// verifies the plan fingerprint, rebuilds `x`/`y`, and performs the
+    /// inter-batch pointer swap so the state is ready for the next batch
+    /// (latest iterate in `x`). Returns the completed-step count to resume
+    /// from. The engine's monotone exchange epochs are *not* reset — the
+    /// pipelined ack gate skips a batch's first two epochs, so resuming is
+    /// safe on a warm pool and on a fresh one alike.
+    pub fn restore(
+        &mut self,
+        ck: &SpmvCheckpoint,
+        state: &mut SpmvState,
+        analysis: &Analysis,
+    ) -> Result<u64, String> {
+        checkpoint::check_plan_hash("spmv", analysis.plan.fingerprint(), ck.plan_hash)?;
+        state.restore_from(&ck.x, &ck.y);
+        state.swap_xy();
+        Ok(ck.step)
+    }
+
+    /// Run `steps` pipelined UPCv3 iterations in batches of `every`,
+    /// handing a checkpoint to `sink` after each batch. The result is
+    /// bitwise identical to one `run_pipelined(steps, ..)` call — batching
+    /// splits the schedule at swap boundaries, which the protocol already
+    /// guarantees to be equivalent — and counters accumulate over the whole
+    /// run. A run killed mid-batch resumes from the last sinked checkpoint
+    /// via [`restore`](Self::restore) followed by
+    /// `run_pipelined_checkpointed(steps - resumed, every, ..)`.
+    pub fn run_pipelined_checkpointed(
+        &mut self,
+        steps: usize,
+        every: usize,
+        state: &mut SpmvState,
+        analysis: &Analysis,
+        sink: &mut dyn FnMut(SpmvCheckpoint),
+    ) -> ExecOutcome {
+        if steps == 0 {
+            return self.run_pipelined(0, state, analysis);
+        }
+        let every = every.max(1);
+        let mut done = 0usize;
+        let mut inter = 0u64;
+        let mut transfers = 0u64;
+        let mut last = None;
+        while done < steps {
+            if done > 0 {
+                state.swap_xy();
+            }
+            let batch = (steps - done).min(every);
+            let out = self.run_pipelined(batch, state, analysis);
+            inter += out.inter_thread_bytes;
+            transfers += out.transfers;
+            last = Some(out);
+            done += batch;
+            sink(self.checkpoint(done as u64, state, analysis));
+        }
+        let mut out = last.expect("steps > 0 ran at least one batch");
+        out.inter_thread_bytes = inter;
+        out.transfers = transfers;
+        out
     }
 }
 

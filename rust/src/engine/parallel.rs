@@ -32,12 +32,14 @@
 //!
 //! [`SharedVec::locals_mut`]: crate::pgas::SharedVec::locals_mut
 
-use super::pool::{ArenaView, EpochFlags, PerWorker, WorkerCtx, WorkerPool};
+use super::fault::FaultPlan;
+use super::pool::{ArenaView, EpochFlags, PerWorker, Phase, PoolHealth, WorkerCtx, WorkerPool};
 use super::Engine;
 use crate::comm::{Analysis, RowRun};
 use crate::machine::SIZEOF_DOUBLE;
 use crate::pgas::Layout;
 use crate::spmv::{spmv_block_gathered, spmv_block_global, ExecOutcome, SpmvState, Variant};
+use std::time::Duration;
 
 /// Persistent engine state, reused across calls/time steps: the worker pool
 /// plus the per-worker workspaces.
@@ -67,6 +69,9 @@ pub struct ParallelPool {
     /// mixed on one pool without pairing a stale arena half with fresh
     /// flags.
     epoch: u64,
+    /// Injected faults for chaos testing; empty in production. Consulted
+    /// only by the V3 protocol paths on the parallel engine.
+    faults: FaultPlan,
 }
 
 impl ParallelPool {
@@ -101,6 +106,34 @@ impl ParallelPool {
     /// [`ExchangeRuntime::max_sender_lead`](crate::engine::ExchangeRuntime::max_sender_lead).
     pub fn max_sender_lead(&self) -> u64 {
         self.max_lead.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Bound every protocol wait (flag, ack, barrier) by `deadline`;
+    /// `None` restores unbounded waits. See
+    /// [`WorkerPool::set_wait_deadline`].
+    pub fn set_wait_deadline(&mut self, deadline: Option<Duration>) {
+        self.pool.set_wait_deadline(deadline);
+    }
+
+    /// The current wait deadline.
+    pub fn wait_deadline(&self) -> Option<Duration> {
+        self.pool.wait_deadline()
+    }
+
+    /// Install a fault plan for chaos testing. Faults act on the V3
+    /// protocol paths of the parallel engine only.
+    pub fn set_fault_plan(&mut self, faults: FaultPlan) {
+        self.faults = faults;
+    }
+
+    /// Remove any installed fault plan.
+    pub fn clear_faults(&mut self) {
+        self.faults = FaultPlan::none();
+    }
+
+    /// Watchdog + progress snapshot of the underlying worker pool.
+    pub fn health(&self) -> PoolHealth {
+        self.pool.health()
     }
 
     /// Run one SpMV `y = Mx` on the worker pool. Bitwise identical to
@@ -306,10 +339,13 @@ impl ParallelPool {
         let y = PerWorker::new(&mut y_locals);
         let ws = PerWorker::new(&mut self.x_copies);
         let (flags, acks) = (&self.flags, &self.acks);
+        let faults = &self.faults;
         self.pool.run(threads, &|ctx: WorkerCtx| {
             let t = ctx.id;
             // Phase 1: pack + put — each sender owns exactly the arena
             // ranges of its own messages (the zero-copy `upc_memput`).
+            ctx.note_phase(Phase::Pack, epoch);
+            faults.on_phase(t, epoch, Phase::Pack);
             let local_x = x.local(t);
             for m in plan.send_msgs(t) {
                 let rng = m.range();
@@ -320,12 +356,18 @@ impl ParallelPool {
                     *slot = local_x[off as usize];
                 }
             }
-            flags.publish(t, epoch);
+            if faults.before_publish(t, epoch) {
+                flags.publish(t, epoch);
+            }
 
+            ctx.note_phase(Phase::Barrier, epoch);
             ctx.barrier(); // ---- upc_barrier ----
 
             // Phase 2: own-block copy + scatter + compute.
             // SAFETY: worker t claims only its own workspace/shard.
+            ctx.note_phase(Phase::Unpack, epoch);
+            faults.on_phase(t, epoch, Phase::Unpack);
+            faults.before_unpack(t, epoch);
             let ws = unsafe { ws.take(t) };
             let bs = layout.block_size;
             for b in layout.blocks_of_thread(t) {
@@ -340,7 +382,11 @@ impl ParallelPool {
                     ws[gidx as usize] = v;
                 }
             }
-            acks.publish(t, epoch);
+            if faults.before_ack(t, epoch) {
+                acks.publish(t, epoch);
+            }
+            ctx.note_phase(Phase::Boundary, epoch);
+            faults.on_phase(t, epoch, Phase::Boundary);
             let y_local = unsafe { y.take(t) };
             for b in layout.blocks_of_thread(t) {
                 let (offset, len) = layout.block_range(b);
@@ -538,6 +584,7 @@ impl ParallelPool {
                 let (flags, acks) = (&self.flags, &self.acks);
                 let (d, a, j) = (&state.d, &state.a, &state.j);
                 let max_lead = &self.max_lead;
+                let faults = &self.faults;
                 self.pool.run(threads, &|ctx: WorkerCtx| {
                     let t = ctx.id;
                     // SAFETY: worker t claims only its own x/y shards and
@@ -565,12 +612,16 @@ impl ParallelPool {
                         // epochs skip the gate: both halves are quiescent
                         // at dispatch entry.
                         if k > 2 {
+                            ctx.note_phase(Phase::AckGate, epoch);
                             for m in plan.send_msgs(t) {
-                                ctx.wait_for_ack(acks.flag(m.peer as usize), epoch - 2);
+                                let peer = m.peer as usize;
+                                ctx.wait_for_ack(acks.flag(peer), epoch - 2, peer);
                             }
                         }
 
                         // begin_exchange: pack this epoch's half + publish.
+                        ctx.note_phase(Phase::Pack, epoch);
+                        faults.on_phase(t, epoch, Phase::Pack);
                         for m in plan.send_msgs(t) {
                             let rng = m.range();
                             // SAFETY: plan ranges are disjoint per message
@@ -583,7 +634,9 @@ impl ParallelPool {
                                 *slot = src[off as usize];
                             }
                         }
-                        flags.publish(t, epoch);
+                        if faults.before_publish(t, epoch) {
+                            flags.publish(t, epoch);
+                        }
 
                         // Overlap window: own-block copy + interior rows.
                         for b in layout.blocks_of_thread(t) {
@@ -595,8 +648,11 @@ impl ParallelPool {
                         compute_row_runs(&layout, r, d, a, j, &split[t].interior, ws, dst);
 
                         // finish_exchange: per-peer waits, scatter, ack.
+                        ctx.note_phase(Phase::Transfer, epoch);
+                        faults.on_phase(t, epoch, Phase::Transfer);
                         for m in plan.recv_msgs(t) {
-                            ctx.wait_for_epoch(flags.flag(m.peer as usize), epoch);
+                            let peer = m.peer as usize;
+                            ctx.wait_for_epoch(flags.flag(peer), epoch, peer);
                             let rng = m.range();
                             // SAFETY: the sender's Release publish ordered
                             // its pack writes before this read.
@@ -606,7 +662,14 @@ impl ParallelPool {
                                 ws[gidx as usize] = v;
                             }
                         }
-                        acks.publish(t, epoch);
+                        // A slow receiver sleeps after draining but before
+                        // acking — exactly the window that stalls its
+                        // senders' ack gates.
+                        ctx.note_phase(Phase::Unpack, epoch);
+                        faults.before_unpack(t, epoch);
+                        if faults.before_ack(t, epoch) {
+                            acks.publish(t, epoch);
+                        }
 
                         // Depth-bound diagnostic: how far ahead of this
                         // just-consumed epoch has any of t's senders
@@ -617,6 +680,8 @@ impl ParallelPool {
                             local_lead = local_lead.max(lead);
                         }
 
+                        ctx.note_phase(Phase::Boundary, epoch);
+                        faults.on_phase(t, epoch, Phase::Boundary);
                         compute_row_runs(&layout, r, d, a, j, &split[t].boundary, ws, dst);
 
                         // The §6.1 pointer swap, thread-locally.

@@ -21,12 +21,196 @@
 //!   partition the arena, every range is packed by exactly one sender before
 //!   the barrier and only read after it.
 
+use std::any::Any;
 use std::fmt;
 use std::marker::PhantomData;
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Default per-wait deadline: generous enough that no healthy workload on
+/// any CI machine comes near it, small enough that a genuinely wedged peer
+/// converts into a [`StallError`] instead of an infinite hang.
+pub const DEFAULT_WAIT_DEADLINE: Duration = Duration::from_secs(30);
+
+/// The protocol phase a worker is in, as advertised through
+/// [`WorkerCtx::note_phase`] and reported by the stall watchdog and
+/// [`StallError`]. Packed into 3 bits of a progress word, so at most 8
+/// variants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(u8)]
+pub enum Phase {
+    /// Not inside any protocol phase (fresh dispatch, or a job that does
+    /// not report phases).
+    #[default]
+    Idle = 0,
+    /// Waiting on receivers' consumed-epoch acks before reusing an arena
+    /// half (pipelined back-pressure gate).
+    AckGate = 1,
+    /// Packing boundary values into the staging arena.
+    Pack = 2,
+    /// Waiting for peers' publishes — the "transfer" of the simulated
+    /// exchange.
+    Transfer = 3,
+    /// Unpacking received values into ghost cells.
+    Unpack = 4,
+    /// Computing boundary (halo-dependent) points.
+    Boundary = 5,
+    /// Parked at a full-pool barrier.
+    Barrier = 6,
+}
+
+impl Phase {
+    /// Human-readable name, used by `Display` impls and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Idle => "idle",
+            Phase::AckGate => "ack-gate",
+            Phase::Pack => "pack",
+            Phase::Transfer => "transfer",
+            Phase::Unpack => "unpack",
+            Phase::Boundary => "boundary",
+            Phase::Barrier => "barrier",
+        }
+    }
+
+    fn from_u8(v: u8) -> Phase {
+        match v {
+            1 => Phase::AckGate,
+            2 => Phase::Pack,
+            3 => Phase::Transfer,
+            4 => Phase::Unpack,
+            5 => Phase::Boundary,
+            6 => Phase::Barrier,
+            _ => Phase::Idle,
+        }
+    }
+}
+
+impl fmt::Display for Phase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A structured deadline-expiry error: worker `waiter` gave up waiting for
+/// `peer` (or the whole pool, for a barrier) to reach `epoch` while in
+/// `phase`. Raised via `panic_any` so it travels the exact same
+/// poison-and-unwind path as a worker panic; dispatchers can recover it
+/// with [`StallError::from_panic`] on the payload `catch_unwind` returns.
+#[derive(Debug, Clone)]
+pub struct StallError {
+    /// The worker whose wait expired.
+    pub waiter: usize,
+    /// The peer whose flag never arrived; `None` for a pool barrier, where
+    /// no single peer is identified.
+    pub peer: Option<usize>,
+    /// The epoch the waiter needed (for a barrier: the waiter's own last
+    /// reported epoch).
+    pub epoch: u64,
+    /// The protocol phase the waiter was stalled in.
+    pub phase: Phase,
+    /// How long the waiter actually waited before giving up.
+    pub waited: Duration,
+}
+
+impl StallError {
+    /// Downcast a caught panic payload back into the `StallError` it
+    /// carries, if any. Generic worker panics (including the peers a stall
+    /// poisons) return `None`.
+    pub fn from_panic(payload: &(dyn Any + Send)) -> Option<&StallError> {
+        payload.downcast_ref::<StallError>()
+    }
+}
+
+impl fmt::Display for StallError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.peer {
+            Some(p) => write!(
+                f,
+                "stall: worker {} waited {:.1?} for peer {} to reach epoch {} (phase {})",
+                self.waiter, self.waited, p, self.epoch, self.phase
+            ),
+            None => write!(
+                f,
+                "stall: worker {} waited {:.1?} at the pool barrier (epoch {})",
+                self.waiter, self.waited, self.epoch
+            ),
+        }
+    }
+}
+
+/// What the stall watchdog observed: the lagging worker (lowest progress
+/// word) after a no-progress window, with the phase and epoch it last
+/// reported.
+#[derive(Debug, Clone)]
+pub struct StallReport {
+    /// The worker with the least progress when the stall was detected.
+    pub worker: usize,
+    /// The epoch that worker last reported.
+    pub epoch: u64,
+    /// The phase that worker last reported.
+    pub phase: Phase,
+    /// How long the pool had made no progress when the report was taken.
+    pub stalled_for: Duration,
+}
+
+impl fmt::Display for StallReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "watchdog: no progress for {:.1?}; lagging worker {} (phase {}, epoch {})",
+            self.stalled_for, self.worker, self.phase, self.epoch
+        )
+    }
+}
+
+/// One worker's last-reported progress, as returned by
+/// [`WorkerPool::health`].
+#[derive(Debug, Clone)]
+pub struct WorkerHealth {
+    pub id: usize,
+    pub epoch: u64,
+    pub phase: Phase,
+}
+
+/// A point-in-time snapshot of the pool: every worker's last-reported
+/// phase/epoch, whether a dispatch is in flight, and the watchdog's sticky
+/// stall report (cleared at the next dispatch).
+#[derive(Debug, Clone, Default)]
+pub struct PoolHealth {
+    pub workers: Vec<WorkerHealth>,
+    pub in_flight: bool,
+    pub stall: Option<StallReport>,
+}
+
+impl fmt::Display for PoolHealth {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "pool health ({} workers, dispatch {}):",
+            self.workers.len(),
+            if self.in_flight { "in flight" } else { "idle" }
+        )?;
+        for w in &self.workers {
+            writeln!(f, "  worker {}: phase {}, epoch {}", w.id, w.phase, w.epoch)?;
+        }
+        if let Some(s) = &self.stall {
+            writeln!(f, "  {s}")?;
+        }
+        Ok(())
+    }
+}
+
+/// One cache-line-padded progress word per worker: `epoch << 3 | phase`.
+/// Written `Relaxed` by the owning worker (it is diagnostic state, not a
+/// synchronization edge) and sampled by the watchdog thread and `health()`.
+/// The 3-bit phase truncates epochs above 2^61 — far beyond any run.
+#[derive(Debug, Default)]
+#[repr(align(64))]
+struct ProgressCell(AtomicU64);
 
 /// Per-dispatch context a worker receives: its id, the dispatch width, and
 /// the pool's reusable barrier for intra-step phase boundaries.
@@ -35,7 +219,7 @@ pub struct WorkerCtx<'p> {
     pub id: usize,
     /// Number of workers in this dispatch.
     pub workers: usize,
-    barrier: &'p PoolBarrier,
+    ctrl: &'p Control,
 }
 
 impl WorkerCtx<'_> {
@@ -44,8 +228,39 @@ impl WorkerCtx<'_> {
     /// closure must call it unconditionally (same count on every worker) or
     /// the pool deadlocks. Panics if a peer worker panicked this dispatch,
     /// so a failing worker releases the others instead of stranding them.
+    ///
+    /// Deadline-aware: if the pool has a wait deadline configured (it does
+    /// by default, [`DEFAULT_WAIT_DEADLINE`]) and the cohort does not form
+    /// within it, this poisons the dispatch and raises a [`StallError`]
+    /// with `phase == Barrier`, so one absent worker cannot strand the
+    /// rest forever.
     pub fn barrier(&self) {
-        self.barrier.wait(self.workers);
+        let deadline = self.ctrl.deadline();
+        match self.ctrl.barrier.wait_deadline(self.workers, deadline) {
+            BarrierWait::Released => {}
+            BarrierWait::Poisoned => {
+                panic!("a pool worker panicked during this dispatch")
+            }
+            BarrierWait::TimedOut(waited) => {
+                self.ctrl.barrier.poison();
+                let word = self.ctrl.progress[self.id].0.load(Ordering::Relaxed);
+                std::panic::panic_any(StallError {
+                    waiter: self.id,
+                    peer: None,
+                    epoch: word >> 3,
+                    phase: Phase::Barrier,
+                    waited,
+                });
+            }
+        }
+    }
+
+    /// Advertise the protocol phase this worker is entering at `epoch`.
+    /// Purely diagnostic (`Relaxed` store into this worker's progress
+    /// cell): the watchdog and [`WorkerPool::health`] read it to name the
+    /// lagging worker and phase when progress stops.
+    pub fn note_phase(&self, phase: Phase, epoch: u64) {
+        self.ctrl.progress[self.id].0.store((epoch << 3) | phase as u64, Ordering::Relaxed);
     }
 
     /// The split-phase wait primitive: spin (then yield) until `flag`
@@ -64,9 +279,12 @@ impl WorkerCtx<'_> {
     ///
     /// Preserves the poisoned-barrier panic-propagation semantics: if a peer
     /// worker panics before publishing, the pool poisons the dispatch and
-    /// this wait panics too instead of spinning forever.
-    pub fn wait_for_epoch(&self, flag: &AtomicU64, target: u64) {
-        self.spin_until(flag, target);
+    /// this wait panics too instead of spinning forever. Additionally
+    /// deadline-aware (see [`wait_flag`](Self::wait_flag) internals): a
+    /// peer that never publishes converts into a [`StallError`] naming
+    /// `peer` and `target` instead of an unbounded spin.
+    pub fn wait_for_epoch(&self, flag: &AtomicU64, target: u64, peer: usize) {
+        self.wait_flag(flag, target, peer, Phase::Transfer);
     }
 
     /// The pipeline back-pressure wait: spin until a *consumed-epoch* flag
@@ -85,21 +303,58 @@ impl WorkerCtx<'_> {
     ///
     /// Poison-aware exactly like `wait_for_epoch`: a peer panic releases
     /// this wait with a panic instead of a hang.
-    pub fn wait_for_ack(&self, flag: &AtomicU64, target: u64) {
-        self.spin_until(flag, target);
+    pub fn wait_for_ack(&self, flag: &AtomicU64, target: u64, peer: usize) {
+        self.wait_flag(flag, target, peer, Phase::AckGate);
     }
 
-    fn spin_until(&self, flag: &AtomicU64, target: u64) {
-        let mut spins = 0u32;
-        while flag.load(Ordering::Acquire) < target {
-            if self.barrier.is_poisoned() {
+    /// The spin → yield → timed-park ladder shared by both flag waits.
+    ///
+    /// * ~128 clock-free spins cover the common case (the peer is one store
+    ///   away);
+    /// * then yielding rounds, still cheap, for waits in the scheduling-
+    ///   quantum range;
+    /// * then `park_timeout` slices, so a long wait burns no CPU while
+    ///   still polling the flag, the poison flag, and the deadline.
+    ///
+    /// On deadline expiry the waiter poisons the dispatch (releasing every
+    /// peer parked at a barrier or flag wait) and raises a structured
+    /// [`StallError`] identifying itself, the absent peer, the epoch it
+    /// needed and the protocol phase it stalled in.
+    fn wait_flag(&self, flag: &AtomicU64, target: u64, peer: usize, phase: Phase) {
+        for _ in 0..128 {
+            if flag.load(Ordering::Acquire) >= target {
+                return;
+            }
+            std::hint::spin_loop();
+        }
+        let deadline = self.ctrl.deadline();
+        let start = Instant::now();
+        let mut rounds = 0u32;
+        loop {
+            if flag.load(Ordering::Acquire) >= target {
+                return;
+            }
+            if self.ctrl.barrier.is_poisoned() {
                 panic!("a pool worker panicked during this dispatch");
             }
-            spins += 1;
-            if spins < 128 {
-                std::hint::spin_loop();
-            } else {
+            if let Some(d) = deadline {
+                let waited = start.elapsed();
+                if waited >= d {
+                    self.ctrl.barrier.poison();
+                    std::panic::panic_any(StallError {
+                        waiter: self.id,
+                        peer: Some(peer),
+                        epoch: target,
+                        phase,
+                        waited,
+                    });
+                }
+            }
+            rounds += 1;
+            if rounds < 4096 {
                 std::thread::yield_now();
+            } else {
+                std::thread::park_timeout(Duration::from_micros(100));
             }
         }
     }
@@ -121,6 +376,19 @@ impl WorkerCtx<'_> {
 /// The counters are monotone across steps and survive pool dispatches, so a
 /// runtime can keep one `EpochFlags` for its whole lifetime; padding keeps
 /// the per-thread stores from false-sharing the waiters' loads.
+///
+/// # u64 epoch semantics
+///
+/// Epochs are plain `u64` counters that start at 0 (nothing published) and
+/// only ever grow; they are never reset and never wrap in practice (at one
+/// epoch per nanosecond, overflow takes ~584 years), so the protocol code
+/// compares them with ordinary `>=` and no wraparound handling exists
+/// anywhere. All protocols that share a set of flags (sync, overlapped,
+/// pipelined) must also share a single monotone epoch source — the runtime
+/// owns one `epoch` counter and bumps it for every step regardless of
+/// protocol, which is what makes protocol mixing safe. [`publish`]
+/// (EpochFlags::publish) enforces the invariant: moving a flag backwards
+/// is a protocol bug and panics immediately.
 #[derive(Debug, Default)]
 pub struct EpochFlags {
     flags: Vec<PaddedEpoch>,
@@ -155,7 +423,19 @@ impl EpochFlags {
     /// writes / unpack reads of the epoch before the store — see
     /// [`WorkerCtx::wait_for_epoch`] / [`WorkerCtx::wait_for_ack`] for the
     /// matching `Acquire` side.
+    ///
+    /// Panics if the publish would move the flag backwards: each flag is a
+    /// single-writer monotone counter, so a smaller epoch means two
+    /// protocol drivers disagree about the shared epoch sequence (e.g. a
+    /// driver kept a private counter instead of the runtime's). The check
+    /// is a `Relaxed` load of the writer's own cache line — effectively
+    /// free — so it is enforced in release builds too.
     pub fn publish(&self, t: usize, epoch: u64) {
+        let prev = self.flags[t].0.load(Ordering::Relaxed);
+        assert!(
+            epoch >= prev,
+            "EpochFlags::publish would move thread {t}'s flag backwards ({prev} -> {epoch})"
+        );
         self.flags[t].0.store(epoch, Ordering::Release);
     }
 
@@ -180,11 +460,22 @@ struct PoolBarrier {
 }
 
 struct BarrierState {
-    /// Workers currently parked in `wait`.
+    /// Workers currently parked in `wait_deadline`.
     count: usize,
     /// Bumped each time a full cohort is released.
     generation: u64,
     poisoned: bool,
+}
+
+/// Outcome of [`PoolBarrier::wait_deadline`].
+enum BarrierWait {
+    /// The full cohort arrived.
+    Released,
+    /// A peer panicked (or stalled) and poisoned the dispatch.
+    Poisoned,
+    /// The deadline expired before the cohort formed; carries the actual
+    /// wait time.
+    TimedOut(Duration),
 }
 
 impl PoolBarrier {
@@ -205,28 +496,46 @@ impl PoolBarrier {
         self.poisoned_fast.load(Ordering::Acquire)
     }
 
-    fn wait(&self, workers: usize) {
+    /// Wait for the cohort, with an optional deadline. Returns instead of
+    /// panicking so the caller ([`WorkerCtx::barrier`]) decides how each
+    /// outcome unwinds; nothing panics while the state guard is held, so
+    /// the mutex is never poisoned (waiters and `reset` keep using plain
+    /// `unwrap`).
+    fn wait_deadline(&self, workers: usize, deadline: Option<Duration>) -> BarrierWait {
         let mut st = self.state.lock().unwrap();
-        let mut poisoned = st.poisoned;
-        if !poisoned {
-            st.count += 1;
-            if st.count == workers {
-                st.count = 0;
-                st.generation += 1;
-                self.cv.notify_all();
-                return;
-            }
-            let gen = st.generation;
-            while st.generation == gen && !st.poisoned {
-                st = self.cv.wait(st).unwrap();
-            }
-            poisoned = st.poisoned;
+        if st.poisoned {
+            return BarrierWait::Poisoned;
         }
-        // Panic only after the guard is gone, so the mutex is never
-        // poisoned (waiters and `reset` keep using plain `unwrap`).
-        drop(st);
-        if poisoned {
-            panic!("a pool worker panicked during this dispatch");
+        st.count += 1;
+        if st.count == workers {
+            st.count = 0;
+            st.generation += 1;
+            self.cv.notify_all();
+            return BarrierWait::Released;
+        }
+        let gen = st.generation;
+        let start = Instant::now();
+        while st.generation == gen && !st.poisoned {
+            match deadline {
+                Some(d) => {
+                    let waited = start.elapsed();
+                    if waited >= d {
+                        // Withdraw from the cohort so a late full count
+                        // cannot release a generation this waiter already
+                        // gave up on; the caller poisons next, which
+                        // releases everyone else.
+                        st.count -= 1;
+                        return BarrierWait::TimedOut(waited);
+                    }
+                    st = self.cv.wait_timeout(st, d - waited).unwrap().0;
+                }
+                None => st = self.cv.wait(st).unwrap(),
+            }
+        }
+        if st.poisoned {
+            BarrierWait::Poisoned
+        } else {
+            BarrierWait::Released
         }
     }
 
@@ -271,6 +580,22 @@ struct Control {
     work_cv: Condvar,
     done_cv: Condvar,
     barrier: PoolBarrier,
+    /// Configured wait deadline in nanoseconds; 0 means "no deadline".
+    /// Read `Relaxed` at the start of every flag/barrier wait.
+    deadline_ns: AtomicU64,
+    /// One progress word per worker (see [`ProgressCell`]).
+    progress: Vec<ProgressCell>,
+    /// The watchdog's sticky stall report; cleared at each dispatch start.
+    stall_report: Mutex<Option<StallReport>>,
+}
+
+impl Control {
+    fn deadline(&self) -> Option<Duration> {
+        match self.deadline_ns.load(Ordering::Relaxed) {
+            0 => None,
+            ns => Some(Duration::from_nanos(ns)),
+        }
+    }
 }
 
 /// A persistent pool of worker threads, one per logical UPC thread.
@@ -279,14 +604,35 @@ struct Control {
 /// keeps them across calls, so steady-state time stepping never creates a
 /// thread. Resizing (a run shape change) tears the old workers down and
 /// spawns fresh ones — paid once per shape, like the plan compile itself.
-#[derive(Default)]
+///
+/// Every pool also runs a low-cadence watchdog thread that samples the
+/// workers' progress words and records a [`StallReport`] when an in-flight
+/// dispatch makes no progress for a window — readable via
+/// [`health`](WorkerPool::health) even before (or without) a wait deadline
+/// converting the stall into a [`StallError`].
 pub struct WorkerPool {
     workers: Vec<JoinHandle<()>>,
     control: Option<Arc<Control>>,
+    watchdog: Option<JoinHandle<()>>,
+    /// Deadline applied to every flag/barrier wait; `None` disables it
+    /// (the pre-deadline unbounded behavior).
+    deadline: Option<Duration>,
     /// Completed `run` calls — the protocol-level "how many wakeups did
     /// this cost" counter the pipelined driver's tests assert on (one
     /// dispatch per S-step batch).
     dispatches: u64,
+}
+
+impl Default for WorkerPool {
+    fn default() -> WorkerPool {
+        WorkerPool {
+            workers: Vec::new(),
+            control: None,
+            watchdog: None,
+            deadline: Some(DEFAULT_WAIT_DEADLINE),
+            dispatches: 0,
+        }
+    }
 }
 
 impl fmt::Debug for WorkerPool {
@@ -310,6 +656,46 @@ impl WorkerPool {
         self.dispatches
     }
 
+    /// Set (or with `None`, disable) the deadline applied to every
+    /// [`WorkerCtx::wait_for_epoch`] / [`WorkerCtx::wait_for_ack`] /
+    /// [`WorkerCtx::barrier`] wait. Defaults to [`DEFAULT_WAIT_DEADLINE`].
+    /// Takes effect for waits that *start* after the call.
+    pub fn set_wait_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline = deadline;
+        if let Some(control) = &self.control {
+            let ns = deadline.map_or(0, |d| d.as_nanos() as u64);
+            control.deadline_ns.store(ns, Ordering::Relaxed);
+        }
+    }
+
+    /// The currently configured wait deadline.
+    pub fn wait_deadline(&self) -> Option<Duration> {
+        self.deadline
+    }
+
+    /// Snapshot the pool's health: each worker's last-reported phase and
+    /// epoch, whether a dispatch is in flight, and the watchdog's stall
+    /// report if the current (or just-finished) dispatch stopped making
+    /// progress.
+    pub fn health(&self) -> PoolHealth {
+        let Some(control) = &self.control else {
+            return PoolHealth::default();
+        };
+        let workers = control
+            .progress
+            .iter()
+            .enumerate()
+            .map(|(id, cell)| {
+                let word = cell.0.load(Ordering::Relaxed);
+                let (epoch, phase) = (word >> 3, Phase::from_u8((word & 7) as u8));
+                WorkerHealth { id, epoch, phase }
+            })
+            .collect();
+        let in_flight = control.state.lock().unwrap().remaining > 0;
+        let stall = control.stall_report.lock().unwrap().clone();
+        PoolHealth { workers, in_flight, stall }
+    }
+
     /// Run `job(ctx)` on every one of `n` persistent workers and block until
     /// all of them finished. The closure is shared (`Fn + Sync`): per-worker
     /// mutable state goes through [`PerWorker`] / [`ArenaView`].
@@ -325,6 +711,12 @@ impl WorkerPool {
         self.dispatches += 1;
         let control = self.control.as_ref().expect("ensure spawned workers");
         control.barrier.reset();
+        // Fresh dispatch: workers start phase-less and the previous
+        // dispatch's stall report (if any) is stale.
+        for cell in &control.progress {
+            cell.0.store(0, Ordering::Relaxed);
+        }
+        *control.stall_report.lock().unwrap() = None;
         // SAFETY: erase the borrow lifetime. The pointer is cleared and
         // never dereferenced again after the wait below observes that every
         // worker completed the epoch, which happens before `run` returns.
@@ -362,6 +754,9 @@ impl WorkerPool {
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
             barrier: PoolBarrier::new(),
+            deadline_ns: AtomicU64::new(self.deadline.map_or(0, |d| d.as_nanos() as u64)),
+            progress: (0..n).map(|_| ProgressCell::default()).collect(),
+            stall_report: Mutex::new(None),
         });
         self.workers = (0..n)
             .map(|id| {
@@ -372,6 +767,13 @@ impl WorkerPool {
                     .expect("spawn pool worker")
             })
             .collect();
+        self.watchdog = Some({
+            let control = Arc::clone(&control);
+            std::thread::Builder::new()
+                .name("upc-watchdog".to_string())
+                .spawn(move || watchdog_loop(&control))
+                .expect("spawn pool watchdog")
+        });
         self.control = Some(control);
     }
 
@@ -380,6 +782,9 @@ impl WorkerPool {
             control.state.lock().unwrap().shutdown = true;
             control.work_cv.notify_all();
             for w in self.workers.drain(..) {
+                let _ = w.join();
+            }
+            if let Some(w) = self.watchdog.take() {
                 let _ = w.join();
             }
         }
@@ -412,19 +817,80 @@ fn worker_loop(id: usize, workers: usize, control: &Control) {
         // reports completion below. AssertUnwindSafe: on panic the leader
         // re-raises before any torn state can be observed (scope semantics).
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            (unsafe { &*job })(WorkerCtx { id, workers, barrier: &control.barrier });
+            (unsafe { &*job })(WorkerCtx { id, workers, ctrl: control });
         }));
         if result.is_err() {
             control.barrier.poison();
         }
         let mut st = control.state.lock().unwrap();
         if let Err(payload) = result {
-            st.panic.get_or_insert(payload);
+            // Keep the most informative payload: a stalled waiter's
+            // structured StallError beats the generic "peer panicked"
+            // panics the poison fans out to everyone else, regardless of
+            // which worker happens to drain first.
+            let incoming_stall = StallError::from_panic(payload.as_ref()).is_some();
+            match &st.panic {
+                None => st.panic = Some(payload),
+                Some(kept) => {
+                    let kept_stall = StallError::from_panic(kept.as_ref()).is_some();
+                    if incoming_stall && !kept_stall {
+                        st.panic = Some(payload);
+                    }
+                }
+            }
         }
         st.remaining -= 1;
         if st.remaining == 0 {
             control.done_cv.notify_one();
         }
+    }
+}
+
+/// The stall watchdog: samples every worker's progress word at a low
+/// cadence and, when an in-flight dispatch shows no movement for a full
+/// window, records a sticky [`StallReport`] naming the lagging worker
+/// (lowest progress word) and its phase/epoch. Detection only — the wait
+/// deadline is what converts a stall into an error — but it fires earlier
+/// than the deadline and gives `health()` something to show.
+fn watchdog_loop(control: &Control) {
+    const CADENCE: Duration = Duration::from_millis(25);
+    const WINDOW: Duration = Duration::from_millis(250);
+    fn sample(c: &Control) -> Vec<u64> {
+        c.progress.iter().map(|p| p.0.load(Ordering::Relaxed)).collect()
+    }
+    let mut last = sample(control);
+    let mut last_change = Instant::now();
+    loop {
+        std::thread::sleep(CADENCE);
+        let in_flight = {
+            let st = control.state.lock().unwrap();
+            if st.shutdown {
+                return;
+            }
+            st.remaining > 0
+        };
+        let now = sample(control);
+        if now != last || !in_flight {
+            last = now;
+            last_change = Instant::now();
+            continue;
+        }
+        let stalled_for = last_change.elapsed();
+        if stalled_for < WINDOW {
+            continue;
+        }
+        let (worker, word) = last
+            .iter()
+            .copied()
+            .enumerate()
+            .min_by_key(|&(_, w)| w)
+            .expect("pool has at least one worker");
+        *control.stall_report.lock().unwrap() = Some(StallReport {
+            worker,
+            epoch: word >> 3,
+            phase: Phase::from_u8((word & 7) as u8),
+            stalled_for,
+        });
     }
 }
 
@@ -597,7 +1063,7 @@ mod tests {
                 unsafe { av.slice_mut(t..t + 1) }[0] = (epoch as usize * 100 + t) as f64;
                 flags.publish(t, epoch);
                 let peer = (t + 1) % ctx.workers;
-                ctx.wait_for_epoch(flags.flag(peer), epoch);
+                ctx.wait_for_epoch(flags.flag(peer), epoch, peer);
                 // SAFETY: peer's write is ordered before its Release
                 // publish, and the Acquire wait observed it.
                 let v = unsafe { av.slice(peer..peer + 1) }[0];
@@ -628,7 +1094,7 @@ mod tests {
                 if ctx.id == 0 {
                     // Producer: respect the consumer's consumed-epoch ack.
                     if epoch > 2 {
-                        ctx.wait_for_ack(acks_ref.flag(1), epoch - 2);
+                        ctx.wait_for_ack(acks_ref.flag(1), epoch - 2, 1);
                     }
                     let half = (epoch % 2) as usize;
                     // SAFETY: the ack wait ordered the consumer's reads of
@@ -636,7 +1102,7 @@ mod tests {
                     unsafe { av.slice_mut(half..half + 1) }[0] = epoch as f64;
                     flags_ref.publish(0, epoch);
                 } else {
-                    ctx.wait_for_epoch(flags_ref.flag(0), epoch);
+                    ctx.wait_for_epoch(flags_ref.flag(0), epoch, 0);
                     let half = (epoch % 2) as usize;
                     // SAFETY: the publish wait ordered the producer's write
                     // before this read; the ack below orders the read
@@ -665,7 +1131,7 @@ mod tests {
                     panic!("boom before ack");
                 }
                 acks.publish(ctx.id, 1);
-                ctx.wait_for_ack(acks.flag(2), 1);
+                ctx.wait_for_ack(acks.flag(2), 1, 2);
             });
         }));
         assert!(res.is_err(), "worker panic must reach the dispatcher");
@@ -701,7 +1167,7 @@ mod tests {
                     panic!("boom before publish");
                 }
                 flags.publish(ctx.id, 1);
-                ctx.wait_for_epoch(flags.flag(2), 1);
+                ctx.wait_for_epoch(flags.flag(2), 1, 2);
             });
         }));
         assert!(res.is_err(), "worker panic must reach the dispatcher");
@@ -743,5 +1209,172 @@ mod tests {
             });
             assert!(sums.iter().all(|&s| s == 499_500));
         }
+    }
+
+    #[test]
+    fn stalled_epoch_wait_raises_stall_error() {
+        // Worker 0 simply never publishes; worker 1's deadline-bounded wait
+        // must convert into a structured StallError naming waiter, peer,
+        // epoch and phase — not an infinite spin.
+        let mut pool = WorkerPool::new();
+        pool.set_wait_deadline(Some(Duration::from_millis(50)));
+        let flags = EpochFlags::new(2);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, &|ctx| {
+                if ctx.id == 1 {
+                    ctx.note_phase(Phase::Transfer, 1);
+                    ctx.wait_for_epoch(flags.flag(0), 1, 0);
+                }
+            });
+        }));
+        let payload = res.expect_err("stall must unwind the dispatcher");
+        let stall = StallError::from_panic(payload.as_ref())
+            .expect("payload must carry the StallError");
+        assert_eq!(stall.waiter, 1);
+        assert_eq!(stall.peer, Some(0));
+        assert_eq!(stall.epoch, 1);
+        assert_eq!(stall.phase, Phase::Transfer);
+        assert!(stall.waited >= Duration::from_millis(50));
+        // The pool survives and later dispatches are clean.
+        let hits = AtomicU64::new(0);
+        pool.run(2, &|ctx| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            ctx.barrier();
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn stalled_ack_wait_raises_stall_error() {
+        let mut pool = WorkerPool::new();
+        pool.set_wait_deadline(Some(Duration::from_millis(50)));
+        let acks = EpochFlags::new(2);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, &|ctx| {
+                if ctx.id == 0 {
+                    ctx.wait_for_ack(acks.flag(1), 3, 1);
+                }
+            });
+        }));
+        let payload = res.expect_err("stall must unwind the dispatcher");
+        let stall = StallError::from_panic(payload.as_ref()).expect("StallError payload");
+        assert_eq!((stall.waiter, stall.peer), (0, Some(1)));
+        assert_eq!(stall.phase, Phase::AckGate);
+    }
+
+    #[test]
+    fn stalled_barrier_raises_stall_error() {
+        // Worker 0 returns without ever reaching the barrier; worker 1 must
+        // time out with phase == Barrier instead of waiting forever.
+        let mut pool = WorkerPool::new();
+        pool.set_wait_deadline(Some(Duration::from_millis(50)));
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, &|ctx| {
+                if ctx.id == 1 {
+                    ctx.note_phase(Phase::Pack, 7);
+                    ctx.barrier();
+                }
+            });
+        }));
+        let payload = res.expect_err("barrier stall must unwind the dispatcher");
+        let stall = StallError::from_panic(payload.as_ref()).expect("StallError payload");
+        assert_eq!(stall.waiter, 1);
+        assert_eq!(stall.peer, None);
+        assert_eq!(stall.phase, Phase::Barrier);
+        assert_eq!(stall.epoch, 7, "barrier stall reports the waiter's own epoch");
+    }
+
+    #[test]
+    fn stall_error_beats_generic_poison_payload() {
+        // Three workers park at the barrier while one stalls on a flag wait:
+        // whichever order the panics drain in, the dispatcher must see the
+        // StallError, not a generic "peer panicked".
+        let mut pool = WorkerPool::new();
+        pool.set_wait_deadline(Some(Duration::from_millis(50)));
+        let flags = EpochFlags::new(4);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, &|ctx| {
+                if ctx.id == 3 {
+                    ctx.wait_for_epoch(flags.flag(0), 9, 0);
+                } else {
+                    // Arrive at the barrier well after worker 3's deadline
+                    // has fired, so the generic poison panic is what these
+                    // workers raise (not barrier stalls of their own).
+                    std::thread::sleep(Duration::from_millis(150));
+                    ctx.barrier(); // released (with a panic) by the poison
+                }
+            });
+        }));
+        let payload = res.expect_err("stall must unwind the dispatcher");
+        let stall = StallError::from_panic(payload.as_ref())
+            .expect("dispatcher must prefer the StallError payload");
+        assert_eq!((stall.waiter, stall.epoch), (3, 9));
+    }
+
+    #[test]
+    fn disabled_deadline_keeps_waits_unbounded() {
+        // With the deadline off, a slow (but live) publisher must not trip
+        // anything: the waiter just waits.
+        let mut pool = WorkerPool::new();
+        pool.set_wait_deadline(None);
+        let flags = EpochFlags::new(2);
+        pool.run(2, &|ctx| {
+            if ctx.id == 0 {
+                std::thread::sleep(Duration::from_millis(30));
+                flags.publish(0, 1);
+            } else {
+                ctx.wait_for_epoch(flags.flag(0), 1, 0);
+            }
+        });
+        assert_eq!(flags.load(0), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn publish_backwards_panics() {
+        let flags = EpochFlags::new(1);
+        flags.publish(0, 5);
+        flags.publish(0, 3);
+    }
+
+    #[test]
+    fn watchdog_reports_lagging_worker() {
+        // Both workers advertise a phase then stop moving for longer than
+        // the watchdog window; the sticky report must name the worker with
+        // the lowest progress word and survive until the next dispatch.
+        let mut pool = WorkerPool::new();
+        pool.run(2, &|ctx| {
+            if ctx.id == 0 {
+                ctx.note_phase(Phase::Pack, 3);
+            } else {
+                ctx.note_phase(Phase::Unpack, 5);
+            }
+            std::thread::sleep(Duration::from_millis(700));
+        });
+        let health = pool.health();
+        assert!(!health.in_flight);
+        assert_eq!(health.workers.len(), 2);
+        assert_eq!(health.workers[0].phase, Phase::Pack);
+        assert_eq!(health.workers[0].epoch, 3);
+        assert_eq!(health.workers[1].phase, Phase::Unpack);
+        assert_eq!(health.workers[1].epoch, 5);
+        let stall = health.stall.expect("watchdog must have recorded the stall");
+        assert_eq!(stall.worker, 0, "lagging worker is the lowest progress word");
+        assert_eq!(stall.phase, Phase::Pack);
+        assert_eq!(stall.epoch, 3);
+        assert!(stall.stalled_for >= Duration::from_millis(250));
+        // A fresh dispatch clears the sticky report.
+        pool.run(2, &|_| {});
+        assert!(pool.health().stall.is_none());
+    }
+
+    #[test]
+    fn health_on_fresh_pool_is_empty() {
+        let pool = WorkerPool::new();
+        let health = pool.health();
+        assert!(health.workers.is_empty());
+        assert!(!health.in_flight);
+        assert!(health.stall.is_none());
+        assert_eq!(pool.wait_deadline(), Some(DEFAULT_WAIT_DEADLINE));
     }
 }

@@ -9,7 +9,7 @@
 //! steady-state step allocates nothing and spawns nothing on either engine.
 
 use crate::comm::{ComputeSplit, StridedBlock, StridedPlan};
-use crate::engine::{Engine, ExchangeRuntime};
+use crate::engine::{check_plan_hash, Checkpoint, Engine, ExchangeRuntime};
 use crate::model::HeatGrid;
 
 /// Compile the grid's halo exchange into a strided block-copy plan.
@@ -131,6 +131,76 @@ impl Heat2dSolver {
     /// The compiled exchange runtime (plan + arena + pool).
     pub fn runtime(&self) -> &ExchangeRuntime {
         &self.runtime
+    }
+
+    /// Mutable runtime access — for configuring wait deadlines and fault
+    /// plans on the underlying pool.
+    pub fn runtime_mut(&mut self) -> &mut ExchangeRuntime {
+        &mut self.runtime
+    }
+
+    /// Structural fingerprint of the compiled halo plan (stamped into
+    /// checkpoints).
+    pub fn plan_fingerprint(&self) -> u64 {
+        self.runtime.plan_fingerprint()
+    }
+
+    /// Snapshot the solver between batches: both field buffers, the byte
+    /// counter, and the plan fingerprint. `step` is caller-stamped (steps
+    /// completed so far, by the caller's own count).
+    pub fn checkpoint(&self, step: u64) -> Checkpoint {
+        Checkpoint {
+            step,
+            plan_hash: self.plan_fingerprint(),
+            fields: self.phi.clone(),
+            scratch: self.phin.clone(),
+            inter_thread_bytes: self.inter_thread_bytes,
+        }
+    }
+
+    /// Restore a snapshot taken by [`checkpoint`](Self::checkpoint).
+    /// Verifies the plan fingerprint and the field shapes, then overwrites
+    /// both buffers and the byte counter; returns the checkpoint's step
+    /// stamp. The runtime's monotone exchange epochs are deliberately *not*
+    /// reset — the pipelined ack gate skips a batch's first two epochs, so
+    /// resuming is safe at any epoch.
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<u64, String> {
+        check_plan_hash("heat2d", self.plan_fingerprint(), ck.plan_hash)?;
+        let (m, n) = self.grid.subdomain();
+        if ck.fields.len() != self.grid.threads() || ck.scratch.len() != self.grid.threads() {
+            return Err("heat2d checkpoint thread count mismatch".into());
+        }
+        if ck.fields.iter().chain(&ck.scratch).any(|f| f.len() != m * n) {
+            return Err("heat2d checkpoint field shape mismatch".into());
+        }
+        self.phi.clone_from(&ck.fields);
+        self.phin.clone_from(&ck.scratch);
+        self.inter_thread_bytes = ck.inter_thread_bytes;
+        Ok(ck.step)
+    }
+
+    /// Run `steps` pipelined time steps in batches of `every`, handing a
+    /// checkpoint to `sink` after each batch. Bitwise identical to one
+    /// [`run_pipelined_with`](Self::run_pipelined_with) call over `steps`:
+    /// the pipelined protocol is itself bitwise identical to chained
+    /// batches, and each batch starts from the fields the previous one
+    /// left under `phi`. Checkpoints are stamped with steps completed
+    /// within this call; a resuming caller offsets by its own base count.
+    pub fn run_pipelined_checkpointed_with(
+        &mut self,
+        engine: Engine,
+        steps: usize,
+        every: usize,
+        sink: &mut dyn FnMut(Checkpoint),
+    ) {
+        let every = every.max(1);
+        let mut done = 0usize;
+        while done < steps {
+            let batch = (steps - done).min(every);
+            self.run_pipelined_with(engine, batch);
+            done += batch;
+            sink(self.checkpoint(done as u64));
+        }
     }
 
     /// The compiled interior/boundary decomposition.

@@ -19,6 +19,9 @@
 //!   predicted (calibrated models) for all four variants plus the grid
 //!   workloads.
 //! * `repro validate pjrt` — numeric equivalence native ↔ PJRT artifacts.
+//! * `repro chaos` — fault-injection drill: verifies injected protocol
+//!   faults convert to structured stalls/poisons within the wait deadline,
+//!   then a checkpoint/restart round-trip.
 //!
 //! Every model/simulator consumer takes `--hw abel|host|file:<path>` to
 //! select the hardware parameter set (paper constants, a fresh host
@@ -103,6 +106,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "run" => cmd_run(args),
         "heat" => cmd_heat(args),
         "stencil" => cmd_stencil(args),
+        "chaos" => cmd_chaos(args),
         "validate" => match args.positional.first().map(|s| s.as_str()) {
             None | Some("model") => cmd_validate_model(args),
             Some("pjrt") => cmd_validate_pjrt(args),
@@ -138,6 +142,13 @@ SUBCOMMANDS
   stencil     3D 7-point-stencil diffusion on the same exchange runtime
               (--p 64 --pprocs 1 --mprocs 2 --nprocs 2 --steps 20;
               --overlap / --pipeline S as above)
+  chaos       fault-injection drill: inject delayed/dropped publishes,
+              phase-targeted panics and slow receivers into the pipelined
+              protocol on heat2d, stencil3d and SpMV V3, and verify every
+              fault converts to a structured stall/poison within the wait
+              deadline; then a checkpoint/restart demo (kill mid-run,
+              resume, compare bitwise). Flags: --deadline-ms D (150),
+              --steps S (6), --seed N (adds a seeded random fault scenario)
   validate [model]  measured-vs-predicted: all four variants plus the
               split-phase overlapped and multi-step pipelined paths (V3,
               heat2d, stencil3d) on the parallel engine, wall-clock vs the
@@ -308,7 +319,23 @@ fn cmd_validate_model(args: &Args) -> Result<()> {
     let json_path: std::path::PathBuf = args.str_flag("json").unwrap_or("BENCH_model.json").into();
     args.finish()?;
     let mut ws = Workspace::new();
-    let report = harness::model_validation(&cfg, &mut ws, steps, pipeline);
+    // A wedged exchange (deadlocked wait, stalled peer) surfaces as a
+    // structured StallError panic from the worker pool; catch it here so
+    // `repro validate` reports *which* wait stalled instead of a bare
+    // abort.
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        harness::model_validation(&cfg, &mut ws, steps, pipeline)
+    }));
+    let report = match caught {
+        Ok(r) => r,
+        Err(payload) => {
+            if let Some(stall) = upcsim::engine::StallError::from_panic(payload.as_ref()) {
+                eprintln!("validation aborted: {stall}");
+                bail!("model validation stalled — see the stall report above");
+            }
+            std::panic::resume_unwind(payload);
+        }
+    };
     harness::emit(&cfg, "validate_model", &report.table);
     std::fs::write(&json_path, report.json.pretty())
         .map_err(|e| anyhow!("cannot write {}: {e}", json_path.display()))?;
@@ -321,6 +348,205 @@ fn cmd_validate_model(args: &Args) -> Result<()> {
         let g = report.workload_geomean(workload);
         println!("{workload:<13} measured/predicted geomean = {g:.2}x");
     }
+    Ok(())
+}
+
+/// How an injected fault ended: a structured stall, a poisoned dispatch, or
+/// a clean completion (which fails the drill — the fault went unnoticed).
+enum ChaosOutcome {
+    Stall(upcsim::engine::StallError),
+    Poison(String),
+    Clean,
+}
+
+impl ChaosOutcome {
+    fn converted(&self) -> bool {
+        !matches!(self, ChaosOutcome::Clean)
+    }
+
+    fn describe(&self) -> String {
+        match self {
+            ChaosOutcome::Stall(s) => format!("stall: {s}"),
+            ChaosOutcome::Poison(msg) => format!("poison: {msg}"),
+            ChaosOutcome::Clean => "completed cleanly".into(),
+        }
+    }
+}
+
+/// Classify a `catch_unwind` result from a fault-injected batch.
+fn classify_chaos(result: std::thread::Result<()>) -> ChaosOutcome {
+    use upcsim::engine::StallError;
+    match result {
+        Ok(()) => ChaosOutcome::Clean,
+        Err(payload) => {
+            if let Some(stall) = StallError::from_panic(payload.as_ref()) {
+                return ChaosOutcome::Stall(stall.clone());
+            }
+            let msg = if let Some(s) = payload.downcast_ref::<&'static str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            ChaosOutcome::Poison(msg)
+        }
+    }
+}
+
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::time::Duration;
+    use upcsim::comm::Analysis;
+    use upcsim::engine::{FaultKind, FaultPlan, Phase, SpmvEngine, INJECTED_DELAY};
+    use upcsim::heat2d::Heat2dSolver;
+    use upcsim::matrix::Ellpack;
+    use upcsim::model::HeatGrid;
+    use upcsim::pgas::{Layout, Topology};
+    use upcsim::spmv::SpmvState;
+    use upcsim::stencil3d::{Stencil3dGrid, Stencil3dSolver};
+
+    let deadline_ms = args.usize_flag("deadline-ms", 150)?;
+    let steps = args.usize_flag("steps", 6)?.max(4);
+    let seed = args.str_flag("seed").map(|s| s.parse::<u64>()).transpose()?;
+    args.finish()?;
+    let deadline = Duration::from_millis(deadline_ms as u64);
+    anyhow::ensure!(
+        deadline < INJECTED_DELAY,
+        "--deadline-ms must stay under the injected delay ({} ms) or delay faults cannot stall",
+        INJECTED_DELAY.as_millis()
+    );
+
+    // Named scenarios: the four fault families, each injected into thread 0
+    // at exchange epoch 2 of a pipelined batch.
+    let mut scenarios: Vec<(String, FaultPlan)> = vec![
+        (
+            "delayed publish".into(),
+            FaultPlan::none().with(0, 2, FaultKind::DelayPublish(INJECTED_DELAY)),
+        ),
+        ("dropped publish".into(), FaultPlan::none().with(0, 2, FaultKind::DropPublish)),
+        ("panic at pack".into(), FaultPlan::none().with(0, 2, FaultKind::PanicAt(Phase::Pack))),
+        (
+            "slow receiver".into(),
+            FaultPlan::none().with(0, 2, FaultKind::SlowReceiver(INJECTED_DELAY)),
+        ),
+    ];
+    if let Some(seed) = seed {
+        // Epochs capped at 2 so ack-side faults still have gated epochs
+        // left in the batch to stall.
+        let plan = FaultPlan::random(seed, 4, 2);
+        scenarios.push((format!("random (seed {seed}): {:?}", plan.faults()[0]), plan));
+    }
+
+    // The drill intentionally panics workers; silence the default hook so
+    // the table below is the report, not a wall of backtraces.
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+
+    let mut rng = upcsim::util::Rng::new(13);
+    let f2d: Vec<f64> = (0..32 * 32).map(|_| rng.f64_in(0.0, 100.0)).collect();
+    let grid2d = HeatGrid::new(32, 32, 2, 2);
+    let f3d: Vec<f64> = (0..16 * 16 * 16).map(|_| rng.f64_in(0.0, 100.0)).collect();
+    let grid3d = Stencil3dGrid::new(16, 16, 16, 1, 2, 2);
+    let mat = Ellpack::random(1500, 8, 5);
+    let bs = mat.n.div_ceil(4 * 4);
+    let layout = Layout::new(mat.n, bs, 4);
+    let analysis = Analysis::build(&mat.j, mat.r_nz, layout, Topology::single_node(4), usize::MAX);
+    let x0 = mat.initial_vector(9);
+
+    let mut table = fmt::Table::new(
+        format!("chaos drill — pipelined protocol, {steps}-step batches, {deadline_ms} ms deadline"),
+        &["Workload", "Injected fault", "Outcome"],
+    );
+    let mut failures = 0usize;
+    for (name, plan) in &scenarios {
+        // heat2d.
+        let mut heat = Heat2dSolver::new(grid2d, &f2d);
+        heat.runtime_mut().set_wait_deadline(Some(deadline));
+        heat.runtime_mut().set_fault_plan(plan.clone());
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            heat.run_pipelined_with(Engine::Parallel, steps);
+        }));
+        let outcome = classify_chaos(res);
+        failures += usize::from(!outcome.converted());
+        table.row(vec!["heat2d".into(), name.clone(), outcome.describe()]);
+
+        // stencil3d.
+        let mut sten = Stencil3dSolver::new(grid3d, &f3d);
+        sten.runtime_mut().set_wait_deadline(Some(deadline));
+        sten.runtime_mut().set_fault_plan(plan.clone());
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            sten.run_pipelined_with(Engine::Parallel, steps);
+        }));
+        let outcome = classify_chaos(res);
+        failures += usize::from(!outcome.converted());
+        table.row(vec!["stencil3d".into(), name.clone(), outcome.describe()]);
+
+        // SpMV V3 pipelined.
+        let mut engine = SpmvEngine::new(Engine::Parallel);
+        engine.set_wait_deadline(Some(deadline));
+        engine.set_fault_plan(plan.clone());
+        let mut state = SpmvState::new(&mat, bs, 4, &x0);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            engine.run_pipelined(steps, &mut state, &analysis);
+        }));
+        let outcome = classify_chaos(res);
+        failures += usize::from(!outcome.converted());
+        table.row(vec!["spmv-v3".into(), name.clone(), outcome.describe()]);
+    }
+    std::panic::set_hook(hook);
+    println!("{}", table.render());
+
+    // Checkpoint/restart round-trip: checkpoint every 2 steps, kill the
+    // continuation with a dropped publish, resume a fresh solver from the
+    // last checkpoint, and demand bitwise identity with an uninterrupted
+    // run.
+    let total = 8usize;
+    let mut reference = Heat2dSolver::new(grid2d, &f2d);
+    reference.run_pipelined_with(Engine::Parallel, total);
+
+    let mut victim = Heat2dSolver::new(grid2d, &f2d);
+    victim.runtime_mut().set_wait_deadline(Some(deadline));
+    let mut last = None;
+    victim.run_pipelined_checkpointed_with(Engine::Parallel, total / 2, 2, &mut |c| {
+        last = Some(c);
+    });
+    let kill_epoch = victim.runtime().epoch() + 1;
+    let kill = FaultPlan::none().with(0, kill_epoch, FaultKind::DropPublish);
+    victim.runtime_mut().set_fault_plan(kill);
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let killed = catch_unwind(AssertUnwindSafe(|| {
+        victim.run_pipelined_with(Engine::Parallel, total - total / 2);
+    }))
+    .is_err();
+    std::panic::set_hook(hook);
+
+    let ck = last.expect("checkpointed run sank at least one checkpoint");
+    let mut resumed = Heat2dSolver::new(grid2d, &f2d);
+    let done = resumed.restore(&ck).map_err(|e| anyhow!(e))? as usize;
+    resumed.run_pipelined_with(Engine::Parallel, total - done);
+    let identical = reference
+        .to_global()
+        .iter()
+        .zip(resumed.to_global().iter())
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    println!(
+        "checkpoint/restart: killed mid-run = {killed}, resumed from step {done}, \
+         bitwise identical to uninterrupted = {identical}, bytes {} vs {}",
+        resumed.inter_thread_bytes, reference.inter_thread_bytes
+    );
+
+    anyhow::ensure!(killed, "the kill fault did not poison the continuation batch");
+    anyhow::ensure!(identical, "resumed run diverged from the uninterrupted run");
+    anyhow::ensure!(
+        resumed.inter_thread_bytes == reference.inter_thread_bytes,
+        "resumed byte counter diverged"
+    );
+    if failures > 0 {
+        bail!("{failures} injected fault(s) completed without a stall or poison");
+    }
+    println!("chaos drill OK: every injected fault converted within the deadline");
     Ok(())
 }
 

@@ -55,6 +55,16 @@ impl SpmvState {
     pub fn y_global(&self) -> Vec<f64> {
         self.y.to_global()
     }
+
+    /// Rebuild `x` and `y` from global vectors — the restore half of the
+    /// SpMV checkpoint. The static arrays (`D`, `A`, `J`) are untouched:
+    /// they never change over a run, so a checkpoint does not carry them.
+    pub fn restore_from(&mut self, x: &[f64], y: &[f64]) {
+        assert_eq!(x.len(), self.layout.n, "checkpoint x length mismatch");
+        assert_eq!(y.len(), self.layout.n, "checkpoint y length mismatch");
+        self.x = SharedVec::from_global(self.layout, x);
+        self.y = SharedVec::from_global(self.layout, y);
+    }
 }
 
 #[cfg(test)]

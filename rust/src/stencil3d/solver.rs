@@ -4,7 +4,7 @@
 
 use super::Stencil3dGrid;
 use crate::comm::{ComputeSplit, StridedBlock, StridedPlan};
-use crate::engine::{Engine, ExchangeRuntime};
+use crate::engine::{check_plan_hash, Checkpoint, Engine, ExchangeRuntime};
 
 /// Compile the six face exchanges into a strided block-copy plan.
 ///
@@ -121,6 +121,70 @@ impl Stencil3dSolver {
     /// The compiled exchange runtime (plan + arena + pool).
     pub fn runtime(&self) -> &ExchangeRuntime {
         &self.runtime
+    }
+
+    /// Mutable runtime access — for configuring wait deadlines and fault
+    /// plans on the underlying pool.
+    pub fn runtime_mut(&mut self) -> &mut ExchangeRuntime {
+        &mut self.runtime
+    }
+
+    /// Structural fingerprint of the compiled face plan (stamped into
+    /// checkpoints).
+    pub fn plan_fingerprint(&self) -> u64 {
+        self.runtime.plan_fingerprint()
+    }
+
+    /// Snapshot the solver between batches: both field buffers, the byte
+    /// counter, and the plan fingerprint. `step` is caller-stamped.
+    pub fn checkpoint(&self, step: u64) -> Checkpoint {
+        Checkpoint {
+            step,
+            plan_hash: self.plan_fingerprint(),
+            fields: self.phi.clone(),
+            scratch: self.phin.clone(),
+            inter_thread_bytes: self.inter_thread_bytes,
+        }
+    }
+
+    /// Restore a snapshot taken by [`checkpoint`](Self::checkpoint), after
+    /// verifying the plan fingerprint and field shapes; returns the
+    /// checkpoint's step stamp. The runtime's monotone exchange epochs are
+    /// *not* reset — resuming is safe at any epoch.
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<u64, String> {
+        check_plan_hash("stencil3d", self.plan_fingerprint(), ck.plan_hash)?;
+        let (p, m, n) = self.grid.subdomain();
+        if ck.fields.len() != self.grid.threads() || ck.scratch.len() != self.grid.threads() {
+            return Err("stencil3d checkpoint thread count mismatch".into());
+        }
+        if ck.fields.iter().chain(&ck.scratch).any(|f| f.len() != p * m * n) {
+            return Err("stencil3d checkpoint field shape mismatch".into());
+        }
+        self.phi.clone_from(&ck.fields);
+        self.phin.clone_from(&ck.scratch);
+        self.inter_thread_bytes = ck.inter_thread_bytes;
+        Ok(ck.step)
+    }
+
+    /// Run `steps` pipelined time steps in batches of `every`, handing a
+    /// checkpoint to `sink` after each batch — bitwise identical to one
+    /// [`run_pipelined_with`](Self::run_pipelined_with) call over `steps`.
+    /// Checkpoints are stamped with steps completed within this call.
+    pub fn run_pipelined_checkpointed_with(
+        &mut self,
+        engine: Engine,
+        steps: usize,
+        every: usize,
+        sink: &mut dyn FnMut(Checkpoint),
+    ) {
+        let every = every.max(1);
+        let mut done = 0usize;
+        while done < steps {
+            let batch = (steps - done).min(every);
+            self.run_pipelined_with(engine, batch);
+            done += batch;
+            sink(self.checkpoint(done as u64));
+        }
     }
 
     /// The compiled interior/boundary decomposition.

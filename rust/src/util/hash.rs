@@ -1,0 +1,94 @@
+//! A tiny FNV-1a 64-bit hasher for structural fingerprints.
+//!
+//! Used to fingerprint compiled communication plans so a checkpoint can
+//! prove it is being restored onto the same exchange structure it was taken
+//! from. Not cryptographic — it only needs to be deterministic across runs
+//! (no RNG, no address-dependent state) and sensitive to any change in the
+//! hashed structure.
+
+/// FNV-1a over explicitly fed words. Feed order matters, so callers should
+/// hash fields in a fixed, documented order.
+#[derive(Debug, Clone)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl Default for Fnv64 {
+    fn default() -> Fnv64 {
+        Fnv64 { state: FNV_OFFSET }
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64::default()
+    }
+
+    /// Feed one byte.
+    #[inline]
+    pub fn write_u8(&mut self, b: u8) {
+        self.state ^= b as u64;
+        self.state = self.state.wrapping_mul(FNV_PRIME);
+    }
+
+    /// Feed a u64 as 8 little-endian bytes.
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.write_u8(b);
+        }
+    }
+
+    /// Feed a usize (widened to u64 so 32- and 64-bit hosts agree).
+    #[inline]
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    /// The digest so far.
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_order_sensitive() {
+        let mut a = Fnv64::new();
+        a.write_u64(1);
+        a.write_u64(2);
+        let mut b = Fnv64::new();
+        b.write_u64(1);
+        b.write_u64(2);
+        assert_eq!(a.finish(), b.finish());
+        let mut c = Fnv64::new();
+        c.write_u64(2);
+        c.write_u64(1);
+        assert_ne!(a.finish(), c.finish(), "order must matter");
+    }
+
+    #[test]
+    fn known_vector() {
+        // FNV-1a of the empty input is the offset basis; of b"a" it is the
+        // published 64-bit test vector.
+        assert_eq!(Fnv64::new().finish(), 0xcbf2_9ce4_8422_2325);
+        let mut h = Fnv64::new();
+        h.write_u8(b'a');
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn usize_matches_u64() {
+        let mut a = Fnv64::new();
+        a.write_usize(77);
+        let mut b = Fnv64::new();
+        b.write_u64(77);
+        assert_eq!(a.finish(), b.finish());
+    }
+}

@@ -5,12 +5,14 @@
 
 pub mod fastdiv;
 pub mod fmt;
+pub mod hash;
 pub mod json;
 pub mod plot;
 pub mod rng;
 pub mod stats;
 
 pub use fastdiv::FastDiv;
+pub use hash::Fnv64;
 pub use rng::Rng;
 pub use stats::Stats;
 

@@ -1,0 +1,413 @@
+//! Fault-injection (chaos) suite for the fault-tolerant exchange runtime.
+//!
+//! Every injected fault — delayed publish, dropped publish, phase-targeted
+//! panic, slow receiver — must deterministically convert into a structured
+//! [`StallError`] or a poisoned dispatch within the configured wait
+//! deadline on all three pipelined workloads (heat-2D, 3D stencil, SpMV
+//! V3); fault/protocol pairs that are benign by design must complete
+//! cleanly and bitwise-correctly. On top of that: poison-at-every-phase
+//! drills (the pool must survive and stay reusable), checkpoint/restart
+//! round-trips that are bitwise identical to uninterrupted runs, and the
+//! mixed-protocol epoch-hygiene regression.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use upcsim::comm::Analysis;
+use upcsim::engine::{Engine, FaultKind, FaultPlan, Phase, SpmvCheckpoint, SpmvEngine, StallError};
+use upcsim::heat2d::Heat2dSolver;
+use upcsim::matrix::Ellpack;
+use upcsim::model::HeatGrid;
+use upcsim::pgas::{Layout, Topology};
+use upcsim::spmv::{SpmvState, Variant};
+use upcsim::stencil3d::{Stencil3dGrid, Stencil3dSolver};
+use upcsim::util::Rng;
+
+/// Short enough to keep the suite fast, long enough to be unambiguous
+/// against scheduler noise.
+const DEADLINE: Duration = Duration::from_millis(60);
+/// Injected sleep: must exceed [`DEADLINE`] so delay faults stall.
+const DELAY: Duration = Duration::from_millis(200);
+const STEPS: usize = 6;
+
+fn random_field(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.f64_in(0.0, 100.0)).collect()
+}
+
+/// The four acceptance fault families, all injected into thread 0 at
+/// exchange epoch 2 (each workload below runs on a fresh runtime, so the
+/// first batch spans epochs `1..=STEPS`).
+fn scenarios() -> Vec<(&'static str, FaultPlan)> {
+    vec![
+        ("delayed publish", FaultPlan::none().with(0, 2, FaultKind::DelayPublish(DELAY))),
+        ("dropped publish", FaultPlan::none().with(0, 2, FaultKind::DropPublish)),
+        ("panic at pack", FaultPlan::none().with(0, 2, FaultKind::PanicAt(Phase::Pack))),
+        ("slow receiver", FaultPlan::none().with(0, 2, FaultKind::SlowReceiver(DELAY))),
+    ]
+}
+
+/// Assert that a faulted batch failed, and failed the *right* way: a
+/// structured stall for timing faults, an "injected fault" poison for
+/// panic faults.
+fn assert_converted(name: &str, workload: &str, result: std::thread::Result<()>) {
+    let payload = match result {
+        Ok(()) => panic!("{workload}/{name}: fault went unnoticed (batch completed)"),
+        Err(p) => p,
+    };
+    if name.contains("panic") {
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&'static str>().map(|s| (*s).to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("injected fault"), "{workload}/{name}: poison message {msg:?}");
+    } else {
+        let stall = StallError::from_panic(payload.as_ref())
+            .unwrap_or_else(|| panic!("{workload}/{name}: expected a StallError payload"));
+        assert!(stall.waited >= DEADLINE, "{workload}/{name}: waited {:?}", stall.waited);
+        assert!(
+            matches!(stall.phase, Phase::Transfer | Phase::AckGate | Phase::Barrier),
+            "{workload}/{name}: stalled in unexpected phase {}",
+            stall.phase
+        );
+    }
+}
+
+#[test]
+fn pipelined_faults_convert_on_heat2d() {
+    let grid = HeatGrid::new(16, 16, 2, 2);
+    let f0 = random_field(16 * 16, 1);
+    for (name, plan) in scenarios() {
+        let mut solver = Heat2dSolver::new(grid, &f0);
+        solver.runtime_mut().set_wait_deadline(Some(DEADLINE));
+        solver.runtime_mut().set_fault_plan(plan);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            solver.run_pipelined_with(Engine::Parallel, STEPS);
+        }));
+        assert_converted(name, "heat2d", res);
+        // The pool survives the poison: health is readable and idle.
+        let health = solver.runtime().health();
+        assert_eq!(health.workers.len(), grid.threads());
+        assert!(!health.in_flight);
+    }
+}
+
+#[test]
+fn pipelined_faults_convert_on_stencil3d() {
+    let grid = Stencil3dGrid::new(8, 8, 8, 1, 2, 2);
+    let f0 = random_field(8 * 8 * 8, 2);
+    for (name, plan) in scenarios() {
+        let mut solver = Stencil3dSolver::new(grid, &f0);
+        solver.runtime_mut().set_wait_deadline(Some(DEADLINE));
+        solver.runtime_mut().set_fault_plan(plan);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            solver.run_pipelined_with(Engine::Parallel, STEPS);
+        }));
+        assert_converted(name, "stencil3d", res);
+    }
+}
+
+fn spmv_fixture() -> (Ellpack, usize, usize, Analysis, Vec<f64>) {
+    let m = Ellpack::random(600, 6, 5);
+    let threads = 4;
+    let bs = m.n.div_ceil(threads * 4);
+    let layout = Layout::new(m.n, bs, threads);
+    let analysis =
+        Analysis::build(&m.j, m.r_nz, layout, Topology::single_node(threads), usize::MAX);
+    let x0 = m.initial_vector(9);
+    (m, bs, threads, analysis, x0)
+}
+
+#[test]
+fn pipelined_faults_convert_on_spmv() {
+    let (m, bs, threads, analysis, x0) = spmv_fixture();
+    for (name, plan) in scenarios() {
+        let mut engine = SpmvEngine::new(Engine::Parallel);
+        engine.set_wait_deadline(Some(DEADLINE));
+        engine.set_fault_plan(plan);
+        let mut state = SpmvState::new(&m, bs, threads, &x0);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            engine.run_pipelined(STEPS, &mut state, &analysis);
+        }));
+        assert_converted(name, "spmv-v3", res);
+    }
+}
+
+/// Dropped publishes/acks are pure bookkeeping under the synchronous
+/// barrier protocol: the batch must complete cleanly *and* bitwise match
+/// the fault-free run.
+#[test]
+fn sync_protocol_ignores_dropped_flags() {
+    let grid = HeatGrid::new(16, 16, 2, 2);
+    let f0 = random_field(16 * 16, 3);
+    let mut clean = Heat2dSolver::new(grid, &f0);
+    for _ in 0..4 {
+        clean.step_with(Engine::Parallel);
+    }
+    let want = clean.to_global();
+    for kind in [FaultKind::DropPublish, FaultKind::DropAck] {
+        let mut faulted = Heat2dSolver::new(grid, &f0);
+        faulted.runtime_mut().set_wait_deadline(Some(DEADLINE));
+        faulted.runtime_mut().set_fault_plan(FaultPlan::none().with(0, 1, kind));
+        for _ in 0..4 {
+            faulted.step_with(Engine::Parallel);
+        }
+        let got = faulted.to_global();
+        assert!(
+            want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "sync batch diverged under a benign {kind:?}"
+        );
+    }
+}
+
+/// A dropped ack is benign on the depth-1 overlapped protocol (no ack gate
+/// ever fires), while a dropped publish stalls it.
+#[test]
+fn overlapped_protocol_fault_matrix() {
+    let grid = HeatGrid::new(16, 16, 2, 2);
+    let f0 = random_field(16 * 16, 4);
+
+    let mut benign = Heat2dSolver::new(grid, &f0);
+    benign.runtime_mut().set_wait_deadline(Some(DEADLINE));
+    benign.runtime_mut().set_fault_plan(FaultPlan::none().with(0, 1, FaultKind::DropAck));
+    for _ in 0..3 {
+        benign.step_overlapped_with(Engine::Parallel);
+    }
+
+    let mut stalled = Heat2dSolver::new(grid, &f0);
+    stalled.runtime_mut().set_wait_deadline(Some(DEADLINE));
+    stalled.runtime_mut().set_fault_plan(FaultPlan::none().with(0, 1, FaultKind::DropPublish));
+    let res = catch_unwind(AssertUnwindSafe(|| {
+        stalled.step_overlapped_with(Engine::Parallel);
+    }));
+    let payload = res.expect_err("a dropped publish must stall the overlapped step");
+    let stall = StallError::from_panic(payload.as_ref()).expect("structured stall");
+    // A neighbour of thread 0 stalls waiting for the dropped flag; a
+    // non-neighbour may reach the closing barrier and time out there
+    // instead, and either report can win the payload race.
+    assert!(matches!(stall.phase, Phase::Transfer | Phase::Barrier));
+    if stall.phase == Phase::Transfer {
+        assert_eq!(stall.peer, Some(0));
+    }
+}
+
+/// Poison the pipelined batch at each instrumented phase in turn; the
+/// dispatch must fail every time, and the pool must remain usable for a
+/// clean, bitwise-correct batch afterwards.
+#[test]
+fn poison_at_every_phase_leaves_pool_reusable() {
+    let grid = HeatGrid::new(16, 16, 2, 2);
+    let f0 = random_field(16 * 16, 5);
+    let mut oracle = Heat2dSolver::new(grid, &f0);
+    oracle.run_pipelined_with(Engine::Sequential, STEPS);
+    let want = oracle.to_global();
+
+    for phase in [Phase::Pack, Phase::Transfer, Phase::Boundary] {
+        let mut solver = Heat2dSolver::new(grid, &f0);
+        solver.runtime_mut().set_wait_deadline(Some(DEADLINE));
+        for thread in [0usize, 3] {
+            // The epoch counter survives poisoned batches (it is bumped up
+            // front), so pin each fault relative to the live counter.
+            let fire_at = solver.runtime().epoch() + 2;
+            solver
+                .runtime_mut()
+                .set_fault_plan(FaultPlan::none().with(thread, fire_at, FaultKind::PanicAt(phase)));
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                solver.run_pipelined_with(Engine::Parallel, STEPS);
+            }));
+            assert!(res.is_err(), "panic at {phase} on thread {thread} did not poison");
+        }
+        // Same solver, same pool: clear the faults, reset the fields, and
+        // demand a bitwise-correct batch.
+        solver.runtime_mut().clear_faults();
+        let fresh = Heat2dSolver::new(grid, &f0);
+        let ck = fresh.checkpoint(0);
+        solver.restore(&ck).expect("same plan, restore must succeed");
+        solver.run_pipelined_with(Engine::Parallel, STEPS);
+        let got = solver.to_global();
+        assert!(
+            want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "pool poisoned at {phase} did not recover to a bitwise-correct batch"
+        );
+    }
+}
+
+/// Checkpoint every C steps, kill the continuation with a sticky dropped
+/// publish, restore a fresh solver from the last checkpoint, finish the
+/// run — the result must be bitwise identical to an uninterrupted run,
+/// byte counters included.
+#[test]
+fn heat2d_checkpoint_restart_is_bitwise() {
+    let grid = HeatGrid::new(16, 16, 2, 2);
+    let f0 = random_field(16 * 16, 6);
+    let total = 10usize;
+
+    let mut reference = Heat2dSolver::new(grid, &f0);
+    reference.run_pipelined_with(Engine::Parallel, total);
+
+    let mut victim = Heat2dSolver::new(grid, &f0);
+    victim.runtime_mut().set_wait_deadline(Some(DEADLINE));
+    let mut last = None;
+    victim.run_pipelined_checkpointed_with(Engine::Parallel, 6, 3, &mut |c| last = Some(c));
+    // Kill the continuation mid-batch (sticky drop from epoch 1 suppresses
+    // every publish of the next batch).
+    victim.runtime_mut().set_fault_plan(FaultPlan::none().with(0, 1, FaultKind::DropPublish));
+    let killed = catch_unwind(AssertUnwindSafe(|| {
+        victim.run_pipelined_with(Engine::Parallel, total - 6);
+    }));
+    assert!(killed.is_err(), "kill fault did not fire");
+
+    let ck = last.expect("at least one checkpoint was sunk");
+    assert_eq!(ck.step, 6);
+    let mut resumed = Heat2dSolver::new(grid, &f0);
+    let done = resumed.restore(&ck).unwrap() as usize;
+    resumed.run_pipelined_with(Engine::Parallel, total - done);
+    assert!(
+        reference
+            .to_global()
+            .iter()
+            .zip(resumed.to_global().iter())
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "resumed run diverges from the uninterrupted run"
+    );
+    assert_eq!(resumed.inter_thread_bytes, reference.inter_thread_bytes);
+}
+
+#[test]
+fn stencil3d_checkpoint_restart_is_bitwise() {
+    let grid = Stencil3dGrid::new(8, 8, 8, 1, 2, 2);
+    let f0 = random_field(8 * 8 * 8, 7);
+    let total = 8usize;
+
+    let mut reference = Stencil3dSolver::new(grid, &f0);
+    reference.run_pipelined_with(Engine::Parallel, total);
+
+    let mut victim = Stencil3dSolver::new(grid, &f0);
+    let mut last = None;
+    victim.run_pipelined_checkpointed_with(Engine::Parallel, 4, 2, &mut |c| last = Some(c));
+    let ck = last.expect("checkpoint sunk");
+    assert_eq!(ck.step, 4);
+
+    let mut resumed = Stencil3dSolver::new(grid, &f0);
+    let done = resumed.restore(&ck).unwrap() as usize;
+    resumed.run_pipelined_with(Engine::Parallel, total - done);
+    assert!(
+        reference
+            .to_global()
+            .iter()
+            .zip(resumed.to_global().iter())
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "resumed stencil3d run diverges"
+    );
+    assert_eq!(resumed.inter_thread_bytes, reference.inter_thread_bytes);
+}
+
+#[test]
+fn spmv_checkpoint_restart_is_bitwise() {
+    let (m, bs, threads, analysis, x0) = spmv_fixture();
+    let total = 10usize;
+
+    let mut ref_engine = SpmvEngine::new(Engine::Parallel);
+    let mut ref_state = SpmvState::new(&m, bs, threads, &x0);
+    ref_engine.run_pipelined(total, &mut ref_state, &analysis);
+
+    let mut victim_engine = SpmvEngine::new(Engine::Parallel);
+    victim_engine.set_wait_deadline(Some(DEADLINE));
+    let mut victim_state = SpmvState::new(&m, bs, threads, &x0);
+    let mut last: Option<SpmvCheckpoint> = None;
+    victim_engine.run_pipelined_checkpointed(6, 3, &mut victim_state, &analysis, &mut |c| {
+        last = Some(c);
+    });
+    // Kill the continuation; the checkpoint must still restore cleanly.
+    victim_engine.set_fault_plan(FaultPlan::none().with(0, 1, FaultKind::DropPublish));
+    let killed = catch_unwind(AssertUnwindSafe(|| {
+        victim_state.swap_xy();
+        victim_engine.run_pipelined(total - 6, &mut victim_state, &analysis);
+    }));
+    assert!(killed.is_err(), "kill fault did not fire");
+
+    let ck = last.expect("checkpoint sunk");
+    assert_eq!(ck.step, 6);
+    let mut resumed_engine = SpmvEngine::new(Engine::Parallel);
+    let mut resumed_state = SpmvState::new(&m, bs, threads, &x0);
+    let done = resumed_engine.restore(&ck, &mut resumed_state, &analysis).unwrap() as usize;
+    resumed_engine.run_pipelined(total - done, &mut resumed_state, &analysis);
+
+    let want = ref_state.y_global();
+    let got = resumed_state.y_global();
+    assert!(
+        want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "resumed SpMV run diverges from the uninterrupted run"
+    );
+}
+
+/// Checkpointed batching itself (no kill) must equal one big batch.
+#[test]
+fn checkpointed_driver_matches_single_batch() {
+    let (m, bs, threads, analysis, x0) = spmv_fixture();
+    let mut a_engine = SpmvEngine::new(Engine::Parallel);
+    let mut a_state = SpmvState::new(&m, bs, threads, &x0);
+    let one = a_engine.run_pipelined(9, &mut a_state, &analysis);
+
+    let mut b_engine = SpmvEngine::new(Engine::Parallel);
+    let mut b_state = SpmvState::new(&m, bs, threads, &x0);
+    let mut count = 0usize;
+    let batched =
+        b_engine.run_pipelined_checkpointed(9, 4, &mut b_state, &analysis, &mut |_| count += 1);
+    assert_eq!(count, 3, "9 steps in batches of 4 sink 3 checkpoints");
+    assert_eq!(one.inter_thread_bytes, batched.inter_thread_bytes);
+    assert_eq!(one.transfers, batched.transfers);
+    let (want, got) = (a_state.y_global(), b_state.y_global());
+    assert!(want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
+}
+
+/// A checkpoint must refuse to restore onto a different decomposition.
+#[test]
+fn restore_rejects_foreign_plan() {
+    let f0 = random_field(16 * 16, 8);
+    let solver = Heat2dSolver::new(HeatGrid::new(16, 16, 2, 2), &f0);
+    let ck = solver.checkpoint(3);
+    let mut other = Heat2dSolver::new(HeatGrid::new(16, 16, 1, 4), &f0);
+    let err = other.restore(&ck).unwrap_err();
+    assert!(err.contains("does not match"), "unexpected error: {err}");
+
+    let (m, bs, threads, analysis, x0) = spmv_fixture();
+    let mut engine = SpmvEngine::new(Engine::Parallel);
+    let state = SpmvState::new(&m, bs, threads, &x0);
+    let ck = engine.checkpoint(1, &state, &analysis);
+    let other_layout = Layout::new(m.n, bs * 2, threads);
+    let other_analysis =
+        Analysis::build(&m.j, m.r_nz, other_layout, Topology::single_node(threads), usize::MAX);
+    let mut other_state = SpmvState::new(&m, bs * 2, threads, &x0);
+    let err = engine.restore(&ck, &mut other_state, &other_analysis).unwrap_err();
+    assert!(err.contains("does not match"), "unexpected error: {err}");
+}
+
+/// Epoch hygiene: mixing the synchronous, overlapped and pipelined
+/// protocols on one engine keeps every flag publish monotone (the
+/// publish-backwards assertion must not fire) and stays bitwise locked to
+/// the sequential oracle.
+#[test]
+fn mixed_protocols_keep_epochs_monotone() {
+    let (m, bs, threads, analysis, x0) = spmv_fixture();
+    let mut finals: Vec<Vec<f64>> = Vec::new();
+    for mode in Engine::ALL {
+        let mut engine = SpmvEngine::new(mode);
+        let mut state = SpmvState::new(&m, bs, threads, &x0);
+        engine.run(Variant::V3, &mut state, Some(&analysis));
+        state.swap_xy();
+        engine.run_overlapped(&mut state, &analysis);
+        state.swap_xy();
+        engine.run_pipelined(3, &mut state, &analysis);
+        state.swap_xy();
+        engine.run(Variant::V3, &mut state, Some(&analysis));
+        state.swap_xy();
+        engine.run_pipelined(2, &mut state, &analysis);
+        finals.push(state.y_global());
+    }
+    assert!(
+        finals[0].iter().zip(&finals[1]).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "mixed-protocol schedule diverges between engines"
+    );
+}
