@@ -418,10 +418,7 @@ fn main() {
     }
     if !entries.is_empty() {
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_halo.json");
-        match std::fs::write(path, root.pretty()) {
-            Ok(()) => println!("[halo medians saved to {path}]"),
-            Err(e) => eprintln!("warning: cannot write {path}: {e}"),
-        }
+        upcsim::benchlib::save_bench_json(path, "halo medians", &root);
     }
 
     // --- BENCH_overlap.json -----------------------------------------------
@@ -451,10 +448,7 @@ fn main() {
         root.set("best_speedup", Value::Num(best));
         root.set("best_workload", Value::Str(best_name));
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_overlap.json");
-        match std::fs::write(path, root.pretty()) {
-            Ok(()) => println!("[overlap medians saved to {path}]"),
-            Err(e) => eprintln!("warning: cannot write {path}: {e}"),
-        }
+        upcsim::benchlib::save_bench_json(path, "overlap medians", &root);
     }
 
     // --- BENCH_pipeline.json ----------------------------------------------
@@ -492,10 +486,7 @@ fn main() {
         root.set("best_speedup_vs_overlap", Value::Num(best));
         root.set("best_workload", Value::Str(best_name));
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pipeline.json");
-        match std::fs::write(path, root.pretty()) {
-            Ok(()) => println!("[pipeline medians saved to {path}]"),
-            Err(e) => eprintln!("warning: cannot write {path}: {e}"),
-        }
+        upcsim::benchlib::save_bench_json(path, "pipeline medians", &root);
     }
     // --- BENCH_chaos.json -------------------------------------------------
     // What the deadline-aware wait ladder costs on the fault-free fast
@@ -534,10 +525,7 @@ fn main() {
             root.set("overhead_budget_pct", Value::Num(3.0));
             println!("\nheat2d: deadline-aware waits overhead = {overhead_pct:.2}%");
             let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_chaos.json");
-            match std::fs::write(path, root.pretty()) {
-                Ok(()) => println!("[chaos overhead saved to {path}]"),
-                Err(e) => eprintln!("warning: cannot write {path}: {e}"),
-            }
+            upcsim::benchlib::save_bench_json(path, "chaos overhead", &root);
         }
     }
     b.finish();

@@ -6,8 +6,21 @@
 //! wall-clock budget or iteration cap is reached, and reports mean/σ/min/p50.
 
 use crate::util::fmt;
+use crate::util::json::Value;
 use crate::util::Stats;
 use std::time::{Duration, Instant};
+
+/// Write a `BENCH_*.json` report document: pretty-printed, best-effort.
+/// Every bench and validation artifact goes through here so the emission
+/// protocol (pretty JSON, one `[<label> saved to <path>]` confirmation
+/// line, a warning instead of a panic on an unwritable checkout) cannot
+/// drift between emitters.
+pub fn save_bench_json(path: &str, label: &str, root: &Value) {
+    match std::fs::write(path, root.pretty()) {
+        Ok(()) => println!("[{label} saved to {path}]"),
+        Err(e) => eprintln!("warning: cannot write {path}: {e}"),
+    }
+}
 
 /// Configuration for a benchmark run.
 #[derive(Debug, Clone)]

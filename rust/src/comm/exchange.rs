@@ -23,9 +23,20 @@
 //! is what lets one engine ([`crate::engine::WorkerPool`] +
 //! [`crate::engine::ArenaView`]) execute any compiled workload.
 
+use super::plan::{json_u32s, json_usize, num_u32, u32s_to_json};
 use super::CommPlan;
 use crate::machine::SIZEOF_DOUBLE;
+use crate::util::json::Value;
 use std::ops::Range;
+
+/// Decode one JSON number as a nonnegative integer index (fits `usize`).
+fn num_us(v: &Value, what: &str) -> Result<usize, String> {
+    let f = v.as_f64().ok_or_else(|| format!("{what}: not a number"))?;
+    if f.fract() != 0.0 || !(0.0..=9.007_199_254_740_992e15).contains(&f) {
+        return Err(format!("{what}: {f} is not an index"));
+    }
+    Ok(f as usize)
+}
 
 /// A strided 2-level block inside one thread's local field: element `(r, c)`
 /// lives at `offset + r·row_stride + c·col_stride`.
@@ -319,6 +330,91 @@ impl StridedPlan {
             write_block(&mut h, &m.dst);
         }
         h.finish()
+    }
+
+    /// Serialize for shipping to worker processes (`repro launch`): every
+    /// structural field verbatim, so the deserialized plan fingerprints
+    /// identically. Each message is a flat 13-number array
+    /// `[sender, receiver, start, src×5, dst×5]` (blocks as
+    /// `offset, rows, row_stride, cols, col_stride`).
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("threads", Value::Num(self.threads as f64));
+        v.set("total", Value::Num(self.total as f64));
+        let msgs: Vec<Value> = self
+            .msgs
+            .iter()
+            .map(|m| {
+                let mut nums = vec![m.sender as f64, m.receiver as f64, m.start as f64];
+                for b in [&m.src, &m.dst] {
+                    nums.extend([
+                        b.offset as f64,
+                        b.rows as f64,
+                        b.row_stride as f64,
+                        b.cols as f64,
+                        b.col_stride as f64,
+                    ]);
+                }
+                Value::Arr(nums.into_iter().map(Value::Num).collect())
+            })
+            .collect();
+        v.set("msgs", Value::Arr(msgs));
+        v.set("recv_off", u32s_to_json(&self.recv_off));
+        v.set("send_off", u32s_to_json(&self.send_off));
+        v.set("send_ids", u32s_to_json(&self.send_ids));
+        v
+    }
+
+    /// Deserialize a shipped plan, re-running the structural half of
+    /// [`validate`](StridedPlan::validate) (field lengths are unknown here)
+    /// so a tampered or truncated wire form is rejected instead of trusted.
+    pub fn from_json(v: &Value) -> Result<StridedPlan, String> {
+        let threads = json_usize(v, "threads")?;
+        let total = num_us(v.get("total").ok_or("total: missing")?, "total")?;
+        let raw = v.get("msgs").and_then(Value::as_arr).ok_or("msgs: not an array")?;
+        let mut msgs = Vec::with_capacity(raw.len());
+        for (i, m) in raw.iter().enumerate() {
+            let q = m
+                .as_arr()
+                .filter(|q| q.len() == 13)
+                .ok_or_else(|| format!("msgs[{i}]: want 13 numbers"))?;
+            let block = |at: usize| -> Result<StridedBlock, String> {
+                Ok(StridedBlock {
+                    offset: num_us(&q[at], "block.offset")?,
+                    rows: num_us(&q[at + 1], "block.rows")?,
+                    row_stride: num_us(&q[at + 2], "block.row_stride")?,
+                    cols: num_us(&q[at + 3], "block.cols")?,
+                    col_stride: num_us(&q[at + 4], "block.col_stride")?,
+                })
+            };
+            msgs.push(StridedDesc {
+                sender: num_u32(&q[0], "msgs.sender")?,
+                receiver: num_u32(&q[1], "msgs.receiver")?,
+                start: num_u32(&q[2], "msgs.start")?,
+                src: block(3)?,
+                dst: block(8)?,
+            });
+        }
+        let recv_off = json_u32s(v, "recv_off")?;
+        let send_off = json_u32s(v, "send_off")?;
+        let send_ids = json_u32s(v, "send_ids")?;
+        // Bounds guards [`validate`](StridedPlan::validate) assumes: it
+        // slices by these tables, so a hostile wire form must fail here.
+        if send_ids.iter().any(|&id| id as usize >= msgs.len()) {
+            return Err("send_ids names a message out of range".into());
+        }
+        let bounded = |off: &[u32], n: usize| {
+            off.len() == threads + 1
+                && off.windows(2).all(|w| w[0] <= w[1])
+                && off.last().is_some_and(|&e| e as usize == n)
+        };
+        if !bounded(&recv_off, msgs.len()) || !bounded(&send_off, send_ids.len()) {
+            return Err("offset tables malformed".into());
+        }
+        let plan = StridedPlan { threads, msgs, recv_off, send_off, send_ids, total };
+        plan.validate(&|_| usize::MAX)
+            .map_err(|e| format!("shipped strided plan invalid: {e}"))?;
+        Ok(plan)
     }
 
     /// Consistency check: arena tiling, offset tables, block bounds against
@@ -615,6 +711,32 @@ impl ExchangePlan {
         h.finish()
     }
 
+    /// Serialize for shipping to worker processes: a `form` tag plus the
+    /// form's own wire object. Round-trips to an identical
+    /// [`fingerprint`](ExchangePlan::fingerprint).
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("form", Value::Str(self.name().to_string()));
+        let plan = match self {
+            ExchangePlan::Gather(p) => p.to_json(),
+            ExchangePlan::Strided(p) => p.to_json(),
+        };
+        v.set("plan", plan);
+        v
+    }
+
+    /// Deserialize a shipped plan of either form; the form's `from_json`
+    /// re-validates, so tampered wire forms are rejected.
+    pub fn from_json(v: &Value) -> Result<ExchangePlan, String> {
+        let form = v.get("form").and_then(Value::as_str).ok_or("form: missing")?;
+        let plan = v.get("plan").ok_or("plan: missing")?;
+        match form {
+            "gather" => Ok(ExchangePlan::Gather(CommPlan::from_json(plan)?)),
+            "strided" => Ok(ExchangePlan::Strided(StridedPlan::from_json(plan)?)),
+            other => Err(format!("unknown plan form {other:?}")),
+        }
+    }
+
     pub fn as_strided(&self) -> Option<&StridedPlan> {
         match self {
             ExchangePlan::Strided(p) => Some(p),
@@ -837,6 +959,60 @@ mod tests {
         let gather = CommPlan::from_recv_needs(&layout, &[vec![(1u32, 2u32)], vec![]]);
         let plan: ExchangePlan = gather.into();
         assert!(plan.validate(&|_| usize::MAX).is_ok());
+    }
+
+    #[test]
+    fn strided_json_roundtrip_preserves_fingerprint() {
+        let n = 4;
+        let copies = vec![
+            (0usize, 1usize, StridedBlock::column(2, 3, n), StridedBlock::column(0, 3, n)),
+            (1, 0, StridedBlock::column(1, 3, n), StridedBlock::column(3, 3, n)),
+        ];
+        let plan = StridedPlan::from_msgs(2, &copies);
+        let text = plan.to_json().compact();
+        let back = StridedPlan::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.fingerprint(), plan.fingerprint());
+        assert_eq!(back.total_values(), plan.total_values());
+        back.validate(&|_| 12).unwrap();
+    }
+
+    #[test]
+    fn exchange_plan_json_roundtrip_both_forms() {
+        let strided: ExchangePlan = StridedPlan::from_msgs(
+            2,
+            &[(0, 1, StridedBlock::row(0, 3), StridedBlock::row(3, 3))],
+        )
+        .into();
+        let layout = crate::pgas::Layout::new(4, 2, 2);
+        let gather: ExchangePlan =
+            CommPlan::from_recv_needs(&layout, &[vec![(1u32, 2u32)], vec![]]).into();
+        for plan in [strided, gather] {
+            let text = plan.to_json().compact();
+            let back = ExchangePlan::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.fingerprint(), plan.fingerprint(), "{} round-trip", plan.name());
+            assert_eq!(back.name(), plan.name());
+        }
+    }
+
+    #[test]
+    fn tampered_strided_json_is_rejected() {
+        let plan = StridedPlan::from_msgs(
+            2,
+            &[(0, 1, StridedBlock::row(0, 3), StridedBlock::row(3, 3))],
+        );
+        // Arena total no longer matches the message tiling.
+        let mut v = plan.to_json();
+        v.set("total", Value::Num(99.0));
+        assert!(StridedPlan::from_json(&v).is_err());
+        // Send permutation points out of range.
+        let mut v = plan.to_json();
+        v.set("send_ids", u32s_to_json(&[7]));
+        assert!(StridedPlan::from_json(&v).is_err());
+        // Unknown form tag at the ExchangePlan level.
+        let mut v = Value::obj();
+        v.set("form", Value::Str("mystery".into()));
+        v.set("plan", plan.to_json());
+        assert!(ExchangePlan::from_json(&v).is_err());
     }
 
     #[test]

@@ -26,7 +26,34 @@
 //! pack/put/unpack phases zero-copy and lock-free.
 
 use crate::pgas::Layout;
+use crate::util::json::Value;
 use std::ops::Range;
+
+/// Encode a `u32` list as a JSON number array (wire form of the plan).
+pub(crate) fn u32s_to_json(vals: &[u32]) -> Value {
+    Value::Arr(vals.iter().map(|&x| Value::Num(x as f64)).collect())
+}
+
+/// Decode one JSON number as a `u32`, rejecting fractions and overflow.
+pub(crate) fn num_u32(v: &Value, what: &str) -> Result<u32, String> {
+    let f = v.as_f64().ok_or_else(|| format!("{what}: not a number"))?;
+    if f.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&f) {
+        return Err(format!("{what}: {f} is not a u32"));
+    }
+    Ok(f as u32)
+}
+
+/// Decode a named `u32`-array field of a JSON object.
+pub(crate) fn json_u32s(v: &Value, key: &str) -> Result<Vec<u32>, String> {
+    let arr = v.get(key).and_then(Value::as_arr).ok_or_else(|| format!("{key}: not an array"))?;
+    arr.iter().map(|x| num_u32(x, key)).collect()
+}
+
+/// Decode a named nonnegative-integer field of a JSON object.
+pub(crate) fn json_usize(v: &Value, key: &str) -> Result<usize, String> {
+    let f = v.get(key).ok_or_else(|| format!("{key}: missing"))?;
+    Ok(num_u32(f, key)? as usize)
+}
 
 /// One message's descriptor: who talks to whom, and where its values live
 /// in the arena.
@@ -223,6 +250,78 @@ impl CommPlan {
         h.finish()
     }
 
+    /// Serialize for shipping to worker processes (`repro launch`). The
+    /// wire form carries every structural field verbatim, so the
+    /// deserialized plan fingerprints identically to this one.
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("threads", Value::Num(self.threads as f64));
+        v.set("indices", u32s_to_json(&self.indices));
+        v.set("local_src", u32s_to_json(&self.local_src));
+        let msgs: Vec<Value> = self
+            .msgs
+            .iter()
+            .map(|m| {
+                Value::Arr(vec![
+                    Value::Num(m.sender as f64),
+                    Value::Num(m.receiver as f64),
+                    Value::Num(m.start as f64),
+                    Value::Num(m.end as f64),
+                ])
+            })
+            .collect();
+        v.set("msgs", Value::Arr(msgs));
+        v.set("recv_off", u32s_to_json(&self.recv_off));
+        v.set("send_off", u32s_to_json(&self.send_off));
+        v.set("send_ids", u32s_to_json(&self.send_ids));
+        v
+    }
+
+    /// Deserialize a shipped plan, re-running
+    /// [`validate`](CommPlan::validate) so a tampered or truncated wire
+    /// form is rejected instead of trusted.
+    pub fn from_json(v: &Value) -> Result<CommPlan, String> {
+        let threads = json_usize(v, "threads")?;
+        let indices = json_u32s(v, "indices")?;
+        let local_src = json_u32s(v, "local_src")?;
+        let raw = v.get("msgs").and_then(Value::as_arr).ok_or("msgs: not an array")?;
+        let mut msgs = Vec::with_capacity(raw.len());
+        for (i, m) in raw.iter().enumerate() {
+            let q = m
+                .as_arr()
+                .filter(|q| q.len() == 4)
+                .ok_or_else(|| format!("msgs[{i}]: want [sender, receiver, start, end]"))?;
+            msgs.push(MsgDesc {
+                sender: num_u32(&q[0], "msgs.sender")?,
+                receiver: num_u32(&q[1], "msgs.receiver")?,
+                start: num_u32(&q[2], "msgs.start")?,
+                end: num_u32(&q[3], "msgs.end")?,
+            });
+        }
+        let recv_off = json_u32s(v, "recv_off")?;
+        let send_off = json_u32s(v, "send_off")?;
+        let send_ids = json_u32s(v, "send_ids")?;
+        // Bounds guards [`validate`](CommPlan::validate) assumes: it slices
+        // by these tables, so a hostile wire form must fail here, not panic.
+        if msgs.iter().any(|m| m.end as usize > indices.len()) {
+            return Err("msgs range exceeds the index arena".into());
+        }
+        if send_ids.iter().any(|&id| id as usize >= msgs.len()) {
+            return Err("send_ids names a message out of range".into());
+        }
+        let bounded = |off: &[u32], n: usize| {
+            off.len() == threads + 1
+                && off.windows(2).all(|w| w[0] <= w[1])
+                && off.last().is_some_and(|&e| e as usize == n)
+        };
+        if !bounded(&recv_off, msgs.len()) || !bounded(&send_off, send_ids.len()) {
+            return Err("offset tables malformed".into());
+        }
+        let plan = CommPlan { threads, indices, local_src, msgs, recv_off, send_off, send_ids };
+        plan.validate().map_err(|e| format!("shipped gather plan invalid: {e}"))?;
+        Ok(plan)
+    }
+
     /// Consistency check: descriptors partition the arena, lists are sorted
     /// and unique, no self-messages, and the send side is an exact
     /// permutation of the receive side.
@@ -392,6 +491,44 @@ mod tests {
         ];
         let c = CommPlan::from_recv_needs(&layout(), &shrunk);
         assert_ne!(a.fingerprint(), c.fingerprint(), "different needs must hash apart");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_fingerprint() {
+        let needs = vec![
+            vec![(1u32, 2u32), (1, 3), (2, 4)],
+            vec![],
+            vec![(0, 0), (1, 8)],
+        ];
+        let plan = CommPlan::from_recv_needs(&layout(), &needs);
+        let text = plan.to_json().compact();
+        let back = CommPlan::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.fingerprint(), plan.fingerprint());
+        assert_eq!(back.total_values(), plan.total_values());
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn tampered_json_is_rejected_not_trusted() {
+        let needs = vec![vec![(1u32, 2u32), (1, 3)], vec![]];
+        let l = Layout::new(4, 2, 2);
+        let plan = CommPlan::from_recv_needs(&l, &needs);
+        // Reorder an index list so it is no longer sorted.
+        let mut v = plan.to_json();
+        v.set("indices", u32s_to_json(&[3, 2]));
+        assert!(CommPlan::from_json(&v).is_err());
+        // Truncate the arena under the message descriptors.
+        let mut v = plan.to_json();
+        v.set("indices", u32s_to_json(&[2]));
+        assert!(CommPlan::from_json(&v).is_err());
+        // Point the send permutation out of range.
+        let mut v = plan.to_json();
+        v.set("send_ids", u32s_to_json(&[9]));
+        assert!(CommPlan::from_json(&v).is_err());
+        // Non-integer where a u32 belongs.
+        let mut v = plan.to_json();
+        v.set("threads", Value::Num(1.5));
+        assert!(CommPlan::from_json(&v).is_err());
     }
 
     #[test]

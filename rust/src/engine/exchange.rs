@@ -61,6 +61,7 @@ use super::fault::FaultPlan;
 use super::pool::{ArenaView, EpochFlags, PerWorker, Phase, PoolHealth, WorkerCtx, WorkerPool};
 use super::Engine;
 use crate::comm::ExchangePlan;
+use crate::transport::{must, PoolEndpoint, Transport};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
@@ -312,20 +313,20 @@ impl ExchangeRuntime {
                 let faults = &self.faults;
                 self.pool.run(threads, &|ctx: WorkerCtx| {
                     let t = ctx.id;
+                    // SAFETY: plan ranges are disjoint per message (and
+                    // halved per epoch parity); packed by the sender only and
+                    // read only after the barrier.
+                    let mut ep =
+                        unsafe { PoolEndpoint::new(t, total, flags, acks, &arena, &ctx) };
                     ctx.note_phase(Phase::Pack, epoch);
                     faults.on_phase(t, epoch, Phase::Pack);
                     // SAFETY: worker t claims only its own field/out pair.
                     let field = unsafe { fw.take(t) }.as_mut_slice();
                     for m in plan.send_msgs(t) {
-                        let r = m.range();
-                        // SAFETY: plan ranges are disjoint per message (and
-                        // halved per epoch parity); packed by sender only.
-                        m.pack(field, unsafe {
-                            arena.slice_mut(half + r.start..half + r.end)
-                        });
+                        m.pack(field, ep.send_slot(epoch, m.range()));
                     }
                     if faults.before_publish(t, epoch) {
-                        flags.publish(t, epoch);
+                        must(ep.publish(epoch));
                     }
 
                     ctx.note_phase(Phase::Barrier, epoch);
@@ -335,12 +336,10 @@ impl ExchangeRuntime {
                     faults.on_phase(t, epoch, Phase::Unpack);
                     faults.before_unpack(t, epoch);
                     for m in plan.recv_msgs(t) {
-                        let r = m.range();
-                        // SAFETY: arena writes ended at the barrier.
-                        m.unpack(unsafe { arena.slice(half + r.start..half + r.end) }, field);
+                        m.unpack(ep.recv_slot(epoch, m.range()), field);
                     }
                     if faults.before_ack(t, epoch) {
-                        acks.publish(t, epoch);
+                        must(ep.ack(epoch));
                     }
                     ctx.note_phase(Phase::Boundary, epoch);
                     faults.on_phase(t, epoch, Phase::Boundary);
@@ -418,6 +417,11 @@ impl ExchangeRuntime {
                 let faults = &self.faults;
                 self.pool.run(threads, &|ctx: WorkerCtx| {
                     let t = ctx.id;
+                    // SAFETY: plan ranges are disjoint per message and halved
+                    // per epoch parity; packed by the sender only, read only
+                    // after the sender's epoch publish was observed.
+                    let mut ep =
+                        unsafe { PoolEndpoint::new(t, total, flags, acks, &arena, &ctx) };
                     ctx.note_phase(Phase::Pack, epoch);
                     faults.on_phase(t, epoch, Phase::Pack);
                     // SAFETY: worker t claims only its own field/out pair,
@@ -426,13 +430,10 @@ impl ExchangeRuntime {
                     let o = unsafe { ow.take(t) }.as_mut_slice();
                     // begin_exchange: pack into this epoch's half + publish.
                     for m in plan.send_msgs(t) {
-                        let r = m.range();
-                        // SAFETY: plan ranges are disjoint per message and
-                        // halved per epoch parity; packed by the sender only.
-                        m.pack(field, unsafe { arena.slice_mut(half + r.start..half + r.end) });
+                        m.pack(field, ep.send_slot(epoch, m.range()));
                     }
                     if faults.before_publish(t, epoch) {
-                        flags.publish(t, epoch);
+                        must(ep.publish(epoch));
                     }
 
                     // Overlap window: halo-independent compute.
@@ -442,18 +443,15 @@ impl ExchangeRuntime {
                     ctx.note_phase(Phase::Transfer, epoch);
                     faults.on_phase(t, epoch, Phase::Transfer);
                     for &peer in &senders[t] {
-                        ctx.wait_for_epoch(flags.flag(peer as usize), epoch, peer as usize);
+                        must(ep.wait_for_epoch(peer as usize, epoch));
                     }
                     ctx.note_phase(Phase::Unpack, epoch);
                     faults.before_unpack(t, epoch);
                     for m in plan.recv_msgs(t) {
-                        let r = m.range();
-                        // SAFETY: the sender's Release publish ordered its
-                        // pack writes before this Acquire-observed read.
-                        m.unpack(unsafe { arena.slice(half + r.start..half + r.end) }, field);
+                        m.unpack(ep.recv_slot(epoch, m.range()), field);
                     }
                     if faults.before_ack(t, epoch) {
-                        acks.publish(t, epoch);
+                        must(ep.ack(epoch));
                     }
                     ctx.note_phase(Phase::Boundary, epoch);
                     faults.on_phase(t, epoch, Phase::Boundary);
@@ -547,6 +545,12 @@ impl ExchangeRuntime {
                 let faults = &self.faults;
                 self.pool.run(threads, &|ctx: WorkerCtx| {
                     let t = ctx.id;
+                    // SAFETY: plan ranges are disjoint per message and halved
+                    // by epoch parity; the ack gate orders the previous
+                    // tenant's reads before each overwrite, and unpacks only
+                    // follow an observed epoch publish.
+                    let mut ep =
+                        unsafe { PoolEndpoint::new(t, total, flags, acks, &arena, &ctx) };
                     // SAFETY: worker t claims only its own field/out pair,
                     // exactly once per dispatch; the per-epoch role flip
                     // below only swaps which local name points where.
@@ -558,7 +562,6 @@ impl ExchangeRuntime {
                     let mut local_lead = 0u64;
                     for k in 1..=steps as u64 {
                         let epoch = base + k;
-                        let half = (epoch % 2) as usize * total;
                         let field = cur.as_mut_slice();
                         let o = nxt.as_mut_slice();
 
@@ -569,7 +572,7 @@ impl ExchangeRuntime {
                         if k > 2 {
                             ctx.note_phase(Phase::AckGate, epoch);
                             for &r in &receivers[t] {
-                                ctx.wait_for_ack(acks.flag(r as usize), epoch - 2, r as usize);
+                                must(ep.wait_for_ack(r as usize, epoch - 2));
                             }
                         }
 
@@ -577,17 +580,10 @@ impl ExchangeRuntime {
                         ctx.note_phase(Phase::Pack, epoch);
                         faults.on_phase(t, epoch, Phase::Pack);
                         for m in plan.send_msgs(t) {
-                            let r = m.range();
-                            // SAFETY: plan ranges are disjoint per message
-                            // and halved by epoch parity; the ack gate
-                            // ordered the previous tenant's reads before
-                            // this overwrite.
-                            m.pack(field, unsafe {
-                                arena.slice_mut(half + r.start..half + r.end)
-                            });
+                            m.pack(field, ep.send_slot(epoch, m.range()));
                         }
                         if faults.before_publish(t, epoch) {
-                            flags.publish(t, epoch);
+                            must(ep.publish(epoch));
                         }
 
                         // Overlap window: halo-independent compute.
@@ -597,21 +593,15 @@ impl ExchangeRuntime {
                         ctx.note_phase(Phase::Transfer, epoch);
                         faults.on_phase(t, epoch, Phase::Transfer);
                         for &peer in &senders[t] {
-                            ctx.wait_for_epoch(flags.flag(peer as usize), epoch, peer as usize);
+                            must(ep.wait_for_epoch(peer as usize, epoch));
                         }
                         ctx.note_phase(Phase::Unpack, epoch);
                         faults.before_unpack(t, epoch);
                         for m in plan.recv_msgs(t) {
-                            let r = m.range();
-                            // SAFETY: the sender's Release publish ordered
-                            // its pack writes before this read.
-                            m.unpack(
-                                unsafe { arena.slice(half + r.start..half + r.end) },
-                                field,
-                            );
+                            m.unpack(ep.recv_slot(epoch, m.range()), field);
                         }
                         if faults.before_ack(t, epoch) {
-                            acks.publish(t, epoch);
+                            must(ep.ack(epoch));
                         }
 
                         // Depth-bound diagnostic: how far ahead of this

@@ -42,6 +42,7 @@ pub(crate) use checkpoint::check_plan_hash;
 pub use checkpoint::{Checkpoint, SpmvCheckpoint};
 pub use exchange::ExchangeRuntime;
 pub use fault::{Fault, FaultKind, FaultPlan, INJECTED_DELAY};
+pub(crate) use parallel::compute_row_runs;
 pub use parallel::ParallelPool;
 pub use pool::{
     ArenaView, EpochFlags, PerWorker, Phase, PoolHealth, StallError, StallReport, WorkerCtx,

@@ -39,6 +39,7 @@ use crate::comm::{Analysis, RowRun};
 use crate::machine::SIZEOF_DOUBLE;
 use crate::pgas::Layout;
 use crate::spmv::{spmv_block_gathered, spmv_block_global, ExecOutcome, SpmvState, Variant};
+use crate::transport::{must, PoolEndpoint, Transport};
 use std::time::Duration;
 
 /// Persistent engine state, reused across calls/time steps: the worker pool
@@ -317,7 +318,6 @@ impl ParallelPool {
         self.staging.resize(2 * total, 0.0);
         self.epoch += 1;
         let epoch = self.epoch;
-        let half = (epoch % 2) as usize * total;
 
         // The byte/transfer counters are pure functions of the plan; summing
         // them in thread order reproduces the sequential executor's counts.
@@ -342,22 +342,23 @@ impl ParallelPool {
         let faults = &self.faults;
         self.pool.run(threads, &|ctx: WorkerCtx| {
             let t = ctx.id;
+            // SAFETY: plan ranges are disjoint per message (and halved by
+            // epoch parity); each is packed by its sender only and read only
+            // after the barrier.
+            let mut ep = unsafe { PoolEndpoint::new(t, total, flags, acks, &arena, &ctx) };
             // Phase 1: pack + put — each sender owns exactly the arena
             // ranges of its own messages (the zero-copy `upc_memput`).
             ctx.note_phase(Phase::Pack, epoch);
             faults.on_phase(t, epoch, Phase::Pack);
             let local_x = x.local(t);
             for m in plan.send_msgs(t) {
-                let rng = m.range();
-                // SAFETY: plan ranges are disjoint (and halved by epoch
-                // parity); message sent by t only.
-                let buf = unsafe { arena.slice_mut(half + rng.start..half + rng.end) };
+                let buf = ep.send_slot(epoch, m.range());
                 for (slot, &off) in buf.iter_mut().zip(m.local_src) {
                     *slot = local_x[off as usize];
                 }
             }
             if faults.before_publish(t, epoch) {
-                flags.publish(t, epoch);
+                must(ep.publish(epoch));
             }
 
             ctx.note_phase(Phase::Barrier, epoch);
@@ -375,15 +376,13 @@ impl ParallelPool {
                 ws[start..start + len].copy_from_slice(x.block(b));
             }
             for m in plan.recv_msgs(t) {
-                let rng = m.range();
-                // SAFETY: arena writes ended at the barrier; reads shared.
-                let vals = unsafe { arena.slice(half + rng.start..half + rng.end) };
+                let vals = ep.recv_slot(epoch, m.range());
                 for (&gidx, &v) in m.indices.iter().zip(vals) {
                     ws[gidx as usize] = v;
                 }
             }
             if faults.before_ack(t, epoch) {
-                acks.publish(t, epoch);
+                must(ep.ack(epoch));
             }
             ctx.note_phase(Phase::Boundary, epoch);
             faults.on_phase(t, epoch, Phase::Boundary);
@@ -587,6 +586,12 @@ impl ParallelPool {
                 let faults = &self.faults;
                 self.pool.run(threads, &|ctx: WorkerCtx| {
                     let t = ctx.id;
+                    // SAFETY: plan ranges are disjoint per message and
+                    // halved by epoch parity; the ack gate orders the
+                    // previous tenant's reads before each overwrite, and
+                    // scatters only follow an observed epoch publish.
+                    let mut ep =
+                        unsafe { PoolEndpoint::new(t, total, flags, acks, &arena, &ctx) };
                     // SAFETY: worker t claims only its own x/y shards and
                     // workspace, each exactly once per dispatch; the
                     // per-epoch role flip below only swaps which local
@@ -601,7 +606,6 @@ impl ParallelPool {
                     let mut local_lead = 0u64;
                     for k in 1..=steps as u64 {
                         let epoch = base + k;
-                        let half = (epoch % 2) as usize * total;
 
                         // Ack gate: the arena half of this epoch was last
                         // drained at epoch − 2, so every receiver must have
@@ -614,8 +618,7 @@ impl ParallelPool {
                         if k > 2 {
                             ctx.note_phase(Phase::AckGate, epoch);
                             for m in plan.send_msgs(t) {
-                                let peer = m.peer as usize;
-                                ctx.wait_for_ack(acks.flag(peer), epoch - 2, peer);
+                                must(ep.wait_for_ack(m.peer as usize, epoch - 2));
                             }
                         }
 
@@ -623,19 +626,13 @@ impl ParallelPool {
                         ctx.note_phase(Phase::Pack, epoch);
                         faults.on_phase(t, epoch, Phase::Pack);
                         for m in plan.send_msgs(t) {
-                            let rng = m.range();
-                            // SAFETY: plan ranges are disjoint per message
-                            // and halved by epoch parity; the ack gate
-                            // ordered the previous tenant's reads before
-                            // this overwrite.
-                            let buf =
-                                unsafe { arena.slice_mut(half + rng.start..half + rng.end) };
+                            let buf = ep.send_slot(epoch, m.range());
                             for (slot, &off) in buf.iter_mut().zip(m.local_src) {
                                 *slot = src[off as usize];
                             }
                         }
                         if faults.before_publish(t, epoch) {
-                            flags.publish(t, epoch);
+                            must(ep.publish(epoch));
                         }
 
                         // Overlap window: own-block copy + interior rows.
@@ -651,13 +648,8 @@ impl ParallelPool {
                         ctx.note_phase(Phase::Transfer, epoch);
                         faults.on_phase(t, epoch, Phase::Transfer);
                         for m in plan.recv_msgs(t) {
-                            let peer = m.peer as usize;
-                            ctx.wait_for_epoch(flags.flag(peer), epoch, peer);
-                            let rng = m.range();
-                            // SAFETY: the sender's Release publish ordered
-                            // its pack writes before this read.
-                            let vals =
-                                unsafe { arena.slice(half + rng.start..half + rng.end) };
+                            must(ep.wait_for_epoch(m.peer as usize, epoch));
+                            let vals = ep.recv_slot(epoch, m.range());
                             for (&gidx, &v) in m.indices.iter().zip(vals) {
                                 ws[gidx as usize] = v;
                             }
@@ -668,7 +660,7 @@ impl ParallelPool {
                         ctx.note_phase(Phase::Unpack, epoch);
                         faults.before_unpack(t, epoch);
                         if faults.before_ack(t, epoch) {
-                            acks.publish(t, epoch);
+                            must(ep.ack(epoch));
                         }
 
                         // Depth-bound diagnostic: how far ahead of this
@@ -709,8 +701,10 @@ impl ParallelPool {
 /// Run the gathered kernel over a list of block-contiguous row runs,
 /// carving the `D`/`A`/`J`/`y` slices from each run's block. Kernel and FP
 /// order are identical to the whole-block path, so a split row set produces
-/// bitwise-identical `y` values.
-fn compute_row_runs(
+/// bitwise-identical `y` values. Shared with the multi-process SpMV rank
+/// drivers (`repro launch`), which must replay the exact same FP order.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn compute_row_runs(
     layout: &Layout,
     r_nz: usize,
     d: &crate::pgas::SharedVec<f64>,

@@ -114,6 +114,10 @@ pub struct StallError {
     pub phase: Phase,
     /// How long the waiter actually waited before giving up.
     pub waited: Duration,
+    /// The transport identity of the absent peer (e.g. `inproc:worker-3`,
+    /// `socket:rank-1@127.0.0.1:4710`), when one is known. `None` for pool
+    /// barriers, where no single peer is identified.
+    pub transport: Option<String>,
 }
 
 impl StallError {
@@ -132,15 +136,21 @@ impl fmt::Display for StallError {
                 f,
                 "stall: worker {} waited {:.1?} for peer {} to reach epoch {} (phase {})",
                 self.waiter, self.waited, p, self.epoch, self.phase
-            ),
+            )?,
             None => write!(
                 f,
                 "stall: worker {} waited {:.1?} at the pool barrier (epoch {})",
                 self.waiter, self.waited, self.epoch
-            ),
+            )?,
         }
+        if let Some(t) = &self.transport {
+            write!(f, " via {t}")?;
+        }
+        Ok(())
     }
 }
+
+impl std::error::Error for StallError {}
 
 /// What the stall watchdog observed: the lagging worker (lowest progress
 /// word) after a no-progress window, with the phase and epoch it last
@@ -250,6 +260,7 @@ impl WorkerCtx<'_> {
                     epoch: word >> 3,
                     phase: Phase::Barrier,
                     waited,
+                    transport: None,
                 });
             }
         }
@@ -347,6 +358,7 @@ impl WorkerCtx<'_> {
                         epoch: target,
                         phase,
                         waited,
+                        transport: Some(format!("inproc:worker-{peer}")),
                     });
                 }
             }
@@ -923,6 +935,17 @@ impl<'a, T> PerWorker<'a, T> {
     pub unsafe fn take(&self, i: usize) -> &mut T {
         assert!(i < self.len, "worker index {i} out of {}", self.len);
         &mut *self.ptr.add(i)
+    }
+
+    /// Element `i`, shared — for phases where several workers read one
+    /// worker's slot (e.g. ghost-cell fills from a sender's pack buffers).
+    ///
+    /// # Safety
+    /// No worker may hold a `take(i)` borrow overlapping this read; order
+    /// the phases with a barrier or an epoch-flag wait.
+    pub unsafe fn peek(&self, i: usize) -> &T {
+        assert!(i < self.len, "worker index {i} out of {}", self.len);
+        &*self.ptr.add(i)
     }
 }
 

@@ -21,6 +21,7 @@
 mod solver;
 
 pub use solver::{seq_reference_step, Heat2dSolver};
+pub(crate) use solver::{compute_split, halo_plan, initial_field, jacobi_blocks};
 
 use crate::machine::{HwParams, SIZEOF_DOUBLE};
 use crate::model::HeatGrid;

@@ -18,7 +18,7 @@ use crate::model::HeatGrid;
 /// neighbours' boundary interior columns/rows → this thread's halo
 /// column/row. Column strips are strided (`col_stride = n`), row strips
 /// contiguous — exactly the shapes eq. (19) charges pack time for.
-fn halo_plan(grid: &HeatGrid) -> StridedPlan {
+pub(crate) fn halo_plan(grid: &HeatGrid) -> StridedPlan {
     let (m, n) = grid.subdomain();
     let mut copies = Vec::new();
     for t in 0..grid.threads() {
@@ -67,7 +67,7 @@ fn halo_plan(grid: &HeatGrid) -> StridedPlan {
 
 /// Compile the interior/boundary decomposition for the overlapped step and
 /// validate it (debug builds) against the canonical owned region.
-fn compute_split(grid: &HeatGrid) -> ComputeSplit {
+pub(crate) fn compute_split(grid: &HeatGrid) -> ComputeSplit {
     let (m, n) = grid.subdomain();
     let split = ComputeSplit::grid2d(m, n);
     debug_assert!(
@@ -100,28 +100,8 @@ impl Heat2dSolver {
     /// Boundary values of the global domain are treated as fixed (Dirichlet).
     pub fn new(grid: HeatGrid, global: &[f64]) -> Heat2dSolver {
         assert_eq!(global.len(), grid.m_glob * grid.n_glob);
-        let (m, n) = grid.subdomain();
-        let mut phi = Vec::with_capacity(grid.threads());
-        for t in 0..grid.threads() {
-            let (ip, kp) = grid.coords(t);
-            let (row0, col0) = (ip * (m - 2), kp * (n - 2));
-            let mut field = vec![0.0f64; m * n];
-            // Fill interior + whatever halo overlaps the global domain.
-            for i in 0..m {
-                for k in 0..n {
-                    let gi = row0 as isize + i as isize - 1;
-                    let gk = col0 as isize + k as isize - 1;
-                    if gi >= 0
-                        && (gi as usize) < grid.m_glob
-                        && gk >= 0
-                        && (gk as usize) < grid.n_glob
-                    {
-                        field[i * n + k] = global[gi as usize * grid.n_glob + gk as usize];
-                    }
-                }
-            }
-            phi.push(field);
-        }
+        let phi: Vec<Vec<f64>> =
+            (0..grid.threads()).map(|t| initial_field(grid, global, t)).collect();
         let phin = phi.clone();
         let runtime = ExchangeRuntime::new(halo_plan(&grid));
         let split = compute_split(&grid);
@@ -208,6 +188,12 @@ impl Heat2dSolver {
         &self.split
     }
 
+    /// Per-thread halo-extended fields (`phi`), e.g. for comparing a
+    /// distributed run's rank-local results against this reference.
+    pub fn local_fields(&self) -> &[Vec<f64>] {
+        &self.phi
+    }
+
     /// One time step: halo exchange then 5-point Jacobi update (on the
     /// sequential oracle engine).
     pub fn step(&mut self) {
@@ -286,7 +272,7 @@ impl Heat2dSolver {
     /// plus the fixed global-boundary copy-through. Shared by both engines —
     /// it only touches thread `t`'s own `(phi, phin)` pair, so fusing it
     /// per-thread is order-independent.
-    fn jacobi_update(grid: HeatGrid, t: usize, phi: &[f64], phin: &mut [f64]) {
+    pub(crate) fn jacobi_update(grid: HeatGrid, t: usize, phi: &[f64], phin: &mut [f64]) {
         let (m, n) = grid.subdomain();
         for i in 1..m - 1 {
             for k in 1..n - 1 {
@@ -303,7 +289,7 @@ impl Heat2dSolver {
     /// Global-boundary rows/cols stay fixed (Dirichlet): copy them through.
     /// Runs after every cell update on both step protocols, reading the
     /// freshly exchanged halo, so its final-write order is unchanged.
-    fn fixed_boundary_copy(grid: HeatGrid, t: usize, phi: &[f64], phin: &mut [f64]) {
+    pub(crate) fn fixed_boundary_copy(grid: HeatGrid, t: usize, phi: &[f64], phin: &mut [f64]) {
         let (m, n) = grid.subdomain();
         let (ip, kp) = grid.coords(t);
         if ip == 0 {
@@ -352,7 +338,7 @@ impl Heat2dSolver {
 /// [`Heat2dSolver::jacobi_update`]'s nested loops, and Jacobi writes each
 /// cell once, so any partition of the owned region evaluates bitwise
 /// identically.
-fn jacobi_blocks(n: usize, blocks: &[StridedBlock], phi: &[f64], phin: &mut [f64]) {
+pub(crate) fn jacobi_blocks(n: usize, blocks: &[StridedBlock], phi: &[f64], phin: &mut [f64]) {
     for b in blocks {
         for r in 0..b.rows {
             let base = b.offset + r * b.row_stride;
@@ -362,6 +348,27 @@ fn jacobi_blocks(n: usize, blocks: &[StridedBlock], phi: &[f64], phin: &mut [f64
             }
         }
     }
+}
+
+/// Thread `t`'s halo-extended `m × n` field cut from the global domain:
+/// interior cells plus whatever halo overlaps the global field (out-of-range
+/// halo stays 0). Shared by the in-process solver and the per-rank
+/// distributed drivers so every backend starts bitwise identical.
+pub(crate) fn initial_field(grid: HeatGrid, global: &[f64], t: usize) -> Vec<f64> {
+    let (m, n) = grid.subdomain();
+    let (ip, kp) = grid.coords(t);
+    let (row0, col0) = (ip * (m - 2), kp * (n - 2));
+    let mut field = vec![0.0f64; m * n];
+    for i in 0..m {
+        for k in 0..n {
+            let gi = row0 as isize + i as isize - 1;
+            let gk = col0 as isize + k as isize - 1;
+            if gi >= 0 && (gi as usize) < grid.m_glob && gk >= 0 && (gk as usize) < grid.n_glob {
+                field[i * n + k] = global[gi as usize * grid.n_glob + gk as usize];
+            }
+        }
+    }
+    field
 }
 
 /// Sequential reference: one Jacobi step on the global field (fixed global

@@ -32,6 +32,10 @@
 //! * [`heat2d`] — the §8 2D heat-equation solver and its model.
 //! * [`stencil3d`] — a 3D 7-point-stencil diffusion workload compiled onto
 //!   the same exchange runtime (the "not limited to UPC" demonstration).
+//! * [`transport`] — the pluggable transport layer: the five-operation
+//!   [`Transport`](transport::Transport) trait behind every exchange
+//!   protocol, its in-process and TCP-socket backends, and the
+//!   `repro launch` multi-process orchestrator.
 //! * [`microbench`] — STREAM / ping-pong / τ microbenchmarks (§6.2).
 //! * [`runtime`] — PJRT bridge loading AOT-compiled HLO-text artifacts
 //!   produced by the Python compile path (`python/compile/`).
@@ -58,6 +62,7 @@ pub mod sim;
 pub mod spmv;
 pub mod stencil3d;
 pub mod testing;
+pub mod transport;
 pub mod util;
 
 /// Crate-wide result type.

@@ -35,6 +35,12 @@ pub struct Calibration {
     pub stream_single: f64,
     /// Cross-thread contiguous-copy bandwidth, bytes/s (ping-pong analog).
     pub memcpy_cross: f64,
+    /// Loopback socket per-message latency, seconds — the τ analog of the
+    /// socket transport (`repro launch`). 0.0 when the probe could not run.
+    pub socket_latency: f64,
+    /// Loopback socket streaming bandwidth, bytes/s — the `W_node_remote`
+    /// analog of the socket transport. 0.0 when the probe could not run.
+    pub socket_bandwidth: f64,
     /// Whether the quick (reduced working set) profile was used.
     pub quick: bool,
 }
@@ -64,6 +70,16 @@ impl Calibration {
         let memcpy_cross = microbench::memcpy_cross_thread(memcpy_bytes, 4).bandwidth();
         let tau = microbench::tau_cross_thread(tau_slots, tau_ops);
         let cache_line = microbench::cache_line_host(line_buf);
+        // The socket probe is best-effort: a sandbox without loopback
+        // listeners must not sink the whole calibration. Zeroed fields mean
+        // "not measured" and keep the file loadable either way.
+        let (socket_latency, socket_bandwidth) = match crate::transport::socket_probe(quick) {
+            Ok(p) => (p.latency, p.bandwidth),
+            Err(e) => {
+                eprintln!("calibrate: socket probe skipped ({e})");
+                (0.0, 0.0)
+            }
+        };
         let hw = HwParams {
             w_thread_private: stream_node / threads as f64,
             w_node_remote: memcpy_cross,
@@ -74,7 +90,23 @@ impl Calibration {
             // aggregate; clamp against measurement noise.
             w_node_single: stream_single.min(stream_node),
         };
-        Calibration { hw, stream_node, stream_single, memcpy_cross, quick }
+        Calibration {
+            hw,
+            stream_node,
+            stream_single,
+            memcpy_cross,
+            socket_latency,
+            socket_bandwidth,
+            quick,
+        }
+    }
+
+    /// The socket transport's model parameters, if the probe ran. `None`
+    /// means the calibration predates the socket fields or the probe was
+    /// skipped; callers should fall back to probing live.
+    pub fn socket_model(&self) -> Option<super::TransportModel> {
+        (self.socket_latency > 0.0 && self.socket_bandwidth > 0.0)
+            .then(|| super::TransportModel::socket(self.socket_latency, self.socket_bandwidth))
     }
 
     /// Serialize to the JSON document `save`/`load` exchange.
@@ -85,6 +117,8 @@ impl Calibration {
         root.set("stream_node", Value::Num(self.stream_node));
         root.set("stream_single", Value::Num(self.stream_single));
         root.set("memcpy_cross", Value::Num(self.memcpy_cross));
+        root.set("socket_latency", Value::Num(self.socket_latency));
+        root.set("socket_bandwidth", Value::Num(self.socket_bandwidth));
         root.set("quick", Value::Bool(self.quick));
         root
     }
@@ -102,11 +136,16 @@ impl Calibration {
         }
         let hw_obj = v.get("hw").ok_or_else(|| anyhow!("calibration JSON missing 'hw'"))?;
         let hw = HwParams::from_json(hw_obj)?;
+        // The socket fields postdate version 1.0 files; absent means "not
+        // measured" (same as a skipped probe), so older files stay loadable.
+        let opt = |key: &str| v.get(key).and_then(Value::as_f64).unwrap_or(0.0);
         Ok(Calibration {
             hw,
             stream_node: num(v, "stream_node")?,
             stream_single: num(v, "stream_single")?,
             memcpy_cross: num(v, "memcpy_cross")?,
+            socket_latency: opt("socket_latency"),
+            socket_bandwidth: opt("socket_bandwidth"),
             quick: matches!(v.get("quick"), Some(Value::Bool(true))),
         })
     }
@@ -250,8 +289,26 @@ mod tests {
             stream_node: 19.5e9,
             stream_single: 9.0e9,
             memcpy_cross: 11.5e9,
+            socket_latency: 30.0e-6,
+            socket_bandwidth: 1.5e9,
             quick: true,
         }
+    }
+
+    #[test]
+    fn socket_fields_are_optional_for_old_files() {
+        // A pre-socket calibration file has no socket_* keys: it must still
+        // load, with the fields zeroed and no socket model available.
+        let mut v = synthetic().to_json();
+        v.set("socket_latency", Value::Null);
+        v.set("socket_bandwidth", Value::Null);
+        let cal = Calibration::from_json(&v).unwrap();
+        assert_eq!(cal.socket_latency, 0.0);
+        assert_eq!(cal.socket_bandwidth, 0.0);
+        assert!(cal.socket_model().is_none());
+        // A measured calibration exposes a socket transport model.
+        let tm = synthetic().socket_model().unwrap();
+        assert_eq!(tm, crate::machine::TransportModel::socket(30.0e-6, 1.5e9));
     }
 
     #[test]

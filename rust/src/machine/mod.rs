@@ -157,9 +157,84 @@ impl HwParams {
     }
 }
 
+/// Which transport a model evaluation is parameterized for.
+///
+/// The paper's models take the interconnect's τ and `W_node_remote` as
+/// opaque measured inputs — which is exactly what makes them portable
+/// across transports: a different memory world is the *same* model with a
+/// different (τ, bandwidth) pair. [`TransportModel::apply`] performs that
+/// substitution on an [`HwParams`], leaving every private-memory and
+/// cache-line term untouched.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TransportModel {
+    /// The in-process shared-memory world: the calibrated parameters
+    /// already describe it, so `apply` is the identity.
+    Inproc,
+    /// The socket world: substitute the ping-pong probe's per-message
+    /// latency for τ and its streaming bandwidth for `W_node_remote`
+    /// (see [`socket_probe`](crate::transport::socket_probe)).
+    Socket {
+        /// One-way per-message latency, seconds.
+        latency: f64,
+        /// Streaming bandwidth, bytes/s.
+        bandwidth: f64,
+    },
+}
+
+impl TransportModel {
+    /// The in-process transport (identity substitution).
+    pub fn inproc() -> TransportModel {
+        TransportModel::Inproc
+    }
+
+    /// A socket transport measured at `latency` seconds per message and
+    /// `bandwidth` bytes/s.
+    pub fn socket(latency: f64, bandwidth: f64) -> TransportModel {
+        assert!(
+            latency > 0.0 && bandwidth > 0.0,
+            "socket transport model needs positive latency and bandwidth"
+        );
+        TransportModel::Socket { latency, bandwidth }
+    }
+
+    /// Short label for tables and JSON reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TransportModel::Inproc => "inproc",
+            TransportModel::Socket { .. } => "socket",
+        }
+    }
+
+    /// Substitute this transport's remote terms into `hw`.
+    pub fn apply(&self, hw: &HwParams) -> HwParams {
+        match *self {
+            TransportModel::Inproc => *hw,
+            TransportModel::Socket { latency, bandwidth } => {
+                HwParams { tau: latency, w_node_remote: bandwidth, ..*hw }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn transport_model_substitutes_remote_terms() {
+        let hw = HwParams::abel();
+        assert_eq!(TransportModel::inproc().apply(&hw), hw);
+        let tm = TransportModel::socket(25.0e-6, 1.2e9);
+        let sub = tm.apply(&hw);
+        assert_eq!(sub.tau, 25.0e-6);
+        assert_eq!(sub.w_node_remote, 1.2e9);
+        // Private-memory and cache terms are untouched.
+        assert_eq!(sub.w_thread_private, hw.w_thread_private);
+        assert_eq!(sub.cache_line, hw.cache_line);
+        assert_eq!(sub.w_node_single, hw.w_node_single);
+        assert_eq!(tm.label(), "socket");
+        assert_eq!(TransportModel::inproc().label(), "inproc");
+    }
 
     #[test]
     fn abel_values() {

@@ -22,6 +22,15 @@
 //! * `repro chaos` — fault-injection drill: verifies injected protocol
 //!   faults convert to structured stalls/poisons within the wait deadline,
 //!   then a checkpoint/restart round-trip.
+//! * `repro launch --procs P` — multi-process orchestrator: spawns `P`
+//!   worker processes, ships each the serialized exchange plan over a
+//!   loopback socket mesh, runs the chosen workload/protocol across process
+//!   boundaries and verifies fields and byte counters bitwise against the
+//!   in-process reference (`repro _worker` is the private spawned-rank
+//!   entry).
+//! * `repro validate --transport socket` — measured-vs-predicted for the
+//!   loopback socket world, with the model's τ/bandwidth taken from a
+//!   socket ping-pong probe.
 //!
 //! Every model/simulator consumer takes `--hw abel|host|file:<path>` to
 //! select the hardware parameter set (paper constants, a fresh host
@@ -38,6 +47,17 @@ use upcsim::spmv::Variant;
 use upcsim::util::fmt;
 
 fn main() {
+    // `repro _worker ...` is the spawned rank process of `repro launch`;
+    // its argv is a private protocol (parsed by `worker_main`), not the
+    // public flag grammar.
+    let raw: Vec<String> = std::env::args().collect();
+    if raw.get(1).map(String::as_str) == Some("_worker") {
+        if let Err(e) = upcsim::transport::worker_main(&raw[2..]) {
+            eprintln!("worker error: {e}");
+            std::process::exit(1);
+        }
+        return;
+    }
     let args = match Args::from_env() {
         Ok(a) => a,
         Err(e) => {
@@ -107,6 +127,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "heat" => cmd_heat(args),
         "stencil" => cmd_stencil(args),
         "chaos" => cmd_chaos(args),
+        "launch" => cmd_launch(args),
         "validate" => match args.positional.first().map(|s| s.as_str()) {
             None | Some("model") => cmd_validate_model(args),
             Some("pjrt") => cmd_validate_pjrt(args),
@@ -149,13 +170,28 @@ SUBCOMMANDS
               deadline; then a checkpoint/restart demo (kill mid-run,
               resume, compare bitwise). Flags: --deadline-ms D (150),
               --steps S (6), --seed N (adds a seeded random fault scenario)
+  launch      multi-process transport drill: spawn --procs P worker
+              processes (default 2), ship each the serialized exchange plan
+              over loopback sockets, run --workload heat|stencil|spmv|all
+              x --proto sync|overlap|pipeline|all (defaults: all x all,
+              --steps 4 each) across process boundaries, and verify fields
+              and byte counters bitwise against the in-process reference
+              (--no-verify skips). --chaos kill@EPOCH | slow@EPOCH:MS
+              injects a fault into the highest rank; --deadline-ms D
+              (10000) bounds every wait
   validate [model]  measured-vs-predicted: all four variants plus the
               split-phase overlapped and multi-step pipelined paths (V3,
               heat2d, stencil3d) on the parallel engine, wall-clock vs the
               calibrated eqs. (5)-(18), overlap, and pipeline models
               (--hw host by default; --steps S samples/point; --pipeline P
               batch depth, default 8; emits BENCH_model.json, --json PATH
-              to move it)
+              to move it; --budget R exits nonzero when any geomean leaves
+              [1/R, R], 0 = report only)
+  validate --transport socket  measured-vs-predicted for the loopback
+              socket world: nine (workload x protocol) rows against the
+              model with the socket probe's tau/bandwidth substituted
+              (--procs P ranks, --steps S, --budget R default 25; emits
+              BENCH_transport.json, exits nonzero outside budget)
   validate pjrt     numeric equivalence: native kernel vs PJRT artifacts
 
 COMMON FLAGS
@@ -297,6 +333,18 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
         format!("{} B", cal.hw.cache_line),
         "strided-access knee".into(),
     ]);
+    if cal.socket_model().is_some() {
+        t.row(vec![
+            "socket latency".into(),
+            fmt::secs(cal.socket_latency),
+            "loopback TCP ping-pong (socket transport tau)".into(),
+        ]);
+        t.row(vec![
+            "socket bandwidth".into(),
+            fmt::rate(cal.socket_bandwidth),
+            "loopback TCP stream (socket transport W_node_remote)".into(),
+        ]);
+    }
     println!("{}", t.render());
     cal.save(&save)?;
     println!("[calibration took {}]", fmt::secs(t0.elapsed().as_secs_f64()));
@@ -304,7 +352,86 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--chaos kill@EPOCH | slow@EPOCH:MS | none` for `repro launch`.
+fn parse_chaos(s: Option<&str>) -> Result<upcsim::transport::ChaosAction> {
+    use upcsim::transport::ChaosAction;
+    let Some(s) = s else { return Ok(ChaosAction::None) };
+    if s == "none" {
+        return Ok(ChaosAction::None);
+    }
+    if let Some(e) = s.strip_prefix("kill@") {
+        return Ok(ChaosAction::KillAt(e.parse()?));
+    }
+    if let Some(rest) = s.strip_prefix("slow@") {
+        let (e, ms) = rest
+            .split_once(':')
+            .ok_or_else(|| anyhow!("--chaos slow@EPOCH:MS needs a duration"))?;
+        return Ok(ChaosAction::SlowAt(
+            e.parse()?,
+            std::time::Duration::from_millis(ms.parse()?),
+        ));
+    }
+    bail!("unknown chaos action '{s}' (kill@EPOCH | slow@EPOCH:MS | none)")
+}
+
+fn cmd_launch(args: &Args) -> Result<()> {
+    use upcsim::transport::{LaunchConfig, Proto, WORKLOADS};
+    let procs = args.usize_flag("procs", 2)?;
+    let workload = args.str_flag("workload").unwrap_or("all").to_string();
+    let proto_flag = args.str_flag("proto").map(str::to_string);
+    let steps = args.usize_flag("steps", 4)? as u64;
+    let deadline_ms = args.usize_flag("deadline-ms", 10_000)?;
+    let chaos = parse_chaos(args.str_flag("chaos"))?;
+    let verify = !args.bool_flag("no-verify");
+    args.finish()?;
+    let protos: Vec<Proto> = match proto_flag.as_deref() {
+        None | Some("all") => Proto::ALL.to_vec(),
+        Some(p) => vec![Proto::parse(p)
+            .ok_or_else(|| anyhow!("unknown proto '{p}' (sync | overlap | pipeline | all)"))?],
+    };
+    let workloads: Vec<String> = if workload == "all" {
+        WORKLOADS.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![workload]
+    };
+    for w in &workloads {
+        for &proto in &protos {
+            let cfg = LaunchConfig {
+                procs,
+                workload: w.clone(),
+                proto,
+                steps,
+                deadline: std::time::Duration::from_millis(deadline_ms as u64),
+                chaos,
+                verify,
+            };
+            upcsim::transport::cmd_launch(&cfg)?;
+        }
+    }
+    Ok(())
+}
+
+/// `repro validate --transport socket`: all nine (workload × protocol)
+/// combinations over the loopback socket world, measured against the model
+/// with the socket probe's τ/bandwidth substituted. Exits nonzero when any
+/// row (or the geomean) leaves the ratio budget.
+fn cmd_validate_transport(args: &Args) -> Result<()> {
+    let procs = args.usize_flag("procs", 2)?;
+    let steps = args.usize_flag("steps", 6)? as u64;
+    let budget = args.usize_flag("budget", 25)? as f64;
+    let quick = args.bool_flag("quick");
+    args.finish()?;
+    upcsim::transport::validate_transport(procs, steps, quick, budget)?;
+    println!("transport validation OK ({procs} ranks over loopback sockets)");
+    Ok(())
+}
+
 fn cmd_validate_model(args: &Args) -> Result<()> {
+    match args.str_flag("transport").unwrap_or("inproc") {
+        "inproc" => {}
+        "socket" => return cmd_validate_transport(args),
+        other => bail!("unknown transport '{other}' (inproc | socket)"),
+    }
     // Host parameters by default: validating the paper's Abel constants
     // against this machine's wall-clock would be comparing different
     // hardware. Likewise the engine defaults to the parallel pool — the
@@ -316,6 +443,7 @@ fn cmd_validate_model(args: &Args) -> Result<()> {
     }
     let steps = args.usize_flag("steps", 12)?;
     let pipeline = args.usize_flag("pipeline", 8)?.max(1);
+    let budget = args.usize_flag("budget", 0)? as f64;
     let json_path: std::path::PathBuf = args.str_flag("json").unwrap_or("BENCH_model.json").into();
     args.finish()?;
     let mut ws = Workspace::new();
@@ -340,13 +468,30 @@ fn cmd_validate_model(args: &Args) -> Result<()> {
     std::fs::write(&json_path, report.json.pretty())
         .map_err(|e| anyhow!("cannot write {}: {e}", json_path.display()))?;
     println!("[model accuracy saved to {}]", json_path.display());
+    // The budget gate runs after every artifact (table + JSON) is emitted,
+    // so a failing run still leaves its evidence behind. `--budget 0`
+    // (the default) reports without gating.
+    let mut outside = Vec::new();
+    let mut check = |label: String, g: f64| {
+        if budget > 1.0 && !(g.is_finite() && g <= budget && g >= 1.0 / budget) {
+            outside.push(label);
+        }
+    };
     for variant in Variant::ALL {
         let g = report.geomean_ratio(variant);
         println!("{:<9} measured/predicted geomean = {g:.2}x", variant.name());
+        check(format!("{} = {g:.2}x", variant.name()), g);
     }
     for workload in harness::WORKLOAD_LABELS {
         let g = report.workload_geomean(workload);
         println!("{workload:<13} measured/predicted geomean = {g:.2}x");
+        check(format!("{workload} = {g:.2}x"), g);
+    }
+    if !outside.is_empty() {
+        bail!(
+            "measured/predicted geomeans outside the {budget:.0}x budget: {}",
+            outside.join(", ")
+        );
     }
     Ok(())
 }

@@ -15,7 +15,8 @@ mod stencil;
 
 pub use heat::{predict_heat2d, Heat2dPrediction, HeatGrid};
 pub use overlap::{
-    predict_heat2d_overlap, predict_stencil3d_overlap, predict_v3_overlap, OverlapPrediction,
+    predict_heat2d_overlap, predict_heat2d_overlap_on, predict_stencil3d_overlap,
+    predict_stencil3d_overlap_on, predict_v3_overlap, predict_v3_overlap_on, OverlapPrediction,
 };
 pub use pipeline::{
     predict_heat2d_pipelined, predict_stencil3d_pipelined, predict_v3_pipelined,

@@ -29,7 +29,7 @@
 
 use super::{predict_heat2d, predict_stencil3d, predict_v3, HeatGrid, SpmvInputs};
 use crate::comm::RowRun;
-use crate::machine::HwParams;
+use crate::machine::{HwParams, TransportModel};
 use crate::pgas::Topology;
 use crate::stencil3d::Stencil3dGrid;
 
@@ -229,12 +229,68 @@ pub fn predict_v3_overlap(inp: &SpmvInputs) -> OverlapPrediction {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Transport-parameterized entry points.
+//
+// The models above take the interconnect's τ and bandwidth as measured
+// inputs, which makes them transport-portable: evaluating "the same
+// workload over sockets" is the same closed form with the socket probe's
+// (latency, bandwidth) substituted via [`TransportModel::apply`]. These
+// wrappers perform the substitution so callers (`repro validate
+// --transport …`) cannot forget it on one path.
+// ---------------------------------------------------------------------------
+
+/// [`predict_heat2d_overlap`] with `tm`'s remote terms substituted into
+/// `hw`.
+pub fn predict_heat2d_overlap_on(
+    tm: &TransportModel,
+    grid: &HeatGrid,
+    topo: &Topology,
+    hw: &HwParams,
+) -> OverlapPrediction {
+    predict_heat2d_overlap(grid, topo, &tm.apply(hw))
+}
+
+/// [`predict_stencil3d_overlap`] with `tm`'s remote terms substituted into
+/// `hw`.
+pub fn predict_stencil3d_overlap_on(
+    tm: &TransportModel,
+    grid: &Stencil3dGrid,
+    topo: &Topology,
+    hw: &HwParams,
+) -> OverlapPrediction {
+    predict_stencil3d_overlap(grid, topo, &tm.apply(hw))
+}
+
+/// [`predict_v3_overlap`] with `tm`'s remote terms substituted into the
+/// inputs' `hw`.
+pub fn predict_v3_overlap_on(tm: &TransportModel, inp: &SpmvInputs) -> OverlapPrediction {
+    predict_v3_overlap(&SpmvInputs { hw: tm.apply(&inp.hw), ..*inp })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::comm::Analysis;
     use crate::matrix::Ellpack;
     use crate::pgas::Layout;
+
+    #[test]
+    fn transport_substitution_slows_remote_terms_only() {
+        let hw = HwParams::abel();
+        let grid = HeatGrid::new(4_096, 4_096, 2, 2);
+        let topo = Topology::new(4, 1);
+        let base = predict_heat2d_overlap_on(&TransportModel::inproc(), &grid, &topo, &hw);
+        let ref_direct = predict_heat2d_overlap(&grid, &topo, &hw);
+        assert_eq!(base.t_step, ref_direct.t_step, "inproc wrapper is the identity");
+        // A much slower interconnect (loopback-socket-ish) inflates the
+        // transfer term but leaves the compute split untouched.
+        let slow = TransportModel::socket(50.0e-6, 1.0e9);
+        let p = predict_heat2d_overlap_on(&slow, &grid, &topo, &hw);
+        assert!(p.t_comm > base.t_comm);
+        assert_eq!(p.t_comp_interior, base.t_comp_interior);
+        assert_eq!(p.t_comp_boundary, base.t_comp_boundary);
+    }
 
     #[test]
     fn overlap_never_slower_than_serial_model() {

@@ -20,11 +20,12 @@
 //!
 //! The executor produces bitwise-identical results to the UPC variants.
 
-use crate::engine::Engine;
+use crate::engine::{Engine, EpochFlags, PerWorker, Phase, DEFAULT_WAIT_DEADLINE};
 use crate::machine::{HwParams, SIZEOF_DOUBLE, SIZEOF_INT};
 use crate::matrix::Ellpack;
 use crate::pgas::Topology;
 use crate::sim::SimParams;
+use crate::transport::{must, wait_epoch_flag};
 use crate::util::FastDiv;
 
 /// Contiguous partition of `n` rows over `ranks`.
@@ -292,8 +293,12 @@ impl MpiSolver {
             x[cursor..cursor + buf.len()].copy_from_slice(buf);
             cursor += buf.len();
         }
-        // Compute into the persistent scratch, then commit (Jacobi
-        // semantics).
+        Self::rank_compute(st, r_nz, x, y);
+    }
+
+    /// ELLPACK compute into the persistent scratch, then commit (Jacobi
+    /// semantics). Shared by both engines — one FP order.
+    fn rank_compute(st: &RankState, r_nz: usize, x: &mut [f64], y: &mut [f64]) {
         for k in 0..st.rows {
             let mut tmp = 0.0;
             for jj in 0..r_nz {
@@ -304,49 +309,67 @@ impl MpiSolver {
         x[..st.rows].copy_from_slice(y);
     }
 
-    /// Parallel step: rank workers pack concurrently into their persistent
-    /// payload buffers (reads only), then every rank fills its ghosts
-    /// through the precomputed routing table and computes fully locally —
-    /// ghost region and owned rows live in the rank's own buffer, so
-    /// phase 2 needs no synchronization at all. No per-step allocation: the
-    /// payload buffers, routing table and commit scratch all persist.
+    /// Parallel step on scoped rank threads, synchronized by the transport
+    /// layer's epoch-flag primitives instead of a scope-wide barrier: each
+    /// rank packs its persistent payload buffers and publishes its epoch
+    /// flag (Release), then waits per expected sender (Acquire, deadline-
+    /// and stall-aware) before filling its ghosts straight from that
+    /// sender's buffers — the same split-phase structure as the engine
+    /// protocols, so a dead peer converts into a structured
+    /// [`StallError`](crate::engine::StallError) panic, never a hang. No
+    /// per-step allocation on the transport path: the payload buffers,
+    /// routing table and commit scratch all persist.
     fn step_par(&mut self) {
-        // Phase 1: pack, one worker per sending rank.
-        {
-            let x = &self.x;
-            std::thread::scope(|s| {
-                for ((rank, bufs), st) in
-                    self.send_bufs.iter_mut().enumerate().zip(&self.ranks)
-                {
-                    if st.send.is_empty() {
-                        continue;
-                    }
-                    s.spawn(move || {
-                        for ((_, offsets), buf) in st.send.iter().zip(bufs.iter_mut()) {
-                            for (slot, &o) in buf.iter_mut().zip(offsets) {
-                                *slot = x[rank][o as usize];
-                            }
-                        }
-                    });
-                }
-            });
-        }
-        // Phase 2: ghost fill + compute + commit, one worker per rank. The
-        // two-sided "exchange" is the routing table: receivers read the
-        // senders' payload buffers directly.
         let r = self.r_nz;
-        let bufs = &self.send_bufs;
         let route = &self.recv_route;
+        let states = &self.ranks;
+        let flags = EpochFlags::new(states.len());
+        let bufs_view = PerWorker::new(&mut self.send_bufs);
+        let x_view = PerWorker::new(&mut self.x);
+        let y_view = PerWorker::new(&mut self.y_scratch);
         std::thread::scope(|s| {
-            for (((xr, st), rt), y) in self
-                .x
-                .iter_mut()
-                .zip(&self.ranks)
-                .zip(route)
-                .zip(&mut self.y_scratch)
-            {
+            for rank in 0..states.len() {
+                let (flags, bufs_view) = (&flags, &bufs_view);
+                let (x_view, y_view) = (&x_view, &y_view);
                 s.spawn(move || {
-                    Self::rank_step(st, r, rt, bufs, xr, y);
+                    let st = &states[rank];
+                    // SAFETY: rank claims only its own payload buffers,
+                    // x buffer and scratch, exactly once per step.
+                    let bufs = unsafe { bufs_view.take(rank) };
+                    let x = unsafe { x_view.take(rank) }.as_mut_slice();
+                    let y = unsafe { y_view.take(rank) }.as_mut_slice();
+                    // begin: pack + publish. Publish even with nothing to
+                    // send — peers wait on the flag, not the payload.
+                    for ((_, offsets), buf) in st.send.iter().zip(bufs.iter_mut()) {
+                        for (slot, &o) in buf.iter_mut().zip(offsets) {
+                            *slot = x[o as usize];
+                        }
+                    }
+                    flags.publish(rank, 1);
+                    // finish: per-sender waits + contiguous ghost append.
+                    let mut cursor = st.rows;
+                    for (&(peer, k), (want_peer, want_len)) in route[rank].iter().zip(&st.recv) {
+                        let p = peer as usize;
+                        must(wait_epoch_flag(
+                            flags.flag(p),
+                            1,
+                            Some(DEFAULT_WAIT_DEADLINE),
+                            rank,
+                            p,
+                            Phase::Transfer,
+                            &format!("mpi:rank-{p}"),
+                        ));
+                        // SAFETY: read-only view of the sender's payloads,
+                        // taken only after its Release publish was observed
+                        // by the Acquire wait above; the sender never
+                        // rewrites them within this step.
+                        let buf = &unsafe { bufs_view.peek(p) }[k as usize];
+                        assert_eq!(peer, *want_peer, "unexpected sender");
+                        assert_eq!(buf.len() as u32, *want_len, "short message");
+                        x[cursor..cursor + buf.len()].copy_from_slice(buf);
+                        cursor += buf.len();
+                    }
+                    Self::rank_compute(st, r, x, y);
                 });
             }
         });

@@ -19,6 +19,7 @@
 mod solver;
 
 pub use solver::{seq_reference_step3d, Stencil3dSolver};
+pub(crate) use solver::{compute_split, face_plan, initial_field, jacobi_blocks3d};
 
 /// Geometry of a 3D stencil run: global box and thread-grid partitioning.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

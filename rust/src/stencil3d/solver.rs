@@ -16,7 +16,7 @@ use crate::engine::{check_plan_hash, Checkpoint, Engine, ExchangeRuntime};
 /// * y-faces — rows over x (`row_stride = m·n`), contiguous in z;
 /// * z-faces — rows over x (`row_stride = m·n`), strided in y
 ///   (`col_stride = n`): the doubly-strided shape that pays pack time.
-fn face_plan(grid: &Stencil3dGrid) -> StridedPlan {
+pub(crate) fn face_plan(grid: &Stencil3dGrid) -> StridedPlan {
     let (p, m, n) = grid.subdomain();
     let mn = m * n;
     let (pi, mi, ni) = (p - 2, m - 2, n - 2);
@@ -54,7 +54,7 @@ fn face_plan(grid: &Stencil3dGrid) -> StridedPlan {
 
 /// Compile the interior/boundary decomposition for the overlapped step and
 /// validate it (debug builds) against the canonical owned region.
-fn compute_split(grid: &Stencil3dGrid) -> ComputeSplit {
+pub(crate) fn compute_split(grid: &Stencil3dGrid) -> ComputeSplit {
     let (p, m, n) = grid.subdomain();
     let split = ComputeSplit::grid3d(p, m, n);
     debug_assert!(
@@ -84,34 +84,8 @@ impl Stencil3dSolver {
     /// Boundary values of the global domain are treated as fixed (Dirichlet).
     pub fn new(grid: Stencil3dGrid, global: &[f64]) -> Stencil3dSolver {
         assert_eq!(global.len(), grid.p_glob * grid.m_glob * grid.n_glob);
-        let (p, m, n) = grid.subdomain();
-        let mut phi = Vec::with_capacity(grid.threads());
-        for t in 0..grid.threads() {
-            let (ip, jp, kp) = grid.coords(t);
-            let (x0, y0, z0) = (ip * (p - 2), jp * (m - 2), kp * (n - 2));
-            let mut field = vec![0.0f64; p * m * n];
-            for x in 0..p {
-                for y in 0..m {
-                    for z in 0..n {
-                        let gx = x0 as isize + x as isize - 1;
-                        let gy = y0 as isize + y as isize - 1;
-                        let gz = z0 as isize + z as isize - 1;
-                        if gx >= 0
-                            && (gx as usize) < grid.p_glob
-                            && gy >= 0
-                            && (gy as usize) < grid.m_glob
-                            && gz >= 0
-                            && (gz as usize) < grid.n_glob
-                        {
-                            field[(x * m + y) * n + z] = global
-                                [(gx as usize * grid.m_glob + gy as usize) * grid.n_glob
-                                    + gz as usize];
-                        }
-                    }
-                }
-            }
-            phi.push(field);
-        }
+        let phi: Vec<Vec<f64>> =
+            (0..grid.threads()).map(|t| initial_field(grid, global, t)).collect();
         let phin = phi.clone();
         let runtime = ExchangeRuntime::new(face_plan(&grid));
         let split = compute_split(&grid);
@@ -192,6 +166,12 @@ impl Stencil3dSolver {
         &self.split
     }
 
+    /// Per-thread halo-extended fields (`phi`), e.g. for comparing a
+    /// distributed run's rank-local results against this reference.
+    pub fn local_fields(&self) -> &[Vec<f64>] {
+        &self.phi
+    }
+
     /// One time step on the sequential oracle engine.
     pub fn step(&mut self) {
         self.step_with(Engine::Sequential);
@@ -264,7 +244,7 @@ impl Stencil3dSolver {
 
     /// 7-point Jacobi for one thread: average of the six face neighbours on
     /// the interior, plus the fixed global-boundary copy-through.
-    fn jacobi_update(grid: Stencil3dGrid, t: usize, phi: &[f64], phin: &mut [f64]) {
+    pub(crate) fn jacobi_update(grid: Stencil3dGrid, t: usize, phi: &[f64], phin: &mut [f64]) {
         let (p, m, n) = grid.subdomain();
         let mn = m * n;
         for x in 1..p - 1 {
@@ -287,7 +267,12 @@ impl Stencil3dSolver {
 
     /// Global-boundary planes stay fixed (Dirichlet): copy them through.
     /// Runs after every cell update on both step protocols.
-    fn fixed_boundary_copy(grid: Stencil3dGrid, t: usize, phi: &[f64], phin: &mut [f64]) {
+    pub(crate) fn fixed_boundary_copy(
+        grid: Stencil3dGrid,
+        t: usize,
+        phi: &[f64],
+        phin: &mut [f64],
+    ) {
         let (p, m, n) = grid.subdomain();
         let mn = m * n;
         let (ip, jp, kp) = grid.coords(t);
@@ -350,7 +335,13 @@ impl Stencil3dSolver {
 /// (x stride `mn`, y stride `n`). Per-cell expression and operand order are
 /// identical to [`Stencil3dSolver::jacobi_update`]'s nested loops, so any
 /// partition of the owned region evaluates bitwise identically.
-fn jacobi_blocks3d(mn: usize, n: usize, blocks: &[StridedBlock], phi: &[f64], phin: &mut [f64]) {
+pub(crate) fn jacobi_blocks3d(
+    mn: usize,
+    n: usize,
+    blocks: &[StridedBlock],
+    phi: &[f64],
+    phin: &mut [f64],
+) {
     for b in blocks {
         for r in 0..b.rows {
             let base = b.offset + r * b.row_stride;
@@ -366,6 +357,37 @@ fn jacobi_blocks3d(mn: usize, n: usize, blocks: &[StridedBlock], phi: &[f64], ph
             }
         }
     }
+}
+
+/// Thread `t`'s halo-extended `p × m × n` box cut from the global field:
+/// interior cells plus whatever halo overlaps the global domain
+/// (out-of-range halo stays 0). Shared by the in-process solver and the
+/// per-rank distributed drivers so every backend starts bitwise identical.
+pub(crate) fn initial_field(grid: Stencil3dGrid, global: &[f64], t: usize) -> Vec<f64> {
+    let (p, m, n) = grid.subdomain();
+    let (ip, jp, kp) = grid.coords(t);
+    let (x0, y0, z0) = (ip * (p - 2), jp * (m - 2), kp * (n - 2));
+    let mut field = vec![0.0f64; p * m * n];
+    for x in 0..p {
+        for y in 0..m {
+            for z in 0..n {
+                let gx = x0 as isize + x as isize - 1;
+                let gy = y0 as isize + y as isize - 1;
+                let gz = z0 as isize + z as isize - 1;
+                if gx >= 0
+                    && (gx as usize) < grid.p_glob
+                    && gy >= 0
+                    && (gy as usize) < grid.m_glob
+                    && gz >= 0
+                    && (gz as usize) < grid.n_glob
+                {
+                    field[(x * m + y) * n + z] = global
+                        [(gx as usize * grid.m_glob + gy as usize) * grid.n_glob + gz as usize];
+                }
+            }
+        }
+    }
+    field
 }
 
 /// Sequential reference: one 7-point Jacobi step on the global field (fixed

@@ -1,0 +1,172 @@
+//! The in-process backend: epoch flags + shared staging arena.
+//!
+//! [`PoolEndpoint`] re-expresses the engine's pre-trait hot path — padded
+//! release/acquire `EpochFlags` counters and disjoint `ArenaView` slices —
+//! as a [`Transport`]. It is a pure view bundle: constructing one allocates
+//! nothing and every method inlines to the same loads/stores the engine
+//! issued before the refactor, keeping the protocols bitwise unchanged.
+
+use super::Transport;
+use crate::engine::{ArenaView, EpochFlags, StallError, WorkerCtx};
+use std::ops::Range;
+
+/// One pool worker's endpoint onto the shared-memory transport: its rank's
+/// slot in the published/consumed [`EpochFlags`] plus the depth-2 staging
+/// arena (`2 × total` doubles, parity-indexed by epoch).
+///
+/// Wait methods delegate to the pool's deadline/poison-aware primitives
+/// ([`WorkerCtx::wait_for_epoch`] / [`WorkerCtx::wait_for_ack`]), which
+/// raise [`StallError`] through the dispatch's poison path on expiry — so
+/// from this endpoint they always return `Ok` and the engine's existing
+/// `catch_unwind` recovery keeps working unmodified.
+pub struct PoolEndpoint<'a> {
+    rank: usize,
+    total: usize,
+    flags: &'a EpochFlags,
+    acks: &'a EpochFlags,
+    arena: &'a ArenaView<'a>,
+    ctx: &'a WorkerCtx<'a>,
+}
+
+impl<'a> PoolEndpoint<'a> {
+    /// Bundle worker `rank`'s views over a dispatch's shared state. `total`
+    /// is the plan's `total_values()` (one arena parity half).
+    ///
+    /// # Safety
+    /// `send_slot`/`recv_slot` hand out overlapping-lifetime slices of the
+    /// shared arena. The caller must guarantee the compiled-plan contract
+    /// the engine already relies on: slot ranges passed to `send_slot` are
+    /// pairwise disjoint across workers within an epoch (plan messages tile
+    /// the arena), and `recv_slot` ranges are only read after
+    /// `wait_for_epoch` on the range's sender for that epoch.
+    pub unsafe fn new(
+        rank: usize,
+        total: usize,
+        flags: &'a EpochFlags,
+        acks: &'a EpochFlags,
+        arena: &'a ArenaView<'a>,
+        ctx: &'a WorkerCtx<'a>,
+    ) -> PoolEndpoint<'a> {
+        PoolEndpoint { rank, total, flags, acks, arena, ctx }
+    }
+
+    #[inline]
+    fn half(&self, epoch: u64) -> usize {
+        (epoch % 2) as usize * self.total
+    }
+}
+
+impl Transport for PoolEndpoint<'_> {
+    #[inline]
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    #[inline]
+    fn kind(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn peer_identity(&self, peer: usize) -> String {
+        format!("inproc:worker-{peer}")
+    }
+
+    #[inline]
+    fn publish(&mut self, epoch: u64) -> Result<(), StallError> {
+        self.flags.publish(self.rank, epoch);
+        Ok(())
+    }
+
+    #[inline]
+    fn wait_for_epoch(&mut self, peer: usize, epoch: u64) -> Result<(), StallError> {
+        // Panics with a StallError through the pool's poison path on
+        // deadline expiry — identical to the pre-trait engine behavior.
+        self.ctx.wait_for_epoch(self.flags.flag(peer), epoch, peer);
+        Ok(())
+    }
+
+    #[inline]
+    fn ack(&mut self, epoch: u64) -> Result<(), StallError> {
+        self.acks.publish(self.rank, epoch);
+        Ok(())
+    }
+
+    #[inline]
+    fn wait_for_ack(&mut self, peer: usize, epoch: u64) -> Result<(), StallError> {
+        self.ctx.wait_for_ack(self.acks.flag(peer), epoch, peer);
+        Ok(())
+    }
+
+    #[inline]
+    fn send_slot(&mut self, epoch: u64, range: Range<usize>) -> &mut [f64] {
+        let h = self.half(epoch);
+        // SAFETY: disjointness and ordering are the constructor's contract.
+        unsafe { self.arena.slice_mut(h + range.start..h + range.end) }
+    }
+
+    #[inline]
+    fn recv_slot(&mut self, epoch: u64, range: Range<usize>) -> &[f64] {
+        let h = self.half(epoch);
+        // SAFETY: reads follow a wait_for_epoch on the range's sender.
+        unsafe { self.arena.slice(h + range.start..h + range.end) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::WorkerPool;
+
+    #[test]
+    fn endpoint_moves_values_between_workers() {
+        // Two workers exchange one double through the endpoint: worker 0
+        // packs into slot 0, worker 1 into slot 1; each waits for the
+        // peer's epoch and reads the other slot.
+        let mut pool = WorkerPool::new();
+        let flags = EpochFlags::new(2);
+        let acks = EpochFlags::new(2);
+        let total = 2usize;
+        let mut staging = vec![0.0f64; 2 * total];
+        let arena = ArenaView::new(&mut staging);
+        let mut got = vec![0.0f64; 2];
+        let gw = crate::engine::PerWorker::new(&mut got);
+        pool.run(2, &|ctx| {
+            let t = ctx.id;
+            // SAFETY: slot ranges are disjoint per worker; reads follow the
+            // epoch wait.
+            let mut ep = unsafe { PoolEndpoint::new(t, total, &flags, &acks, &arena, &ctx) };
+            for epoch in 1..=3u64 {
+                ep.send_slot(epoch, t..t + 1)[0] = (10 * t) as f64 + epoch as f64;
+                super::super::must(ep.publish(epoch));
+                let peer = 1 - t;
+                super::super::must(ep.wait_for_epoch(peer, epoch));
+                let v = ep.recv_slot(epoch, peer..peer + 1)[0];
+                super::super::must(ep.ack(epoch));
+                super::super::must(ep.wait_for_ack(peer, epoch));
+                // SAFETY: each worker claims only its own slot.
+                *unsafe { gw.take(t) } = v;
+            }
+            assert_eq!(ep.kind(), "inproc");
+            assert_eq!(ep.rank(), t);
+        });
+        // After epoch 3: worker 0 read worker 1's value (13), and vice versa.
+        assert_eq!(got, vec![13.0, 3.0]);
+    }
+
+    #[test]
+    fn endpoint_halves_alternate_by_epoch_parity() {
+        let mut pool = WorkerPool::new();
+        let flags = EpochFlags::new(1);
+        let acks = EpochFlags::new(1);
+        let total = 1usize;
+        let mut staging = vec![0.0f64; 2];
+        let arena = ArenaView::new(&mut staging);
+        pool.run(1, &|ctx| {
+            // SAFETY: single worker, trivially disjoint.
+            let mut ep = unsafe { PoolEndpoint::new(0, total, &flags, &acks, &arena, &ctx) };
+            ep.send_slot(1, 0..1)[0] = 1.5; // odd epoch → upper half
+            ep.send_slot(2, 0..1)[0] = 2.5; // even epoch → lower half
+        });
+        assert_eq!(staging, vec![2.5, 1.5]);
+    }
+}

@@ -1,0 +1,1389 @@
+//! Multi-world orchestration: one compiled [`ExchangePlan`] executed over
+//! any [`Transport`].
+//!
+//! This module closes the loop the transport layer opens: the *same*
+//! workload — heat-2D, stencil-3D, or SpMV V3 — is described once by a
+//! [`WorkloadSpec`], compiled once into an exchange plan, and then run in
+//! any of three memory worlds:
+//!
+//! 1. **in-process reference** ([`run_reference`]) — the engine's
+//!    sequential oracle, the bitwise ground truth;
+//! 2. **in-process sockets** ([`run_socket_world`]) — one thread per rank
+//!    over a loopback TCP mesh, same process;
+//! 3. **multi-process sockets** ([`cmd_launch`] / [`worker_main`]) — the
+//!    `repro launch --procs P` orchestrator spawns `P` worker *processes*,
+//!    ships each the serialized plan (fingerprint-checked on arrival), and
+//!    verifies fields and wire counters bitwise against world 1.
+//!
+//! [`ChaosAction`] injects a mid-run kill or stall into the highest rank so
+//! the cross-process failure path (peer dies → reader marks the stream dead
+//! → clean [`StallError`] within the deadline) is exercised end to end.
+//! [`validate_transport`] closes the *model* loop: a socket ping-pong probe
+//! parameterizes the τ/bandwidth terms, and measured per-step times for all
+//! nine (workload × protocol) combinations are checked against the
+//! predictions within a ratio budget.
+
+use super::{
+    loopback_mesh, socket_probe, wire, MeshStreams, ProcRuntime, SocketTransport, Transport,
+};
+use crate::comm::{Analysis, ExchangePlan};
+use crate::engine::{Engine, Phase, SpmvEngine, StallError};
+use crate::heat2d::Heat2dSolver;
+use crate::machine::{HwParams, TransportModel};
+use crate::matrix::Ellpack;
+use crate::model::{
+    predict_heat2d_overlap_on, predict_stencil3d_overlap_on, predict_v3_overlap_on, HeatGrid,
+    OverlapPrediction, PipelinePrediction, SpmvInputs,
+};
+use crate::pgas::Topology;
+use crate::spmv::{spmv_block_gathered, SpmvState, Variant};
+use crate::stencil3d::{Stencil3dGrid, Stencil3dSolver};
+use crate::util::json::{self, Value};
+use crate::util::Rng;
+use anyhow::{anyhow, bail, ensure};
+use std::io;
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// The three workloads every transport world must reproduce bitwise.
+pub const WORKLOADS: [&str; 3] = ["heat", "stencil", "spmv"];
+
+/// Scalars defining an SpMV V3 run (the matrix and layout are rebuilt
+/// deterministically from the seeds on every rank).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpmvParams {
+    pub n: usize,
+    pub r_nz: usize,
+    pub block: usize,
+    pub procs: usize,
+    pub mat_seed: u64,
+    pub x_seed: u64,
+}
+
+/// A self-contained, serializable description of one workload instance:
+/// enough to rebuild the geometry, the initial data, and — crucially — the
+/// exchange plan on any rank of any world.
+#[derive(Debug, Clone, Copy)]
+pub enum WorkloadSpec {
+    Heat { grid: HeatGrid, seed: u64 },
+    Stencil { grid: Stencil3dGrid, seed: u64 },
+    Spmv(SpmvParams),
+}
+
+impl WorkloadSpec {
+    /// The default instance of workload `name` over `procs` ranks, sized so
+    /// a loopback world finishes in well under a second per protocol.
+    pub fn for_name(name: &str, procs: usize) -> Option<WorkloadSpec> {
+        assert!(procs >= 1, "need at least one rank");
+        match name {
+            "heat" => Some(WorkloadSpec::Heat {
+                grid: HeatGrid::new(32, 16 * procs, 1, procs),
+                seed: 11,
+            }),
+            "stencil" => Some(WorkloadSpec::Stencil {
+                grid: Stencil3dGrid::new(8, 8, 8 * procs, 1, 1, procs),
+                seed: 7,
+            }),
+            "spmv" => Some(WorkloadSpec::Spmv(SpmvParams {
+                n: 120 * procs,
+                r_nz: 6,
+                block: 30,
+                procs,
+                mat_seed: 5,
+                x_seed: 23,
+            })),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadSpec::Heat { .. } => "heat",
+            WorkloadSpec::Stencil { .. } => "stencil",
+            WorkloadSpec::Spmv(_) => "spmv",
+        }
+    }
+
+    /// Number of ranks (= UPC threads) this instance is partitioned over.
+    pub fn procs(&self) -> usize {
+        match self {
+            WorkloadSpec::Heat { grid, .. } => grid.threads(),
+            WorkloadSpec::Stencil { grid, .. } => grid.threads(),
+            WorkloadSpec::Spmv(p) => p.procs,
+        }
+    }
+
+    /// Compile the exchange plan — the single artifact all worlds share.
+    pub fn plan(&self) -> ExchangePlan {
+        match self {
+            WorkloadSpec::Heat { grid, .. } => crate::heat2d::halo_plan(grid).into(),
+            WorkloadSpec::Stencil { grid, .. } => crate::stencil3d::face_plan(grid).into(),
+            WorkloadSpec::Spmv(p) => {
+                let (_, analysis) = spmv_setup(p);
+                analysis.plan.clone().into()
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        match *self {
+            WorkloadSpec::Heat { grid, seed } => {
+                o.set("kind", Value::Str("heat".into()));
+                o.set("m", Value::Num(grid.m_glob as f64));
+                o.set("n", Value::Num(grid.n_glob as f64));
+                o.set("mp", Value::Num(grid.mprocs as f64));
+                o.set("np", Value::Num(grid.nprocs as f64));
+                o.set("seed", Value::Num(seed as f64));
+            }
+            WorkloadSpec::Stencil { grid, seed } => {
+                o.set("kind", Value::Str("stencil".into()));
+                o.set("p", Value::Num(grid.p_glob as f64));
+                o.set("m", Value::Num(grid.m_glob as f64));
+                o.set("n", Value::Num(grid.n_glob as f64));
+                o.set("pp", Value::Num(grid.pprocs as f64));
+                o.set("mp", Value::Num(grid.mprocs as f64));
+                o.set("np", Value::Num(grid.nprocs as f64));
+                o.set("seed", Value::Num(seed as f64));
+            }
+            WorkloadSpec::Spmv(p) => {
+                o.set("kind", Value::Str("spmv".into()));
+                o.set("n", Value::Num(p.n as f64));
+                o.set("r_nz", Value::Num(p.r_nz as f64));
+                o.set("block", Value::Num(p.block as f64));
+                o.set("procs", Value::Num(p.procs as f64));
+                o.set("mat_seed", Value::Num(p.mat_seed as f64));
+                o.set("x_seed", Value::Num(p.x_seed as f64));
+            }
+        }
+        o
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<WorkloadSpec> {
+        let kind = v.get("kind").and_then(Value::as_str).ok_or_else(|| anyhow!("spec: no kind"))?;
+        match kind {
+            "heat" => {
+                let (m, n) = (field_usize(v, "m")?, field_usize(v, "n")?);
+                let (mp, np) = (field_usize(v, "mp")?, field_usize(v, "np")?);
+                ensure!(mp >= 1 && np >= 1 && m % mp == 0 && n % np == 0, "bad heat partition");
+                Ok(WorkloadSpec::Heat {
+                    grid: HeatGrid::new(m, n, mp, np),
+                    seed: field_u64(v, "seed")?,
+                })
+            }
+            "stencil" => {
+                let (p, m, n) = (field_usize(v, "p")?, field_usize(v, "m")?, field_usize(v, "n")?);
+                let (pp, mp, np) =
+                    (field_usize(v, "pp")?, field_usize(v, "mp")?, field_usize(v, "np")?);
+                ensure!(
+                    pp >= 1 && mp >= 1 && np >= 1 && p % pp == 0 && m % mp == 0 && n % np == 0,
+                    "bad stencil partition"
+                );
+                Ok(WorkloadSpec::Stencil {
+                    grid: Stencil3dGrid::new(p, m, n, pp, mp, np),
+                    seed: field_u64(v, "seed")?,
+                })
+            }
+            "spmv" => {
+                let p = SpmvParams {
+                    n: field_usize(v, "n")?,
+                    r_nz: field_usize(v, "r_nz")?,
+                    block: field_usize(v, "block")?,
+                    procs: field_usize(v, "procs")?,
+                    mat_seed: field_u64(v, "mat_seed")?,
+                    x_seed: field_u64(v, "x_seed")?,
+                };
+                ensure!(p.procs >= 1 && p.block >= 1 && p.n % p.block == 0, "bad spmv layout");
+                Ok(WorkloadSpec::Spmv(p))
+            }
+            other => bail!("unknown workload kind '{other}'"),
+        }
+    }
+}
+
+fn field_usize(v: &Value, key: &str) -> anyhow::Result<usize> {
+    v.get(key).and_then(Value::as_usize).ok_or_else(|| anyhow!("spec: missing '{key}'"))
+}
+
+fn field_u64(v: &Value, key: &str) -> anyhow::Result<u64> {
+    let x = v.get(key).and_then(Value::as_f64).ok_or_else(|| anyhow!("spec: missing '{key}'"))?;
+    ensure!(x >= 0.0 && x.fract() == 0.0, "spec: '{key}' is not a seed");
+    Ok(x as u64)
+}
+
+/// The three exchange protocols every transport must support.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Proto {
+    /// Pack → publish → wait → unpack → ack → compute.
+    Sync,
+    /// Interior compute overlaps the in-flight halo (split-phase).
+    Overlap,
+    /// Multi-step pipeline bounded by the depth-2 consumed-epoch ack gate.
+    Pipeline,
+}
+
+impl Proto {
+    pub const ALL: [Proto; 3] = [Proto::Sync, Proto::Overlap, Proto::Pipeline];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Proto::Sync => "sync",
+            Proto::Overlap => "overlap",
+            Proto::Pipeline => "pipeline",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Proto> {
+        match s.to_ascii_lowercase().as_str() {
+            "sync" => Some(Proto::Sync),
+            "overlap" | "overlapped" => Some(Proto::Overlap),
+            "pipeline" | "pipelined" => Some(Proto::Pipeline),
+            _ => None,
+        }
+    }
+}
+
+/// A fault injected into the highest rank of a world: nothing, death at the
+/// start of an epoch, or a stall (sleep) at the start of an epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosAction {
+    None,
+    /// Die at the start of this epoch (worker process: `exit(3)`;
+    /// in-process world: drop the transport and return early).
+    KillAt(u64),
+    /// Sleep this long at the start of the epoch — long enough that every
+    /// peer's wait deadline expires first.
+    SlowAt(u64, Duration),
+}
+
+impl ChaosAction {
+    /// Fire at epoch boundary `epoch`. Returns `false` when the rank should
+    /// die now; the caller decides what death means in its world.
+    pub fn fire(&self, epoch: u64) -> bool {
+        match *self {
+            ChaosAction::KillAt(e) if e == epoch => false,
+            ChaosAction::SlowAt(e, d) if e == epoch => {
+                std::thread::sleep(d);
+                true
+            }
+            _ => true,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        match *self {
+            ChaosAction::None => {
+                o.set("kind", Value::Str("none".into()));
+            }
+            ChaosAction::KillAt(e) => {
+                o.set("kind", Value::Str("kill".into()));
+                o.set("epoch", Value::Num(e as f64));
+            }
+            ChaosAction::SlowAt(e, d) => {
+                o.set("kind", Value::Str("slow".into()));
+                o.set("epoch", Value::Num(e as f64));
+                o.set("ms", Value::Num(d.as_millis() as f64));
+            }
+        }
+        o
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<ChaosAction> {
+        match v.get("kind").and_then(Value::as_str) {
+            Some("none") | None => Ok(ChaosAction::None),
+            Some("kill") => Ok(ChaosAction::KillAt(field_u64(v, "epoch")?)),
+            Some("slow") => Ok(ChaosAction::SlowAt(
+                field_u64(v, "epoch")?,
+                Duration::from_millis(field_u64(v, "ms")?),
+            )),
+            Some(other) => bail!("unknown chaos kind '{other}'"),
+        }
+    }
+}
+
+/// What one rank hands back after driving its part of a world.
+struct RankResult {
+    field: Vec<f64>,
+    bytes: u64,
+    transfers: u64,
+}
+
+/// Drive one rank of `spec` over any transport. `Ok(None)` means the chaos
+/// action asked this rank to die mid-run.
+fn run_rank<T: Transport>(
+    spec: &WorkloadSpec,
+    proto: Proto,
+    steps: u64,
+    transport: T,
+    chaos: &ChaosAction,
+) -> Result<Option<RankResult>, StallError> {
+    match *spec {
+        WorkloadSpec::Heat { grid, seed } => {
+            run_heat_rank(grid, seed, proto, steps, transport, chaos)
+        }
+        WorkloadSpec::Stencil { grid, seed } => {
+            run_stencil_rank(grid, seed, proto, steps, transport, chaos)
+        }
+        WorkloadSpec::Spmv(p) => run_spmv_rank(&p, proto, steps, transport, chaos),
+    }
+}
+
+/// Deterministic global initial data shared by every world.
+fn seeded_field(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.f64_in(0.0, 100.0)).collect()
+}
+
+/// For a kill scheduled inside a pipelined run, the epochs that may run
+/// first (`KillAt(e)` dies *at* `e`, so `e − 1` epochs complete).
+fn pipeline_prefix(chaos: &ChaosAction, steps: u64) -> (u64, bool) {
+    match *chaos {
+        ChaosAction::KillAt(e) if e <= steps => (e - 1, true),
+        _ => (steps, false),
+    }
+}
+
+fn run_heat_rank<T: Transport>(
+    grid: HeatGrid,
+    seed: u64,
+    proto: Proto,
+    steps: u64,
+    transport: T,
+    chaos: &ChaosAction,
+) -> Result<Option<RankResult>, StallError> {
+    let rank = transport.rank();
+    let (_, n) = grid.subdomain();
+    let global = seeded_field(grid.m_glob * grid.n_glob, seed);
+    let mut field = crate::heat2d::initial_field(grid, &global, rank);
+    let mut out = field.clone();
+    let split = crate::heat2d::compute_split(&grid);
+    let plan: ExchangePlan = crate::heat2d::halo_plan(&grid).into();
+    let mut rt = ProcRuntime::new(plan, transport);
+    match proto {
+        Proto::Sync => {
+            for _ in 0..steps {
+                if !chaos.fire(rt.epoch() + 1) {
+                    return Ok(None);
+                }
+                rt.step_strided(&mut field, &mut out, |phi, phin| {
+                    Heat2dSolver::jacobi_update(grid, rank, phi, phin);
+                })?;
+                std::mem::swap(&mut field, &mut out);
+            }
+        }
+        Proto::Overlap => {
+            for _ in 0..steps {
+                if !chaos.fire(rt.epoch() + 1) {
+                    return Ok(None);
+                }
+                rt.step_overlapped(
+                    &mut field,
+                    &mut out,
+                    |phi, phin| crate::heat2d::jacobi_blocks(n, &split.interior, phi, phin),
+                    |phi, phin| {
+                        crate::heat2d::jacobi_blocks(n, &split.boundary, phi, phin);
+                        Heat2dSolver::fixed_boundary_copy(grid, rank, phi, phin);
+                    },
+                )?;
+                std::mem::swap(&mut field, &mut out);
+            }
+        }
+        Proto::Pipeline => {
+            let (run_steps, die_after) = pipeline_prefix(chaos, steps);
+            if run_steps > 0 {
+                rt.run_pipelined(
+                    run_steps,
+                    &mut field,
+                    &mut out,
+                    |phi, phin| crate::heat2d::jacobi_blocks(n, &split.interior, phi, phin),
+                    |phi, phin| {
+                        crate::heat2d::jacobi_blocks(n, &split.boundary, phi, phin);
+                        Heat2dSolver::fixed_boundary_copy(grid, rank, phi, phin);
+                    },
+                    |e| {
+                        let _ = chaos.fire(e);
+                    },
+                )?;
+            }
+            if die_after {
+                return Ok(None);
+            }
+        }
+    }
+    let bytes = rt.transport().sent_payload_bytes();
+    let transfers = rt.transport().sent_transfers();
+    Ok(Some(RankResult { field, bytes, transfers }))
+}
+
+fn run_stencil_rank<T: Transport>(
+    grid: Stencil3dGrid,
+    seed: u64,
+    proto: Proto,
+    steps: u64,
+    transport: T,
+    chaos: &ChaosAction,
+) -> Result<Option<RankResult>, StallError> {
+    let rank = transport.rank();
+    let (_, m, n) = grid.subdomain();
+    let mn = m * n;
+    let global = seeded_field(grid.p_glob * grid.m_glob * grid.n_glob, seed);
+    let mut field = crate::stencil3d::initial_field(grid, &global, rank);
+    let mut out = field.clone();
+    let split = crate::stencil3d::compute_split(&grid);
+    let plan: ExchangePlan = crate::stencil3d::face_plan(&grid).into();
+    let mut rt = ProcRuntime::new(plan, transport);
+    match proto {
+        Proto::Sync => {
+            for _ in 0..steps {
+                if !chaos.fire(rt.epoch() + 1) {
+                    return Ok(None);
+                }
+                rt.step_strided(&mut field, &mut out, |phi, phin| {
+                    Stencil3dSolver::jacobi_update(grid, rank, phi, phin);
+                })?;
+                std::mem::swap(&mut field, &mut out);
+            }
+        }
+        Proto::Overlap => {
+            for _ in 0..steps {
+                if !chaos.fire(rt.epoch() + 1) {
+                    return Ok(None);
+                }
+                rt.step_overlapped(
+                    &mut field,
+                    &mut out,
+                    |phi, phin| {
+                        crate::stencil3d::jacobi_blocks3d(mn, n, &split.interior, phi, phin)
+                    },
+                    |phi, phin| {
+                        crate::stencil3d::jacobi_blocks3d(mn, n, &split.boundary, phi, phin);
+                        Stencil3dSolver::fixed_boundary_copy(grid, rank, phi, phin);
+                    },
+                )?;
+                std::mem::swap(&mut field, &mut out);
+            }
+        }
+        Proto::Pipeline => {
+            let (run_steps, die_after) = pipeline_prefix(chaos, steps);
+            if run_steps > 0 {
+                rt.run_pipelined(
+                    run_steps,
+                    &mut field,
+                    &mut out,
+                    |phi, phin| {
+                        crate::stencil3d::jacobi_blocks3d(mn, n, &split.interior, phi, phin)
+                    },
+                    |phi, phin| {
+                        crate::stencil3d::jacobi_blocks3d(mn, n, &split.boundary, phi, phin);
+                        Stencil3dSolver::fixed_boundary_copy(grid, rank, phi, phin);
+                    },
+                    |e| {
+                        let _ = chaos.fire(e);
+                    },
+                )?;
+            }
+            if die_after {
+                return Ok(None);
+            }
+        }
+    }
+    let bytes = rt.transport().sent_payload_bytes();
+    let transfers = rt.transport().sent_transfers();
+    Ok(Some(RankResult { field, bytes, transfers }))
+}
+
+/// Rebuild the deterministic SpMV problem every world shares: matrix,
+/// per-thread state, and the V3 communication analysis.
+fn spmv_setup(p: &SpmvParams) -> (SpmvState, Analysis) {
+    let m = Ellpack::random(p.n, p.r_nz, p.mat_seed);
+    let x0 = m.initial_vector(p.x_seed);
+    let state = SpmvState::new(&m, p.block, p.procs, &x0);
+    let analysis = Analysis::build(
+        &m.j,
+        m.r_nz,
+        state.layout,
+        Topology::single_node(p.procs),
+        usize::MAX,
+    );
+    (state, analysis)
+}
+
+/// Drive one rank of the gather-form SpMV V3 exchange directly over the
+/// transport (the strided `ProcRuntime` does not apply here): per epoch,
+/// pack → publish → own-block copy → [interior] → wait → scatter → ack →
+/// compute → swap. The FP op order matches the engine's V3 arms exactly, so
+/// results are bitwise identical to the in-process reference.
+fn run_spmv_rank<T: Transport>(
+    p: &SpmvParams,
+    proto: Proto,
+    steps: u64,
+    mut transport: T,
+    chaos: &ChaosAction,
+) -> Result<Option<RankResult>, StallError> {
+    let rank = transport.rank();
+    let (state, analysis) = spmv_setup(p);
+    let layout = state.layout;
+    let bs = layout.block_size;
+    let r_nz = state.r_nz;
+    let plan = &analysis.plan;
+    let mut src: Vec<f64> = state.x.local(rank).to_vec();
+    let mut dst: Vec<f64> = state.y.local(rank).to_vec();
+    let mut ws = vec![0.0f64; layout.n];
+    let mut from: Vec<usize> = plan.recv_msgs(rank).map(|m| m.peer as usize).collect();
+    from.sort_unstable();
+    from.dedup();
+    let mut to: Vec<usize> = plan.send_msgs(rank).map(|m| m.peer as usize).collect();
+    to.sort_unstable();
+    to.dedup();
+    for e in 1..=steps {
+        if !chaos.fire(e) {
+            return Ok(None);
+        }
+        if proto == Proto::Pipeline && e > 2 {
+            for &peer in &to {
+                transport.wait_for_ack(peer, e - 2)?;
+            }
+        }
+        for m in plan.send_msgs(rank) {
+            let buf = transport.send_slot(e, m.range());
+            for (slot, &off) in buf.iter_mut().zip(m.local_src) {
+                *slot = src[off as usize];
+            }
+        }
+        transport.publish(e)?;
+        for b in layout.blocks_of_thread(rank) {
+            let (start, len) = layout.block_range(b);
+            let mb = layout.local_block_index(b);
+            ws[start..start + len].copy_from_slice(&src[mb * bs..mb * bs + len]);
+        }
+        if proto != Proto::Sync {
+            crate::engine::compute_row_runs(
+                &layout,
+                r_nz,
+                &state.d,
+                &state.a,
+                &state.j,
+                &analysis.row_split[rank].interior,
+                &ws,
+                &mut dst,
+            );
+        }
+        for &peer in &from {
+            transport.wait_for_epoch(peer, e)?;
+        }
+        for m in plan.recv_msgs(rank) {
+            let vals = transport.recv_slot(e, m.range());
+            for (&gidx, &v) in m.indices.iter().zip(vals) {
+                ws[gidx as usize] = v;
+            }
+        }
+        transport.ack(e)?;
+        match proto {
+            Proto::Sync => {
+                for b in layout.blocks_of_thread(rank) {
+                    let (start, len) = layout.block_range(b);
+                    let mb = layout.local_block_index(b);
+                    spmv_block_gathered(
+                        start,
+                        state.d.block(b),
+                        state.a.block(b),
+                        state.j.block(b),
+                        r_nz,
+                        &ws,
+                        &mut dst[mb * bs..mb * bs + len],
+                    );
+                }
+            }
+            _ => {
+                crate::engine::compute_row_runs(
+                    &layout,
+                    r_nz,
+                    &state.d,
+                    &state.a,
+                    &state.j,
+                    &analysis.row_split[rank].boundary,
+                    &ws,
+                    &mut dst,
+                );
+            }
+        }
+        std::mem::swap(&mut src, &mut dst);
+    }
+    let bytes = transport.sent_payload_bytes();
+    let transfers = transport.sent_transfers();
+    Ok(Some(RankResult { field: src, bytes, transfers }))
+}
+
+/// The outcome of running one world: per-rank final fields (empty for a
+/// rank that died), summed wire counters, wall time, and any stalls.
+#[derive(Debug)]
+pub struct WorldOutcome {
+    /// Final per-rank local fields (heat/stencil: the `phi` storage incl.
+    /// halo; SpMV: the rank's shard of the final iterate).
+    pub fields: Vec<Vec<f64>>,
+    /// Payload bytes that crossed rank boundaries, summed over ranks.
+    pub bytes: u64,
+    /// Plan messages sent, summed over ranks.
+    pub transfers: u64,
+    pub elapsed: Duration,
+    /// `(rank, error)` for every rank that raised a [`StallError`].
+    pub stalls: Vec<(usize, String)>,
+    /// Ranks the chaos action killed mid-run.
+    pub killed: Vec<usize>,
+}
+
+/// World 1: the engine's in-process sequential oracle. Ground truth for
+/// fields *and* for the wire counters (payload bytes cross the same plan
+/// edges no matter which memory world carries them).
+pub fn run_reference(spec: &WorkloadSpec, proto: Proto, steps: u64) -> WorldOutcome {
+    let t0 = Instant::now();
+    match *spec {
+        WorkloadSpec::Heat { grid, seed } => {
+            let global = seeded_field(grid.m_glob * grid.n_glob, seed);
+            let mut solver = Heat2dSolver::new(grid, &global);
+            match proto {
+                Proto::Sync => {
+                    for _ in 0..steps {
+                        solver.step_with(Engine::Sequential);
+                    }
+                }
+                Proto::Overlap => {
+                    for _ in 0..steps {
+                        solver.step_overlapped_with(Engine::Sequential);
+                    }
+                }
+                Proto::Pipeline => solver.run_pipelined_with(Engine::Sequential, steps as usize),
+            }
+            let transfers = steps * solver.runtime().plan().num_messages() as u64;
+            WorldOutcome {
+                fields: solver.local_fields().to_vec(),
+                bytes: solver.inter_thread_bytes,
+                transfers,
+                elapsed: t0.elapsed(),
+                stalls: Vec::new(),
+                killed: Vec::new(),
+            }
+        }
+        WorkloadSpec::Stencil { grid, seed } => {
+            let global = seeded_field(grid.p_glob * grid.m_glob * grid.n_glob, seed);
+            let mut solver = Stencil3dSolver::new(grid, &global);
+            match proto {
+                Proto::Sync => {
+                    for _ in 0..steps {
+                        solver.step_with(Engine::Sequential);
+                    }
+                }
+                Proto::Overlap => {
+                    for _ in 0..steps {
+                        solver.step_overlapped_with(Engine::Sequential);
+                    }
+                }
+                Proto::Pipeline => solver.run_pipelined_with(Engine::Sequential, steps as usize),
+            }
+            let transfers = steps * solver.runtime().plan().num_messages() as u64;
+            WorldOutcome {
+                fields: solver.local_fields().to_vec(),
+                bytes: solver.inter_thread_bytes,
+                transfers,
+                elapsed: t0.elapsed(),
+                stalls: Vec::new(),
+                killed: Vec::new(),
+            }
+        }
+        WorkloadSpec::Spmv(p) => {
+            let (mut state, analysis) = spmv_setup(&p);
+            let mut engine = SpmvEngine::new(Engine::Sequential);
+            let mut bytes = 0u64;
+            let mut transfers = 0u64;
+            match proto {
+                Proto::Sync => {
+                    for _ in 0..steps {
+                        let out = engine.run(Variant::V3, &mut state, Some(&analysis));
+                        bytes += out.inter_thread_bytes;
+                        transfers += out.transfers;
+                        state.swap_xy();
+                    }
+                }
+                Proto::Overlap => {
+                    for _ in 0..steps {
+                        let out = engine.run_overlapped(&mut state, &analysis);
+                        bytes += out.inter_thread_bytes;
+                        transfers += out.transfers;
+                        state.swap_xy();
+                    }
+                }
+                Proto::Pipeline => {
+                    let out = engine.run_pipelined(steps as usize, &mut state, &analysis);
+                    bytes += out.inter_thread_bytes;
+                    transfers += out.transfers;
+                }
+            }
+            // Sync/overlap end with `swap_xy`, leaving the final iterate in
+            // `x`; a pipelined batch leaves it in `y`.
+            let fields = (0..p.procs)
+                .map(|t| match proto {
+                    Proto::Pipeline => state.y.local(t).to_vec(),
+                    _ => state.x.local(t).to_vec(),
+                })
+                .collect();
+            WorldOutcome {
+                fields,
+                bytes,
+                transfers,
+                elapsed: t0.elapsed(),
+                stalls: Vec::new(),
+                killed: Vec::new(),
+            }
+        }
+    }
+}
+
+fn io_stall(rank: usize, err: &io::Error) -> StallError {
+    StallError {
+        waiter: rank,
+        peer: None,
+        epoch: 0,
+        phase: Phase::Idle,
+        waited: Duration::ZERO,
+        transport: Some(format!("socket setup: {err}")),
+    }
+}
+
+/// World 2: one thread per rank over a loopback TCP mesh, all in this
+/// process. `chaos` (if any) is injected into the highest rank.
+pub fn run_socket_world(
+    spec: &WorkloadSpec,
+    proto: Proto,
+    steps: u64,
+    deadline: Option<Duration>,
+    chaos: ChaosAction,
+) -> io::Result<WorldOutcome> {
+    let procs = spec.procs();
+    let plan = spec.plan();
+    let mesh = loopback_mesh(procs)?;
+    let t0 = Instant::now();
+    let results: Vec<Result<Option<RankResult>, StallError>> = std::thread::scope(|s| {
+        let handles: Vec<_> = mesh
+            .into_iter()
+            .enumerate()
+            .map(|(rank, row)| {
+                let plan = &plan;
+                let spec = *spec;
+                s.spawn(move || {
+                    let transport = SocketTransport::new(rank, plan, row, deadline)
+                        .map_err(|e| io_stall(rank, &e))?;
+                    let ch = if rank == procs - 1 { chaos } else { ChaosAction::None };
+                    run_rank(&spec, proto, steps, transport, &ch)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let elapsed = t0.elapsed();
+    let mut out = WorldOutcome {
+        fields: vec![Vec::new(); procs],
+        bytes: 0,
+        transfers: 0,
+        elapsed,
+        stalls: Vec::new(),
+        killed: Vec::new(),
+    };
+    for (rank, res) in results.into_iter().enumerate() {
+        match res {
+            Ok(Some(rr)) => {
+                out.bytes += rr.bytes;
+                out.transfers += rr.transfers;
+                out.fields[rank] = rr.field;
+            }
+            Ok(None) => out.killed.push(rank),
+            Err(e) => out.stalls.push((rank, e.to_string())),
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// World 3: multi-process over real sockets (`repro launch`).
+// ---------------------------------------------------------------------------
+
+/// Exit code a worker uses when the chaos action kills it — the leader
+/// treats exactly this code as a planned death.
+pub const CHAOS_EXIT_CODE: i32 = 3;
+
+/// Configuration of one `repro launch` run.
+#[derive(Debug, Clone)]
+pub struct LaunchConfig {
+    pub procs: usize,
+    pub workload: String,
+    pub proto: Proto,
+    pub steps: u64,
+    /// Per-wait stall deadline shipped to every worker.
+    pub deadline: Duration,
+    pub chaos: ChaosAction,
+    /// Verify fields and counters bitwise against [`run_reference`].
+    pub verify: bool,
+}
+
+enum WorkerReport {
+    Finished { bytes: u64, transfers: u64, field: Vec<f64> },
+    Stalled(String),
+    Dead(String),
+}
+
+/// Accept one connection, polling so a dead peer cannot hang us forever.
+fn accept_with_deadline(listener: &TcpListener, deadline: Instant) -> anyhow::Result<TcpStream> {
+    listener.set_nonblocking(true)?;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                listener.set_nonblocking(false)?;
+                s.set_nonblocking(false)?;
+                s.set_nodelay(true)?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                ensure!(Instant::now() < deadline, "accept timed out waiting for a peer");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// The `repro launch --procs P` orchestrator: spawn `P` worker processes,
+/// ship each the serialized plan + spec, collect per-rank results, and
+/// verify them against the in-process reference.
+pub fn cmd_launch(cfg: &LaunchConfig) -> anyhow::Result<()> {
+    let spec = WorkloadSpec::for_name(&cfg.workload, cfg.procs).ok_or_else(|| {
+        anyhow!("unknown workload '{}' (expected one of {:?})", cfg.workload, WORKLOADS)
+    })?;
+    let plan = spec.plan();
+    let fp = plan.fingerprint();
+    println!(
+        "launch: {} / {} x{} over {} procs, plan {:016x} ({} values, {} msgs per epoch)",
+        spec.name(),
+        cfg.proto.name(),
+        cfg.steps,
+        cfg.procs,
+        fp,
+        plan.total_values(),
+        plan.num_messages()
+    );
+
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let leader_addr = listener.local_addr()?;
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::with_capacity(cfg.procs);
+    for r in 0..cfg.procs {
+        let child = std::process::Command::new(&exe)
+            .arg("_worker")
+            .arg("--rank")
+            .arg(r.to_string())
+            .arg("--procs")
+            .arg(cfg.procs.to_string())
+            .arg("--connect")
+            .arg(leader_addr.to_string())
+            .spawn()?;
+        children.push(child);
+    }
+
+    // Phase 1: collect hellos (rank + the worker's own mesh address).
+    let handshake_deadline = Instant::now() + Duration::from_secs(60);
+    let mut conns: Vec<Option<TcpStream>> = (0..cfg.procs).map(|_| None).collect();
+    let mut addrs: Vec<String> = vec![String::new(); cfg.procs];
+    for _ in 0..cfg.procs {
+        let mut s = accept_with_deadline(&listener, handshake_deadline)?;
+        s.set_read_timeout(Some(Duration::from_secs(20)))?;
+        let hello = wire::read_msg(&mut s)?;
+        let v = json::parse(std::str::from_utf8(&hello)?)?;
+        let r = field_usize(&v, "rank")?;
+        let a = v.get("addr").and_then(Value::as_str).ok_or_else(|| anyhow!("bad hello"))?;
+        ensure!(r < cfg.procs && conns[r].is_none(), "duplicate or out-of-range hello rank {r}");
+        addrs[r] = a.to_string();
+        conns[r] = Some(s);
+    }
+
+    // Phase 2: ship each worker the spec, the compiled plan, and the mesh.
+    let mut base = Value::obj();
+    base.set("workload", spec.to_json());
+    base.set("proto", Value::Str(cfg.proto.name().into()));
+    base.set("steps", Value::Num(cfg.steps as f64));
+    base.set("deadline_ms", Value::Num(cfg.deadline.as_millis() as f64));
+    base.set("plan", plan.to_json());
+    base.set("plan_fp", Value::Str(format!("{fp:016x}")));
+    base.set("addrs", Value::Arr(addrs.iter().map(|a| Value::Str(a.clone())).collect()));
+    for (r, conn) in conns.iter_mut().enumerate() {
+        let chaos = if r == cfg.procs - 1 { cfg.chaos } else { ChaosAction::None };
+        let mut msg = base.clone();
+        msg.set("chaos", chaos.to_json());
+        wire::write_msg(conn.as_mut().unwrap(), msg.compact().as_bytes())?;
+    }
+
+    // Phase 3: collect results. A slow-chaos victim reports only after its
+    // injected sleep (3 deadlines by convention), so allow generous slack.
+    let result_timeout = cfg.deadline * 8 + Duration::from_secs(20);
+    let mut reports = Vec::with_capacity(cfg.procs);
+    for conn in conns.iter_mut() {
+        let s = conn.as_mut().unwrap();
+        s.set_read_timeout(Some(result_timeout))?;
+        let rep = match wire::read_msg(s) {
+            Ok(head) => read_report(s, &head)?,
+            Err(e) => WorkerReport::Dead(e.to_string()),
+        };
+        reports.push(rep);
+    }
+
+    // Phase 4: reap children (kill stragglers rather than hang).
+    let mut exit_codes: Vec<Option<i32>> = Vec::with_capacity(cfg.procs);
+    for mut child in children {
+        let reap_deadline = Instant::now() + Duration::from_secs(15);
+        let status = loop {
+            match child.try_wait()? {
+                Some(st) => break Some(st),
+                None if Instant::now() >= reap_deadline => {
+                    let _ = child.kill();
+                    break child.wait().ok();
+                }
+                None => std::thread::sleep(Duration::from_millis(25)),
+            }
+        };
+        exit_codes.push(status.and_then(|st| st.code()));
+    }
+
+    evaluate_launch(cfg, &spec, &reports, &exit_codes)
+}
+
+fn read_report(s: &mut TcpStream, head: &[u8]) -> anyhow::Result<WorkerReport> {
+    let v = json::parse(std::str::from_utf8(head)?)?;
+    match v.get("status").and_then(Value::as_str) {
+        Some("ok") => {
+            let bytes = v.get("bytes").and_then(Value::as_f64).unwrap_or(0.0) as u64;
+            let transfers = v.get("transfers").and_then(Value::as_f64).unwrap_or(0.0) as u64;
+            let field = wire::bytes_to_f64s(&wire::read_msg(s)?);
+            Ok(WorkerReport::Finished { bytes, transfers, field })
+        }
+        Some("stall") => Ok(WorkerReport::Stalled(
+            v.get("error").and_then(Value::as_str).unwrap_or("unknown stall").to_string(),
+        )),
+        other => bail!("worker sent unknown status {other:?}"),
+    }
+}
+
+fn evaluate_launch(
+    cfg: &LaunchConfig,
+    spec: &WorkloadSpec,
+    reports: &[WorkerReport],
+    exit_codes: &[Option<i32>],
+) -> anyhow::Result<()> {
+    let victim = cfg.procs - 1;
+    match cfg.chaos {
+        ChaosAction::None => {
+            let mut fields = Vec::with_capacity(cfg.procs);
+            let mut bytes = 0u64;
+            let mut transfers = 0u64;
+            for (r, rep) in reports.iter().enumerate() {
+                match rep {
+                    WorkerReport::Finished { bytes: b, transfers: t, field } => {
+                        bytes += b;
+                        transfers += t;
+                        fields.push(field.clone());
+                    }
+                    WorkerReport::Stalled(e) => bail!("rank {r} stalled: {e}"),
+                    WorkerReport::Dead(e) => {
+                        bail!("rank {r} died ({e}); exit code {:?}", exit_codes[r])
+                    }
+                }
+            }
+            println!(
+                "all {} ranks finished: {bytes} payload bytes, {transfers} transfers",
+                cfg.procs
+            );
+            if cfg.verify {
+                let reference = run_reference(spec, cfg.proto, cfg.steps);
+                ensure!(
+                    bytes == reference.bytes,
+                    "payload bytes diverge: sockets {bytes} vs in-process {}",
+                    reference.bytes
+                );
+                ensure!(
+                    transfers == reference.transfers,
+                    "transfers diverge: sockets {transfers} vs in-process {}",
+                    reference.transfers
+                );
+                for (r, (got, want)) in fields.iter().zip(&reference.fields).enumerate() {
+                    ensure!(
+                        got.len() == want.len(),
+                        "rank {r}: field length {} vs reference {}",
+                        got.len(),
+                        want.len()
+                    );
+                    let bad =
+                        got.iter().zip(want.iter()).position(|(a, b)| a.to_bits() != b.to_bits());
+                    if let Some(i) = bad {
+                        bail!(
+                            "rank {r}: field diverges from the in-process reference at [{i}]: \
+                             {} vs {}",
+                            got[i],
+                            want[i]
+                        );
+                    }
+                }
+                println!("verified bitwise against the in-process reference");
+            }
+        }
+        ChaosAction::KillAt(e) => {
+            ensure!(
+                exit_codes[victim] == Some(CHAOS_EXIT_CODE)
+                    || matches!(reports[victim], WorkerReport::Dead(_)),
+                "rank {victim} should have died at epoch {e} (exit {:?})",
+                exit_codes[victim]
+            );
+            for (r, rep) in reports.iter().enumerate().filter(|(r, _)| *r != victim) {
+                match rep {
+                    WorkerReport::Stalled(msg) => println!("rank {r} contained the fault: {msg}"),
+                    WorkerReport::Finished { .. } => {
+                        bail!("rank {r} finished despite rank {victim} dying at epoch {e}")
+                    }
+                    WorkerReport::Dead(err) => bail!("rank {r} died instead of stalling: {err}"),
+                }
+            }
+            println!(
+                "chaos kill at epoch {e}: rank {victim} died (exit {:?}), \
+                 all survivors stalled cleanly",
+                exit_codes[victim]
+            );
+        }
+        ChaosAction::SlowAt(e, d) => {
+            for (r, rep) in reports.iter().enumerate() {
+                match rep {
+                    WorkerReport::Stalled(msg) => println!("rank {r} stalled cleanly: {msg}"),
+                    WorkerReport::Finished { .. } if r == victim => {
+                        println!("rank {r} (the slowed rank) finished after its {d:?} nap")
+                    }
+                    WorkerReport::Finished { .. } => {
+                        bail!("rank {r} finished despite the rank-{victim} stall at epoch {e}")
+                    }
+                    WorkerReport::Dead(err) => bail!("rank {r} died instead of stalling: {err}"),
+                }
+            }
+            println!("chaos slow at epoch {e} ({d:?}): every healthy rank stalled in time");
+        }
+    }
+    Ok(())
+}
+
+/// Entry point for a spawned worker process (`repro _worker --rank R
+/// --procs P --connect ADDR`). Never invoked by users directly.
+pub fn worker_main(args: &[String]) -> anyhow::Result<()> {
+    let mut rank = None;
+    let mut procs = None;
+    let mut connect = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--rank" => rank = it.next().and_then(|s| s.parse::<usize>().ok()),
+            "--procs" => procs = it.next().and_then(|s| s.parse::<usize>().ok()),
+            "--connect" => connect = it.next().cloned(),
+            other => bail!("unknown _worker arg '{other}'"),
+        }
+    }
+    let rank = rank.ok_or_else(|| anyhow!("_worker: missing --rank"))?;
+    let procs = procs.ok_or_else(|| anyhow!("_worker: missing --procs"))?;
+    let connect = connect.ok_or_else(|| anyhow!("_worker: missing --connect"))?;
+    ensure!(rank < procs, "_worker: rank {rank} out of range for {procs} procs");
+    worker_run(rank, procs, &connect)
+}
+
+fn worker_run(rank: usize, procs: usize, connect: &str) -> anyhow::Result<()> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let my_addr = listener.local_addr()?;
+    let mut leader = TcpStream::connect(connect)?;
+    leader.set_nodelay(true)?;
+    let mut hello = Value::obj();
+    hello.set("rank", Value::Num(rank as f64));
+    hello.set("addr", Value::Str(my_addr.to_string()));
+    wire::write_msg(&mut leader, hello.compact().as_bytes())?;
+
+    leader.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let spec_bytes = wire::read_msg(&mut leader)?;
+    leader.set_read_timeout(None)?;
+    let v = json::parse(std::str::from_utf8(&spec_bytes)?)?;
+    let spec =
+        WorkloadSpec::from_json(v.get("workload").ok_or_else(|| anyhow!("spec: no workload"))?)?;
+    let proto = v
+        .get("proto")
+        .and_then(Value::as_str)
+        .and_then(Proto::parse)
+        .ok_or_else(|| anyhow!("spec: bad proto"))?;
+    let steps = field_u64(&v, "steps")?;
+    let deadline = Duration::from_millis(field_u64(&v, "deadline_ms")?);
+    let chaos = match v.get("chaos") {
+        Some(c) => ChaosAction::from_json(c)?,
+        None => ChaosAction::None,
+    };
+
+    // The shipped plan must be intact (fingerprint check) *and* agree with
+    // the plan this rank would compile from the spec itself — any drift
+    // between worlds is a protocol error, not a numerics error.
+    let fp_hex = v.get("plan_fp").and_then(Value::as_str).ok_or_else(|| anyhow!("no plan_fp"))?;
+    let shipped_fp = u64::from_str_radix(fp_hex, 16)?;
+    let shipped_plan = ExchangePlan::from_json(v.get("plan").ok_or_else(|| anyhow!("no plan"))?)
+        .map_err(|e| anyhow!("shipped plan rejected: {e}"))?;
+    ensure!(
+        shipped_plan.fingerprint() == shipped_fp,
+        "shipped plan corrupt: fingerprint {:016x} vs header {:016x}",
+        shipped_plan.fingerprint(),
+        shipped_fp
+    );
+    let local_fp = spec.plan().fingerprint();
+    ensure!(
+        local_fp == shipped_fp,
+        "plan drift: locally compiled {local_fp:016x} vs shipped {shipped_fp:016x}"
+    );
+    let addrs: Vec<String> = v
+        .get("addrs")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("no addrs"))?
+        .iter()
+        .filter_map(|a| a.as_str().map(str::to_string))
+        .collect();
+    ensure!(addrs.len() == procs, "addr list has {} entries, want {procs}", addrs.len());
+
+    // Mesh up: connect to every lower rank (sending a HELLO frame so the
+    // acceptor learns who we are), accept from every higher rank.
+    let mut row: MeshStreams = (0..procs).map(|_| None).collect();
+    for (j, addr) in addrs.iter().enumerate().take(rank) {
+        let mut s = TcpStream::connect(addr)?;
+        s.set_nodelay(true)?;
+        wire::write_frame(&mut s, wire::KIND_HELLO, rank as u32, 0, 0, &[])?;
+        row[j] = Some(s);
+    }
+    let mesh_deadline = Instant::now() + Duration::from_secs(60);
+    for _ in rank + 1..procs {
+        let mut s = accept_with_deadline(&listener, mesh_deadline)?;
+        s.set_read_timeout(Some(Duration::from_secs(60)))?;
+        let f = wire::read_frame(&mut s)?;
+        ensure!(f.kind == wire::KIND_HELLO, "expected HELLO during mesh handshake");
+        let peer = f.sender as usize;
+        ensure!(peer > rank && peer < procs && row[peer].is_none(), "bad mesh HELLO from {peer}");
+        // Clear the handshake timeout: the transport's reader threads rely
+        // on blocking reads (a timeout would read as a dead peer).
+        s.set_read_timeout(None)?;
+        row[peer] = Some(s);
+    }
+
+    let transport = SocketTransport::new(rank, &shipped_plan, row, Some(deadline))?;
+    match run_rank(&spec, proto, steps, transport, &chaos) {
+        Ok(Some(rr)) => {
+            let mut res = Value::obj();
+            res.set("status", Value::Str("ok".into()));
+            res.set("bytes", Value::Num(rr.bytes as f64));
+            res.set("transfers", Value::Num(rr.transfers as f64));
+            wire::write_msg(&mut leader, res.compact().as_bytes())?;
+            wire::write_msg(&mut leader, &wire::f64s_to_bytes(&rr.field))?;
+            Ok(())
+        }
+        Ok(None) => {
+            eprintln!("worker {rank}: chaos kill at work, dying");
+            std::process::exit(CHAOS_EXIT_CODE);
+        }
+        Err(stall) => {
+            eprintln!("worker {rank}: {stall}");
+            let mut res = Value::obj();
+            res.set("status", Value::Str("stall".into()));
+            res.set("error", Value::Str(stall.to_string()));
+            wire::write_msg(&mut leader, res.compact().as_bytes())?;
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model validation over the socket transport.
+// ---------------------------------------------------------------------------
+
+/// One measured-vs-predicted row of `repro validate --transport socket`.
+#[derive(Debug, Clone)]
+pub struct TransportRow {
+    pub workload: &'static str,
+    pub proto: Proto,
+    /// Measured seconds per step over the loopback socket world.
+    pub measured: f64,
+    /// Model prediction with the socket-probe τ/bandwidth substituted.
+    pub predicted: f64,
+}
+
+impl TransportRow {
+    pub fn ratio(&self) -> f64 {
+        self.measured / self.predicted
+    }
+}
+
+fn overlap_prediction_for(spec: &WorkloadSpec, tm: &TransportModel) -> OverlapPrediction {
+    let hw = HwParams::abel();
+    // One rank per node: every plan edge crosses the modeled interconnect,
+    // matching what the socket world actually does.
+    let topo = Topology::new(spec.procs(), 1);
+    match *spec {
+        WorkloadSpec::Heat { grid, .. } => predict_heat2d_overlap_on(tm, &grid, &topo, &hw),
+        WorkloadSpec::Stencil { grid, .. } => predict_stencil3d_overlap_on(tm, &grid, &topo, &hw),
+        WorkloadSpec::Spmv(p) => {
+            let (state, analysis) = spmv_setup(&p);
+            let inputs =
+                SpmvInputs { layout: state.layout, topo, hw, r_nz: p.r_nz, analysis: &analysis };
+            predict_v3_overlap_on(tm, &inputs)
+        }
+    }
+}
+
+/// Measure all nine (workload × protocol) per-step times over the loopback
+/// socket world and compare each against the transport-parameterized model.
+/// The `BENCH_transport.json` artifact is written *before* the budget gate,
+/// so a failing run still leaves its evidence behind.
+pub fn validate_transport(
+    procs: usize,
+    steps: u64,
+    quick: bool,
+    budget: f64,
+) -> anyhow::Result<Vec<TransportRow>> {
+    ensure!(procs >= 2, "transport validation needs at least 2 ranks");
+    ensure!(steps >= 1 && budget > 1.0, "need steps >= 1 and budget > 1");
+    let probe = socket_probe(quick).map_err(|e| anyhow!("socket probe failed: {e}"))?;
+    let tm = TransportModel::socket(probe.latency, probe.bandwidth);
+    println!(
+        "socket probe: latency {:.2} us, bandwidth {:.0} MB/s",
+        probe.latency * 1e6,
+        probe.bandwidth / 1e6
+    );
+    let deadline = Some(Duration::from_secs(30));
+    let mut rows = Vec::with_capacity(WORKLOADS.len() * Proto::ALL.len());
+    for name in WORKLOADS {
+        let spec = WorkloadSpec::for_name(name, procs).unwrap();
+        let op = overlap_prediction_for(&spec, &tm);
+        for proto in Proto::ALL {
+            let world = run_socket_world(&spec, proto, steps, deadline, ChaosAction::None)
+                .map_err(|e| anyhow!("{name}/{}: socket world failed: {e}", proto.name()))?;
+            ensure!(
+                world.stalls.is_empty() && world.killed.is_empty(),
+                "{name}/{}: unexpected stalls {:?}",
+                proto.name(),
+                world.stalls
+            );
+            let measured = world.elapsed.as_secs_f64() / steps as f64;
+            let predicted = match proto {
+                Proto::Sync => op.t_step_sync,
+                Proto::Overlap => op.t_step,
+                Proto::Pipeline => PipelinePrediction::from_overlap(&op, steps as usize).t_per_step,
+            };
+            rows.push(TransportRow { workload: name, proto, measured, predicted });
+        }
+    }
+
+    println!(
+        "{:<9} {:<9} {:>13} {:>13} {:>9}",
+        "workload", "proto", "measured/s", "predicted/s", "ratio"
+    );
+    let mut ok = true;
+    for row in &rows {
+        let ratio = row.ratio();
+        let in_budget = ratio.is_finite() && ratio <= budget && ratio >= 1.0 / budget;
+        ok &= in_budget;
+        println!(
+            "{:<9} {:<9} {:>13.3e} {:>13.3e} {:>9.2}{}",
+            row.workload,
+            row.proto.name(),
+            row.measured,
+            row.predicted,
+            ratio,
+            if in_budget { "" } else { "  <-- outside budget" }
+        );
+    }
+    let sum_ln = rows.iter().map(|r| r.ratio().abs().max(1e-300).ln()).sum::<f64>();
+    let geomean = (sum_ln / rows.len() as f64).exp();
+    println!("geomean measured/predicted ratio: {geomean:.2} (budget {budget:.0}x)");
+
+    let mut arr = Vec::with_capacity(rows.len());
+    for row in &rows {
+        let mut o = Value::obj();
+        o.set("workload", Value::Str(row.workload.into()));
+        o.set("proto", Value::Str(row.proto.name().into()));
+        o.set("measured_s", Value::Num(row.measured));
+        o.set("predicted_s", Value::Num(row.predicted));
+        o.set("ratio", Value::Num(row.ratio()));
+        arr.push(o);
+    }
+    let mut root = Value::obj();
+    root.set("bench", Value::Str("transport_validate".into()));
+    root.set("procs", Value::Num(procs as f64));
+    root.set("steps", Value::Num(steps as f64));
+    root.set("socket_latency_s", Value::Num(probe.latency));
+    root.set("socket_bandwidth_Bps", Value::Num(probe.bandwidth));
+    root.set("budget", Value::Num(budget));
+    root.set("geomean_ratio", Value::Num(geomean));
+    root.set("rows", Value::Arr(arr));
+    crate::benchlib::save_bench_json("BENCH_transport.json", "transport validation", &root);
+
+    ensure!(
+        ok && geomean.is_finite(),
+        "transport validation failed: at least one measured/predicted ratio outside {budget:.0}x"
+    );
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_spec_json_roundtrip() {
+        for name in WORKLOADS {
+            let spec = WorkloadSpec::for_name(name, 3).unwrap();
+            let back = WorkloadSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(spec.to_json().compact(), back.to_json().compact(), "{name}");
+            assert_eq!(spec.plan().fingerprint(), back.plan().fingerprint(), "{name}");
+            assert_eq!(back.procs(), 3);
+        }
+        assert!(WorkloadSpec::for_name("nope", 2).is_none());
+    }
+
+    #[test]
+    fn chaos_json_roundtrip() {
+        for c in [
+            ChaosAction::None,
+            ChaosAction::KillAt(4),
+            ChaosAction::SlowAt(2, Duration::from_millis(1500)),
+        ] {
+            assert_eq!(ChaosAction::from_json(&c.to_json()).unwrap(), c);
+        }
+        assert!(ChaosAction::from_json(&Value::obj()).is_ok()); // defaults to None
+    }
+
+    #[test]
+    fn chaos_fire_semantics() {
+        assert!(ChaosAction::None.fire(1));
+        assert!(ChaosAction::KillAt(3).fire(2));
+        assert!(!ChaosAction::KillAt(3).fire(3));
+        assert!(ChaosAction::SlowAt(2, Duration::ZERO).fire(2));
+    }
+
+    #[test]
+    fn proto_names_roundtrip() {
+        for p in Proto::ALL {
+            assert_eq!(Proto::parse(p.name()), Some(p));
+        }
+        assert_eq!(Proto::parse("overlapped"), Some(Proto::Overlap));
+        assert_eq!(Proto::parse("bogus"), None);
+    }
+
+    #[test]
+    fn reference_counters_match_plan() {
+        let spec = WorkloadSpec::for_name("heat", 2).unwrap();
+        let steps = 3u64;
+        let out = run_reference(&spec, Proto::Sync, steps);
+        assert_eq!(out.transfers, steps * spec.plan().num_messages() as u64);
+        assert!(out.bytes > 0);
+        assert_eq!(out.fields.len(), 2);
+        assert!(out.stalls.is_empty() && out.killed.is_empty());
+    }
+}

@@ -1,0 +1,221 @@
+//! Pluggable transports: one compiled [`ExchangePlan`], many memory worlds.
+//!
+//! Every exchange protocol in this repo (sync, split-phase overlapped,
+//! multi-step pipelined) reduces to five operations against a depth-2
+//! staging arena: obtain a send/recv view of an epoch's arena half, publish
+//! an epoch, wait for a peer's epoch, acknowledge a consumed epoch, and
+//! wait for a peer's ack. [`Transport`] names exactly those operations, so
+//! the protocol drivers stop caring *where* the peer's memory lives:
+//!
+//! * [`PoolEndpoint`] — the original in-process backend: `EpochFlags`
+//!   (padded release/acquire counters) plus a shared `ArenaView`, bitwise
+//!   identical to the pre-trait engine hot path.
+//! * [`SocketTransport`] — a genuinely distributed backend: each rank owns
+//!   a private arena copy and length-framed `TcpStream` messages carry the
+//!   pack buffers, with epoch counters in the frame headers standing in for
+//!   the epoch flags (see [`wire`] docs for the mapping).
+//!
+//! [`ProcRuntime`] replays the strided protocols over any `Transport`;
+//! [`launch`] orchestrates whole multi-process worlds (`repro launch`).
+//!
+//! [`ExchangePlan`]: crate::comm::ExchangePlan
+
+mod inproc;
+mod launch;
+mod proc_runtime;
+mod socket;
+mod wire;
+
+pub use inproc::PoolEndpoint;
+pub use launch::{
+    cmd_launch, run_reference, run_socket_world, validate_transport, worker_main, ChaosAction,
+    LaunchConfig, Proto, SpmvParams, TransportRow, WorkloadSpec, WorldOutcome, CHAOS_EXIT_CODE,
+    WORKLOADS,
+};
+pub use proc_runtime::ProcRuntime;
+pub use socket::{loopback_mesh, socket_probe, MeshStreams, SocketProbe, SocketTransport};
+
+use crate::engine::{Phase, StallError};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// The five operations the exchange protocols need from a memory world.
+///
+/// One endpoint instance belongs to one rank (logical UPC thread). Epochs
+/// are the monotone `u64` counters of the in-process protocol: `publish`
+/// and `ack` must be called with nondecreasing epochs, and
+/// `wait_for_epoch`/`wait_for_ack` must be idempotent per `(peer, epoch)` —
+/// waiting again for an epoch already drained returns `Ok` immediately.
+///
+/// Every wait is deadline-aware: a peer that never arrives converts into a
+/// structured [`StallError`] naming the waiter, the absent peer (with its
+/// transport identity), the epoch and the protocol phase — never a hang.
+pub trait Transport {
+    /// This endpoint's rank in `0..threads` of the compiled plan.
+    fn rank(&self) -> usize;
+
+    /// Short backend name (`"inproc"`, `"socket"`).
+    fn kind(&self) -> &'static str;
+
+    /// Human-readable identity of a peer endpoint, for [`StallError`]
+    /// messages (e.g. `inproc:worker-3`, `socket:rank-1@127.0.0.1:4710`).
+    fn peer_identity(&self, peer: usize) -> String;
+
+    /// Publish `epoch`: every outgoing message of the epoch is packed into
+    /// this rank's send slots and may now be observed by its receivers.
+    fn publish(&mut self, epoch: u64) -> Result<(), StallError>;
+
+    /// Wait until `peer`'s published epoch reaches `epoch` — after which
+    /// every value `peer` sent this rank for the epoch is readable through
+    /// [`recv_slot`](Transport::recv_slot).
+    fn wait_for_epoch(&mut self, peer: usize, epoch: u64) -> Result<(), StallError>;
+
+    /// Acknowledge `epoch` as consumed: this rank has unpacked every
+    /// incoming message of the epoch, so its senders may reuse the arena
+    /// parity half (depth-2 pipeline back-pressure).
+    fn ack(&mut self, epoch: u64) -> Result<(), StallError>;
+
+    /// Wait until `peer`'s consumed-epoch ack reaches `epoch`.
+    fn wait_for_ack(&mut self, peer: usize, epoch: u64) -> Result<(), StallError>;
+
+    /// Mutable staging view of `range` (global arena coordinates, as handed
+    /// out by the plan's `msg.range()`) in `epoch`'s parity half — the pack
+    /// target of one outgoing message.
+    fn send_slot(&mut self, epoch: u64, range: Range<usize>) -> &mut [f64];
+
+    /// Shared staging view of `range` in `epoch`'s parity half — the unpack
+    /// source of one incoming message. Only valid after
+    /// [`wait_for_epoch`](Transport::wait_for_epoch) on the sending peer.
+    fn recv_slot(&mut self, epoch: u64, range: Range<usize>) -> &[f64];
+
+    /// Payload bytes this endpoint has put on the wire (0 where the backend
+    /// does not meter, e.g. in-process shared memory).
+    fn sent_payload_bytes(&self) -> u64 {
+        0
+    }
+
+    /// Data transfers (messages) this endpoint has put on the wire (0 where
+    /// the backend does not meter).
+    fn sent_transfers(&self) -> u64 {
+        0
+    }
+}
+
+/// Unwrap a transport result inside pool-worker code: a [`StallError`]
+/// re-enters the engine's poison-and-unwind path via `panic_any`, exactly
+/// as the pre-trait wait primitives raised it, so dispatchers keep
+/// recovering it with [`StallError::from_panic`].
+pub fn must<T>(r: Result<T, StallError>) -> T {
+    match r {
+        Ok(v) => v,
+        Err(e) => std::panic::panic_any(e),
+    }
+}
+
+/// Pool-free deadline-aware epoch-flag wait: the spin → yield → timed-park
+/// ladder of `WorkerCtx::wait_for_epoch`, usable outside a `WorkerPool`
+/// dispatch (e.g. the scoped-thread MPI baseline). Returns a structured
+/// [`StallError`] instead of panicking, and does not consult any poison
+/// flag — the caller owns failure propagation.
+pub fn wait_epoch_flag(
+    flag: &AtomicU64,
+    target: u64,
+    deadline: Option<Duration>,
+    waiter: usize,
+    peer: usize,
+    phase: Phase,
+    identity: &str,
+) -> Result<(), StallError> {
+    for _ in 0..128 {
+        if flag.load(Ordering::Acquire) >= target {
+            return Ok(());
+        }
+        std::hint::spin_loop();
+    }
+    let start = Instant::now();
+    let mut rounds = 0u32;
+    loop {
+        if flag.load(Ordering::Acquire) >= target {
+            return Ok(());
+        }
+        if let Some(d) = deadline {
+            let waited = start.elapsed();
+            if waited >= d {
+                return Err(StallError {
+                    waiter,
+                    peer: Some(peer),
+                    epoch: target,
+                    phase,
+                    waited,
+                    transport: Some(identity.to_string()),
+                });
+            }
+        }
+        rounds += 1;
+        if rounds < 4096 {
+            std::thread::yield_now();
+        } else {
+            std::thread::park_timeout(Duration::from_micros(100));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn wait_epoch_flag_returns_on_published_flag() {
+        let flag = AtomicU64::new(3);
+        wait_epoch_flag(&flag, 3, None, 0, 1, Phase::Transfer, "test:peer-1").unwrap();
+    }
+
+    #[test]
+    fn wait_epoch_flag_times_out_with_identity() {
+        let flag = AtomicU64::new(0);
+        let err = wait_epoch_flag(
+            &flag,
+            5,
+            Some(Duration::from_millis(20)),
+            2,
+            7,
+            Phase::AckGate,
+            "socket:rank-7@10.0.0.1:9",
+        )
+        .unwrap_err();
+        assert_eq!(err.waiter, 2);
+        assert_eq!(err.peer, Some(7));
+        assert_eq!(err.epoch, 5);
+        assert_eq!(err.phase, Phase::AckGate);
+        let msg = err.to_string();
+        assert!(msg.contains("socket:rank-7@10.0.0.1:9"), "{msg}");
+    }
+
+    #[test]
+    fn wait_epoch_flag_sees_concurrent_publish() {
+        let flag = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(5));
+                flag.store(9, Ordering::Release);
+            });
+            wait_epoch_flag(
+                &flag,
+                9,
+                Some(Duration::from_secs(5)),
+                0,
+                1,
+                Phase::Transfer,
+                "inproc:worker-1",
+            )
+            .unwrap();
+        });
+    }
+
+    #[test]
+    fn must_passes_ok_through() {
+        assert_eq!(must(Ok::<u32, StallError>(17)), 17);
+    }
+}

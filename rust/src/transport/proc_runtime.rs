@@ -1,0 +1,311 @@
+//! Transport-generic replay of the strided exchange protocols.
+//!
+//! [`ProcRuntime`] is the per-rank analogue of the engine's in-process
+//! `ExchangeRuntime`: it drives the same sync / overlapped / pipelined
+//! epoch schedules, but through the [`Transport`] trait, so one body runs
+//! unchanged over shared memory or sockets. Differences from the pool
+//! engine, both deliberate:
+//!
+//! * no barriers — the protocols are data-synchronized (epoch waits + acks
+//!   order every cross-rank access), and a barrier has no socket analogue;
+//!   results are bitwise identical either way.
+//! * the runtime never swaps the caller's buffers in sync/overlapped mode
+//!   (the caller owns that), while [`run_pipelined`](ProcRuntime::run_pipelined)
+//!   swaps per epoch so the final iterate lands back in `field` — matching
+//!   the engine's pipelined contract.
+
+use super::Transport;
+use crate::comm::ExchangePlan;
+use crate::engine::StallError;
+
+/// One rank's protocol driver: a compiled strided plan plus a transport
+/// endpoint and the rank's monotone epoch counter.
+pub struct ProcRuntime<T: Transport> {
+    plan: ExchangePlan,
+    transport: T,
+    epoch: u64,
+    /// Distinct peers this rank receives halo data from.
+    senders: Vec<usize>,
+    /// Distinct peers this rank sends halo data to (ack-gate targets).
+    receivers: Vec<usize>,
+}
+
+impl<T: Transport> ProcRuntime<T> {
+    /// Bind `transport` (already wired for `transport.rank()`) to `plan`.
+    /// Only strided plans drive this runtime — the gather-form SpMV path
+    /// has its own rank driver in [`super::launch`].
+    pub fn new(plan: ExchangePlan, transport: T) -> ProcRuntime<T> {
+        let rank = transport.rank();
+        let strided = plan.as_strided().expect("ProcRuntime drives strided plans");
+        let mut senders: Vec<usize> = strided.recv_msgs(rank).map(|m| m.peer as usize).collect();
+        senders.sort_unstable();
+        senders.dedup();
+        let mut receivers: Vec<usize> = strided.send_msgs(rank).map(|m| m.peer as usize).collect();
+        receivers.sort_unstable();
+        receivers.dedup();
+        ProcRuntime { plan, transport, epoch: 0, senders, receivers }
+    }
+
+    /// The transport endpoint (e.g. to read wire counters before drop).
+    pub fn transport(&self) -> &T {
+        &self.transport
+    }
+
+    /// Epochs completed so far.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// One synchronous step: pack → publish → wait all senders → unpack →
+    /// ack → `update(field, out)`. The caller swaps `field`/`out` after.
+    pub fn step_strided(
+        &mut self,
+        field: &mut [f64],
+        out: &mut [f64],
+        update: impl FnOnce(&[f64], &mut [f64]),
+    ) -> Result<(), StallError> {
+        let ProcRuntime { plan, transport, epoch, senders, .. } = self;
+        let rank = transport.rank();
+        let strided = plan.as_strided().expect("strided plan");
+        *epoch += 1;
+        let e = *epoch;
+        for m in strided.send_msgs(rank) {
+            m.pack(field, transport.send_slot(e, m.range()));
+        }
+        transport.publish(e)?;
+        for &peer in senders.iter() {
+            transport.wait_for_epoch(peer, e)?;
+        }
+        for m in strided.recv_msgs(rank) {
+            m.unpack(transport.recv_slot(e, m.range()), field);
+        }
+        transport.ack(e)?;
+        update(field, out);
+        Ok(())
+    }
+
+    /// One split-phase step: pack → publish → `interior(field, out)` while
+    /// the halo is in flight → wait/unpack → ack → `boundary(field, out)`.
+    pub fn step_overlapped(
+        &mut self,
+        field: &mut [f64],
+        out: &mut [f64],
+        interior: impl FnOnce(&[f64], &mut [f64]),
+        boundary: impl FnOnce(&[f64], &mut [f64]),
+    ) -> Result<(), StallError> {
+        let ProcRuntime { plan, transport, epoch, senders, .. } = self;
+        let rank = transport.rank();
+        let strided = plan.as_strided().expect("strided plan");
+        *epoch += 1;
+        let e = *epoch;
+        for m in strided.send_msgs(rank) {
+            m.pack(field, transport.send_slot(e, m.range()));
+        }
+        transport.publish(e)?;
+        interior(field, out);
+        for &peer in senders.iter() {
+            transport.wait_for_epoch(peer, e)?;
+        }
+        for m in strided.recv_msgs(rank) {
+            m.unpack(transport.recv_slot(e, m.range()), field);
+        }
+        transport.ack(e)?;
+        boundary(field, out);
+        Ok(())
+    }
+
+    /// `steps` pipelined epochs with the depth-2 consumed-epoch ack gate
+    /// (epoch `e` may not publish before every receiver acked `e − 2`).
+    /// Swaps `field`/`out` each epoch; the final iterate ends in `field`.
+    /// `on_epoch(e)` fires before each epoch's gate — the chaos hook.
+    pub fn run_pipelined(
+        &mut self,
+        steps: u64,
+        field: &mut Vec<f64>,
+        out: &mut Vec<f64>,
+        mut interior: impl FnMut(&[f64], &mut [f64]),
+        mut boundary: impl FnMut(&[f64], &mut [f64]),
+        mut on_epoch: impl FnMut(u64),
+    ) -> Result<(), StallError> {
+        let base = self.epoch;
+        self.epoch += steps;
+        for k in 1..=steps {
+            let e = base + k;
+            on_epoch(e);
+            let ProcRuntime { plan, transport, senders, receivers, .. } = &mut *self;
+            let rank = transport.rank();
+            let strided = plan.as_strided().expect("strided plan");
+            if k > 2 {
+                for &peer in receivers.iter() {
+                    transport.wait_for_ack(peer, e - 2)?;
+                }
+            }
+            for m in strided.send_msgs(rank) {
+                m.pack(field, transport.send_slot(e, m.range()));
+            }
+            transport.publish(e)?;
+            interior(field, out);
+            for &peer in senders.iter() {
+                transport.wait_for_epoch(peer, e)?;
+            }
+            for m in strided.recv_msgs(rank) {
+                m.unpack(transport.recv_slot(e, m.range()), field);
+            }
+            transport.ack(e)?;
+            boundary(field, out);
+            std::mem::swap(field, out);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{StridedBlock, StridedPlan};
+    use crate::transport::{loopback_mesh, SocketTransport};
+    use std::time::Duration;
+
+    /// 1-D two-rank halo: each rank owns slots 1..=2 of a 4-wide field with
+    /// ghost slots 0 and 3; ranks exchange their edge cells.
+    fn line_plan() -> ExchangePlan {
+        StridedPlan::from_msgs(
+            2,
+            &[
+                // rank 0's right edge (slot 2) → rank 1's left ghost (slot 0)
+                (0, 1, StridedBlock::row(2, 1), StridedBlock::row(0, 1)),
+                // rank 1's left edge (slot 1) → rank 0's right ghost (slot 3)
+                (1, 0, StridedBlock::row(1, 1), StridedBlock::row(3, 1)),
+            ],
+        )
+        .into()
+    }
+
+    fn run_world<F>(steps: u64, drive: F) -> Vec<Vec<f64>>
+    where
+        F: Fn(usize, &mut ProcRuntime<SocketTransport>, &mut Vec<f64>, &mut Vec<f64>, u64) + Sync,
+    {
+        let plan = line_plan();
+        let mesh = loopback_mesh(2).unwrap();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = mesh
+                .into_iter()
+                .enumerate()
+                .map(|(rank, row)| {
+                    let plan = plan.clone();
+                    let drive = &drive;
+                    s.spawn(move || {
+                        let deadline = Some(Duration::from_secs(10));
+                        let t = SocketTransport::new(rank, &plan, row, deadline).unwrap();
+                        let mut rt = ProcRuntime::new(plan, t);
+                        // Interior cells start at rank-distinct values.
+                        let mut field = vec![0.0; 4];
+                        field[1] = (rank * 10 + 1) as f64;
+                        field[2] = (rank * 10 + 2) as f64;
+                        let mut out = vec![0.0; 4];
+                        drive(rank, &mut rt, &mut field, &mut out, steps);
+                        field
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    /// 3-point average of the interior, ghosts held.
+    fn relax(src: &[f64], dst: &mut [f64]) {
+        dst[0] = src[0];
+        dst[3] = src[3];
+        for i in 1..=2 {
+            dst[i] = (src[i - 1] + src[i] + src[i + 1]) / 3.0;
+        }
+    }
+
+    #[test]
+    fn sync_overlapped_and_pipelined_agree() {
+        let steps = 4u64;
+        let sync = run_world(steps, |_r, rt, field, out, steps| {
+            for _ in 0..steps {
+                rt.step_strided(field, out, relax).unwrap();
+                std::mem::swap(field, out);
+            }
+        });
+        let over = run_world(steps, |_r, rt, field, out, steps| {
+            for _ in 0..steps {
+                rt.step_overlapped(
+                    field,
+                    out,
+                    |src, dst| {
+                        // "Interior" = nothing halo-dependent; full update
+                        // waits for the boundary phase.
+                        dst[0] = src[0];
+                    },
+                    |src, dst| {
+                        dst[3] = src[3];
+                        for i in 1..=2 {
+                            dst[i] = (src[i - 1] + src[i] + src[i + 1]) / 3.0;
+                        }
+                    },
+                )
+                .unwrap();
+                std::mem::swap(field, out);
+            }
+        });
+        let piped = run_world(steps, |_r, rt, field, out, steps| {
+            rt.run_pipelined(
+                steps,
+                field,
+                out,
+                |src, dst| dst[0] = src[0],
+                |src, dst| {
+                    dst[3] = src[3];
+                    for i in 1..=2 {
+                        dst[i] = (src[i - 1] + src[i] + src[i + 1]) / 3.0;
+                    }
+                },
+                |_e| {},
+            )
+            .unwrap();
+        });
+        assert_eq!(sync, over, "overlapped diverged from sync");
+        assert_eq!(sync, piped, "pipelined diverged from sync");
+        // Halo actually moved: rank 0's right ghost carries rank 1 data.
+        assert_ne!(sync[0][3], 0.0);
+    }
+
+    #[test]
+    fn pipelined_epoch_hook_sees_every_epoch() {
+        let plan = line_plan();
+        let mesh = loopback_mesh(2).unwrap();
+        let epochs: Vec<Vec<u64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = mesh
+                .into_iter()
+                .enumerate()
+                .map(|(rank, row)| {
+                    let plan = plan.clone();
+                    s.spawn(move || {
+                        let deadline = Some(Duration::from_secs(10));
+                        let t = SocketTransport::new(rank, &plan, row, deadline).unwrap();
+                        let mut rt = ProcRuntime::new(plan, t);
+                        let mut field = vec![1.0; 4];
+                        let mut out = vec![0.0; 4];
+                        let mut seen = Vec::new();
+                        rt.run_pipelined(
+                            3,
+                            &mut field,
+                            &mut out,
+                            |_s, _d| {},
+                            |src, dst| dst.copy_from_slice(src),
+                            |e| seen.push(e),
+                        )
+                        .unwrap();
+                        assert_eq!(rt.epoch(), 3);
+                        seen
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(epochs, vec![vec![1, 2, 3], vec![1, 2, 3]]);
+    }
+}

@@ -1,0 +1,577 @@
+//! The distributed backend: one private arena per rank, epochs on the wire.
+//!
+//! [`SocketTransport`] runs the exact protocols of the in-process engine
+//! across `TcpStream`s. Each rank allocates the **full** depth-2 staging
+//! arena (`2 × total_values` doubles) privately and addresses it with the
+//! same global plan coordinates, so pack/unpack code is identical on both
+//! backends; the difference is purely how a packed range becomes visible to
+//! its receiver:
+//!
+//! * `publish(e)` writes one [`KIND_DATA`](super::wire::KIND_DATA) frame
+//!   per outgoing plan message (header carries `e` + the arena start slot).
+//! * A per-peer reader thread parks frames in a mailbox; `wait_for_epoch`
+//!   drains epoch-`e` frames into the local arena and completes once every
+//!   expected frame from that sender arrived. Senders running ahead are
+//!   harmless: their frames simply wait in the mailbox (the receiver's
+//!   arena is private, so nothing is overwritten early).
+//! * `ack(e)` sends empty `KIND_ACK` frames to this rank's senders;
+//!   `wait_for_ack` waits on the max ack epoch received from a receiver.
+//!
+//! Reader threads never touch the arena — only the protocol thread does —
+//! so the backend needs no atomics beyond the mailbox mutex. A dead peer
+//! (connection reset / EOF) or an expired deadline converts every
+//! subsequent wait into a structured [`StallError`] naming the peer's
+//! socket identity.
+
+use super::wire::{self, KIND_ACK, KIND_DATA};
+use super::Transport;
+use crate::comm::ExchangePlan;
+use crate::engine::{Phase, StallError};
+use std::io::Write;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::ops::Range;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One rank's row of a fully-connected mesh: `streams[p]` is the connection
+/// to peer `p` (`None` at the rank's own slot and for non-peers).
+pub type MeshStreams = Vec<Option<TcpStream>>;
+
+/// One outgoing plan message: peer rank plus the arena range it carries.
+#[derive(Debug, Clone, Copy)]
+struct SendMsg {
+    peer: usize,
+    start: usize,
+    len: usize,
+}
+
+/// Frames parked by the reader threads until the protocol thread drains
+/// them: per-peer `(epoch, start, payload)` data frames, max ack epoch per
+/// peer, and per-peer death notices.
+#[derive(Debug)]
+struct MailState {
+    frames: Vec<Vec<(u64, u32, Vec<f64>)>>,
+    acked: Vec<u64>,
+    dead: Vec<Option<String>>,
+    shutdown: bool,
+}
+
+#[derive(Debug)]
+struct Mailbox {
+    state: Mutex<MailState>,
+    cv: Condvar,
+}
+
+/// A [`Transport`] endpoint over a mesh of byte streams.
+pub struct SocketTransport {
+    rank: usize,
+    total: usize,
+    arena: Vec<f64>,
+    /// Write side per peer; reader threads own `try_clone`d read sides.
+    streams: Vec<Option<TcpStream>>,
+    peer_ids: Vec<String>,
+    sends: Vec<SendMsg>,
+    /// Distinct peers this rank receives data from (= ack targets).
+    senders: Vec<usize>,
+    /// Data frames expected per sender per epoch.
+    expected: Vec<usize>,
+    /// Highest epoch fully drained per peer (wait idempotence).
+    drained: Vec<u64>,
+    mailbox: Arc<Mailbox>,
+    readers: Vec<JoinHandle<()>>,
+    deadline: Option<Duration>,
+    sent_bytes: u64,
+    sent_frames: u64,
+}
+
+impl SocketTransport {
+    /// Wire rank `rank`'s endpoint onto `streams` (its row of a mesh, e.g.
+    /// from [`loopback_mesh`]) for the given compiled plan. Spawns one
+    /// reader thread per connected peer. `deadline` bounds every wait.
+    pub fn new(
+        rank: usize,
+        plan: &ExchangePlan,
+        streams: MeshStreams,
+        deadline: Option<Duration>,
+    ) -> std::io::Result<SocketTransport> {
+        let procs = plan.threads();
+        assert_eq!(streams.len(), procs, "mesh row arity");
+        let total = plan.total_values();
+        let mut sends = Vec::new();
+        let mut expected = vec![0usize; procs];
+        match plan {
+            ExchangePlan::Gather(p) => {
+                for m in p.send_msgs(rank) {
+                    let (peer, start) = (m.peer as usize, m.range().start);
+                    sends.push(SendMsg { peer, start, len: m.len() });
+                }
+                for m in p.recv_msgs(rank) {
+                    expected[m.peer as usize] += 1;
+                }
+            }
+            ExchangePlan::Strided(p) => {
+                for m in p.send_msgs(rank) {
+                    let (peer, start) = (m.peer as usize, m.range().start);
+                    sends.push(SendMsg { peer, start, len: m.len() });
+                }
+                for m in p.recv_msgs(rank) {
+                    expected[m.peer as usize] += 1;
+                }
+            }
+        }
+        let senders: Vec<usize> = (0..procs).filter(|&p| expected[p] > 0).collect();
+        let peer_ids: Vec<String> = (0..procs)
+            .map(|p| match &streams[p] {
+                Some(s) => match s.peer_addr() {
+                    Ok(a) => format!("socket:rank-{p}@{a}"),
+                    Err(_) => format!("socket:rank-{p}"),
+                },
+                None => format!("socket:rank-{p}"),
+            })
+            .collect();
+        let mailbox = Arc::new(Mailbox {
+            state: Mutex::new(MailState {
+                frames: vec![Vec::new(); procs],
+                acked: vec![0; procs],
+                dead: vec![None; procs],
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let mut readers = Vec::new();
+        for (peer, slot) in streams.iter().enumerate() {
+            let Some(stream) = slot else { continue };
+            stream.set_nodelay(true)?;
+            let mut read_side = stream.try_clone()?;
+            let mb = Arc::clone(&mailbox);
+            let identity = peer_ids[peer].clone();
+            readers.push(std::thread::spawn(move || loop {
+                match wire::read_frame(&mut read_side) {
+                    Ok(f) => {
+                        let mut st = mb.state.lock().unwrap();
+                        match f.kind {
+                            KIND_DATA => st.frames[peer].push((f.epoch, f.start, f.payload)),
+                            KIND_ACK => st.acked[peer] = st.acked[peer].max(f.epoch),
+                            _ => {} // late HELLO / unknown: ignore
+                        }
+                        drop(st);
+                        mb.cv.notify_all();
+                    }
+                    Err(e) => {
+                        let mut st = mb.state.lock().unwrap();
+                        if !st.shutdown {
+                            st.dead[peer] = Some(format!("{identity}: {e}"));
+                        }
+                        drop(st);
+                        mb.cv.notify_all();
+                        return;
+                    }
+                }
+            }));
+        }
+        Ok(SocketTransport {
+            rank,
+            total,
+            arena: vec![0.0; 2 * total],
+            streams,
+            peer_ids,
+            sends,
+            senders,
+            expected,
+            drained: vec![0; procs],
+            mailbox,
+            readers,
+            deadline,
+            sent_bytes: 0,
+            sent_frames: 0,
+        })
+    }
+
+    #[inline]
+    fn half(&self, epoch: u64) -> usize {
+        (epoch % 2) as usize * self.total
+    }
+
+    fn stall(&self, peer: Option<usize>, epoch: u64, phase: Phase, waited: Duration) -> StallError {
+        StallError {
+            waiter: self.rank,
+            peer,
+            epoch,
+            phase,
+            waited,
+            transport: peer.map(|p| self.peer_ids[p].clone()),
+        }
+    }
+
+    /// Send `frame_kind` with `epoch` to `peer`; a broken pipe converts to
+    /// a [`StallError`] naming the peer (the socket analogue of a peer that
+    /// died before its flag arrived).
+    fn send_control(
+        &mut self,
+        peer: usize,
+        kind: u8,
+        epoch: u64,
+        phase: Phase,
+    ) -> Result<(), StallError> {
+        let rank = self.rank as u32;
+        let stream = self.streams[peer].as_mut().expect("control frame to a non-peer");
+        wire::write_frame(stream, kind, rank, epoch, 0, &[])
+            .map_err(|_| self.mk_stall_for(peer, epoch, phase))
+    }
+
+    fn mk_stall_for(&self, peer: usize, epoch: u64, phase: Phase) -> StallError {
+        StallError {
+            waiter: self.rank,
+            peer: Some(peer),
+            epoch,
+            phase,
+            waited: Duration::ZERO,
+            transport: Some(self.peer_ids[peer].clone()),
+        }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn kind(&self) -> &'static str {
+        "socket"
+    }
+
+    fn peer_identity(&self, peer: usize) -> String {
+        self.peer_ids[peer].clone()
+    }
+
+    fn publish(&mut self, epoch: u64) -> Result<(), StallError> {
+        let h = self.half(epoch);
+        let rank = self.rank as u32;
+        // Index loop: iterating `&self.sends` would hold a borrow across the
+        // `self.streams` writes below.
+        #[allow(clippy::needless_range_loop)]
+        for i in 0..self.sends.len() {
+            let m = self.sends[i];
+            let payload: Vec<f64> = self.arena[h + m.start..h + m.start + m.len].to_vec();
+            let stream = self.streams[m.peer].as_mut().expect("send message to a non-peer");
+            let sent = wire::write_frame(stream, KIND_DATA, rank, epoch, m.start as u32, &payload);
+            if sent.is_err() {
+                return Err(self.mk_stall_for(m.peer, epoch, Phase::Pack));
+            }
+            self.sent_bytes += (m.len * 8) as u64;
+            self.sent_frames += 1;
+        }
+        Ok(())
+    }
+
+    fn wait_for_epoch(&mut self, peer: usize, epoch: u64) -> Result<(), StallError> {
+        if self.drained[peer] >= epoch {
+            return Ok(());
+        }
+        let need = self.expected[peer];
+        let h = self.half(epoch);
+        let start = Instant::now();
+        let mut got = 0usize;
+        let mb = Arc::clone(&self.mailbox);
+        let mut st = mb.state.lock().unwrap();
+        loop {
+            // Drain this epoch's frames into the local arena.
+            let buf = &mut st.frames[peer];
+            let mut i = 0;
+            while i < buf.len() {
+                if buf[i].0 == epoch {
+                    let (_, fstart, payload) = buf.swap_remove(i);
+                    let at = h + fstart as usize;
+                    self.arena[at..at + payload.len()].copy_from_slice(&payload);
+                    got += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            if got >= need {
+                self.drained[peer] = self.drained[peer].max(epoch);
+                return Ok(());
+            }
+            if st.dead[peer].is_some() {
+                return Err(self.stall(Some(peer), epoch, Phase::Transfer, start.elapsed()));
+            }
+            let slice = match self.deadline {
+                Some(d) => {
+                    let waited = start.elapsed();
+                    if waited >= d {
+                        return Err(self.stall(Some(peer), epoch, Phase::Transfer, waited));
+                    }
+                    (d - waited).min(Duration::from_millis(50))
+                }
+                None => Duration::from_millis(50),
+            };
+            st = mb.cv.wait_timeout(st, slice).unwrap().0;
+        }
+    }
+
+    fn ack(&mut self, epoch: u64) -> Result<(), StallError> {
+        // Index loop: `send_control` needs `&mut self` while `self.senders`
+        // would otherwise stay borrowed.
+        #[allow(clippy::needless_range_loop)]
+        for i in 0..self.senders.len() {
+            let peer = self.senders[i];
+            self.send_control(peer, KIND_ACK, epoch, Phase::Unpack)?;
+        }
+        Ok(())
+    }
+
+    fn wait_for_ack(&mut self, peer: usize, epoch: u64) -> Result<(), StallError> {
+        let start = Instant::now();
+        let mb = Arc::clone(&self.mailbox);
+        let mut st = mb.state.lock().unwrap();
+        loop {
+            if st.acked[peer] >= epoch {
+                return Ok(());
+            }
+            if st.dead[peer].is_some() {
+                return Err(self.stall(Some(peer), epoch, Phase::AckGate, start.elapsed()));
+            }
+            let slice = match self.deadline {
+                Some(d) => {
+                    let waited = start.elapsed();
+                    if waited >= d {
+                        return Err(self.stall(Some(peer), epoch, Phase::AckGate, waited));
+                    }
+                    (d - waited).min(Duration::from_millis(50))
+                }
+                None => Duration::from_millis(50),
+            };
+            st = mb.cv.wait_timeout(st, slice).unwrap().0;
+        }
+    }
+
+    fn send_slot(&mut self, epoch: u64, range: Range<usize>) -> &mut [f64] {
+        let h = self.half(epoch);
+        &mut self.arena[h + range.start..h + range.end]
+    }
+
+    fn recv_slot(&mut self, epoch: u64, range: Range<usize>) -> &[f64] {
+        let h = self.half(epoch);
+        &self.arena[h + range.start..h + range.end]
+    }
+
+    fn sent_payload_bytes(&self) -> u64 {
+        self.sent_bytes
+    }
+
+    fn sent_transfers(&self) -> u64 {
+        self.sent_frames
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        self.mailbox.state.lock().unwrap().shutdown = true;
+        self.mailbox.cv.notify_all();
+        // Shutting down the write handles also unblocks the reader clones
+        // (they share the underlying socket).
+        for s in self.streams.iter().flatten() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Build a fully-connected loopback TCP mesh for `procs` in-process ranks:
+/// `mesh[i][j]` is rank `i`'s stream to rank `j`. Used by the in-process
+/// socket world (tests, `repro validate --transport socket`); the
+/// multi-process path builds its mesh across processes in
+/// [`super::launch`].
+pub fn loopback_mesh(procs: usize) -> std::io::Result<Vec<MeshStreams>> {
+    let mut mesh: Vec<MeshStreams> =
+        (0..procs).map(|_| (0..procs).map(|_| None).collect()).collect();
+    for i in 0..procs {
+        for j in i + 1..procs {
+            let listener = TcpListener::bind("127.0.0.1:0")?;
+            let addr = listener.local_addr()?;
+            let a = TcpStream::connect(addr)?;
+            let (b, _) = listener.accept()?;
+            a.set_nodelay(true)?;
+            b.set_nodelay(true)?;
+            mesh[i][j] = Some(a);
+            mesh[j][i] = Some(b);
+        }
+    }
+    Ok(mesh)
+}
+
+/// Measured loopback-socket characteristics for the transport-aware model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SocketProbe {
+    /// One-way small-message latency in seconds (median RTT / 2) — the
+    /// socket analogue of the calibration's τ.
+    pub latency: f64,
+    /// Streaming bandwidth in bytes/s over 64 KiB writes — the analogue of
+    /// the inter-node bandwidth parameter.
+    pub bandwidth: f64,
+}
+
+/// Ping-pong + streaming probe over a loopback TCP pair, mirroring the τ /
+/// STREAM microbenchmarks for the socket transport. `quick` trades
+/// precision for CI speed (200 pings / 4 MiB vs 2000 pings / 32 MiB).
+pub fn socket_probe(quick: bool) -> std::io::Result<SocketProbe> {
+    let (pings, volume) = if quick { (200usize, 4usize << 20) } else { (2000, 32 << 20) };
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let server = std::thread::spawn(move || -> std::io::Result<()> {
+        let (mut s, _) = listener.accept()?;
+        s.set_nodelay(true)?;
+        let mut b = [0u8; 1];
+        for _ in 0..pings {
+            std::io::Read::read_exact(&mut s, &mut b)?;
+            s.write_all(&b)?;
+        }
+        let mut buf = vec![0u8; 64 << 10];
+        let mut left = volume;
+        while left > 0 {
+            let n = std::io::Read::read(&mut s, &mut buf)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "probe stream closed early",
+                ));
+            }
+            left = left.saturating_sub(n);
+        }
+        s.write_all(&[1])?;
+        Ok(())
+    });
+    let mut c = TcpStream::connect(addr)?;
+    c.set_nodelay(true)?;
+    let mut b = [7u8; 1];
+    let mut rtts = Vec::with_capacity(pings);
+    for _ in 0..pings {
+        let t0 = Instant::now();
+        c.write_all(&b)?;
+        std::io::Read::read_exact(&mut c, &mut b)?;
+        rtts.push(t0.elapsed().as_secs_f64());
+    }
+    rtts.sort_by(f64::total_cmp);
+    let latency = rtts[pings / 2] / 2.0;
+    let chunk = vec![0u8; 64 << 10];
+    let t0 = Instant::now();
+    let mut left = volume;
+    while left > 0 {
+        let n = left.min(chunk.len());
+        c.write_all(&chunk[..n])?;
+        left -= n;
+    }
+    std::io::Read::read_exact(&mut c, &mut b)?;
+    let bandwidth = volume as f64 / t0.elapsed().as_secs_f64();
+    server.join().map_err(|_| std::io::Error::other("probe echo thread panicked"))??;
+    Ok(SocketProbe { latency, bandwidth })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{StridedBlock, StridedPlan};
+
+    fn two_rank_plan() -> ExchangePlan {
+        // Ranks 0 and 1 swap 3-value rows.
+        StridedPlan::from_msgs(
+            2,
+            &[
+                (0, 1, StridedBlock::row(0, 3), StridedBlock::row(3, 3)),
+                (1, 0, StridedBlock::row(0, 3), StridedBlock::row(3, 3)),
+            ],
+        )
+        .into()
+    }
+
+    #[test]
+    fn socket_pair_exchanges_epochs_and_acks() {
+        let plan = two_rank_plan();
+        let mesh = loopback_mesh(2).unwrap();
+        let deadline = Some(Duration::from_secs(10));
+        let results: Vec<Vec<f64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = mesh
+                .into_iter()
+                .enumerate()
+                .map(|(rank, row)| {
+                    let plan = &plan;
+                    s.spawn(move || {
+                        let mut t = SocketTransport::new(rank, plan, row, deadline).unwrap();
+                        let mut seen = Vec::new();
+                        for epoch in 1..=4u64 {
+                            let base = (rank * 100) as f64 + epoch as f64;
+                            let plan_s = plan.as_strided().unwrap();
+                            for m in plan_s.send_msgs(rank) {
+                                let slot = t.send_slot(epoch, m.range());
+                                for (k, v) in slot.iter_mut().enumerate() {
+                                    *v = base + k as f64 * 0.25;
+                                }
+                            }
+                            t.publish(epoch).unwrap();
+                            let peer = 1 - rank;
+                            t.wait_for_epoch(peer, epoch).unwrap();
+                            // Idempotent per (peer, epoch).
+                            t.wait_for_epoch(peer, epoch).unwrap();
+                            for m in plan_s.recv_msgs(rank) {
+                                seen.extend_from_slice(t.recv_slot(epoch, m.range()));
+                            }
+                            t.ack(epoch).unwrap();
+                            t.wait_for_ack(peer, epoch).unwrap();
+                        }
+                        assert_eq!(t.sent_transfers(), 4);
+                        assert_eq!(t.sent_payload_bytes(), 4 * 3 * 8);
+                        seen
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Rank 0 saw rank 1's packs and vice versa, all four epochs in order.
+        for (rank, seen) in results.iter().enumerate() {
+            let peer = (1 - rank) as f64;
+            let want: Vec<f64> = (1..=4u64)
+                .flat_map(|e| (0..3).map(move |k| peer * 100.0 + e as f64 + k as f64 * 0.25))
+                .collect();
+            assert_eq!(seen, &want, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn dead_peer_converts_to_stall_error() {
+        let plan = two_rank_plan();
+        let mut mesh = loopback_mesh(2).unwrap();
+        let row1 = std::mem::take(&mut mesh[1]);
+        let row0 = std::mem::take(&mut mesh[0]);
+        drop(row1); // rank 1 "dies" before publishing anything
+        let mut t = SocketTransport::new(0, &plan, row0, Some(Duration::from_secs(5))).unwrap();
+        let err = t.wait_for_epoch(1, 1).unwrap_err();
+        assert_eq!(err.waiter, 0);
+        assert_eq!(err.peer, Some(1));
+        assert!(err.transport.as_deref().unwrap_or("").starts_with("socket:rank-1"), "{err}");
+    }
+
+    #[test]
+    fn slow_peer_hits_deadline_not_hang() {
+        let plan = two_rank_plan();
+        let mesh = loopback_mesh(2).unwrap();
+        let mut rows = mesh.into_iter();
+        let row0 = rows.next().unwrap();
+        let _row1 = rows.next().unwrap(); // held open, never publishes
+        let mut t = SocketTransport::new(0, &plan, row0, Some(Duration::from_millis(80))).unwrap();
+        let start = Instant::now();
+        let err = t.wait_for_epoch(1, 1).unwrap_err();
+        assert!(start.elapsed() < Duration::from_secs(5), "deadline did not bound the wait");
+        assert_eq!(err.phase, Phase::Transfer);
+        assert!(err.waited >= Duration::from_millis(80));
+    }
+
+    #[test]
+    fn probe_reports_positive_parameters() {
+        let p = socket_probe(true).unwrap();
+        assert!(p.latency > 0.0 && p.latency < 1.0, "latency {}", p.latency);
+        assert!(p.bandwidth > 1e6, "bandwidth {}", p.bandwidth);
+    }
+}

@@ -1,0 +1,208 @@
+//! Socket wire format: length-framed pack buffers with epoch headers.
+//!
+//! The epoch-flags protocol maps onto frames one-to-one:
+//!
+//! * `EpochFlags::publish(rank, e)` → one [`KIND_DATA`] frame per outgoing
+//!   plan message, each carrying `e` in its header plus the packed payload
+//!   (the arena slots the in-process backend would have written). A
+//!   receiver's "flag reached `e`" is "every expected `DATA` frame of epoch
+//!   `e` arrived from that sender".
+//! * consumed-epoch `ack.publish(rank, e)` → one empty [`KIND_ACK`] frame
+//!   per sending peer, carrying `e`; the peer's ack counter is the max ack
+//!   epoch received.
+//! * [`KIND_HELLO`] identifies the connecting rank during mesh setup and
+//!   never appears after it.
+//!
+//! Data/ack frames share one fixed header — kind, sender rank, epoch, arena
+//! start slot, payload count — followed by `count` little-endian `f64`s.
+//! Control-plane messages (plan shipping, results) use a separate
+//! `u32`-length-prefixed byte framing ([`write_msg`]/[`read_msg`]), JSON or
+//! raw `f64` bytes at the call sites.
+
+use std::io::{self, Read, Write};
+
+/// Mesh handshake: "I am rank `sender`". No payload.
+pub const KIND_HELLO: u8 = 1;
+/// One packed plan message of an epoch.
+pub const KIND_DATA: u8 = 2;
+/// Consumed-epoch acknowledgement. No payload.
+pub const KIND_ACK: u8 = 3;
+
+/// Frame header bytes: kind (1) + sender (4) + epoch (8) + start (4) +
+/// count (4).
+pub const HEADER_LEN: usize = 21;
+
+/// Sanity cap on a frame's payload (2²⁴ doubles = 128 MiB): anything larger
+/// is a corrupt or hostile header, rejected as `InvalidData` rather than
+/// allocated.
+pub const MAX_FRAME_VALUES: usize = 1 << 24;
+
+/// Cap on a control-plane message (plans, fields, results).
+pub const MAX_MSG_BYTES: usize = 1 << 28;
+
+/// One decoded frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: u8,
+    /// The sending rank.
+    pub sender: u32,
+    /// The epoch counter carried in the header.
+    pub epoch: u64,
+    /// First arena slot of the payload (global plan coordinates).
+    pub start: u32,
+    pub payload: Vec<f64>,
+}
+
+/// Encode and send one frame as a single `write_all` (header + payload
+/// assembled into one buffer, so a frame is never interleaved mid-write).
+pub fn write_frame(
+    w: &mut impl Write,
+    kind: u8,
+    sender: u32,
+    epoch: u64,
+    start: u32,
+    payload: &[f64],
+) -> io::Result<()> {
+    assert!(payload.len() <= MAX_FRAME_VALUES, "frame payload over the wire cap");
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len() * 8);
+    buf.push(kind);
+    buf.extend_from_slice(&sender.to_le_bytes());
+    buf.extend_from_slice(&epoch.to_le_bytes());
+    buf.extend_from_slice(&start.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    for &v in payload {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&buf)
+}
+
+/// Read and decode one frame (blocking `read_exact`s). Oversized counts are
+/// rejected with `InvalidData` before any payload allocation.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Frame> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header)?;
+    let kind = header[0];
+    let sender = u32::from_le_bytes(header[1..5].try_into().unwrap());
+    let epoch = u64::from_le_bytes(header[5..13].try_into().unwrap());
+    let start = u32::from_le_bytes(header[13..17].try_into().unwrap());
+    let count = u32::from_le_bytes(header[17..21].try_into().unwrap()) as usize;
+    if count > MAX_FRAME_VALUES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame claims {count} values (cap {MAX_FRAME_VALUES})"),
+        ));
+    }
+    let mut bytes = vec![0u8; count * 8];
+    r.read_exact(&mut bytes)?;
+    let payload = bytes_to_f64s(&bytes);
+    Ok(Frame { kind, sender, epoch, start, payload })
+}
+
+/// Send one `u32`-length-prefixed control message.
+pub fn write_msg(w: &mut impl Write, bytes: &[u8]) -> io::Result<()> {
+    assert!(bytes.len() <= MAX_MSG_BYTES, "control message over the wire cap");
+    let mut buf = Vec::with_capacity(4 + bytes.len());
+    buf.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    buf.extend_from_slice(bytes);
+    w.write_all(&buf)
+}
+
+/// Read one `u32`-length-prefixed control message.
+pub fn read_msg(r: &mut impl Read) -> io::Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_MSG_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("control message claims {len} bytes (cap {MAX_MSG_BYTES})"),
+        ));
+    }
+    let mut bytes = vec![0u8; len];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes)
+}
+
+/// Flatten doubles to little-endian bytes (bulk field shipping).
+pub fn f64s_to_bytes(vals: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 8);
+    for &v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`f64s_to_bytes`]; ignores a trailing partial chunk (none is
+/// ever produced by the writer).
+pub fn bytes_to_f64s(bytes: &[u8]) -> Vec<f64> {
+    bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload = vec![1.5, -2.25, 3.0e-9, f64::MAX];
+        let mut buf = Vec::new();
+        write_frame(&mut buf, KIND_DATA, 3, 17, 40, &payload).unwrap();
+        assert_eq!(buf.len(), HEADER_LEN + payload.len() * 8);
+        let f = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(f, Frame { kind: KIND_DATA, sender: 3, epoch: 17, start: 40, payload });
+    }
+
+    #[test]
+    fn empty_ack_frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, KIND_ACK, 0, 9, 0, &[]).unwrap();
+        assert_eq!(buf.len(), HEADER_LEN);
+        let f = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(f.kind, KIND_ACK);
+        assert_eq!(f.epoch, 9);
+        assert!(f.payload.is_empty());
+    }
+
+    #[test]
+    fn oversized_count_is_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, KIND_DATA, 1, 1, 0, &[4.0]).unwrap();
+        // Corrupt the count field to a huge value.
+        buf[17..21].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(&buf)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn truncated_frame_is_an_io_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, KIND_DATA, 1, 1, 0, &[4.0, 5.0]).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read_frame(&mut Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn control_msg_roundtrip() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, b"{\"rank\":2}").unwrap();
+        write_msg(&mut buf, b"").unwrap();
+        let mut c = Cursor::new(&buf);
+        assert_eq!(read_msg(&mut c).unwrap(), b"{\"rank\":2}");
+        assert_eq!(read_msg(&mut c).unwrap(), b"");
+    }
+
+    #[test]
+    fn oversized_control_msg_is_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_msg(&mut Cursor::new(&buf)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn f64_bytes_roundtrip() {
+        let vals = vec![0.0, -0.0, 1.0 / 3.0, f64::MIN_POSITIVE];
+        assert_eq!(bytes_to_f64s(&f64s_to_bytes(&vals)), vals);
+    }
+}

@@ -1,0 +1,145 @@
+//! Cross-world transport equivalence (the tentpole acceptance gate).
+//!
+//! One compiled [`ExchangePlan`](upcsim::comm::ExchangePlan), three memory
+//! worlds: the in-process sequential reference, an in-process loopback
+//! socket world (one thread per rank), and the multi-process `repro launch`
+//! orchestrator. All three workloads must produce bitwise-identical fields
+//! and identical wire counters under every protocol, and a slow or killed
+//! peer must surface as a structured stall within the deadline — never a
+//! hang.
+
+use std::time::{Duration, Instant};
+use upcsim::transport::{
+    run_reference, run_socket_world, ChaosAction, Proto, WorkloadSpec, WORKLOADS,
+};
+
+fn assert_worlds_match(name: &str, procs: usize, proto: Proto, steps: u64) {
+    let spec = WorkloadSpec::for_name(name, procs).unwrap();
+    let deadline = Some(Duration::from_secs(30));
+    let world = run_socket_world(&spec, proto, steps, deadline, ChaosAction::None)
+        .unwrap_or_else(|e| panic!("{name}/{}: socket world failed: {e}", proto.name()));
+    assert!(
+        world.stalls.is_empty() && world.killed.is_empty(),
+        "{name}/{}: unexpected stalls {:?} / deaths {:?}",
+        proto.name(),
+        world.stalls,
+        world.killed
+    );
+    let reference = run_reference(&spec, proto, steps);
+    assert_eq!(world.bytes, reference.bytes, "{name}/{}: payload bytes", proto.name());
+    assert_eq!(world.transfers, reference.transfers, "{name}/{}: transfers", proto.name());
+    assert_eq!(world.fields.len(), reference.fields.len());
+    for (r, (got, want)) in world.fields.iter().zip(&reference.fields).enumerate() {
+        assert_eq!(got.len(), want.len(), "{name}/{}: rank {r} field length", proto.name());
+        for (i, (a, b)) in got.iter().zip(want).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{name}/{}: rank {r} field[{i}] = {a} vs reference {b}",
+                proto.name()
+            );
+        }
+    }
+}
+
+/// All three workloads x all three protocols over a 2-rank loopback socket
+/// mesh: bitwise-identical fields and identical byte/transfer counters
+/// against the in-process reference.
+#[test]
+fn socket_world_matches_reference_bitwise() {
+    for name in WORKLOADS {
+        for proto in Proto::ALL {
+            assert_worlds_match(name, 2, proto, 3);
+        }
+    }
+}
+
+/// Wider meshes route every plan edge through a different stream pair; the
+/// pipelined protocol additionally exercises the depth-2 ack window.
+#[test]
+fn three_rank_pipelined_worlds_match() {
+    for name in WORKLOADS {
+        assert_worlds_match(name, 3, Proto::Pipeline, 4);
+    }
+}
+
+/// A peer napping past the wait deadline must convert into a structured
+/// stall naming the socket transport — and the world must return promptly,
+/// not hang for the duration of the nap times the epoch count.
+#[test]
+fn slow_peer_converts_to_stall_within_deadline() {
+    let spec = WorkloadSpec::for_name("heat", 2).unwrap();
+    let t0 = Instant::now();
+    let world = run_socket_world(
+        &spec,
+        Proto::Sync,
+        4,
+        Some(Duration::from_millis(250)),
+        ChaosAction::SlowAt(1, Duration::from_millis(2000)),
+    )
+    .unwrap();
+    assert!(!world.stalls.is_empty(), "healthy rank should have stalled: {world:?}");
+    let (rank, msg) = &world.stalls[0];
+    assert_eq!(*rank, 0, "the healthy rank stalls, the slowed one naps");
+    assert!(msg.contains("socket:rank-"), "stall names the peer's transport identity: {msg}");
+    assert!(t0.elapsed() < Duration::from_secs(20), "took {:?}", t0.elapsed());
+}
+
+/// A rank dying mid-pipeline is reported as killed, and every survivor
+/// raises a clean stall (the reader marks the dead stream, waits error out).
+#[test]
+fn killed_peer_is_reported_not_hung() {
+    let spec = WorkloadSpec::for_name("spmv", 2).unwrap();
+    let world = run_socket_world(
+        &spec,
+        Proto::Pipeline,
+        5,
+        Some(Duration::from_millis(500)),
+        ChaosAction::KillAt(2),
+    )
+    .unwrap();
+    assert_eq!(world.killed, vec![1], "the highest rank takes the chaos action");
+    assert!(!world.stalls.is_empty(), "the survivor must stall, not finish: {world:?}");
+}
+
+// ---------------------------------------------------------------------------
+// World 3: the real multi-process orchestrator, driven through the binary.
+// ---------------------------------------------------------------------------
+
+fn repro(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .output()
+        .expect("spawning the repro binary")
+}
+
+fn assert_launch_ok(out: &std::process::Output, needle: &str) {
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "launch failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains(needle), "missing '{needle}'\nstdout:\n{stdout}\nstderr:\n{stderr}");
+}
+
+/// `repro launch --procs 2`: spawned worker processes receive the
+/// serialized plan, run the protocol over real sockets, and the leader
+/// verifies fields and counters bitwise against the in-process reference.
+#[test]
+fn launch_two_procs_verifies_bitwise() {
+    for (workload, proto) in [("heat", "sync"), ("stencil", "overlap"), ("spmv", "pipeline")] {
+        let out = repro(&[
+            "launch", "--procs", "2", "--workload", workload, "--proto", proto, "--steps", "3",
+        ]);
+        assert_launch_ok(&out, "verified bitwise against the in-process reference");
+    }
+}
+
+/// A chaos-killed worker exits with the planned code and every surviving
+/// process stalls cleanly instead of hanging the launch.
+#[test]
+fn launch_chaos_kill_is_contained() {
+    let out = repro(&[
+        "launch", "--procs", "2", "--workload", "heat", "--proto", "pipeline", "--steps", "4",
+        "--chaos", "kill@2", "--deadline-ms", "800",
+    ]);
+    assert_launch_ok(&out, "all survivors stalled cleanly");
+}
