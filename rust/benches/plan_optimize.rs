@@ -1,0 +1,80 @@
+//! Criterion-lite bench: the plan-optimizer compile pass (condensing a raw
+//! gather, consolidating a raw strided plan) and the per-step win its
+//! output buys on the executed SpMV V3 data path. §Perf target: optimizing
+//! stays a one-time preparation cost — orders of magnitude under the step
+//! time it saves.
+
+use upcsim::benchlib::{BenchConfig, Bencher};
+use upcsim::comm::{Analysis, PlanOptimizer, PlanStats};
+use upcsim::engine::{Engine, SpmvEngine};
+use upcsim::matrix::Ellpack;
+use upcsim::pgas::Topology;
+use upcsim::spmv::{SpmvState, Variant};
+use upcsim::transport::{PlanMode, WorkloadSpec};
+
+fn main() {
+    let mut b = Bencher::from_args(BenchConfig::heavy());
+    let procs = 8;
+    let spec = WorkloadSpec::for_name("spmv", procs).unwrap();
+    let WorkloadSpec::Spmv(p) = spec else {
+        unreachable!()
+    };
+    let raw_gather = spec.plan_with(PlanMode::Raw);
+    let stencil_spec = WorkloadSpec::for_name("stencil", procs).unwrap();
+    let raw_strided = stencil_spec.plan_with(PlanMode::Raw);
+    let opt = PlanOptimizer::default();
+
+    let before = PlanStats::of(&raw_gather);
+    let after = PlanStats::of(&opt.optimize(&raw_gather));
+    println!(
+        "spmv raw -> optimized: {} -> {} msgs, {} -> {} values, {} -> {} arena bytes",
+        before.messages,
+        after.messages,
+        before.values,
+        after.values,
+        before.index_arena_bytes,
+        after.index_arena_bytes
+    );
+
+    // The compile pass itself, throughput in plan values processed.
+    b.bench_items("optimize/spmv-raw-gather", before.values as f64, || {
+        let plan = opt.optimize(&raw_gather);
+        std::hint::black_box(&plan);
+    });
+    b.bench_items(
+        "optimize/stencil-raw-strided",
+        PlanStats::of(&raw_strided).values as f64,
+        || {
+            let plan = opt.optimize(&raw_strided);
+            std::hint::black_box(&plan);
+        },
+    );
+
+    // The executed V3 step under each plan variant — the consumer of the
+    // pass above, where condensing turns into wall-clock.
+    let nnz = (p.n * p.r_nz) as f64;
+    for mode in [PlanMode::Raw, PlanMode::Optimized] {
+        let m = Ellpack::random(p.n, p.r_nz, p.mat_seed);
+        let x0 = m.initial_vector(p.x_seed);
+        let mut state = SpmvState::new(&m, p.block, p.procs, &x0);
+        let mut analysis = Analysis::build(
+            &m.j,
+            m.r_nz,
+            state.layout,
+            Topology::single_node(p.procs),
+            usize::MAX,
+        );
+        analysis.plan = spec
+            .plan_with(mode)
+            .as_gather()
+            .expect("spmv runs a gather plan")
+            .clone();
+        let mut engine = SpmvEngine::new(Engine::Sequential);
+        b.bench_items(&format!("spmv-step/{}", mode.name()), nnz, || {
+            let out = engine.run(Variant::V3, &mut state, Some(&analysis));
+            std::hint::black_box(&out);
+            state.swap_xy();
+        });
+    }
+    b.finish();
+}

@@ -186,6 +186,41 @@ impl Analysis {
         Analysis { layout, topo, per_thread, plan, needed_blocks, row_split }
     }
 
+    /// The paper's fine-grained baseline plan for the same pattern: every
+    /// off-owner reference in row-scan order, duplicates included, no
+    /// condensing. [`CommPlan::from_occurrence_needs`] keeps it runnable on
+    /// the same executors, and the plan optimizer's condensing pass turns it
+    /// back into exactly [`Analysis::plan`] — which is what the
+    /// `planopt_equivalence` suite pins.
+    pub fn raw_gather_plan(j: &[u32], r_nz: usize, layout: &Layout) -> CommPlan {
+        assert_eq!(j.len(), layout.n * r_nz);
+        let threads = layout.threads;
+        let mut needs: Vec<Vec<(u32, u32)>> = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let mut occ: Vec<(u32, u32)> = Vec::new();
+            for b in layout.blocks_of_thread(t) {
+                let (start, len) = layout.block_range(b);
+                for i in start..start + len {
+                    for &col in &j[i * r_nz..(i + 1) * r_nz] {
+                        let c = col as usize;
+                        // Same skip rules as `scan_thread`: EllPack padding,
+                        // the row's own block, other private blocks.
+                        if c == i || (c >= start && c < start + len) {
+                            continue;
+                        }
+                        let owner = layout.owner_of_index(c);
+                        if owner == t {
+                            continue;
+                        }
+                        occ.push((owner as u32, col));
+                    }
+                }
+            }
+            needs.push(occ);
+        }
+        CommPlan::from_occurrence_needs(layout, &needs)
+    }
+
     /// Is global block `b` needed by thread `t`?
     #[inline]
     pub fn block_needed(&self, t: usize, b: usize) -> bool {
@@ -440,6 +475,14 @@ mod tests {
         a.validate().unwrap();
         assert_eq!(a.per_thread[0].c_local_indv, 2);
         assert_eq!(a.per_thread[0].s_total_in(), 1);
+        // The raw occurrence plan still moves both occurrences, in a
+        // runnable (valid) uncondensed plan.
+        let raw = Analysis::raw_gather_plan(&j, r_nz, &layout);
+        raw.validate().unwrap();
+        assert!(!raw.is_condensed());
+        let occurrences: u64 = a.per_thread.iter().map(|t| t.c_total_indv()).sum();
+        assert_eq!(raw.total_values() as u64, occurrences);
+        assert!(a.plan.total_values() < raw.total_values());
     }
 
     #[test]

@@ -272,6 +272,14 @@ impl StridedPlan {
             .map(move |m| self.view(m, m.sender))
     }
 
+    /// Every compiled copy as `(sender, receiver, src, dst)` in arena
+    /// (receiver-major) order — the inverse of
+    /// [`from_msgs`](StridedPlan::from_msgs). The plan optimizer uses this
+    /// to regroup blocks and re-emit a consolidated plan.
+    pub fn copies(&self) -> Vec<(usize, usize, StridedBlock, StridedBlock)> {
+        self.msgs.iter().map(|m| (m.sender as usize, m.receiver as usize, m.src, m.dst)).collect()
+    }
+
     /// Messages thread `t` packs, in arena order.
     pub fn send_msgs(&self, t: usize) -> impl Iterator<Item = StridedMsg<'_>> + '_ {
         self.send_ids[self.send_off[t] as usize..self.send_off[t + 1] as usize]
@@ -418,7 +426,8 @@ impl StridedPlan {
     }
 
     /// Consistency check: arena tiling, offset tables, block bounds against
-    /// per-thread field lengths, and the send-side permutation.
+    /// per-thread field lengths, the send-side permutation, no zero-count
+    /// blocks, and per-receiver destination blocks that never overlap.
     pub fn validate(&self, field_len: &dyn Fn(usize) -> usize) -> Result<(), String> {
         let threads = self.threads;
         if self.recv_off.len() != threads + 1 || self.send_off.len() != threads + 1 {
@@ -440,7 +449,10 @@ impl StridedPlan {
             if m.sender as usize >= threads || m.receiver as usize >= threads {
                 return Err(format!("message {id} names an out-of-range thread"));
             }
-            if m.start as usize != cursor || m.src.is_empty() {
+            if m.src.is_empty() || m.dst.is_empty() {
+                return Err(format!("message {id} carries a zero-count block"));
+            }
+            if m.start as usize != cursor {
                 return Err(format!("message {id} breaks the arena tiling"));
             }
             if m.src.len() != m.dst.len() {
@@ -479,6 +491,20 @@ impl StridedPlan {
                 return Err(format!("message {id} sent twice"));
             }
             *slot = true;
+        }
+        // No receiver's destination blocks may overlap: the unpack order
+        // would silently decide which value wins, and the optimizer's
+        // regrouping relies on destination cells being disjoint.
+        for t in 0..threads {
+            let mut cells: Vec<usize> = self.msgs
+                [self.recv_off[t] as usize..self.recv_off[t + 1] as usize]
+                .iter()
+                .flat_map(|m| block_cells(&m.dst))
+                .collect();
+            cells.sort_unstable();
+            if let Some(w) = cells.windows(2).find(|w| w[0] == w[1]) {
+                return Err(format!("receiver {t}: destination cell {} written twice", w[0]));
+            }
         }
         Ok(())
     }
@@ -626,7 +652,7 @@ impl ComputeSplit {
 }
 
 /// All cell indices a block touches, in gather order.
-fn block_cells(b: &StridedBlock) -> impl Iterator<Item = usize> + '_ {
+pub(crate) fn block_cells(b: &StridedBlock) -> impl Iterator<Item = usize> + '_ {
     (0..b.rows).flat_map(move |r| {
         (0..b.cols).map(move |c| b.offset + r * b.row_stride + c * b.col_stride)
     })
@@ -874,6 +900,86 @@ mod tests {
         let plan = StridedPlan::from_msgs(2, &copies);
         assert!(plan.validate(&|_| 4).is_ok());
         assert!(plan.validate(&|_| 3).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_overlapping_destinations_and_empty_blocks() {
+        // Two messages to thread 1 whose destination rows share cell 4.
+        let copies = vec![
+            (0usize, 1usize, StridedBlock::row(0, 3), StridedBlock::row(2, 3)),
+            (2, 1, StridedBlock::row(0, 3), StridedBlock::row(4, 3)),
+        ];
+        let plan = StridedPlan::from_msgs(3, &copies);
+        let err = plan.validate(&|_| 16).unwrap_err();
+        assert!(err.contains("written twice"), "{err}");
+        // Overlapping *source* blocks are legal (two receivers may want the
+        // same cells); only destinations must stay disjoint.
+        let copies = vec![
+            (0usize, 1usize, StridedBlock::row(0, 3), StridedBlock::row(2, 3)),
+            (0, 2, StridedBlock::row(0, 3), StridedBlock::row(2, 3)),
+        ];
+        StridedPlan::from_msgs(3, &copies).validate(&|_| 16).unwrap();
+        // A zero-count block is rejected explicitly.
+        let copies = vec![(0usize, 1usize, StridedBlock::row(0, 0), StridedBlock::row(0, 0))];
+        let plan = StridedPlan::from_msgs(2, &copies);
+        let err = plan.validate(&|_| 16).unwrap_err();
+        assert!(err.contains("zero-count"), "{err}");
+    }
+
+    /// Property: randomly generated disjoint-destination plans validate, and
+    /// injecting an overlapping or zero-count block is always caught.
+    #[test]
+    fn prop_random_block_sets_validate() {
+        crate::testing::check_prop(
+            "strided-validate-blocks",
+            32,
+            |r| {
+                let threads = r.usize_in(2, 5);
+                let grid_rows = r.usize_in(4, 16);
+                let cols = r.usize_in(4, 16);
+                let mut copies: Vec<(usize, usize, StridedBlock, StridedBlock)> = Vec::new();
+                for recv in 0..threads {
+                    // Disjoint row bands per receiver guarantee disjoint
+                    // destinations; sources may overlap freely.
+                    let mut row = 0usize;
+                    while row < grid_rows && r.bool(0.8) {
+                        let h = r.usize_in(1, 4).min(grid_rows - row);
+                        let w = r.usize_in(1, cols);
+                        let off = r.usize_in(0, cols - w + 1);
+                        let sender = (recv + r.usize_in(1, threads)) % threads;
+                        let dst = StridedBlock::plane(row * cols + off, h, cols, w, 1);
+                        let src = StridedBlock::plane(off, h, cols, w, 1);
+                        copies.push((sender, recv, src, dst));
+                        row += h;
+                    }
+                }
+                (threads, grid_rows * cols, copies)
+            },
+            |(threads, field_len, copies)| {
+                let plan = StridedPlan::from_msgs(*threads, copies);
+                plan.validate(&|_| *field_len)
+                    .map_err(|e| format!("clean plan rejected: {e}"))?;
+                if copies.is_empty() {
+                    return Ok(());
+                }
+                // Duplicate a copy → its destination cells are written twice.
+                let mut dup = copies.clone();
+                dup.push(dup[0]);
+                let plan = StridedPlan::from_msgs(*threads, &dup);
+                if plan.validate(&|_| *field_len).is_ok() {
+                    return Err("duplicated destination not caught".into());
+                }
+                // Zero-count block → explicit rejection.
+                let mut empty = copies.clone();
+                let (s, rcv, _, _) = empty[0];
+                empty[0] = (s, rcv, StridedBlock::row(0, 0), StridedBlock::row(0, 0));
+                let plan = StridedPlan::from_msgs(*threads, &empty);
+                if plan.validate(&|_| *field_len).is_ok() {
+                    return Err("zero-count block not caught".into());
+                }
+                Ok(())
+            },
+        );
     }
 
     fn owned2d(m: usize, n: usize) -> Vec<StridedBlock> {

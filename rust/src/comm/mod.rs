@@ -27,8 +27,10 @@
 
 mod analysis;
 mod exchange;
+mod optimize;
 mod plan;
 
 pub use analysis::{Analysis, RowRun, RowSplit, ThreadTraffic};
 pub use exchange::{ComputeSplit, ExchangePlan, StridedBlock, StridedMsg, StridedPlan};
+pub use optimize::{refine_strided, PlanOptimizer, PlanStats};
 pub use plan::{CommPlan, PlanMsg};

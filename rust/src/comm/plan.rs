@@ -113,6 +113,13 @@ pub struct CommPlan {
     /// the messages sent by `t`, sorted by receiver.
     send_off: Vec<u32>,
     send_ids: Vec<u32>,
+    /// Whether the plan carries the paper's condensed invariants (per-message
+    /// indices sorted + unique, one message per `(receiver, sender)` pair,
+    /// peer lists sorted). Raw occurrence-order plans
+    /// ([`CommPlan::from_occurrence_needs`]) set this to `false` and skip
+    /// those checks in [`validate`](CommPlan::validate); the executors only
+    /// rely on the arena tiling, which both forms guarantee.
+    condensed: bool,
 }
 
 impl CommPlan {
@@ -121,36 +128,57 @@ impl CommPlan {
     /// requires from other threads. The send side is derived as a CSR
     /// permutation over the same arena — no index list is cloned.
     pub fn from_recv_needs(layout: &Layout, recv_needs: &[Vec<(u32, u32)>]) -> CommPlan {
-        let threads = layout.threads;
-        assert_eq!(recv_needs.len(), threads);
-        let total: usize = recv_needs.iter().map(|v| v.len()).sum();
+        CommPlan::from_triples(layout.threads, &translate(layout, recv_needs), true)
+    }
+
+    /// Compile an **uncondensed** plan straight from occurrence-order needs:
+    /// `needs[t]` lists `(owner, index)` pairs in the order the workload
+    /// touches them, duplicates included, a new message opening whenever the
+    /// owner changes between consecutive occurrences. This is the paper's
+    /// fine-grained baseline — the traffic *before* the condensing pass —
+    /// kept runnable so the optimizer's win is measurable on the same
+    /// executors.
+    pub fn from_occurrence_needs(layout: &Layout, needs: &[Vec<(u32, u32)>]) -> CommPlan {
+        CommPlan::from_triples(layout.threads, &translate(layout, needs), false)
+    }
+
+    /// Assemble a plan from per-thread receive lists of
+    /// `(owner, index, owner_local_offset)` triples, already in the order
+    /// the arena should carry them. A new message opens whenever the owner
+    /// changes between consecutive triples, so condensed inputs (sorted by
+    /// owner, unique) yield one message per `(receiver, sender)` pair and
+    /// occurrence-order inputs yield one message per same-owner run.
+    pub(crate) fn from_triples(
+        threads: usize,
+        recv: &[Vec<(u32, u32, u32)>],
+        condensed: bool,
+    ) -> CommPlan {
+        assert_eq!(recv.len(), threads);
+        let total: usize = recv.iter().map(|v| v.len()).sum();
         let mut indices = Vec::with_capacity(total);
         let mut local_src = Vec::with_capacity(total);
         let mut msgs: Vec<MsgDesc> = Vec::new();
         let mut recv_off = Vec::with_capacity(threads + 1);
         recv_off.push(0u32);
-        for (t, needs) in recv_needs.iter().enumerate() {
-            for &(owner, idx) in needs {
+        for (t, needs) in recv.iter().enumerate() {
+            let mut run_start = true;
+            for &(owner, idx, loc) in needs {
                 debug_assert_ne!(owner as usize, t, "thread {t} receives from itself");
-                debug_assert_eq!(
-                    layout.owner_of_index(idx as usize),
-                    owner as usize,
-                    "recv need ({owner}, {idx}) names the wrong owner"
-                );
                 match msgs.last_mut() {
-                    Some(m) if m.receiver as usize == t && m.sender == owner => m.end += 1,
+                    Some(m) if !run_start && m.sender == owner => m.end += 1,
                     _ => {
                         let s = indices.len() as u32;
                         msgs.push(MsgDesc { sender: owner, receiver: t as u32, start: s, end: s + 1 });
                     }
                 }
+                run_start = false;
                 indices.push(idx);
-                local_src.push(layout.local_offset_of_index(idx as usize) as u32);
+                local_src.push(loc);
             }
             recv_off.push(msgs.len() as u32);
         }
         // Sender-side CSR over message ids. Iterating receiver-major keeps
-        // each sender's id list sorted by receiver.
+        // each sender's id list sorted by receiver (for condensed plans).
         let mut send_count = vec![0u32; threads];
         for m in &msgs {
             send_count[m.sender as usize] += 1;
@@ -167,7 +195,7 @@ impl CommPlan {
             send_ids[*c as usize] = id as u32;
             *c += 1;
         }
-        CommPlan { threads, indices, local_src, msgs, recv_off, send_off, send_ids }
+        CommPlan { threads, indices, local_src, msgs, recv_off, send_off, send_ids, condensed }
     }
 
     fn view<'a>(&'a self, m: &MsgDesc, peer: u32) -> PlanMsg<'a> {
@@ -178,6 +206,12 @@ impl CommPlan {
     /// Number of UPC threads the plan was compiled for.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// `true` when the plan carries the condensed invariants (each remote
+    /// value fetched once, one message per peer pair, sorted lists).
+    pub fn is_condensed(&self) -> bool {
+        self.condensed
     }
 
     /// Messages thread `t` unpacks, sorted by sending peer.
@@ -234,6 +268,7 @@ impl CommPlan {
     pub fn fingerprint(&self) -> u64 {
         let mut h = crate::util::Fnv64::new();
         h.write_usize(self.threads);
+        h.write_u8(self.condensed as u8);
         h.write_usize(self.msgs.len());
         for m in &self.msgs {
             h.write_u64(m.sender as u64);
@@ -256,6 +291,7 @@ impl CommPlan {
     pub fn to_json(&self) -> Value {
         let mut v = Value::obj();
         v.set("threads", Value::Num(self.threads as f64));
+        v.set("condensed", Value::Bool(self.condensed));
         v.set("indices", u32s_to_json(&self.indices));
         v.set("local_src", u32s_to_json(&self.local_src));
         let msgs: Vec<Value> = self
@@ -282,6 +318,13 @@ impl CommPlan {
     /// form is rejected instead of trusted.
     pub fn from_json(v: &Value) -> Result<CommPlan, String> {
         let threads = json_usize(v, "threads")?;
+        // Wire forms predating the optimizer carry no flag; they were all
+        // condensed by construction.
+        let condensed = match v.get("condensed") {
+            None => true,
+            Some(Value::Bool(b)) => *b,
+            Some(_) => return Err("condensed: not a bool".into()),
+        };
         let indices = json_u32s(v, "indices")?;
         let local_src = json_u32s(v, "local_src")?;
         let raw = v.get("msgs").and_then(Value::as_arr).ok_or("msgs: not an array")?;
@@ -317,14 +360,17 @@ impl CommPlan {
         if !bounded(&recv_off, msgs.len()) || !bounded(&send_off, send_ids.len()) {
             return Err("offset tables malformed".into());
         }
-        let plan = CommPlan { threads, indices, local_src, msgs, recv_off, send_off, send_ids };
+        let plan =
+            CommPlan { threads, indices, local_src, msgs, recv_off, send_off, send_ids, condensed };
         plan.validate().map_err(|e| format!("shipped gather plan invalid: {e}"))?;
         Ok(plan)
     }
 
-    /// Consistency check: descriptors partition the arena, lists are sorted
-    /// and unique, no self-messages, and the send side is an exact
-    /// permutation of the receive side.
+    /// Consistency check: descriptors partition the arena, no self-messages,
+    /// and the send side is an exact permutation of the receive side. Plans
+    /// flagged [`is_condensed`](CommPlan::is_condensed) additionally require
+    /// sorted unique per-message indices and peer-sorted message lists —
+    /// raw occurrence-order plans legitimately violate those.
     pub fn validate(&self) -> Result<(), String> {
         let threads = self.threads;
         if self.recv_off.len() != threads + 1 || self.send_off.len() != threads + 1 {
@@ -354,7 +400,7 @@ impl CommPlan {
             }
             cursor = m.end;
             let idx = &self.indices[m.start as usize..m.end as usize];
-            if !idx.windows(2).all(|w| w[0] < w[1]) {
+            if self.condensed && !idx.windows(2).all(|w| w[0] < w[1]) {
                 return Err(format!("message {} → {} not sorted/unique", m.sender, m.receiver));
             }
         }
@@ -370,7 +416,7 @@ impl CommPlan {
                 if m.receiver as usize != t {
                     return Err(format!("recv list of {t} holds a foreign message"));
                 }
-                if prev.is_some_and(|p| p >= m.sender) {
+                if self.condensed && prev.is_some_and(|p| p >= m.sender) {
                     return Err(format!("recv list of {t} not sorted by sender"));
                 }
                 prev = Some(m.sender);
@@ -381,7 +427,7 @@ impl CommPlan {
                 if m.sender as usize != t {
                     return Err(format!("send list of {t} holds a foreign message"));
                 }
-                if prev.is_some_and(|p| p >= m.receiver) {
+                if self.condensed && prev.is_some_and(|p| p >= m.receiver) {
                     return Err(format!("send list of {t} not sorted by receiver"));
                 }
                 prev = Some(m.receiver);
@@ -398,6 +444,26 @@ impl CommPlan {
         }
         Ok(())
     }
+}
+
+/// Translate `(owner, index)` needs into `(owner, index, local_offset)`
+/// triples through the layout, checking ownership in debug builds.
+fn translate(layout: &Layout, needs: &[Vec<(u32, u32)>]) -> Vec<Vec<(u32, u32, u32)>> {
+    needs
+        .iter()
+        .map(|v| {
+            v.iter()
+                .map(|&(owner, idx)| {
+                    debug_assert_eq!(
+                        layout.owner_of_index(idx as usize),
+                        owner as usize,
+                        "need ({owner}, {idx}) names the wrong owner"
+                    );
+                    (owner, idx, layout.local_offset_of_index(idx as usize) as u32)
+                })
+                .collect()
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -542,6 +608,36 @@ mod tests {
         let mut plan = CommPlan::from_recv_needs(&l, &needs);
         plan.msgs[0].receiver = 1; // self-message
         assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn occurrence_plan_is_raw_but_consistent() {
+        // t0 touches t1's idx 3, then t2's idx 4, then t1's 3 (again) and 2:
+        // duplicates and owner interleaving survive, message boundaries
+        // follow the owner runs.
+        let needs = vec![vec![(1u32, 3u32), (2, 4), (1, 3), (1, 2)], vec![], vec![]];
+        let plan = CommPlan::from_occurrence_needs(&layout(), &needs);
+        plan.validate().unwrap();
+        assert!(!plan.is_condensed());
+        assert_eq!(plan.total_values(), 4);
+        assert_eq!(plan.num_messages(), 3);
+        let r0: Vec<_> = plan.recv_msgs(0).collect();
+        assert_eq!(r0[0].indices, &[3]);
+        assert_eq!(r0[1].indices, &[4]);
+        assert_eq!(r0[2].indices, &[3, 2]);
+        // Local offsets still pre-translated per occurrence: idx 3 is t1's
+        // offset 1, idx 2 its offset 0.
+        assert_eq!(r0[2].local_src, &[1, 0]);
+        // The condensed plan over the same unique needs hashes apart.
+        let condensed = vec![vec![(1u32, 2u32), (1, 3), (2, 4)], vec![], vec![]];
+        let c = CommPlan::from_recv_needs(&layout(), &condensed);
+        assert!(c.is_condensed());
+        assert_ne!(c.fingerprint(), plan.fingerprint());
+        // JSON round-trip preserves the raw flag and the fingerprint.
+        let text = plan.to_json().compact();
+        let back = CommPlan::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert!(!back.is_condensed());
+        assert_eq!(back.fingerprint(), plan.fingerprint());
     }
 
     /// Property: for random layouts and synthetic needs, the compiled plan

@@ -1,0 +1,269 @@
+//! Plan-optimizer validation (`repro validate --optimize`): the measured
+//! raw-vs-optimized per-step win for every workload, checked against the
+//! model's prediction from the condensed message count and volume alone.
+//!
+//! The methodology mirrors [`validate_transport`]: measure, predict, ratio,
+//! geomean, budget — and the `BENCH_planopt.json` artifact is written
+//! *before* the budget gate so a failing run still leaves evidence behind.
+//! The prediction is anchored the way the paper anchors its UPCv3 columns:
+//! the computation term is whatever the *optimized* run spends beyond its
+//! modeled communication, so the speedup ratio isolates the communication
+//! delta that [`PlanOptimizer`] is responsible for.
+//!
+//! [`validate_transport`]: crate::transport::validate_transport
+//! [`PlanOptimizer`]: crate::comm::PlanOptimizer
+
+use crate::comm::{Analysis, PlanStats};
+use crate::engine::{Engine, SpmvEngine};
+use crate::heat2d::Heat2dSolver;
+use crate::machine::{HwParams, TransportModel};
+use crate::matrix::Ellpack;
+use crate::model::{comm_seconds_on, predict_planopt_speedup};
+use crate::pgas::Topology;
+use crate::spmv::{SpmvState, Variant};
+use crate::stencil3d::Stencil3dSolver;
+use crate::transport::{run_reference_mode, PlanMode, Proto, WorkloadSpec, WORKLOADS};
+use crate::util::json::Value;
+use crate::util::Rng;
+use anyhow::ensure;
+use std::time::Instant;
+
+/// One workload's raw-vs-optimized comparison: the plan statistics on both
+/// sides, the measured per-step medians, and the modeled speedup.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanoptRow {
+    pub workload: &'static str,
+    pub raw: PlanStats,
+    pub optimized: PlanStats,
+    /// Median per-step seconds running the raw (per-element) plan.
+    pub t_raw: f64,
+    /// Median per-step seconds running the optimized plan.
+    pub t_opt: f64,
+    pub speedup_measured: f64,
+    pub speedup_predicted: f64,
+}
+
+impl PlanoptRow {
+    /// Measured-over-predicted speedup ratio (1.0 = the model nailed it).
+    pub fn ratio(&self) -> f64 {
+        self.speedup_measured / self.speedup_predicted
+    }
+}
+
+/// Measure every workload with its raw and optimized plans, verify the two
+/// produce bitwise-identical fields under every protocol, and compare the
+/// measured speedup against [`predict_planopt_speedup`] within `budget`.
+///
+/// [`predict_planopt_speedup`]: crate::model::predict_planopt_speedup
+pub fn validate_planopt(
+    procs: usize,
+    steps: u64,
+    quick: bool,
+    budget: f64,
+) -> anyhow::Result<Vec<PlanoptRow>> {
+    ensure!(procs >= 2, "plan-optimizer validation needs at least 2 ranks");
+    ensure!(steps >= 1 && budget > 1.0, "need steps >= 1 and budget > 1");
+    let samples = if quick { 7 } else { 21 };
+    let hw = HwParams::abel();
+    let tm = TransportModel::inproc();
+
+    let mut rows = Vec::with_capacity(WORKLOADS.len());
+    for name in WORKLOADS {
+        let spec = WorkloadSpec::for_name(name, procs).unwrap();
+        equivalence_check(&spec, name, steps)?;
+        let raw = PlanStats::of(&spec.plan_with(PlanMode::Raw));
+        let optimized = PlanStats::of(&spec.plan_with(PlanMode::Optimized));
+        ensure!(
+            optimized.improves_on(&raw),
+            "{name}: optimized plan does not improve on the raw plan \
+             ({raw:?} -> {optimized:?})"
+        );
+        let t_raw = measured_step_seconds(&spec, PlanMode::Raw, samples);
+        let t_opt = measured_step_seconds(&spec, PlanMode::Optimized, samples);
+        // Anchor the computation term on the optimized run: everything it
+        // spends beyond its own modeled communication is computation, so
+        // the predicted speedup comes from the message/volume delta alone.
+        let t_comp = (t_opt - comm_seconds_on(tm, &hw, &optimized)).max(0.0);
+        let pred = predict_planopt_speedup(tm, &hw, t_comp, &raw, &optimized);
+        rows.push(PlanoptRow {
+            workload: name,
+            raw,
+            optimized,
+            t_raw,
+            t_opt,
+            speedup_measured: t_raw / t_opt,
+            speedup_predicted: pred.speedup,
+        });
+    }
+
+    println!(
+        "{:<9} {:>13} {:>17} {:>13} {:>10} {:>10} {:>7}",
+        "workload", "msgs raw>opt", "bytes raw>opt", "blocks raw>opt", "meas spdup", "pred spdup", "ratio"
+    );
+    let mut ok = true;
+    for row in &rows {
+        let ratio = row.ratio();
+        let in_budget = ratio.is_finite() && ratio <= budget && ratio >= 1.0 / budget;
+        ok &= in_budget;
+        println!(
+            "{:<9} {:>6}>{:<6} {:>8}>{:<8} {:>6}>{:<7} {:>10.2} {:>10.2} {:>7.2}{}",
+            row.workload,
+            row.raw.messages,
+            row.optimized.messages,
+            row.raw.payload_bytes,
+            row.optimized.payload_bytes,
+            row.raw.blocks,
+            row.optimized.blocks,
+            row.speedup_measured,
+            row.speedup_predicted,
+            ratio,
+            if in_budget { "" } else { "  <-- outside budget" }
+        );
+    }
+    let sum_ln = rows.iter().map(|r| r.ratio().abs().max(1e-300).ln()).sum::<f64>();
+    let geomean = (sum_ln / rows.len() as f64).exp();
+    println!("geomean measured/predicted speedup ratio: {geomean:.2} (budget {budget:.0}x)");
+
+    let mut arr = Vec::with_capacity(rows.len());
+    for row in &rows {
+        let mut o = Value::obj();
+        o.set("workload", Value::Str(row.workload.into()));
+        o.set("raw", row.raw.to_json());
+        o.set("optimized", row.optimized.to_json());
+        o.set("t_raw_s", Value::Num(row.t_raw));
+        o.set("t_opt_s", Value::Num(row.t_opt));
+        o.set("speedup_measured", Value::Num(row.speedup_measured));
+        o.set("speedup_predicted", Value::Num(row.speedup_predicted));
+        o.set("ratio", Value::Num(row.ratio()));
+        arr.push(o);
+    }
+    let mut root = Value::obj();
+    root.set("bench", Value::Str("plan_optimize".into()));
+    root.set("procs", Value::Num(procs as f64));
+    root.set("steps", Value::Num(steps as f64));
+    root.set("samples", Value::Num(samples as f64));
+    root.set("budget", Value::Num(budget));
+    root.set("geomean_ratio", Value::Num(geomean));
+    root.set("rows", Value::Arr(arr));
+    crate::benchlib::save_bench_json("BENCH_planopt.json", "plan optimizer validation", &root);
+
+    ensure!(
+        ok && geomean.is_finite(),
+        "plan-optimizer validation failed: at least one measured/predicted \
+         speedup ratio outside {budget:.0}x"
+    );
+    Ok(rows)
+}
+
+/// Fields must be bitwise identical across the raw, compiled, and optimized
+/// plans under every protocol — the optimizer changes message granularity,
+/// never values.
+fn equivalence_check(spec: &WorkloadSpec, name: &str, steps: u64) -> anyhow::Result<()> {
+    for proto in Proto::ALL {
+        let compiled = run_reference_mode(spec, proto, steps, PlanMode::Compiled);
+        for mode in [PlanMode::Raw, PlanMode::Optimized] {
+            let world = run_reference_mode(spec, proto, steps, mode);
+            ensure!(
+                field_bits(&world.fields) == field_bits(&compiled.fields),
+                "{name}/{}: {} plan diverged bitwise from the compiled plan",
+                proto.name(),
+                mode.name()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn field_bits(fields: &[Vec<f64>]) -> Vec<Vec<u64>> {
+    fields.iter().map(|f| f.iter().map(|v| v.to_bits()).collect()).collect()
+}
+
+/// Median per-step seconds for `spec` running `mode`'s plan on the
+/// sequential in-process engine (1 warmup step, then `samples` timed).
+fn measured_step_seconds(spec: &WorkloadSpec, mode: PlanMode, samples: usize) -> f64 {
+    let plan = spec.plan_with(mode);
+    match *spec {
+        WorkloadSpec::Heat { grid, seed } => {
+            let global = seeded_field(grid.m_glob * grid.n_glob, seed);
+            let strided = plan.as_strided().expect("heat runs a strided plan").clone();
+            let mut solver = Heat2dSolver::with_plan(grid, &global, strided);
+            median_step_seconds(|| solver.step_with(Engine::Sequential), samples)
+        }
+        WorkloadSpec::Stencil { grid, seed } => {
+            let global = seeded_field(grid.p_glob * grid.m_glob * grid.n_glob, seed);
+            let strided = plan.as_strided().expect("stencil runs a strided plan").clone();
+            let mut solver = Stencil3dSolver::with_plan(grid, &global, strided);
+            median_step_seconds(|| solver.step_with(Engine::Sequential), samples)
+        }
+        WorkloadSpec::Spmv(p) => {
+            let m = Ellpack::random(p.n, p.r_nz, p.mat_seed);
+            let x0 = m.initial_vector(p.x_seed);
+            let mut state = SpmvState::new(&m, p.block, p.procs, &x0);
+            let mut analysis = Analysis::build(
+                &m.j,
+                m.r_nz,
+                state.layout,
+                Topology::single_node(p.procs),
+                usize::MAX,
+            );
+            analysis.plan = plan.as_gather().expect("spmv runs a gather plan").clone();
+            let mut engine = SpmvEngine::new(Engine::Sequential);
+            median_step_seconds(
+                || {
+                    engine.run(Variant::V3, &mut state, Some(&analysis));
+                    state.swap_xy();
+                },
+                samples,
+            )
+        }
+    }
+}
+
+fn median_step_seconds(mut step: impl FnMut(), samples: usize) -> f64 {
+    step(); // warmup
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        step();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(f64::total_cmp);
+    times[times.len() / 2]
+}
+
+/// The launch module's deterministic initial field, reproduced here so the
+/// timed solvers start from the same data the reference worlds use.
+fn seeded_field(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.f64_in(0.0, 100.0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_planopt_quick_passes_and_improves() {
+        let rows = validate_planopt(2, 2, true, 1e9).expect("planopt validation");
+        assert_eq!(rows.len(), WORKLOADS.len());
+        for row in &rows {
+            assert!(row.optimized.improves_on(&row.raw), "{}", row.workload);
+            assert!(row.t_raw > 0.0 && row.t_opt > 0.0, "{}", row.workload);
+            assert!(row.speedup_predicted >= 1.0, "{}", row.workload);
+            assert!(row.ratio().is_finite(), "{}", row.workload);
+        }
+        let spmv = rows.iter().find(|r| r.workload == "spmv").unwrap();
+        assert!(
+            spmv.optimized.values < spmv.raw.values,
+            "condensing must shrink the spmv gather volume"
+        );
+        let _ = std::fs::remove_file("BENCH_planopt.json");
+    }
+
+    #[test]
+    fn validate_planopt_rejects_bad_arguments() {
+        assert!(validate_planopt(1, 2, true, 25.0).is_err());
+        assert!(validate_planopt(2, 0, true, 25.0).is_err());
+        assert!(validate_planopt(2, 2, true, 1.0).is_err());
+    }
+}

@@ -99,11 +99,21 @@ impl Heat2dSolver {
     /// Initialize from a global field of `m_glob × n_glob` values.
     /// Boundary values of the global domain are treated as fixed (Dirichlet).
     pub fn new(grid: HeatGrid, global: &[f64]) -> Heat2dSolver {
+        let plan = halo_plan(&grid);
+        Heat2dSolver::with_plan(grid, global, plan)
+    }
+
+    /// Initialize with a caller-supplied halo plan — a raw
+    /// ([`refine_strided`](crate::comm::refine_strided)) or optimized
+    /// ([`PlanOptimizer`](crate::comm::PlanOptimizer)) variant of
+    /// `halo_plan`. The plan must carry the same cell assignments; only
+    /// message granularity and arena order may differ.
+    pub fn with_plan(grid: HeatGrid, global: &[f64], plan: StridedPlan) -> Heat2dSolver {
         assert_eq!(global.len(), grid.m_glob * grid.n_glob);
         let phi: Vec<Vec<f64>> =
             (0..grid.threads()).map(|t| initial_field(grid, global, t)).collect();
         let phin = phi.clone();
-        let runtime = ExchangeRuntime::new(halo_plan(&grid));
+        let runtime = ExchangeRuntime::new(plan);
         let split = compute_split(&grid);
         Heat2dSolver { grid, phi, phin, runtime, split, inter_thread_bytes: 0 }
     }

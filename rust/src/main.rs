@@ -128,6 +128,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "stencil" => cmd_stencil(args),
         "chaos" => cmd_chaos(args),
         "launch" => cmd_launch(args),
+        "plan" => cmd_plan(args),
         "validate" => match args.positional.first().map(|s| s.as_str()) {
             None | Some("model") => cmd_validate_model(args),
             Some("pjrt") => cmd_validate_pjrt(args),
@@ -178,7 +179,12 @@ SUBCOMMANDS
               and byte counters bitwise against the in-process reference
               (--no-verify skips). --chaos kill@EPOCH | slow@EPOCH:MS
               injects a fault into the highest rank; --deadline-ms D
-              (10000) bounds every wait
+              (10000) bounds every wait; --plan compiled|raw|optimized
+              selects the exchange-plan variant every rank runs
+  plan        compile each workload's raw, compiled, and optimized exchange
+              plans and print the message/byte/block/arena statistics plus
+              the raw->optimized deltas (--workload heat|stencil|spmv|all,
+              --procs P default 2; JSON to stdout, --json PATH to save)
   validate [model]  measured-vs-predicted: all four variants plus the
               split-phase overlapped and multi-step pipelined paths (V3,
               heat2d, stencil3d) on the parallel engine, wall-clock vs the
@@ -192,6 +198,13 @@ SUBCOMMANDS
               model with the socket probe's tau/bandwidth substituted
               (--procs P ranks, --steps S, --budget R default 25; emits
               BENCH_transport.json, exits nonzero outside budget)
+  validate --optimize  measured-vs-predicted for the plan optimizer: the
+              raw-vs-optimized per-step speedup of every workload against
+              the model's prediction from the condensed message count and
+              volume, after checking all three plan variants produce
+              bitwise-identical fields (--procs P, --steps S, --budget R
+              default 25; emits BENCH_planopt.json, exits nonzero outside
+              budget)
   validate pjrt     numeric equivalence: native kernel vs PJRT artifacts
 
 COMMON FLAGS
@@ -375,7 +388,7 @@ fn parse_chaos(s: Option<&str>) -> Result<upcsim::transport::ChaosAction> {
 }
 
 fn cmd_launch(args: &Args) -> Result<()> {
-    use upcsim::transport::{LaunchConfig, Proto, WORKLOADS};
+    use upcsim::transport::{LaunchConfig, PlanMode, Proto, WORKLOADS};
     let procs = args.usize_flag("procs", 2)?;
     let workload = args.str_flag("workload").unwrap_or("all").to_string();
     let proto_flag = args.str_flag("proto").map(str::to_string);
@@ -383,6 +396,11 @@ fn cmd_launch(args: &Args) -> Result<()> {
     let deadline_ms = args.usize_flag("deadline-ms", 10_000)?;
     let chaos = parse_chaos(args.str_flag("chaos"))?;
     let verify = !args.bool_flag("no-verify");
+    let plan_mode = match args.str_flag("plan") {
+        None => PlanMode::Compiled,
+        Some(m) => PlanMode::parse(m)
+            .ok_or_else(|| anyhow!("unknown plan mode '{m}' (compiled | raw | optimized)"))?,
+    };
     args.finish()?;
     let protos: Vec<Proto> = match proto_flag.as_deref() {
         None | Some("all") => Proto::ALL.to_vec(),
@@ -403,12 +421,93 @@ fn cmd_launch(args: &Args) -> Result<()> {
                 steps,
                 deadline: std::time::Duration::from_millis(deadline_ms as u64),
                 chaos,
+                plan_mode,
                 verify,
             };
             upcsim::transport::cmd_launch(&cfg)?;
         }
     }
     Ok(())
+}
+
+/// `repro plan`: compile each requested workload's raw, compiled, and
+/// optimized exchange plans and report the [`PlanStats`] deltas — the
+/// condensing/consolidation win — as a table plus JSON.
+///
+/// [`PlanStats`]: upcsim::comm::PlanStats
+fn cmd_plan(args: &Args) -> Result<()> {
+    use upcsim::comm::PlanStats;
+    use upcsim::transport::{PlanMode, WorkloadSpec, WORKLOADS};
+    use upcsim::util::json::Value;
+    let procs = args.usize_flag("procs", 2)?;
+    let workload = args.str_flag("workload").unwrap_or("all").to_string();
+    let json_path = args.str_flag("json").map(std::path::PathBuf::from);
+    args.finish()?;
+    let workloads: Vec<String> = if workload == "all" {
+        WORKLOADS.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![workload]
+    };
+    println!(
+        "{:<9} {:<10} {:>7} {:>8} {:>10} {:>7} {:>9}  {:<16}",
+        "workload", "plan", "msgs", "values", "bytes", "blocks", "arena B", "fingerprint"
+    );
+    let mut arr = Vec::with_capacity(workloads.len());
+    for w in &workloads {
+        let spec = WorkloadSpec::for_name(w, procs)
+            .ok_or_else(|| anyhow!("unknown workload '{w}' (expected one of {WORKLOADS:?})"))?;
+        let mut o = Value::obj();
+        o.set("workload", Value::Str(w.clone()));
+        let mut per_mode = Vec::with_capacity(3);
+        for mode in [PlanMode::Raw, PlanMode::Compiled, PlanMode::Optimized] {
+            let plan = spec.plan_with(mode);
+            let stats = PlanStats::of(&plan);
+            println!(
+                "{:<9} {:<10} {:>7} {:>8} {:>10} {:>7} {:>9}  {:016x}",
+                w,
+                mode.name(),
+                stats.messages,
+                stats.values,
+                stats.payload_bytes,
+                stats.blocks,
+                stats.index_arena_bytes,
+                plan.fingerprint()
+            );
+            o.set(mode.name(), stats.to_json());
+            per_mode.push(stats);
+        }
+        let (raw, opt) = (per_mode[0], per_mode[2]);
+        println!(
+            "{:<9} raw->optimized: messages {}, bytes {}, blocks {}, index arena {}",
+            w,
+            pct_delta(raw.messages as f64, opt.messages as f64),
+            pct_delta(raw.payload_bytes as f64, opt.payload_bytes as f64),
+            pct_delta(raw.blocks as f64, opt.blocks as f64),
+            pct_delta(raw.index_arena_bytes as f64, opt.index_arena_bytes as f64),
+        );
+        arr.push(o);
+    }
+    let mut root = Value::obj();
+    root.set("bench", Value::Str("plan".into()));
+    root.set("procs", Value::Num(procs as f64));
+    root.set("rows", Value::Arr(arr));
+    match json_path {
+        Some(p) => {
+            std::fs::write(&p, root.pretty())
+                .map_err(|e| anyhow!("cannot write {}: {e}", p.display()))?;
+            println!("[plan statistics saved to {}]", p.display());
+        }
+        None => println!("{}", root.compact()),
+    }
+    Ok(())
+}
+
+/// `"-96.7%"`-style relative change for the `repro plan` delta rows.
+fn pct_delta(before: f64, after: f64) -> String {
+    if before == 0.0 {
+        return "n/a".into();
+    }
+    format!("{:+.1}%", (after - before) / before * 100.0)
 }
 
 /// `repro validate --transport socket`: all nine (workload × protocol)
@@ -426,7 +525,25 @@ fn cmd_validate_transport(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro validate --optimize`: measured raw-vs-optimized per-step speedup
+/// for every workload against the model's prediction from the condensed
+/// message count and volume. Exits nonzero when any row (or the geomean)
+/// leaves the ratio budget.
+fn cmd_validate_planopt(args: &Args) -> Result<()> {
+    let procs = args.usize_flag("procs", 2)?;
+    let steps = args.usize_flag("steps", 4)? as u64;
+    let budget = args.usize_flag("budget", 25)? as f64;
+    let quick = args.bool_flag("quick");
+    args.finish()?;
+    upcsim::harness::validate_planopt(procs, steps, quick, budget)?;
+    println!("plan-optimizer validation OK ({procs} ranks, in-process)");
+    Ok(())
+}
+
 fn cmd_validate_model(args: &Args) -> Result<()> {
+    if args.bool_flag("optimize") {
+        return cmd_validate_planopt(args);
+    }
     match args.str_flag("transport").unwrap_or("inproc") {
         "inproc" => {}
         "socket" => return cmd_validate_transport(args),

@@ -10,6 +10,7 @@
 mod heat;
 mod overlap;
 mod pipeline;
+mod planopt;
 mod spmv;
 mod stencil;
 
@@ -22,11 +23,12 @@ pub use pipeline::{
     predict_heat2d_pipelined, predict_stencil3d_pipelined, predict_v3_pipelined,
     PipelinePrediction,
 };
-pub use stencil::{predict_stencil3d, Stencil3dPrediction};
+pub use planopt::{comm_seconds_on, predict_planopt_speedup, PlanoptPrediction};
 pub use spmv::{
     predict_naive, predict_v1, predict_v2, predict_v3, t_comp_thread, SpmvInputs, SpmvPrediction,
     V3ThreadBreakdown,
 };
+pub use stencil::{predict_stencil3d, Stencil3dPrediction};
 
 use crate::machine::NaiveOverheads;
 use crate::spmv::Variant;

@@ -1,0 +1,137 @@
+//! The condensing/consolidation performance model.
+//!
+//! The paper's enhancement-three argument (§4.3/§5.2.5) is that condensing
+//! and consolidating changes *only* the communication term: computation is
+//! untouched, so the whole win must be predictable from the plan-size
+//! deltas that [`PlanStats`](crate::comm::PlanStats) reports. The per-step
+//! communication time for a compiled plan is the §5 message model applied
+//! to the critical-path thread:
+//!
+//! ```text
+//! T_comm = M_max · t_msg + V_max · L/W_private + B_total / W_eff
+//! ```
+//!
+//! where `M_max`/`V_max` are the busiest receiver's message and value
+//! counts (threads exchange concurrently, so the slowest receiver binds the
+//! step), `B_total` the payload bytes crossing the shared wire, and `t_msg`
+//! the per-message fixed cost: τ_eff on a real transport
+//! ([`TransportModel::apply`]'s substituted latency), but only a cache-line
+//! touch `L/W_private` for the in-process world, where a "message" is a
+//! pack/unpack loop iteration and no syscall or wire round-trip exists —
+//! charging τ per in-process message would over-predict the raw plans by
+//! orders of magnitude.
+//!
+//! The optimized-vs-raw step-time ratio then follows from the stats alone:
+//! `speedup = (T_comp + T_comm(before)) / (T_comp + T_comm(after))` with
+//! the computation term measured once (it cancels out of the comparison —
+//! exactly the paper's "the model predicts the enhancement win from the
+//! communication volume it removes").
+
+use crate::comm::PlanStats;
+use crate::machine::{HwParams, TransportModel};
+
+/// Modeled before/after communication times and the step-speedup they
+/// imply, for one workload under one transport.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanoptPrediction {
+    /// Per-step communication seconds for the raw plan.
+    pub t_comm_raw: f64,
+    /// Per-step communication seconds for the optimized plan.
+    pub t_comm_opt: f64,
+    /// The computation anchor both step times share.
+    pub t_comp: f64,
+    /// `(t_comp + t_comm_raw) / (t_comp + t_comm_opt)`.
+    pub speedup: f64,
+}
+
+/// Per-step communication seconds for a plan of the given size on the
+/// given transport (the `T_comm` formula above).
+pub fn comm_seconds_on(tm: TransportModel, hw: &HwParams, stats: &PlanStats) -> f64 {
+    let eff = tm.apply(hw);
+    let t_msg = match tm {
+        TransportModel::Inproc => hw.t_indv_local(),
+        TransportModel::Socket { .. } => eff.tau,
+    };
+    stats.max_thread_messages as f64 * t_msg
+        + stats.max_thread_values as f64 * hw.t_indv_local()
+        + stats.payload_bytes as f64 / eff.w_node_remote
+}
+
+/// Predict the optimized-over-raw step speedup from the two stats reports
+/// and a measured computation anchor (seconds of non-communication work per
+/// step, identical in both worlds by construction).
+pub fn predict_planopt_speedup(
+    tm: TransportModel,
+    hw: &HwParams,
+    t_comp: f64,
+    before: &PlanStats,
+    after: &PlanStats,
+) -> PlanoptPrediction {
+    let t_comm_raw = comm_seconds_on(tm, hw, before);
+    let t_comm_opt = comm_seconds_on(tm, hw, after);
+    PlanoptPrediction {
+        t_comm_raw,
+        t_comm_opt,
+        t_comp,
+        speedup: (t_comp + t_comm_raw) / (t_comp + t_comm_opt),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(messages: usize, values: usize) -> PlanStats {
+        PlanStats {
+            messages,
+            values,
+            payload_bytes: (values * 8) as u64,
+            blocks: values,
+            index_arena_bytes: 8 * values,
+            max_thread_messages: messages,
+            max_thread_values: values,
+        }
+    }
+
+    #[test]
+    fn comm_time_is_monotone_in_messages_and_volume() {
+        let hw = HwParams::abel();
+        for tm in [TransportModel::inproc(), TransportModel::socket(30e-6, 1.2e9)] {
+            let base = comm_seconds_on(tm, &hw, &stats(100, 1000));
+            assert!(comm_seconds_on(tm, &hw, &stats(200, 1000)) > base);
+            assert!(comm_seconds_on(tm, &hw, &stats(100, 2000)) > base);
+            assert!(comm_seconds_on(tm, &hw, &stats(10, 100)) < base);
+        }
+    }
+
+    #[test]
+    fn socket_charges_latency_per_message_inproc_does_not() {
+        // 1000 extra messages at equal volume: a wire transport pays
+        // ~1000·τ more, the in-process world only ~1000 cache lines.
+        let hw = HwParams::abel();
+        let sock = TransportModel::socket(30e-6, 1.2e9);
+        let d_sock = comm_seconds_on(sock, &hw, &stats(1100, 1000))
+            - comm_seconds_on(sock, &hw, &stats(100, 1000));
+        let d_in = comm_seconds_on(TransportModel::inproc(), &hw, &stats(1100, 1000))
+            - comm_seconds_on(TransportModel::inproc(), &hw, &stats(100, 1000));
+        assert!((d_sock - 1000.0 * 30e-6).abs() / d_sock < 1e-6);
+        assert!(d_in < d_sock / 100.0);
+    }
+
+    #[test]
+    fn speedup_comes_from_the_stats_delta_alone() {
+        let hw = HwParams::abel();
+        let tm = TransportModel::socket(30e-6, 1.2e9);
+        let raw = stats(4000, 4000);
+        let opt = stats(40, 1000);
+        let p = predict_planopt_speedup(tm, &hw, 1e-3, &raw, &opt);
+        assert!(p.speedup > 1.0, "condensing must predict a win: {p:?}");
+        assert!(p.t_comm_opt < p.t_comm_raw);
+        // Equal stats ⇒ no predicted win, whatever the compute anchor.
+        let same = predict_planopt_speedup(tm, &hw, 1e-3, &raw, &raw);
+        assert!((same.speedup - 1.0).abs() < 1e-12);
+        // A larger compute anchor dilutes the speedup toward 1.
+        let diluted = predict_planopt_speedup(tm, &hw, 1.0, &raw, &opt);
+        assert!(diluted.speedup < p.speedup && diluted.speedup >= 1.0);
+    }
+}

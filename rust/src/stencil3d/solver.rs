@@ -83,11 +83,21 @@ impl Stencil3dSolver {
     /// Initialize from a global field of `p_glob × m_glob × n_glob` values.
     /// Boundary values of the global domain are treated as fixed (Dirichlet).
     pub fn new(grid: Stencil3dGrid, global: &[f64]) -> Stencil3dSolver {
+        let plan = face_plan(&grid);
+        Stencil3dSolver::with_plan(grid, global, plan)
+    }
+
+    /// Initialize with a caller-supplied face plan — a raw
+    /// ([`refine_strided`](crate::comm::refine_strided)) or optimized
+    /// ([`PlanOptimizer`](crate::comm::PlanOptimizer)) variant of
+    /// `face_plan`. The plan must carry the same cell assignments; only
+    /// message granularity and arena order may differ.
+    pub fn with_plan(grid: Stencil3dGrid, global: &[f64], plan: StridedPlan) -> Stencil3dSolver {
         assert_eq!(global.len(), grid.p_glob * grid.m_glob * grid.n_glob);
         let phi: Vec<Vec<f64>> =
             (0..grid.threads()).map(|t| initial_field(grid, global, t)).collect();
         let phin = phi.clone();
-        let runtime = ExchangeRuntime::new(face_plan(&grid));
+        let runtime = ExchangeRuntime::new(plan);
         let split = compute_split(&grid);
         Stencil3dSolver { grid, phi, phin, runtime, split, inter_thread_bytes: 0 }
     }

@@ -26,7 +26,7 @@
 use super::{
     loopback_mesh, socket_probe, wire, MeshStreams, ProcRuntime, SocketTransport, Transport,
 };
-use crate::comm::{Analysis, ExchangePlan};
+use crate::comm::{refine_strided, Analysis, ExchangePlan, PlanOptimizer};
 use crate::engine::{Engine, Phase, SpmvEngine, StallError};
 use crate::heat2d::Heat2dSolver;
 use crate::machine::{HwParams, TransportModel};
@@ -35,7 +35,7 @@ use crate::model::{
     predict_heat2d_overlap_on, predict_stencil3d_overlap_on, predict_v3_overlap_on, HeatGrid,
     OverlapPrediction, PipelinePrediction, SpmvInputs,
 };
-use crate::pgas::Topology;
+use crate::pgas::{Layout, Topology};
 use crate::spmv::{spmv_block_gathered, SpmvState, Variant};
 use crate::stencil3d::{Stencil3dGrid, Stencil3dSolver};
 use crate::util::json::{self, Value};
@@ -115,12 +115,41 @@ impl WorkloadSpec {
 
     /// Compile the exchange plan — the single artifact all worlds share.
     pub fn plan(&self) -> ExchangePlan {
-        match self {
-            WorkloadSpec::Heat { grid, .. } => crate::heat2d::halo_plan(grid).into(),
-            WorkloadSpec::Stencil { grid, .. } => crate::stencil3d::face_plan(grid).into(),
-            WorkloadSpec::Spmv(p) => {
-                let (_, analysis) = spmv_setup(p);
-                analysis.plan.clone().into()
+        self.plan_with(PlanMode::Compiled)
+    }
+
+    /// Compile the `mode` variant of the exchange plan. All three variants
+    /// carry the same (source cell → destination cell) assignments, so any
+    /// world runs bitwise-identically on any of them; only message
+    /// granularity, duplication, and arena order differ.
+    pub fn plan_with(&self, mode: PlanMode) -> ExchangePlan {
+        match mode {
+            PlanMode::Compiled => match self {
+                WorkloadSpec::Heat { grid, .. } => crate::heat2d::halo_plan(grid).into(),
+                WorkloadSpec::Stencil { grid, .. } => crate::stencil3d::face_plan(grid).into(),
+                WorkloadSpec::Spmv(p) => {
+                    let (_, analysis) = spmv_setup(p);
+                    analysis.plan.clone().into()
+                }
+            },
+            PlanMode::Raw => match self {
+                WorkloadSpec::Heat { grid, .. } => {
+                    refine_strided(&crate::heat2d::halo_plan(grid)).into()
+                }
+                WorkloadSpec::Stencil { grid, .. } => {
+                    refine_strided(&crate::stencil3d::face_plan(grid)).into()
+                }
+                WorkloadSpec::Spmv(p) => {
+                    let m = Ellpack::random(p.n, p.r_nz, p.mat_seed);
+                    let layout = Layout::new(p.n, p.block, p.procs);
+                    Analysis::raw_gather_plan(&m.j, m.r_nz, &layout).into()
+                }
+            },
+            // The default optimizer is deliberately calibration-free, so
+            // every rank of every world compiles the identical optimized
+            // plan (the launch-time fingerprint drift check depends on it).
+            PlanMode::Optimized => {
+                PlanOptimizer::default().optimize(&self.plan_with(PlanMode::Compiled))
             }
         }
     }
@@ -209,6 +238,43 @@ fn field_u64(v: &Value, key: &str) -> anyhow::Result<u64> {
     let x = v.get(key).and_then(Value::as_f64).ok_or_else(|| anyhow!("spec: missing '{key}'"))?;
     ensure!(x >= 0.0 && x.fract() == 0.0, "spec: '{key}' is not a seed");
     Ok(x as u64)
+}
+
+/// Which variant of a workload's exchange plan a world runs
+/// (`repro launch --plan`, `repro validate --optimize`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlanMode {
+    /// The plan exactly as the workload compiles it: hand-written halo
+    /// blocks, analyzer-condensed gather lists.
+    #[default]
+    Compiled,
+    /// The fine-grained baseline the paper's enhancement three starts
+    /// from: one message per cell on the strided side, occurrence-order
+    /// duplicated gather lists on the gather side.
+    Raw,
+    /// The compiled plan run through the [`PlanOptimizer`] pass pipeline.
+    Optimized,
+}
+
+impl PlanMode {
+    pub const ALL: [PlanMode; 3] = [PlanMode::Compiled, PlanMode::Raw, PlanMode::Optimized];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanMode::Compiled => "compiled",
+            PlanMode::Raw => "raw",
+            PlanMode::Optimized => "optimized",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PlanMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "compiled" => Some(PlanMode::Compiled),
+            "raw" => Some(PlanMode::Raw),
+            "optimized" | "opt" => Some(PlanMode::Optimized),
+            _ => None,
+        }
+    }
 }
 
 /// The three exchange protocols every transport must support.
@@ -309,10 +375,13 @@ struct RankResult {
     transfers: u64,
 }
 
-/// Drive one rank of `spec` over any transport. `Ok(None)` means the chaos
-/// action asked this rank to die mid-run.
+/// Drive one rank of `spec` over any transport, executing `plan` (which
+/// must be the plan the transport was built around — any [`PlanMode`]
+/// variant of the spec's plan). `Ok(None)` means the chaos action asked
+/// this rank to die mid-run.
 fn run_rank<T: Transport>(
     spec: &WorkloadSpec,
+    plan: &ExchangePlan,
     proto: Proto,
     steps: u64,
     transport: T,
@@ -320,12 +389,12 @@ fn run_rank<T: Transport>(
 ) -> Result<Option<RankResult>, StallError> {
     match *spec {
         WorkloadSpec::Heat { grid, seed } => {
-            run_heat_rank(grid, seed, proto, steps, transport, chaos)
+            run_heat_rank(grid, seed, plan, proto, steps, transport, chaos)
         }
         WorkloadSpec::Stencil { grid, seed } => {
-            run_stencil_rank(grid, seed, proto, steps, transport, chaos)
+            run_stencil_rank(grid, seed, plan, proto, steps, transport, chaos)
         }
-        WorkloadSpec::Spmv(p) => run_spmv_rank(&p, proto, steps, transport, chaos),
+        WorkloadSpec::Spmv(p) => run_spmv_rank(&p, plan, proto, steps, transport, chaos),
     }
 }
 
@@ -347,6 +416,7 @@ fn pipeline_prefix(chaos: &ChaosAction, steps: u64) -> (u64, bool) {
 fn run_heat_rank<T: Transport>(
     grid: HeatGrid,
     seed: u64,
+    plan: &ExchangePlan,
     proto: Proto,
     steps: u64,
     transport: T,
@@ -358,8 +428,7 @@ fn run_heat_rank<T: Transport>(
     let mut field = crate::heat2d::initial_field(grid, &global, rank);
     let mut out = field.clone();
     let split = crate::heat2d::compute_split(&grid);
-    let plan: ExchangePlan = crate::heat2d::halo_plan(&grid).into();
-    let mut rt = ProcRuntime::new(plan, transport);
+    let mut rt = ProcRuntime::new(plan.clone(), transport);
     match proto {
         Proto::Sync => {
             for _ in 0..steps {
@@ -419,6 +488,7 @@ fn run_heat_rank<T: Transport>(
 fn run_stencil_rank<T: Transport>(
     grid: Stencil3dGrid,
     seed: u64,
+    plan: &ExchangePlan,
     proto: Proto,
     steps: u64,
     transport: T,
@@ -431,8 +501,7 @@ fn run_stencil_rank<T: Transport>(
     let mut field = crate::stencil3d::initial_field(grid, &global, rank);
     let mut out = field.clone();
     let split = crate::stencil3d::compute_split(&grid);
-    let plan: ExchangePlan = crate::stencil3d::face_plan(&grid).into();
-    let mut rt = ProcRuntime::new(plan, transport);
+    let mut rt = ProcRuntime::new(plan.clone(), transport);
     match proto {
         Proto::Sync => {
             for _ in 0..steps {
@@ -516,6 +585,7 @@ fn spmv_setup(p: &SpmvParams) -> (SpmvState, Analysis) {
 /// results are bitwise identical to the in-process reference.
 fn run_spmv_rank<T: Transport>(
     p: &SpmvParams,
+    plan: &ExchangePlan,
     proto: Proto,
     steps: u64,
     mut transport: T,
@@ -526,7 +596,7 @@ fn run_spmv_rank<T: Transport>(
     let layout = state.layout;
     let bs = layout.block_size;
     let r_nz = state.r_nz;
-    let plan = &analysis.plan;
+    let plan = plan.as_gather().expect("spmv runs a gather plan");
     let mut src: Vec<f64> = state.x.local(rank).to_vec();
     let mut dst: Vec<f64> = state.y.local(rank).to_vec();
     let mut ws = vec![0.0f64; layout.n];
@@ -637,11 +707,24 @@ pub struct WorldOutcome {
 /// fields *and* for the wire counters (payload bytes cross the same plan
 /// edges no matter which memory world carries them).
 pub fn run_reference(spec: &WorkloadSpec, proto: Proto, steps: u64) -> WorldOutcome {
+    run_reference_mode(spec, proto, steps, PlanMode::Compiled)
+}
+
+/// [`run_reference`] executing the `mode` variant of the spec's plan — the
+/// in-process half of the optimized-vs-raw equivalence matrix.
+pub fn run_reference_mode(
+    spec: &WorkloadSpec,
+    proto: Proto,
+    steps: u64,
+    mode: PlanMode,
+) -> WorldOutcome {
+    let plan = spec.plan_with(mode);
     let t0 = Instant::now();
     match *spec {
         WorkloadSpec::Heat { grid, seed } => {
             let global = seeded_field(grid.m_glob * grid.n_glob, seed);
-            let mut solver = Heat2dSolver::new(grid, &global);
+            let strided = plan.as_strided().expect("heat runs a strided plan").clone();
+            let mut solver = Heat2dSolver::with_plan(grid, &global, strided);
             match proto {
                 Proto::Sync => {
                     for _ in 0..steps {
@@ -667,7 +750,8 @@ pub fn run_reference(spec: &WorkloadSpec, proto: Proto, steps: u64) -> WorldOutc
         }
         WorkloadSpec::Stencil { grid, seed } => {
             let global = seeded_field(grid.p_glob * grid.m_glob * grid.n_glob, seed);
-            let mut solver = Stencil3dSolver::new(grid, &global);
+            let strided = plan.as_strided().expect("stencil runs a strided plan").clone();
+            let mut solver = Stencil3dSolver::with_plan(grid, &global, strided);
             match proto {
                 Proto::Sync => {
                     for _ in 0..steps {
@@ -692,7 +776,8 @@ pub fn run_reference(spec: &WorkloadSpec, proto: Proto, steps: u64) -> WorldOutc
             }
         }
         WorkloadSpec::Spmv(p) => {
-            let (mut state, analysis) = spmv_setup(&p);
+            let (mut state, mut analysis) = spmv_setup(&p);
+            analysis.plan = plan.as_gather().expect("spmv runs a gather plan").clone();
             let mut engine = SpmvEngine::new(Engine::Sequential);
             let mut bytes = 0u64;
             let mut transfers = 0u64;
@@ -759,8 +844,22 @@ pub fn run_socket_world(
     deadline: Option<Duration>,
     chaos: ChaosAction,
 ) -> io::Result<WorldOutcome> {
+    run_socket_world_mode(spec, proto, steps, deadline, chaos, PlanMode::Compiled)
+}
+
+/// [`run_socket_world`] executing the `mode` variant of the spec's plan.
+/// The transport and every rank's runtime are built around the *same*
+/// compiled plan, so arena ranges agree by construction.
+pub fn run_socket_world_mode(
+    spec: &WorkloadSpec,
+    proto: Proto,
+    steps: u64,
+    deadline: Option<Duration>,
+    chaos: ChaosAction,
+    mode: PlanMode,
+) -> io::Result<WorldOutcome> {
     let procs = spec.procs();
-    let plan = spec.plan();
+    let plan = spec.plan_with(mode);
     let mesh = loopback_mesh(procs)?;
     let t0 = Instant::now();
     let results: Vec<Result<Option<RankResult>, StallError>> = std::thread::scope(|s| {
@@ -774,7 +873,7 @@ pub fn run_socket_world(
                     let transport = SocketTransport::new(rank, plan, row, deadline)
                         .map_err(|e| io_stall(rank, &e))?;
                     let ch = if rank == procs - 1 { chaos } else { ChaosAction::None };
-                    run_rank(&spec, proto, steps, transport, &ch)
+                    run_rank(&spec, plan, proto, steps, transport, &ch)
                 })
             })
             .collect();
@@ -821,6 +920,8 @@ pub struct LaunchConfig {
     /// Per-wait stall deadline shipped to every worker.
     pub deadline: Duration,
     pub chaos: ChaosAction,
+    /// Which plan variant every rank compiles and runs (`--plan`).
+    pub plan_mode: PlanMode,
     /// Verify fields and counters bitwise against [`run_reference`].
     pub verify: bool,
 }
@@ -858,14 +959,15 @@ pub fn cmd_launch(cfg: &LaunchConfig) -> anyhow::Result<()> {
     let spec = WorkloadSpec::for_name(&cfg.workload, cfg.procs).ok_or_else(|| {
         anyhow!("unknown workload '{}' (expected one of {:?})", cfg.workload, WORKLOADS)
     })?;
-    let plan = spec.plan();
+    let plan = spec.plan_with(cfg.plan_mode);
     let fp = plan.fingerprint();
     println!(
-        "launch: {} / {} x{} over {} procs, plan {:016x} ({} values, {} msgs per epoch)",
+        "launch: {} / {} x{} over {} procs, {} plan {:016x} ({} values, {} msgs per epoch)",
         spec.name(),
         cfg.proto.name(),
         cfg.steps,
         cfg.procs,
+        cfg.plan_mode.name(),
         fp,
         plan.total_values(),
         plan.num_messages()
@@ -912,6 +1014,7 @@ pub fn cmd_launch(cfg: &LaunchConfig) -> anyhow::Result<()> {
     base.set("deadline_ms", Value::Num(cfg.deadline.as_millis() as f64));
     base.set("plan", plan.to_json());
     base.set("plan_fp", Value::Str(format!("{fp:016x}")));
+    base.set("plan_mode", Value::Str(cfg.plan_mode.name().into()));
     base.set("addrs", Value::Arr(addrs.iter().map(|a| Value::Str(a.clone())).collect()));
     for (r, conn) in conns.iter_mut().enumerate() {
         let chaos = if r == cfg.procs - 1 { cfg.chaos } else { ChaosAction::None };
@@ -1000,7 +1103,7 @@ fn evaluate_launch(
                 cfg.procs
             );
             if cfg.verify {
-                let reference = run_reference(spec, cfg.proto, cfg.steps);
+                let reference = run_reference_mode(spec, cfg.proto, cfg.steps, cfg.plan_mode);
                 ensure!(
                     bytes == reference.bytes,
                     "payload bytes diverge: sockets {bytes} vs in-process {}",
@@ -1122,10 +1225,19 @@ fn worker_run(rank: usize, procs: usize, connect: &str) -> anyhow::Result<()> {
         Some(c) => ChaosAction::from_json(c)?,
         None => ChaosAction::None,
     };
+    let plan_mode = match v.get("plan_mode") {
+        None => PlanMode::Compiled,
+        Some(m) => m
+            .as_str()
+            .and_then(PlanMode::parse)
+            .ok_or_else(|| anyhow!("spec: bad plan_mode"))?,
+    };
 
     // The shipped plan must be intact (fingerprint check) *and* agree with
-    // the plan this rank would compile from the spec itself — any drift
-    // between worlds is a protocol error, not a numerics error.
+    // the plan this rank would compile from the spec itself under the same
+    // mode — any drift between worlds (including an optimizer that is not
+    // deterministic across processes) is a protocol error, not a numerics
+    // error.
     let fp_hex = v.get("plan_fp").and_then(Value::as_str).ok_or_else(|| anyhow!("no plan_fp"))?;
     let shipped_fp = u64::from_str_radix(fp_hex, 16)?;
     let shipped_plan = ExchangePlan::from_json(v.get("plan").ok_or_else(|| anyhow!("no plan"))?)
@@ -1136,10 +1248,11 @@ fn worker_run(rank: usize, procs: usize, connect: &str) -> anyhow::Result<()> {
         shipped_plan.fingerprint(),
         shipped_fp
     );
-    let local_fp = spec.plan().fingerprint();
+    let local_fp = spec.plan_with(plan_mode).fingerprint();
     ensure!(
         local_fp == shipped_fp,
-        "plan drift: locally compiled {local_fp:016x} vs shipped {shipped_fp:016x}"
+        "plan drift: locally compiled {} plan {local_fp:016x} vs shipped {shipped_fp:016x}",
+        plan_mode.name()
     );
     let addrs: Vec<String> = v
         .get("addrs")
@@ -1174,7 +1287,7 @@ fn worker_run(rank: usize, procs: usize, connect: &str) -> anyhow::Result<()> {
     }
 
     let transport = SocketTransport::new(rank, &shipped_plan, row, Some(deadline))?;
-    match run_rank(&spec, proto, steps, transport, &chaos) {
+    match run_rank(&spec, &shipped_plan, proto, steps, transport, &chaos) {
         Ok(Some(rr)) => {
             let mut res = Value::obj();
             res.set("status", Value::Str("ok".into()));
@@ -1365,6 +1478,40 @@ mod tests {
         assert!(ChaosAction::KillAt(3).fire(2));
         assert!(!ChaosAction::KillAt(3).fire(3));
         assert!(ChaosAction::SlowAt(2, Duration::ZERO).fire(2));
+    }
+
+    #[test]
+    fn plan_mode_variants_compile() {
+        for m in PlanMode::ALL {
+            assert_eq!(PlanMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(PlanMode::parse("opt"), Some(PlanMode::Optimized));
+        assert_eq!(PlanMode::parse("bogus"), None);
+        // SpMV: the analyzer's plan is already condensed, so optimizing it
+        // is a no-op, the raw plan is strictly bigger, and optimizing the
+        // raw plan converges back to the compiled one.
+        let spec = WorkloadSpec::for_name("spmv", 3).unwrap();
+        let compiled = spec.plan();
+        let raw = spec.plan_with(PlanMode::Raw);
+        let opt = spec.plan_with(PlanMode::Optimized);
+        assert!(raw.total_values() > compiled.total_values());
+        assert_eq!(opt.fingerprint(), compiled.fingerprint());
+        assert_eq!(
+            PlanOptimizer::default().optimize(&raw).fingerprint(),
+            compiled.fingerprint()
+        );
+        // Strided workloads: all three variants carry the same payload per
+        // step; the raw one pays one message per cell.
+        for name in ["heat", "stencil"] {
+            let spec = WorkloadSpec::for_name(name, 2).unwrap();
+            let compiled = spec.plan();
+            let raw = spec.plan_with(PlanMode::Raw);
+            let opt = spec.plan_with(PlanMode::Optimized);
+            assert_eq!(raw.payload_bytes(), compiled.payload_bytes(), "{name}");
+            assert_eq!(opt.payload_bytes(), compiled.payload_bytes(), "{name}");
+            assert_eq!(raw.num_messages(), compiled.total_values(), "{name}");
+            assert!(opt.num_messages() <= compiled.num_messages(), "{name}");
+        }
     }
 
     #[test]

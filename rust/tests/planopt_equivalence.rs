@@ -1,0 +1,170 @@
+//! Plan-optimizer equivalence (the condensing/consolidation acceptance
+//! gate).
+//!
+//! One workload, three plan variants — raw per-element
+//! ([`PlanMode::Raw`]), compiled ([`PlanMode::Compiled`]), and optimizer
+//! output ([`PlanMode::Optimized`]) — must produce bitwise-identical fields
+//! under every protocol in both the in-process reference and the loopback
+//! socket world. The optimizer may only change message granularity,
+//! duplication, and arena order: [`PlanStats`] must strictly improve on the
+//! irregular SpMV gather, and a checkpoint taken under one plan variant
+//! must be rejected when restored under another (the fingerprint is part of
+//! the snapshot contract).
+
+use std::time::Duration;
+use upcsim::comm::{PlanOptimizer, PlanStats};
+use upcsim::engine::Engine;
+use upcsim::heat2d::Heat2dSolver;
+use upcsim::transport::{
+    run_reference_mode, run_socket_world_mode, ChaosAction, PlanMode, Proto, WorkloadSpec,
+    WORKLOADS,
+};
+
+fn field_bits(fields: &[Vec<f64>]) -> Vec<Vec<u64>> {
+    fields.iter().map(|f| f.iter().map(|v| v.to_bits()).collect()).collect()
+}
+
+/// Every plan variant, in both memory worlds, against the compiled
+/// in-process reference: fields bitwise, wire counters consistent between
+/// the worlds running the *same* variant.
+fn assert_mode_worlds_match(name: &str, procs: usize, proto: Proto, steps: u64) {
+    let spec = WorkloadSpec::for_name(name, procs).unwrap();
+    let deadline = Some(Duration::from_secs(30));
+    let reference = run_reference_mode(&spec, proto, steps, PlanMode::Compiled);
+    let mut bytes_by_mode = Vec::new();
+    for mode in [PlanMode::Raw, PlanMode::Optimized] {
+        let inproc = run_reference_mode(&spec, proto, steps, mode);
+        assert_eq!(
+            field_bits(&inproc.fields),
+            field_bits(&reference.fields),
+            "{name}/{}/{}: in-process fields diverged from the compiled plan",
+            proto.name(),
+            mode.name()
+        );
+        let socket = run_socket_world_mode(&spec, proto, steps, deadline, ChaosAction::None, mode)
+            .unwrap_or_else(|e| panic!("{name}/{}/{}: socket world: {e}", proto.name(), mode.name()));
+        assert!(
+            socket.stalls.is_empty() && socket.killed.is_empty(),
+            "{name}/{}/{}: unexpected stalls {:?}",
+            proto.name(),
+            mode.name(),
+            socket.stalls
+        );
+        assert_eq!(
+            field_bits(&socket.fields),
+            field_bits(&reference.fields),
+            "{name}/{}/{}: socket fields diverged from the compiled plan",
+            proto.name(),
+            mode.name()
+        );
+        // The wire counters are a property of the plan variant, not of the
+        // memory world carrying it.
+        assert_eq!(socket.bytes, inproc.bytes, "{name}/{}/{}", proto.name(), mode.name());
+        assert_eq!(socket.transfers, inproc.transfers, "{name}/{}/{}", proto.name(), mode.name());
+        bytes_by_mode.push(inproc.bytes);
+    }
+    assert!(
+        bytes_by_mode[1] <= bytes_by_mode[0],
+        "{name}/{}: the optimized plan moved more bytes ({}) than the raw one ({})",
+        proto.name(),
+        bytes_by_mode[1],
+        bytes_by_mode[0]
+    );
+}
+
+/// All workloads x all protocols x {raw, optimized} x {inproc, socket}.
+#[test]
+fn optimized_and_raw_worlds_match_reference_bitwise() {
+    for name in WORKLOADS {
+        for proto in Proto::ALL {
+            assert_mode_worlds_match(name, 2, proto, 3);
+        }
+    }
+}
+
+/// A wider mesh routes consolidated messages through different stream
+/// pairs; the pipelined protocol adds the depth-2 ack window on top.
+#[test]
+fn three_rank_pipelined_optimized_worlds_match() {
+    for name in WORKLOADS {
+        assert_mode_worlds_match(name, 3, Proto::Pipeline, 4);
+    }
+}
+
+/// On the irregular SpMV gather the optimizer must strictly improve every
+/// [`PlanStats`] axis that condensing targets, and its output must be the
+/// very plan the inspector's analysis compiles (fingerprint-equal).
+#[test]
+fn planstats_strictly_improve_on_spmv() {
+    let spec = WorkloadSpec::for_name("spmv", 3).unwrap();
+    let raw = spec.plan_with(PlanMode::Raw);
+    let compiled = spec.plan_with(PlanMode::Compiled);
+    let optimized = spec.plan_with(PlanMode::Optimized);
+    let before = PlanStats::of(&raw);
+    let after = PlanStats::of(&optimized);
+    assert!(after.improves_on(&before), "{before:?} -> {after:?}");
+    assert!(after.messages < before.messages, "{before:?} -> {after:?}");
+    assert!(after.values < before.values, "duplicates must be condensed away");
+    assert!(after.payload_bytes < before.payload_bytes);
+    assert!(after.index_arena_bytes < before.index_arena_bytes);
+    assert_eq!(
+        optimized.fingerprint(),
+        compiled.fingerprint(),
+        "optimizing the raw gather must land on the analysis-compiled plan"
+    );
+    // Optimizing an already-condensed plan changes nothing (idempotence).
+    let twice = PlanOptimizer::default().optimize(&optimized);
+    assert_eq!(twice.fingerprint(), optimized.fingerprint());
+}
+
+/// The grid workloads carry no duplicates, so the optimizer's win is pure
+/// consolidation: same payload, no more messages than the hand-written
+/// plan, and never worse statistics than the raw per-element form.
+#[test]
+fn grid_consolidation_preserves_payload_and_reduces_messages() {
+    for name in ["heat", "stencil"] {
+        let spec = WorkloadSpec::for_name(name, 3).unwrap();
+        let raw = PlanStats::of(&spec.plan_with(PlanMode::Raw));
+        let compiled = spec.plan_with(PlanMode::Compiled);
+        let optimized = spec.plan_with(PlanMode::Optimized);
+        let after = PlanStats::of(&optimized);
+        assert!(after.improves_on(&raw), "{name}: {raw:?} -> {after:?}");
+        assert_eq!(after.payload_bytes, raw.payload_bytes, "{name}: consolidation moves no data");
+        assert!(after.messages < raw.messages, "{name}");
+        assert!(
+            optimized.num_messages() <= compiled.num_messages(),
+            "{name}: optimizer may not fragment the hand-written plan"
+        );
+    }
+}
+
+/// A checkpoint snapshots the plan fingerprint; restoring it into a solver
+/// running a *different* plan variant must fail loudly, and restoring into
+/// the same variant must round-trip.
+#[test]
+fn checkpoint_from_raw_plan_is_rejected_by_optimized_solver() {
+    let spec = WorkloadSpec::for_name("heat", 2).unwrap();
+    let WorkloadSpec::Heat { grid, .. } = spec else {
+        panic!("heat spec")
+    };
+    let global: Vec<f64> = (0..grid.m_glob * grid.n_glob).map(|i| i as f64).collect();
+    let raw = spec.plan_with(PlanMode::Raw).as_strided().unwrap().clone();
+    let optimized = spec.plan_with(PlanMode::Optimized).as_strided().unwrap().clone();
+    assert_ne!(raw.fingerprint(), optimized.fingerprint());
+
+    let mut raw_solver = Heat2dSolver::with_plan(grid, &global, raw);
+    raw_solver.step_with(Engine::Sequential);
+    let ck = raw_solver.checkpoint(1);
+
+    let mut opt_solver = Heat2dSolver::with_plan(grid, &global, optimized);
+    let err = opt_solver.restore(&ck).expect_err("cross-plan restore must be rejected");
+    assert!(err.contains("plan"), "error should name the plan mismatch: {err}");
+
+    // Same-variant restore still round-trips.
+    let mut raw_solver2 = Heat2dSolver::with_plan(
+        grid,
+        &global,
+        spec.plan_with(PlanMode::Raw).as_strided().unwrap().clone(),
+    );
+    assert_eq!(raw_solver2.restore(&ck), Ok(1));
+}
