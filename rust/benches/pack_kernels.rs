@@ -1,0 +1,210 @@
+//! Criterion-lite bench: the kernel tier vs its scalar references, fused
+//! boundary compute vs the separate unpack + boundary sweeps, and the
+//! depth-D pipeline sweep.
+//!
+//! Emits `BENCH_simd.json` at the repo root:
+//!
+//! * indexed gather (pack), indexed scatter (unpack) and contiguous block
+//!   copy medians, tuned kernel vs the scalar element loop the runtimes
+//!   used before the kernel tier — `speedup_pack` / `speedup_unpack` are
+//!   the headline numbers the CI gate checks against `speedup_target`;
+//! * a fused heat-2D step ([`Heat2dSolver::step_fused`]) vs the plain
+//!   split-phase step on the sequential engine;
+//! * heat-2D pipelined per-step medians at buffer depth D ∈ {1..4}
+//!   (parallel engine, one 8-step batch per sample).
+//!
+//! The index list mirrors the `repro calibrate` pack probe: shuffled
+//! within 64-element windows, monotone across windows — irregular like a
+//! compiled halo plan, not a pure stream. Build with `--features simd` to
+//! widen the kernels' unroll from 4 to 8 lanes; the JSON records which
+//! shape ran.
+
+use upcsim::benchlib::{BenchConfig, Bencher};
+use upcsim::engine::{kernels, Engine};
+use upcsim::heat2d::Heat2dSolver;
+use upcsim::model::HeatGrid;
+use upcsim::util::json::Value;
+use upcsim::util::Rng;
+
+/// Window-shuffled monotone index list, same shape as
+/// `microbench::pack_bandwidth_host`.
+fn plan_indices(elems: usize, seed: u64) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..elems as u32).collect();
+    let mut rng = Rng::new(seed);
+    for window in idx.chunks_mut(64) {
+        for i in (1..window.len()).rev() {
+            let j = rng.usize_in(0, i);
+            window.swap(i, j);
+        }
+    }
+    idx
+}
+
+fn main() {
+    let mut b = Bencher::from_args(BenchConfig::default());
+    let mut entries: Vec<(String, f64)> = Vec::new();
+    let record = |entries: &mut Vec<(String, f64)>, name: &str, p50: Option<f64>| {
+        if let Some(p50) = p50 {
+            entries.push((name.to_string(), p50));
+        }
+    };
+
+    // --- gather / scatter / block copy: kernel vs scalar ------------------
+    let elems = 1usize << 20;
+    let idx = plan_indices(elems, 0x9AC4_BA4D);
+    let src: Vec<f64> = (0..elems).map(|i| i as f64).collect();
+    let mut dst = vec![0.0f64; elems];
+    // One load + one store of 8 B per element, per pass.
+    let pass_bytes = (elems * 16) as f64;
+
+    // Sanity first: the tuned loops are bitwise-identical to the scalar
+    // references on this very operand set.
+    {
+        let mut a = vec![0.0f64; elems];
+        let mut c = vec![0.0f64; elems];
+        kernels::pack_gather(&src, &idx, &mut a);
+        kernels::pack_gather_scalar(&src, &idx, &mut c);
+        assert!(a.iter().zip(&c).all(|(x, y)| x.to_bits() == y.to_bits()), "gather diverged");
+        let mut a2 = vec![0.0f64; elems];
+        let mut c2 = vec![0.0f64; elems];
+        kernels::scatter_indexed(&mut a2, &idx, &a);
+        kernels::scatter_indexed_scalar(&mut c2, &idx, &c);
+        assert!(a2.iter().zip(&c2).all(|(x, y)| x.to_bits() == y.to_bits()), "scatter diverged");
+    }
+
+    for (name, scalar) in [("pack-gather/kernel", false), ("pack-gather/scalar", true)] {
+        let r = b.bench_bytes(name, pass_bytes, || {
+            if scalar {
+                kernels::pack_gather_scalar(&src, &idx, &mut dst);
+            } else {
+                kernels::pack_gather(&src, &idx, &mut dst);
+            }
+            std::hint::black_box(&dst[elems - 1]);
+        });
+        record(&mut entries, name, r.map(|r| r.time.p50));
+    }
+    for (name, scalar) in [("unpack-scatter/kernel", false), ("unpack-scatter/scalar", true)] {
+        let r = b.bench_bytes(name, pass_bytes, || {
+            if scalar {
+                kernels::scatter_indexed_scalar(&mut dst, &idx, &src);
+            } else {
+                kernels::scatter_indexed(&mut dst, &idx, &src);
+            }
+            std::hint::black_box(&dst[elems - 1]);
+        });
+        record(&mut entries, name, r.map(|r| r.time.p50));
+    }
+    for (name, scalar) in [("block-copy/kernel", false), ("block-copy/scalar", true)] {
+        let r = b.bench_bytes(name, pass_bytes, || {
+            if scalar {
+                kernels::copy_block_scalar(&src, &mut dst);
+            } else {
+                kernels::copy_block(&src, &mut dst);
+            }
+            std::hint::black_box(&dst[elems - 1]);
+        });
+        record(&mut entries, name, r.map(|r| r.time.p50));
+    }
+
+    // --- fused boundary compute vs plain split-phase ----------------------
+    let (mg, ng, mp, np) = (384usize, 384usize, 2usize, 2usize);
+    let grid = HeatGrid::new(mg, ng, mp, np);
+    let mut rng = Rng::new(42);
+    let f0: Vec<f64> = (0..mg * ng).map(|_| rng.f64_in(0.0, 100.0)).collect();
+    {
+        let mut plain = Heat2dSolver::new(grid, &f0);
+        plain.step_with(Engine::Sequential);
+        let name = format!("heat2d/plain-seq/{mg}x{ng}");
+        let r = b.bench(&name, || {
+            plain.step_with(Engine::Sequential);
+            std::hint::black_box(&plain.inter_thread_bytes);
+        });
+        record(&mut entries, &name, r.map(|r| r.time.p50));
+        let mut fused = Heat2dSolver::new(grid, &f0);
+        fused.step_fused();
+        let name = format!("heat2d/fused-seq/{mg}x{ng}");
+        let r = b.bench(&name, || {
+            fused.step_fused();
+            std::hint::black_box(&fused.inter_thread_bytes);
+        });
+        record(&mut entries, &name, r.map(|r| r.time.p50));
+    }
+
+    // --- pipelined per-step medians across buffer depths ------------------
+    const PIPE: usize = 8;
+    let mut depth_rows: Vec<(usize, f64)> = Vec::new();
+    for depth in [1usize, 2, 3, 4] {
+        let mut solver = Heat2dSolver::new(grid, &f0);
+        solver.set_depth(depth);
+        solver.run_pipelined_with(Engine::Parallel, PIPE);
+        let name = format!("heat2d/pipeline-d{depth}/{mg}x{ng}");
+        let r = b
+            .bench(&name, || {
+                solver.run_pipelined_with(Engine::Parallel, PIPE);
+                std::hint::black_box(&solver.inter_thread_bytes);
+            })
+            .map(|r| r.time.p50 / PIPE as f64);
+        record(&mut entries, &name, r);
+        if let Some(p50) = r {
+            depth_rows.push((depth, p50));
+        }
+    }
+
+    // --- BENCH_simd.json --------------------------------------------------
+    let median_of = |needle: &str| {
+        entries.iter().find(|(n, _)| n.starts_with(needle)).map(|&(_, p50)| p50)
+    };
+    let mut root = Value::obj();
+    root.set("bench", Value::Str("pack_kernels".to_string()));
+    root.set("elems", Value::Num(elems as f64));
+    root.set("lanes", Value::Num(kernels::LANES as f64));
+    root.set("simd_feature", Value::Bool(cfg!(feature = "simd")));
+    root.set("speedup_target", Value::Num(1.2));
+    let mut results = Vec::new();
+    for (name, p50) in &entries {
+        let mut o = Value::obj();
+        o.set("name", Value::Str(name.clone()));
+        o.set("median_ns_per_iter", Value::Num((p50 * 1e9).round()));
+        results.push(o);
+    }
+    root.set("results", Value::Arr(results));
+    println!();
+    for (key, kernel, scalar) in [
+        ("speedup_pack", "pack-gather/kernel", "pack-gather/scalar"),
+        ("speedup_unpack", "unpack-scatter/kernel", "unpack-scatter/scalar"),
+        ("speedup_copy", "block-copy/kernel", "block-copy/scalar"),
+    ] {
+        if let (Some(k), Some(s)) = (median_of(kernel), median_of(scalar)) {
+            root.set(key, Value::Num(s / k));
+            println!("{key}: kernel vs scalar = {:.2}x", s / k);
+        }
+    }
+    if let (Some(plain), Some(fused)) =
+        (median_of("heat2d/plain-seq"), median_of("heat2d/fused-seq"))
+    {
+        root.set("speedup_fused", Value::Num(plain / fused));
+        println!("speedup_fused: fused vs plain split-phase = {:.2}x", plain / fused);
+    }
+    if !depth_rows.is_empty() {
+        let mut arr = Vec::new();
+        let (mut best_d, mut best_t) = (0usize, f64::INFINITY);
+        for &(depth, p50) in &depth_rows {
+            let mut o = Value::obj();
+            o.set("depth", Value::Num(depth as f64));
+            o.set("median_ns_per_step", Value::Num((p50 * 1e9).round()));
+            arr.push(o);
+            if p50 < best_t {
+                best_t = p50;
+                best_d = depth;
+            }
+        }
+        root.set("depth_sweep", Value::Arr(arr));
+        root.set("best_depth", Value::Num(best_d as f64));
+        println!("best pipeline depth on this host: D = {best_d}");
+    }
+    if !entries.is_empty() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_simd.json");
+        upcsim::benchlib::save_bench_json(path, "pack kernel medians", &root);
+    }
+    b.finish();
+}

@@ -14,12 +14,89 @@ use std::time::{Duration, Instant};
 /// Every bench and validation artifact goes through here so the emission
 /// protocol (pretty JSON, one `[<label> saved to <path>]` confirmation
 /// line, a warning instead of a panic on an unwritable checkout) cannot
-/// drift between emitters.
+/// drift between emitters. Object documents are stamped with a
+/// [`provenance`] block (git SHA, hardware-source label, UTC timestamp)
+/// unless the emitter already set one, so any two artifacts can be
+/// compared knowing what code and machine produced them.
 pub fn save_bench_json(path: &str, label: &str, root: &Value) {
-    match std::fs::write(path, root.pretty()) {
+    let mut doc = root.clone();
+    if matches!(doc, Value::Obj(_)) && doc.get("provenance").is_none() {
+        doc.set("provenance", provenance());
+    }
+    match std::fs::write(path, doc.pretty()) {
         Ok(()) => println!("[{label} saved to {path}]"),
         Err(e) => eprintln!("warning: cannot write {path}: {e}"),
     }
+}
+
+/// The provenance block stamped into every artifact: the checkout's git
+/// SHA (`null` outside a git checkout or without a `git` binary), the
+/// hardware-source label the run was parameterized with (`UPCSIM_HW`,
+/// same grammar as `--hw`), the build target, and a UTC wall-clock
+/// timestamp. All best-effort — a missing tool degrades a field, never
+/// the artifact.
+pub fn provenance() -> Value {
+    let mut o = Value::obj();
+    o.set(
+        "git_sha",
+        match git_head_sha() {
+            Some(sha) => Value::Str(sha),
+            None => Value::Null,
+        },
+    );
+    let hw = crate::machine::HwSource::from_env()
+        .map(|s| s.label())
+        .unwrap_or_else(|_| "unknown".to_string());
+    o.set("hw", Value::Str(hw));
+    o.set(
+        "target",
+        Value::Str(format!("{}-{}", std::env::consts::ARCH, std::env::consts::OS)),
+    );
+    o.set("timestamp_utc", Value::Str(utc_now_iso8601()));
+    o
+}
+
+fn git_head_sha() -> Option<String> {
+    let out = std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let sha = String::from_utf8(out.stdout).ok()?;
+    let sha = sha.trim();
+    (!sha.is_empty()).then(|| sha.to_string())
+}
+
+/// `YYYY-MM-DDTHH:MM:SSZ` from the system clock, without a date crate.
+fn utc_now_iso8601() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (y, m, d) = civil_from_days((secs / 86_400) as i64);
+    let tod = secs % 86_400;
+    format!(
+        "{y:04}-{m:02}-{d:02}T{:02}:{:02}:{:02}Z",
+        tod / 3600,
+        (tod % 3600) / 60,
+        tod % 60
+    )
+}
+
+/// Days-since-epoch → proleptic Gregorian civil date (Howard Hinnant's
+/// `civil_from_days` algorithm).
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32;
+    (yoe + era * 400 + i64::from(m <= 2), m, d)
 }
 
 /// Configuration for a benchmark run.
@@ -236,6 +313,46 @@ mod tests {
             std::hint::black_box(0u64);
         });
         assert!(b.results()[0].throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn civil_date_known_values() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(11_016), (2000, 2, 29)); // leap day
+        assert_eq!(civil_from_days(11_017), (2000, 3, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1));
+    }
+
+    #[test]
+    fn provenance_block_is_complete() {
+        let p = provenance();
+        // git_sha is best-effort (Null outside a checkout), the rest is
+        // always present.
+        assert!(p.get("git_sha").is_some());
+        let ts = p.get("timestamp_utc").unwrap().as_str().unwrap();
+        assert_eq!(ts.len(), 20, "{ts}");
+        assert!(ts.ends_with('Z') && ts.contains('T'), "{ts}");
+        assert!(ts.starts_with("20"), "{ts}"); // this decade, give or take
+        assert!(!p.get("hw").unwrap().as_str().unwrap().is_empty());
+        assert!(!p.get("target").unwrap().as_str().unwrap().is_empty());
+    }
+
+    #[test]
+    fn save_stamps_provenance_once() {
+        let path = std::env::temp_dir().join(format!("upcsim_prov_{}.json", std::process::id()));
+        let mut root = Value::obj();
+        root.set("bench", Value::Str("unit".into()));
+        save_bench_json(path.to_str().unwrap(), "unit", &root);
+        let doc = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(doc.get("provenance").is_some(), "artifact not stamped");
+        assert!(doc.get("provenance").unwrap().get("timestamp_utc").is_some());
+        // An emitter-provided block wins over the automatic stamp.
+        let mut custom = Value::obj();
+        custom.set("provenance", Value::Str("mine".into()));
+        save_bench_json(path.to_str().unwrap(), "unit", &custom);
+        let doc = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("provenance").unwrap().as_str().unwrap(), "mine");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -55,6 +55,10 @@ pub struct RunConfig {
     /// Execution engine for the numeric time loop (native backend only —
     /// the PJRT backend always runs on the sequential oracle path).
     pub engine: Engine,
+    /// Pipeline depth D for the engine's buffered V3 exchange (staging
+    /// slots; the `e − D` ack-gate distance). Depth never changes numerics
+    /// — only how much sender/receiver skew the pipeline absorbs.
+    pub depth: usize,
     pub hw: HwParams,
     pub seed: u64,
 }
@@ -75,6 +79,7 @@ impl RunConfig {
             ordering: Ordering::Natural,
             backend: Backend::Native,
             engine: Engine::Sequential,
+            depth: 2,
             hw: HwParams::abel(),
             seed: 0xC0FFEE,
         }
@@ -198,6 +203,7 @@ impl Runner {
             Backend::Pjrt => Engine::Sequential,
             Backend::Native => cfg.engine,
         });
+        engine.set_depth(cfg.depth.max(1));
         for _ in 0..cfg.exec_steps {
             let out = match &mut pjrt {
                 Some(p) => run_variant_with(cfg.variant, &mut state, Some(&analysis), p),
@@ -291,6 +297,22 @@ mod tests {
         assert_eq!(seq.checksum.to_bits(), par.checksum.to_bits());
         assert_eq!(seq.step_bytes, par.step_bytes);
         assert_eq!(seq.residuals, par.residuals);
+    }
+
+    #[test]
+    fn depth_does_not_change_numerics() {
+        let mesh = Runner::new(quick_config()).build_mesh();
+        let mut cfg = quick_config();
+        cfg.engine = Engine::Parallel;
+        let d2 = Runner::new(cfg).run_on(&mesh).unwrap();
+        for depth in [1, 3, 4] {
+            let mut cfg = quick_config();
+            cfg.engine = Engine::Parallel;
+            cfg.depth = depth;
+            let r = Runner::new(cfg).run_on(&mesh).unwrap();
+            assert_eq!(d2.checksum.to_bits(), r.checksum.to_bits(), "depth {depth}");
+            assert_eq!(d2.step_bytes, r.step_bytes, "depth {depth}");
+        }
     }
 
     #[test]

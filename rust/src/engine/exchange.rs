@@ -1,7 +1,7 @@
 //! The workload-agnostic exchange runtime: a compiled [`ExchangePlan`], its
-//! double-buffered staging arena, and a persistent [`WorkerPool`] —
-//! everything a grid/halo workload needs to execute time steps on either
-//! engine.
+//! depth-D buffered staging arena (depth 2 by default), and a persistent
+//! [`WorkerPool`] — everything a grid/halo workload needs to execute time
+//! steps on either engine.
 //!
 //! Three step protocols, all driven entirely by the plan:
 //!
@@ -31,11 +31,12 @@
 //! **one** pool dispatch. Fast threads start epoch `k+1` while slow peers
 //! finish epoch `k`; the only back-pressure is the consumed-epoch
 //! acknowledgment: before packing epoch `k` a sender waits until every one
-//! of its receivers has *unpacked* epoch `k − 2`, because that is when the
-//! arena half `k mod 2` was last read. This bounds any sender to at most 2
-//! epochs ahead of its slowest receiver — exactly the depth the
-//! double-buffered arena supports — and removes the per-step pool dispatch,
-//! the last global synchronization on the critical path.
+//! of its receivers has *unpacked* epoch `k − D`, because that is when the
+//! arena slot `k mod D` was last read (D = the configured pipeline depth,
+//! 2 by default). This bounds any sender to at most D epochs ahead of its
+//! slowest receiver — exactly the number of buffered arena slots — and
+//! removes the per-step pool dispatch, the last global synchronization on
+//! the critical path.
 //!
 //! On [`Engine::Sequential`] the phases are replayed on the calling thread
 //! (the correctness oracle); on [`Engine::Parallel`] each logical thread is
@@ -46,19 +47,22 @@
 //! synchronous one. None of them allocates or spawns anything per step:
 //! plan, arena, flags, acks and workers all persist.
 //!
-//! The staging arena is double-buffered receiver-major: epoch `k` packs
-//! into half `k mod 2`, so a sender beginning epoch `k+1` writes the other
-//! half and never overwrites slots a slow receiver is still reading from
-//! epoch `k`. Every protocol advances the epoch uniformly (a synchronous
-//! step too), so they can be mixed freely on one runtime without pairing a
-//! stale parity half with fresh flags.
+//! The staging arena is D-buffered receiver-major: epoch `k` packs into
+//! slot `k mod D`, so a sender beginning epoch `k+1` writes a different
+//! slot and never overwrites values a slow receiver is still reading from
+//! epoch `k` (for any D ≥ 2; a depth-1 arena serializes epochs through the
+//! ack gate instead). Every protocol advances the epoch uniformly (a
+//! synchronous step too), so they can be mixed freely on one runtime
+//! without pairing a stale parity slot with fresh flags.
 //!
 //! [`step_strided`]: ExchangeRuntime::step_strided
 //! [`step_overlapped`]: ExchangeRuntime::step_overlapped
 //! [`run_pipelined`]: ExchangeRuntime::run_pipelined
 
 use super::fault::FaultPlan;
-use super::pool::{ArenaView, EpochFlags, PerWorker, Phase, PoolHealth, WorkerCtx, WorkerPool};
+use super::pool::{
+    ArenaView, EpochFlags, PerWorker, Phase, PoolHealth, WaitTuning, WorkerCtx, WorkerPool,
+};
 use super::Engine;
 use crate::comm::ExchangePlan;
 use crate::transport::{must, PoolEndpoint, Transport};
@@ -77,9 +81,13 @@ use std::time::Duration;
 #[derive(Debug)]
 pub struct ExchangeRuntime {
     plan: ExchangePlan,
-    /// Double-buffered staging arena: `2 × plan.total_values()` doubles,
-    /// allocated once. Epoch `k` uses the half at `(k mod 2) · total`.
+    /// D-buffered staging arena: `depth × plan.total_values()` doubles,
+    /// allocated once. Epoch `k` uses the slot at `(k mod depth) · total`.
     staging: Vec<f64>,
+    /// Pipeline depth D: how many epochs' staging slots exist, and how far
+    /// a pipelined sender may run ahead of its slowest receiver. 2 by
+    /// default (the classic double buffer).
+    depth: usize,
     /// Long-lived workers; empty until the first parallel step.
     pool: WorkerPool,
     /// Per-thread published-epoch counters for the split-phase protocol.
@@ -100,7 +108,7 @@ pub struct ExchangeRuntime {
     receivers: Vec<Vec<u32>>,
     /// Diagnostics: the largest `published − consumed` distance any
     /// receiver ever observed against one of its senders (pipelined steps
-    /// only). The ack protocol bounds it by the pipeline depth, 2.
+    /// only). The ack protocol bounds it by the pipeline depth D.
     max_lead: AtomicU64,
     /// Injected faults consulted by the parallel protocol arms (empty by
     /// default — the hooks are length checks). The sequential oracle never
@@ -113,6 +121,16 @@ pub struct ExchangeRuntime {
 
 impl ExchangeRuntime {
     pub fn new(plan: impl Into<ExchangePlan>) -> ExchangeRuntime {
+        ExchangeRuntime::with_depth(plan, 2)
+    }
+
+    /// Like [`ExchangeRuntime::new`] but with an explicit pipeline depth D
+    /// (number of buffered staging slots; the pipelined ack gate waits on
+    /// epoch `e − D`). Depth 2 is the classic double buffer; depth 1
+    /// serializes epochs through the gate; deeper arenas absorb more
+    /// sender/receiver jitter at the cost of `D × total_values()` staging.
+    pub fn with_depth(plan: impl Into<ExchangePlan>, depth: usize) -> ExchangeRuntime {
+        assert!(depth >= 1, "pipeline depth must be at least 1");
         let plan = plan.into();
         debug_assert!(
             plan.validate(&|_| usize::MAX).is_ok(),
@@ -120,7 +138,7 @@ impl ExchangeRuntime {
             plan.validate(&|_| usize::MAX)
         );
         let threads = plan.threads();
-        let staging = vec![0.0f64; 2 * plan.total_values()];
+        let staging = vec![0.0f64; depth * plan.total_values()];
         let dedup_peers = |mut s: Vec<u32>| {
             s.sort_unstable();
             s.dedup();
@@ -146,6 +164,7 @@ impl ExchangeRuntime {
         ExchangeRuntime {
             plan,
             staging,
+            depth,
             pool: WorkerPool::new(),
             flags: EpochFlags::new(threads),
             acks: EpochFlags::new(threads),
@@ -160,6 +179,23 @@ impl ExchangeRuntime {
 
     pub fn plan(&self) -> &ExchangePlan {
         &self.plan
+    }
+
+    /// The configured pipeline depth D (buffered staging slots).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Reconfigure the pipeline depth between steps (resizes the staging
+    /// arena to `depth × total_values()`). Safe at any step boundary: the
+    /// staging contents are transient per epoch and `&mut self` guarantees
+    /// no dispatch is in flight. Epoch counters keep advancing monotonely,
+    /// so protocols stay mixable across the change.
+    pub fn set_depth(&mut self, depth: usize) {
+        assert!(depth >= 1, "pipeline depth must be at least 1");
+        self.depth = depth;
+        self.staging.clear();
+        self.staging.resize(depth * self.plan.total_values(), 0.0);
     }
 
     /// The distinct senders of thread `t` (the peers `finish_exchange`
@@ -183,8 +219,8 @@ impl ExchangeRuntime {
     /// Largest `published − consumed` epoch distance any receiver observed
     /// against one of its senders during pipelined steps. The consumed-epoch
     /// ack protocol bounds this by the pipeline depth: a sender packs epoch
-    /// `e` only after every receiver acked `e − 2`, so the lead never
-    /// exceeds 2.
+    /// `e` only after every receiver acked `e − D`, so the lead never
+    /// exceeds D.
     pub fn max_sender_lead(&self) -> u64 {
         self.max_lead.load(Ordering::Relaxed)
     }
@@ -228,6 +264,12 @@ impl ExchangeRuntime {
     /// The configured wait deadline.
     pub fn wait_deadline(&self) -> Option<Duration> {
         self.pool.wait_deadline()
+    }
+
+    /// Tune the spin → yield → timed-park wait ladder. See
+    /// [`WorkerPool::set_wait_tuning`].
+    pub fn set_wait_tuning(&mut self, tuning: WaitTuning) {
+        self.pool.set_wait_tuning(tuning);
     }
 
     /// Install a fault-injection plan consulted by the parallel protocol
@@ -279,10 +321,11 @@ impl ExchangeRuntime {
         assert_eq!(fields.len(), threads, "one field per thread");
         assert_eq!(out.len(), threads, "one output field per thread");
         let total = plan.total_values();
-        debug_assert_eq!(self.staging.len(), 2 * total);
+        let depth = self.depth;
+        debug_assert_eq!(self.staging.len(), depth * total);
         self.epoch += 1;
         let epoch = self.epoch;
-        let half = (epoch % 2) as usize * total;
+        let half = (epoch % depth as u64) as usize * total;
         match engine {
             Engine::Sequential => {
                 for (t, field) in fields.iter().enumerate() {
@@ -317,7 +360,7 @@ impl ExchangeRuntime {
                     // halved per epoch parity); packed by the sender only and
                     // read only after the barrier.
                     let mut ep =
-                        unsafe { PoolEndpoint::new(t, total, flags, acks, &arena, &ctx) };
+                        unsafe { PoolEndpoint::new(t, total, depth, flags, acks, &arena, &ctx) };
                     ctx.note_phase(Phase::Pack, epoch);
                     faults.on_phase(t, epoch, Phase::Pack);
                     // SAFETY: worker t claims only its own field/out pair.
@@ -378,11 +421,12 @@ impl ExchangeRuntime {
         assert_eq!(fields.len(), threads, "one field per thread");
         assert_eq!(out.len(), threads, "one output field per thread");
         let total = plan.total_values();
-        debug_assert_eq!(self.staging.len(), 2 * total);
+        let depth = self.depth;
+        debug_assert_eq!(self.staging.len(), depth * total);
         self.epoch += 1;
         let epoch = self.epoch;
-        // Double buffering: this epoch's receiver-major half.
-        let half = (epoch % 2) as usize * total;
+        // D-buffering: this epoch's receiver-major arena slot.
+        let half = (epoch % depth as u64) as usize * total;
         match engine {
             Engine::Sequential => {
                 for (t, field) in fields.iter().enumerate() {
@@ -421,7 +465,7 @@ impl ExchangeRuntime {
                     // per epoch parity; packed by the sender only, read only
                     // after the sender's epoch publish was observed.
                     let mut ep =
-                        unsafe { PoolEndpoint::new(t, total, flags, acks, &arena, &ctx) };
+                        unsafe { PoolEndpoint::new(t, total, depth, flags, acks, &arena, &ctx) };
                     ctx.note_phase(Phase::Pack, epoch);
                     faults.on_phase(t, epoch, Phase::Pack);
                     // SAFETY: worker t claims only its own field/out pair,
@@ -461,6 +505,82 @@ impl ExchangeRuntime {
         }
     }
 
+    /// One split-phase overlapped step with **unpack/compute fusion**, on
+    /// the sequential oracle engine: identical to the
+    /// [`Engine::Sequential`] arm of
+    /// [`step_overlapped`](ExchangeRuntime::step_overlapped), except each
+    /// received message is first offered to
+    /// `fuse(t, i, staged, field, out)` — `i` is the message's index in
+    /// `recv_msgs(t)` order and `staged` its packed values in this epoch's
+    /// arena slot. Returning `true` means the closure consumed the message:
+    /// it wrote the staged values into `field` *and* computed every `out`
+    /// cell that depends on them, in one pass (e.g.
+    /// [`kernels::fused_unpack_jacobi_row`]). Returning `false` falls back
+    /// to the plan's `unpack`. `boundary` then computes the residual
+    /// boundary cells — those no fused message covered — so interior ∪
+    /// fused ∪ residual must cover every owned cell exactly once with the
+    /// synchronous step's expression; then the step stays bitwise identical
+    /// to [`step_strided`](ExchangeRuntime::step_strided).
+    ///
+    /// Epoch/flag/ack bookkeeping matches `step_overlapped` exactly, so
+    /// fused steps mix freely with every other protocol on one runtime.
+    /// There is no parallel arm yet: the oracle defines the fused
+    /// semantics, and workloads fall back to `step_overlapped` on
+    /// [`Engine::Parallel`].
+    ///
+    /// [`kernels::fused_unpack_jacobi_row`]: crate::engine::kernels::fused_unpack_jacobi_row
+    pub fn step_overlapped_fused<UI, F, UB>(
+        &mut self,
+        fields: &mut [Vec<f64>],
+        out: &mut [Vec<f64>],
+        interior: UI,
+        fuse: F,
+        boundary: UB,
+    ) where
+        UI: Fn(usize, &mut [f64], &mut [f64]),
+        F: Fn(usize, usize, &[f64], &mut [f64], &mut [f64]) -> bool,
+        UB: Fn(usize, &mut [f64], &mut [f64]),
+    {
+        let plan = self
+            .plan
+            .as_strided()
+            .expect("step_overlapped_fused needs a strided exchange plan");
+        let threads = plan.threads();
+        assert_eq!(fields.len(), threads, "one field per thread");
+        assert_eq!(out.len(), threads, "one output field per thread");
+        let total = plan.total_values();
+        let depth = self.depth;
+        debug_assert_eq!(self.staging.len(), depth * total);
+        self.epoch += 1;
+        let epoch = self.epoch;
+        let half = (epoch % depth as u64) as usize * total;
+        for (t, field) in fields.iter().enumerate() {
+            for m in plan.send_msgs(t) {
+                let r = m.range();
+                m.pack(field, &mut self.staging[half + r.start..half + r.end]);
+            }
+            self.flags.publish(t, epoch);
+        }
+        for (t, (field, o)) in fields.iter_mut().zip(out.iter_mut()).enumerate() {
+            interior(t, field.as_mut_slice(), o.as_mut_slice());
+        }
+        // finish_exchange is trivially satisfied on one OS thread. Fusing
+        // the boundary compute into the unpack sweep is safe per thread:
+        // unpack reads only the (fully packed) staging arena and writes
+        // only t's own field, boundary reads only t's own pair.
+        for (t, (field, o)) in fields.iter_mut().zip(out.iter_mut()).enumerate() {
+            for (i, m) in plan.recv_msgs(t).enumerate() {
+                let r = m.range();
+                let staged = &self.staging[half + r.start..half + r.end];
+                if !fuse(t, i, staged, field.as_mut_slice(), o.as_mut_slice()) {
+                    m.unpack(staged, field);
+                }
+            }
+            self.acks.publish(t, epoch);
+            boundary(t, field.as_mut_slice(), o.as_mut_slice());
+        }
+    }
+
     /// The multi-step pipelined driver: run `steps` split-phase time steps
     /// inside **one** pool dispatch. No global barrier and no per-step
     /// dispatch remain on the hot path — a worker's only synchronization is
@@ -469,19 +589,19 @@ impl ExchangeRuntime {
     ///
     /// ```text
     /// per worker t, for each epoch e of the batch:
-    ///   ack gate   wait until every receiver of t acked epoch e − 2
-    ///              (the arena half of e was last drained at e − 2)
-    ///   begin      pack epoch e into arena half (e mod 2), publish flag
+    ///   ack gate   wait until every receiver of t acked epoch e − D
+    ///              (the arena slot of e was last drained at e − D)
+    ///   begin      pack epoch e into arena slot (e mod D), publish flag
     ///   overlap    interior compute of the step
     ///   finish     wait on t's senders' flags ≥ e, unpack, publish ack
     ///   boundary   boundary compute, flip (field, out) roles
     /// ```
     ///
-    /// The ack gate is what makes the depth-2 arena reuse sound *without*
+    /// The ack gate is what makes the depth-D arena reuse sound *without*
     /// re-synchronizing the pool: a fast sender may run ahead of its
-    /// slowest receiver, but by at most 2 epochs — exactly the number of
-    /// buffered halves. The first two epochs of a batch skip the gate (both
-    /// halves are quiescent at dispatch entry, since `run` only returns
+    /// slowest receiver, but by at most D epochs — exactly the number of
+    /// buffered slots. The first D epochs of a batch skip the gate (every
+    /// slot is quiescent at dispatch entry, since `run` only returns
     /// once every worker finished the previous batch), which also makes the
     /// driver robust to ack counters left stale by earlier single-step
     /// protocols.
@@ -517,7 +637,8 @@ impl ExchangeRuntime {
             return;
         }
         let total = plan.total_values();
-        debug_assert_eq!(self.staging.len(), 2 * total);
+        let depth = self.depth;
+        debug_assert_eq!(self.staging.len(), depth * total);
         match engine {
             Engine::Sequential => {
                 // The oracle is one overlapped step at a time — literally
@@ -550,7 +671,7 @@ impl ExchangeRuntime {
                     // tenant's reads before each overwrite, and unpacks only
                     // follow an observed epoch publish.
                     let mut ep =
-                        unsafe { PoolEndpoint::new(t, total, flags, acks, &arena, &ctx) };
+                        unsafe { PoolEndpoint::new(t, total, depth, flags, acks, &arena, &ctx) };
                     // SAFETY: worker t claims only its own field/out pair,
                     // exactly once per dispatch; the per-epoch role flip
                     // below only swaps which local name points where.
@@ -565,14 +686,14 @@ impl ExchangeRuntime {
                         let field = cur.as_mut_slice();
                         let o = nxt.as_mut_slice();
 
-                        // Ack gate: half (epoch mod 2) was last packed at
-                        // epoch − 2; every receiver must have drained it.
-                        // The first two epochs skip the gate — at dispatch
-                        // entry both halves are quiescent.
-                        if k > 2 {
+                        // Ack gate: slot (epoch mod D) was last packed at
+                        // epoch − D; every receiver must have drained it.
+                        // The first D epochs skip the gate — at dispatch
+                        // entry every slot is quiescent.
+                        if k > depth as u64 {
                             ctx.note_phase(Phase::AckGate, epoch);
                             for &r in &receivers[t] {
-                                must(ep.wait_for_ack(r as usize, epoch - 2));
+                                must(ep.wait_for_ack(r as usize, epoch - depth as u64));
                             }
                         }
 
@@ -606,7 +727,7 @@ impl ExchangeRuntime {
 
                         // Depth-bound diagnostic: how far ahead of this
                         // just-consumed epoch has any of t's senders
-                        // published? The ack protocol caps this at 2.
+                        // published? The ack protocol caps this at D.
                         for &peer in &senders[t] {
                             let lead = flags.load(peer as usize).saturating_sub(epoch);
                             local_lead = local_lead.max(lead);
@@ -646,6 +767,15 @@ mod tests {
             (1, 0, StridedBlock::row(1, 1), StridedBlock::row(5, 1)),
         ];
         ExchangeRuntime::new(StridedPlan::from_msgs(2, &copies))
+    }
+
+    /// [`ring_runtime`] with an explicit pipeline depth.
+    fn ring_runtime_depth(depth: usize) -> ExchangeRuntime {
+        let copies = vec![
+            (0usize, 1usize, StridedBlock::row(4, 1), StridedBlock::row(0, 1)),
+            (1, 0, StridedBlock::row(1, 1), StridedBlock::row(5, 1)),
+        ];
+        ExchangeRuntime::with_depth(StridedPlan::from_msgs(2, &copies), depth)
     }
 
     fn step(rt: &mut ExchangeRuntime, engine: Engine, fields: &mut [Vec<f64>]) -> Vec<Vec<f64>> {
@@ -736,6 +866,78 @@ mod tests {
     }
 
     #[test]
+    fn fused_step_matches_synchronous_bitwise() {
+        // The fused sequential step: each thread's single recv message
+        // (the neighbour ghost) is consumed by a closure that writes the
+        // ghost AND computes the dependent boundary cell in one pass; the
+        // other boundary cell stays in the residual closure. Must stay
+        // bitwise locked to the synchronous oracle — and with a
+        // never-consuming closure it must degenerate to step_overlapped.
+        let init = vec![
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 0.0],
+            vec![0.0, 5.0, 6.0, 7.0, 8.0, 0.0],
+        ];
+        let mut rt_sync = ring_runtime();
+        let mut rt_fused = ring_runtime();
+        let mut rt_fallback = ring_runtime();
+        let mut f_sync = init.clone();
+        let mut f_fused = init.clone();
+        let mut f_fallback = init;
+        let interior = |_t: usize, field: &mut [f64], out: &mut [f64]| {
+            for i in 2..4 {
+                out[i] = 0.5 * (field[i - 1] + field[i + 1]);
+            }
+        };
+        for s in 0..5 {
+            f_sync = step(&mut rt_sync, Engine::Sequential, &mut f_sync);
+
+            let mut o = f_fused.clone();
+            rt_fused.step_overlapped_fused(
+                &mut f_fused,
+                &mut o,
+                interior,
+                |t, _i, staged, field, out| {
+                    // Ghost write + the ghost-adjacent cell, one pass.
+                    if t == 0 {
+                        field[5] = staged[0];
+                        out[4] = 0.5 * (field[3] + field[5]);
+                    } else {
+                        field[0] = staged[0];
+                        out[1] = 0.5 * (field[0] + field[2]);
+                    }
+                    true
+                },
+                |t, field, out| {
+                    let i = if t == 0 { 1 } else { 4 };
+                    out[i] = 0.5 * (field[i - 1] + field[i + 1]);
+                },
+            );
+            f_fused = o;
+
+            let mut o = f_fallback.clone();
+            rt_fallback.step_overlapped_fused(
+                &mut f_fallback,
+                &mut o,
+                interior,
+                |_t, _i, _staged, _field, _out| false,
+                |_t, field, out| {
+                    for i in [1usize, 4] {
+                        out[i] = 0.5 * (field[i - 1] + field[i + 1]);
+                    }
+                },
+            );
+            f_fallback = o;
+
+            assert_eq!(f_sync, f_fused, "fused diverges at step {s}");
+            assert_eq!(f_sync, f_fallback, "fallback diverges at step {s}");
+        }
+        // Epoch/flag/ack bookkeeping advanced uniformly.
+        assert_eq!(rt_fused.epoch, 5);
+        assert_eq!(rt_fused.consumed_epoch(0), 5);
+        assert_eq!(rt_fused.published_epoch(1), 5);
+    }
+
+    #[test]
     fn senders_compiled_from_plan() {
         let rt = ring_runtime();
         assert_eq!(rt.senders_of(0), &[1]);
@@ -818,6 +1020,66 @@ mod tests {
         steps_pipelined(&mut rt, Engine::Parallel, 6, &mut f);
         assert_eq!(rt.dispatches(), before + 1, "one dispatch per batch");
         assert!(rt.max_sender_lead() <= 2, "lead {}", rt.max_sender_lead());
+    }
+
+    #[test]
+    fn depth_d_pipelines_match_synchronous_bitwise() {
+        // For every pipeline depth D ∈ {1,2,3,4}: a pipelined batch is
+        // bitwise identical to the synchronous oracle, the sender lead
+        // stays ≤ D, and the arena holds exactly D slots.
+        let init = vec![
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 0.0],
+            vec![0.0, 5.0, 6.0, 7.0, 8.0, 0.0],
+        ];
+        let steps = 7usize;
+        let mut rt_sync = ring_runtime();
+        let mut f_sync = init.clone();
+        for _ in 0..steps {
+            f_sync = step(&mut rt_sync, Engine::Sequential, &mut f_sync);
+        }
+        for depth in 1..=4usize {
+            for engine in Engine::ALL {
+                let mut rt = ring_runtime_depth(depth);
+                assert_eq!(rt.depth(), depth);
+                assert_eq!(rt.staging.len(), depth * rt.plan().total_values());
+                let mut f = init.clone();
+                steps_pipelined(&mut rt, engine, steps, &mut f);
+                assert_eq!(
+                    owned_cells(&f),
+                    owned_cells(&f_sync),
+                    "{} D={depth} diverged",
+                    engine.name()
+                );
+                assert!(
+                    rt.max_sender_lead() <= depth as u64,
+                    "D={depth} lead {}",
+                    rt.max_sender_lead()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn set_depth_reconfigures_between_batches() {
+        // Changing D at a batch boundary keeps the run bitwise locked to
+        // the synchronous oracle (epochs stay monotone; staging contents
+        // are transient per epoch).
+        let init = vec![
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 0.0],
+            vec![0.0, 5.0, 6.0, 7.0, 8.0, 0.0],
+        ];
+        let mut rt_sync = ring_runtime();
+        let mut f_sync = init.clone();
+        let mut rt = ring_runtime();
+        let mut f = init.clone();
+        for (depth, steps) in [(3usize, 4usize), (1, 2), (4, 5), (2, 3)] {
+            rt.set_depth(depth);
+            steps_pipelined(&mut rt, Engine::Parallel, steps, &mut f);
+            for _ in 0..steps {
+                f_sync = step(&mut rt_sync, Engine::Sequential, &mut f_sync);
+            }
+            assert_eq!(owned_cells(&f), owned_cells(&f_sync), "after D={depth}");
+        }
     }
 
     #[test]

@@ -1,0 +1,267 @@
+//! The kernel tier: specialized pack/unpack inner loops.
+//!
+//! Every exchanged byte in this repo flows through one of three loop
+//! shapes — a contiguous block copy (unit-stride halo rows/planes), an
+//! indexed gather (the V3 arena fill over `CommPlan::local_src`), or an
+//! indexed scatter (the V3 ghost write over `CommPlan::indices`). The
+//! protocol layers above (ExchangeRuntime, `ParallelPool::run_v3_*`, the
+//! socket frame pack) used to spell these as naive element loops; this
+//! module is the single home for their tuned forms, plus the scalar
+//! references they are benched and property-tested against.
+//!
+//! Tuning levers (all bitwise-neutral — a `f64` copy is a `f64` copy in
+//! any order):
+//!
+//! * **Contiguous fast path** — unit-stride blocks collapse to
+//!   `copy_from_slice` (LLVM lowers this to `memcpy` /
+//!   `copy_nonoverlapping`), the fastest bytes-per-cycle shape the host
+//!   offers.
+//! * **Unrolled, bounds-check-free gather/scatter** — the index slice is
+//!   validated against the operand length *once* up front, then the hot
+//!   loop runs `get_unchecked` in chunks of [`LANES`]. Hoisting the
+//!   bounds check out of the loop is what lets LLVM keep the loads
+//!   pipelined (and, for the gather, auto-vectorize the contiguous
+//!   stores).
+//! * **`simd` feature gate** — widens the unroll factor from 4 to 8
+//!   lanes, the shape that maps onto two 4-wide vector gathers on AVX2
+//!   class hardware. It is a plain cargo feature (no nightly APIs, no new
+//!   dependencies), so the default build stays exactly as portable as
+//!   before.
+//!
+//! The `repro calibrate` pack probe ([`crate::microbench`]) measures
+//! these kernels' streaming rates to calibrate `HwParams::w_pack`, and
+//! `benches/pack_kernels.rs` pins the speedup over the scalar references
+//! in `BENCH_simd.json`.
+
+/// Unroll width of the gather/scatter hot loops. 4 lanes by default (one
+/// AVX2 vector of `f64`); the `simd` feature doubles it to 8 so the
+/// compiler can emit two independent vector chains per iteration.
+#[cfg(not(feature = "simd"))]
+pub const LANES: usize = 4;
+/// Unroll width of the gather/scatter hot loops (8 under `--features
+/// simd`).
+#[cfg(feature = "simd")]
+pub const LANES: usize = 8;
+
+/// Validate that every index in `idx` addresses into `len`, returning the
+/// slice length. One pass up front buys `get_unchecked` in the hot loops.
+#[inline]
+fn check_indices(idx: &[u32], len: usize) {
+    // A single max over the indices is itself a vectorizable reduction —
+    // far cheaper than a bounds check per element in the gather loop.
+    let max = idx.iter().copied().max().unwrap_or(0) as usize;
+    assert!(
+        idx.is_empty() || max < len,
+        "index {max} out of bounds for operand of length {len}"
+    );
+}
+
+/// Gather `src[idx[i]]` into `dst[i]` — the pack loop of the V3 arena
+/// fill and of every gather-plan frame. `dst.len()` must equal
+/// `idx.len()`; indices are validated against `src` once, then the loop
+/// runs unchecked in [`LANES`]-wide chunks with contiguous stores (the
+/// store side auto-vectorizes; the load side pipelines).
+pub fn pack_gather(src: &[f64], idx: &[u32], dst: &mut [f64]) {
+    assert_eq!(idx.len(), dst.len(), "gather: index/destination length mismatch");
+    check_indices(idx, src.len());
+    let mut di = dst.chunks_exact_mut(LANES);
+    let mut ii = idx.chunks_exact(LANES);
+    for (d, ix) in (&mut di).zip(&mut ii) {
+        for l in 0..LANES {
+            // SAFETY: chunk shapes guarantee l < LANES elements exist on
+            // both sides; check_indices proved every idx < src.len().
+            unsafe {
+                *d.get_unchecked_mut(l) = *src.get_unchecked(*ix.get_unchecked(l) as usize);
+            }
+        }
+    }
+    for (d, &i) in di.into_remainder().iter_mut().zip(ii.remainder()) {
+        // SAFETY: check_indices proved i < src.len().
+        *d = unsafe { *src.get_unchecked(i as usize) };
+    }
+}
+
+/// Scalar reference for [`pack_gather`]: the exact element loop the V3
+/// runtimes used before the kernel tier. Kept for the equivalence
+/// property tests and as the `BENCH_simd.json` baseline.
+pub fn pack_gather_scalar(src: &[f64], idx: &[u32], dst: &mut [f64]) {
+    for (slot, &off) in dst.iter_mut().zip(idx) {
+        *slot = src[off as usize];
+    }
+}
+
+/// Scatter `vals[i]` into `dst[idx[i]]` — the V3 ghost write. Indices are
+/// validated once, then the loop runs unchecked in [`LANES`]-wide chunks
+/// (scattered stores do not vectorize, but hoisting the bounds check and
+/// unrolling keeps the store queue full).
+pub fn scatter_indexed(dst: &mut [f64], idx: &[u32], vals: &[f64]) {
+    assert_eq!(idx.len(), vals.len(), "scatter: index/value length mismatch");
+    check_indices(idx, dst.len());
+    let mut vi = vals.chunks_exact(LANES);
+    let mut ii = idx.chunks_exact(LANES);
+    for (v, ix) in (&mut vi).zip(&mut ii) {
+        for l in 0..LANES {
+            // SAFETY: chunk shapes guarantee l < LANES elements exist on
+            // both sides; check_indices proved every idx < dst.len().
+            unsafe {
+                *dst.get_unchecked_mut(*ix.get_unchecked(l) as usize) = *v.get_unchecked(l);
+            }
+        }
+    }
+    for (&v, &i) in vi.remainder().iter().zip(ii.remainder()) {
+        // SAFETY: check_indices proved i < dst.len().
+        unsafe { *dst.get_unchecked_mut(i as usize) = v };
+    }
+}
+
+/// Scalar reference for [`scatter_indexed`]: the exact element loop the
+/// V3 runtimes used before the kernel tier.
+pub fn scatter_indexed_scalar(dst: &mut [f64], idx: &[u32], vals: &[f64]) {
+    for (&gidx, &v) in idx.iter().zip(vals) {
+        dst[gidx as usize] = v;
+    }
+}
+
+/// Contiguous block copy — the unit-stride fast path of every strided
+/// pack/unpack and of the socket frame pack. `copy_from_slice` lowers to
+/// `ptr::copy_nonoverlapping` (memcpy), which is the speed-of-light shape
+/// for moving bytes on the host.
+#[inline]
+pub fn copy_block(src: &[f64], dst: &mut [f64]) {
+    dst.copy_from_slice(src);
+}
+
+/// Scalar reference for [`copy_block`]: the per-element loop, kept only
+/// as the bench baseline (`black_box` on the index keeps LLVM from
+/// rediscovering the memcpy).
+pub fn copy_block_scalar(src: &[f64], dst: &mut [f64]) {
+    assert_eq!(src.len(), dst.len());
+    for i in 0..src.len() {
+        dst[std::hint::black_box(i)] = src[i];
+    }
+}
+
+/// Fused unpack + 5-point boundary update for one ghost-adjacent halo
+/// row (the heat-2D fusion rule): in a single pass over the row, write
+/// the received ghost value into `phi[ghost_pos + c]` *and* compute the
+/// adjacent owned row `phin[row_pos + c] = 0.25 · (up + down + left +
+/// right)`, where one of up/down is the ghost value just written.
+///
+/// Bitwise equivalence with the two-pass form (unpack row, then Jacobi
+/// over it) holds because the arithmetic expression is identical — the
+/// fused kernel merely reads the ghost value from the register it is
+/// about to store instead of re-loading it from `phi`. `other_pos` is
+/// the row on the far side of the computed row from the ghost
+/// (`row_pos ± stride`), and the row spans `ghost.len()` interior
+/// columns starting at the given positions (so `phi[row_pos − 1]` and
+/// `phi[row_pos + len]` are the flanking column cells, already unpacked
+/// — the halo-plan copy order lands columns before rows).
+pub fn fused_unpack_jacobi_row(
+    ghost: &[f64],
+    phi: &mut [f64],
+    ghost_pos: usize,
+    row_pos: usize,
+    other_pos: usize,
+    phin: &mut [f64],
+) {
+    let len = ghost.len();
+    assert!(ghost_pos + len <= phi.len() && other_pos + len <= phi.len());
+    assert!(row_pos >= 1 && row_pos + len + 1 <= phi.len() && row_pos + len <= phin.len());
+    for c in 0..len {
+        let g = ghost[c];
+        phi[ghost_pos + c] = g;
+        phin[row_pos + c] =
+            0.25 * (g + phi[other_pos + c] + phi[row_pos + c - 1] + phi[row_pos + c + 1]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn field(n: usize) -> Vec<f64> {
+        (0..n).map(|i| (i as f64).sin() * 3.0 + i as f64 * 0.01).collect()
+    }
+
+    #[test]
+    fn gather_matches_scalar_bitwise() {
+        let src = field(257);
+        // Deliberately irregular indices, length not a multiple of LANES.
+        let idx: Vec<u32> = (0..131u32).map(|i| (i * 97 + 13) % 257).collect();
+        let mut fast = vec![0.0; idx.len()];
+        let mut slow = vec![0.0; idx.len()];
+        pack_gather(&src, &idx, &mut fast);
+        pack_gather_scalar(&src, &idx, &mut slow);
+        assert!(fast.iter().zip(&slow).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn scatter_matches_scalar_bitwise() {
+        let vals = field(131);
+        // Unique targets (a scatter with duplicate indices is order-
+        // dependent; the plans never produce duplicates within a message).
+        let mut idx: Vec<u32> = (0..131u32).map(|i| (i * 2 + 5) % 262).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        let vals = &vals[..idx.len()];
+        let mut fast = vec![0.0; 262];
+        let mut slow = vec![0.0; 262];
+        scatter_indexed(&mut fast, &idx, vals);
+        scatter_indexed_scalar(&mut slow, &idx, vals);
+        assert!(fast.iter().zip(&slow).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn empty_and_tiny_operands() {
+        let src = field(8);
+        let mut dst: Vec<f64> = vec![];
+        pack_gather(&src, &[], &mut dst);
+        let mut one = [0.0f64];
+        pack_gather(&src, &[7], &mut one);
+        assert_eq!(one[0].to_bits(), src[7].to_bits());
+        let mut out = vec![0.0; 8];
+        scatter_indexed(&mut out, &[3], &[42.0]);
+        assert_eq!(out[3], 42.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn gather_rejects_wild_index() {
+        let src = field(4);
+        let mut dst = [0.0f64; 1];
+        pack_gather(&src, &[9], &mut dst);
+    }
+
+    #[test]
+    fn copy_block_matches_scalar() {
+        let src = field(100);
+        let mut a = vec![0.0; 100];
+        let mut b = vec![0.0; 100];
+        copy_block(&src, &mut a);
+        copy_block_scalar(&src, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fused_row_matches_two_pass() {
+        // A 6×8 mini-grid: ghost row 0, computed row 1, other row 2.
+        let n = 8usize;
+        let base = field(6 * n);
+        let ghost: Vec<f64> = field(n - 2).iter().map(|v| v * 1.7).collect();
+
+        // Two-pass reference: unpack, then Jacobi over the row.
+        let mut phi_ref = base.clone();
+        let mut phin_ref = vec![0.0; 6 * n];
+        phi_ref[1..1 + ghost.len()].copy_from_slice(&ghost);
+        for c in 1..n - 1 {
+            phin_ref[n + c] = 0.25
+                * (phi_ref[c] + phi_ref[2 * n + c] + phi_ref[n + c - 1] + phi_ref[n + c + 1]);
+        }
+
+        let mut phi = base.clone();
+        let mut phin = vec![0.0; 6 * n];
+        fused_unpack_jacobi_row(&ghost, &mut phi, 1, n + 1, 2 * n + 1, &mut phin);
+        assert!(phi.iter().zip(&phi_ref).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(phin.iter().zip(&phin_ref).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+}

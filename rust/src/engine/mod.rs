@@ -35,6 +35,7 @@
 mod checkpoint;
 mod exchange;
 mod fault;
+pub mod kernels;
 mod parallel;
 mod pool;
 
@@ -45,8 +46,8 @@ pub use fault::{Fault, FaultKind, FaultPlan, INJECTED_DELAY};
 pub(crate) use parallel::compute_row_runs;
 pub use parallel::ParallelPool;
 pub use pool::{
-    ArenaView, EpochFlags, PerWorker, Phase, PoolHealth, StallError, StallReport, WorkerCtx,
-    WorkerHealth, WorkerPool, DEFAULT_WAIT_DEADLINE,
+    ArenaView, EpochFlags, PerWorker, Phase, PoolHealth, StallError, StallReport, WaitTuning,
+    WorkerCtx, WorkerHealth, WorkerPool, DEFAULT_WAIT_DEADLINE,
 };
 
 use crate::comm::Analysis;
@@ -138,9 +139,26 @@ impl SpmvEngine {
 
     /// Largest `published − consumed` epoch distance observed across this
     /// engine's pipelined batches — bounded by the consumed-epoch ack
-    /// protocol's depth, 2. See [`ParallelPool::max_sender_lead`].
+    /// protocol's depth D. See [`ParallelPool::max_sender_lead`].
     pub fn max_sender_lead(&self) -> u64 {
         self.pool.max_sender_lead()
+    }
+
+    /// The configured pipeline depth D ([`ParallelPool::depth`]).
+    pub fn depth(&self) -> usize {
+        self.pool.depth()
+    }
+
+    /// Reconfigure the pipeline depth D between steps
+    /// ([`ParallelPool::set_depth`]).
+    pub fn set_depth(&mut self, depth: usize) {
+        self.pool.set_depth(depth);
+    }
+
+    /// Tune the wait ladder every protocol wait spins through
+    /// ([`WorkerPool::set_wait_tuning`]).
+    pub fn set_wait_tuning(&mut self, tuning: WaitTuning) {
+        self.pool.set_wait_tuning(tuning);
     }
 
     /// Bound every protocol wait by `deadline` (`None` = unbounded). See
@@ -186,8 +204,8 @@ impl SpmvEngine {
     /// inter-batch pointer swap so the state is ready for the next batch
     /// (latest iterate in `x`). Returns the completed-step count to resume
     /// from. The engine's monotone exchange epochs are *not* reset — the
-    /// pipelined ack gate skips a batch's first two epochs, so resuming is
-    /// safe on a warm pool and on a fresh one alike.
+    /// pipelined ack gate skips a batch's first D epochs, so resuming is
+    /// safe on a warm pool and on a fresh one alike (at any depth).
     pub fn restore(
         &mut self,
         ck: &SpmvCheckpoint,

@@ -33,7 +33,10 @@
 //! [`SharedVec::locals_mut`]: crate::pgas::SharedVec::locals_mut
 
 use super::fault::FaultPlan;
-use super::pool::{ArenaView, EpochFlags, PerWorker, Phase, PoolHealth, WorkerCtx, WorkerPool};
+use super::kernels;
+use super::pool::{
+    ArenaView, EpochFlags, PerWorker, Phase, PoolHealth, WaitTuning, WorkerCtx, WorkerPool,
+};
 use super::Engine;
 use crate::comm::{Analysis, RowRun};
 use crate::machine::SIZEOF_DOUBLE;
@@ -44,16 +47,19 @@ use std::time::Duration;
 
 /// Persistent engine state, reused across calls/time steps: the worker pool
 /// plus the per-worker workspaces.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ParallelPool {
     /// The long-lived workers (one per logical UPC thread).
     pool: WorkerPool,
     /// `x_copies[t]` — thread t's private full-length x workspace (V2/V3).
     x_copies: Vec<Vec<f64>>,
-    /// Staging arena for V3 message payloads: `2 × plan.total_values()`
-    /// doubles (two epoch-parity halves), shared by the synchronous,
+    /// Staging arena for V3 message payloads: `depth × plan.total_values()`
+    /// doubles (one slot per buffered epoch), shared by the synchronous,
     /// overlapped and pipelined paths.
     staging: Vec<f64>,
+    /// Pipeline depth D: buffered staging slots, and the bound on how far a
+    /// pipelined sender runs ahead of its slowest receiver. 2 by default.
+    depth: usize,
     /// Per-worker `(bytes, transfers)` counters (naive/V1/V2).
     counts: Vec<(u64, u64)>,
     /// Per-thread published-epoch flags for the split-phase V3 paths.
@@ -62,7 +68,7 @@ pub struct ParallelPool {
     acks: EpochFlags,
     /// Diagnostics: largest `published − consumed` distance any receiver
     /// observed against one of its senders (pipelined batches only); the
-    /// ack protocol bounds it by the pipeline depth, 2. Folded once per
+    /// ack protocol bounds it by the pipeline depth D. Folded once per
     /// worker per batch, never touched in the per-epoch hot loop.
     max_lead: std::sync::atomic::AtomicU64,
     /// Exchange epoch of the last V3 step (0 = none yet). Bumped uniformly
@@ -75,9 +81,39 @@ pub struct ParallelPool {
     faults: FaultPlan,
 }
 
+impl Default for ParallelPool {
+    fn default() -> ParallelPool {
+        ParallelPool {
+            pool: WorkerPool::new(),
+            x_copies: Vec::new(),
+            staging: Vec::new(),
+            depth: 2,
+            counts: Vec::new(),
+            flags: EpochFlags::new(0),
+            acks: EpochFlags::new(0),
+            max_lead: std::sync::atomic::AtomicU64::new(0),
+            epoch: 0,
+            faults: FaultPlan::default(),
+        }
+    }
+}
+
 impl ParallelPool {
     pub fn new() -> ParallelPool {
         ParallelPool::default()
+    }
+
+    /// The configured pipeline depth D (buffered staging slots).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Reconfigure the pipeline depth between steps. The staging arena is
+    /// (re)sized lazily by the next V3 step; epochs keep advancing
+    /// monotonely, so protocols stay mixable across the change.
+    pub fn set_depth(&mut self, depth: usize) {
+        assert!(depth >= 1, "pipeline depth must be at least 1");
+        self.depth = depth;
     }
 
     /// Size the persistent workspaces for the run's shape. Contents are
@@ -102,7 +138,7 @@ impl ParallelPool {
 
     /// Largest `published − consumed` epoch distance any receiver observed
     /// against one of its senders across pipelined batches. The
-    /// consumed-epoch ack protocol bounds this by the pipeline depth, 2 —
+    /// consumed-epoch ack protocol bounds this by the pipeline depth D —
     /// the V3 counterpart of
     /// [`ExchangeRuntime::max_sender_lead`](crate::engine::ExchangeRuntime::max_sender_lead).
     pub fn max_sender_lead(&self) -> u64 {
@@ -119,6 +155,12 @@ impl ParallelPool {
     /// The current wait deadline.
     pub fn wait_deadline(&self) -> Option<Duration> {
         self.pool.wait_deadline()
+    }
+
+    /// Tune the spin → yield → timed-park wait ladder. See
+    /// [`WorkerPool::set_wait_tuning`].
+    pub fn set_wait_tuning(&mut self, tuning: WaitTuning) {
+        self.pool.set_wait_tuning(tuning);
     }
 
     /// Install a fault plan for chaos testing. Faults act on the V3
@@ -315,7 +357,10 @@ impl ParallelPool {
         self.ensure(threads, layout.n);
         self.ensure_protocol(threads);
         let total = plan.total_values();
-        self.staging.resize(2 * total, 0.0);
+        let depth = self.depth;
+        // Steady state: len already matches, so this is a no-op (no
+        // zero-fill, no allocation). Contents are transient per epoch.
+        self.staging.resize(depth * total, 0.0);
         self.epoch += 1;
         let epoch = self.epoch;
 
@@ -345,17 +390,16 @@ impl ParallelPool {
             // SAFETY: plan ranges are disjoint per message (and halved by
             // epoch parity); each is packed by its sender only and read only
             // after the barrier.
-            let mut ep = unsafe { PoolEndpoint::new(t, total, flags, acks, &arena, &ctx) };
+            let mut ep =
+                unsafe { PoolEndpoint::new(t, total, depth, flags, acks, &arena, &ctx) };
             // Phase 1: pack + put — each sender owns exactly the arena
-            // ranges of its own messages (the zero-copy `upc_memput`).
+            // ranges of its own messages (the zero-copy `upc_memput`),
+            // through the kernel tier's unrolled gather.
             ctx.note_phase(Phase::Pack, epoch);
             faults.on_phase(t, epoch, Phase::Pack);
             let local_x = x.local(t);
             for m in plan.send_msgs(t) {
-                let buf = ep.send_slot(epoch, m.range());
-                for (slot, &off) in buf.iter_mut().zip(m.local_src) {
-                    *slot = local_x[off as usize];
-                }
+                kernels::pack_gather(local_x, m.local_src, ep.send_slot(epoch, m.range()));
             }
             if faults.before_publish(t, epoch) {
                 must(ep.publish(epoch));
@@ -376,10 +420,7 @@ impl ParallelPool {
                 ws[start..start + len].copy_from_slice(x.block(b));
             }
             for m in plan.recv_msgs(t) {
-                let vals = ep.recv_slot(epoch, m.range());
-                for (&gidx, &v) in m.indices.iter().zip(vals) {
-                    ws[gidx as usize] = v;
-                }
+                kernels::scatter_indexed(ws, m.indices, ep.recv_slot(epoch, m.range()));
             }
             if faults.before_ack(t, epoch) {
                 must(ep.ack(epoch));
@@ -423,10 +464,10 @@ impl ParallelPool {
         state: &mut SpmvState,
         analysis: &Analysis,
     ) -> ExecOutcome {
-        // On the parallel engine a single overlapped step IS a depth-1
-        // pipelined batch (the ack gate is skipped for the first two epochs
-        // of any batch, so the protocols coincide exactly) — share the one
-        // unsafe protocol body instead of maintaining a second copy.
+        // On the parallel engine a single overlapped step IS a 1-step
+        // pipelined batch (the ack gate is skipped for the first D epochs
+        // of any batch, D ≥ 1, so the protocols coincide exactly) — share
+        // the one unsafe protocol body instead of maintaining a second copy.
         if engine == Engine::Parallel {
             return self.run_v3_pipelined(Engine::Parallel, 1, state, analysis);
         }
@@ -439,10 +480,13 @@ impl ParallelPool {
         self.ensure(threads, layout.n);
         self.ensure_protocol(threads);
         let total = plan.total_values();
-        self.staging.resize(2 * total, 0.0);
+        let depth = self.depth;
+        // Steady state: len already matches, so this is a no-op (no
+        // zero-fill, no allocation). Contents are transient per epoch.
+        self.staging.resize(depth * total, 0.0);
         self.epoch += 1;
         let epoch = self.epoch;
-        let half = (epoch % 2) as usize * total;
+        let half = (epoch % depth as u64) as usize * total;
 
         // Counters: the same pure function of the plan as the synchronous
         // path, so both protocols report identical traffic.
@@ -468,9 +512,7 @@ impl ParallelPool {
             for m in plan.send_msgs(t) {
                 let rng = m.range();
                 let buf = &mut self.staging[half + rng.start..half + rng.end];
-                for (slot, &off) in buf.iter_mut().zip(m.local_src) {
-                    *slot = local_x[off as usize];
-                }
+                kernels::pack_gather(local_x, m.local_src, buf);
             }
             self.flags.publish(t, epoch);
         }
@@ -489,9 +531,7 @@ impl ParallelPool {
             for m in plan.recv_msgs(t) {
                 let rng = m.range();
                 let vals = &self.staging[half + rng.start..half + rng.end];
-                for (&gidx, &v) in m.indices.iter().zip(vals) {
-                    ws[gidx as usize] = v;
-                }
+                kernels::scatter_indexed(ws, m.indices, vals);
             }
             self.acks.publish(t, epoch);
             let y_local = &mut y_locals[t][..];
@@ -508,9 +548,9 @@ impl ParallelPool {
     /// scatter → boundary rows schedule as
     /// [`run_v3_overlapped`](ParallelPool::run_v3_overlapped); across
     /// epochs the only back-pressure is the consumed-epoch acknowledgment
-    /// (pack of epoch `e` waits for every receiver's ack of `e − 2`, the
-    /// last tenant of that arena parity half), so a fast thread runs at
-    /// most 2 epochs ahead of its slowest receiver and no global barrier or
+    /// (pack of epoch `e` waits for every receiver's ack of `e − D`, the
+    /// last tenant of that arena slot), so a fast thread runs at most D
+    /// epochs ahead of its slowest receiver and no global barrier or
     /// per-step dispatch remains.
     ///
     /// Each epoch's arithmetic is identical to the synchronous V3, so the
@@ -539,7 +579,10 @@ impl ParallelPool {
         self.ensure(threads, layout.n);
         self.ensure_protocol(threads);
         let total = plan.total_values();
-        self.staging.resize(2 * total, 0.0);
+        let depth = self.depth;
+        // Steady state: len already matches, so this is a no-op (no
+        // zero-fill, no allocation). Contents are transient per epoch.
+        self.staging.resize(depth * total, 0.0);
 
         // Counters: the same pure function of the plan as the single-step
         // paths, accumulated over the batch.
@@ -591,7 +634,7 @@ impl ParallelPool {
                     // previous tenant's reads before each overwrite, and
                     // scatters only follow an observed epoch publish.
                     let mut ep =
-                        unsafe { PoolEndpoint::new(t, total, flags, acks, &arena, &ctx) };
+                        unsafe { PoolEndpoint::new(t, total, depth, flags, acks, &arena, &ctx) };
                     // SAFETY: worker t claims only its own x/y shards and
                     // workspace, each exactly once per dispatch; the
                     // per-epoch role flip below only swaps which local
@@ -607,29 +650,27 @@ impl ParallelPool {
                     for k in 1..=steps as u64 {
                         let epoch = base + k;
 
-                        // Ack gate: the arena half of this epoch was last
-                        // drained at epoch − 2, so every receiver must have
+                        // Ack gate: the arena slot of this epoch was last
+                        // drained at epoch − D, so every receiver must have
                         // acked it. A consolidated gather plan has exactly
                         // one send message per receiver, so waiting per
                         // message is waiting per distinct receiver — no
-                        // adjacency list, no allocation. The first two
-                        // epochs skip the gate: both halves are quiescent
+                        // adjacency list, no allocation. The first D
+                        // epochs skip the gate: every slot is quiescent
                         // at dispatch entry.
-                        if k > 2 {
+                        if k > depth as u64 {
                             ctx.note_phase(Phase::AckGate, epoch);
                             for m in plan.send_msgs(t) {
-                                must(ep.wait_for_ack(m.peer as usize, epoch - 2));
+                                must(ep.wait_for_ack(m.peer as usize, epoch - depth as u64));
                             }
                         }
 
-                        // begin_exchange: pack this epoch's half + publish.
+                        // begin_exchange: pack this epoch's slot + publish,
+                        // through the kernel tier's unrolled gather.
                         ctx.note_phase(Phase::Pack, epoch);
                         faults.on_phase(t, epoch, Phase::Pack);
                         for m in plan.send_msgs(t) {
-                            let buf = ep.send_slot(epoch, m.range());
-                            for (slot, &off) in buf.iter_mut().zip(m.local_src) {
-                                *slot = src[off as usize];
-                            }
+                            kernels::pack_gather(src, m.local_src, ep.send_slot(epoch, m.range()));
                         }
                         if faults.before_publish(t, epoch) {
                             must(ep.publish(epoch));
@@ -649,10 +690,7 @@ impl ParallelPool {
                         faults.on_phase(t, epoch, Phase::Transfer);
                         for m in plan.recv_msgs(t) {
                             must(ep.wait_for_epoch(m.peer as usize, epoch));
-                            let vals = ep.recv_slot(epoch, m.range());
-                            for (&gidx, &v) in m.indices.iter().zip(vals) {
-                                ws[gidx as usize] = v;
-                            }
+                            kernels::scatter_indexed(ws, m.indices, ep.recv_slot(epoch, m.range()));
                         }
                         // A slow receiver sleeps after draining but before
                         // acking — exactly the window that stalls its
@@ -665,7 +703,7 @@ impl ParallelPool {
 
                         // Depth-bound diagnostic: how far ahead of this
                         // just-consumed epoch has any of t's senders
-                        // published? The ack protocol caps this at 2.
+                        // published? The ack protocol caps this at D.
                         for m in plan.recv_msgs(t) {
                             let lead =
                                 flags.load(m.peer as usize).saturating_sub(epoch);

@@ -35,6 +35,50 @@ use std::time::{Duration, Instant};
 /// converts into a [`StallError`] instead of an infinite hang.
 pub const DEFAULT_WAIT_DEADLINE: Duration = Duration::from_secs(30);
 
+/// The spin → yield → timed-park wait-ladder constants, consolidated.
+///
+/// Every flag wait in the system climbs the same ladder: a burst of
+/// clock-free spins (the peer is usually one store away), then
+/// scheduler-yield rounds (waits in the scheduling-quantum range), then
+/// timed parks (long waits burn no CPU but still poll the flag, the
+/// poison flag and the deadline). Before this struct the rungs were
+/// magic numbers scattered across [`WorkerCtx::wait_flag`], the
+/// free-function `wait_epoch_flag` in the transport layer, and the socket
+/// mailbox's condvar slices; they now live here, documented once, and are
+/// configurable per pool via [`WorkerPool::set_wait_tuning`] (threaded
+/// from `RunConfig`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WaitTuning {
+    /// Clock-free `spin_loop` iterations before the ladder starts
+    /// consulting the clock at all. Covers the common case where the
+    /// awaited store is already in flight.
+    pub spin: u32,
+    /// `yield_now` rounds after the spin burst. Each yield donates the
+    /// rest of the quantum, so this rung covers waits up to a few
+    /// scheduling quanta without the latency cost of a park.
+    pub yield_rounds: u32,
+    /// `park_timeout` slice once yielding is exhausted: long waits poll
+    /// the flag/poison/deadline once per slice and otherwise sleep.
+    pub park: Duration,
+    /// Condvar-wait slice for the socket transport's mailbox waits (the
+    /// blocking analogue of `park` — sliced so deadline and shutdown are
+    /// observed promptly even when no frame ever arrives).
+    pub socket_slice: Duration,
+}
+
+impl Default for WaitTuning {
+    /// The historical constants: 128 spins, 4096 yield rounds, 100 µs
+    /// parks, 50 ms socket condvar slices.
+    fn default() -> WaitTuning {
+        WaitTuning {
+            spin: 128,
+            yield_rounds: 4096,
+            park: Duration::from_micros(100),
+            socket_slice: Duration::from_millis(50),
+        }
+    }
+}
+
 /// The protocol phase a worker is in, as advertised through
 /// [`WorkerCtx::note_phase`] and reported by the stall watchdog and
 /// [`StallError`]. Packed into 3 bits of a progress word, so at most 8
@@ -300,10 +344,10 @@ impl WorkerCtx<'_> {
 
     /// The pipeline back-pressure wait: spin until a *consumed-epoch* flag
     /// (a receiver's "I have unpacked epoch k" counter) reaches `target`.
-    /// A sender packing epoch `e` into the depth-2 arena waits for each of
-    /// its receivers' acks to reach `e − 2` first, so it never overwrites a
-    /// parity half a slow receiver is still draining — and, equivalently,
-    /// never runs more than two epochs ahead of its slowest receiver.
+    /// A sender packing epoch `e` into the depth-D arena waits for each of
+    /// its receivers' acks to reach `e − D` first, so it never overwrites a
+    /// buffer slot a slow receiver is still draining — and, equivalently,
+    /// never runs more than D epochs ahead of its slowest receiver.
     ///
     /// Ordering: `Acquire`, pairing with the receiver's `Release` ack
     /// publish. The receiver's unpack *reads* are sequenced before its ack;
@@ -318,9 +362,11 @@ impl WorkerCtx<'_> {
         self.wait_flag(flag, target, peer, Phase::AckGate);
     }
 
-    /// The spin → yield → timed-park ladder shared by both flag waits.
+    /// The spin → yield → timed-park ladder shared by both flag waits; rung
+    /// sizes come from the pool's [`WaitTuning`] (defaults documented
+    /// there).
     ///
-    /// * ~128 clock-free spins cover the common case (the peer is one store
+    /// * clock-free spins cover the common case (the peer is one store
     ///   away);
     /// * then yielding rounds, still cheap, for waits in the scheduling-
     ///   quantum range;
@@ -332,7 +378,8 @@ impl WorkerCtx<'_> {
     /// [`StallError`] identifying itself, the absent peer, the epoch it
     /// needed and the protocol phase it stalled in.
     fn wait_flag(&self, flag: &AtomicU64, target: u64, peer: usize, phase: Phase) {
-        for _ in 0..128 {
+        let tuning = self.ctrl.wait_tuning();
+        for _ in 0..tuning.spin {
             if flag.load(Ordering::Acquire) >= target {
                 return;
             }
@@ -363,10 +410,10 @@ impl WorkerCtx<'_> {
                 }
             }
             rounds += 1;
-            if rounds < 4096 {
+            if rounds < tuning.yield_rounds {
                 std::thread::yield_now();
             } else {
-                std::thread::park_timeout(Duration::from_micros(100));
+                std::thread::park_timeout(tuning.park);
             }
         }
     }
@@ -595,6 +642,15 @@ struct Control {
     /// Configured wait deadline in nanoseconds; 0 means "no deadline".
     /// Read `Relaxed` at the start of every flag/barrier wait.
     deadline_ns: AtomicU64,
+    /// [`WaitTuning`] rungs, stored as atomics so reconfiguration takes
+    /// effect on waits that start after the call without restarting the
+    /// workers: spin count, yield rounds, park slice (ns), socket condvar
+    /// slice (ns). All `Relaxed` — they are tuning knobs, not
+    /// synchronization edges.
+    tune_spin: AtomicU64,
+    tune_yield_rounds: AtomicU64,
+    tune_park_ns: AtomicU64,
+    tune_socket_slice_ns: AtomicU64,
     /// One progress word per worker (see [`ProgressCell`]).
     progress: Vec<ProgressCell>,
     /// The watchdog's sticky stall report; cleared at each dispatch start.
@@ -607,6 +663,24 @@ impl Control {
             0 => None,
             ns => Some(Duration::from_nanos(ns)),
         }
+    }
+
+    fn wait_tuning(&self) -> WaitTuning {
+        WaitTuning {
+            spin: self.tune_spin.load(Ordering::Relaxed) as u32,
+            yield_rounds: self.tune_yield_rounds.load(Ordering::Relaxed) as u32,
+            park: Duration::from_nanos(self.tune_park_ns.load(Ordering::Relaxed)),
+            socket_slice: Duration::from_nanos(
+                self.tune_socket_slice_ns.load(Ordering::Relaxed),
+            ),
+        }
+    }
+
+    fn store_wait_tuning(&self, t: WaitTuning) {
+        self.tune_spin.store(t.spin as u64, Ordering::Relaxed);
+        self.tune_yield_rounds.store(t.yield_rounds as u64, Ordering::Relaxed);
+        self.tune_park_ns.store(t.park.as_nanos() as u64, Ordering::Relaxed);
+        self.tune_socket_slice_ns.store(t.socket_slice.as_nanos() as u64, Ordering::Relaxed);
     }
 }
 
@@ -629,6 +703,8 @@ pub struct WorkerPool {
     /// Deadline applied to every flag/barrier wait; `None` disables it
     /// (the pre-deadline unbounded behavior).
     deadline: Option<Duration>,
+    /// Wait-ladder rung sizes applied to every flag wait.
+    tuning: WaitTuning,
     /// Completed `run` calls — the protocol-level "how many wakeups did
     /// this cost" counter the pipelined driver's tests assert on (one
     /// dispatch per S-step batch).
@@ -642,6 +718,7 @@ impl Default for WorkerPool {
             control: None,
             watchdog: None,
             deadline: Some(DEFAULT_WAIT_DEADLINE),
+            tuning: WaitTuning::default(),
             dispatches: 0,
         }
     }
@@ -683,6 +760,21 @@ impl WorkerPool {
     /// The currently configured wait deadline.
     pub fn wait_deadline(&self) -> Option<Duration> {
         self.deadline
+    }
+
+    /// Set the wait-ladder rung sizes ([`WaitTuning`]) applied to every
+    /// flag wait. Takes effect for waits that *start* after the call —
+    /// live workers pick the new values up atomically, no respawn.
+    pub fn set_wait_tuning(&mut self, tuning: WaitTuning) {
+        self.tuning = tuning;
+        if let Some(control) = &self.control {
+            control.store_wait_tuning(tuning);
+        }
+    }
+
+    /// The currently configured wait-ladder tuning.
+    pub fn wait_tuning(&self) -> WaitTuning {
+        self.tuning
     }
 
     /// Snapshot the pool's health: each worker's last-reported phase and
@@ -767,6 +859,10 @@ impl WorkerPool {
             done_cv: Condvar::new(),
             barrier: PoolBarrier::new(),
             deadline_ns: AtomicU64::new(self.deadline.map_or(0, |d| d.as_nanos() as u64)),
+            tune_spin: AtomicU64::new(self.tuning.spin as u64),
+            tune_yield_rounds: AtomicU64::new(self.tuning.yield_rounds as u64),
+            tune_park_ns: AtomicU64::new(self.tuning.park.as_nanos() as u64),
+            tune_socket_slice_ns: AtomicU64::new(self.tuning.socket_slice.as_nanos() as u64),
             progress: (0..n).map(|_| ProgressCell::default()).collect(),
             stall_report: Mutex::new(None),
         });
@@ -1389,6 +1485,46 @@ mod tests {
         // A fresh dispatch clears the sticky report.
         pool.run(2, &|_| {});
         assert!(pool.health().stall.is_none());
+    }
+
+    #[test]
+    fn wait_tuning_defaults_and_reconfiguration() {
+        // Defaults are the historical ladder constants.
+        let t = WaitTuning::default();
+        assert_eq!(t.spin, 128);
+        assert_eq!(t.yield_rounds, 4096);
+        assert_eq!(t.park, Duration::from_micros(100));
+        assert_eq!(t.socket_slice, Duration::from_millis(50));
+
+        // A reconfigured ladder (tiny spin, immediate parks) still
+        // completes a real flag-gated exchange — the rungs only trade
+        // latency for CPU, never correctness.
+        let mut pool = WorkerPool::new();
+        let custom = WaitTuning {
+            spin: 1,
+            yield_rounds: 0,
+            park: Duration::from_micros(10),
+            socket_slice: Duration::from_millis(5),
+        };
+        pool.set_wait_tuning(custom);
+        assert_eq!(pool.wait_tuning(), custom);
+        let flags = EpochFlags::new(2);
+        pool.run(2, &|ctx| {
+            if ctx.id == 0 {
+                std::thread::sleep(Duration::from_millis(20));
+                flags.publish(0, 1);
+            } else {
+                ctx.wait_for_epoch(flags.flag(0), 1, 0);
+            }
+        });
+        assert_eq!(flags.load(0), 1);
+        // Reconfiguring with workers already spawned reaches the live
+        // Control atomics too (no respawn).
+        pool.set_wait_tuning(WaitTuning::default());
+        assert_eq!(pool.wait_tuning(), WaitTuning::default());
+        pool.run(2, &|ctx| {
+            ctx.barrier();
+        });
     }
 
     #[test]

@@ -295,6 +295,7 @@ mod tests {
             cache_line: 128,
             threads_per_node: 6,
             w_node_single: 7.5e9,
+            w_pack: 2.75e9,
         };
         host_cfg.hw_label = "injected".into();
         for cfg in [HarnessConfig::test_sized(), host_cfg] {

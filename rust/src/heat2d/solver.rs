@@ -9,7 +9,7 @@
 //! steady-state step allocates nothing and spawns nothing on either engine.
 
 use crate::comm::{ComputeSplit, StridedBlock, StridedPlan};
-use crate::engine::{check_plan_hash, Checkpoint, Engine, ExchangeRuntime};
+use crate::engine::{check_plan_hash, kernels, Checkpoint, Engine, ExchangeRuntime};
 use crate::model::HeatGrid;
 
 /// Compile the grid's halo exchange into a strided block-copy plan.
@@ -152,8 +152,8 @@ impl Heat2dSolver {
     /// Verifies the plan fingerprint and the field shapes, then overwrites
     /// both buffers and the byte counter; returns the checkpoint's step
     /// stamp. The runtime's monotone exchange epochs are deliberately *not*
-    /// reset — the pipelined ack gate skips a batch's first two epochs, so
-    /// resuming is safe at any epoch.
+    /// reset — the pipelined ack gate skips a batch's first D epochs (the
+    /// pipeline depth), so resuming is safe at any epoch.
     pub fn restore(&mut self, ck: &Checkpoint) -> Result<u64, String> {
         check_plan_hash("heat2d", self.plan_fingerprint(), ck.plan_hash)?;
         let (m, n) = self.grid.subdomain();
@@ -249,15 +249,108 @@ impl Heat2dSolver {
         std::mem::swap(&mut self.phi, &mut self.phin);
     }
 
+    /// The runtime's pipeline depth D (buffered staging slots; how far a
+    /// pipelined sender may run ahead).
+    pub fn depth(&self) -> usize {
+        self.runtime.depth()
+    }
+
+    /// Reconfigure the pipeline depth between steps or batches
+    /// ([`ExchangeRuntime::set_depth`]). Depth changes never alter results
+    /// — only how much sender/receiver jitter the pipeline absorbs.
+    pub fn set_depth(&mut self, depth: usize) {
+        self.runtime.set_depth(depth);
+    }
+
+    /// One **fused** split-phase time step (sequential oracle engine): the
+    /// column halos unpack through the plan as usual, but each up/down
+    /// ghost-row message is consumed by
+    /// [`kernels::fused_unpack_jacobi_row`], which writes the ghost row
+    /// into `phi` *and* computes the adjacent boundary Jacobi row into
+    /// `phin` in the same pass — one traversal of those rows instead of
+    /// the separate unpack and boundary sweeps, while the values are hot
+    /// in registers. The residual boundary cells (side columns plus any
+    /// unfused rows) run through the normal block kernel, so every owned
+    /// cell is still computed exactly once with the unchanged expression
+    /// and the step stays **bitwise identical** to
+    /// [`step_with`](Self::step_with) /
+    /// [`step_overlapped_with`](Self::step_overlapped_with).
+    ///
+    /// Fusion is sound here because the fused row's other operands are
+    /// never written by an unpack: the down-neighbour row it reads is an
+    /// owned row (guaranteed by the `m ≥ 4` gate below), and its left /
+    /// right ghost-column cells arrive in the column messages, which the
+    /// plan orders *before* the row messages. Subdomains shorter than 4
+    /// rows fall back to plain unpacking; the parallel engine has no
+    /// fused arm yet (ROADMAP follow-up).
+    pub fn step_fused(&mut self) {
+        let grid = self.grid;
+        let (m, n) = grid.subdomain();
+        let split = &self.split;
+        let threads = grid.threads();
+        // Recv-message indices of the up/down ghost rows per thread:
+        // `halo_plan` pushes left col, right col, up row, down row, and
+        // `StridedPlan::from_msgs` keeps the per-receiver order, so the
+        // row messages sit right after the column messages.
+        let fusable = m >= 4;
+        let mut up_idx = vec![usize::MAX; threads];
+        let mut down_idx = vec![usize::MAX; threads];
+        let mut residual: Vec<Vec<StridedBlock>> = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let (ip, kp) = grid.coords(t);
+            let cols = usize::from(kp > 0) + usize::from(kp < grid.nprocs - 1);
+            let fuse_up = fusable && ip > 0;
+            let fuse_down = fusable && ip < grid.mprocs - 1;
+            if fuse_up {
+                up_idx[t] = cols;
+            }
+            if fuse_down {
+                down_idx[t] = cols + usize::from(ip > 0);
+            }
+            residual.push(residual_boundary(m, n, fuse_up, fuse_down));
+        }
+        self.runtime.step_overlapped_fused(
+            &mut self.phi,
+            &mut self.phin,
+            |_t, phi, phin| jacobi_blocks(n, &split.interior, phi, phin),
+            |t, i, staged, phi, phin| {
+                if i == up_idx[t] {
+                    // Ghost row 0 → boundary row 1 (reads owned row 2).
+                    kernels::fused_unpack_jacobi_row(staged, phi, 1, n + 1, 2 * n + 1, phin);
+                } else if i == down_idx[t] {
+                    // Ghost row m−1 → boundary row m−2 (reads row m−3).
+                    kernels::fused_unpack_jacobi_row(
+                        staged,
+                        phi,
+                        (m - 1) * n + 1,
+                        (m - 2) * n + 1,
+                        (m - 3) * n + 1,
+                        phin,
+                    );
+                } else {
+                    return false;
+                }
+                true
+            },
+            |t, phi, phin| {
+                jacobi_blocks(n, &residual[t], phi, phin);
+                Self::fixed_boundary_copy(grid, t, phi, phin);
+            },
+        );
+        self.inter_thread_bytes += self.runtime.payload_bytes();
+        std::mem::swap(&mut self.phi, &mut self.phin);
+    }
+
     /// Run `steps` split-phase time steps in **one** pool dispatch — the
     /// multi-step pipelined protocol. Per epoch the same interior/boundary
     /// kernels as [`Self::step_overlapped_with`] run over the compiled
     /// [`ComputeSplit`], so the batch is bitwise identical to `steps`
     /// sequential (or overlapped) steps; across epochs the consumed-epoch
-    /// ack protocol lets fast threads run up to 2 epochs ahead of their
-    /// slowest receiver with no per-step dispatch and no barrier. The
-    /// driver leaves the final field under `phi`, so no swap is needed
-    /// here.
+    /// ack protocol lets fast threads run up to D epochs (the runtime's
+    /// pipeline depth, 2 by default — see [`set_depth`](Self::set_depth))
+    /// ahead of their slowest receiver with no per-step dispatch and no
+    /// barrier. The driver leaves the final field under `phi`, so no swap
+    /// is needed here.
     pub fn run_pipelined_with(&mut self, engine: Engine, steps: usize) {
         let grid = self.grid;
         let (_, n) = grid.subdomain();
@@ -358,6 +451,30 @@ pub(crate) fn jacobi_blocks(n: usize, blocks: &[StridedBlock], phi: &[f64], phin
             }
         }
     }
+}
+
+/// The boundary cells of an `m × n` subdomain that [`Heat2dSolver::step_fused`]
+/// did *not* cover with a fused ghost-row pass: the top/bottom owned rows
+/// when unfused, plus the side columns over the middle rows. Mirrors
+/// [`ComputeSplit::grid2d`]'s frame decomposition (each boundary cell
+/// exactly once), minus the fused rows.
+fn residual_boundary(m: usize, n: usize, fuse_up: bool, fuse_down: bool) -> Vec<StridedBlock> {
+    let mut blocks = Vec::new();
+    if !fuse_up {
+        blocks.push(StridedBlock::row(n + 1, n - 2));
+    }
+    if m - 2 > 1 && !fuse_down {
+        blocks.push(StridedBlock::row((m - 2) * n + 1, n - 2));
+    }
+    // Side columns over rows 2..=m−3 (empty when no middle rows exist).
+    let mid_rows = m.saturating_sub(4);
+    if mid_rows > 0 {
+        blocks.push(StridedBlock::column(2 * n + 1, mid_rows, n));
+        if n - 2 > 1 {
+            blocks.push(StridedBlock::column(2 * n + (n - 2), mid_rows, n));
+        }
+    }
+    blocks
 }
 
 /// Thread `t`'s halo-extended `m × n` field cut from the global domain:
@@ -524,8 +641,90 @@ mod tests {
             assert_eq!(sync.inter_thread_bytes, pipe_par.inter_thread_bytes, "round {round}");
         }
         // The whole 4-step batch cost one dispatch, and the ack protocol
-        // held the depth-2 bound.
-        assert!(pipe_par.runtime().max_sender_lead() <= 2);
+        // held the depth bound (default D = 2).
+        assert!(pipe_par.runtime().max_sender_lead() <= pipe_par.depth() as u64);
+    }
+
+    #[test]
+    fn fused_step_bitwise_identical() {
+        // The fused unpack+boundary step must stay bitwise locked to the
+        // synchronous oracle on a grid where middle ranks fuse both rows,
+        // edge ranks fuse one, and corner-adjacent structure varies.
+        let grid = HeatGrid::new(36, 48, 3, 4);
+        let f0 = random_field(36, 48, 55);
+        let mut sync = Heat2dSolver::new(grid, &f0);
+        let mut fused = Heat2dSolver::new(grid, &f0);
+        for step in 0..6 {
+            sync.step_with(Engine::Sequential);
+            fused.step_fused();
+            let want = sync.to_global();
+            assert!(
+                want.iter().zip(&fused.to_global()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "fused step diverges at step {step}"
+            );
+            assert_eq!(sync.inter_thread_bytes, fused.inter_thread_bytes, "step {step}");
+        }
+        // Fused steps share the epoch bookkeeping, so they interleave with
+        // the other protocols on the same solver.
+        fused.step_overlapped_with(Engine::Parallel);
+        sync.step_with(Engine::Sequential);
+        assert!(sync
+            .to_global()
+            .iter()
+            .zip(&fused.to_global())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn fused_step_short_subdomain_falls_back() {
+        // m = (8−2)/3 + 2 = 4: the minimum fusable height (fused rows read
+        // each other's phi rows, never ghosts) — and a 1-row-high variant
+        // (m = 3) that must fall back to plain unpacking entirely.
+        for (mg, mp) in [(8usize, 3usize), (5, 3)] {
+            let grid = HeatGrid::new(mg, 24, mp, 2);
+            let f0 = random_field(mg, 24, 91);
+            let mut sync = Heat2dSolver::new(grid, &f0);
+            let mut fused = Heat2dSolver::new(grid, &f0);
+            for step in 0..4 {
+                sync.step_with(Engine::Sequential);
+                fused.step_fused();
+                assert!(
+                    sync.to_global()
+                        .iter()
+                        .zip(&fused.to_global())
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "mg={mg} mp={mp} diverges at step {step}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_depth_sweep_bitwise_identical() {
+        // Depth-D pipelines through the solver API: every D matches the
+        // synchronous oracle and respects its own lead bound.
+        let grid = HeatGrid::new(36, 48, 3, 4);
+        let f0 = random_field(36, 48, 77);
+        let mut sync = Heat2dSolver::new(grid, &f0);
+        for _ in 0..5 {
+            sync.step_with(Engine::Sequential);
+        }
+        let want = sync.to_global();
+        for depth in [1usize, 2, 3, 4] {
+            let mut pipe = Heat2dSolver::new(grid, &f0);
+            pipe.set_depth(depth);
+            assert_eq!(pipe.depth(), depth);
+            pipe.run_pipelined_with(Engine::Parallel, 5);
+            assert!(
+                want.iter().zip(&pipe.to_global()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "depth {depth} diverges"
+            );
+            assert!(
+                pipe.runtime().max_sender_lead() <= depth as u64,
+                "depth {depth} lead {}",
+                pipe.runtime().max_sender_lead()
+            );
+        }
     }
 
     #[test]

@@ -65,9 +65,11 @@ impl Calibration {
         } else {
             (1 << 21, 64 << 20, 1 << 18, 400_000, 32 << 20)
         };
+        let (pack_elems, pack_reps) = if quick { (1 << 20, 3) } else { (1 << 22, 5) };
         let stream_node = microbench::stream_host_threads(threads, stream_elems).bandwidth();
         let stream_single = microbench::stream_host_threads(1, stream_elems).bandwidth();
         let memcpy_cross = microbench::memcpy_cross_thread(memcpy_bytes, 4).bandwidth();
+        let pack_bandwidth = microbench::pack_bandwidth_host(pack_elems, pack_reps).bandwidth();
         let tau = microbench::tau_cross_thread(tau_slots, tau_ops);
         let cache_line = microbench::cache_line_host(line_buf);
         // The socket probe is best-effort: a sandbox without loopback
@@ -89,6 +91,7 @@ impl Calibration {
             // A 1-thread triad can exceed the per-thread share but never the
             // aggregate; clamp against measurement noise.
             w_node_single: stream_single.min(stream_node),
+            w_pack: pack_bandwidth,
         };
         Calibration {
             hw,
@@ -184,6 +187,7 @@ impl HwParams {
         o.set("cache_line", Value::Num(self.cache_line as f64));
         o.set("threads_per_node", Value::Num(self.threads_per_node as f64));
         o.set("w_node_single", Value::Num(self.w_node_single));
+        o.set("w_pack", Value::Num(self.w_pack));
         o
     }
 
@@ -194,13 +198,23 @@ impl HwParams {
                 .and_then(Value::as_f64)
                 .ok_or_else(|| anyhow!("hw JSON missing numeric field '{key}'"))
         };
+        let w_thread_private = num("w_thread_private")?;
         let hw = HwParams {
-            w_thread_private: num("w_thread_private")?,
+            w_thread_private,
             w_node_remote: num("w_node_remote")?,
             tau: num("tau")?,
             cache_line: num("cache_line")? as usize,
             threads_per_node: num("threads_per_node")? as usize,
             w_node_single: num("w_node_single")?,
+            // The pack-bandwidth key postdates the original schema; files
+            // written before it fall back to the eq. (19) assumption
+            // (pack at streaming bandwidth), so they stay loadable and
+            // predict exactly what they used to.
+            w_pack: v
+                .get("w_pack")
+                .and_then(Value::as_f64)
+                .filter(|&w| w > 0.0)
+                .unwrap_or(w_thread_private),
         };
         anyhow::ensure!(
             hw.w_thread_private > 0.0
@@ -208,7 +222,8 @@ impl HwParams {
                 && hw.tau > 0.0
                 && hw.cache_line > 0
                 && hw.threads_per_node > 0
-                && hw.w_node_single > 0.0,
+                && hw.w_node_single > 0.0
+                && hw.w_pack > 0.0,
             "hw JSON contains non-positive hardware parameters"
         );
         Ok(hw)
@@ -285,6 +300,7 @@ mod tests {
                 cache_line: 128,
                 threads_per_node: 6,
                 w_node_single: 9.0e9,
+                w_pack: 2.5e9,
             },
             stream_node: 19.5e9,
             stream_single: 9.0e9,
@@ -309,6 +325,22 @@ mod tests {
         // A measured calibration exposes a socket transport model.
         let tm = synthetic().socket_model().unwrap();
         assert_eq!(tm, crate::machine::TransportModel::socket(30.0e-6, 1.5e9));
+    }
+
+    #[test]
+    fn w_pack_falls_back_to_stream_for_old_files() {
+        // A calibration file written before the pack probe has no "w_pack"
+        // key inside "hw": it must load with w_pack = w_thread_private,
+        // reproducing the original eq. (19) pack terms bit-for-bit.
+        let mut v = synthetic().to_json();
+        let mut hw_obj = v.get("hw").unwrap().clone();
+        hw_obj.set("w_pack", Value::Null);
+        v.set("hw", hw_obj);
+        let cal = Calibration::from_json(&v).unwrap();
+        assert_eq!(cal.hw.w_pack, cal.hw.w_thread_private);
+        // A measured file round-trips its own value.
+        let back = Calibration::from_json(&synthetic().to_json()).unwrap();
+        assert_eq!(back.hw.w_pack, 2.5e9);
     }
 
     #[test]

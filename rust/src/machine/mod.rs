@@ -12,6 +12,10 @@
 //!   (the Listing-6 microbenchmark),
 //! * the last-level cache line size.
 //!
+//! The kernel tier adds one measured refinement, [`HwParams::w_pack`] —
+//! the bandwidth the indexed gather/scatter pack kernels actually sustain,
+//! defaulting to `W_thread_private` (which recovers eq. (19) verbatim).
+//!
 //! [`HwParams::abel`] carries the measured Abel-cluster values from §6.2,
 //! which both the closed-form models (`model`) and the cluster simulator
 //! (`sim`) consume. [`Calibration`] measures the same four parameters on
@@ -50,6 +54,16 @@ pub struct HwParams {
     /// this is backed out of the paper's Table 2 (see that method's doc);
     /// host calibrations measure it directly with a 1-thread STREAM pass.
     pub w_node_single: f64,
+    /// Pack/unpack bandwidth through a compiled index list, bytes/s — what
+    /// the kernel-tier gather/scatter
+    /// ([`kernels`](crate::engine::kernels)) sustains, as measured by
+    /// [`pack_bandwidth_host`](crate::microbench::pack_bandwidth_host).
+    /// The paper's eq. (19) charges pack/unpack at `W_thread_private`; on
+    /// hosts where indexed access does not reach streaming bandwidth this
+    /// separates the two. Abel (and calibration files predating this
+    /// field) default it to `w_thread_private`, which reproduces eq. (19)
+    /// exactly.
+    pub w_pack: f64,
 }
 
 impl HwParams {
@@ -63,6 +77,7 @@ impl HwParams {
             cache_line: 64,
             threads_per_node: 16,
             w_node_single: 5.4e9,
+            w_pack: 75.0e9 / 16.0,
         }
     }
 
@@ -120,6 +135,15 @@ impl HwParams {
     #[inline]
     pub fn t_private_stream(&self, bytes: f64) -> f64 {
         bytes / self.w_thread_private
+    }
+
+    /// Time for one thread to move `bytes` through the indexed
+    /// gather/scatter pack kernels (`bytes / w_pack`) — the eq. (19) pack
+    /// term with the measured pack bandwidth in place of the STREAM
+    /// figure.
+    #[inline]
+    pub fn t_pack_stream(&self, bytes: f64) -> f64 {
+        bytes / self.w_pack
     }
 
     /// Eq. (8), local flavour: one element moved as part of a contiguous
@@ -232,6 +256,7 @@ mod tests {
         assert_eq!(sub.w_thread_private, hw.w_thread_private);
         assert_eq!(sub.cache_line, hw.cache_line);
         assert_eq!(sub.w_node_single, hw.w_node_single);
+        assert_eq!(sub.w_pack, hw.w_pack);
         assert_eq!(tm.label(), "socket");
         assert_eq!(TransportModel::inproc().label(), "inproc");
     }

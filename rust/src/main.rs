@@ -159,11 +159,13 @@ SUBCOMMANDS
   run         end-to-end 3D diffusion driver (v^l = M v^{l-1})
   heat        §8 2D heat solver: real numerics + Table-5-style prediction
               (--m 512 --nprocs 4 --mprocs 4 --steps 50; --overlap runs the
-              split-phase overlapped step protocol, --pipeline S the
-              multi-step pipelined protocol in S-step batches)
+              split-phase overlapped step protocol, --fused the overlapped
+              step with the unpack fused into the boundary update,
+              --pipeline S the multi-step pipelined protocol in S-step
+              batches; --depth D sets the pipeline buffer depth, default 2)
   stencil     3D 7-point-stencil diffusion on the same exchange runtime
               (--p 64 --pprocs 1 --mprocs 2 --nprocs 2 --steps 20;
-              --overlap / --pipeline S as above)
+              --overlap / --pipeline S / --depth D as above)
   chaos       fault-injection drill: inject delayed/dropped publishes,
               phase-targeted panics and slow receivers into the pipelined
               protocol on heat2d, stencil3d and SpMV V3, and verify every
@@ -175,7 +177,8 @@ SUBCOMMANDS
               processes (default 2), ship each the serialized exchange plan
               over loopback sockets, run --workload heat|stencil|spmv|all
               x --proto sync|overlap|pipeline|all (defaults: all x all,
-              --steps 4 each) across process boundaries, and verify fields
+              --steps 4 each; --depth D buffered slots per rank, default 2)
+              across process boundaries, and verify fields
               and byte counters bitwise against the in-process reference
               (--no-verify skips). --chaos kill@EPOCH | slow@EPOCH:MS
               injects a fault into the highest rank; --deadline-ms D
@@ -190,7 +193,9 @@ SUBCOMMANDS
               heat2d, stencil3d) on the parallel engine, wall-clock vs the
               calibrated eqs. (5)-(18), overlap, and pipeline models
               (--hw host by default; --steps S samples/point; --pipeline P
-              batch depth, default 8; emits BENCH_model.json, --json PATH
+              batch size, default 8; --depth D buffer depth, default 2;
+              also reports the pack-kernel bandwidth and a D=1..4 depth
+              sweep outside the gate; emits BENCH_model.json, --json PATH
               to move it; --budget R exits nonzero when any geomean leaves
               [1/R, R], 0 = report only)
   validate --transport socket  measured-vs-predicted for the loopback
@@ -225,6 +230,7 @@ RUN FLAGS
   --nodes N --tpn T              topology (default 2 x 16)
   --blocksize B                  override BLOCKSIZE
   --steps S                      executed time steps (default 100)
+  --depth D                      exchange pipeline buffer depth (default 2)
   --ordering natural|rcm|morton|random
   --backend native|pjrt          compute backend (default native)
 ";
@@ -337,6 +343,11 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
         "cross-thread contiguous memcpy (ping-pong analog)".into(),
     ]);
     t.row(vec![
+        "W_pack".into(),
+        fmt::rate(cal.hw.w_pack),
+        "indexed gather+scatter round trip (halo pack/unpack analog)".into(),
+    ]);
+    t.row(vec![
         "tau".into(),
         fmt::secs(cal.hw.tau),
         "random individual cross-thread access (Listing-6 analog)".into(),
@@ -393,6 +404,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
     let workload = args.str_flag("workload").unwrap_or("all").to_string();
     let proto_flag = args.str_flag("proto").map(str::to_string);
     let steps = args.usize_flag("steps", 4)? as u64;
+    let depth = args.usize_flag("depth", 2)?.max(1);
     let deadline_ms = args.usize_flag("deadline-ms", 10_000)?;
     let chaos = parse_chaos(args.str_flag("chaos"))?;
     let verify = !args.bool_flag("no-verify");
@@ -419,6 +431,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
                 workload: w.clone(),
                 proto,
                 steps,
+                depth,
                 deadline: std::time::Duration::from_millis(deadline_ms as u64),
                 chaos,
                 plan_mode,
@@ -560,6 +573,7 @@ fn cmd_validate_model(args: &Args) -> Result<()> {
     }
     let steps = args.usize_flag("steps", 12)?;
     let pipeline = args.usize_flag("pipeline", 8)?.max(1);
+    let depth = args.usize_flag("depth", 2)?.max(1);
     let budget = args.usize_flag("budget", 0)? as f64;
     let json_path: std::path::PathBuf = args.str_flag("json").unwrap_or("BENCH_model.json").into();
     args.finish()?;
@@ -569,7 +583,7 @@ fn cmd_validate_model(args: &Args) -> Result<()> {
     // `repro validate` reports *which* wait stalled instead of a bare
     // abort.
     let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        harness::model_validation(&cfg, &mut ws, steps, pipeline)
+        harness::model_validation(&cfg, &mut ws, steps, pipeline, depth)
     }));
     let report = match caught {
         Ok(r) => r,
@@ -830,6 +844,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.threads_per_node = args.usize_flag("tpn", 16)?;
     cfg.iters = args.usize_flag("iters", 1000)?;
     cfg.exec_steps = args.usize_flag("steps", 100)?;
+    cfg.depth = args.usize_flag("depth", 2)?.max(1);
     if let Some(bs) = args.str_flag("blocksize") {
         cfg.block_size = Some(bs.parse().map_err(|_| anyhow!("--blocksize expects an integer"))?);
     }
@@ -901,7 +916,8 @@ fn cluster_shape(threads: usize) -> (usize, usize) {
 fn cmd_heat(args: &Args) -> Result<()> {
     use upcsim::heat2d::{seq_reference_step, simulate_heat_step, Heat2dSolver};
     use upcsim::model::{
-        predict_heat2d, predict_heat2d_overlap, predict_heat2d_pipelined, HeatGrid,
+        choose_depth, predict_heat2d, predict_heat2d_overlap, predict_heat2d_overlap_fused,
+        predict_heat2d_pipelined, HeatGrid,
     };
     use upcsim::pgas::Topology;
     use upcsim::sim::SimParams;
@@ -911,13 +927,15 @@ fn cmd_heat(args: &Args) -> Result<()> {
     let np = args.usize_flag("nprocs", 4)?;
     let steps = args.usize_flag("steps", 50)?;
     let overlap = args.bool_flag("overlap");
+    let fused = args.bool_flag("fused");
     let pipeline = args.usize_flag("pipeline", 0)?;
+    let buf_depth = args.usize_flag("depth", 2)?.max(1);
     let engine = parse_engine(args)?;
     let (hw, hw_label) = resolve_hw(args, HwSource::Abel)?;
     args.finish()?;
     anyhow::ensure!(
-        !(overlap && pipeline > 0),
-        "--overlap and --pipeline are mutually exclusive step protocols"
+        usize::from(overlap) + usize::from(fused) + usize::from(pipeline > 0) <= 1,
+        "--overlap, --fused and --pipeline are mutually exclusive step protocols"
     );
     let grid = HeatGrid::new(mg, ng, mp, np);
     let threads = grid.threads();
@@ -931,6 +949,7 @@ fn cmd_heat(args: &Args) -> Result<()> {
     let mut rng = upcsim::util::Rng::new(7);
     let f0: Vec<f64> = (0..mg * ng).map(|_| rng.f64_in(0.0, 100.0)).collect();
     let mut solver = Heat2dSolver::new(grid, &f0);
+    solver.set_depth(buf_depth);
     let mut reference = f0.clone();
     let t0 = std::time::Instant::now();
     if pipeline > 0 {
@@ -940,6 +959,12 @@ fn cmd_heat(args: &Args) -> Result<()> {
             let batch = left.min(pipeline);
             solver.run_pipelined_with(engine, batch);
             left -= batch;
+        }
+    } else if fused {
+        // The fused boundary step runs on the sequential oracle engine only
+        // (the parallel pool has no fused arm yet).
+        for _ in 0..steps {
+            solver.step_fused();
         }
     } else {
         for _ in 0..steps {
@@ -961,7 +986,9 @@ fn cmd_heat(args: &Args) -> Result<()> {
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f64, f64::max);
     let protocol = if pipeline > 0 {
-        format!("pipelined (depth {pipeline}) ")
+        format!("pipelined ({pipeline}-step batches, depth {buf_depth}) ")
+    } else if fused {
+        "fused split-phase ".to_string()
     } else if overlap {
         "split-phase overlapped ".to_string()
     } else {
@@ -987,20 +1014,31 @@ fn cmd_heat(args: &Args) -> Result<()> {
         fmt::secs(ovl.t_step_sync * 1000.0),
         ovl.speedup(),
     );
-    let depth = if pipeline > 0 { pipeline } else { 8 };
-    let pipe = predict_heat2d_pipelined(&grid, &topo, &hw, depth);
+    let fus = predict_heat2d_overlap_fused(&grid, &topo, &hw);
     println!(
-        "pipeline model (depth {depth}): {} per step steady-state ({:.2}x vs sync, {:.2}x vs overlapped)",
+        "fused model: T_step {} per 1000 steps ({:.2}x vs plain overlap)",
+        fmt::secs(fus.t_step * 1000.0),
+        ovl.t_step / fus.t_step,
+    );
+    let batch = if pipeline > 0 { pipeline } else { 8 };
+    let pipe = predict_heat2d_pipelined(&grid, &topo, &hw, batch);
+    println!(
+        "pipeline model ({batch}-step batches): {} per step steady-state ({:.2}x vs sync, {:.2}x vs overlapped)",
         fmt::secs(pipe.t_per_step),
         pipe.speedup_vs_sync(),
         pipe.speedup_vs_overlapped(),
+    );
+    let (d_star, best) = choose_depth(&ovl, batch, hw.tau);
+    println!(
+        "buffer depth: running D = {buf_depth}; model prefers D = {d_star} ({} per step)",
+        fmt::secs(best.t_per_step),
     );
     Ok(())
 }
 
 fn cmd_stencil(args: &Args) -> Result<()> {
     use upcsim::model::{
-        predict_stencil3d, predict_stencil3d_overlap, predict_stencil3d_pipelined,
+        choose_depth, predict_stencil3d, predict_stencil3d_overlap, predict_stencil3d_pipelined,
     };
     use upcsim::pgas::Topology;
     use upcsim::stencil3d::{seq_reference_step3d, Stencil3dGrid, Stencil3dSolver};
@@ -1013,6 +1051,7 @@ fn cmd_stencil(args: &Args) -> Result<()> {
     let steps = args.usize_flag("steps", 20)?;
     let overlap = args.bool_flag("overlap");
     let pipeline = args.usize_flag("pipeline", 0)?;
+    let buf_depth = args.usize_flag("depth", 2)?.max(1);
     let engine = parse_engine(args)?;
     let (hw, hw_label) = resolve_hw(args, HwSource::Abel)?;
     args.finish()?;
@@ -1034,6 +1073,7 @@ fn cmd_stencil(args: &Args) -> Result<()> {
     let mut rng = upcsim::util::Rng::new(11);
     let f0: Vec<f64> = (0..pg * mg * ng).map(|_| rng.f64_in(0.0, 100.0)).collect();
     let mut solver = Stencil3dSolver::new(grid, &f0);
+    solver.set_depth(buf_depth);
     let mut reference = f0.clone();
     let t0 = std::time::Instant::now();
     if pipeline > 0 {
@@ -1063,7 +1103,7 @@ fn cmd_stencil(args: &Args) -> Result<()> {
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f64, f64::max);
     let protocol = if pipeline > 0 {
-        format!("pipelined (depth {pipeline}) ")
+        format!("pipelined ({pipeline}-step batches, depth {buf_depth}) ")
     } else if overlap {
         "split-phase overlapped ".to_string()
     } else {
@@ -1095,13 +1135,18 @@ fn cmd_stencil(args: &Args) -> Result<()> {
         fmt::secs(ovl.t_step_sync * 1000.0),
         ovl.speedup(),
     );
-    let depth = if pipeline > 0 { pipeline } else { 8 };
-    let pipe = predict_stencil3d_pipelined(&grid, &topo, &hw, depth);
+    let batch = if pipeline > 0 { pipeline } else { 8 };
+    let pipe = predict_stencil3d_pipelined(&grid, &topo, &hw, batch);
     println!(
-        "pipeline model (depth {depth}): {} per step steady-state ({:.2}x vs sync, {:.2}x vs overlapped)",
+        "pipeline model ({batch}-step batches): {} per step steady-state ({:.2}x vs sync, {:.2}x vs overlapped)",
         fmt::secs(pipe.t_per_step),
         pipe.speedup_vs_sync(),
         pipe.speedup_vs_overlapped(),
+    );
+    let (d_star, best) = choose_depth(&ovl, batch, hw.tau);
+    println!(
+        "buffer depth: running D = {buf_depth}; model prefers D = {d_star} ({} per step)",
+        fmt::secs(best.t_per_step),
     );
     Ok(())
 }

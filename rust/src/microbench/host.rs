@@ -24,6 +24,7 @@
 //! best-of-`reps` minimum to shed migration and interference noise.
 
 use super::BandwidthResult;
+use crate::engine::kernels;
 use crate::util::Rng;
 use std::time::Instant;
 
@@ -107,6 +108,40 @@ pub fn memcpy_cross_thread(bytes: usize, reps: usize) -> BandwidthResult {
         best = best.min(t0.elapsed().as_secs_f64());
     }
     BandwidthResult { bytes: (elems * 8) as f64, seconds: best }
+}
+
+/// Pack/unpack bandwidth through a compiled index list — the probe behind
+/// [`HwParams::w_pack`](crate::machine::HwParams::w_pack), i.e. what the
+/// kernel-tier gather/scatter ([`kernels::pack_gather`] /
+/// [`kernels::scatter_indexed`]) actually sustains on this host, as
+/// opposed to the straight-line STREAM figure eq. (19) divides by. The
+/// index list is deterministic (fixed-seed [`Rng`]) and shuffled within
+/// 64-element windows: irregular enough inside a window to defeat pure
+/// streaming, monotone across windows like a real compiled halo plan.
+/// Times a gather + scatter round trip, best-of-`reps`; each direction
+/// moves one load + one store per element.
+pub fn pack_bandwidth_host(elems: usize, reps: usize) -> BandwidthResult {
+    let elems = elems.max(1 << 10);
+    let src: Vec<f64> = (0..elems).map(|i| i as f64).collect();
+    let mut packed = vec![0.0f64; elems];
+    let mut unpacked = vec![0.0f64; elems];
+    let mut idx: Vec<u32> = (0..elems as u32).collect();
+    let mut rng = Rng::new(0x9AC4_BA4D);
+    for window in idx.chunks_mut(64) {
+        for i in (1..window.len()).rev() {
+            let j = rng.usize_in(0, i);
+            window.swap(i, j);
+        }
+    }
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        kernels::pack_gather(&src, &idx, &mut packed);
+        kernels::scatter_indexed(&mut unpacked, &idx, &packed);
+        std::hint::black_box((&packed[0], &unpacked[0]));
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    BandwidthResult { bytes: (elems * 2 * 2 * 8) as f64, seconds: best }
 }
 
 /// Slot stride of the τ arena, in `usize` elements: 128 B keeps slots on
@@ -229,6 +264,34 @@ mod tests {
         let line = cache_line_host(1 << 22);
         assert!(line.is_power_of_two(), "{line}");
         assert!((16..=256).contains(&line), "{line}");
+    }
+
+    #[test]
+    fn pack_bandwidth_sane() {
+        let r = pack_bandwidth_host(1 << 14, 2);
+        let bw = r.bandwidth();
+        assert!(bw > 5e7 && bw < 1e13, "{bw}");
+    }
+
+    #[test]
+    fn pack_round_trip_restores_source() {
+        // The probe's index list is a permutation (window-local shuffle of
+        // the identity), so gather-then-scatter must restore the source.
+        let elems = 1 << 12;
+        let src: Vec<f64> = (0..elems).map(|i| i as f64).collect();
+        let mut packed = vec![0.0f64; elems];
+        let mut unpacked = vec![0.0f64; elems];
+        let mut idx: Vec<u32> = (0..elems as u32).collect();
+        let mut rng = Rng::new(0x9AC4_BA4D);
+        for window in idx.chunks_mut(64) {
+            for i in (1..window.len()).rev() {
+                let j = rng.usize_in(0, i);
+                window.swap(i, j);
+            }
+        }
+        kernels::pack_gather(&src, &idx, &mut packed);
+        kernels::scatter_indexed(&mut unpacked, &idx, &packed);
+        assert_eq!(unpacked, src);
     }
 
     #[test]

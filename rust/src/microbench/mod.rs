@@ -20,8 +20,8 @@
 mod host;
 
 pub use host::{
-    cache_line_host, host_threads, memcpy_cross_thread, stream_host, stream_host_threads,
-    tau_cross_thread,
+    cache_line_host, host_threads, memcpy_cross_thread, pack_bandwidth_host, stream_host,
+    stream_host_threads, tau_cross_thread,
 };
 
 use crate::machine::HwParams;

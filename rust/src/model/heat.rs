@@ -88,7 +88,10 @@ pub fn predict_heat2d(grid: &HeatGrid, topo: &Topology, hw: &HwParams) -> Heat2d
     let cl = hw.cache_line as f64;
     let threads = grid.threads();
 
-    // Eq. (19): per-thread pack/unpack — horizontal messages only.
+    // Eq. (19): per-thread pack/unpack — horizontal messages only. Charged
+    // at the measured gather/scatter bandwidth `w_pack` (equal to the
+    // STREAM figure on Abel and on pre-pack-probe calibrations, which
+    // recovers the paper's term verbatim).
     let mut t_pack = vec![0.0f64; threads];
     for (t, tp) in t_pack.iter_mut().enumerate() {
         let s_horiz: usize = grid
@@ -97,7 +100,7 @@ pub fn predict_heat2d(grid: &HeatGrid, topo: &Topology, hw: &HwParams) -> Heat2d
             .filter(|&&(_, _, horiz)| horiz)
             .map(|&(_, len, _)| len)
             .sum();
-        *tp = s_horiz as f64 * (D + cl) / w;
+        *tp = hw.t_pack_stream(s_horiz as f64 * (D + cl));
     }
 
     // Eq. (20): per-node memget — local transfers concurrent (max), remote

@@ -16,11 +16,12 @@ mod stencil;
 
 pub use heat::{predict_heat2d, Heat2dPrediction, HeatGrid};
 pub use overlap::{
-    predict_heat2d_overlap, predict_heat2d_overlap_on, predict_stencil3d_overlap,
-    predict_stencil3d_overlap_on, predict_v3_overlap, predict_v3_overlap_on, OverlapPrediction,
+    predict_heat2d_overlap, predict_heat2d_overlap_fused, predict_heat2d_overlap_on,
+    predict_stencil3d_overlap, predict_stencil3d_overlap_on, predict_v3_overlap,
+    predict_v3_overlap_on, OverlapPrediction,
 };
 pub use pipeline::{
-    predict_heat2d_pipelined, predict_stencil3d_pipelined, predict_v3_pipelined,
+    choose_depth, predict_heat2d_pipelined, predict_stencil3d_pipelined, predict_v3_pipelined,
     PipelinePrediction,
 };
 pub use planopt::{comm_seconds_on, predict_planopt_speedup, PlanoptPrediction};

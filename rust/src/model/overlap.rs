@@ -76,6 +76,31 @@ impl OverlapPrediction {
     pub fn speedup(&self) -> f64 {
         self.t_step_sync / self.t_step
     }
+
+    /// The fused-boundary refinement: a fraction `fused_frac` of the
+    /// serial unpack is folded into the boundary compute (the fused
+    /// kernel reads the staged ghost cells directly while evaluating the
+    /// boundary stencil, so the separate scatter pass for those messages
+    /// disappears; the boundary compute itself is unchanged — it read
+    /// those cells anyway). Subtracts that share from `t_unpack`,
+    /// `t_unpack_max` and the step. Only meaningful for workloads whose
+    /// unpack is charged in `t_unpack` (strided/indexed traffic); see
+    /// [`predict_heat2d_overlap_fused`] for heat-2D, where the fused
+    /// messages are the *contiguous* ghost rows eq. (19) never charges.
+    pub fn with_fused_unpack(&self, fused_frac: f64) -> OverlapPrediction {
+        assert!(
+            (0.0..=1.0).contains(&fused_frac),
+            "fused fraction must be in [0, 1], got {fused_frac}"
+        );
+        let cut = fused_frac * self.t_unpack;
+        let cut_max = fused_frac * self.t_unpack_max;
+        OverlapPrediction {
+            t_unpack: self.t_unpack - cut,
+            t_unpack_max: self.t_unpack_max - cut_max,
+            t_step: self.t_step - cut,
+            ..*self
+        }
+    }
 }
 
 /// Evaluate the refined per-node window `pack + max(transfer, interior) +
@@ -140,6 +165,33 @@ pub fn predict_heat2d_overlap(
         t_step: window + t_bound,
         t_step_sync: p.t_halo + p.t_comp,
     }
+}
+
+/// Overlap model for heat-2D with the fused boundary step
+/// ([`step_fused`](crate::heat2d::Heat2dSolver::step_fused)): the up/down
+/// ghost-row unpacks fold into the boundary Jacobi. Eq. (19)'s `t_pack`
+/// charges only the strided horizontal traffic — the fused messages are
+/// the *contiguous* rows, whose staging-runtime copy (one load + one
+/// store per element) the paper model never itemizes — so the saving is
+/// computed directly from the subdomain geometry and taken off the step,
+/// rather than as a fraction of `t_unpack`. Subdomains too short to fuse
+/// (`m < 4`, where the runtime falls back to plain unpack) predict
+/// identically to [`predict_heat2d_overlap`].
+pub fn predict_heat2d_overlap_fused(
+    grid: &HeatGrid,
+    topo: &Topology,
+    hw: &HwParams,
+) -> OverlapPrediction {
+    let p = predict_heat2d_overlap(grid, topo, hw);
+    let (m, n) = grid.subdomain();
+    if m < 4 || n < 3 {
+        return p;
+    }
+    const D: f64 = crate::machine::SIZEOF_DOUBLE as f64;
+    // Two ghost rows of n−2 elements per interior thread, each saved copy
+    // a contiguous load + store.
+    let t_rows = hw.t_private_stream(2.0 * (n - 2) as f64 * 2.0 * D);
+    OverlapPrediction { t_step: (p.t_step - t_rows).max(0.0), ..p }
 }
 
 /// Overlap model for the 3D stencil: same decomposition with the
@@ -344,6 +396,51 @@ mod tests {
         assert_eq!(p.t_comp_interior, 0.0);
         let serial = p.t_pack + p.t_comm + p.t_unpack + p.t_comp_boundary;
         assert!((p.t_step - serial).abs() < 1e-18);
+    }
+
+    #[test]
+    fn fused_unpack_shaves_the_step() {
+        let hw = HwParams::abel();
+        // Strided halos (column split) so t_unpack is non-zero.
+        let grid = HeatGrid::new(8_192, 8_192, 1, 8);
+        let topo = Topology::new(1, 8);
+        let p = predict_heat2d_overlap(&grid, &topo, &hw);
+        assert!(p.t_unpack > 0.0);
+        // frac 0 is the identity, frac 1 zeroes the unpack, anything in
+        // between interpolates and never raises the step.
+        let same = p.with_fused_unpack(0.0);
+        assert_eq!(same.t_step, p.t_step);
+        assert_eq!(same.t_unpack, p.t_unpack);
+        let all = p.with_fused_unpack(1.0);
+        assert_eq!(all.t_unpack, 0.0);
+        assert!((all.t_step - (p.t_step - p.t_unpack)).abs() < 1e-18);
+        let half = p.with_fused_unpack(0.5);
+        assert!(half.t_step < p.t_step && half.t_step > all.t_step);
+        // Untouched terms survive.
+        assert_eq!(half.t_pack, p.t_pack);
+        assert_eq!(half.t_comp_boundary, p.t_comp_boundary);
+        assert_eq!(half.t_step_sync, p.t_step_sync);
+    }
+
+    #[test]
+    fn heat2d_fused_model_matches_runtime_gate() {
+        let hw = HwParams::abel();
+        let grid = HeatGrid::new(4_096, 4_096, 4, 4);
+        let topo = Topology::new(1, 16);
+        let base = predict_heat2d_overlap(&grid, &topo, &hw);
+        let fused = predict_heat2d_overlap_fused(&grid, &topo, &hw);
+        assert!(fused.t_step < base.t_step, "{} !< {}", fused.t_step, base.t_step);
+        // Everything except the step is untouched (the saving is the
+        // contiguous row copies, itemized nowhere else).
+        assert_eq!(fused.t_unpack, base.t_unpack);
+        assert_eq!(fused.t_comp_boundary, base.t_comp_boundary);
+        // A subdomain too short to fuse predicts identically, mirroring
+        // the runtime's fallback: 4 grid rows over 4 thread rows → one
+        // owned row per thread, m = 3 < 4.
+        let short = HeatGrid::new(4, 4_096, 4, 1);
+        let ps = predict_heat2d_overlap(&short, &Topology::new(1, 4), &hw);
+        let fs = predict_heat2d_overlap_fused(&short, &Topology::new(1, 4), &hw);
+        assert_eq!(fs.t_step, ps.t_step);
     }
 
     #[test]

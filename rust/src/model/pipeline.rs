@@ -24,6 +24,31 @@
 //! below the overlapped *step* whenever both resources are non-trivial,
 //! because the pipeline also hides each epoch's residual wait behind the
 //! next epoch's work.
+//!
+//! ## Buffer depth
+//!
+//! The runtime stages receives through `D` buffers
+//! ([`set_depth`](crate::engine::ExchangeRuntime::set_depth)): a sender
+//! may run at most `D` epochs ahead of its slowest receiver's ack.
+//! [`PipelinePrediction::from_overlap_depth`] extends the model:
+//!
+//! * `D = 1` — the ack for epoch `e` must arrive before anything of epoch
+//!   `e + 1` is packed, so epochs serialize: no cross-epoch amortization,
+//!   every step pays the full overlapped step `T_step`, *plus* the ack
+//!   round-trip `2τ` — the ack is published at the end of the receiver's
+//!   epoch and needed at the start of the sender's next, so nothing can
+//!   hide its flight.
+//! * `D ≥ 2` — the steady state holds, and `D − 1` epochs of slack absorb
+//!   the ack round-trip: `T_gate = max(0, 2τ − (D−1)·T_steady)`, a
+//!   per-step stall that is already zero at `D = 2` for any steady state
+//!   longer than `2τ` and vanishes entirely as `D` grows. Deeper buffers
+//!   therefore only help when the steady state is shorter than the ack
+//!   latency — exactly the fine-grained regime the paper's τ-dominated
+//!   models describe.
+//!
+//! [`choose_depth`] scans `D = 1..=4` and returns the smallest depth that
+//! minimizes the modeled batch time — the model-driven default for the
+//! `--depth` CLI flag.
 
 use super::{
     predict_heat2d_overlap, predict_stencil3d_overlap, predict_v3_overlap, HeatGrid,
@@ -56,6 +81,12 @@ pub struct PipelinePrediction {
     pub t_step_overlapped: f64,
     /// The synchronous model's step time, for comparison.
     pub t_step_sync: f64,
+    /// Staging-buffer depth `D` the prediction models (module doc).
+    pub depth: usize,
+    /// Per-step ack-gate stall, `max(0, 2τ − (D−1)·t_steady)` for `D ≥ 2`
+    /// (0 for the depth-2 legacy constructor; unused at `D = 1`, where the
+    /// serialization is folded into `t_steady` directly).
+    pub t_gate: f64,
 }
 
 impl PipelinePrediction {
@@ -83,6 +114,47 @@ impl PipelinePrediction {
             t_per_step: t_total / steps as f64,
             t_step_overlapped: p.t_step,
             t_step_sync: p.t_step_sync,
+            depth: 2,
+            t_gate: 0.0,
+        }
+    }
+
+    /// Depth-aware batch prediction (module doc, "Buffer depth"). `tau` is
+    /// the ack round-trip's one-way latency — `hw.tau` for the transport
+    /// the run uses. `depth = 2` with a steady state longer than `2τ`
+    /// reproduces [`from_overlap`] exactly.
+    pub fn from_overlap_depth(
+        p: &OverlapPrediction,
+        steps: usize,
+        depth: usize,
+        tau: f64,
+    ) -> PipelinePrediction {
+        assert!(depth >= 1, "pipeline depth is at least 1");
+        if depth == 1 {
+            // Single-buffered: the ack for epoch e gates the pack of e+1,
+            // so nothing amortizes across epochs — every step is the full
+            // overlapped step plus the fully exposed ack round-trip.
+            let t_step = p.t_step + 2.0 * tau;
+            return PipelinePrediction {
+                steps,
+                t_steady: t_step,
+                t_fill_drain: 0.0,
+                t_total: steps as f64 * t_step,
+                t_per_step: t_step,
+                depth: 1,
+                t_gate: 2.0 * tau,
+                ..PipelinePrediction::from_overlap(p, steps)
+            };
+        }
+        let base = PipelinePrediction::from_overlap(p, steps);
+        let t_gate = (2.0 * tau - (depth as f64 - 1.0) * base.t_steady).max(0.0);
+        let t_total = steps as f64 * (base.t_steady + t_gate) + base.t_fill_drain;
+        PipelinePrediction {
+            t_gate,
+            t_total,
+            t_per_step: t_total / steps as f64,
+            depth,
+            ..base
         }
     }
 
@@ -95,6 +167,28 @@ impl PipelinePrediction {
     pub fn speedup_vs_overlapped(&self) -> f64 {
         self.t_step_overlapped / self.t_per_step
     }
+}
+
+/// Scan `D = 1..=4` and return the smallest depth minimizing the modeled
+/// batch time, with its prediction. Ties break toward the smaller depth
+/// (less staging memory, shorter fault-recovery replay window).
+pub fn choose_depth(
+    p: &OverlapPrediction,
+    steps: usize,
+    tau: f64,
+) -> (usize, PipelinePrediction) {
+    let mut best: Option<(usize, PipelinePrediction)> = None;
+    for depth in 1..=4 {
+        let pred = PipelinePrediction::from_overlap_depth(p, steps, depth, tau);
+        let better = match &best {
+            None => true,
+            Some((_, b)) => pred.t_total < b.t_total,
+        };
+        if better {
+            best = Some((depth, pred));
+        }
+    }
+    best.expect("depth scan is non-empty")
 }
 
 /// Pipeline model for the heat-2D workload.
@@ -157,6 +251,85 @@ mod tests {
         // around its window each step).
         assert!(p.t_steady <= p.t_step_overlapped + 1e-15);
         assert!(p.t_step_overlapped <= p.t_step_sync + 1e-15);
+    }
+
+    #[test]
+    fn depth_two_without_gate_matches_legacy_constructor() {
+        let hw = HwParams::abel();
+        let grid = HeatGrid::new(20_000, 20_000, 4, 4);
+        let topo = Topology::new(2, 8);
+        let p = predict_heat2d_overlap(&grid, &topo, &hw);
+        let legacy = PipelinePrediction::from_overlap(&p, 16);
+        // A 20k² per-thread steady state dwarfs 2τ, so the gate is zero
+        // and the depth-aware model reproduces the legacy numbers exactly.
+        let d2 = PipelinePrediction::from_overlap_depth(&p, 16, 2, hw.tau);
+        assert_eq!(d2.t_gate, 0.0);
+        assert_eq!(d2.t_total, legacy.t_total);
+        assert_eq!(d2.t_per_step, legacy.t_per_step);
+        assert_eq!(d2.depth, 2);
+    }
+
+    #[test]
+    fn depth_one_serializes_epochs() {
+        let hw = HwParams::abel();
+        let grid = HeatGrid::new(4_000, 4_000, 4, 4);
+        let topo = Topology::new(2, 8);
+        let p = predict_heat2d_overlap(&grid, &topo, &hw);
+        let d1 = PipelinePrediction::from_overlap_depth(&p, 32, 1, hw.tau);
+        // No amortization: every step pays the full overlapped step plus
+        // the exposed ack round-trip.
+        assert_eq!(d1.t_total, 32.0 * (p.t_step + 2.0 * hw.tau));
+        assert_eq!(d1.t_gate, 2.0 * hw.tau);
+        assert_eq!(d1.t_fill_drain, 0.0);
+        // And never beats any deeper pipeline.
+        for depth in 2..=4 {
+            let dd = PipelinePrediction::from_overlap_depth(&p, 32, depth, hw.tau);
+            assert!(dd.t_total <= d1.t_total + 1e-15, "depth {depth}");
+        }
+    }
+
+    #[test]
+    fn deeper_buffers_absorb_the_ack_gate() {
+        // Shrink the problem until 2τ exceeds the steady state, the
+        // fine-grained regime where depth matters: the gate must be
+        // positive at D = 2 and monotonically non-increasing in D. A
+        // single-node topology keeps τ out of the transfer term (no
+        // remote messages), so the steady state stays tiny while the ack
+        // round-trip grows.
+        let hw = HwParams { tau: 5.0e-4, ..HwParams::abel() };
+        let grid = HeatGrid::new(64, 64, 4, 4);
+        let topo = Topology::new(1, 16);
+        let p = predict_heat2d_overlap(&grid, &topo, &hw);
+        let preds: Vec<_> = (2..=4)
+            .map(|d| PipelinePrediction::from_overlap_depth(&p, 16, d, hw.tau))
+            .collect();
+        assert!(preds[0].t_gate > 0.0, "regime not τ-dominated: {}", preds[0].t_gate);
+        for w in preds.windows(2) {
+            assert!(w[1].t_gate <= w[0].t_gate + 1e-18);
+            assert!(w[1].t_total <= w[0].t_total + 1e-18);
+        }
+    }
+
+    #[test]
+    fn choose_depth_prefers_shallow_when_gate_is_free() {
+        let hw = HwParams::abel();
+        let grid = HeatGrid::new(20_000, 20_000, 4, 4);
+        let topo = Topology::new(2, 8);
+        let p = predict_heat2d_overlap(&grid, &topo, &hw);
+        // Coarse-grained: the steady state dwarfs τ, every D ≥ 2 ties, so
+        // the tie-break lands on D = 2 (D = 1 pays the exposed ack
+        // round-trip every step, which a long batch cannot win back).
+        let (d, pred) = choose_depth(&p, 64, hw.tau);
+        assert_eq!(d, 2);
+        assert_eq!(pred.t_total, PipelinePrediction::from_overlap(&p, 64).t_total);
+        // τ-dominated (single node keeps τ out of the transfer term):
+        // deeper buffers win.
+        let hw_fine = HwParams { tau: 5.0e-4, ..HwParams::abel() };
+        let grid_fine = HeatGrid::new(64, 64, 4, 4);
+        let topo_fine = Topology::new(1, 16);
+        let p_fine = predict_heat2d_overlap(&grid_fine, &topo_fine, &hw_fine);
+        let (d_fine, _) = choose_depth(&p_fine, 16, hw_fine.tau);
+        assert!(d_fine > 2, "τ-dominated regime should pick a deeper buffer, got {d_fine}");
     }
 
     #[test]

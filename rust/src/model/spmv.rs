@@ -133,13 +133,16 @@ pub fn predict_v3(inp: &SpmvInputs) -> SpmvPrediction {
     let mut breakdown = vec![V3ThreadBreakdown::default(); threads];
     for (t, b) in breakdown.iter_mut().enumerate() {
         let tt = &inp.analysis.per_thread[t];
-        // Eq. (12): pack — load value + its index, store into the message.
-        b.t_pack = (tt.s_local_out + tt.s_remote_out) as f64 * (2.0 * D + I) / w;
-        // Eq. (14): copy own blocks into mythread_x_copy (load + store).
+        // Eq. (12): pack — indexed load of value + its index, store into
+        // the message; charged at the gather/scatter bandwidth `w_pack`.
+        b.t_pack = hw.t_pack_stream((tt.s_local_out + tt.s_remote_out) as f64 * (2.0 * D + I));
+        // Eq. (14): copy own blocks into mythread_x_copy (load + store) —
+        // a contiguous stream, so it stays on `w_thread_private`.
         b.t_copy =
             2.0 * inp.layout.nblks_of_thread(t) as f64 * inp.layout.block_size as f64 * D / w;
-        // Eq. (15): unpack — contiguous read of the message, scattered write.
-        b.t_unpack = (tt.s_local_in + tt.s_remote_in) as f64 * (D + I + cl) / w;
+        // Eq. (15): unpack — contiguous read of the message, scattered
+        // write through the index list; also a `w_pack` access pattern.
+        b.t_unpack = hw.t_pack_stream((tt.s_local_in + tt.s_remote_in) as f64 * (D + I + cl));
     }
 
     // Eq. (13): per-node memput cost.

@@ -43,7 +43,9 @@ pub fn predict_stencil3d(
     let cl = hw.cache_line as f64;
     let threads = grid.threads();
 
-    // Eq. (19) analogue: per-thread pack/unpack — doubly-strided faces only.
+    // Eq. (19) analogue: per-thread pack/unpack — doubly-strided faces
+    // only, charged at the measured gather/scatter bandwidth `w_pack`
+    // (equal to the STREAM figure on Abel, recovering the paper's term).
     let mut t_pack = vec![0.0f64; threads];
     for (t, tp) in t_pack.iter_mut().enumerate() {
         let s_strided: usize = grid
@@ -52,7 +54,7 @@ pub fn predict_stencil3d(
             .filter(|&&(_, _, strided)| strided)
             .map(|&(_, len, _)| len)
             .sum();
-        *tp = s_strided as f64 * (D + cl) / w;
+        *tp = hw.t_pack_stream(s_strided as f64 * (D + cl));
     }
 
     // Eq. (20) analogue: per-node memget — local transfers concurrent

@@ -20,7 +20,7 @@
 //!
 //! The executor produces bitwise-identical results to the UPC variants.
 
-use crate::engine::{Engine, EpochFlags, PerWorker, Phase, DEFAULT_WAIT_DEADLINE};
+use crate::engine::{kernels, Engine, EpochFlags, PerWorker, Phase, WaitTuning, DEFAULT_WAIT_DEADLINE};
 use crate::machine::{HwParams, SIZEOF_DOUBLE, SIZEOF_INT};
 use crate::matrix::Ellpack;
 use crate::pgas::Topology;
@@ -341,9 +341,7 @@ impl MpiSolver {
                     // begin: pack + publish. Publish even with nothing to
                     // send — peers wait on the flag, not the payload.
                     for ((_, offsets), buf) in st.send.iter().zip(bufs.iter_mut()) {
-                        for (slot, &o) in buf.iter_mut().zip(offsets) {
-                            *slot = x[o as usize];
-                        }
+                        kernels::pack_gather(x, offsets, buf);
                     }
                     flags.publish(rank, 1);
                     // finish: per-sender waits + contiguous ghost append.
@@ -354,6 +352,7 @@ impl MpiSolver {
                             flags.flag(p),
                             1,
                             Some(DEFAULT_WAIT_DEADLINE),
+                            WaitTuning::default(),
                             rank,
                             p,
                             Phase::Transfer,

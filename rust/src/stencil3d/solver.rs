@@ -225,12 +225,25 @@ impl Stencil3dSolver {
         std::mem::swap(&mut self.phi, &mut self.phin);
     }
 
+    /// The runtime's pipeline depth D (buffered staging slots).
+    pub fn depth(&self) -> usize {
+        self.runtime.depth()
+    }
+
+    /// Reconfigure the pipeline depth between steps or batches
+    /// ([`ExchangeRuntime::set_depth`]). Depth changes never alter results
+    /// — only how much sender/receiver jitter the pipeline absorbs.
+    pub fn set_depth(&mut self, depth: usize) {
+        self.runtime.set_depth(depth);
+    }
+
     /// Run `steps` split-phase time steps in **one** pool dispatch — the
     /// multi-step pipelined protocol, with the same interior/boundary
     /// kernels as [`Self::step_overlapped_with`] per epoch and the
-    /// consumed-epoch ack protocol bounding fast threads to 2 epochs ahead.
-    /// Bitwise identical to `steps` sequential steps; the driver leaves the
-    /// final field under `phi`.
+    /// consumed-epoch ack protocol bounding fast threads to D epochs ahead
+    /// (the runtime's pipeline depth, 2 by default). Bitwise identical to
+    /// `steps` sequential steps; the driver leaves the final field under
+    /// `phi`.
     pub fn run_pipelined_with(&mut self, engine: Engine, steps: usize) {
         let grid = self.grid;
         let (_, m, n) = grid.subdomain();
@@ -539,7 +552,35 @@ mod tests {
             );
             assert_eq!(sync.inter_thread_bytes, pipe_par.inter_thread_bytes, "round {round}");
         }
-        assert!(pipe_par.runtime().max_sender_lead() <= 2);
+        assert!(pipe_par.runtime().max_sender_lead() <= pipe_par.depth() as u64);
+    }
+
+    #[test]
+    fn pipelined_depth_sweep_bitwise_identical() {
+        // Depth-D pipelines through the 3D solver API: every D matches the
+        // synchronous oracle and respects its own lead bound.
+        let grid = Stencil3dGrid::new(8, 12, 16, 2, 3, 4);
+        let f0 = random_field(8 * 12 * 16, 31);
+        let mut sync = Stencil3dSolver::new(grid, &f0);
+        for _ in 0..4 {
+            sync.step_with(Engine::Sequential);
+        }
+        let want = sync.to_global();
+        for depth in [1usize, 3, 4] {
+            let mut pipe = Stencil3dSolver::new(grid, &f0);
+            pipe.set_depth(depth);
+            assert_eq!(pipe.depth(), depth);
+            pipe.run_pipelined_with(Engine::Parallel, 4);
+            assert!(
+                want.iter().zip(&pipe.to_global()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "depth {depth} diverges"
+            );
+            assert!(
+                pipe.runtime().max_sender_lead() <= depth as u64,
+                "depth {depth} lead {}",
+                pipe.runtime().max_sender_lead()
+            );
+        }
     }
 
     #[test]

@@ -11,8 +11,8 @@ use crate::engine::{ArenaView, EpochFlags, StallError, WorkerCtx};
 use std::ops::Range;
 
 /// One pool worker's endpoint onto the shared-memory transport: its rank's
-/// slot in the published/consumed [`EpochFlags`] plus the depth-2 staging
-/// arena (`2 × total` doubles, parity-indexed by epoch).
+/// slot in the published/consumed [`EpochFlags`] plus the depth-D staging
+/// arena (`depth × total` doubles, indexed by `epoch mod depth`).
 ///
 /// Wait methods delegate to the pool's deadline/poison-aware primitives
 /// ([`WorkerCtx::wait_for_epoch`] / [`WorkerCtx::wait_for_ack`]), which
@@ -22,6 +22,7 @@ use std::ops::Range;
 pub struct PoolEndpoint<'a> {
     rank: usize,
     total: usize,
+    depth: usize,
     flags: &'a EpochFlags,
     acks: &'a EpochFlags,
     arena: &'a ArenaView<'a>,
@@ -30,7 +31,8 @@ pub struct PoolEndpoint<'a> {
 
 impl<'a> PoolEndpoint<'a> {
     /// Bundle worker `rank`'s views over a dispatch's shared state. `total`
-    /// is the plan's `total_values()` (one arena parity half).
+    /// is the plan's `total_values()` (one arena slot); `depth` the number
+    /// of buffered slots the arena holds (`arena.len() = depth × total`).
     ///
     /// # Safety
     /// `send_slot`/`recv_slot` hand out overlapping-lifetime slices of the
@@ -42,17 +44,19 @@ impl<'a> PoolEndpoint<'a> {
     pub unsafe fn new(
         rank: usize,
         total: usize,
+        depth: usize,
         flags: &'a EpochFlags,
         acks: &'a EpochFlags,
         arena: &'a ArenaView<'a>,
         ctx: &'a WorkerCtx<'a>,
     ) -> PoolEndpoint<'a> {
-        PoolEndpoint { rank, total, flags, acks, arena, ctx }
+        debug_assert!(depth >= 1);
+        PoolEndpoint { rank, total, depth, flags, acks, arena, ctx }
     }
 
     #[inline]
     fn half(&self, epoch: u64) -> usize {
-        (epoch % 2) as usize * self.total
+        (epoch % self.depth as u64) as usize * self.total
     }
 }
 
@@ -134,7 +138,8 @@ mod tests {
             let t = ctx.id;
             // SAFETY: slot ranges are disjoint per worker; reads follow the
             // epoch wait.
-            let mut ep = unsafe { PoolEndpoint::new(t, total, &flags, &acks, &arena, &ctx) };
+            let mut ep =
+                unsafe { PoolEndpoint::new(t, total, 2, &flags, &acks, &arena, &ctx) };
             for epoch in 1..=3u64 {
                 ep.send_slot(epoch, t..t + 1)[0] = (10 * t) as f64 + epoch as f64;
                 super::super::must(ep.publish(epoch));
@@ -163,10 +168,31 @@ mod tests {
         let arena = ArenaView::new(&mut staging);
         pool.run(1, &|ctx| {
             // SAFETY: single worker, trivially disjoint.
-            let mut ep = unsafe { PoolEndpoint::new(0, total, &flags, &acks, &arena, &ctx) };
+            let mut ep =
+                unsafe { PoolEndpoint::new(0, total, 2, &flags, &acks, &arena, &ctx) };
             ep.send_slot(1, 0..1)[0] = 1.5; // odd epoch → upper half
             ep.send_slot(2, 0..1)[0] = 2.5; // even epoch → lower half
         });
         assert_eq!(staging, vec![2.5, 1.5]);
+    }
+
+    #[test]
+    fn endpoint_slots_rotate_by_epoch_mod_depth() {
+        // A depth-3 arena: epochs 1..=3 land in slots 1, 2, 0.
+        let mut pool = WorkerPool::new();
+        let flags = EpochFlags::new(1);
+        let acks = EpochFlags::new(1);
+        let total = 1usize;
+        let mut staging = vec![0.0f64; 3];
+        let arena = ArenaView::new(&mut staging);
+        pool.run(1, &|ctx| {
+            // SAFETY: single worker, trivially disjoint.
+            let mut ep =
+                unsafe { PoolEndpoint::new(0, total, 3, &flags, &acks, &arena, &ctx) };
+            ep.send_slot(1, 0..1)[0] = 1.5; // 1 mod 3 = slot 1
+            ep.send_slot(2, 0..1)[0] = 2.5; // 2 mod 3 = slot 2
+            ep.send_slot(3, 0..1)[0] = 3.5; // 3 mod 3 = slot 0
+        });
+        assert_eq!(staging, vec![3.5, 1.5, 2.5]);
     }
 }

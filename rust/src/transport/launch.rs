@@ -386,15 +386,16 @@ fn run_rank<T: Transport>(
     steps: u64,
     transport: T,
     chaos: &ChaosAction,
+    depth: usize,
 ) -> Result<Option<RankResult>, StallError> {
     match *spec {
         WorkloadSpec::Heat { grid, seed } => {
-            run_heat_rank(grid, seed, plan, proto, steps, transport, chaos)
+            run_heat_rank(grid, seed, plan, proto, steps, transport, chaos, depth)
         }
         WorkloadSpec::Stencil { grid, seed } => {
-            run_stencil_rank(grid, seed, plan, proto, steps, transport, chaos)
+            run_stencil_rank(grid, seed, plan, proto, steps, transport, chaos, depth)
         }
-        WorkloadSpec::Spmv(p) => run_spmv_rank(&p, plan, proto, steps, transport, chaos),
+        WorkloadSpec::Spmv(p) => run_spmv_rank(&p, plan, proto, steps, transport, chaos, depth),
     }
 }
 
@@ -421,6 +422,7 @@ fn run_heat_rank<T: Transport>(
     steps: u64,
     transport: T,
     chaos: &ChaosAction,
+    depth: usize,
 ) -> Result<Option<RankResult>, StallError> {
     let rank = transport.rank();
     let (_, n) = grid.subdomain();
@@ -429,6 +431,7 @@ fn run_heat_rank<T: Transport>(
     let mut out = field.clone();
     let split = crate::heat2d::compute_split(&grid);
     let mut rt = ProcRuntime::new(plan.clone(), transport);
+    rt.set_depth(depth as u64);
     match proto {
         Proto::Sync => {
             for _ in 0..steps {
@@ -493,6 +496,7 @@ fn run_stencil_rank<T: Transport>(
     steps: u64,
     transport: T,
     chaos: &ChaosAction,
+    depth: usize,
 ) -> Result<Option<RankResult>, StallError> {
     let rank = transport.rank();
     let (_, m, n) = grid.subdomain();
@@ -502,6 +506,7 @@ fn run_stencil_rank<T: Transport>(
     let mut out = field.clone();
     let split = crate::stencil3d::compute_split(&grid);
     let mut rt = ProcRuntime::new(plan.clone(), transport);
+    rt.set_depth(depth as u64);
     match proto {
         Proto::Sync => {
             for _ in 0..steps {
@@ -590,7 +595,9 @@ fn run_spmv_rank<T: Transport>(
     steps: u64,
     mut transport: T,
     chaos: &ChaosAction,
+    depth: usize,
 ) -> Result<Option<RankResult>, StallError> {
+    let depth = depth as u64;
     let rank = transport.rank();
     let (state, analysis) = spmv_setup(p);
     let layout = state.layout;
@@ -610,9 +617,9 @@ fn run_spmv_rank<T: Transport>(
         if !chaos.fire(e) {
             return Ok(None);
         }
-        if proto == Proto::Pipeline && e > 2 {
+        if proto == Proto::Pipeline && e > depth {
             for &peer in &to {
-                transport.wait_for_ack(peer, e - 2)?;
+                transport.wait_for_ack(peer, e - depth)?;
             }
         }
         for m in plan.send_msgs(rank) {
@@ -858,6 +865,22 @@ pub fn run_socket_world_mode(
     chaos: ChaosAction,
     mode: PlanMode,
 ) -> io::Result<WorldOutcome> {
+    run_socket_world_depth(spec, proto, steps, deadline, chaos, mode, 2)
+}
+
+/// [`run_socket_world_mode`] with an explicit pipeline depth D: every
+/// rank's transport arena holds `depth` buffered slots and the pipelined
+/// ack gate waits on epoch `e − D`. Depth never changes results — only how
+/// much sender/receiver skew the socket world absorbs.
+pub fn run_socket_world_depth(
+    spec: &WorkloadSpec,
+    proto: Proto,
+    steps: u64,
+    deadline: Option<Duration>,
+    chaos: ChaosAction,
+    mode: PlanMode,
+    depth: usize,
+) -> io::Result<WorldOutcome> {
     let procs = spec.procs();
     let plan = spec.plan_with(mode);
     let mesh = loopback_mesh(procs)?;
@@ -870,10 +893,10 @@ pub fn run_socket_world_mode(
                 let plan = &plan;
                 let spec = *spec;
                 s.spawn(move || {
-                    let transport = SocketTransport::new(rank, plan, row, deadline)
+                    let transport = SocketTransport::with_depth(rank, plan, row, deadline, depth)
                         .map_err(|e| io_stall(rank, &e))?;
                     let ch = if rank == procs - 1 { chaos } else { ChaosAction::None };
-                    run_rank(&spec, plan, proto, steps, transport, &ch)
+                    run_rank(&spec, plan, proto, steps, transport, &ch, depth)
                 })
             })
             .collect();
@@ -917,6 +940,10 @@ pub struct LaunchConfig {
     pub workload: String,
     pub proto: Proto,
     pub steps: u64,
+    /// Pipeline depth D shipped to every worker: buffered staging slots in
+    /// each rank's transport arena, and the `e − D` ack-gate distance of
+    /// the pipelined protocol (`--depth`, default 2).
+    pub depth: usize,
     /// Per-wait stall deadline shipped to every worker.
     pub deadline: Duration,
     pub chaos: ChaosAction,
@@ -962,11 +989,12 @@ pub fn cmd_launch(cfg: &LaunchConfig) -> anyhow::Result<()> {
     let plan = spec.plan_with(cfg.plan_mode);
     let fp = plan.fingerprint();
     println!(
-        "launch: {} / {} x{} over {} procs, {} plan {:016x} ({} values, {} msgs per epoch)",
+        "launch: {} / {} x{} over {} procs (depth {}), {} plan {:016x} ({} values, {} msgs per epoch)",
         spec.name(),
         cfg.proto.name(),
         cfg.steps,
         cfg.procs,
+        cfg.depth,
         cfg.plan_mode.name(),
         fp,
         plan.total_values(),
@@ -1011,6 +1039,7 @@ pub fn cmd_launch(cfg: &LaunchConfig) -> anyhow::Result<()> {
     base.set("workload", spec.to_json());
     base.set("proto", Value::Str(cfg.proto.name().into()));
     base.set("steps", Value::Num(cfg.steps as f64));
+    base.set("depth", Value::Num(cfg.depth as f64));
     base.set("deadline_ms", Value::Num(cfg.deadline.as_millis() as f64));
     base.set("plan", plan.to_json());
     base.set("plan_fp", Value::Str(format!("{fp:016x}")));
@@ -1220,6 +1249,13 @@ fn worker_run(rank: usize, procs: usize, connect: &str) -> anyhow::Result<()> {
         .and_then(Proto::parse)
         .ok_or_else(|| anyhow!("spec: bad proto"))?;
     let steps = field_u64(&v, "steps")?;
+    // Older leaders do not ship a depth; fall back to the historical 2.
+    let depth = v
+        .get("depth")
+        .and_then(Value::as_f64)
+        .map(|d| d as usize)
+        .filter(|&d| d >= 1)
+        .unwrap_or(2);
     let deadline = Duration::from_millis(field_u64(&v, "deadline_ms")?);
     let chaos = match v.get("chaos") {
         Some(c) => ChaosAction::from_json(c)?,
@@ -1286,8 +1322,8 @@ fn worker_run(rank: usize, procs: usize, connect: &str) -> anyhow::Result<()> {
         row[peer] = Some(s);
     }
 
-    let transport = SocketTransport::new(rank, &shipped_plan, row, Some(deadline))?;
-    match run_rank(&spec, &shipped_plan, proto, steps, transport, &chaos) {
+    let transport = SocketTransport::with_depth(rank, &shipped_plan, row, Some(deadline), depth)?;
+    match run_rank(&spec, &shipped_plan, proto, steps, transport, &chaos, depth) {
         Ok(Some(rr)) => {
             let mut res = Value::obj();
             res.set("status", Value::Str("ok".into()));

@@ -1,11 +1,13 @@
 //! Pluggable transports: one compiled [`ExchangePlan`], many memory worlds.
 //!
 //! Every exchange protocol in this repo (sync, split-phase overlapped,
-//! multi-step pipelined) reduces to five operations against a depth-2
-//! staging arena: obtain a send/recv view of an epoch's arena half, publish
-//! an epoch, wait for a peer's epoch, acknowledge a consumed epoch, and
-//! wait for a peer's ack. [`Transport`] names exactly those operations, so
-//! the protocol drivers stop caring *where* the peer's memory lives:
+//! multi-step pipelined) reduces to five operations against a depth-D
+//! staging arena (D buffered slots, indexed by `epoch mod D`; D = 2 is the
+//! classic double-buffer): obtain a send/recv view of an epoch's arena
+//! slot, publish an epoch, wait for a peer's epoch, acknowledge a consumed
+//! epoch, and wait for a peer's ack. [`Transport`] names exactly those
+//! operations, so the protocol drivers stop caring *where* the peer's
+//! memory lives:
 //!
 //! * [`PoolEndpoint`] — the original in-process backend: `EpochFlags`
 //!   (padded release/acquire counters) plus a shared `ArenaView`, bitwise
@@ -28,14 +30,15 @@ mod wire;
 
 pub use inproc::PoolEndpoint;
 pub use launch::{
-    cmd_launch, run_reference, run_reference_mode, run_socket_world, run_socket_world_mode,
+    cmd_launch, run_reference, run_reference_mode, run_socket_world, run_socket_world_depth,
+    run_socket_world_mode,
     validate_transport, worker_main, ChaosAction, LaunchConfig, PlanMode, Proto, SpmvParams,
     TransportRow, WorkloadSpec, WorldOutcome, CHAOS_EXIT_CODE, WORKLOADS,
 };
 pub use proc_runtime::ProcRuntime;
 pub use socket::{loopback_mesh, socket_probe, MeshStreams, SocketProbe, SocketTransport};
 
-use crate::engine::{Phase, StallError};
+use crate::engine::{Phase, StallError, WaitTuning};
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
@@ -73,7 +76,7 @@ pub trait Transport {
 
     /// Acknowledge `epoch` as consumed: this rank has unpacked every
     /// incoming message of the epoch, so its senders may reuse the arena
-    /// parity half (depth-2 pipeline back-pressure).
+    /// slot (depth-D pipeline back-pressure).
     fn ack(&mut self, epoch: u64) -> Result<(), StallError>;
 
     /// Wait until `peer`'s consumed-epoch ack reaches `epoch`.
@@ -115,19 +118,23 @@ pub fn must<T>(r: Result<T, StallError>) -> T {
 
 /// Pool-free deadline-aware epoch-flag wait: the spin → yield → timed-park
 /// ladder of `WorkerCtx::wait_for_epoch`, usable outside a `WorkerPool`
-/// dispatch (e.g. the scoped-thread MPI baseline). Returns a structured
-/// [`StallError`] instead of panicking, and does not consult any poison
-/// flag — the caller owns failure propagation.
+/// dispatch (e.g. the scoped-thread MPI baseline). Rung sizes come from
+/// the caller's [`WaitTuning`] (pass `WaitTuning::default()` for the
+/// historical constants). Returns a structured [`StallError`] instead of
+/// panicking, and does not consult any poison flag — the caller owns
+/// failure propagation.
+#[allow(clippy::too_many_arguments)]
 pub fn wait_epoch_flag(
     flag: &AtomicU64,
     target: u64,
     deadline: Option<Duration>,
+    tuning: WaitTuning,
     waiter: usize,
     peer: usize,
     phase: Phase,
     identity: &str,
 ) -> Result<(), StallError> {
-    for _ in 0..128 {
+    for _ in 0..tuning.spin {
         if flag.load(Ordering::Acquire) >= target {
             return Ok(());
         }
@@ -153,10 +160,10 @@ pub fn wait_epoch_flag(
             }
         }
         rounds += 1;
-        if rounds < 4096 {
+        if rounds < tuning.yield_rounds {
             std::thread::yield_now();
         } else {
-            std::thread::park_timeout(Duration::from_micros(100));
+            std::thread::park_timeout(tuning.park);
         }
     }
 }
@@ -169,7 +176,17 @@ mod tests {
     #[test]
     fn wait_epoch_flag_returns_on_published_flag() {
         let flag = AtomicU64::new(3);
-        wait_epoch_flag(&flag, 3, None, 0, 1, Phase::Transfer, "test:peer-1").unwrap();
+        wait_epoch_flag(
+            &flag,
+            3,
+            None,
+            WaitTuning::default(),
+            0,
+            1,
+            Phase::Transfer,
+            "test:peer-1",
+        )
+        .unwrap();
     }
 
     #[test]
@@ -179,6 +196,7 @@ mod tests {
             &flag,
             5,
             Some(Duration::from_millis(20)),
+            WaitTuning::default(),
             2,
             7,
             Phase::AckGate,
@@ -205,6 +223,7 @@ mod tests {
                 &flag,
                 9,
                 Some(Duration::from_secs(5)),
+                WaitTuning::default(),
                 0,
                 1,
                 Phase::Transfer,

@@ -24,6 +24,10 @@ pub struct ProcRuntime<T: Transport> {
     plan: ExchangePlan,
     transport: T,
     epoch: u64,
+    /// Pipeline depth D of the ack gate: a sender may run at most D epochs
+    /// ahead of its slowest receiver. Must match the transport's staging
+    /// depth (e.g. `SocketTransport::with_depth`); defaults to 2.
+    depth: u64,
     /// Distinct peers this rank receives halo data from.
     senders: Vec<usize>,
     /// Distinct peers this rank sends halo data to (ack-gate targets).
@@ -43,7 +47,7 @@ impl<T: Transport> ProcRuntime<T> {
         let mut receivers: Vec<usize> = strided.send_msgs(rank).map(|m| m.peer as usize).collect();
         receivers.sort_unstable();
         receivers.dedup();
-        ProcRuntime { plan, transport, epoch: 0, senders, receivers }
+        ProcRuntime { plan, transport, epoch: 0, depth: 2, senders, receivers }
     }
 
     /// The transport endpoint (e.g. to read wire counters before drop).
@@ -54,6 +58,20 @@ impl<T: Transport> ProcRuntime<T> {
     /// Epochs completed so far.
     pub fn epoch(&self) -> u64 {
         self.epoch
+    }
+
+    /// The pipeline depth of the [`run_pipelined`](ProcRuntime::run_pipelined)
+    /// ack gate.
+    pub fn depth(&self) -> u64 {
+        self.depth
+    }
+
+    /// Set the pipeline depth. The transport's staging arena must hold at
+    /// least `depth` slots (construct it with the same depth); call only at
+    /// batch boundaries — epochs stay monotone across the change.
+    pub fn set_depth(&mut self, depth: u64) {
+        assert!(depth >= 1, "pipeline depth must be at least 1");
+        self.depth = depth;
     }
 
     /// One synchronous step: pack → publish → wait all senders → unpack →
@@ -114,10 +132,11 @@ impl<T: Transport> ProcRuntime<T> {
         Ok(())
     }
 
-    /// `steps` pipelined epochs with the depth-2 consumed-epoch ack gate
-    /// (epoch `e` may not publish before every receiver acked `e − 2`).
-    /// Swaps `field`/`out` each epoch; the final iterate ends in `field`.
-    /// `on_epoch(e)` fires before each epoch's gate — the chaos hook.
+    /// `steps` pipelined epochs with the depth-D consumed-epoch ack gate
+    /// (epoch `e` may not publish before every receiver acked `e − D`,
+    /// where D is [`depth`](ProcRuntime::depth)). Swaps `field`/`out` each
+    /// epoch; the final iterate ends in `field`. `on_epoch(e)` fires before
+    /// each epoch's gate — the chaos hook.
     pub fn run_pipelined(
         &mut self,
         steps: u64,
@@ -132,12 +151,13 @@ impl<T: Transport> ProcRuntime<T> {
         for k in 1..=steps {
             let e = base + k;
             on_epoch(e);
-            let ProcRuntime { plan, transport, senders, receivers, .. } = &mut *self;
+            let ProcRuntime { plan, transport, depth, senders, receivers, .. } = &mut *self;
+            let depth = *depth;
             let rank = transport.rank();
             let strided = plan.as_strided().expect("strided plan");
-            if k > 2 {
+            if k > depth {
                 for &peer in receivers.iter() {
-                    transport.wait_for_ack(peer, e - 2)?;
+                    transport.wait_for_ack(peer, e - depth)?;
                 }
             }
             for m in strided.send_msgs(rank) {
@@ -271,6 +291,67 @@ mod tests {
         assert_eq!(sync, piped, "pipelined diverged from sync");
         // Halo actually moved: rank 0's right ghost carries rank 1 data.
         assert_ne!(sync[0][3], 0.0);
+    }
+
+    #[test]
+    fn pipelined_depths_agree_with_sync() {
+        // D ∈ {1, 3, 4} over the socket transport, each vs the synchronous
+        // schedule: the depth only changes buffering/lead, never values.
+        let steps = 5u64;
+        let sync = run_world(steps, |_r, rt, field, out, steps| {
+            for _ in 0..steps {
+                rt.step_strided(field, out, relax).unwrap();
+                std::mem::swap(field, out);
+            }
+        });
+        for depth in [1u64, 3, 4] {
+            let plan = line_plan();
+            let mesh = loopback_mesh(2).unwrap();
+            let piped: Vec<Vec<f64>> = std::thread::scope(|s| {
+                let handles: Vec<_> = mesh
+                    .into_iter()
+                    .enumerate()
+                    .map(|(rank, row)| {
+                        let plan = plan.clone();
+                        s.spawn(move || {
+                            let deadline = Some(Duration::from_secs(10));
+                            let t = SocketTransport::with_depth(
+                                rank,
+                                &plan,
+                                row,
+                                deadline,
+                                depth as usize,
+                            )
+                            .unwrap();
+                            let mut rt = ProcRuntime::new(plan, t);
+                            rt.set_depth(depth);
+                            assert_eq!(rt.depth(), depth);
+                            let mut field = vec![0.0; 4];
+                            field[1] = (rank * 10 + 1) as f64;
+                            field[2] = (rank * 10 + 2) as f64;
+                            let mut out = vec![0.0; 4];
+                            rt.run_pipelined(
+                                steps,
+                                &mut field,
+                                &mut out,
+                                |src, dst| dst[0] = src[0],
+                                |src, dst| {
+                                    dst[3] = src[3];
+                                    for i in 1..=2 {
+                                        dst[i] = (src[i - 1] + src[i] + src[i + 1]) / 3.0;
+                                    }
+                                },
+                                |_e| {},
+                            )
+                            .unwrap();
+                            field
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            assert_eq!(sync, piped, "depth {depth} diverged from sync");
+        }
     }
 
     #[test]

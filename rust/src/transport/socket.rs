@@ -1,11 +1,12 @@
 //! The distributed backend: one private arena per rank, epochs on the wire.
 //!
 //! [`SocketTransport`] runs the exact protocols of the in-process engine
-//! across `TcpStream`s. Each rank allocates the **full** depth-2 staging
-//! arena (`2 × total_values` doubles) privately and addresses it with the
-//! same global plan coordinates, so pack/unpack code is identical on both
-//! backends; the difference is purely how a packed range becomes visible to
-//! its receiver:
+//! across `TcpStream`s. Each rank allocates the **full** depth-D staging
+//! arena (`depth × total_values` doubles, slot = `epoch mod depth`; the
+//! default depth 2 is the classic double buffer) privately and addresses it
+//! with the same global plan coordinates, so pack/unpack code is identical
+//! on both backends; the difference is purely how a packed range becomes
+//! visible to its receiver:
 //!
 //! * `publish(e)` writes one [`KIND_DATA`](super::wire::KIND_DATA) frame
 //!   per outgoing plan message (header carries `e` + the arena start slot).
@@ -26,7 +27,7 @@
 use super::wire::{self, KIND_ACK, KIND_DATA};
 use super::Transport;
 use crate::comm::ExchangePlan;
-use crate::engine::{Phase, StallError};
+use crate::engine::{Phase, StallError, WaitTuning};
 use std::io::Write;
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::ops::Range;
@@ -67,6 +68,10 @@ struct Mailbox {
 pub struct SocketTransport {
     rank: usize,
     total: usize,
+    /// Buffered arena slots (`arena.len() = depth × total`); the pipelined
+    /// gate keeps senders at most `depth` epochs ahead, so slot
+    /// `epoch mod depth` is always quiescent when reused.
+    depth: usize,
     arena: Vec<f64>,
     /// Write side per peer; reader threads own `try_clone`d read sides.
     streams: Vec<Option<TcpStream>>,
@@ -81,20 +86,38 @@ pub struct SocketTransport {
     mailbox: Arc<Mailbox>,
     readers: Vec<JoinHandle<()>>,
     deadline: Option<Duration>,
+    /// Wait-ladder tuning; only `socket_slice` (the condvar-wait slice of
+    /// the mailbox waits) applies to this blocking backend.
+    tuning: WaitTuning,
     sent_bytes: u64,
     sent_frames: u64,
 }
 
 impl SocketTransport {
     /// Wire rank `rank`'s endpoint onto `streams` (its row of a mesh, e.g.
-    /// from [`loopback_mesh`]) for the given compiled plan. Spawns one
-    /// reader thread per connected peer. `deadline` bounds every wait.
+    /// from [`loopback_mesh`]) for the given compiled plan, with the
+    /// default depth-2 staging arena. Spawns one reader thread per
+    /// connected peer. `deadline` bounds every wait.
     pub fn new(
         rank: usize,
         plan: &ExchangePlan,
         streams: MeshStreams,
         deadline: Option<Duration>,
     ) -> std::io::Result<SocketTransport> {
+        SocketTransport::with_depth(rank, plan, streams, deadline, 2)
+    }
+
+    /// [`new`](SocketTransport::new) with an explicit pipeline depth: the
+    /// private arena holds `depth` buffered slots, so the pipelined driver
+    /// may run senders up to `depth` epochs ahead of their receivers.
+    pub fn with_depth(
+        rank: usize,
+        plan: &ExchangePlan,
+        streams: MeshStreams,
+        deadline: Option<Duration>,
+        depth: usize,
+    ) -> std::io::Result<SocketTransport> {
+        assert!(depth >= 1, "pipeline depth must be at least 1");
         let procs = plan.threads();
         assert_eq!(streams.len(), procs, "mesh row arity");
         let total = plan.total_values();
@@ -173,7 +196,8 @@ impl SocketTransport {
         Ok(SocketTransport {
             rank,
             total,
-            arena: vec![0.0; 2 * total],
+            depth,
+            arena: vec![0.0; depth * total],
             streams,
             peer_ids,
             sends,
@@ -183,14 +207,26 @@ impl SocketTransport {
             mailbox,
             readers,
             deadline,
+            tuning: WaitTuning::default(),
             sent_bytes: 0,
             sent_frames: 0,
         })
     }
 
+    /// The configured pipeline depth (buffered arena slots).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Set the wait-ladder tuning; for this blocking backend only
+    /// `socket_slice` (the mailbox condvar-wait slice) is consulted.
+    pub fn set_wait_tuning(&mut self, tuning: WaitTuning) {
+        self.tuning = tuning;
+    }
+
     #[inline]
     fn half(&self, epoch: u64) -> usize {
-        (epoch % 2) as usize * self.total
+        (epoch % self.depth as u64) as usize * self.total
     }
 
     fn stall(&self, peer: Option<usize>, epoch: u64, phase: Phase, waited: Duration) -> StallError {
@@ -253,9 +289,13 @@ impl Transport for SocketTransport {
         #[allow(clippy::needless_range_loop)]
         for i in 0..self.sends.len() {
             let m = self.sends[i];
-            let payload: Vec<f64> = self.arena[h + m.start..h + m.start + m.len].to_vec();
-            let stream = self.streams[m.peer].as_mut().expect("send message to a non-peer");
-            let sent = wire::write_frame(stream, KIND_DATA, rank, epoch, m.start as u32, &payload);
+            // Frame payload serializes straight from the arena slot — the
+            // kernel tier's contiguous fast path applied to the wire (no
+            // per-frame staging Vec on the publish hot path).
+            let (arena, streams) = (&self.arena, &mut self.streams);
+            let payload = &arena[h + m.start..h + m.start + m.len];
+            let stream = streams[m.peer].as_mut().expect("send message to a non-peer");
+            let sent = wire::write_frame(stream, KIND_DATA, rank, epoch, m.start as u32, payload);
             if sent.is_err() {
                 return Err(self.mk_stall_for(m.peer, epoch, Phase::Pack));
             }
@@ -302,9 +342,9 @@ impl Transport for SocketTransport {
                     if waited >= d {
                         return Err(self.stall(Some(peer), epoch, Phase::Transfer, waited));
                     }
-                    (d - waited).min(Duration::from_millis(50))
+                    (d - waited).min(self.tuning.socket_slice)
                 }
-                None => Duration::from_millis(50),
+                None => self.tuning.socket_slice,
             };
             st = mb.cv.wait_timeout(st, slice).unwrap().0;
         }
@@ -338,9 +378,9 @@ impl Transport for SocketTransport {
                     if waited >= d {
                         return Err(self.stall(Some(peer), epoch, Phase::AckGate, waited));
                     }
-                    (d - waited).min(Duration::from_millis(50))
+                    (d - waited).min(self.tuning.socket_slice)
                 }
-                None => Duration::from_millis(50),
+                None => self.tuning.socket_slice,
             };
             st = mb.cv.wait_timeout(st, slice).unwrap().0;
         }
@@ -533,6 +573,58 @@ mod tests {
         for (rank, seen) in results.iter().enumerate() {
             let peer = (1 - rank) as f64;
             let want: Vec<f64> = (1..=4u64)
+                .flat_map(|e| (0..3).map(move |k| peer * 100.0 + e as f64 + k as f64 * 0.25))
+                .collect();
+            assert_eq!(seen, &want, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn socket_pair_depth_3_rotates_slots() {
+        // Same exchange as the depth-2 test but over a 3-slot arena and
+        // more epochs than slots, so every slot gets reused at least once:
+        // the `epoch mod depth` addressing must agree on both ends.
+        let plan = two_rank_plan();
+        let mesh = loopback_mesh(2).unwrap();
+        let deadline = Some(Duration::from_secs(10));
+        let results: Vec<Vec<f64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = mesh
+                .into_iter()
+                .enumerate()
+                .map(|(rank, row)| {
+                    let plan = &plan;
+                    s.spawn(move || {
+                        let mut t =
+                            SocketTransport::with_depth(rank, plan, row, deadline, 3).unwrap();
+                        assert_eq!(t.depth(), 3);
+                        let mut seen = Vec::new();
+                        for epoch in 1..=7u64 {
+                            let base = (rank * 100) as f64 + epoch as f64;
+                            let plan_s = plan.as_strided().unwrap();
+                            for m in plan_s.send_msgs(rank) {
+                                let slot = t.send_slot(epoch, m.range());
+                                for (k, v) in slot.iter_mut().enumerate() {
+                                    *v = base + k as f64 * 0.25;
+                                }
+                            }
+                            t.publish(epoch).unwrap();
+                            let peer = 1 - rank;
+                            t.wait_for_epoch(peer, epoch).unwrap();
+                            for m in plan_s.recv_msgs(rank) {
+                                seen.extend_from_slice(t.recv_slot(epoch, m.range()));
+                            }
+                            t.ack(epoch).unwrap();
+                            t.wait_for_ack(peer, epoch).unwrap();
+                        }
+                        seen
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (rank, seen) in results.iter().enumerate() {
+            let peer = (1 - rank) as f64;
+            let want: Vec<f64> = (1..=7u64)
                 .flat_map(|e| (0..3).map(move |k| peer * 100.0 + e as f64 + k as f64 * 0.25))
                 .collect();
             assert_eq!(seen, &want, "rank {rank}");

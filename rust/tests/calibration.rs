@@ -15,6 +15,7 @@ fn synthetic_host_hw() -> HwParams {
         cache_line: 64,
         threads_per_node: 8,
         w_node_single: 6.0e9,
+        w_pack: 4.0e9,
     }
 }
 
@@ -27,6 +28,7 @@ fn calibration_measures_finite_positive_values() {
         ("w_node_remote", cal.hw.w_node_remote),
         ("tau", cal.hw.tau),
         ("w_node_single", cal.hw.w_node_single),
+        ("w_pack", cal.hw.w_pack),
         ("stream_node", cal.stream_node),
         ("stream_single", cal.stream_single),
         ("memcpy_cross", cal.memcpy_cross),
@@ -64,7 +66,7 @@ fn model_validation_tiny_mesh_covers_all_variants() {
     cfg.hw = synthetic_host_hw();
     cfg.hw_label = "synthetic".to_string();
     let mut ws = Workspace::new();
-    let report = harness::model_validation(&cfg, &mut ws, 3, 2);
+    let report = harness::model_validation(&cfg, &mut ws, 3, 2, 2);
     assert!(!report.points.is_empty());
     for variant in Variant::ALL {
         let points: Vec<_> = report.points.iter().filter(|p| p.variant == variant).collect();

@@ -3,12 +3,15 @@
 //! synchronous steps, on all three workloads (heat-2D, 3D stencil, SpMV
 //! V3), on both engines, across edge layouts. Plus the protocol
 //! properties: one pool dispatch per batch, the consumed-epoch ack bound
-//! (no sender ever observed more than 2 epochs ahead of a receiver that
-//! just consumed), and mixed-protocol equivalence when synchronous,
-//! overlapped and pipelined steps interleave on one runtime.
+//! (no sender ever observed more than D epochs ahead of a receiver that
+//! just consumed — for every configured depth D, not just the default 2),
+//! depth sweeps D ∈ {1..4} in-process and across the socket world, fused
+//! boundary-compute equivalence, and mixed-protocol equivalence when
+//! synchronous, overlapped and pipelined steps interleave on one runtime.
 
+use std::time::Duration;
 use upcsim::comm::{Analysis, StridedBlock, StridedPlan};
-use upcsim::engine::{Engine, ExchangeRuntime, SpmvEngine};
+use upcsim::engine::{Engine, ExchangeRuntime, FaultKind, FaultPlan, SpmvEngine};
 use upcsim::heat2d::Heat2dSolver;
 use upcsim::matrix::Ellpack;
 use upcsim::model::HeatGrid;
@@ -16,7 +19,13 @@ use upcsim::pgas::{Layout, Topology};
 use upcsim::spmv::{run_variant, SpmvState, Variant};
 use upcsim::stencil3d::{Stencil3dGrid, Stencil3dSolver};
 use upcsim::testing::check_prop;
+use upcsim::transport::{
+    run_reference, run_socket_world_depth, ChaosAction, PlanMode, Proto, WorkloadSpec, WORKLOADS,
+};
 use upcsim::util::Rng;
+
+/// The buffer depths every sweep below covers.
+const DEPTHS: [usize; 4] = [1, 2, 3, 4];
 
 fn random_field(len: usize, seed: u64) -> Vec<f64> {
     let mut rng = Rng::new(seed);
@@ -330,5 +339,205 @@ fn heat2d_mixed_protocols_bitwise() {
             "mixed heat2d diverges after {proto} x{steps}"
         );
         assert_eq!(oracle.inter_thread_bytes, mixed.inter_thread_bytes);
+    }
+}
+
+/// Depth sweep on the grid solvers: D ∈ {1..4} must be bitwise identical
+/// to the synchronous oracle on both engines, and the observed sender lead
+/// must respect the configured bound (not the historical 2).
+#[test]
+fn heat2d_depth_sweep_bitwise_and_lead_bounded() {
+    let grid = HeatGrid::new(24, 36, 2, 3);
+    let f0 = random_field(24 * 36, 31);
+    let mut sync = Heat2dSolver::new(grid, &f0);
+    let steps = 6usize;
+    for _ in 0..steps {
+        sync.step_with(Engine::Sequential);
+    }
+    let want = sync.to_global();
+    for depth in DEPTHS {
+        for engine in Engine::ALL {
+            let mut pipe = Heat2dSolver::new(grid, &f0);
+            pipe.set_depth(depth);
+            pipe.run_pipelined_with(engine, steps);
+            let got = pipe.to_global();
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "heat2d D={depth} {}: pipelined diverges",
+                engine.name()
+            );
+            assert_eq!(sync.inter_thread_bytes, pipe.inter_thread_bytes, "D={depth}");
+            let lead = pipe.runtime().max_sender_lead();
+            assert!(lead <= depth as u64, "heat2d D={depth}: lead {lead}");
+        }
+    }
+}
+
+#[test]
+fn stencil3d_depth_sweep_bitwise_and_lead_bounded() {
+    let grid = Stencil3dGrid::new(8, 12, 8, 2, 3, 2);
+    let f0 = random_field(8 * 12 * 8, 33);
+    let mut sync = Stencil3dSolver::new(grid, &f0);
+    let steps = 5usize;
+    for _ in 0..steps {
+        sync.step_with(Engine::Sequential);
+    }
+    let want = sync.to_global();
+    for depth in DEPTHS {
+        for engine in Engine::ALL {
+            let mut pipe = Stencil3dSolver::new(grid, &f0);
+            pipe.set_depth(depth);
+            pipe.run_pipelined_with(engine, steps);
+            let got = pipe.to_global();
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "stencil3d D={depth} {}: pipelined diverges",
+                engine.name()
+            );
+            assert_eq!(sync.inter_thread_bytes, pipe.inter_thread_bytes, "D={depth}");
+            let lead = pipe.runtime().max_sender_lead();
+            assert!(lead <= depth as u64, "stencil3d D={depth}: lead {lead}");
+        }
+    }
+}
+
+/// Depth sweep on the SpMV V3 pipeline: the engine's configured depth must
+/// not change the iterates, bytes or transfers, and the ack gate must hold
+/// the configured bound.
+#[test]
+fn spmv_depth_sweep_bitwise_and_lead_bounded() {
+    let mesh = upcsim::mesh::tiny_mesh();
+    let m = Ellpack::diffusion_from_mesh(&mesh);
+    let x0 = m.initial_vector(41);
+    let (bs, nodes, tpn, steps) = (128usize, 2usize, 4usize, 5usize);
+    let threads = nodes * tpn;
+    let layout = Layout::new(m.n, bs, threads);
+    let analysis = Analysis::build(&m.j, m.r_nz, layout, Topology::new(nodes, tpn), usize::MAX);
+
+    let mut oracle_state = SpmvState::new(&m, bs, threads, &x0);
+    let mut oracle_bytes = 0u64;
+    for _ in 0..steps {
+        let out = run_variant(Variant::V3, &mut oracle_state, Some(&analysis));
+        oracle_bytes += out.inter_thread_bytes;
+        oracle_state.swap_xy();
+    }
+
+    for depth in DEPTHS {
+        for engine in Engine::ALL {
+            let mut eng = SpmvEngine::new(engine);
+            eng.set_depth(depth);
+            let mut state = SpmvState::new(&m, bs, threads, &x0);
+            let got = eng.run_pipelined(steps, &mut state, &analysis);
+            state.swap_xy();
+            assert_eq!(
+                state.x_global(),
+                oracle_state.x_global(),
+                "spmv D={depth} {}: final vector diverges",
+                engine.name()
+            );
+            assert_eq!(got.inter_thread_bytes, oracle_bytes, "D={depth}");
+            let lead = eng.max_sender_lead();
+            assert!(lead <= depth as u64, "spmv D={depth}: lead {lead}");
+        }
+    }
+}
+
+/// The socket world at every buffer depth must reproduce the in-process
+/// reference bitwise — fields, payload bytes, transfer counts — on all
+/// three workloads: depth changes scheduling slack only, never data.
+#[test]
+fn socket_world_depth_sweep_matches_reference() {
+    for name in WORKLOADS {
+        let spec = WorkloadSpec::for_name(name, 2).unwrap();
+        let reference = run_reference(&spec, Proto::Pipeline, 4);
+        for depth in DEPTHS {
+            let world = run_socket_world_depth(
+                &spec,
+                Proto::Pipeline,
+                4,
+                Some(Duration::from_secs(30)),
+                ChaosAction::None,
+                PlanMode::Compiled,
+                depth,
+            )
+            .unwrap_or_else(|e| panic!("{name} D={depth}: socket world failed: {e}"));
+            assert!(
+                world.stalls.is_empty() && world.killed.is_empty(),
+                "{name} D={depth}: stalls {:?} / deaths {:?}",
+                world.stalls,
+                world.killed
+            );
+            assert_eq!(world.fields.len(), reference.fields.len());
+            for (rank, (got, want)) in world.fields.iter().zip(&reference.fields).enumerate() {
+                assert!(
+                    got.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{name} D={depth}: rank {rank} field diverges"
+                );
+            }
+            assert_eq!(world.bytes, reference.bytes, "{name} D={depth}: payload bytes");
+            assert_eq!(world.transfers, reference.transfers, "{name} D={depth}: transfers");
+        }
+    }
+}
+
+/// Fault-injected slow receiver at configurable depth: with thread 0
+/// sleeping before every unpack from epoch 2 on, the other senders race
+/// ahead — the consumed-epoch ack gate must cap the lead at the
+/// *configured* D (1 and 3, not just the historical 2), and the iterates
+/// must stay bitwise identical to a clean run.
+#[test]
+fn sender_lead_stays_bounded_under_a_slow_receiver() {
+    let m = Ellpack::random(600, 5, 91);
+    let x0 = m.initial_vector(9);
+    let (bs, threads, steps) = (32usize, 6usize, 6usize);
+    let layout = Layout::new(m.n, bs, threads);
+    let analysis =
+        Analysis::build(&m.j, m.r_nz, layout, Topology::single_node(threads), usize::MAX);
+    for depth in [1usize, 3] {
+        let run = |faults: Option<FaultPlan>| -> (Vec<f64>, u64) {
+            let mut eng = SpmvEngine::new(Engine::Parallel);
+            eng.set_depth(depth);
+            if let Some(f) = faults {
+                eng.set_fault_plan(f);
+            }
+            let mut state = SpmvState::new(&m, bs, threads, &x0);
+            eng.run_pipelined(steps, &mut state, &analysis);
+            state.swap_xy();
+            (state.x_global(), eng.max_sender_lead())
+        };
+        let (clean, clean_lead) = run(None);
+        let slow_plan = FaultPlan::none().with(0, 2, FaultKind::SlowReceiver(Duration::from_millis(15)));
+        let (slow, slow_lead) = run(Some(slow_plan));
+        assert!(
+            clean.iter().zip(&slow).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "D={depth}: a slow receiver must not change results"
+        );
+        assert!(clean_lead <= depth as u64, "D={depth}: clean lead {clean_lead}");
+        assert!(slow_lead <= depth as u64, "D={depth}: slow lead {slow_lead}");
+    }
+}
+
+/// The fused split-phase step must stay bitwise locked to the plain
+/// synchronous step over a multi-step run — both on a layout where every
+/// interior rank fuses its up/down ghost rows, and on short subdomains
+/// (m < 4) where `step_fused` falls back to plain unpacking.
+#[test]
+fn fused_heat2d_steps_match_plain_steps_bitwise() {
+    for (mg, ng, mp, np, seed) in [(32usize, 32usize, 2usize, 2usize, 51u64), (8, 24, 4, 1, 52)] {
+        let grid = HeatGrid::new(mg, ng, mp, np);
+        let f0 = random_field(mg * ng, seed);
+        let mut plain = Heat2dSolver::new(grid, &f0);
+        let mut fused = Heat2dSolver::new(grid, &f0);
+        for step in 0..6 {
+            plain.step_with(Engine::Sequential);
+            fused.step_fused();
+            let want = plain.to_global();
+            let got = fused.to_global();
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{mg}x{ng}/{mp}x{np}: fused diverges at step {step}"
+            );
+            assert_eq!(plain.inter_thread_bytes, fused.inter_thread_bytes, "step {step}");
+        }
     }
 }
