@@ -5,12 +5,48 @@
 //! time it saves.
 
 use upcsim::benchlib::{BenchConfig, Bencher};
-use upcsim::comm::{Analysis, PlanOptimizer, PlanStats};
+use upcsim::comm::{Analysis, CommPlan, ExchangePlan, PlanDelta, PlanOptimizer, PlanStats};
 use upcsim::engine::{Engine, SpmvEngine};
 use upcsim::matrix::Ellpack;
-use upcsim::pgas::Topology;
+use upcsim::pgas::{Layout, Topology};
 use upcsim::spmv::{SpmvState, Variant};
 use upcsim::transport::{PlanMode, WorkloadSpec};
+
+/// Dense synthetic gather needs: every thread pulls `vals_per_pair` values
+/// from every other thread (`threads·(threads−1)` pairs), with `salt`
+/// perturbing the index choice so two calls can differ in selected pairs.
+fn dense_needs(threads: usize, bs: usize, vals_per_pair: usize, salt: &[usize]) -> ExchangePlan {
+    let mut recv: Vec<Vec<(u32, u32)>> = Vec::with_capacity(threads);
+    for t in 0..threads {
+        let mut list = Vec::new();
+        for s in 0..threads {
+            if s == t {
+                continue;
+            }
+            let pair = t * threads + s;
+            let shift = if salt.contains(&pair) { 1 } else { 0 };
+            for k in 0..vals_per_pair {
+                list.push((s as u32, (s * bs + 2 * k + shift) as u32));
+            }
+        }
+        list.sort_unstable();
+        recv.push(list);
+    }
+    let layout = Layout::new(threads * bs, bs, threads);
+    CommPlan::from_recv_needs(&layout, &recv).into()
+}
+
+/// Median seconds over `iters` timed calls.
+fn median_secs(iters: usize, mut f: impl FnMut()) -> f64 {
+    let mut t = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        t.push(t0.elapsed().as_secs_f64());
+    }
+    t.sort_by(f64::total_cmp);
+    t[t.len() / 2]
+}
 
 fn main() {
     let mut b = Bencher::from_args(BenchConfig::heavy());
@@ -76,5 +112,54 @@ fn main() {
             state.swap_xy();
         });
     }
+
+    // Incremental recompilation: patching ~1% of the (receiver, sender)
+    // pairs of a dense 32-thread gather plan must stay well under a full
+    // compile — the premise of the versioned plan lifecycle. §Perf target:
+    // apply_delta on a 1% patch < 10% of the from-scratch compile.
+    let threads = 32;
+    let (bs, vals) = (64, 16);
+    let old_plan = dense_needs(threads, bs, vals, &[]);
+    let total_pairs = threads * (threads - 1);
+    let salt: Vec<usize> =
+        (0..total_pairs / 100).map(|i| (i * 37 + 1) % (threads * threads)).collect();
+    let new_plan = dense_needs(threads, bs, vals, &salt);
+    let delta = PlanDelta::diff(&old_plan, &new_plan).expect("diffable generations");
+    println!(
+        "delta: {} dirty of {} pairs ({:.1}%), {} patch values",
+        delta.dirty_pairs(),
+        total_pairs,
+        100.0 * delta.dirty_pairs() as f64 / total_pairs as f64,
+        delta.patch_values(),
+    );
+    assert!(
+        old_plan.apply_delta(&delta).expect("applies").fingerprint() == new_plan.fingerprint(),
+        "patched plan must be fingerprint-identical to the from-scratch compile"
+    );
+    b.bench_items("plan-lifecycle/full-compile", total_pairs as f64, || {
+        let plan = dense_needs(threads, bs, vals, &salt);
+        std::hint::black_box(&plan);
+    });
+    b.bench_items("plan-lifecycle/apply-delta-1pct", delta.dirty_pairs() as f64, || {
+        let plan = old_plan.apply_delta(&delta).expect("applies");
+        std::hint::black_box(&plan);
+    });
+    let t_full = median_secs(40, || {
+        std::hint::black_box(&dense_needs(threads, bs, vals, &salt));
+    });
+    let t_patch = median_secs(40, || {
+        std::hint::black_box(&old_plan.apply_delta(&delta).expect("applies"));
+    });
+    println!(
+        "1% patch: {:.3e} s vs full compile {:.3e} s ({:.1}% of full)",
+        t_patch,
+        t_full,
+        100.0 * t_patch / t_full
+    );
+    assert!(
+        t_patch < 0.1 * t_full,
+        "apply_delta on a 1% patch took {t_patch:.3e} s, >= 10% of the {t_full:.3e} s full compile"
+    );
+
     b.finish();
 }

@@ -1,0 +1,767 @@
+//! The versioned plan lifecycle: [`PlanDelta`] diffs two plan generations
+//! and [`ExchangePlan::apply_delta`] patches the compiled arena in place of
+//! a full recompile.
+//!
+//! Every layer below this one was built around "compile once, immutable"
+//! (fingerprints enforce it). Real irregular workloads re-inspect and
+//! re-plan — molecular dynamics rebuilds its neighbor lists every few
+//! hundred steps (the UPC-MD evaluation), inspector/executor compilers
+//! re-run the inspector when the access pattern drifts — so the lifecycle
+//! becomes: compile generation 0, then advance generations by **deltas**.
+//!
+//! A delta is a list of dirty `(receiver, sender)` pairs, each carrying the
+//! pair's full replacement content (empty content = the pair disappears).
+//! Untouched pairs are copied from the previous generation's arena verbatim;
+//! only dirty pairs pay the condense/consolidate work. Applying a delta is
+//! therefore `O(arena memmove + |delta|)` — no global index sort, no
+//! re-inspection — versus a full compile's sort/dedup over every value
+//! (`benches/plan_optimize.rs` gates the ratio).
+//!
+//! Generations are named by a **fingerprint chain**:
+//! `fp(gen N) = hash(fp(gen N−1), delta_N)`. Two endpoints that started
+//! from the same generation-0 plan and applied the same delta sequence
+//! agree on the chain value, so the socket transport ships deltas (one
+//! `KIND_DELTA` frame), not whole plans, and both sides verify the chain.
+//!
+//! Canonical-order contract: dirty-pair patching is only well-defined when
+//! each `(receiver, sender)` pair owns one contiguous arena run and pairs
+//! are sorted by sender within a receiver. Condensed gather plans guarantee
+//! this by construction; strided plans must be in the consolidated
+//! `(receiver, sender)`-sorted order ([`PlanOptimizer::consolidate_strided`]
+//! emits it, as do the halo compilers). [`PlanDelta::diff`] and
+//! [`ExchangePlan::apply_delta`] reject other layouts instead of silently
+//! reordering them.
+//!
+//! [`PlanOptimizer::consolidate_strided`]: super::PlanOptimizer::consolidate_strided
+
+use super::plan::{json_u32s, num_u32, u32s_to_json};
+use super::{CommPlan, ExchangePlan, StridedBlock, StridedPlan};
+use crate::util::json::Value;
+use crate::util::Fnv64;
+
+/// Replacement content for one dirty gather pair: the sorted unique global
+/// indices `receiver` needs from `sender`, with their pre-translated
+/// sender-local offsets. Empty lists remove the pair.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GatherPatch {
+    pub receiver: u32,
+    pub sender: u32,
+    pub indices: Vec<u32>,
+    pub local_src: Vec<u32>,
+}
+
+/// Replacement content for one dirty strided pair: the `(src, dst)` block
+/// copies from `sender` to `receiver`, in unpack order. Empty removes the
+/// pair.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StridedPatch {
+    pub receiver: u32,
+    pub sender: u32,
+    pub copies: Vec<(StridedBlock, StridedBlock)>,
+}
+
+/// A diff between two plan generations: the dirty `(receiver, sender)`
+/// pairs with their replacement content, stamped with the base generation's
+/// fingerprint so it can only be applied to the generation it was diffed
+/// against.
+#[derive(Debug, Clone, Default)]
+pub struct PlanDelta {
+    threads: usize,
+    /// Fingerprint of the [`ExchangePlan`] this delta applies to.
+    base_fp: u64,
+    /// Dirty gather pairs, sorted by `(receiver, sender)`; empty for
+    /// strided deltas.
+    gather: Vec<GatherPatch>,
+    /// Dirty strided pairs, sorted by `(receiver, sender)`; empty for
+    /// gather deltas.
+    strided: Vec<StridedPatch>,
+}
+
+/// Advance the generation fingerprint chain by one delta:
+/// `fp(gen N) = hash(fp(gen N−1), delta_N)`. Both endpoints of a shipped
+/// delta compute this independently; agreement proves they hold the same
+/// plan history without ever re-shipping a whole plan.
+pub fn chain_fingerprint(prev: u64, delta: &PlanDelta) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_u64(prev);
+    h.write_u64(delta.fingerprint());
+    h.finish()
+}
+
+impl PlanDelta {
+    /// Build a gather-form delta from dirty-pair patches (any order; sorted
+    /// and validated here). `base_fp` names the generation the delta
+    /// applies to ([`ExchangePlan::fingerprint`] of the base plan).
+    pub fn from_gather_patches(
+        threads: usize,
+        base_fp: u64,
+        mut patches: Vec<GatherPatch>,
+    ) -> Result<PlanDelta, String> {
+        patches.sort_by_key(|p| (p.receiver, p.sender));
+        let d = PlanDelta { threads, base_fp, gather: patches, strided: Vec::new() };
+        d.validate()?;
+        Ok(d)
+    }
+
+    /// Build a strided-form delta from dirty-pair patches (any order).
+    pub fn from_strided_patches(
+        threads: usize,
+        base_fp: u64,
+        mut patches: Vec<StridedPatch>,
+    ) -> Result<PlanDelta, String> {
+        patches.sort_by_key(|p| (p.receiver, p.sender));
+        let d = PlanDelta { threads, base_fp, gather: Vec::new(), strided: patches };
+        d.validate()?;
+        Ok(d)
+    }
+
+    /// Diff two plan generations into the dirty-pair delta that takes `old`
+    /// to `new`: `old.apply_delta(&diff(old, new))` fingerprints identically
+    /// to `new`. Both plans must share form, thread count and the canonical
+    /// pair order (see the module docs).
+    pub fn diff(old: &ExchangePlan, new: &ExchangePlan) -> Result<PlanDelta, String> {
+        if old.threads() != new.threads() {
+            return Err(format!(
+                "plan generations disagree on thread count ({} vs {})",
+                old.threads(),
+                new.threads()
+            ));
+        }
+        match (old, new) {
+            (ExchangePlan::Gather(a), ExchangePlan::Gather(b)) => {
+                diff_gather(a, b, old.fingerprint())
+            }
+            (ExchangePlan::Strided(a), ExchangePlan::Strided(b)) => {
+                diff_strided(a, b, old.fingerprint())
+            }
+            _ => Err(format!("plan generations changed form ({} vs {})", old.name(), new.name())),
+        }
+    }
+
+    /// Number of UPC threads the delta's generations were compiled for.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Fingerprint of the generation this delta applies to.
+    pub fn base_fingerprint(&self) -> u64 {
+        self.base_fp
+    }
+
+    /// `true` when the two generations were identical.
+    pub fn is_empty(&self) -> bool {
+        self.gather.is_empty() && self.strided.is_empty()
+    }
+
+    /// Number of dirty `(receiver, sender)` pairs — the |delta| the
+    /// incremental-recompile cost scales with.
+    pub fn dirty_pairs(&self) -> usize {
+        self.gather.len() + self.strided.len()
+    }
+
+    /// Total replacement values carried by the dirty pairs (the payload
+    /// side of |delta|; removals contribute 0).
+    pub fn patch_values(&self) -> usize {
+        let g: usize = self.gather.iter().map(|p| p.indices.len()).sum();
+        let s: usize =
+            self.strided.iter().map(|p| p.copies.iter().map(|(b, _)| b.len()).sum::<usize>()).sum();
+        g + s
+    }
+
+    /// Which plan form this delta patches.
+    pub fn form_name(&self) -> &'static str {
+        if self.strided.is_empty() {
+            "gather"
+        } else {
+            "strided"
+        }
+    }
+
+    /// Structural FNV-1a fingerprint of the delta content (threads, every
+    /// dirty pair, every replacement value). Feeds the generation chain —
+    /// see [`chain_fingerprint`].
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_usize(self.threads);
+        h.write_u8(if self.strided.is_empty() { 1 } else { 2 });
+        h.write_usize(self.gather.len());
+        for p in &self.gather {
+            h.write_u64(p.receiver as u64);
+            h.write_u64(p.sender as u64);
+            h.write_usize(p.indices.len());
+            for &i in &p.indices {
+                h.write_u64(i as u64);
+            }
+            for &o in &p.local_src {
+                h.write_u64(o as u64);
+            }
+        }
+        h.write_usize(self.strided.len());
+        for p in &self.strided {
+            h.write_u64(p.receiver as u64);
+            h.write_u64(p.sender as u64);
+            h.write_usize(p.copies.len());
+            for (src, dst) in &p.copies {
+                for b in [src, dst] {
+                    h.write_usize(b.offset);
+                    h.write_usize(b.rows);
+                    h.write_usize(b.row_stride);
+                    h.write_usize(b.cols);
+                    h.write_usize(b.col_stride);
+                }
+            }
+        }
+        h.finish()
+    }
+
+    /// Structural consistency: in-range endpoints, no self-pairs, parallel
+    /// index/offset lists, condensed per-pair invariants, strict
+    /// `(receiver, sender)` order. `O(|delta|)` — cheap enough to run on
+    /// every wire receive.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.gather.is_empty() && !self.strided.is_empty() {
+            return Err("delta mixes gather and strided patches".into());
+        }
+        let mut prev: Option<(u32, u32)> = None;
+        for p in &self.gather {
+            check_pair(self.threads, p.receiver, p.sender, &mut prev)?;
+            if p.indices.len() != p.local_src.len() {
+                return Err(format!(
+                    "patch ({}, {}): indices/local_src length mismatch",
+                    p.receiver, p.sender
+                ));
+            }
+            if !p.indices.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!(
+                    "patch ({}, {}): indices not sorted/unique",
+                    p.receiver, p.sender
+                ));
+            }
+        }
+        let mut prev: Option<(u32, u32)> = None;
+        for p in &self.strided {
+            check_pair(self.threads, p.receiver, p.sender, &mut prev)?;
+            for (src, dst) in &p.copies {
+                if src.len() != dst.len() || src.is_empty() {
+                    return Err(format!(
+                        "patch ({}, {}): block copy length mismatch or empty",
+                        p.receiver, p.sender
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize for the wire (`KIND_DELTA` frames): form tag, thread
+    /// count, base fingerprint (hex — u64 does not survive a JSON double),
+    /// and every dirty pair verbatim.
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("form", Value::Str(self.form_name().to_string()));
+        v.set("threads", Value::Num(self.threads as f64));
+        v.set("base_fp", Value::Str(format!("{:016x}", self.base_fp)));
+        if self.strided.is_empty() {
+            let pairs: Vec<Value> = self
+                .gather
+                .iter()
+                .map(|p| {
+                    let mut o = Value::obj();
+                    o.set("receiver", Value::Num(p.receiver as f64));
+                    o.set("sender", Value::Num(p.sender as f64));
+                    o.set("indices", u32s_to_json(&p.indices));
+                    o.set("local_src", u32s_to_json(&p.local_src));
+                    o
+                })
+                .collect();
+            v.set("pairs", Value::Arr(pairs));
+        } else {
+            let pairs: Vec<Value> = self
+                .strided
+                .iter()
+                .map(|p| {
+                    let mut o = Value::obj();
+                    o.set("receiver", Value::Num(p.receiver as f64));
+                    o.set("sender", Value::Num(p.sender as f64));
+                    let copies: Vec<Value> = p
+                        .copies
+                        .iter()
+                        .map(|(src, dst)| {
+                            let mut nums = Vec::with_capacity(10);
+                            for b in [src, dst] {
+                                nums.extend([
+                                    b.offset as f64,
+                                    b.rows as f64,
+                                    b.row_stride as f64,
+                                    b.cols as f64,
+                                    b.col_stride as f64,
+                                ]);
+                            }
+                            Value::Arr(nums.into_iter().map(Value::Num).collect())
+                        })
+                        .collect();
+                    o.set("copies", Value::Arr(copies));
+                    o
+                })
+                .collect();
+            v.set("pairs", Value::Arr(pairs));
+        }
+        v
+    }
+
+    /// Deserialize a shipped delta, re-running [`validate`](Self::validate)
+    /// so a tampered or truncated wire form is rejected instead of trusted.
+    pub fn from_json(v: &Value) -> Result<PlanDelta, String> {
+        let form = v.get("form").and_then(Value::as_str).ok_or("form: missing")?;
+        let threads = super::plan::json_usize(v, "threads")?;
+        let fp_hex = v.get("base_fp").and_then(Value::as_str).ok_or("base_fp: missing")?;
+        let base_fp = u64::from_str_radix(fp_hex, 16)
+            .map_err(|_| format!("base_fp: {fp_hex:?} is not a hex u64"))?;
+        let raw = v.get("pairs").and_then(Value::as_arr).ok_or("pairs: not an array")?;
+        let (mut gather, mut strided) = (Vec::new(), Vec::new());
+        for (i, p) in raw.iter().enumerate() {
+            let receiver = num_u32(p.get("receiver").ok_or("receiver: missing")?, "receiver")?;
+            let sender = num_u32(p.get("sender").ok_or("sender: missing")?, "sender")?;
+            match form {
+                "gather" => gather.push(GatherPatch {
+                    receiver,
+                    sender,
+                    indices: json_u32s(p, "indices")?,
+                    local_src: json_u32s(p, "local_src")?,
+                }),
+                "strided" => {
+                    let raw_copies =
+                        p.get("copies").and_then(Value::as_arr).ok_or("copies: not an array")?;
+                    let mut copies = Vec::with_capacity(raw_copies.len());
+                    for c in raw_copies {
+                        let q = c
+                            .as_arr()
+                            .filter(|q| q.len() == 10)
+                            .ok_or_else(|| format!("pairs[{i}]: copy wants 10 numbers"))?;
+                        let block = |at: usize| -> Result<StridedBlock, String> {
+                            Ok(StridedBlock {
+                                offset: num_u32(&q[at], "block.offset")? as usize,
+                                rows: num_u32(&q[at + 1], "block.rows")? as usize,
+                                row_stride: num_u32(&q[at + 2], "block.row_stride")? as usize,
+                                cols: num_u32(&q[at + 3], "block.cols")? as usize,
+                                col_stride: num_u32(&q[at + 4], "block.col_stride")? as usize,
+                            })
+                        };
+                        copies.push((block(0)?, block(5)?));
+                    }
+                    strided.push(StridedPatch { receiver, sender, copies });
+                }
+                other => return Err(format!("unknown delta form {other:?}")),
+            }
+        }
+        let d = PlanDelta { threads, base_fp, gather, strided };
+        d.validate().map_err(|e| format!("shipped delta invalid: {e}"))?;
+        Ok(d)
+    }
+}
+
+fn check_pair(
+    threads: usize,
+    receiver: u32,
+    sender: u32,
+    prev: &mut Option<(u32, u32)>,
+) -> Result<(), String> {
+    if receiver as usize >= threads || sender as usize >= threads {
+        return Err(format!("patch ({receiver}, {sender}) names an out-of-range thread"));
+    }
+    if receiver == sender {
+        return Err(format!("patch ({receiver}, {sender}) is a self-pair"));
+    }
+    if prev.is_some_and(|p| p >= (receiver, sender)) {
+        return Err("patches not sorted by (receiver, sender)".into());
+    }
+    *prev = Some((receiver, sender));
+    Ok(())
+}
+
+/// Per-receiver content of a condensed gather plan as a sorted pair list:
+/// `(sender, indices, local_src)`.
+fn gather_pairs(plan: &CommPlan, t: usize) -> Vec<(u32, Vec<u32>, Vec<u32>)> {
+    plan.recv_msgs(t).map(|m| (m.peer, m.indices.to_vec(), m.local_src.to_vec())).collect()
+}
+
+fn diff_gather(old: &CommPlan, new: &CommPlan, base_fp: u64) -> Result<PlanDelta, String> {
+    for (name, p) in [("old", old), ("new", new)] {
+        if !p.is_condensed() {
+            return Err(format!("{name} generation is not condensed; delta needs one msg per pair"));
+        }
+    }
+    let threads = old.threads();
+    let mut patches = Vec::new();
+    for t in 0..threads {
+        let a = gather_pairs(old, t);
+        let b = gather_pairs(new, t);
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() || j < b.len() {
+            match (a.get(i), b.get(j)) {
+                (Some(x), Some(y)) if x.0 == y.0 => {
+                    if x.1 != y.1 || x.2 != y.2 {
+                        patches.push(GatherPatch {
+                            receiver: t as u32,
+                            sender: y.0,
+                            indices: y.1.clone(),
+                            local_src: y.2.clone(),
+                        });
+                    }
+                    i += 1;
+                    j += 1;
+                }
+                (Some(x), Some(y)) if x.0 < y.0 => {
+                    patches.push(removed_gather(t as u32, x.0));
+                    i += 1;
+                }
+                (Some(_), Some(y)) => {
+                    patches.push(GatherPatch {
+                        receiver: t as u32,
+                        sender: y.0,
+                        indices: y.1.clone(),
+                        local_src: y.2.clone(),
+                    });
+                    j += 1;
+                }
+                (Some(x), None) => {
+                    patches.push(removed_gather(t as u32, x.0));
+                    i += 1;
+                }
+                (None, Some(y)) => {
+                    patches.push(GatherPatch {
+                        receiver: t as u32,
+                        sender: y.0,
+                        indices: y.1.clone(),
+                        local_src: y.2.clone(),
+                    });
+                    j += 1;
+                }
+                (None, None) => unreachable!(),
+            }
+        }
+    }
+    PlanDelta::from_gather_patches(threads, base_fp, patches)
+}
+
+fn removed_gather(receiver: u32, sender: u32) -> GatherPatch {
+    GatherPatch { receiver, sender, indices: Vec::new(), local_src: Vec::new() }
+}
+
+/// Group a strided plan's copies into per-`(receiver, sender)` runs,
+/// rejecting plans that are not in the canonical consolidated order.
+#[allow(clippy::type_complexity)]
+fn strided_pairs(
+    plan: &StridedPlan,
+) -> Result<Vec<(u32, u32, Vec<(StridedBlock, StridedBlock)>)>, String> {
+    let mut pairs: Vec<(u32, u32, Vec<(StridedBlock, StridedBlock)>)> = Vec::new();
+    for (sender, receiver, src, dst) in plan.copies() {
+        let key = (receiver as u32, sender as u32);
+        match pairs.last_mut() {
+            Some(last) if (last.0, last.1) == key => last.2.push((src, dst)),
+            _ => {
+                if pairs.iter().any(|p| (p.0, p.1) == key)
+                    || pairs.last().is_some_and(|p| (p.0, p.1) > key)
+                {
+                    return Err(
+                        "strided plan not in canonical (receiver, sender) order; \
+                         consolidate it before entering the delta lifecycle"
+                            .into(),
+                    );
+                }
+                pairs.push((key.0, key.1, vec![(src, dst)]));
+            }
+        }
+    }
+    Ok(pairs)
+}
+
+fn diff_strided(old: &StridedPlan, new: &StridedPlan, base_fp: u64) -> Result<PlanDelta, String> {
+    let threads = old.threads();
+    let a = strided_pairs(old)?;
+    let b = strided_pairs(new)?;
+    let mut patches = Vec::new();
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() || j < b.len() {
+        match (a.get(i), b.get(j)) {
+            (Some(x), Some(y)) if (x.0, x.1) == (y.0, y.1) => {
+                if x.2 != y.2 {
+                    patches.push(StridedPatch { receiver: y.0, sender: y.1, copies: y.2.clone() });
+                }
+                i += 1;
+                j += 1;
+            }
+            (Some(x), Some(y)) if (x.0, x.1) < (y.0, y.1) => {
+                patches.push(StridedPatch { receiver: x.0, sender: x.1, copies: Vec::new() });
+                i += 1;
+            }
+            (Some(_), Some(y)) => {
+                patches.push(StridedPatch { receiver: y.0, sender: y.1, copies: y.2.clone() });
+                j += 1;
+            }
+            (Some(x), None) => {
+                patches.push(StridedPatch { receiver: x.0, sender: x.1, copies: Vec::new() });
+                i += 1;
+            }
+            (None, Some(y)) => {
+                patches.push(StridedPatch { receiver: y.0, sender: y.1, copies: y.2.clone() });
+                j += 1;
+            }
+            (None, None) => unreachable!(),
+        }
+    }
+    PlanDelta::from_strided_patches(threads, base_fp, patches)
+}
+
+fn apply_gather(plan: &CommPlan, delta: &PlanDelta) -> Result<CommPlan, String> {
+    if !plan.is_condensed() {
+        return Err("incremental recompile requires a condensed gather plan".into());
+    }
+    let threads = plan.threads();
+    let mut recv: Vec<Vec<(u32, u32, u32)>> = Vec::with_capacity(threads);
+    let mut at = 0usize;
+    for t in 0..threads {
+        let begin = at;
+        while at < delta.gather.len() && (delta.gather[at].receiver as usize) == t {
+            at += 1;
+        }
+        let mut patches = delta.gather[begin..at].iter().peekable();
+        let mut triples: Vec<(u32, u32, u32)> = Vec::new();
+        // Sorted merge by sender: patched pairs replace (or remove) the old
+        // pair's run, added pairs splice in at their sender position, clean
+        // pairs copy straight out of the old arena.
+        for m in plan.recv_msgs(t) {
+            while patches.peek().is_some_and(|p| p.sender < m.peer) {
+                push_gather_patch(patches.next().unwrap(), &mut triples);
+            }
+            if patches.peek().is_some_and(|p| p.sender == m.peer) {
+                push_gather_patch(patches.next().unwrap(), &mut triples);
+                continue;
+            }
+            for (&idx, &loc) in m.indices.iter().zip(m.local_src) {
+                triples.push((m.peer, idx, loc));
+            }
+        }
+        for p in patches {
+            push_gather_patch(p, &mut triples);
+        }
+        recv.push(triples);
+    }
+    Ok(CommPlan::from_triples(threads, &recv, true))
+}
+
+fn push_gather_patch(p: &GatherPatch, triples: &mut Vec<(u32, u32, u32)>) {
+    for (&idx, &loc) in p.indices.iter().zip(&p.local_src) {
+        triples.push((p.sender, idx, loc));
+    }
+}
+
+fn apply_strided(plan: &StridedPlan, delta: &PlanDelta) -> Result<StridedPlan, String> {
+    let threads = plan.threads();
+    let old = strided_pairs(plan)?;
+    let mut patches = delta.strided.iter().peekable();
+    let mut copies: Vec<(usize, usize, StridedBlock, StridedBlock)> = Vec::new();
+    let mut push_pair = |receiver: u32, sender: u32, content: &[(StridedBlock, StridedBlock)]| {
+        for &(src, dst) in content {
+            copies.push((sender as usize, receiver as usize, src, dst));
+        }
+    };
+    for (receiver, sender, content) in &old {
+        let key = (*receiver, *sender);
+        while patches.peek().is_some_and(|p| (p.receiver, p.sender) < key) {
+            let p = patches.next().unwrap();
+            push_pair(p.receiver, p.sender, &p.copies);
+        }
+        if patches.peek().is_some_and(|p| (p.receiver, p.sender) == key) {
+            let p = patches.next().unwrap();
+            push_pair(p.receiver, p.sender, &p.copies);
+            continue;
+        }
+        push_pair(*receiver, *sender, content);
+    }
+    for p in patches {
+        push_pair(p.receiver, p.sender, &p.copies);
+    }
+    Ok(StridedPlan::from_msgs(threads, &copies))
+}
+
+impl ExchangePlan {
+    /// Patch this generation into the next: replace each dirty
+    /// `(receiver, sender)` pair's arena run with the delta's content, copy
+    /// every clean pair verbatim, and rebuild the offset tables. The result
+    /// is fingerprint-identical to compiling the new generation from
+    /// scratch (the property suite in `rust/tests/plan_delta.rs` pins
+    /// this), at `O(arena memmove + |delta|)` cost instead of a global
+    /// sort over every value.
+    pub fn apply_delta(&self, delta: &PlanDelta) -> Result<ExchangePlan, String> {
+        delta.validate()?;
+        if delta.threads() != self.threads() {
+            return Err(format!(
+                "delta compiled for {} threads, plan has {}",
+                delta.threads(),
+                self.threads()
+            ));
+        }
+        if delta.base_fingerprint() != self.fingerprint() {
+            return Err(format!(
+                "delta base fingerprint {:016x} does not match plan generation {:016x}",
+                delta.base_fingerprint(),
+                self.fingerprint()
+            ));
+        }
+        match self {
+            ExchangePlan::Gather(p) => {
+                if !delta.strided.is_empty() {
+                    return Err("strided delta applied to a gather plan".into());
+                }
+                Ok(ExchangePlan::Gather(apply_gather(p, delta)?))
+            }
+            ExchangePlan::Strided(p) => {
+                if !delta.gather.is_empty() {
+                    return Err("gather delta applied to a strided plan".into());
+                }
+                Ok(ExchangePlan::Strided(apply_strided(p, delta)?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pgas::Layout;
+
+    fn layout() -> Layout {
+        Layout::new(12, 2, 3)
+    }
+
+    fn gather_plan(needs: &[Vec<(u32, u32)>]) -> ExchangePlan {
+        CommPlan::from_recv_needs(&layout(), needs).into()
+    }
+
+    #[test]
+    fn gather_diff_apply_matches_from_scratch() {
+        let old = gather_plan(&[vec![(1, 2), (1, 3), (2, 4)], vec![], vec![(0, 0), (1, 8)]]);
+        // Mutations: t0 drops one index from t1 and gains t2's 5; t2's pair
+        // with t0 disappears; t1 gains a new pair with t2.
+        let new = gather_plan(&[vec![(1, 2), (2, 4), (2, 5)], vec![(2, 10)], vec![(1, 8)]]);
+        let d = PlanDelta::diff(&old, &new).unwrap();
+        assert!(!d.is_empty());
+        assert_eq!(d.base_fingerprint(), old.fingerprint());
+        let patched = old.apply_delta(&d).unwrap();
+        assert_eq!(patched.fingerprint(), new.fingerprint());
+        patched.validate(&|_| usize::MAX).unwrap();
+    }
+
+    #[test]
+    fn empty_diff_is_identity() {
+        let a = gather_plan(&[vec![(1, 2), (2, 4)], vec![], vec![(0, 0)]]);
+        let b = gather_plan(&[vec![(1, 2), (2, 4)], vec![], vec![(0, 0)]]);
+        let d = PlanDelta::diff(&a, &b).unwrap();
+        assert!(d.is_empty());
+        assert_eq!(d.dirty_pairs(), 0);
+        assert_eq!(a.apply_delta(&d).unwrap().fingerprint(), a.fingerprint());
+    }
+
+    #[test]
+    fn stale_delta_is_rejected() {
+        let a = gather_plan(&[vec![(1, 2)], vec![], vec![]]);
+        let b = gather_plan(&[vec![(1, 2), (1, 3)], vec![], vec![]]);
+        let c = gather_plan(&[vec![(2, 4)], vec![], vec![]]);
+        let d = PlanDelta::diff(&a, &b).unwrap();
+        // Applying a's delta to c (a different generation) must fail.
+        let err = c.apply_delta(&d).unwrap_err();
+        assert!(err.contains("does not match"), "{err}");
+    }
+
+    #[test]
+    fn strided_diff_apply_matches_from_scratch() {
+        let row = StridedBlock::row;
+        // Canonical (receiver, sender) order.
+        let old = ExchangePlan::Strided(StridedPlan::from_msgs(
+            3,
+            &[
+                (1, 0, row(0, 2), row(4, 2)),
+                (2, 0, row(2, 2), row(6, 2)),
+                (0, 1, row(0, 2), row(4, 2)),
+            ],
+        ));
+        let new = ExchangePlan::Strided(StridedPlan::from_msgs(
+            3,
+            &[
+                (1, 0, row(0, 3), row(4, 3)),
+                (0, 1, row(0, 2), row(4, 2)),
+                (0, 2, row(1, 2), row(6, 2)),
+            ],
+        ));
+        let d = PlanDelta::diff(&old, &new).unwrap();
+        assert_eq!(d.form_name(), "strided");
+        let patched = old.apply_delta(&d).unwrap();
+        assert_eq!(patched.fingerprint(), new.fingerprint());
+    }
+
+    #[test]
+    fn chain_fingerprint_tracks_history() {
+        let g0 = gather_plan(&[vec![(1, 2)], vec![], vec![]]);
+        let g1 = gather_plan(&[vec![(1, 2), (1, 3)], vec![], vec![]]);
+        let g2 = gather_plan(&[vec![(1, 3)], vec![], vec![]]);
+        let d1 = PlanDelta::diff(&g0, &g1).unwrap();
+        let d2 = PlanDelta::diff(&g1, &g2).unwrap();
+        let c1 = chain_fingerprint(g0.fingerprint(), &d1);
+        let c2 = chain_fingerprint(c1, &d2);
+        // Replaying the same history reproduces the chain; a different
+        // history diverges.
+        assert_eq!(chain_fingerprint(c1, &d2), c2);
+        assert_ne!(chain_fingerprint(g0.fingerprint(), &d2), c1);
+        assert_ne!(c1, c2);
+    }
+
+    #[test]
+    fn delta_json_roundtrip_preserves_fingerprint() {
+        let old = gather_plan(&[vec![(1, 2), (2, 4)], vec![], vec![(0, 0)]]);
+        let new = gather_plan(&[vec![(1, 2), (1, 3)], vec![], vec![(0, 0), (1, 8)]]);
+        let d = PlanDelta::diff(&old, &new).unwrap();
+        let text = d.to_json().compact();
+        let back = PlanDelta::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.fingerprint(), d.fingerprint());
+        assert_eq!(back.base_fingerprint(), d.base_fingerprint());
+        assert_eq!(old.apply_delta(&back).unwrap().fingerprint(), new.fingerprint());
+
+        let row = StridedBlock::row;
+        let s_old = ExchangePlan::Strided(StridedPlan::from_msgs(
+            2,
+            &[(1, 0, row(0, 2), row(4, 2)), (0, 1, row(0, 2), row(4, 2))],
+        ));
+        let s_new = ExchangePlan::Strided(StridedPlan::from_msgs(
+            2,
+            &[(1, 0, row(0, 4), row(4, 4)), (0, 1, row(0, 2), row(4, 2))],
+        ));
+        let d = PlanDelta::diff(&s_old, &s_new).unwrap();
+        let text = d.to_json().compact();
+        let back = PlanDelta::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(s_old.apply_delta(&back).unwrap().fingerprint(), s_new.fingerprint());
+    }
+
+    #[test]
+    fn tampered_delta_is_rejected() {
+        let old = gather_plan(&[vec![(1, 2), (2, 4)], vec![], vec![]]);
+        let new = gather_plan(&[vec![(1, 3)], vec![], vec![]]);
+        let d = PlanDelta::diff(&old, &new).unwrap();
+        let mut v = d.to_json();
+        v.set("base_fp", Value::Str("zz".into()));
+        assert!(PlanDelta::from_json(&v).is_err());
+        let mut v = d.to_json();
+        v.set("form", Value::Str("mystery".into()));
+        assert!(PlanDelta::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn patch_accounting_reports_delta_size() {
+        let old = gather_plan(&[vec![(1, 2), (1, 3), (2, 4)], vec![], vec![(0, 0)]]);
+        let new = gather_plan(&[vec![(1, 2), (1, 3), (2, 4), (2, 5)], vec![], vec![]]);
+        let d = PlanDelta::diff(&old, &new).unwrap();
+        // Dirty pairs: (0, 2) content change + (2, 0) removal.
+        assert_eq!(d.dirty_pairs(), 2);
+        assert_eq!(d.patch_values(), 2); // indices 4, 5; the removal adds 0
+    }
+}

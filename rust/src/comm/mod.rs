@@ -26,11 +26,13 @@
 //! [`Topology`]: crate::pgas::Topology
 
 mod analysis;
+mod delta;
 mod exchange;
 mod optimize;
 mod plan;
 
 pub use analysis::{Analysis, RowRun, RowSplit, ThreadTraffic};
+pub use delta::{chain_fingerprint, GatherPatch, PlanDelta, StridedPatch};
 pub use exchange::{ComputeSplit, ExchangePlan, StridedBlock, StridedMsg, StridedPlan};
 pub use optimize::{refine_strided, PlanOptimizer, PlanStats};
 pub use plan::{CommPlan, PlanMsg};

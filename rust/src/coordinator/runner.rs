@@ -59,6 +59,10 @@ pub struct RunConfig {
     /// slots; the `e − D` ack-gate distance). Depth never changes numerics
     /// — only how much sender/receiver skew the pipeline absorbs.
     pub depth: usize,
+    /// `--depth auto`: ignore `depth` and resolve D through the
+    /// depth-aware pipeline model (`choose_depth` over the run's own
+    /// overlap prediction) once the plan is compiled.
+    pub auto_depth: bool,
     pub hw: HwParams,
     pub seed: u64,
 }
@@ -80,6 +84,7 @@ impl RunConfig {
             backend: Backend::Native,
             engine: Engine::Sequential,
             depth: 2,
+            auto_depth: false,
             hw: HwParams::abel(),
             seed: 0xC0FFEE,
         }
@@ -135,6 +140,9 @@ pub struct RunReport {
     pub step_bytes: u64,
     /// Backend actually used.
     pub backend: Backend,
+    /// Pipeline buffer depth the engine actually ran with (the flag value,
+    /// or the model's pick under `--depth auto`).
+    pub depth: usize,
 }
 
 /// The end-to-end runner.
@@ -203,7 +211,17 @@ impl Runner {
             Backend::Pjrt => Engine::Sequential,
             Backend::Native => cfg.engine,
         });
-        engine.set_depth(cfg.depth.max(1));
+        // `--depth auto`: resolve D through the same `choose_depth` sweep
+        // the grid drivers print, evaluated on this run's actual plan and
+        // topology. Only V3 has a compiled exchange to buffer, so the
+        // other variants keep the flag value (depth is inert for them).
+        let depth = if cfg.auto_depth && cfg.variant == Variant::V3 {
+            let ovl = model::predict_v3_overlap(&inp);
+            model::choose_depth(&ovl, cfg.exec_steps.max(1), hw.tau).0
+        } else {
+            cfg.depth.max(1)
+        };
+        engine.set_depth(depth);
         for _ in 0..cfg.exec_steps {
             let out = match &mut pjrt {
                 Some(p) => run_variant_with(cfg.variant, &mut state, Some(&analysis), p),
@@ -240,6 +258,7 @@ impl Runner {
             exec_wall,
             step_bytes,
             backend: cfg.backend,
+            depth,
         })
     }
 }

@@ -11,7 +11,19 @@
 //! The fingerprint is RNG-free and address-free, so it is stable across
 //! runs and processes; `restore` refuses a checkpoint whose fingerprint
 //! does not match the live plan, which catches "resumed onto a different
-//! decomposition" bugs before they corrupt fields.
+//! decomposition" bugs before they corrupt fields. Two more identity
+//! checks ride along:
+//!
+//! * the **pipeline depth** — a batch checkpointed at `--depth 3` must not
+//!   silently resume under depth 2 (the schedules are bitwise-equal, but
+//!   the run's recorded configuration would lie, and a depth-1 resume of a
+//!   deep batch changes the stall envelope the run was validated under);
+//! * the **plan generation** — with the versioned plan lifecycle a
+//!   fingerprint match alone is necessary but not sufficient bookkeeping:
+//!   generation `g` under one delta history and generation `g'` under
+//!   another can coincide structurally, yet the runtimes disagree about
+//!   how many rebuilds happened (and will disagree about every future
+//!   chain fingerprint). Restore requires both to match.
 //!
 //! Checkpoints deliberately stay in memory as `f64` vectors rather than a
 //! serialized file format: the acceptance bar is *bitwise* identity with an
@@ -29,6 +41,12 @@ pub struct Checkpoint {
     /// [`ExchangePlan::fingerprint`](crate::comm::ExchangePlan::fingerprint)
     /// of the plan the snapshot was taken under.
     pub plan_hash: u64,
+    /// Pipeline depth D the batch ran at; restore rejects a mismatch.
+    pub depth: usize,
+    /// Plan generation the snapshot was taken under
+    /// ([`ExchangeRuntime::generation`](crate::engine::ExchangeRuntime::generation));
+    /// restore rejects a mismatch.
+    pub generation: u64,
     /// Per-thread primary fields (`phi`).
     pub fields: Vec<Vec<f64>>,
     /// Per-thread scratch fields (`phin`).
@@ -48,6 +66,8 @@ pub struct SpmvCheckpoint {
     /// Fingerprint of the communication plan
     /// ([`crate::comm::CommPlan::fingerprint`]).
     pub plan_hash: u64,
+    /// Pipeline depth D the batch ran at; restore rejects a mismatch.
+    pub depth: usize,
     pub x: Vec<f64>,
     pub y: Vec<f64>,
 }
@@ -64,6 +84,32 @@ pub(crate) fn check_plan_hash(kind: &str, expected: u64, got: u64) -> Result<(),
     }
 }
 
+/// Shared restore-time validation: a batch checkpointed at depth D must be
+/// resumed at depth D.
+pub(crate) fn check_depth(kind: &str, live: usize, recorded: usize) -> Result<(), String> {
+    if live == recorded {
+        Ok(())
+    } else {
+        Err(format!(
+            "{kind} checkpoint was taken at pipeline depth {recorded} but the live runtime \
+             does not match (depth {live})"
+        ))
+    }
+}
+
+/// Shared restore-time validation: the snapshot's plan generation must be
+/// the runtime's current one.
+pub(crate) fn check_generation(kind: &str, live: u64, recorded: u64) -> Result<(), String> {
+    if live == recorded {
+        Ok(())
+    } else {
+        Err(format!(
+            "{kind} checkpoint was taken under plan generation {recorded} but the live runtime \
+             does not match (generation {live})"
+        ))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,6 +119,18 @@ mod tests {
         assert!(check_plan_hash("heat2d", 7, 7).is_ok());
         let err = check_plan_hash("spmv", 1, 2).unwrap_err();
         assert!(err.contains("spmv"), "{err}");
+        assert!(err.contains("does not match"), "{err}");
+    }
+
+    #[test]
+    fn depth_and_generation_checks() {
+        assert!(check_depth("heat2d", 3, 3).is_ok());
+        let err = check_depth("heat2d", 2, 3).unwrap_err();
+        assert!(err.contains("depth 3"), "{err}");
+        assert!(err.contains("does not match"), "{err}");
+        assert!(check_generation("stencil3d", 4, 4).is_ok());
+        let err = check_generation("stencil3d", 0, 2).unwrap_err();
+        assert!(err.contains("generation 2"), "{err}");
         assert!(err.contains("does not match"), "{err}");
     }
 }

@@ -63,11 +63,41 @@ use super::fault::FaultPlan;
 use super::pool::{
     ArenaView, EpochFlags, PerWorker, Phase, PoolHealth, WaitTuning, WorkerCtx, WorkerPool,
 };
+use super::reduce::ReductionPlan;
 use super::Engine;
-use crate::comm::ExchangePlan;
+use crate::comm::{ExchangePlan, PlanDelta};
 use crate::transport::{must, PoolEndpoint, Transport};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
+
+/// Compile the per-thread peer lists (distinct senders and receivers) from
+/// a plan — the exact flag/ack sets the split-phase waits touch. Re-run on
+/// every generation swap, since dirty pairs can add or remove edges.
+fn compile_peers(plan: &ExchangePlan) -> (Vec<Vec<u32>>, Vec<Vec<u32>>) {
+    let threads = plan.threads();
+    let dedup_peers = |mut s: Vec<u32>| {
+        s.sort_unstable();
+        s.dedup();
+        s
+    };
+    let senders = (0..threads)
+        .map(|t| {
+            dedup_peers(match plan {
+                ExchangePlan::Gather(p) => p.recv_msgs(t).map(|m| m.peer).collect(),
+                ExchangePlan::Strided(p) => p.recv_msgs(t).map(|m| m.peer).collect(),
+            })
+        })
+        .collect();
+    let receivers = (0..threads)
+        .map(|t| {
+            dedup_peers(match plan {
+                ExchangePlan::Gather(p) => p.send_msgs(t).map(|m| m.peer).collect(),
+                ExchangePlan::Strided(p) => p.send_msgs(t).map(|m| m.peer).collect(),
+            })
+        })
+        .collect();
+    (senders, receivers)
+}
 
 /// A compiled plan bound to its staging arena and worker pool. Workloads
 /// (heat-2D, the 3D stencil) own one and call [`step_strided`] or
@@ -117,6 +147,12 @@ pub struct ExchangeRuntime {
     /// Structural fingerprint of `plan`, cached at construction; checkpoint
     /// restore verifies against it.
     plan_hash: u64,
+    /// Plan generation: 0 for the construction-time plan, bumped by every
+    /// [`install_plan`](ExchangeRuntime::install_plan) /
+    /// [`apply_delta`](ExchangeRuntime::apply_delta). Checkpoints record it
+    /// alongside the fingerprint so a restore lands on the exact generation
+    /// it was taken under.
+    generation: u64,
 }
 
 impl ExchangeRuntime {
@@ -139,27 +175,7 @@ impl ExchangeRuntime {
         );
         let threads = plan.threads();
         let staging = vec![0.0f64; depth * plan.total_values()];
-        let dedup_peers = |mut s: Vec<u32>| {
-            s.sort_unstable();
-            s.dedup();
-            s
-        };
-        let senders: Vec<Vec<u32>> = (0..threads)
-            .map(|t| {
-                dedup_peers(match &plan {
-                    ExchangePlan::Gather(p) => p.recv_msgs(t).map(|m| m.peer).collect(),
-                    ExchangePlan::Strided(p) => p.recv_msgs(t).map(|m| m.peer).collect(),
-                })
-            })
-            .collect();
-        let receivers: Vec<Vec<u32>> = (0..threads)
-            .map(|t| {
-                dedup_peers(match &plan {
-                    ExchangePlan::Gather(p) => p.send_msgs(t).map(|m| m.peer).collect(),
-                    ExchangePlan::Strided(p) => p.send_msgs(t).map(|m| m.peer).collect(),
-                })
-            })
-            .collect();
+        let (senders, receivers) = compile_peers(&plan);
         let plan_hash = plan.fingerprint();
         ExchangeRuntime {
             plan,
@@ -174,6 +190,7 @@ impl ExchangeRuntime {
             max_lead: AtomicU64::new(0),
             faults: FaultPlan::default(),
             plan_hash,
+            generation: 0,
         }
     }
 
@@ -196,6 +213,58 @@ impl ExchangeRuntime {
         self.depth = depth;
         self.staging.clear();
         self.staging.resize(depth * self.plan.total_values(), 0.0);
+    }
+
+    /// The current plan generation (0 = the construction-time plan; each
+    /// successful [`install_plan`](ExchangeRuntime::install_plan) or
+    /// [`apply_delta`](ExchangeRuntime::apply_delta) bumps it).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Swap in the next plan generation **without tearing anything down**:
+    /// the worker pool keeps running, the epoch counters keep their
+    /// monotone history (so protocols stay mixable across the swap), and
+    /// the staging arena grows or shrinks in place to
+    /// `depth × total_values()` of the new plan. Only the plan-derived
+    /// state is recompiled: peer lists, fingerprint, arena size.
+    ///
+    /// `&mut self` *is* the epoch boundary — no dispatch can be in flight —
+    /// which is what makes the swap race-free without a barrier. The new
+    /// plan must be compiled for the same thread count (the flag/ack arrays
+    /// and pool cohort are sized by it). Returns the new generation number.
+    pub fn install_plan(&mut self, plan: impl Into<ExchangePlan>) -> Result<u64, String> {
+        let plan = plan.into();
+        if plan.threads() != self.flags.len() {
+            return Err(format!(
+                "generation swap changes thread count ({} -> {})",
+                self.flags.len(),
+                plan.threads()
+            ));
+        }
+        plan.validate(&|_| usize::MAX)
+            .map_err(|e| format!("next plan generation failed validation: {e}"))?;
+        let (senders, receivers) = compile_peers(&plan);
+        self.plan_hash = plan.fingerprint();
+        self.senders = senders;
+        self.receivers = receivers;
+        self.plan = plan;
+        self.staging.clear();
+        self.staging.resize(self.depth * self.plan.total_values(), 0.0);
+        self.generation += 1;
+        Ok(self.generation)
+    }
+
+    /// Advance the plan by a [`PlanDelta`] — the incremental-recompile
+    /// path: patch only the dirty `(receiver, sender)` pairs
+    /// ([`ExchangePlan::apply_delta`]), then swap the patched generation in
+    /// via [`install_plan`](ExchangeRuntime::install_plan). The delta's
+    /// base fingerprint must match the live plan, so a stale or misrouted
+    /// delta is rejected before anything is touched. Returns the new
+    /// generation number.
+    pub fn apply_delta(&mut self, delta: &PlanDelta) -> Result<u64, String> {
+        let next = self.plan.apply_delta(delta)?;
+        self.install_plan(next)
     }
 
     /// The distinct senders of thread `t` (the peers `finish_exchange`
@@ -750,6 +819,172 @@ impl ExchangeRuntime {
             }
         }
     }
+
+    /// [`run_pipelined`](ExchangeRuntime::run_pipelined) with an exact
+    /// tolerance stop: after each epoch's boundary compute, every worker
+    /// contributes `metric(t, cur, nxt)` (e.g. its local `max |nxt − cur|`)
+    /// to `reduction`'s tree combine, and gates the *next* epoch on the
+    /// root's verdict for this one. The batch therefore executes exactly
+    /// epochs `1..=e*`, where `e*` is the first epoch whose tree-folded
+    /// metric reaches the reduction's tolerance — the same step a
+    /// synchronous check-every-step loop stops at, bitwise (both engines
+    /// fold in [`tree_fold`](crate::engine::tree_fold) order). No global
+    /// barrier appears anywhere: the only new waits are tree edges and the
+    /// root's verdict counter (see [`ReductionPlan`]).
+    ///
+    /// `reduction` must be fresh for this call (its epochs are relative to
+    /// the batch) and compiled for the plan's thread count. Returns the
+    /// number of steps executed (`e*`, or `max_steps` if the tolerance was
+    /// never reached). On return `fields` holds the final state, exactly as
+    /// `run_pipelined(executed, ..)` would leave it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_pipelined_until<UI, UB, M>(
+        &mut self,
+        engine: Engine,
+        max_steps: usize,
+        fields: &mut [Vec<f64>],
+        out: &mut [Vec<f64>],
+        interior: UI,
+        boundary: UB,
+        metric: M,
+        reduction: &ReductionPlan,
+    ) -> usize
+    where
+        UI: Fn(usize, &mut [f64], &mut [f64]) + Sync,
+        UB: Fn(usize, &mut [f64], &mut [f64]) + Sync,
+        M: Fn(usize, &[f64], &[f64]) -> f64 + Sync,
+    {
+        let plan = self
+            .plan
+            .as_strided()
+            .expect("run_pipelined_until needs a strided exchange plan");
+        let threads = plan.threads();
+        assert_eq!(fields.len(), threads, "one field per thread");
+        assert_eq!(out.len(), threads, "one output field per thread");
+        assert_eq!(reduction.threads(), threads, "reduction tree arity must match the plan");
+        if max_steps == 0 {
+            return 0;
+        }
+        let total = plan.total_values();
+        let depth = self.depth;
+        debug_assert_eq!(self.staging.len(), depth * total);
+        match engine {
+            Engine::Sequential => {
+                // The oracle: overlapped steps with a check after every one,
+                // feeding the same reduction tree (children before parents,
+                // so every wait is already satisfied) — which keeps the
+                // stopping decision, not just the fields, on the shared
+                // code path.
+                let mut executed = 0usize;
+                for k in 1..=max_steps as u64 {
+                    self.step_overlapped(engine, fields, out, &interior, &boundary);
+                    for t in (0..threads).rev() {
+                        let v = metric(t, &fields[t], &out[t]);
+                        reduction
+                            .combine(t, k, v)
+                            .unwrap_or_else(|e| panic!("sequential reduce: {e}"));
+                    }
+                    for (field, o) in fields.iter_mut().zip(out.iter_mut()) {
+                        std::mem::swap(field, o);
+                    }
+                    executed = k as usize;
+                    if reduction.stopped_by(k).is_some() {
+                        break;
+                    }
+                }
+                executed
+            }
+            Engine::Parallel => {
+                let base = self.epoch;
+                let arena = ArenaView::new(&mut self.staging);
+                let fw = PerWorker::new(fields);
+                let ow = PerWorker::new(out);
+                let (interior, boundary, metric) = (&interior, &boundary, &metric);
+                let (flags, acks) = (&self.flags, &self.acks);
+                let (senders, receivers) = (&self.senders, &self.receivers);
+                let faults = &self.faults;
+                self.pool.run(threads, &|ctx: WorkerCtx| {
+                    let t = ctx.id;
+                    // SAFETY: same disjointness argument as `run_pipelined`;
+                    // the verdict gate only *shortens* the epoch sequence,
+                    // uniformly across workers.
+                    let mut ep =
+                        unsafe { PoolEndpoint::new(t, total, depth, flags, acks, &arena, &ctx) };
+                    // SAFETY: worker t claims only its own field/out pair.
+                    let mut cur = unsafe { fw.take(t) };
+                    let mut nxt = unsafe { ow.take(t) };
+                    for k in 1..=max_steps as u64 {
+                        // Stop gate: enter epoch k only once the root judged
+                        // k − 1 unconverged. Lag 1 keeps the stop exact.
+                        match reduction.wait_verdict(k - 1, t) {
+                            Ok(None) => {}
+                            Ok(Some(_)) => break,
+                            Err(e) => panic!("reduce verdict wait: {e}"),
+                        }
+                        let epoch = base + k;
+                        let field = cur.as_mut_slice();
+                        let o = nxt.as_mut_slice();
+
+                        if k > depth as u64 {
+                            ctx.note_phase(Phase::AckGate, epoch);
+                            for &r in &receivers[t] {
+                                must(ep.wait_for_ack(r as usize, epoch - depth as u64));
+                            }
+                        }
+
+                        ctx.note_phase(Phase::Pack, epoch);
+                        faults.on_phase(t, epoch, Phase::Pack);
+                        for m in plan.send_msgs(t) {
+                            m.pack(field, ep.send_slot(epoch, m.range()));
+                        }
+                        if faults.before_publish(t, epoch) {
+                            must(ep.publish(epoch));
+                        }
+
+                        interior(t, field, o);
+
+                        ctx.note_phase(Phase::Transfer, epoch);
+                        faults.on_phase(t, epoch, Phase::Transfer);
+                        for &peer in &senders[t] {
+                            must(ep.wait_for_epoch(peer as usize, epoch));
+                        }
+                        ctx.note_phase(Phase::Unpack, epoch);
+                        faults.before_unpack(t, epoch);
+                        for m in plan.recv_msgs(t) {
+                            m.unpack(ep.recv_slot(epoch, m.range()), field);
+                        }
+                        if faults.before_ack(t, epoch) {
+                            must(ep.ack(epoch));
+                        }
+
+                        ctx.note_phase(Phase::Boundary, epoch);
+                        faults.on_phase(t, epoch, Phase::Boundary);
+                        boundary(t, field, o);
+
+                        // Contribute this epoch's metric to the tree; the
+                        // root's fold decides whether epoch k + 1 happens.
+                        let v = metric(t, field, o);
+                        if let Err(e) = reduction.combine(t, k, v) {
+                            panic!("reduce combine: {e}");
+                        }
+                        std::mem::swap(&mut cur, &mut nxt);
+                    }
+                });
+                // Every worker broke at the same epoch (the verdict gate is
+                // uniform): account the executed steps into the shared
+                // monotone epoch, and restore the caller's buffer naming.
+                let executed =
+                    reduction.stopped_by(max_steps as u64).unwrap_or(max_steps as u64) as usize;
+                self.epoch = base + executed as u64;
+                if executed % 2 == 1 {
+                    for (field, o) in fields.iter_mut().zip(out.iter_mut()) {
+                        std::mem::swap(field, o);
+                    }
+                }
+                executed
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1183,5 +1418,179 @@ mod tests {
         assert_eq!(fields[1][0], 4.0);
         assert_eq!(fields[0][5], 5.0);
         assert_eq!(rt.payload_bytes(), 16);
+    }
+
+    /// The ring plan plus one extra copy (t0's cell 3 into t1's right
+    /// ghost) — a structurally different next generation.
+    fn ring_plan_v2() -> ExchangePlan {
+        let copies = vec![
+            (0usize, 1usize, StridedBlock::row(4, 1), StridedBlock::row(0, 1)),
+            (1, 0, StridedBlock::row(1, 1), StridedBlock::row(5, 1)),
+            (0, 1, StridedBlock::row(3, 1), StridedBlock::row(5, 1)),
+        ];
+        ExchangePlan::Strided(StridedPlan::from_msgs(2, &copies))
+    }
+
+    #[test]
+    fn apply_delta_advances_generation_in_place() {
+        let mut rt = ring_runtime();
+        assert_eq!(rt.generation(), 0);
+        let old_fp = rt.plan_fingerprint();
+        let next = ring_plan_v2();
+        let d = PlanDelta::diff(rt.plan(), &next).unwrap();
+        assert_eq!(rt.apply_delta(&d).unwrap(), 1);
+        assert_eq!(rt.generation(), 1);
+        assert_eq!(rt.plan_fingerprint(), next.fingerprint());
+        assert_ne!(rt.plan_fingerprint(), old_fp);
+        // Arena resized in place to the new plan's footprint.
+        assert_eq!(rt.staging.len(), rt.depth() * rt.plan().total_values());
+        // The same delta is now stale: its base is generation 0.
+        let err = rt.apply_delta(&d).unwrap_err();
+        assert!(err.contains("does not match"), "{err}");
+        // A generation compiled for a different thread count is refused.
+        let foreign = StridedPlan::from_msgs(
+            3,
+            &[(0usize, 1usize, StridedBlock::row(4, 1), StridedBlock::row(0, 1))],
+        );
+        let err = rt.install_plan(foreign).unwrap_err();
+        assert!(err.contains("thread count"), "{err}");
+    }
+
+    #[test]
+    fn generation_swap_mid_run_stays_bitwise() {
+        // 3 steps on gen 0, swap plans without touching pool/flags/fields,
+        // 3 steps on gen 1 — versus oracles that were *born* on each plan.
+        let init = vec![
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 0.0],
+            vec![0.0, 5.0, 6.0, 7.0, 8.0, 0.0],
+        ];
+        let mut rt = ring_runtime();
+        let mut f = init.clone();
+        let mut f_oracle = init;
+        {
+            let mut rt_o = ring_runtime();
+            for _ in 0..3 {
+                f = step(&mut rt, Engine::Parallel, &mut f);
+                f_oracle = step(&mut rt_o, Engine::Sequential, &mut f_oracle);
+            }
+        }
+        rt.install_plan(ring_plan_v2()).unwrap();
+        let mut rt_o = ExchangeRuntime::new(ring_plan_v2());
+        for s in 0..3 {
+            f = step(&mut rt, Engine::Parallel, &mut f);
+            f_oracle = step(&mut rt_o, Engine::Sequential, &mut f_oracle);
+            assert_eq!(owned_cells(&f), owned_cells(&f_oracle), "gen-1 step {s}");
+        }
+        // The pool kept its workers and the epoch its history.
+        assert_eq!(rt.epoch(), 6);
+    }
+
+    /// Sync oracle for the tolerance stop: overlapped-equivalent steps with
+    /// a tree-folded residual check after every one. Returns (steps, final
+    /// fields).
+    fn until_oracle(init: &[Vec<f64>], max_steps: usize, tol: f64) -> (usize, Vec<Vec<f64>>) {
+        use crate::engine::{tree_fold, ReduceOp};
+        let mut rt = ring_runtime();
+        let mut f = init.to_vec();
+        for k in 1..=max_steps {
+            let o = step(&mut rt, Engine::Sequential, &mut f);
+            let metrics: Vec<f64> = f
+                .iter()
+                .zip(&o)
+                .map(|(cur, nxt)| {
+                    (1..5).map(|i| (nxt[i] - cur[i]).abs()).fold(f64::NEG_INFINITY, f64::max)
+                })
+                .collect();
+            let r = tree_fold(ReduceOp::Max, &metrics);
+            f = o;
+            if r <= tol {
+                return (k, f);
+            }
+        }
+        (max_steps, f)
+    }
+
+    #[test]
+    fn pipelined_until_matches_synchronous_stop_exactly() {
+        use crate::engine::{ReduceOp, ReductionPlan};
+        let init = vec![
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 0.0],
+            vec![0.0, 5.0, 6.0, 7.0, 8.0, 0.0],
+        ];
+        let metric = |_t: usize, cur: &[f64], nxt: &[f64]| {
+            (1..5).map(|i| (nxt[i] - cur[i]).abs()).fold(f64::NEG_INFINITY, f64::max)
+        };
+        for tol in [1.0, 0.25, 0.02] {
+            let (want_steps, want_f) = until_oracle(&init, 60, tol);
+            assert!(want_steps < 60, "tolerance {tol} must be reachable for this test");
+            for engine in Engine::ALL {
+                let mut rt = ring_runtime();
+                let mut f = init.clone();
+                let mut out = f.to_vec();
+                let reduction = ReductionPlan::new(2, ReduceOp::Max, tol)
+                    .with_deadline(Some(std::time::Duration::from_secs(5)));
+                let executed = rt.run_pipelined_until(
+                    engine,
+                    60,
+                    &mut f,
+                    &mut out,
+                    |_t, field, out| {
+                        for i in 2..4 {
+                            out[i] = 0.5 * (field[i - 1] + field[i + 1]);
+                        }
+                    },
+                    |_t, field, out| {
+                        for i in [1usize, 4] {
+                            out[i] = 0.5 * (field[i - 1] + field[i + 1]);
+                        }
+                    },
+                    metric,
+                    &reduction,
+                );
+                assert_eq!(executed, want_steps, "{} tol={tol}", engine.name());
+                assert_eq!(owned_cells(&f), owned_cells(&want_f), "{} tol={tol}", engine.name());
+                assert_eq!(rt.epoch(), executed as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_until_exhausts_unreachable_tolerance() {
+        use crate::engine::{ReduceOp, ReductionPlan};
+        let init = vec![
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 0.0],
+            vec![0.0, 5.0, 6.0, 7.0, 8.0, 0.0],
+        ];
+        let (want_steps, want_f) = until_oracle(&init, 5, -1.0);
+        assert_eq!(want_steps, 5);
+        for engine in Engine::ALL {
+            let mut rt = ring_runtime();
+            let mut f = init.clone();
+            let mut out = f.to_vec();
+            let reduction = ReductionPlan::new(2, ReduceOp::Max, -1.0)
+                .with_deadline(Some(std::time::Duration::from_secs(5)));
+            let executed = rt.run_pipelined_until(
+                engine,
+                5,
+                &mut f,
+                &mut out,
+                |_t, field, out| {
+                    for i in 2..4 {
+                        out[i] = 0.5 * (field[i - 1] + field[i + 1]);
+                    }
+                },
+                |_t, field, out| {
+                    for i in [1usize, 4] {
+                        out[i] = 0.5 * (field[i - 1] + field[i + 1]);
+                    }
+                },
+                |_t: usize, cur: &[f64], nxt: &[f64]| {
+                    (1..5).map(|i| (nxt[i] - cur[i]).abs()).fold(f64::NEG_INFINITY, f64::max)
+                },
+                &reduction,
+            );
+            assert_eq!(executed, 5, "{}", engine.name());
+            assert_eq!(owned_cells(&f), owned_cells(&want_f), "{}", engine.name());
+        }
     }
 }

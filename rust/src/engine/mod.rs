@@ -38,8 +38,9 @@ mod fault;
 pub mod kernels;
 mod parallel;
 mod pool;
+mod reduce;
 
-pub(crate) use checkpoint::check_plan_hash;
+pub(crate) use checkpoint::{check_depth, check_generation, check_plan_hash};
 pub use checkpoint::{Checkpoint, SpmvCheckpoint};
 pub use exchange::ExchangeRuntime;
 pub use fault::{Fault, FaultKind, FaultPlan, INJECTED_DELAY};
@@ -49,6 +50,7 @@ pub use pool::{
     ArenaView, EpochFlags, PerWorker, Phase, PoolHealth, StallError, StallReport, WaitTuning,
     WorkerCtx, WorkerHealth, WorkerPool, DEFAULT_WAIT_DEADLINE,
 };
+pub use reduce::{tree_fold, ReduceOp, ReductionPlan};
 
 use crate::comm::Analysis;
 use crate::spmv::{run_variant, ExecOutcome, SpmvState, Variant};
@@ -188,11 +190,13 @@ impl SpmvEngine {
     }
 
     /// Take a checkpoint of the SpMV time-stepping state as of `step`
-    /// completed applications, stamped with the live plan's fingerprint.
+    /// completed applications, stamped with the live plan's fingerprint and
+    /// the engine's pipeline depth.
     pub fn checkpoint(&self, step: u64, state: &SpmvState, analysis: &Analysis) -> SpmvCheckpoint {
         SpmvCheckpoint {
             step,
             plan_hash: analysis.plan.fingerprint(),
+            depth: self.depth(),
             x: state.x_global(),
             y: state.y_global(),
         }
@@ -213,6 +217,7 @@ impl SpmvEngine {
         analysis: &Analysis,
     ) -> Result<u64, String> {
         checkpoint::check_plan_hash("spmv", analysis.plan.fingerprint(), ck.plan_hash)?;
+        checkpoint::check_depth("spmv", self.depth(), ck.depth)?;
         state.restore_from(&ck.x, &ck.y);
         state.swap_xy();
         Ok(ck.step)

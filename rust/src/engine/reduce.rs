@@ -1,0 +1,372 @@
+//! Pipeline-safe tree reductions: convergence checks without a global
+//! barrier.
+//!
+//! Iterative solvers need one scalar per step — `max |x_new − x_old|` —
+//! compared against a tolerance to decide "stop". The classical shape is a
+//! global barrier plus a shared accumulator, which is exactly the
+//! primitive the whole engine was built to avoid. [`ReductionPlan`]
+//! replaces it with the same machinery the exchange protocols already use:
+//! per-thread cache-line-padded monotone epoch flags, `Release` publishes,
+//! `Acquire` waits on *specific* peers.
+//!
+//! Threads form an implicit binary heap (children of `t` are `2t+1` and
+//! `2t+2`). At epoch `e`, thread `t` waits for its (at most two) children's
+//! reduce flags to reach `e`, folds its own contribution with the
+//! children's published subtree values in the fixed order
+//! `op(op(own, left), right)`, publishes the result in its epoch-parity
+//! slot, and bumps its flag. The root's fold is the global value; the root
+//! additionally publishes a **verdict**: the first epoch whose global value
+//! reached the tolerance. Every wait is on a tree edge (or the root's
+//! verdict counter) — no thread ever waits on "everyone".
+//!
+//! Stopping is exact, not heuristic: a worker enters epoch `k` only after
+//! reading the verdict for `k − 1` (lag 1 — the minimum knowledge needed to
+//! decide "is step `k` required?"), so every worker executes exactly epochs
+//! `1..=e*` where `e*` is the first epoch with
+//! `tree_fold(op, values) <= tol` — the same step a synchronous
+//! check-every-step loop stops at, bitwise ([`tree_fold`] reproduces the
+//! combine order for the sequential oracle). The lag-1 verdict gate is the
+//! price of exactness: step `k` cannot start before step `k − 1` is known
+//! unconverged. A speculative deeper gate (run ahead, roll back overshoot)
+//! is a ROADMAP follow-up.
+//!
+//! Slot reuse is parity-2 and race-free by the verdict chain: a child
+//! overwrites its slot for epoch `e + 2` only after passing the verdict
+//! gate for `e + 1`, which the root publishes only after the parent
+//! finished folding epoch `e + 1`, which (folds are sequential per thread)
+//! happens after the parent's read of the child's epoch-`e` slot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Not-stopped sentinel for the verdict word.
+const NOT_STOPPED: u64 = u64::MAX;
+
+/// The combine operator. Fixed fold order makes the parallel tree and the
+/// sequential [`tree_fold`] oracle bitwise identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    /// `max(a, b)` — residual / convergence checks.
+    Max,
+    /// `a + b` — norms, energy accounting.
+    Sum,
+}
+
+impl ReduceOp {
+    #[inline]
+    fn apply(self, a: f64, b: f64) -> f64 {
+        match self {
+            ReduceOp::Max => a.max(b),
+            ReduceOp::Sum => a + b,
+        }
+    }
+}
+
+/// Fold per-thread contributions exactly as the parallel tree does:
+/// `node(t) = op(op(values[t], node(2t+1)), node(2t+2))`, missing children
+/// skipped. This is the sequential oracle the equivalence tests pin the
+/// parallel reduction against — same association order, same rounding.
+pub fn tree_fold(op: ReduceOp, values: &[f64]) -> f64 {
+    fn node(op: ReduceOp, values: &[f64], t: usize) -> f64 {
+        let mut acc = values[t];
+        for c in [2 * t + 1, 2 * t + 2] {
+            if c < values.len() {
+                acc = op.apply(acc, node(op, values, c));
+            }
+        }
+        acc
+    }
+    assert!(!values.is_empty(), "reduction over zero threads");
+    node(op, values, 0)
+}
+
+/// One thread's cell: a monotone reduce-epoch flag plus two epoch-parity
+/// value slots (f64 bits in `AtomicU64`), padded so publishes never
+/// false-share a waiter's line.
+#[derive(Debug, Default)]
+#[repr(align(64))]
+struct ReduceCell {
+    flag: AtomicU64,
+    slot: [AtomicU64; 2],
+}
+
+/// A compiled tree reduction over `threads` workers — see the module docs
+/// for the protocol. One instance serves one solve (epochs are relative,
+/// starting at 1); build a fresh plan per tolerance run.
+#[derive(Debug)]
+pub struct ReductionPlan {
+    op: ReduceOp,
+    /// Stop when the root's folded value is `<= tol` (residual semantics).
+    tol: f64,
+    cells: Vec<ReduceCell>,
+    /// Root-only writer: last epoch a verdict exists for (monotone).
+    verdict_epoch: AtomicU64,
+    /// Root-only writer: first epoch whose global value reached `tol`, or
+    /// [`NOT_STOPPED`]. Written (at most once) before the `Release` bump of
+    /// `verdict_epoch` for that epoch.
+    stop_at: AtomicU64,
+    /// Root's folded value per epoch parity, for reporting.
+    root_value: [AtomicU64; 2],
+    /// Give up a wait after this long; `None` waits forever (tests and
+    /// trusted in-process runs).
+    deadline: Option<Duration>,
+}
+
+impl ReductionPlan {
+    pub fn new(threads: usize, op: ReduceOp, tol: f64) -> ReductionPlan {
+        assert!(threads > 0, "reduction over zero threads");
+        ReductionPlan {
+            op,
+            tol,
+            cells: (0..threads).map(|_| ReduceCell::default()).collect(),
+            verdict_epoch: AtomicU64::new(0),
+            stop_at: AtomicU64::new(NOT_STOPPED),
+            root_value: [AtomicU64::new(0), AtomicU64::new(0)],
+            deadline: None,
+        }
+    }
+
+    /// Bound every wait (children and verdict) by `deadline` — the same
+    /// fail-fast contract as the exchange waits: a dead peer converts into
+    /// an `Err` naming the edge instead of a hang.
+    pub fn with_deadline(mut self, deadline: Option<Duration>) -> ReductionPlan {
+        self.deadline = deadline;
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Thread `t`'s combine at `epoch` (1-based): wait for the children's
+    /// subtree values, fold `value` with them in the canonical order, and
+    /// publish. Returns the folded subtree value (the global value at the
+    /// root). Errors only on deadline expiry.
+    pub fn combine(&self, t: usize, epoch: u64, value: f64) -> Result<f64, String> {
+        debug_assert!(epoch >= 1, "reduce epochs are 1-based");
+        let n = self.cells.len();
+        let mut acc = value;
+        for c in [2 * t + 1, 2 * t + 2] {
+            if c < n {
+                self.wait_flag(&self.cells[c].flag, epoch, t, c)?;
+                let bits = self.cells[c].slot[(epoch % 2) as usize].load(Ordering::Relaxed);
+                acc = self.op.apply(acc, f64::from_bits(bits));
+            }
+        }
+        if t == 0 {
+            let parity = (epoch % 2) as usize;
+            self.root_value[parity].store(acc.to_bits(), Ordering::Relaxed);
+            if acc <= self.tol && self.stop_at.load(Ordering::Relaxed) == NOT_STOPPED {
+                self.stop_at.store(epoch, Ordering::Relaxed);
+            }
+            // Release publishes both the verdict word and the root value.
+            self.verdict_epoch.store(epoch, Ordering::Release);
+        } else {
+            self.cells[t].slot[(epoch % 2) as usize].store(acc.to_bits(), Ordering::Relaxed);
+            // Release: the slot store above happens-before a parent that
+            // observes `flag >= epoch`.
+            self.cells[t].flag.store(epoch, Ordering::Release);
+        }
+        Ok(acc)
+    }
+
+    /// Block until the root has judged `epoch`, then report whether the
+    /// solve stopped at or before it. `wait_verdict(0)` is free (epoch 0
+    /// is pre-judged "not stopped") — workers call this with `k − 1` before
+    /// entering epoch `k`.
+    pub fn wait_verdict(&self, epoch: u64, t: usize) -> Result<Option<u64>, String> {
+        if epoch > 0 {
+            self.wait_flag(&self.verdict_epoch, epoch, t, 0)?;
+        }
+        Ok(self.stopped_by(epoch))
+    }
+
+    /// Non-blocking: the stopping epoch, if the root has found one `<=
+    /// epoch`.
+    pub fn stopped_by(&self, epoch: u64) -> Option<u64> {
+        // Acquire pairs with the root's Release verdict bump; the stop word
+        // was stored before it.
+        let _ = self.verdict_epoch.load(Ordering::Acquire);
+        let stop = self.stop_at.load(Ordering::Relaxed);
+        (stop <= epoch).then_some(stop)
+    }
+
+    /// The global folded value at `epoch` — valid once the verdict for
+    /// `epoch` is in (i.e. after `wait_verdict(epoch)`), and until the
+    /// parity slot is reused at `epoch + 2`.
+    pub fn root_value(&self, epoch: u64) -> f64 {
+        f64::from_bits(self.root_value[(epoch % 2) as usize].load(Ordering::Acquire))
+    }
+
+    /// The spin → yield → timed-park ladder of the exchange waits, for
+    /// reduce edges. `peer` only labels the error.
+    fn wait_flag(
+        &self,
+        flag: &AtomicU64,
+        target: u64,
+        t: usize,
+        peer: usize,
+    ) -> Result<(), String> {
+        for _ in 0..128 {
+            if flag.load(Ordering::Acquire) >= target {
+                return Ok(());
+            }
+            std::hint::spin_loop();
+        }
+        let start = Instant::now();
+        let mut rounds = 0u32;
+        loop {
+            if flag.load(Ordering::Acquire) >= target {
+                return Ok(());
+            }
+            if let Some(d) = self.deadline {
+                let waited = start.elapsed();
+                if waited >= d {
+                    return Err(format!(
+                        "reduction stall: node {t} waited {waited:?} for node {peer} \
+                         to combine epoch {target}"
+                    ));
+                }
+            }
+            rounds += 1;
+            if rounds < 4096 {
+                std::thread::yield_now();
+            } else {
+                std::thread::park_timeout(Duration::from_micros(100));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive a full solve on real threads: per-thread contributions come
+    /// from `vals[step][t]`, every worker gates epoch `k` on the verdict
+    /// for `k − 1`. Returns (steps each worker executed, root values).
+    fn drive(threads: usize, vals: &[Vec<f64>], tol: f64) -> (Vec<u64>, Vec<f64>) {
+        let plan = ReductionPlan::new(threads, ReduceOp::Max, tol)
+            .with_deadline(Some(Duration::from_secs(5)));
+        let mut executed = vec![0u64; threads];
+        let mut roots = Vec::new();
+        std::thread::scope(|s| {
+            let plan = &plan;
+            let mut handles = Vec::new();
+            for t in 0..threads {
+                handles.push(s.spawn(move || {
+                    let mut done = 0u64;
+                    let mut folded = Vec::new();
+                    for k in 1..=vals.len() as u64 {
+                        if plan.wait_verdict(k - 1, t).unwrap().is_some() {
+                            break;
+                        }
+                        let v = plan.combine(t, k, vals[(k - 1) as usize][t]).unwrap();
+                        done = k;
+                        if t == 0 {
+                            folded.push(v);
+                        }
+                    }
+                    (done, folded)
+                }));
+            }
+            for (t, h) in handles.into_iter().enumerate() {
+                let (done, folded) = h.join().unwrap();
+                executed[t] = done;
+                if t == 0 {
+                    roots = folded;
+                }
+            }
+        });
+        (executed, roots)
+    }
+
+    fn residual_schedule(threads: usize, steps: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = crate::util::Rng::new(seed);
+        (0..steps)
+            .map(|s| {
+                // Decaying residuals with per-thread noise, like a solver.
+                (0..threads).map(|_| rng.f64_in(0.5, 1.0) / (s + 1) as f64).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_sequential_oracle_bitwise() {
+        for &threads in &[1usize, 2, 3, 5, 8] {
+            let vals = residual_schedule(threads, 12, 42 + threads as u64);
+            let tol = 0.09; // hit around step 8 of the 1/(s+1) decay
+            let (executed, roots) = drive(threads, &vals, tol);
+            // Sequential oracle: stop at the first step whose tree-fold
+            // residual reaches tol.
+            let mut stop = vals.len() as u64;
+            let mut oracle = Vec::new();
+            for (s, row) in vals.iter().enumerate() {
+                let r = tree_fold(ReduceOp::Max, row);
+                oracle.push(r);
+                if r <= tol {
+                    stop = s as u64 + 1;
+                    break;
+                }
+            }
+            assert!(
+                executed.iter().all(|&e| e == stop),
+                "threads={threads}: executed {executed:?}, oracle stop {stop}"
+            );
+            for (k, (&got, &want)) in roots.iter().zip(&oracle).enumerate() {
+                assert_eq!(got.to_bits(), want.to_bits(), "threads={threads} epoch {}", k + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn never_converging_runs_every_step() {
+        let vals = residual_schedule(4, 6, 7);
+        let (executed, roots) = drive(4, &vals, 0.0);
+        assert!(executed.iter().all(|&e| e == 6), "{executed:?}");
+        assert_eq!(roots.len(), 6);
+    }
+
+    #[test]
+    fn verdict_is_sticky_and_reports_first_epoch() {
+        // Residuals dip under tol at step 2, rise again at step 3: the
+        // verdict must pin the *first* qualifying epoch.
+        let vals = vec![vec![1.0, 2.0], vec![0.01, 0.02], vec![5.0, 6.0]];
+        let (executed, _) = drive(2, &vals, 0.1);
+        assert!(executed.iter().all(|&e| e == 2), "{executed:?}");
+    }
+
+    #[test]
+    fn sum_reduction_folds_in_tree_order() {
+        let plan = ReductionPlan::new(1, ReduceOp::Sum, -1.0);
+        assert_eq!(plan.combine(0, 1, 2.5).unwrap(), 2.5);
+        let vals = [0.1, 0.2, 0.3, 0.4, 0.5];
+        // Heap order: 0 + (1 + (3 + 4)) + 2.
+        let want = 0.1 + (0.2 + (0.4 + 0.5)) + 0.3;
+        assert_eq!(tree_fold(ReduceOp::Sum, &vals).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn dead_child_converts_to_deadline_error() {
+        let plan = ReductionPlan::new(3, ReduceOp::Max, 0.0)
+            .with_deadline(Some(Duration::from_millis(40)));
+        // Thread 1 never combines; the root's wait on its edge must fail
+        // with a structured message instead of hanging.
+        let err = plan.combine(0, 1, 1.0).unwrap_err();
+        assert!(err.contains("reduction stall"), "{err}");
+        assert!(err.contains("node 1"), "{err}");
+    }
+
+    #[test]
+    fn root_value_is_readable_after_verdict() {
+        let plan = ReductionPlan::new(1, ReduceOp::Max, 0.5);
+        plan.combine(0, 1, 0.75).unwrap();
+        assert_eq!(plan.wait_verdict(1, 0).unwrap(), None);
+        assert_eq!(plan.root_value(1), 0.75);
+        plan.combine(0, 2, 0.25).unwrap();
+        assert_eq!(plan.wait_verdict(2, 0).unwrap(), Some(2));
+        assert_eq!(plan.root_value(2), 0.25);
+        // The verdict is stable from every later epoch's viewpoint.
+        assert_eq!(plan.stopped_by(9), Some(2));
+    }
+}

@@ -1,0 +1,252 @@
+//! Dynamic-pattern validation (`repro validate --dynamic`): mdlite's
+//! measured per-step cost at several rebuild periods against the
+//! rebuild-amortization model `T_total ≈ R·T_recompile(|delta|) +
+//! steps·T_step`, emitting `BENCH_dynamic.json`.
+//!
+//! The methodology mirrors [`validate_planopt`](super::validate_planopt):
+//! calibrate, measure, predict, ratio, budget — and the JSON artifact is
+//! written *before* the budget gate so a failing run still leaves evidence
+//! behind. Calibration is anchored on the workload itself: a from-scratch
+//! compile and a K-step [`PlanDelta`](crate::comm::PlanDelta) are timed
+//! through the [`mdlite`] hooks, and the per-step compute term comes from
+//! the static row (one rebuild over the whole run), so the K ∈ {16, 64}
+//! rows isolate exactly the recompile-amortization delta the
+//! [`RebuildModel`] claims to predict.
+
+use crate::engine::Engine;
+use crate::mdlite::{self, Lifecycle, MdConfig};
+use crate::model::RebuildModel;
+use crate::util::json::Value;
+use anyhow::{anyhow, ensure};
+use std::time::Instant;
+
+/// One rebuild-period row: measured incremental-lifecycle seconds per step
+/// against the rebuild model's prediction.
+#[derive(Debug, Clone, Copy)]
+pub struct DynamicRow {
+    pub label: &'static str,
+    /// Rebuild period K (the static row uses K = steps: one generation-0
+    /// compile, never rebuilt).
+    pub rebuild_every: usize,
+    /// Plan generations the run actually compiled.
+    pub generations: u64,
+    /// Dirty (receiver, sender) pairs across all incremental rebuilds.
+    pub dirty_pairs: usize,
+    /// Median measured seconds per step.
+    pub measured: f64,
+    /// Model-predicted seconds per step.
+    pub predicted: f64,
+}
+
+impl DynamicRow {
+    pub fn ratio(&self) -> f64 {
+        self.measured / self.predicted
+    }
+}
+
+/// The timing-sized workload: large enough that a per-step median is
+/// stable, long enough (steps > 64) that the K = 64 row rebuilds at least
+/// once beyond generation 0.
+fn bench_config(quick: bool) -> MdConfig {
+    MdConfig {
+        cells_x: 48,
+        cells_y: 48,
+        threads: 4,
+        particles: if quick { 256 } else { 1024 },
+        steps: if quick { 96 } else { 192 },
+        rebuild_every: 16,
+        seed: 0xD7A1,
+    }
+}
+
+/// Median of `samples` timed evaluations of `f`, after one warmup call.
+fn median_seconds(samples: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(f64::total_cmp);
+    times[times.len() / 2]
+}
+
+/// Calibrate the rebuild model's compile-cost terms on the workload itself
+/// and time the incremental lifecycle at each rebuild period against the
+/// model. Gates every row's measured/predicted ratio on `budget`.
+pub fn validate_dynamic(quick: bool, budget: f64) -> anyhow::Result<Vec<DynamicRow>> {
+    ensure!(budget > 1.0, "need a ratio budget > 1");
+    let cfg = bench_config(quick);
+    let steps = cfg.steps;
+    let samples = if quick { 3 } else { 5 };
+    let err = |e: String| anyhow!(e);
+
+    // Bitwise equivalence first: a mistimed model is a finding, a wrong
+    // field is a bug.
+    let oracle = mdlite::run(&cfg, Engine::Sequential, Lifecycle::FullRecompile).map_err(err)?;
+    let incr = mdlite::run(&cfg, Engine::Sequential, Lifecycle::Incremental).map_err(err)?;
+    ensure!(
+        oracle.checksum() == incr.checksum(),
+        "incremental lifecycle diverged bitwise from the full-recompile oracle"
+    );
+
+    // Calibrate the compile-cost terms through the mdlite hooks: a
+    // from-scratch compile, and the construction + application of one
+    // K-step delta.
+    let calib_k = cfg.rebuild_every;
+    let base = mdlite::plan_at(&cfg, 0).map_err(err)?;
+    let delta = mdlite::delta_between(&cfg, 0, calib_k).map_err(err)?;
+    let t_full = median_seconds(samples, || {
+        let _ = mdlite::plan_at(&cfg, 0).unwrap();
+    });
+    let t_build = median_seconds(samples, || {
+        let _ = mdlite::delta_between(&cfg, 0, calib_k).unwrap();
+    });
+    let t_apply = median_seconds(samples, || {
+        let _ = base.apply_delta(&delta).unwrap();
+    });
+    let dirty = delta.dirty_pairs().max(1);
+
+    // Measure the rows: the static anchor (K = steps, one generation-0
+    // compile) and the two dynamic periods the CI tracks. Sequential
+    // engine, as the other calibration-grade harness rows use.
+    let periods: [(&'static str, usize); 3] =
+        [("mdlite-static", steps), ("mdlite-k64", 64), ("mdlite-k16", 16)];
+    let mut measured = Vec::with_capacity(periods.len());
+    for &(label, k) in &periods {
+        let mut run_cfg = cfg;
+        run_cfg.rebuild_every = k;
+        let stats =
+            mdlite::run(&run_cfg, Engine::Sequential, Lifecycle::Incremental).map_err(err)?;
+        let per_step = median_seconds(samples, || {
+            let _ = mdlite::run(&run_cfg, Engine::Sequential, Lifecycle::Incremental).unwrap();
+        }) / steps as f64;
+        measured.push((label, k, stats, per_step));
+    }
+
+    // Anchor the per-step compute term on the static row: everything it
+    // spends beyond its single modeled rebuild is stepping, so the dynamic
+    // rows isolate the recompile-amortization delta. Staleness is
+    // volume-neutral in mdlite at these densities (a stale plan gathers a
+    // near-identical halo), so the penalty term is zero.
+    let mut model = RebuildModel {
+        t_step: 0.0,
+        t_full,
+        t_rebuild_fixed: t_build,
+        t_delta_pair: t_apply / dirty as f64,
+        drift_pairs_per_step: dirty as f64 / calib_k as f64,
+        max_pairs: measured[0].2.plan_pairs.max(1) as f64,
+        stale_step_penalty: 0.0,
+    };
+    let static_per_step = measured[0].3;
+    let static_recompile = model.recompile_cost(steps, true) / steps as f64;
+    model.t_step = (static_per_step - static_recompile).max(static_per_step * 0.1);
+
+    let mut rows = Vec::with_capacity(measured.len());
+    for &(label, k, ref stats, per_step) in &measured {
+        let predicted = model.predict(steps, k, true).total_seconds / steps as f64;
+        rows.push(DynamicRow {
+            label,
+            rebuild_every: k,
+            generations: stats.generations,
+            dirty_pairs: stats.dirty_pairs,
+            measured: per_step,
+            predicted,
+        });
+    }
+
+    println!(
+        "{:<14} {:>5} {:>5} {:>6} {:>12} {:>12} {:>7}",
+        "row", "K", "gens", "dirty", "meas s/step", "pred s/step", "ratio"
+    );
+    let mut ok = true;
+    for row in &rows {
+        let ratio = row.ratio();
+        let in_budget = ratio.is_finite() && ratio <= budget && ratio >= 1.0 / budget;
+        ok &= in_budget;
+        println!(
+            "{:<14} {:>5} {:>5} {:>6} {:>12.3e} {:>12.3e} {:>7.2}{}",
+            row.label,
+            row.rebuild_every,
+            row.generations,
+            row.dirty_pairs,
+            row.measured,
+            row.predicted,
+            ratio,
+            if in_budget { "" } else { "  <-- outside budget" }
+        );
+    }
+    let (k_star, best) = model.choose_rebuild_period(steps, true);
+    println!(
+        "model-chosen rebuild period: K = {k_star} ({:.3e} s/step predicted)",
+        best.total_seconds / steps as f64
+    );
+
+    let mut arr = Vec::with_capacity(rows.len());
+    for row in &rows {
+        let mut o = Value::obj();
+        o.set("row", Value::Str(row.label.into()));
+        o.set("rebuild_every", Value::Num(row.rebuild_every as f64));
+        o.set("generations", Value::Num(row.generations as f64));
+        o.set("dirty_pairs", Value::Num(row.dirty_pairs as f64));
+        o.set("measured_s_per_step", Value::Num(row.measured));
+        o.set("predicted_s_per_step", Value::Num(row.predicted));
+        o.set("ratio", Value::Num(row.ratio()));
+        arr.push(o);
+    }
+    let mut calibration = Value::obj();
+    calibration.set("t_step_s", Value::Num(model.t_step));
+    calibration.set("t_full_s", Value::Num(model.t_full));
+    calibration.set("t_rebuild_fixed_s", Value::Num(model.t_rebuild_fixed));
+    calibration.set("t_delta_pair_s", Value::Num(model.t_delta_pair));
+    calibration.set("drift_pairs_per_step", Value::Num(model.drift_pairs_per_step));
+    calibration.set("max_pairs", Value::Num(model.max_pairs));
+    let mut root = Value::obj();
+    root.set("bench", Value::Str("validate/dynamic".into()));
+    root.set("cells_x", Value::Num(cfg.cells_x as f64));
+    root.set("cells_y", Value::Num(cfg.cells_y as f64));
+    root.set("threads", Value::Num(cfg.threads as f64));
+    root.set("particles", Value::Num(cfg.particles as f64));
+    root.set("steps", Value::Num(steps as f64));
+    root.set("samples", Value::Num(samples as f64));
+    root.set("budget", Value::Num(budget));
+    root.set("chosen_rebuild_period", Value::Num(k_star as f64));
+    root.set("calibration", calibration);
+    root.set("rows", Value::Arr(arr));
+    crate::benchlib::save_bench_json(
+        "BENCH_dynamic.json",
+        "rebuild amortization validation",
+        &root,
+    );
+
+    ensure!(
+        ok,
+        "dynamic-pattern validation failed: at least one measured/predicted \
+         ratio outside {budget:.0}x"
+    );
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_dynamic_quick_passes() {
+        let rows = validate_dynamic(true, 1e9).expect("dynamic validation");
+        assert_eq!(rows.len(), 3);
+        let k64 = rows.iter().find(|r| r.label == "mdlite-k64").unwrap();
+        assert!(k64.generations >= 2, "K = 64 must rebuild beyond generation 0");
+        for row in &rows {
+            assert!(row.measured > 0.0 && row.predicted > 0.0, "{}", row.label);
+            assert!(row.ratio().is_finite(), "{}", row.label);
+        }
+        let _ = std::fs::remove_file("BENCH_dynamic.json");
+    }
+
+    #[test]
+    fn validate_dynamic_rejects_bad_budget() {
+        assert!(validate_dynamic(true, 1.0).is_err());
+    }
+}

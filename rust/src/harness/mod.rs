@@ -8,6 +8,7 @@
 
 mod ablations;
 mod baselines;
+mod dynamic;
 mod figures;
 mod planopt;
 mod tables;
@@ -15,11 +16,13 @@ mod validate;
 
 pub use ablations::{ablation_blocksize, ablation_ordering, ablation_threads_per_node};
 pub use baselines::baseline_mpi;
+pub use dynamic::{validate_dynamic, DynamicRow};
 pub use figures::{figure1, figure2_blocksize, figure2_volumes, plot_figure};
 pub use planopt::{validate_planopt, PlanoptRow};
 pub use tables::{microbench_table, table1, table2, table3, table4, table5};
 pub use validate::{
-    model_validation, ValidationPoint, ValidationReport, WorkloadPoint, WORKLOAD_LABELS,
+    model_chosen_depth, model_validation, ValidationPoint, ValidationReport, WorkloadPoint,
+    WORKLOAD_LABELS,
 };
 
 use crate::engine::Engine;

@@ -347,6 +347,40 @@ fn workload_validation(
 const DEPTH_SWEEP_LABELS: [&str; 4] =
     ["heat2d-pipe-d1", "heat2d-pipe-d2", "heat2d-pipe-d3", "heat2d-pipe-d4"];
 
+/// The heat-2D grid and rescaled parameters behind the buffer-depth sweep
+/// rows: `(grid, hw_run, threads, mp, np)`. Shared with
+/// [`model_chosen_depth`] so the recorded `--depth auto` pick is evaluated
+/// on exactly the configuration the sweep measures.
+fn depth_sweep_setup(
+    cfg: &HarnessConfig,
+) -> (HeatGrid, crate::machine::HwParams, usize, usize, usize) {
+    let t_all = host_pow2_threads();
+    let hw_run = cfg.hw.with_threads_per_node(t_all);
+    let (mp, np) = {
+        let mut mp = 1usize;
+        while mp * 2 * mp <= t_all {
+            mp *= 2;
+        }
+        (mp, t_all / mp)
+    };
+    let fit = |g: usize, parts: usize| ((g / parts).max(4)) * parts;
+    let base = (2_048 / cfg.scale_div.max(1)).clamp(8, 512);
+    let grid = HeatGrid::new(fit(base, mp), fit(base, np), mp, np);
+    (grid, hw_run, t_all, mp, np)
+}
+
+/// The model's `--depth auto` pick: the
+/// [`choose_depth`](crate::model::choose_depth) sweep over the depth-sweep
+/// grid's overlap prediction at batch size `pipeline`. `repro validate
+/// --depth auto` runs with this depth, and every validation records it in
+/// `BENCH_model.json` (`depth_model_choice`) next to the depth it ran.
+pub fn model_chosen_depth(cfg: &HarnessConfig, pipeline: usize) -> usize {
+    let (grid, hw_run, t_all, _, _) = depth_sweep_setup(cfg);
+    let topo = Topology::new(1, t_all);
+    let ovl = model::predict_heat2d_overlap(&grid, &topo, &hw_run);
+    model::choose_depth(&ovl, pipeline.max(1), hw_run.tau).0
+}
+
 /// The raw-speed section: measured-vs-predicted rows that exercise the
 /// kernel tier and the buffered pipeline directly. Their labels are *not*
 /// in [`WORKLOAD_LABELS`], so they are reported (table + JSON) without
@@ -382,18 +416,7 @@ fn raw_speed_validation(cfg: &HarnessConfig, steps: usize, pipeline: usize) -> V
 
     // Buffer-depth sweep on pipelined heat-2D: one solver per depth, the
     // same batch size and sampling protocol as the `heat2d-pipe` row.
-    let t_all = host_pow2_threads();
-    let hw_run = cfg.hw.with_threads_per_node(t_all);
-    let (mp, np) = {
-        let mut mp = 1usize;
-        while mp * 2 * mp <= t_all {
-            mp *= 2;
-        }
-        (mp, t_all / mp)
-    };
-    let fit = |g: usize, parts: usize| ((g / parts).max(4)) * parts;
-    let base = (2_048 / cfg.scale_div.max(1)).clamp(8, 512);
-    let grid = HeatGrid::new(fit(base, mp), fit(base, np), mp, np);
+    let (grid, hw_run, t_all, mp, np) = depth_sweep_setup(cfg);
     let mut rng = crate::util::Rng::new(0xD3F7);
     let f0: Vec<f64> = (0..grid.m_glob * grid.n_glob).map(|_| rng.f64_in(0.0, 100.0)).collect();
     let topo = Topology::new(1, t_all);
@@ -609,6 +632,7 @@ pub fn model_validation(
         steps,
         pipeline,
         depth,
+        model_chosen_depth(cfg, pipeline),
         &points,
         &workloads,
         &accuracy,
@@ -623,6 +647,7 @@ fn report_json(
     steps: usize,
     pipeline: usize,
     depth: usize,
+    depth_model_choice: usize,
     points: &[ValidationPoint],
     workloads: &[WorkloadPoint],
     accuracy: &Value,
@@ -651,6 +676,7 @@ fn report_json(
     root.set("samples_per_point", Value::Num(steps as f64));
     root.set("pipeline_steps", Value::Num(pipeline as f64));
     root.set("depth", Value::Num(depth as f64));
+    root.set("depth_model_choice", Value::Num(depth_model_choice as f64));
     root.set("results", Value::Arr(results));
     let mut wl = Vec::with_capacity(workloads.len());
     for p in workloads {

@@ -9,7 +9,10 @@
 //! steady-state step allocates nothing and spawns nothing on either engine.
 
 use crate::comm::{ComputeSplit, StridedBlock, StridedPlan};
-use crate::engine::{check_plan_hash, kernels, Checkpoint, Engine, ExchangeRuntime};
+use crate::engine::{
+    check_depth, check_generation, check_plan_hash, kernels, tree_fold, Checkpoint, Engine,
+    ExchangeRuntime, ReduceOp, ReductionPlan,
+};
 use crate::model::HeatGrid;
 
 /// Compile the grid's halo exchange into a strided block-copy plan.
@@ -142,6 +145,8 @@ impl Heat2dSolver {
         Checkpoint {
             step,
             plan_hash: self.plan_fingerprint(),
+            depth: self.runtime.depth(),
+            generation: self.runtime.generation(),
             fields: self.phi.clone(),
             scratch: self.phin.clone(),
             inter_thread_bytes: self.inter_thread_bytes,
@@ -156,6 +161,8 @@ impl Heat2dSolver {
     /// pipeline depth), so resuming is safe at any epoch.
     pub fn restore(&mut self, ck: &Checkpoint) -> Result<u64, String> {
         check_plan_hash("heat2d", self.plan_fingerprint(), ck.plan_hash)?;
+        check_depth("heat2d", self.runtime.depth(), ck.depth)?;
+        check_generation("heat2d", self.runtime.generation(), ck.generation)?;
         let (m, n) = self.grid.subdomain();
         if ck.fields.len() != self.grid.threads() || ck.scratch.len() != self.grid.threads() {
             return Err("heat2d checkpoint thread count mismatch".into());
@@ -371,6 +378,58 @@ impl Heat2dSolver {
         self.inter_thread_bytes += steps as u64 * self.runtime.payload_bytes();
     }
 
+    /// Run pipelined steps until the Jacobi residual `max |phin − phi|`
+    /// over every owned cell reaches `tol`, with **no global barrier**:
+    /// each epoch's residual flows up a [`ReductionPlan`] tree combine and
+    /// workers gate the next epoch on the root's verdict for this one.
+    /// The batch stops at exactly the step a synchronous
+    /// check-[`residual`](Self::residual)-every-step loop would stop at
+    /// (bitwise — both fold in [`tree_fold`] order), or after `max_steps`
+    /// if the tolerance is never reached. Returns the steps executed.
+    pub fn run_pipelined_until_with(
+        &mut self,
+        engine: Engine,
+        max_steps: usize,
+        tol: f64,
+    ) -> usize {
+        let grid = self.grid;
+        let (m, n) = grid.subdomain();
+        let split = &self.split;
+        let reduction = ReductionPlan::new(grid.threads(), ReduceOp::Max, tol)
+            .with_deadline(self.runtime.wait_deadline());
+        let executed = self.runtime.run_pipelined_until(
+            engine,
+            max_steps,
+            &mut self.phi,
+            &mut self.phin,
+            |_t, phi, phin| {
+                jacobi_blocks(n, &split.interior, phi, phin);
+            },
+            |t, phi, phin| {
+                jacobi_blocks(n, &split.boundary, phi, phin);
+                Self::fixed_boundary_copy(grid, t, phi, phin);
+            },
+            |_t, phi, phin| owned_residual(m, n, phi, phin),
+            &reduction,
+        );
+        self.inter_thread_bytes += executed as u64 * self.runtime.payload_bytes();
+        executed
+    }
+
+    /// The residual of the *last completed* step — per-thread
+    /// `max |phi − phin|` over owned cells, folded in [`tree_fold`] order.
+    /// This is the exact quantity
+    /// [`run_pipelined_until_with`](Self::run_pipelined_until_with) stops
+    /// on, so a synchronous loop checking it reproduces the same stopping
+    /// step.
+    pub fn residual(&self) -> f64 {
+        let (m, n) = self.grid.subdomain();
+        let per: Vec<f64> = (0..self.grid.threads())
+            .map(|t| owned_residual(m, n, &self.phi[t], &self.phin[t]))
+            .collect();
+        tree_fold(ReduceOp::Max, &per)
+    }
+
     /// Listing 8 for one thread: the 5-point Jacobi update of the interior
     /// plus the fixed global-boundary copy-through. Shared by both engines —
     /// it only touches thread `t`'s own `(phi, phin)` pair, so fusing it
@@ -475,6 +534,20 @@ fn residual_boundary(m: usize, n: usize, fuse_up: bool, fuse_down: bool) -> Vec<
         }
     }
     blocks
+}
+
+/// `max |a − b|` over the owned cells (rows `1..m−1` × cols `1..n−1`) of an
+/// `m × n` halo-extended subdomain — the per-thread Jacobi residual when
+/// called on the old/new field pair. `|x|` is sign-symmetric, so the caller
+/// may pass the buffers in either order and get the same bits.
+fn owned_residual(m: usize, n: usize, a: &[f64], b: &[f64]) -> f64 {
+    let mut r = 0.0f64;
+    for i in 1..m - 1 {
+        for k in 1..n - 1 {
+            r = r.max((a[i * n + k] - b[i * n + k]).abs());
+        }
+    }
+    r
 }
 
 /// Thread `t`'s halo-extended `m × n` field cut from the global domain:
@@ -725,6 +798,62 @@ mod tests {
                 pipe.runtime().max_sender_lead()
             );
         }
+    }
+
+    #[test]
+    fn tolerance_stop_matches_synchronous_check() {
+        // The barrier-free tolerance stop must halt at *exactly* the step a
+        // synchronous check-every-step loop halts at, on both engines, for
+        // loose, medium, and tight tolerances.
+        let grid = HeatGrid::new(24, 24, 2, 2);
+        let f0 = random_field(24, 24, 13);
+        let max_steps = 80usize;
+        for tol in [50.0f64, 5.0, 0.05] {
+            let mut sync = Heat2dSolver::new(grid, &f0);
+            let mut want_steps = max_steps;
+            for s in 1..=max_steps {
+                sync.step_with(Engine::Sequential);
+                if sync.residual() <= tol {
+                    want_steps = s;
+                    break;
+                }
+            }
+            let want = sync.to_global();
+            for engine in [Engine::Sequential, Engine::Parallel] {
+                let mut pipe = Heat2dSolver::new(grid, &f0);
+                pipe.runtime_mut()
+                    .set_wait_deadline(Some(std::time::Duration::from_secs(5)));
+                let executed = pipe.run_pipelined_until_with(engine, max_steps, tol);
+                assert_eq!(executed, want_steps, "tol {tol} {engine:?}");
+                assert!(
+                    want.iter().zip(&pipe.to_global()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "tol {tol} {engine:?}: fields diverge at the stopping step"
+                );
+                assert_eq!(
+                    sync.inter_thread_bytes, pipe.inter_thread_bytes,
+                    "tol {tol} {engine:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tolerance_stop_exhausts_unreachable_tolerance() {
+        let grid = HeatGrid::new(16, 16, 2, 1);
+        let f0 = random_field(16, 16, 29);
+        let mut pipe = Heat2dSolver::new(grid, &f0);
+        pipe.runtime_mut().set_wait_deadline(Some(std::time::Duration::from_secs(5)));
+        // Negative tolerance can never be reached (residuals are >= 0):
+        // the batch runs to max_steps and matches the plain pipelined run.
+        let executed = pipe.run_pipelined_until_with(Engine::Parallel, 7, -1.0);
+        assert_eq!(executed, 7);
+        let mut plain = Heat2dSolver::new(grid, &f0);
+        plain.run_pipelined_with(Engine::Parallel, 7);
+        assert!(plain
+            .to_global()
+            .iter()
+            .zip(&pipe.to_global())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

@@ -30,6 +30,10 @@
 //! * [`sim`] — the simulated cluster with per-thread clocks and per-node NIC
 //!   serialization that produces "measured" times.
 //! * [`heat2d`] — the §8 2D heat-equation solver and its model.
+//! * [`mdlite`] — a dynamic-pattern particle/field workload whose gather
+//!   plan is rebuilt every K steps, driving the versioned plan lifecycle
+//!   (incremental [`PlanDelta`](comm::PlanDelta) recompilation validated
+//!   bitwise against a full-recompile oracle).
 //! * [`stencil3d`] — a 3D 7-point-stencil diffusion workload compiled onto
 //!   the same exchange runtime (the "not limited to UPC" demonstration).
 //! * [`transport`] — the pluggable transport layer: the five-operation
@@ -53,6 +57,7 @@ pub mod harness;
 pub mod heat2d;
 pub mod machine;
 pub mod matrix;
+pub mod mdlite;
 pub mod mesh;
 pub mod microbench;
 pub mod model;

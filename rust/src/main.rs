@@ -31,6 +31,11 @@
 //! * `repro validate --transport socket` — measured-vs-predicted for the
 //!   loopback socket world, with the model's τ/bandwidth taken from a
 //!   socket ping-pong probe.
+//! * `repro mdlite` — dynamic-pattern mini-MD workload: incremental plan
+//!   recompilation (a `PlanDelta` every K steps) checked bitwise against a
+//!   full-recompile oracle on both engines and the socket world.
+//! * `repro validate --dynamic` — measured-vs-predicted rebuild
+//!   amortization for mdlite across rebuild periods.
 //!
 //! Every model/simulator consumer takes `--hw abel|host|file:<path>` to
 //! select the hardware parameter set (paper constants, a fresh host
@@ -117,6 +122,22 @@ fn parse_engine(args: &Args) -> Result<Engine> {
     }
 }
 
+/// Parse `--depth D|auto`: `Some(D)` pins the pipeline buffer depth,
+/// `None` means the caller resolves it through the depth model
+/// ([`choose_depth`](upcsim::model::choose_depth)). Absent flag = `Some(2)`,
+/// the historical default.
+fn parse_depth_flag(args: &Args) -> Result<Option<usize>> {
+    match args.str_flag("depth") {
+        None => Ok(Some(2)),
+        Some("auto") => Ok(None),
+        Some(s) => {
+            let d: usize =
+                s.parse().map_err(|_| anyhow!("--depth expects an integer or 'auto', got '{s}'"))?;
+            Ok(Some(d.max(1)))
+        }
+    }
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_str() {
         "mesh" => cmd_mesh(args),
@@ -129,6 +150,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "chaos" => cmd_chaos(args),
         "launch" => cmd_launch(args),
         "plan" => cmd_plan(args),
+        "mdlite" => cmd_mdlite(args),
         "validate" => match args.positional.first().map(|s| s.as_str()) {
             None | Some("model") => cmd_validate_model(args),
             Some("pjrt") => cmd_validate_pjrt(args),
@@ -162,10 +184,11 @@ SUBCOMMANDS
               split-phase overlapped step protocol, --fused the overlapped
               step with the unpack fused into the boundary update,
               --pipeline S the multi-step pipelined protocol in S-step
-              batches; --depth D sets the pipeline buffer depth, default 2)
+              batches; --depth D sets the pipeline buffer depth, default 2,
+              --depth auto takes the depth model's pick for this grid)
   stencil     3D 7-point-stencil diffusion on the same exchange runtime
               (--p 64 --pprocs 1 --mprocs 2 --nprocs 2 --steps 20;
-              --overlap / --pipeline S / --depth D as above)
+              --overlap / --pipeline S / --depth D|auto as above)
   chaos       fault-injection drill: inject delayed/dropped publishes,
               phase-targeted panics and slow receivers into the pipelined
               protocol on heat2d, stencil3d and SpMV V3, and verify every
@@ -177,8 +200,9 @@ SUBCOMMANDS
               processes (default 2), ship each the serialized exchange plan
               over loopback sockets, run --workload heat|stencil|spmv|all
               x --proto sync|overlap|pipeline|all (defaults: all x all,
-              --steps 4 each; --depth D buffered slots per rank, default 2)
-              across process boundaries, and verify fields
+              --steps 4 each; --depth D buffered slots per rank, default 2,
+              --depth auto probes the socket and takes the model's pick
+              per workload) across process boundaries, and verify fields
               and byte counters bitwise against the in-process reference
               (--no-verify skips). --chaos kill@EPOCH | slow@EPOCH:MS
               injects a fault into the highest rank; --deadline-ms D
@@ -188,15 +212,24 @@ SUBCOMMANDS
               plans and print the message/byte/block/arena statistics plus
               the raw->optimized deltas (--workload heat|stencil|spmv|all,
               --procs P default 2; JSON to stdout, --json PATH to save)
+  mdlite      dynamic-pattern mini-MD workload: particles drift across a
+              cell grid and the gather plan is recompiled incrementally (a
+              PlanDelta every --rebuild-every K steps, fingerprint-chained
+              generations), checked bitwise against a full-recompile oracle
+              on both engines and the loopback socket world (--quick small
+              config; --cells N --threads T --particles P --steps S
+              --seed N; --no-socket skips the socket arm)
   validate [model]  measured-vs-predicted: all four variants plus the
               split-phase overlapped and multi-step pipelined paths (V3,
               heat2d, stencil3d) on the parallel engine, wall-clock vs the
               calibrated eqs. (5)-(18), overlap, and pipeline models
               (--hw host by default; --steps S samples/point; --pipeline P
-              batch size, default 8; --depth D buffer depth, default 2;
-              also reports the pack-kernel bandwidth and a D=1..4 depth
-              sweep outside the gate; emits BENCH_model.json, --json PATH
-              to move it; --budget R exits nonzero when any geomean leaves
+              batch size, default 8; --depth D buffer depth, default 2, or
+              --depth auto for the model's pick — the pick is recorded in
+              BENCH_model.json as depth_model_choice either way; also
+              reports the pack-kernel bandwidth and a D=1..4 depth sweep
+              outside the gate; emits BENCH_model.json, --json PATH to
+              move it; --budget R exits nonzero when any geomean leaves
               [1/R, R], 0 = report only)
   validate --transport socket  measured-vs-predicted for the loopback
               socket world: nine (workload x protocol) rows against the
@@ -210,6 +243,12 @@ SUBCOMMANDS
               bitwise-identical fields (--procs P, --steps S, --budget R
               default 25; emits BENCH_planopt.json, exits nonzero outside
               budget)
+  validate --dynamic  measured-vs-predicted rebuild amortization for the
+              mdlite dynamic-pattern workload: per-step cost at the static
+              and K in {16, 64} rebuild periods against the rebuild model
+              T_total = R*T_recompile + steps*T_step, after a bitwise
+              incremental-vs-oracle check (--quick, --budget R default 25;
+              emits BENCH_dynamic.json, exits nonzero outside budget)
   validate pjrt     numeric equivalence: native kernel vs PJRT artifacts
 
 COMMON FLAGS
@@ -230,7 +269,9 @@ RUN FLAGS
   --nodes N --tpn T              topology (default 2 x 16)
   --blocksize B                  override BLOCKSIZE
   --steps S                      executed time steps (default 100)
-  --depth D                      exchange pipeline buffer depth (default 2)
+  --depth D|auto                 exchange pipeline buffer depth (default 2;
+                                 auto = the depth model's pick, recorded in
+                                 the run report)
   --ordering natural|rcm|morton|random
   --backend native|pjrt          compute backend (default native)
 ";
@@ -399,12 +440,12 @@ fn parse_chaos(s: Option<&str>) -> Result<upcsim::transport::ChaosAction> {
 }
 
 fn cmd_launch(args: &Args) -> Result<()> {
-    use upcsim::transport::{LaunchConfig, PlanMode, Proto, WORKLOADS};
+    use upcsim::transport::{LaunchConfig, PlanMode, Proto, WorkloadSpec, WORKLOADS};
     let procs = args.usize_flag("procs", 2)?;
     let workload = args.str_flag("workload").unwrap_or("all").to_string();
     let proto_flag = args.str_flag("proto").map(str::to_string);
     let steps = args.usize_flag("steps", 4)? as u64;
-    let depth = args.usize_flag("depth", 2)?.max(1);
+    let depth_flag = parse_depth_flag(args)?;
     let deadline_ms = args.usize_flag("deadline-ms", 10_000)?;
     let chaos = parse_chaos(args.str_flag("chaos"))?;
     let verify = !args.bool_flag("no-verify");
@@ -424,7 +465,27 @@ fn cmd_launch(args: &Args) -> Result<()> {
     } else {
         vec![workload]
     };
+    // `--depth auto`: one socket ping-pong probe up front, then the model's
+    // advisory pick per workload plan × socket transport.
+    let auto_tm = if depth_flag.is_none() {
+        let probe = upcsim::transport::socket_probe(true)
+            .map_err(|e| anyhow!("--depth auto needs the socket probe: {e}"))?;
+        Some(upcsim::machine::TransportModel::socket(probe.latency, probe.bandwidth))
+    } else {
+        None
+    };
     for w in &workloads {
+        let depth = match (depth_flag, &auto_tm) {
+            (Some(d), _) => d,
+            (None, Some(tm)) => {
+                let spec = WorkloadSpec::for_name(w, procs)
+                    .ok_or_else(|| anyhow!("unknown workload '{w}' (one of {WORKLOADS:?})"))?;
+                let d = upcsim::transport::auto_depth(&spec, steps as usize, tm);
+                println!("[{w}: --depth auto resolved to D = {d}]");
+                d
+            }
+            (None, None) => unreachable!("probe runs whenever --depth auto"),
+        };
         for &proto in &protos {
             let cfg = LaunchConfig {
                 procs,
@@ -523,6 +584,89 @@ fn pct_delta(before: f64, after: f64) -> String {
     format!("{:+.1}%", (after - before) / before * 100.0)
 }
 
+/// `repro mdlite`: the dynamic-pattern mini-MD workload. Runs the
+/// incremental plan lifecycle (a [`PlanDelta`] every `--rebuild-every`
+/// steps) on both engines plus the loopback socket world and demands every
+/// arm be bitwise identical to the full-recompile oracle.
+///
+/// [`PlanDelta`]: upcsim::comm::PlanDelta
+fn cmd_mdlite(args: &Args) -> Result<()> {
+    use upcsim::mdlite::{self, Lifecycle, MdConfig};
+    let quick = args.bool_flag("quick");
+    let mut cfg = if quick {
+        MdConfig::quick()
+    } else {
+        MdConfig {
+            cells_x: 48,
+            cells_y: 48,
+            threads: 4,
+            particles: 512,
+            steps: 128,
+            rebuild_every: 16,
+            seed: 0x4d44,
+        }
+    };
+    if let Some(c) = args.str_flag("cells") {
+        let c: usize = c.parse().map_err(|_| anyhow!("--cells expects an integer, got '{c}'"))?;
+        cfg.cells_x = c;
+        cfg.cells_y = c;
+    }
+    cfg.threads = args.usize_flag("threads", cfg.threads)?;
+    cfg.particles = args.usize_flag("particles", cfg.particles)?;
+    cfg.steps = args.usize_flag("steps", cfg.steps)?;
+    cfg.rebuild_every = args.usize_flag("rebuild-every", cfg.rebuild_every)?;
+    cfg.seed = args.usize_flag("seed", cfg.seed as usize)? as u64;
+    let no_socket = args.bool_flag("no-socket");
+    args.finish()?;
+    println!(
+        "# mdlite: {}x{} cells, {} threads, {} particles, {} steps, rebuild every {}",
+        cfg.cells_x, cfg.cells_y, cfg.threads, cfg.particles, cfg.steps, cfg.rebuild_every
+    );
+    let err = |e: String| anyhow!(e);
+    let oracle = mdlite::run(&cfg, Engine::Sequential, Lifecycle::FullRecompile).map_err(err)?;
+    println!(
+        "{:<22} checksum {:016x}, {:>3} generations, plan fp {:016x}",
+        "oracle (full/seq)",
+        oracle.checksum(),
+        oracle.generations,
+        oracle.plan_fp
+    );
+    let mut arms: Vec<(&str, mdlite::MdResult)> = vec![
+        (
+            "incremental/seq",
+            mdlite::run(&cfg, Engine::Sequential, Lifecycle::Incremental).map_err(err)?,
+        ),
+        (
+            "incremental/par",
+            mdlite::run(&cfg, Engine::Parallel, Lifecycle::Incremental).map_err(err)?,
+        ),
+    ];
+    if !no_socket {
+        let deadline = Some(std::time::Duration::from_secs(30));
+        arms.push((
+            "incremental/socket",
+            mdlite::run_socket(&cfg, Lifecycle::Incremental, deadline).map_err(err)?,
+        ));
+    }
+    let mut failures = 0usize;
+    for (label, r) in &arms {
+        let ok = r.checksum() == oracle.checksum();
+        failures += usize::from(!ok);
+        println!(
+            "{label:<22} checksum {:016x}, {:>3} generations, {} dirty pairs, chain fp \
+             {:016x} — {}",
+            r.checksum(),
+            r.generations,
+            r.dirty_pairs,
+            r.chain_fp,
+            if ok { "bitwise identical" } else { "DIVERGED" }
+        );
+    }
+    anyhow::ensure!(failures == 0, "{failures} mdlite arm(s) diverged from the oracle");
+    println!("mdlite OK: every arm bitwise identical to the full-recompile oracle");
+    Ok(())
+}
+
 /// `repro validate --transport socket`: all nine (workload × protocol)
 /// combinations over the loopback socket world, measured against the model
 /// with the socket probe's τ/bandwidth substituted. Exits nonzero when any
@@ -553,9 +697,24 @@ fn cmd_validate_planopt(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro validate --dynamic`: mdlite's measured per-step cost at static
+/// and K ∈ {16, 64} rebuild periods against the rebuild-amortization
+/// model. Exits nonzero when any row leaves the ratio budget.
+fn cmd_validate_dynamic(args: &Args) -> Result<()> {
+    let budget = args.usize_flag("budget", 25)? as f64;
+    let quick = args.bool_flag("quick");
+    args.finish()?;
+    upcsim::harness::validate_dynamic(quick, budget)?;
+    println!("dynamic-pattern validation OK (mdlite rebuild amortization)");
+    Ok(())
+}
+
 fn cmd_validate_model(args: &Args) -> Result<()> {
     if args.bool_flag("optimize") {
         return cmd_validate_planopt(args);
+    }
+    if args.bool_flag("dynamic") {
+        return cmd_validate_dynamic(args);
     }
     match args.str_flag("transport").unwrap_or("inproc") {
         "inproc" => {}
@@ -573,7 +732,14 @@ fn cmd_validate_model(args: &Args) -> Result<()> {
     }
     let steps = args.usize_flag("steps", 12)?;
     let pipeline = args.usize_flag("pipeline", 8)?.max(1);
-    let depth = args.usize_flag("depth", 2)?.max(1);
+    let depth = match parse_depth_flag(args)? {
+        Some(d) => d,
+        None => {
+            let d = harness::model_chosen_depth(&cfg, pipeline);
+            println!("[--depth auto resolved to D = {d} on the depth-sweep grid]");
+            d
+        }
+    };
     let budget = args.usize_flag("budget", 0)? as f64;
     let json_path: std::path::PathBuf = args.str_flag("json").unwrap_or("BENCH_model.json").into();
     args.finish()?;
@@ -844,7 +1010,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.threads_per_node = args.usize_flag("tpn", 16)?;
     cfg.iters = args.usize_flag("iters", 1000)?;
     cfg.exec_steps = args.usize_flag("steps", 100)?;
-    cfg.depth = args.usize_flag("depth", 2)?.max(1);
+    let depth_flag = parse_depth_flag(args)?;
+    cfg.depth = depth_flag.unwrap_or(2);
+    cfg.auto_depth = depth_flag.is_none();
     if let Some(bs) = args.str_flag("blocksize") {
         cfg.block_size = Some(bs.parse().map_err(|_| anyhow!("--blocksize expects an integer"))?);
     }
@@ -888,6 +1056,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     let report = Runner::new(cfg).run()?;
     println!("n                = {}", fmt::int(report.n));
     println!("BLOCKSIZE        = {}", report.block_size);
+    println!(
+        "pipeline depth   = {}{}",
+        report.depth,
+        if depth_flag.is_none() { " (--depth auto, model pick)" } else { "" }
+    );
     println!("simulated total  = {} ({} iters)", fmt::secs(report.sim_total), iters);
     println!("model predicted  = {}", fmt::secs(report.model_total));
     println!("sim/model ratio  = {:.3}", report.sim_total / report.model_total);
@@ -929,7 +1102,7 @@ fn cmd_heat(args: &Args) -> Result<()> {
     let overlap = args.bool_flag("overlap");
     let fused = args.bool_flag("fused");
     let pipeline = args.usize_flag("pipeline", 0)?;
-    let buf_depth = args.usize_flag("depth", 2)?.max(1);
+    let depth_flag = parse_depth_flag(args)?;
     let engine = parse_engine(args)?;
     let (hw, hw_label) = resolve_hw(args, HwSource::Abel)?;
     args.finish()?;
@@ -944,6 +1117,12 @@ fn cmd_heat(args: &Args) -> Result<()> {
     // Rescale the per-thread bandwidth share to the threads actually
     // sharing a node (§5.1), as the SpMV consumers do.
     let hw = hw.with_threads_per_node(tpn);
+    // Resolve `--depth auto` before the solver exists: the same
+    // `choose_depth` sweep reported at the bottom, on this run's own grid.
+    let ovl = predict_heat2d_overlap(&grid, &topo, &hw);
+    let batch = if pipeline > 0 { pipeline } else { 8 };
+    let (d_star, best) = choose_depth(&ovl, batch, hw.tau);
+    let buf_depth = depth_flag.unwrap_or(d_star);
 
     // Real numerics vs the sequential stencil.
     let mut rng = upcsim::util::Rng::new(7);
@@ -1007,7 +1186,6 @@ fn cmd_heat(args: &Args) -> Result<()> {
         fmt::secs(sim.t_comp * 1000.0),
         fmt::secs(model.t_comp * 1000.0),
     );
-    let ovl = predict_heat2d_overlap(&grid, &topo, &hw);
     println!(
         "overlap model: T_step {} vs sync {} per 1000 steps ({:.2}x modeled speedup)",
         fmt::secs(ovl.t_step * 1000.0),
@@ -1020,7 +1198,6 @@ fn cmd_heat(args: &Args) -> Result<()> {
         fmt::secs(fus.t_step * 1000.0),
         ovl.t_step / fus.t_step,
     );
-    let batch = if pipeline > 0 { pipeline } else { 8 };
     let pipe = predict_heat2d_pipelined(&grid, &topo, &hw, batch);
     println!(
         "pipeline model ({batch}-step batches): {} per step steady-state ({:.2}x vs sync, {:.2}x vs overlapped)",
@@ -1028,9 +1205,9 @@ fn cmd_heat(args: &Args) -> Result<()> {
         pipe.speedup_vs_sync(),
         pipe.speedup_vs_overlapped(),
     );
-    let (d_star, best) = choose_depth(&ovl, batch, hw.tau);
     println!(
-        "buffer depth: running D = {buf_depth}; model prefers D = {d_star} ({} per step)",
+        "buffer depth: running D = {buf_depth}{}; model prefers D = {d_star} ({} per step)",
+        if depth_flag.is_none() { " (auto)" } else { "" },
         fmt::secs(best.t_per_step),
     );
     Ok(())
@@ -1051,7 +1228,7 @@ fn cmd_stencil(args: &Args) -> Result<()> {
     let steps = args.usize_flag("steps", 20)?;
     let overlap = args.bool_flag("overlap");
     let pipeline = args.usize_flag("pipeline", 0)?;
-    let buf_depth = args.usize_flag("depth", 2)?.max(1);
+    let depth_flag = parse_depth_flag(args)?;
     let engine = parse_engine(args)?;
     let (hw, hw_label) = resolve_hw(args, HwSource::Abel)?;
     args.finish()?;
@@ -1068,6 +1245,11 @@ fn cmd_stencil(args: &Args) -> Result<()> {
     let (nodes, tpn) = cluster_shape(threads);
     let topo = Topology::new(nodes, tpn);
     let hw = hw.with_threads_per_node(tpn);
+    // Resolve `--depth auto` before the solver exists (as `cmd_heat` does).
+    let ovl = predict_stencil3d_overlap(&grid, &topo, &hw);
+    let batch = if pipeline > 0 { pipeline } else { 8 };
+    let (d_star, best) = choose_depth(&ovl, batch, hw.tau);
+    let buf_depth = depth_flag.unwrap_or(d_star);
 
     // Real numerics vs the sequential 7-point stencil.
     let mut rng = upcsim::util::Rng::new(11);
@@ -1128,14 +1310,12 @@ fn cmd_stencil(args: &Args) -> Result<()> {
         fmt::secs(model.t_halo * 1000.0),
         fmt::secs(model.t_comp * 1000.0),
     );
-    let ovl = predict_stencil3d_overlap(&grid, &topo, &hw);
     println!(
         "overlap model: T_step {} vs sync {} per 1000 steps ({:.2}x modeled speedup)",
         fmt::secs(ovl.t_step * 1000.0),
         fmt::secs(ovl.t_step_sync * 1000.0),
         ovl.speedup(),
     );
-    let batch = if pipeline > 0 { pipeline } else { 8 };
     let pipe = predict_stencil3d_pipelined(&grid, &topo, &hw, batch);
     println!(
         "pipeline model ({batch}-step batches): {} per step steady-state ({:.2}x vs sync, {:.2}x vs overlapped)",
@@ -1143,9 +1323,9 @@ fn cmd_stencil(args: &Args) -> Result<()> {
         pipe.speedup_vs_sync(),
         pipe.speedup_vs_overlapped(),
     );
-    let (d_star, best) = choose_depth(&ovl, batch, hw.tau);
     println!(
-        "buffer depth: running D = {buf_depth}; model prefers D = {d_star} ({} per step)",
+        "buffer depth: running D = {buf_depth}{}; model prefers D = {d_star} ({} per step)",
+        if depth_flag.is_none() { " (auto)" } else { "" },
         fmt::secs(best.t_per_step),
     );
     Ok(())

@@ -1,0 +1,819 @@
+//! mdlite: a dynamic-pattern particle/field workload for the versioned
+//! plan lifecycle.
+//!
+//! The grid solvers compile their exchange plan once; real irregular
+//! applications (molecular dynamics, particle-in-cell) re-derive theirs
+//! every few steps as particles drift across the domain decomposition.
+//! mdlite is the smallest workload with that property that can still be
+//! validated **bitwise**:
+//!
+//! * Particles move on closed-form integer trajectories over a torus
+//!   (`pos(s) = pos0 + s·vel mod extent`, in fixed-point cell units), so
+//!   every thread/rank computes every particle's cell at any step with
+//!   plain integer arithmetic — the particles need no communication and no
+//!   ownership migration. The *field* is the only distributed state; the
+//!   *pattern* still changes every step.
+//! * A per-cell field φ lives row-band-partitioned under a block-cyclic
+//!   [`Layout`]. Each step, every **occupied** owned cell relaxes toward
+//!   its 8 torus neighbors plus an occupancy source term; remote neighbor
+//!   values arrive through a condensed gather [`CommPlan`] compiled from
+//!   the occupied cells' halo.
+//! * Every `rebuild_every` (K) steps the plan is rebuilt for the current
+//!   particle positions. [`Lifecycle::FullRecompile`] recompiles from
+//!   scratch (the oracle); [`Lifecycle::Incremental`] diffs the per-pair
+//!   needs against its bookkeeping, builds a [`PlanDelta`], and patches
+//!   the live plan in O(|delta|) — asserting the patched plan is
+//!   fingerprint-identical to the oracle's and extending the chain
+//!   fingerprint `fp(gen N) = hash(fp(gen N−1), delta)`.
+//!
+//! Between rebuilds the plan is deliberately stale: cells that became
+//! occupied since the last rebuild read whatever their neighbor slots in
+//! the per-thread workspace last held. That is *deterministic* — the
+//! workspace has an identical write history in every arm (zero-initialized,
+//! then only own-band copies and plan scatters) — so staleness does not
+//! break bitwise equality, it is part of the workload being modeled
+//! (the rebuild-amortization tradeoff in [`crate::model`]).
+//!
+//! Three arms execute the same schedule: in-process sequential, in-process
+//! parallel (scoped threads, disjoint bands), and multi-rank sockets where
+//! rank 0 ships each [`PlanDelta`] over the wire as a `KIND_DELTA` frame
+//! and peers apply it locally. All three must agree bitwise on the final
+//! field.
+
+use crate::comm::{chain_fingerprint, CommPlan, ExchangePlan, GatherPatch, PlanDelta};
+use crate::engine::Engine;
+use crate::pgas::Layout;
+use crate::transport::{loopback_mesh, MeshStreams, SocketTransport, Transport};
+use crate::util::rng::Rng;
+use crate::util::Fnv64;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// How the plan advances across rebuild boundaries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// Recompile the plan from scratch at every rebuild (the oracle).
+    FullRecompile,
+    /// Diff the needs, build a [`PlanDelta`], patch the live plan in
+    /// O(|delta|), and verify it is fingerprint-identical to the oracle.
+    Incremental,
+}
+
+impl Lifecycle {
+    pub fn name(self) -> &'static str {
+        match self {
+            Lifecycle::FullRecompile => "full",
+            Lifecycle::Incremental => "incremental",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Lifecycle> {
+        match s.to_ascii_lowercase().as_str() {
+            "full" | "oracle" => Some(Lifecycle::FullRecompile),
+            "incr" | "incremental" | "delta" => Some(Lifecycle::Incremental),
+            _ => None,
+        }
+    }
+}
+
+/// Fixed-point sub-cell resolution: particle positions advance in units of
+/// 1/8 cell, so a particle typically stays in its cell for a few steps and
+/// the gather pattern drifts rather than teleports.
+const RES: i64 = 8;
+
+/// The 8-neighbor offsets in the fixed summation order every arm uses.
+const NEIGHBORS: [(i64, i64); 8] =
+    [(-1, -1), (0, -1), (1, -1), (-1, 0), (1, 0), (-1, 1), (0, 1), (1, 1)];
+
+/// Workload configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct MdConfig {
+    /// Grid cells per row (torus in x).
+    pub cells_x: usize,
+    /// Grid rows (torus in y); must be divisible by `threads` so each
+    /// thread owns one contiguous row band.
+    pub cells_y: usize,
+    /// UPC threads / socket ranks.
+    pub threads: usize,
+    /// Particle count.
+    pub particles: usize,
+    /// Time steps.
+    pub steps: usize,
+    /// Rebuild period K: the plan is recompiled before steps 1, K+1,
+    /// 2K+1, … (K = 1 rebuilds every step).
+    pub rebuild_every: usize,
+    /// PRNG seed for initial positions, velocities, and the initial field.
+    pub seed: u64,
+}
+
+impl MdConfig {
+    /// The CI-sized configuration (`repro mdlite --quick`).
+    pub fn quick() -> MdConfig {
+        MdConfig {
+            cells_x: 24,
+            cells_y: 24,
+            threads: 4,
+            particles: 96,
+            steps: 48,
+            rebuild_every: 16,
+            seed: 0x4d44,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cells_x < 3 || self.cells_y < 3 {
+            return Err("mdlite grid must be at least 3×3".into());
+        }
+        if self.threads == 0 || self.cells_y % self.threads != 0 {
+            return Err(format!(
+                "cells_y ({}) must be a positive multiple of threads ({})",
+                self.cells_y, self.threads
+            ));
+        }
+        if self.particles == 0 || self.steps == 0 || self.rebuild_every == 0 {
+            return Err("particles, steps, and rebuild_every must be positive".into());
+        }
+        let n = self.cells_x.checked_mul(self.cells_y).ok_or("grid too large")?;
+        if n > u32::MAX as usize {
+            return Err("grid too large for u32 plan indices".into());
+        }
+        Ok(())
+    }
+
+    /// Total cells.
+    pub fn n(&self) -> usize {
+        self.cells_x * self.cells_y
+    }
+
+    /// Cells per thread band.
+    pub fn band(&self) -> usize {
+        (self.cells_y / self.threads) * self.cells_x
+    }
+
+    /// The block-cyclic layout of the field: one full row band per thread,
+    /// so thread `t` owns global cells `[t·band, (t+1)·band)`.
+    pub fn layout(&self) -> Layout {
+        Layout::new(self.n(), self.band(), self.threads)
+    }
+}
+
+/// Closed-form particle trajectories in fixed-point torus coordinates.
+#[derive(Debug, Clone)]
+struct Particles {
+    px: Vec<i64>,
+    py: Vec<i64>,
+    vx: Vec<i64>,
+    vy: Vec<i64>,
+}
+
+impl Particles {
+    fn new(cfg: &MdConfig) -> Particles {
+        let mut rng = Rng::new(cfg.seed ^ 0x70617274);
+        let (ex, ey) = (cfg.cells_x as i64 * RES, cfg.cells_y as i64 * RES);
+        let mut p = Particles {
+            px: Vec::with_capacity(cfg.particles),
+            py: Vec::with_capacity(cfg.particles),
+            vx: Vec::with_capacity(cfg.particles),
+            vy: Vec::with_capacity(cfg.particles),
+        };
+        for _ in 0..cfg.particles {
+            p.px.push(rng.usize_in(0, ex as usize) as i64);
+            p.py.push(rng.usize_in(0, ey as usize) as i64);
+            // Velocities in [-5, 5] fixed-point units per step: under one
+            // cell per step, so patterns drift incrementally.
+            p.vx.push(rng.usize_in(0, 11) as i64 - 5);
+            p.vy.push(rng.usize_in(0, 11) as i64 - 5);
+        }
+        p
+    }
+
+    /// The cell particle `i` occupies at pattern step `s` — pure integer
+    /// arithmetic, identical on every thread and rank.
+    fn cell_at(&self, cfg: &MdConfig, i: usize, s: usize) -> usize {
+        let (ex, ey) = (cfg.cells_x as i64 * RES, cfg.cells_y as i64 * RES);
+        let x = (self.px[i] + s as i64 * self.vx[i]).rem_euclid(ex) / RES;
+        let y = (self.py[i] + s as i64 * self.vy[i]).rem_euclid(ey) / RES;
+        y as usize * cfg.cells_x + x as usize
+    }
+}
+
+/// Per-cell particle counts at pattern step `s`.
+fn occupancy(cfg: &MdConfig, parts: &Particles, s: usize) -> Vec<u32> {
+    let mut occ = vec![0u32; cfg.n()];
+    for i in 0..cfg.particles {
+        occ[parts.cell_at(cfg, i, s)] += 1;
+    }
+    occ
+}
+
+/// The 8 torus neighbors of `cell`, in the fixed order of [`NEIGHBORS`].
+fn neighbors8(cfg: &MdConfig, cell: usize) -> [usize; 8] {
+    let (w, h) = (cfg.cells_x as i64, cfg.cells_y as i64);
+    let (x, y) = ((cell % cfg.cells_x) as i64, (cell / cfg.cells_x) as i64);
+    let mut out = [0usize; 8];
+    for (k, (dx, dy)) in NEIGHBORS.iter().enumerate() {
+        let nx = (x + dx).rem_euclid(w);
+        let ny = (y + dy).rem_euclid(h);
+        out[k] = (ny * w + nx) as usize;
+    }
+    out
+}
+
+/// Per-receiver needs map: sender → sorted unique global indices. This is
+/// the bookkeeping form the incremental lifecycle diffs pair-by-pair.
+type Needs = Vec<BTreeMap<u32, Vec<u32>>>;
+
+/// The remote 8-neighbor halo of every occupied owned cell, per receiver.
+fn needs_at(cfg: &MdConfig, layout: &Layout, occ: &[u32]) -> Needs {
+    let band = cfg.band();
+    let mut needs: Needs = vec![BTreeMap::new(); cfg.threads];
+    for (t, per) in needs.iter_mut().enumerate() {
+        let mut seen: BTreeMap<u32, std::collections::BTreeSet<u32>> = BTreeMap::new();
+        for l in 0..band {
+            let g = t * band + l;
+            if occ[g] == 0 {
+                continue;
+            }
+            for nb in neighbors8(cfg, g) {
+                let owner = layout.owner_of_index(nb);
+                if owner != t {
+                    seen.entry(owner as u32).or_default().insert(nb as u32);
+                }
+            }
+        }
+        for (owner, idxs) in seen {
+            per.insert(owner, idxs.into_iter().collect());
+        }
+    }
+    needs
+}
+
+/// Compile a condensed gather plan from a needs map (the full-recompile
+/// oracle path).
+fn compile(layout: &Layout, needs: &Needs) -> ExchangePlan {
+    let mut recv: Vec<Vec<(u32, u32)>> = Vec::with_capacity(needs.len());
+    for per in needs {
+        let mut list = Vec::new();
+        for (&s, idxs) in per {
+            for &i in idxs {
+                list.push((s, i));
+            }
+        }
+        recv.push(list);
+    }
+    CommPlan::from_recv_needs(layout, &recv).into()
+}
+
+/// Pair-by-pair diff of two needs maps into gather patches: one patch per
+/// (receiver, sender) pair whose index list changed, an empty patch for a
+/// pair that disappeared. Cost is proportional to the pairs *present*, not
+/// to the plan — the incremental lifecycle never walks unchanged arenas.
+fn patches_between(layout: &Layout, old: &Needs, new: &Needs) -> Vec<GatherPatch> {
+    let mut patches = Vec::new();
+    for (t, (before_map, after_map)) in old.iter().zip(new.iter()).enumerate() {
+        let senders: std::collections::BTreeSet<u32> =
+            before_map.keys().chain(after_map.keys()).copied().collect();
+        for s in senders {
+            let before = before_map.get(&s);
+            let after = after_map.get(&s);
+            if before == after {
+                continue;
+            }
+            let indices = after.cloned().unwrap_or_default();
+            let local_src: Vec<u32> = indices
+                .iter()
+                .map(|&i| layout.local_offset_of_index(i as usize) as u32)
+                .collect();
+            patches.push(GatherPatch { receiver: t as u32, sender: s, indices, local_src });
+        }
+    }
+    patches
+}
+
+/// One run's outcome: the final global field plus plan-lifecycle
+/// statistics.
+#[derive(Debug, Clone)]
+pub struct MdResult {
+    /// Final field, stitched to global order.
+    pub phi: Vec<f64>,
+    /// Fingerprint of the last plan generation.
+    pub plan_fp: u64,
+    /// Delta-chain fingerprint `fp(gen N) = hash(fp(gen N−1), delta)`.
+    /// Seeded with generation 0's plan fingerprint; only advanced by
+    /// [`Lifecycle::Incremental`].
+    pub chain_fp: u64,
+    /// Plan generations compiled (including generation 0).
+    pub generations: u64,
+    /// Dirty (receiver, sender) pairs across all incremental rebuilds.
+    pub dirty_pairs: usize,
+    /// Replacement values shipped across all incremental rebuilds.
+    pub patch_values: usize,
+    /// Live (receiver, sender) pairs in the final plan.
+    pub plan_pairs: usize,
+    /// Gathered remote values in the final plan (per step).
+    pub plan_values: usize,
+    /// Total gather payload over the run (8 bytes per staged value per
+    /// step, identical across arms by construction).
+    pub bytes: u64,
+}
+
+impl MdResult {
+    /// Order-sensitive FNV over the final field bits — the cheap bitwise
+    /// identity check the harness rows report.
+    pub fn checksum(&self) -> u64 {
+        let mut h = Fnv64::new();
+        for &v in &self.phi {
+            h.write_u64(v.to_bits());
+        }
+        h.finish()
+    }
+}
+
+/// Initial field: one global PRNG stream, sliced into bands by each arm.
+fn init_field(cfg: &MdConfig) -> Vec<f64> {
+    let mut rng = Rng::new(cfg.seed ^ 0x6669656c64);
+    (0..cfg.n()).map(|_| rng.f64_in(0.0, 1.0)).collect()
+}
+
+/// Count live (receiver, sender) pairs in a gather plan.
+fn plan_pairs(plan: &ExchangePlan) -> usize {
+    let p = plan.as_gather().expect("mdlite plans are gather plans");
+    (0..p.threads()).map(|t| p.recv_msgs(t).count()).sum()
+}
+
+/// Pack thread `t`'s outgoing messages from its local band.
+fn pack_thread(plan: &CommPlan, t: usize, local: &[f64]) -> Vec<(usize, Vec<f64>)> {
+    plan.send_msgs(t)
+        .map(|m| (m.start, m.local_src.iter().map(|&o| local[o as usize]).collect()))
+        .collect()
+}
+
+/// One thread's compute for one step: refresh the workspace (own band +
+/// plan scatters), then relax every owned cell. The workspace write
+/// history is identical in every arm, so stale neighbor reads between
+/// rebuilds are deterministic.
+#[allow(clippy::too_many_arguments)]
+fn compute_thread(
+    cfg: &MdConfig,
+    plan: &CommPlan,
+    t: usize,
+    occ: &[u32],
+    staged: &[f64],
+    phi_t: &[f64],
+    ws_t: &mut [f64],
+    phin_t: &mut [f64],
+) {
+    let band = cfg.band();
+    let base = t * band;
+    ws_t[base..base + band].copy_from_slice(phi_t);
+    for m in plan.recv_msgs(t) {
+        for (k, &g) in m.indices.iter().enumerate() {
+            ws_t[g as usize] = staged[m.start + k];
+        }
+    }
+    for l in 0..band {
+        let g = base + l;
+        let mut nsum = 0.0f64;
+        for j in neighbors8(cfg, g) {
+            nsum += ws_t[j];
+        }
+        phin_t[l] = 0.7 * ws_t[g] + 0.0375 * nsum + 0.05 * f64::from(occ[g]);
+    }
+}
+
+/// Advance the plan at a rebuild boundary. Returns the new plan; updates
+/// the chain fingerprint and lifecycle statistics in place.
+#[allow(clippy::too_many_arguments)]
+fn advance_plan(
+    layout: &Layout,
+    lifecycle: Lifecycle,
+    threads: usize,
+    current: Option<ExchangePlan>,
+    prev_needs: &Needs,
+    needs: &Needs,
+    chain: &mut u64,
+    dirty_pairs: &mut usize,
+    patch_values: &mut usize,
+) -> Result<ExchangePlan, String> {
+    let scratch = compile(layout, needs);
+    match (current, lifecycle) {
+        (None, _) => {
+            *chain = scratch.fingerprint();
+            Ok(scratch)
+        }
+        (Some(_), Lifecycle::FullRecompile) => Ok(scratch),
+        (Some(p), Lifecycle::Incremental) => {
+            let patches = patches_between(layout, prev_needs, needs);
+            let delta = PlanDelta::from_gather_patches(threads, p.fingerprint(), patches)?;
+            *dirty_pairs += delta.dirty_pairs();
+            *patch_values += delta.patch_values();
+            let applied = p.apply_delta(&delta)?;
+            if applied.fingerprint() != scratch.fingerprint() {
+                return Err(format!(
+                    "incremental rebuild diverged from the oracle: {:#018x} vs {:#018x}",
+                    applied.fingerprint(),
+                    scratch.fingerprint()
+                ));
+            }
+            *chain = chain_fingerprint(*chain, &delta);
+            Ok(applied)
+        }
+    }
+}
+
+/// Run mdlite in process on either engine. `Engine::Sequential` replays
+/// every thread on the caller; `Engine::Parallel` runs the pack and
+/// compute phases on scoped threads over disjoint bands. Both produce
+/// bitwise-identical fields.
+pub fn run(cfg: &MdConfig, engine: Engine, lifecycle: Lifecycle) -> Result<MdResult, String> {
+    cfg.validate()?;
+    let layout = cfg.layout();
+    let (threads, n, band) = (cfg.threads, cfg.n(), cfg.band());
+    let parts = Particles::new(cfg);
+    let global0 = init_field(cfg);
+    let mut phi: Vec<Vec<f64>> =
+        (0..threads).map(|t| global0[t * band..(t + 1) * band].to_vec()).collect();
+    let mut phin = phi.clone();
+    let mut ws: Vec<Vec<f64>> = vec![vec![0.0; n]; threads];
+    let mut plan: Option<ExchangePlan> = None;
+    let mut prev_needs: Needs = vec![BTreeMap::new(); threads];
+    let (mut chain, mut generations) = (0u64, 0u64);
+    let (mut dirty_pairs, mut patch_values) = (0usize, 0usize);
+    let mut bytes = 0u64;
+    let mut staged: Vec<f64> = Vec::new();
+    for s in 1..=cfg.steps {
+        let occ = occupancy(cfg, &parts, s - 1);
+        if (s - 1) % cfg.rebuild_every == 0 {
+            let needs = needs_at(cfg, &layout, &occ);
+            plan = Some(advance_plan(
+                &layout,
+                lifecycle,
+                threads,
+                plan.take(),
+                &prev_needs,
+                &needs,
+                &mut chain,
+                &mut dirty_pairs,
+                &mut patch_values,
+            )?);
+            generations += 1;
+            prev_needs = needs;
+        }
+        let gather = plan.as_ref().unwrap().as_gather().expect("gather plan");
+        staged.clear();
+        staged.resize(gather.total_values(), 0.0);
+        let packed: Vec<Vec<(usize, Vec<f64>)>> = match engine {
+            Engine::Sequential => (0..threads).map(|t| pack_thread(gather, t, &phi[t])).collect(),
+            Engine::Parallel => std::thread::scope(|sc| {
+                let handles: Vec<_> = (0..threads)
+                    .map(|t| {
+                        let phi = &phi;
+                        sc.spawn(move || pack_thread(gather, t, &phi[t]))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            }),
+        };
+        for per in &packed {
+            for (start, vals) in per {
+                staged[*start..*start + vals.len()].copy_from_slice(vals);
+            }
+        }
+        match engine {
+            Engine::Sequential => {
+                for (t, (ws_t, phin_t)) in ws.iter_mut().zip(phin.iter_mut()).enumerate() {
+                    compute_thread(cfg, gather, t, &occ, &staged, &phi[t], ws_t, phin_t);
+                }
+            }
+            Engine::Parallel => std::thread::scope(|sc| {
+                for (t, (ws_t, phin_t)) in ws.iter_mut().zip(phin.iter_mut()).enumerate() {
+                    let (phi, occ, staged) = (&phi, &occ, &staged);
+                    sc.spawn(move || {
+                        compute_thread(cfg, gather, t, occ, staged, &phi[t], ws_t, phin_t);
+                    });
+                }
+            }),
+        }
+        bytes += (gather.total_values() * 8) as u64;
+        std::mem::swap(&mut phi, &mut phin);
+    }
+    let plan = plan.unwrap();
+    Ok(MdResult {
+        phi: phi.concat(),
+        plan_fp: plan.fingerprint(),
+        chain_fp: chain,
+        generations,
+        dirty_pairs,
+        patch_values,
+        plan_pairs: plan_pairs(&plan),
+        plan_values: plan.total_values(),
+        bytes,
+    })
+}
+
+/// Run mdlite across `cfg.threads` socket ranks on a loopback mesh. Under
+/// [`Lifecycle::Incremental`], rank 0 is the plan coordinator: at every
+/// rebuild boundary it diffs the needs, ships the [`PlanDelta`] to every
+/// peer as a `KIND_DELTA` frame, and all ranks patch their plan copy and
+/// reshape the live transport with
+/// [`SocketTransport::install_plan`] — no teardown, no full-plan
+/// reshipping. The swap is race-free because every rank installs
+/// generation g+1 only after draining all of generation g's epochs, and
+/// early frames from fast senders park in the mailbox until then.
+///
+/// The protocol runs without acks: the socket arena is private and
+/// `publish` serializes frames at call time, so slot reuse never races and
+/// run-ahead only parks frames in mailboxes.
+pub fn run_socket(
+    cfg: &MdConfig,
+    lifecycle: Lifecycle,
+    deadline: Option<Duration>,
+) -> Result<MdResult, String> {
+    cfg.validate()?;
+    let mesh = loopback_mesh(cfg.threads).map_err(|e| format!("loopback mesh: {e}"))?;
+    let results: Vec<Result<(Vec<f64>, MdResult), String>> = std::thread::scope(|sc| {
+        let handles: Vec<_> = mesh
+            .into_iter()
+            .enumerate()
+            .map(|(rank, row)| sc.spawn(move || run_rank(cfg, lifecycle, rank, row, deadline)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("mdlite rank panicked")).collect()
+    });
+    let mut phi = Vec::with_capacity(cfg.n());
+    let mut agg: Option<MdResult> = None;
+    for r in results {
+        let (band, stats) = r?;
+        phi.extend_from_slice(&band);
+        match &agg {
+            None => agg = Some(stats),
+            Some(a) => {
+                let same = a.plan_fp == stats.plan_fp
+                    && a.chain_fp == stats.chain_fp
+                    && a.generations == stats.generations;
+                if !same {
+                    return Err("socket ranks diverged on the plan lifecycle".into());
+                }
+            }
+        }
+    }
+    let mut out = agg.expect("at least one rank");
+    out.phi = phi;
+    Ok(out)
+}
+
+/// One socket rank's run.
+fn run_rank(
+    cfg: &MdConfig,
+    lifecycle: Lifecycle,
+    rank: usize,
+    row: MeshStreams,
+    deadline: Option<Duration>,
+) -> Result<(Vec<f64>, MdResult), String> {
+    let layout = cfg.layout();
+    let (threads, n, band) = (cfg.threads, cfg.n(), cfg.band());
+    let parts = Particles::new(cfg);
+    let global0 = init_field(cfg);
+    let mut phi: Vec<f64> = global0[rank * band..(rank + 1) * band].to_vec();
+    let mut phin = phi.clone();
+    let mut ws = vec![0.0f64; n];
+    // Generation 0 is compiled locally by every rank (the needs are
+    // closed-form); only *deltas* ever cross the wire.
+    let occ0 = occupancy(cfg, &parts, 0);
+    let needs0 = needs_at(cfg, &layout, &occ0);
+    let mut plan = compile(&layout, &needs0);
+    let mut prev_needs = needs0;
+    let mut chain = plan.fingerprint();
+    let mut generations = 1u64;
+    let (mut dirty_pairs, mut patch_values) = (0usize, 0usize);
+    let mut bytes = 0u64;
+    let mut transport = SocketTransport::new(rank, &plan, row, deadline)
+        .map_err(|e| format!("rank {rank} transport: {e}"))?;
+    for s in 1..=cfg.steps {
+        let occ = occupancy(cfg, &parts, s - 1);
+        if s > 1 && (s - 1) % cfg.rebuild_every == 0 {
+            let needs = needs_at(cfg, &layout, &occ);
+            let scratch = compile(&layout, &needs);
+            match lifecycle {
+                Lifecycle::FullRecompile => plan = scratch,
+                Lifecycle::Incremental => {
+                    let delta = if rank == 0 {
+                        let patches = patches_between(&layout, &prev_needs, &needs);
+                        let d =
+                            PlanDelta::from_gather_patches(threads, plan.fingerprint(), patches)?;
+                        for peer in 1..threads {
+                            transport.send_delta(peer, generations, &d)?;
+                        }
+                        d
+                    } else {
+                        let d = transport.recv_delta(0, generations)?;
+                        if d.base_fingerprint() != plan.fingerprint() {
+                            return Err(format!(
+                                "rank {rank}: shipped delta targets plan {:#018x}, have {:#018x}",
+                                d.base_fingerprint(),
+                                plan.fingerprint()
+                            ));
+                        }
+                        d
+                    };
+                    dirty_pairs += delta.dirty_pairs();
+                    patch_values += delta.patch_values();
+                    let applied = plan.apply_delta(&delta)?;
+                    if applied.fingerprint() != scratch.fingerprint() {
+                        return Err(format!(
+                            "rank {rank}: incremental rebuild diverged from the oracle"
+                        ));
+                    }
+                    chain = chain_fingerprint(chain, &delta);
+                    plan = applied;
+                }
+            }
+            generations += 1;
+            prev_needs = needs;
+            transport.install_plan(&plan);
+        }
+        let gather = plan.as_gather().expect("gather plan");
+        let epoch = s as u64;
+        for m in gather.send_msgs(rank) {
+            let slot = transport.send_slot(epoch, m.range());
+            for (k, &o) in m.local_src.iter().enumerate() {
+                slot[k] = phi[o as usize];
+            }
+        }
+        transport.publish(epoch).map_err(|e| e.to_string())?;
+        let senders: std::collections::BTreeSet<usize> =
+            gather.recv_msgs(rank).map(|m| m.peer as usize).collect();
+        for &peer in &senders {
+            transport.wait_for_epoch(peer, epoch).map_err(|e| e.to_string())?;
+        }
+        ws[rank * band..(rank + 1) * band].copy_from_slice(&phi);
+        for m in gather.recv_msgs(rank) {
+            let slot = transport.recv_slot(epoch, m.range());
+            for (k, &g) in m.indices.iter().enumerate() {
+                ws[g as usize] = slot[k];
+            }
+        }
+        for l in 0..band {
+            let g = rank * band + l;
+            let mut nsum = 0.0f64;
+            for j in neighbors8(cfg, g) {
+                nsum += ws[j];
+            }
+            phin[l] = 0.7 * ws[g] + 0.0375 * nsum + 0.05 * f64::from(occ[g]);
+        }
+        bytes += (gather.total_values() * 8) as u64;
+        std::mem::swap(&mut phi, &mut phin);
+    }
+    let stats = MdResult {
+        phi: Vec::new(),
+        plan_fp: plan.fingerprint(),
+        chain_fp: chain,
+        generations,
+        dirty_pairs,
+        patch_values,
+        plan_pairs: plan_pairs(&plan),
+        plan_values: plan.total_values(),
+        bytes,
+    };
+    Ok((phi, stats))
+}
+
+/// The from-scratch gather plan for the particle occupancy at pattern step
+/// `step` — the oracle both rebuild arms compare against, exposed so the
+/// harness can time a full compile without re-deriving workload internals.
+pub fn plan_at(cfg: &MdConfig, step: usize) -> Result<ExchangePlan, String> {
+    cfg.validate()?;
+    let layout = cfg.layout();
+    let parts = Particles::new(cfg);
+    let occ = occupancy(cfg, &parts, step);
+    Ok(compile(&layout, &needs_at(cfg, &layout, &occ)))
+}
+
+/// The [`PlanDelta`] taking the step-`s0` plan to the step-`s1` plan —
+/// exposed so the harness can time delta construction and
+/// [`ExchangePlan::apply_delta`] against a full compile when calibrating
+/// [`RebuildModel`](crate::model::RebuildModel).
+pub fn delta_between(cfg: &MdConfig, s0: usize, s1: usize) -> Result<PlanDelta, String> {
+    cfg.validate()?;
+    let layout = cfg.layout();
+    let parts = Particles::new(cfg);
+    let n0 = needs_at(cfg, &layout, &occupancy(cfg, &parts, s0));
+    let n1 = needs_at(cfg, &layout, &occupancy(cfg, &parts, s1));
+    let base = compile(&layout, &n0);
+    let patches = patches_between(&layout, &n0, &n1);
+    PlanDelta::from_gather_patches(cfg.threads, base.fingerprint(), patches)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> MdConfig {
+        MdConfig {
+            cells_x: 12,
+            cells_y: 12,
+            threads: 3,
+            particles: 30,
+            steps: 20,
+            rebuild_every: 4,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_shapes() {
+        let mut c = tiny();
+        c.cells_y = 13; // not divisible by 3 threads
+        assert!(c.validate().is_err());
+        c = tiny();
+        c.rebuild_every = 0;
+        assert!(c.validate().is_err());
+        assert!(tiny().validate().is_ok());
+    }
+
+    #[test]
+    fn trajectories_are_closed_form_and_torus_wrapped() {
+        let cfg = tiny();
+        let p = Particles::new(&cfg);
+        let mut moved = false;
+        for i in 0..cfg.particles {
+            for s in [0usize, 1, 5, 1000] {
+                assert!(p.cell_at(&cfg, i, s) < cfg.n());
+            }
+            // One full fixed-point torus period in both axes returns every
+            // particle to its start cell, whatever its velocity.
+            let period = cfg.cells_x * cfg.cells_y * RES as usize;
+            assert_eq!(p.cell_at(&cfg, i, 0), p.cell_at(&cfg, i, period));
+            moved |= p.cell_at(&cfg, i, 0) != p.cell_at(&cfg, i, 7);
+        }
+        assert!(moved, "some particle must change cells");
+    }
+
+    #[test]
+    fn incremental_matches_oracle_bitwise_sequential() {
+        let cfg = tiny();
+        let oracle = run(&cfg, Engine::Sequential, Lifecycle::FullRecompile).unwrap();
+        let incr = run(&cfg, Engine::Sequential, Lifecycle::Incremental).unwrap();
+        assert_eq!(oracle.phi, incr.phi, "field must be bitwise identical");
+        assert_eq!(oracle.plan_fp, incr.plan_fp);
+        assert_eq!(oracle.generations, incr.generations);
+        assert_eq!(oracle.bytes, incr.bytes);
+        assert!(incr.generations > 1, "workload must actually rebuild");
+        assert!(incr.dirty_pairs > 0, "pattern must actually drift");
+    }
+
+    #[test]
+    fn parallel_engine_matches_sequential_bitwise() {
+        let cfg = tiny();
+        for lc in [Lifecycle::FullRecompile, Lifecycle::Incremental] {
+            let seq = run(&cfg, Engine::Sequential, lc).unwrap();
+            let par = run(&cfg, Engine::Parallel, lc).unwrap();
+            assert_eq!(seq.phi, par.phi, "{}", lc.name());
+            assert_eq!(seq.checksum(), par.checksum());
+            assert_eq!(seq.chain_fp, par.chain_fp);
+        }
+    }
+
+    #[test]
+    fn rebuild_every_step_stays_consistent() {
+        let mut cfg = tiny();
+        cfg.rebuild_every = 1;
+        cfg.steps = 8;
+        let oracle = run(&cfg, Engine::Sequential, Lifecycle::FullRecompile).unwrap();
+        let incr = run(&cfg, Engine::Sequential, Lifecycle::Incremental).unwrap();
+        assert_eq!(oracle.phi, incr.phi);
+        assert_eq!(incr.generations, 8);
+    }
+
+    #[test]
+    fn socket_arm_matches_in_process_bitwise() {
+        let mut cfg = tiny();
+        cfg.steps = 12;
+        let deadline = Some(Duration::from_secs(20));
+        let inproc = run(&cfg, Engine::Sequential, Lifecycle::Incremental).unwrap();
+        let socket = run_socket(&cfg, Lifecycle::Incremental, deadline).unwrap();
+        assert_eq!(inproc.phi, socket.phi, "socket arm must be bitwise identical");
+        assert_eq!(inproc.plan_fp, socket.plan_fp);
+        assert_eq!(inproc.chain_fp, socket.chain_fp, "delta chain must match over the wire");
+        assert_eq!(inproc.generations, socket.generations);
+    }
+
+    #[test]
+    fn calibration_hooks_agree_with_the_lifecycle() {
+        let cfg = tiny();
+        let base = plan_at(&cfg, 0).unwrap();
+        let delta = delta_between(&cfg, 0, 4).unwrap();
+        assert_eq!(delta.base_fingerprint(), base.fingerprint());
+        let applied = base.apply_delta(&delta).unwrap();
+        assert_eq!(applied.fingerprint(), plan_at(&cfg, 4).unwrap().fingerprint());
+    }
+
+    #[test]
+    fn checksum_is_field_sensitive() {
+        let cfg = tiny();
+        let a = run(&cfg, Engine::Sequential, Lifecycle::FullRecompile).unwrap();
+        let mut cfg2 = cfg;
+        cfg2.seed ^= 1;
+        let b = run(&cfg2, Engine::Sequential, Lifecycle::FullRecompile).unwrap();
+        assert_ne!(a.checksum(), b.checksum());
+    }
+}

@@ -11,6 +11,7 @@ mod heat;
 mod overlap;
 mod pipeline;
 mod planopt;
+mod rebuild;
 mod spmv;
 mod stencil;
 
@@ -25,6 +26,7 @@ pub use pipeline::{
     PipelinePrediction,
 };
 pub use planopt::{comm_seconds_on, predict_planopt_speedup, PlanoptPrediction};
+pub use rebuild::{RebuildModel, RebuildPrediction};
 pub use spmv::{
     predict_naive, predict_v1, predict_v2, predict_v3, t_comp_thread, SpmvInputs, SpmvPrediction,
     V3ThreadBreakdown,

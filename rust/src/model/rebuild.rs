@@ -1,0 +1,196 @@
+//! Rebuild-amortization model for dynamic communication patterns.
+//!
+//! A dynamic-pattern workload (mdlite, MD neighbor lists, PIC) recompiles
+//! its exchange plan every K steps. The run cost decomposes as
+//!
+//! ```text
+//! T_total ≈ R · T_recompile(|delta|) + steps · T_step(K)
+//! ```
+//!
+//! with `R = ⌈steps / K⌉` rebuilds. The two halves pull K in opposite
+//! directions:
+//!
+//! * **Recompile amortization** — each rebuild costs either a full compile
+//!   `t_full` or an incremental patch `t_delta_pair · |dirty pairs|`. The
+//!   dirty-pair count grows with K (the pattern drifts further between
+//!   rebuilds, `≈ drift_pairs_per_step · K`) but is capped at the plan's
+//!   live pair count, where the incremental path degenerates to a full
+//!   compile. Larger K → fewer, bigger rebuilds.
+//! * **Staleness** — between rebuilds the plan lags the pattern; steps run
+//!   with an increasingly stale halo. The j-th step after a rebuild pays
+//!   `j · stale_step_penalty` (extra gather volume, wasted or missing
+//!   prefetches), averaging `(K−1)/2` staleness steps. Larger K → more
+//!   staleness.
+//!
+//! [`RebuildModel::choose_rebuild_period`] scans K and returns the argmin,
+//! the dynamic-pattern analogue of
+//! [`choose_depth`](super::choose_depth) for the pipeline tier.
+
+/// Cost parameters of the versioned plan lifecycle, in seconds. Calibrate
+/// `t_full` / `t_delta_pair` from `benches/plan_optimize.rs` and the step
+/// and drift terms from the workload's own counters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RebuildModel {
+    /// Seconds per simulation step (compute + exchange), staleness aside.
+    pub t_step: f64,
+    /// Seconds for a from-scratch plan compile.
+    pub t_full: f64,
+    /// Fixed seconds per rebuild regardless of size: delta construction,
+    /// fingerprint chain, transport reshape, wire shipping. This is what
+    /// makes rebuild-every-step expensive even with tiny deltas — without
+    /// it the incremental cost `R · (c·K) = steps · c` is K-independent
+    /// and staleness would always drive K to 1.
+    pub t_rebuild_fixed: f64,
+    /// Seconds per dirty (receiver, sender) pair for an incremental patch.
+    pub t_delta_pair: f64,
+    /// Pattern drift rate: dirty pairs accumulated per step between
+    /// rebuilds.
+    pub drift_pairs_per_step: f64,
+    /// Live (receiver, sender) pairs in the plan — caps the dirty count.
+    pub max_pairs: f64,
+    /// Extra seconds per step per step-of-staleness of the plan.
+    pub stale_step_penalty: f64,
+}
+
+/// One (K, lifecycle) evaluation of the rebuild model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RebuildPrediction {
+    /// The rebuild period evaluated.
+    pub period: usize,
+    /// `⌈steps / K⌉`.
+    pub rebuilds: usize,
+    /// Seconds per rebuild: the fixed overhead plus
+    /// `min(t_full, t_delta_pair · dirty(K))` when incremental, or plus
+    /// `t_full` otherwise.
+    pub t_recompile: f64,
+    /// Total recompile seconds (`R · T_recompile`).
+    pub recompile_seconds: f64,
+    /// Total staleness seconds.
+    pub stale_seconds: f64,
+    /// `R · T_recompile + steps · T_step + staleness`.
+    pub total_seconds: f64,
+}
+
+impl RebuildModel {
+    /// Expected dirty pairs after `k` steps of drift, capped by the live
+    /// pair count.
+    pub fn dirty_pairs(&self, k: usize) -> f64 {
+        (self.drift_pairs_per_step * k as f64).min(self.max_pairs)
+    }
+
+    /// Seconds for one rebuild at period `k`. The incremental path never
+    /// costs more than a full compile — at high drift it degenerates to
+    /// one, which is exactly how the runtime would fall back.
+    pub fn recompile_cost(&self, k: usize, incremental: bool) -> f64 {
+        let variable = if incremental {
+            (self.t_delta_pair * self.dirty_pairs(k)).min(self.t_full)
+        } else {
+            self.t_full
+        };
+        self.t_rebuild_fixed + variable
+    }
+
+    /// Evaluate `T_total ≈ R · T_recompile(|delta|) + steps · T_step` plus
+    /// the staleness term for a run of `steps` at rebuild period `k`.
+    pub fn predict(&self, steps: usize, k: usize, incremental: bool) -> RebuildPrediction {
+        assert!(k >= 1, "rebuild period must be positive");
+        assert!(steps >= 1, "model a run of at least one step");
+        let rebuilds = steps.div_ceil(k);
+        let t_recompile = self.recompile_cost(k, incremental);
+        let recompile_seconds = rebuilds as f64 * t_recompile;
+        // Exact staleness sum: full cycles pay 0 + 1 + … + (k−1); the
+        // trailing partial cycle pays its own triangular sum.
+        let full_cycles = steps / k;
+        let tail = steps % k;
+        let tri = |m: usize| (m * m.saturating_sub(1) / 2) as f64;
+        let stale_steps = full_cycles as f64 * tri(k) + tri(tail);
+        let stale_seconds = stale_steps * self.stale_step_penalty;
+        let total_seconds = recompile_seconds + steps as f64 * self.t_step + stale_seconds;
+        RebuildPrediction {
+            period: k,
+            rebuilds,
+            t_recompile,
+            recompile_seconds,
+            stale_seconds,
+            total_seconds,
+        }
+    }
+
+    /// Scan `K ∈ [1, steps]` and return the period minimizing predicted
+    /// total time (ties break toward the smaller K, i.e. the fresher plan).
+    pub fn choose_rebuild_period(
+        &self,
+        steps: usize,
+        incremental: bool,
+    ) -> (usize, RebuildPrediction) {
+        assert!(steps >= 1);
+        let mut best = self.predict(steps, 1, incremental);
+        for k in 2..=steps {
+            let p = self.predict(steps, k, incremental);
+            if p.total_seconds < best.total_seconds {
+                best = p;
+            }
+        }
+        (best.period, best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> RebuildModel {
+        RebuildModel {
+            t_step: 1.0e-3,
+            t_full: 5.0e-2,
+            t_rebuild_fixed: 2.0e-3,
+            t_delta_pair: 1.0e-4,
+            drift_pairs_per_step: 2.0,
+            max_pairs: 400.0,
+            stale_step_penalty: 2.0e-4,
+        }
+    }
+
+    #[test]
+    fn incremental_rebuild_never_exceeds_full() {
+        let m = model();
+        for k in [1usize, 4, 16, 64, 1000] {
+            assert!(m.recompile_cost(k, true) <= m.recompile_cost(k, false) + 1e-15);
+        }
+        // At huge K the dirty count caps and the two coincide.
+        assert_eq!(m.recompile_cost(10_000, true), m.t_rebuild_fixed + m.t_full);
+    }
+
+    #[test]
+    fn amortization_formula_is_exact_for_divisible_runs() {
+        let m = model();
+        let p = m.predict(100, 10, false);
+        assert_eq!(p.rebuilds, 10);
+        assert!((p.recompile_seconds - 10.0 * m.t_full).abs() < 1e-12);
+        // 10 cycles × (0+1+…+9) = 450 stale steps.
+        assert!((p.stale_seconds - 450.0 * m.stale_step_penalty).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chosen_period_is_an_interior_optimum() {
+        let m = model();
+        let (k, best) = m.choose_rebuild_period(200, true);
+        assert!(k > 1, "rebuild-every-step should not win at these costs");
+        assert!(k < 200, "never rebuilding should not win either");
+        let down = m.predict(200, k - 1, true);
+        let up = m.predict(200, k + 1, true);
+        assert!(best.total_seconds <= down.total_seconds);
+        assert!(best.total_seconds <= up.total_seconds);
+    }
+
+    #[test]
+    fn incremental_lifecycle_prefers_shorter_periods() {
+        // Cheap deltas make frequent rebuilds affordable; the full-compile
+        // lifecycle has to amortize a big fixed cost over longer periods.
+        let m = model();
+        let (k_incr, p_incr) = m.choose_rebuild_period(200, true);
+        let (k_full, p_full) = m.choose_rebuild_period(200, false);
+        assert!(k_incr <= k_full, "incremental {k_incr} vs full {k_full}");
+        assert!(p_incr.total_seconds <= p_full.total_seconds);
+    }
+}

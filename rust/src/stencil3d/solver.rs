@@ -4,7 +4,9 @@
 
 use super::Stencil3dGrid;
 use crate::comm::{ComputeSplit, StridedBlock, StridedPlan};
-use crate::engine::{check_plan_hash, Checkpoint, Engine, ExchangeRuntime};
+use crate::engine::{
+    check_depth, check_generation, check_plan_hash, Checkpoint, Engine, ExchangeRuntime,
+};
 
 /// Compile the six face exchanges into a strided block-copy plan.
 ///
@@ -125,6 +127,8 @@ impl Stencil3dSolver {
         Checkpoint {
             step,
             plan_hash: self.plan_fingerprint(),
+            depth: self.runtime.depth(),
+            generation: self.runtime.generation(),
             fields: self.phi.clone(),
             scratch: self.phin.clone(),
             inter_thread_bytes: self.inter_thread_bytes,
@@ -137,6 +141,8 @@ impl Stencil3dSolver {
     /// *not* reset — resuming is safe at any epoch.
     pub fn restore(&mut self, ck: &Checkpoint) -> Result<u64, String> {
         check_plan_hash("stencil3d", self.plan_fingerprint(), ck.plan_hash)?;
+        check_depth("stencil3d", self.runtime.depth(), ck.depth)?;
+        check_generation("stencil3d", self.runtime.generation(), ck.generation)?;
         let (p, m, n) = self.grid.subdomain();
         if ck.fields.len() != self.grid.threads() || ck.scratch.len() != self.grid.threads() {
             return Err("stencil3d checkpoint thread count mismatch".into());

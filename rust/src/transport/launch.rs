@@ -1369,6 +1369,16 @@ impl TransportRow {
     }
 }
 
+/// Resolve `--depth auto` for one launch workload: the
+/// [`choose_depth`](crate::model::choose_depth) sweep over this workload's
+/// overlap prediction with the transport's latency/bandwidth substituted —
+/// one advisory pick per plan × transport, exactly what the drill runs.
+pub fn auto_depth(spec: &WorkloadSpec, steps: usize, tm: &TransportModel) -> usize {
+    let op = overlap_prediction_for(spec, tm);
+    let tau = tm.apply(&HwParams::abel()).tau;
+    crate::model::choose_depth(&op, steps.max(1), tau).0
+}
+
 fn overlap_prediction_for(spec: &WorkloadSpec, tm: &TransportModel) -> OverlapPrediction {
     let hw = HwParams::abel();
     // One rank per node: every plan edge crosses the modeled interconnect,

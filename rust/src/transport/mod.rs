@@ -30,10 +30,10 @@ mod wire;
 
 pub use inproc::PoolEndpoint;
 pub use launch::{
-    cmd_launch, run_reference, run_reference_mode, run_socket_world, run_socket_world_depth,
-    run_socket_world_mode,
-    validate_transport, worker_main, ChaosAction, LaunchConfig, PlanMode, Proto, SpmvParams,
-    TransportRow, WorkloadSpec, WorldOutcome, CHAOS_EXIT_CODE, WORKLOADS,
+    auto_depth, cmd_launch, run_reference, run_reference_mode, run_socket_world,
+    run_socket_world_depth, run_socket_world_mode, validate_transport, worker_main, ChaosAction,
+    LaunchConfig, PlanMode, Proto, SpmvParams, TransportRow, WorkloadSpec, WorldOutcome,
+    CHAOS_EXIT_CODE, WORKLOADS,
 };
 pub use proc_runtime::ProcRuntime;
 pub use socket::{loopback_mesh, socket_probe, MeshStreams, SocketProbe, SocketTransport};

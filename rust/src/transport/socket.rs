@@ -24,9 +24,9 @@
 //! subsequent wait into a structured [`StallError`] naming the peer's
 //! socket identity.
 
-use super::wire::{self, KIND_ACK, KIND_DATA};
+use super::wire::{self, KIND_ACK, KIND_DATA, KIND_DELTA};
 use super::Transport;
-use crate::comm::ExchangePlan;
+use crate::comm::{ExchangePlan, PlanDelta};
 use crate::engine::{Phase, StallError, WaitTuning};
 use std::io::Write;
 use std::net::{Shutdown, TcpListener, TcpStream};
@@ -53,6 +53,10 @@ struct SendMsg {
 #[derive(Debug)]
 struct MailState {
     frames: Vec<Vec<(u64, u32, Vec<f64>)>>,
+    /// Parked [`KIND_DELTA`] frames per peer: `(generation, true byte
+    /// length, padded JSON body)`. Drained by [`SocketTransport::recv_delta`]
+    /// at rebuild boundaries, never by the epoch path.
+    deltas: Vec<Vec<(u64, u32, Vec<f64>)>>,
     acked: Vec<u64>,
     dead: Vec<Option<String>>,
     shutdown: bool,
@@ -62,6 +66,38 @@ struct MailState {
 struct Mailbox {
     state: Mutex<MailState>,
     cv: Condvar,
+}
+
+/// A rank's view of a compiled plan: arena size, outgoing messages, data
+/// frames expected per sender per epoch, and the distinct sender set.
+/// Shared between construction and [`SocketTransport::install_plan`] so a
+/// generation swap recomputes exactly what the constructor computed.
+fn plan_shape(rank: usize, plan: &ExchangePlan) -> (usize, Vec<SendMsg>, Vec<usize>, Vec<usize>) {
+    let procs = plan.threads();
+    let mut sends = Vec::new();
+    let mut expected = vec![0usize; procs];
+    match plan {
+        ExchangePlan::Gather(p) => {
+            for m in p.send_msgs(rank) {
+                let (peer, start) = (m.peer as usize, m.range().start);
+                sends.push(SendMsg { peer, start, len: m.len() });
+            }
+            for m in p.recv_msgs(rank) {
+                expected[m.peer as usize] += 1;
+            }
+        }
+        ExchangePlan::Strided(p) => {
+            for m in p.send_msgs(rank) {
+                let (peer, start) = (m.peer as usize, m.range().start);
+                sends.push(SendMsg { peer, start, len: m.len() });
+            }
+            for m in p.recv_msgs(rank) {
+                expected[m.peer as usize] += 1;
+            }
+        }
+    }
+    let senders: Vec<usize> = (0..procs).filter(|&p| expected[p] > 0).collect();
+    (plan.total_values(), sends, expected, senders)
 }
 
 /// A [`Transport`] endpoint over a mesh of byte streams.
@@ -120,30 +156,7 @@ impl SocketTransport {
         assert!(depth >= 1, "pipeline depth must be at least 1");
         let procs = plan.threads();
         assert_eq!(streams.len(), procs, "mesh row arity");
-        let total = plan.total_values();
-        let mut sends = Vec::new();
-        let mut expected = vec![0usize; procs];
-        match plan {
-            ExchangePlan::Gather(p) => {
-                for m in p.send_msgs(rank) {
-                    let (peer, start) = (m.peer as usize, m.range().start);
-                    sends.push(SendMsg { peer, start, len: m.len() });
-                }
-                for m in p.recv_msgs(rank) {
-                    expected[m.peer as usize] += 1;
-                }
-            }
-            ExchangePlan::Strided(p) => {
-                for m in p.send_msgs(rank) {
-                    let (peer, start) = (m.peer as usize, m.range().start);
-                    sends.push(SendMsg { peer, start, len: m.len() });
-                }
-                for m in p.recv_msgs(rank) {
-                    expected[m.peer as usize] += 1;
-                }
-            }
-        }
-        let senders: Vec<usize> = (0..procs).filter(|&p| expected[p] > 0).collect();
+        let (total, sends, expected, senders) = plan_shape(rank, plan);
         let peer_ids: Vec<String> = (0..procs)
             .map(|p| match &streams[p] {
                 Some(s) => match s.peer_addr() {
@@ -156,6 +169,7 @@ impl SocketTransport {
         let mailbox = Arc::new(Mailbox {
             state: Mutex::new(MailState {
                 frames: vec![Vec::new(); procs],
+                deltas: vec![Vec::new(); procs],
                 acked: vec![0; procs],
                 dead: vec![None; procs],
                 shutdown: false,
@@ -176,6 +190,7 @@ impl SocketTransport {
                         match f.kind {
                             KIND_DATA => st.frames[peer].push((f.epoch, f.start, f.payload)),
                             KIND_ACK => st.acked[peer] = st.acked[peer].max(f.epoch),
+                            KIND_DELTA => st.deltas[peer].push((f.epoch, f.start, f.payload)),
                             _ => {} // late HELLO / unknown: ignore
                         }
                         drop(st);
@@ -216,6 +231,86 @@ impl SocketTransport {
     /// The configured pipeline depth (buffered arena slots).
     pub fn depth(&self) -> usize {
         self.depth
+    }
+
+    /// Ship a [`PlanDelta`] to `peer` as one [`KIND_DELTA`] frame targeting
+    /// plan generation `generation` — the incremental alternative to
+    /// re-sending a whole compiled plan at a rebuild boundary. The body is
+    /// the delta's canonical JSON; the receiver recovers it with
+    /// [`recv_delta`](SocketTransport::recv_delta) and applies it locally.
+    pub fn send_delta(
+        &mut self,
+        peer: usize,
+        generation: u64,
+        delta: &PlanDelta,
+    ) -> Result<(), String> {
+        let body = delta.to_json().compact();
+        let (true_len, payload) = wire::delta_payload(body.as_bytes());
+        let rank = self.rank as u32;
+        let stream = self.streams[peer]
+            .as_mut()
+            .ok_or_else(|| format!("delta to a non-peer rank {peer}"))?;
+        wire::write_frame(stream, KIND_DELTA, rank, generation, true_len, &payload)
+            .map_err(|e| format!("delta to {}: {e}", self.peer_ids[peer]))
+    }
+
+    /// Wait for the [`KIND_DELTA`] frame targeting `generation` from `peer`
+    /// and decode it. Frames for other generations stay parked (a fast
+    /// coordinator may ship several rebuilds ahead); the configured deadline
+    /// bounds the wait.
+    pub fn recv_delta(&mut self, peer: usize, generation: u64) -> Result<PlanDelta, String> {
+        let start = Instant::now();
+        let mb = Arc::clone(&self.mailbox);
+        let mut st = mb.state.lock().unwrap();
+        loop {
+            let buf = &mut st.deltas[peer];
+            if let Some(i) = buf.iter().position(|(g, _, _)| *g == generation) {
+                let (_, true_len, payload) = buf.swap_remove(i);
+                drop(st);
+                let bytes = wire::delta_bytes(true_len, &payload)?;
+                let text = String::from_utf8(bytes)
+                    .map_err(|_| "delta body is not UTF-8".to_string())?;
+                let v = crate::util::json::parse(&text).map_err(|e| format!("delta JSON: {e}"))?;
+                return PlanDelta::from_json(&v);
+            }
+            if let Some(note) = &st.dead[peer] {
+                return Err(format!("peer died before shipping generation {generation}: {note}"));
+            }
+            let slice = match self.deadline {
+                Some(d) => {
+                    let waited = start.elapsed();
+                    if waited >= d {
+                        return Err(format!(
+                            "delta stall: rank {} waited {waited:?} for generation {generation} \
+                             from {}",
+                            self.rank, self.peer_ids[peer]
+                        ));
+                    }
+                    (d - waited).min(self.tuning.socket_slice)
+                }
+                None => self.tuning.socket_slice,
+            };
+            st = mb.cv.wait_timeout(st, slice).unwrap().0;
+        }
+    }
+
+    /// Swap in a new plan generation without tearing the transport down:
+    /// recompute this rank's sends / expected-frame counts / sender set and
+    /// resize the arena, keeping the sockets, reader threads, mailbox, and
+    /// drained/traffic counters. Safe at a rebuild boundary because every
+    /// epoch of the old generation has been drained by then and frames from
+    /// senders already running in the new generation are still parked in
+    /// the mailbox (they are drained only after this returns, against the
+    /// new shape).
+    pub fn install_plan(&mut self, rank_plan: &ExchangePlan) {
+        assert_eq!(rank_plan.threads(), self.streams.len(), "plan arity changed mid-run");
+        let (total, sends, expected, senders) = plan_shape(self.rank, rank_plan);
+        self.total = total;
+        self.sends = sends;
+        self.expected = expected;
+        self.senders = senders;
+        self.arena.clear();
+        self.arena.resize(self.depth * total, 0.0);
     }
 
     /// Set the wait-ladder tuning; for this blocking backend only
@@ -658,6 +753,76 @@ mod tests {
         assert!(start.elapsed() < Duration::from_secs(5), "deadline did not bound the wait");
         assert_eq!(err.phase, Phase::Transfer);
         assert!(err.waited >= Duration::from_millis(80));
+    }
+
+    #[test]
+    fn delta_frame_ships_applies_and_reshapes_the_transport() {
+        use crate::comm::{chain_fingerprint, CommPlan};
+        use crate::pgas::Layout;
+        // Blocks of 2 over 8 cells, 2 ranks: rank 0 owns {0,1,4,5}, rank 1
+        // owns {2,3,6,7}. Generation 0: each rank needs one remote value;
+        // generation 1 widens rank 0's needs to two values from rank 1.
+        let layout = Layout::new(8, 2, 2);
+        let gen0: ExchangePlan =
+            CommPlan::from_recv_needs(&layout, &[vec![(1, 2)], vec![(0, 0)]]).into();
+        let gen1: ExchangePlan =
+            CommPlan::from_recv_needs(&layout, &[vec![(1, 2), (1, 3)], vec![(0, 0)]]).into();
+        let delta = PlanDelta::diff(&gen0, &gen1).unwrap();
+        let mesh = loopback_mesh(2).unwrap();
+        let deadline = Some(Duration::from_secs(10));
+        let fps: Vec<(u64, u64)> = std::thread::scope(|s| {
+            let (gen0, gen1, delta) = (&gen0, &gen1, &delta);
+            let handles: Vec<_> = mesh
+                .into_iter()
+                .enumerate()
+                .map(|(rank, row)| {
+                    s.spawn(move || {
+                        let mut t = SocketTransport::new(rank, gen0, row, deadline).unwrap();
+                        let peer = 1 - rank;
+                        // One epoch under generation 0.
+                        let exchange = |t: &mut SocketTransport, plan: &ExchangePlan, e: u64| {
+                            let p = plan.as_gather().unwrap();
+                            for m in p.send_msgs(rank) {
+                                for (k, v) in t.send_slot(e, m.range()).iter_mut().enumerate() {
+                                    *v = (rank * 10) as f64 + e as f64 + k as f64;
+                                }
+                            }
+                            t.publish(e).unwrap();
+                            t.wait_for_epoch(peer, e).unwrap();
+                            let mut seen = Vec::new();
+                            for m in p.recv_msgs(rank) {
+                                seen.extend_from_slice(t.recv_slot(e, m.range()));
+                            }
+                            seen
+                        };
+                        let seen0 = exchange(&mut t, gen0, 1);
+                        assert_eq!(seen0.len(), 1, "rank {rank} gen0");
+                        // Rebuild boundary: rank 0 ships the delta, rank 1
+                        // receives and applies it; both verify the chain.
+                        let applied = if rank == 0 {
+                            t.send_delta(peer, 1, delta).unwrap();
+                            gen0.apply_delta(delta).unwrap()
+                        } else {
+                            let d = t.recv_delta(peer, 1).unwrap();
+                            assert_eq!(d.base_fingerprint(), gen0.fingerprint());
+                            gen0.apply_delta(&d).unwrap()
+                        };
+                        t.install_plan(&applied);
+                        let seen1 = exchange(&mut t, &applied, 2);
+                        assert_eq!(seen1.len(), if rank == 0 { 2 } else { 1 }, "rank {rank} gen1");
+                        (applied.fingerprint(), chain_fingerprint(gen0.fingerprint(), delta))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Both ranks converged on the from-scratch generation-1 plan and on
+        // the same delta-chain fingerprint.
+        for (fp, chain) in &fps {
+            assert_eq!(*fp, gen1.fingerprint());
+            assert_eq!(*chain, fps[0].1);
+        }
+        assert_eq!(fps[0], fps[1]);
     }
 
     #[test]

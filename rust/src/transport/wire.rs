@@ -27,6 +27,14 @@ pub const KIND_HELLO: u8 = 1;
 pub const KIND_DATA: u8 = 2;
 /// Consumed-epoch acknowledgement. No payload.
 pub const KIND_ACK: u8 = 3;
+/// A shipped [`PlanDelta`](crate::comm::PlanDelta): the incremental plan
+/// lifecycle's wire frame. The header is reinterpreted — `epoch` carries
+/// the **target plan generation** and `start` the **true byte length** of
+/// the JSON body, whose bytes ride in the payload padded to whole doubles
+/// ([`delta_payload`]/[`delta_bytes`]). Reusing the data framing keeps the
+/// reader threads single-format: a delta parks in the mailbox like any
+/// other frame and is drained at the rebuild boundary.
+pub const KIND_DELTA: u8 = 4;
 
 /// Frame header bytes: kind (1) + sender (4) + epoch (8) + start (4) +
 /// count (4).
@@ -138,6 +146,33 @@ pub fn bytes_to_f64s(bytes: &[u8]) -> Vec<f64> {
     bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect()
 }
 
+/// Pack an arbitrary byte body (a delta's JSON) into a [`KIND_DELTA`]
+/// frame's `(start, payload)` pair: the bytes zero-padded to whole doubles,
+/// plus the true length to travel in the header's `start` field.
+pub fn delta_payload(bytes: &[u8]) -> (u32, Vec<f64>) {
+    assert!(bytes.len() <= u32::MAX as usize, "delta body over the wire cap");
+    let mut padded = bytes.to_vec();
+    while padded.len() % 8 != 0 {
+        padded.push(0);
+    }
+    (bytes.len() as u32, bytes_to_f64s(&padded))
+}
+
+/// Inverse of [`delta_payload`]: recover the byte body from a decoded
+/// [`KIND_DELTA`] frame's payload and true length. A length that exceeds
+/// the payload is a corrupt header.
+pub fn delta_bytes(true_len: u32, payload: &[f64]) -> Result<Vec<u8>, String> {
+    let mut bytes = f64s_to_bytes(payload);
+    if true_len as usize > bytes.len() {
+        return Err(format!(
+            "delta frame claims {true_len} bytes but carries only {}",
+            bytes.len()
+        ));
+    }
+    bytes.truncate(true_len as usize);
+    Ok(bytes)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,5 +239,29 @@ mod tests {
     fn f64_bytes_roundtrip() {
         let vals = vec![0.0, -0.0, 1.0 / 3.0, f64::MIN_POSITIVE];
         assert_eq!(bytes_to_f64s(&f64s_to_bytes(&vals)), vals);
+    }
+
+    #[test]
+    fn delta_payload_roundtrip_through_a_frame() {
+        // Lengths that hit several padding residues, including 0 and ×8.
+        for len in [0usize, 1, 7, 8, 9, 24, 31] {
+            let body: Vec<u8> = (0..len as u8).map(|b| b.wrapping_mul(37)).collect();
+            let (true_len, payload) = delta_payload(&body);
+            assert_eq!(true_len as usize, len);
+            assert_eq!(payload.len(), len.div_ceil(8));
+            let mut buf = Vec::new();
+            write_frame(&mut buf, KIND_DELTA, 0, 3, true_len, &payload).unwrap();
+            let f = read_frame(&mut Cursor::new(&buf)).unwrap();
+            assert_eq!(f.kind, KIND_DELTA);
+            assert_eq!(f.epoch, 3, "generation travels in the epoch field");
+            assert_eq!(delta_bytes(f.start, &f.payload).unwrap(), body);
+        }
+    }
+
+    #[test]
+    fn delta_bytes_rejects_overlong_claim() {
+        let (_, payload) = delta_payload(b"abc");
+        let err = delta_bytes(100, &payload).unwrap_err();
+        assert!(err.contains("claims 100 bytes"), "{err}");
     }
 }

@@ -384,6 +384,44 @@ fn restore_rejects_foreign_plan() {
     assert!(err.contains("does not match"), "unexpected error: {err}");
 }
 
+/// A checkpoint records the pipeline depth D it was taken under; restoring
+/// into a runtime configured at a different depth must be rejected (the
+/// schedules are bitwise-equal, but the run's recorded stall envelope
+/// would lie), while restoring at the matching depth succeeds.
+#[test]
+fn restore_rejects_depth_mismatch() {
+    let grid = HeatGrid::new(16, 16, 2, 2);
+    let f0 = random_field(16 * 16, 9);
+    let mut deep = Heat2dSolver::new(grid, &f0);
+    deep.set_depth(3);
+    let ck = deep.checkpoint(4);
+    assert_eq!(ck.depth, 3, "checkpoint must record the live pipeline depth");
+
+    let mut shallow = Heat2dSolver::new(grid, &f0);
+    assert_eq!(shallow.depth(), 2, "default depth changed; update this test");
+    let err = shallow.restore(&ck).unwrap_err();
+    assert!(err.contains("depth 3"), "unexpected error: {err}");
+    assert!(err.contains("does not match"), "unexpected error: {err}");
+    shallow.set_depth(3);
+    let step = shallow.restore(&ck).expect("matching depth must restore");
+    assert_eq!(step, 4);
+
+    let (m, bs, threads, analysis, x0) = spmv_fixture();
+    let mut engine = SpmvEngine::new(Engine::Parallel);
+    engine.set_depth(4);
+    let state = SpmvState::new(&m, bs, threads, &x0);
+    let ck = engine.checkpoint(2, &state, &analysis);
+    assert_eq!(ck.depth, 4);
+    let mut resumed_engine = SpmvEngine::new(Engine::Parallel);
+    let mut resumed_state = SpmvState::new(&m, bs, threads, &x0);
+    let err = resumed_engine.restore(&ck, &mut resumed_state, &analysis).unwrap_err();
+    assert!(err.contains("depth 4"), "unexpected error: {err}");
+    resumed_engine.set_depth(4);
+    resumed_engine
+        .restore(&ck, &mut resumed_state, &analysis)
+        .expect("matching depth must restore");
+}
+
 /// Epoch hygiene: mixing the synchronous, overlapped and pipelined
 /// protocols on one engine keeps every flag publish monotone (the
 /// publish-backwards assertion must not fire) and stays bitwise locked to

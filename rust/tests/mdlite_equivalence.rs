@@ -1,0 +1,70 @@
+//! mdlite acceptance matrix: the incremental plan lifecycle must be
+//! bitwise identical to the full-recompile oracle on both engines and on
+//! the loopback socket world, for rebuild periods K ∈ {1, 16, 64}.
+//! Steps > 64 so even the K = 64 column recompiles beyond generation 0.
+
+use std::time::Duration;
+use upcsim::engine::Engine;
+use upcsim::mdlite::{run, run_socket, Lifecycle, MdConfig};
+
+fn config(rebuild_every: usize) -> MdConfig {
+    MdConfig {
+        cells_x: 24,
+        cells_y: 24,
+        threads: 4,
+        particles: 96,
+        steps: 80,
+        rebuild_every,
+        seed: 0x4d44,
+    }
+}
+
+#[test]
+fn incremental_matches_oracle_on_every_arm_and_period() {
+    for k in [1usize, 16, 64] {
+        let cfg = config(k);
+        let oracle = run(&cfg, Engine::Sequential, Lifecycle::FullRecompile).unwrap();
+        assert!(oracle.generations >= 2, "K = {k}: oracle never rebuilt");
+        for engine in [Engine::Sequential, Engine::Parallel] {
+            let incr = run(&cfg, engine, Lifecycle::Incremental).unwrap();
+            assert_eq!(
+                incr.checksum(),
+                oracle.checksum(),
+                "K = {k}, {} engine: incremental diverged from the oracle",
+                engine.name()
+            );
+            assert_eq!(incr.generations, oracle.generations, "K = {k}: generation count");
+            assert_eq!(incr.plan_fp, oracle.plan_fp, "K = {k}: final plan fingerprint");
+        }
+        let sock = run_socket(&cfg, Lifecycle::Incremental, Some(Duration::from_secs(60))).unwrap();
+        assert_eq!(
+            sock.checksum(),
+            oracle.checksum(),
+            "K = {k}, socket world: incremental diverged from the oracle"
+        );
+        assert_eq!(sock.generations, oracle.generations, "K = {k}: socket generation count");
+        assert_eq!(sock.plan_fp, oracle.plan_fp, "K = {k}: socket final plan fingerprint");
+    }
+}
+
+#[test]
+fn socket_full_recompile_also_matches() {
+    // The socket world's full-recompile arm pins the delta shipping as an
+    // optimization, not a semantic change: both lifecycles land on the
+    // same field.
+    let cfg = config(16);
+    let inproc = run(&cfg, Engine::Sequential, Lifecycle::FullRecompile).unwrap();
+    let sock = run_socket(&cfg, Lifecycle::FullRecompile, Some(Duration::from_secs(60))).unwrap();
+    assert_eq!(sock.checksum(), inproc.checksum());
+    assert_eq!(sock.plan_fp, inproc.plan_fp);
+}
+
+#[test]
+fn shorter_rebuild_period_never_lowers_generation_count() {
+    let gens: Vec<u64> = [1usize, 16, 64]
+        .iter()
+        .map(|&k| run(&config(k), Engine::Sequential, Lifecycle::Incremental).unwrap().generations)
+        .collect();
+    assert!(gens[0] >= gens[1] && gens[1] >= gens[2], "generations not monotone: {gens:?}");
+    assert!(gens[2] >= 2, "K = 64 must rebuild at least once beyond generation 0");
+}

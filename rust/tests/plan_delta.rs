@@ -1,0 +1,137 @@
+//! Property suite for the versioned plan lifecycle:
+//! `apply_delta(plan, diff(plan, plan'))` must be fingerprint-identical to
+//! compiling `plan'` from scratch, across random gather and strided
+//! mutations (content rerolls, pair removals, pair additions), and a
+//! JSON-shipped delta sequence must keep two replicas on the same
+//! fingerprint chain.
+
+use upcsim::comm::{
+    chain_fingerprint, CommPlan, ExchangePlan, PlanDelta, StridedBlock, StridedPlan,
+};
+use upcsim::pgas::Layout;
+use upcsim::util::Rng;
+
+const THREADS: usize = 6;
+const BS: usize = 8;
+
+/// Compile a condensed gather plan from a pair-mask matrix: bit `b` of
+/// `mask[r][s]` means receiver `r` needs global index `s·BS + b` from `s`.
+fn gather_from(mask: &[Vec<u16>]) -> ExchangePlan {
+    let layout = Layout::new(THREADS * BS, BS, THREADS);
+    let mut recv: Vec<Vec<(u32, u32)>> = Vec::with_capacity(THREADS);
+    for r in 0..THREADS {
+        let mut list = Vec::new();
+        for s in 0..THREADS {
+            if s == r {
+                continue;
+            }
+            for b in 0..BS {
+                if mask[r][s] >> b & 1 == 1 {
+                    list.push((s as u32, (s * BS + b) as u32));
+                }
+            }
+        }
+        recv.push(list);
+    }
+    CommPlan::from_recv_needs(&layout, &recv).into()
+}
+
+/// Compile a canonical-order strided plan from a column-count matrix:
+/// `cols[r][s] > 0` means one `cols`-wide row copy from `s` to `r`.
+fn strided_from(cols: &[Vec<usize>]) -> ExchangePlan {
+    let mut copies: Vec<(usize, usize, StridedBlock, StridedBlock)> = Vec::new();
+    for r in 0..THREADS {
+        for s in 0..THREADS {
+            if s == r || cols[r][s] == 0 {
+                continue;
+            }
+            let c = cols[r][s];
+            copies.push((s, r, StridedBlock::row(s * BS, c), StridedBlock::row(64 + r * BS, c)));
+        }
+    }
+    ExchangePlan::Strided(StridedPlan::from_msgs(THREADS, &copies))
+}
+
+/// Mutate `k` random off-diagonal pairs of a decision matrix. `reroll`
+/// draws the new cell value; forcing one mutation to zero and one to a
+/// fresh nonzero value exercises removals and additions every trial.
+fn mutate(m: &mut [Vec<usize>], rng: &mut Rng, k: usize, hi: usize) {
+    for i in 0..k {
+        let r = rng.usize_in(0, THREADS);
+        let mut s = rng.usize_in(0, THREADS);
+        if s == r {
+            s = (s + 1) % THREADS;
+        }
+        m[r][s] = match i {
+            0 => 0,                   // pair removal
+            1 => rng.usize_in(1, hi), // pair addition / content change
+            _ => rng.usize_in(0, hi), // anything
+        };
+    }
+}
+
+fn random_matrix(rng: &mut Rng, hi: usize) -> Vec<Vec<usize>> {
+    (0..THREADS).map(|_| (0..THREADS).map(|_| rng.usize_in(0, hi)).collect()).collect()
+}
+
+fn to_mask(m: &[Vec<usize>]) -> Vec<Vec<u16>> {
+    m.iter().map(|row| row.iter().map(|&v| v as u16).collect()).collect()
+}
+
+#[test]
+fn random_gather_mutations_patch_to_the_scratch_fingerprint() {
+    let mut rng = Rng::new(0x5eed_0001);
+    for trial in 0..40 {
+        let mut m = random_matrix(&mut rng, 1 << BS);
+        let old = gather_from(&to_mask(&m));
+        mutate(&mut m, &mut rng, rng.usize_in(2, 7), 1 << BS);
+        let new = gather_from(&to_mask(&m));
+        let delta = PlanDelta::diff(&old, &new).unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+        assert_eq!(delta.base_fingerprint(), old.fingerprint(), "trial {trial}");
+        let patched = old.apply_delta(&delta).unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+        assert_eq!(patched.fingerprint(), new.fingerprint(), "trial {trial}: patched != scratch");
+        patched.validate(&|_| usize::MAX).unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+    }
+}
+
+#[test]
+fn random_strided_mutations_patch_to_the_scratch_fingerprint() {
+    let mut rng = Rng::new(0x5eed_0002);
+    for trial in 0..40 {
+        let mut m = random_matrix(&mut rng, 4);
+        let old = strided_from(&m);
+        mutate(&mut m, &mut rng, rng.usize_in(2, 7), 4);
+        let new = strided_from(&m);
+        let delta = PlanDelta::diff(&old, &new).unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+        assert_eq!(delta.form_name(), "strided", "trial {trial}");
+        let patched = old.apply_delta(&delta).unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+        assert_eq!(patched.fingerprint(), new.fingerprint(), "trial {trial}: patched != scratch");
+    }
+}
+
+/// Two replicas advance through the same random generation history — one
+/// patching plans it diffed locally, one applying the JSON wire form of
+/// each delta — and must agree on every plan fingerprint and on the
+/// generation chain value at every step.
+#[test]
+fn shipped_delta_sequence_keeps_replicas_on_one_chain() {
+    let mut rng = Rng::new(0x5eed_0003);
+    let mut m = random_matrix(&mut rng, 1 << BS);
+    let mut local = gather_from(&to_mask(&m));
+    let mut remote = local.clone();
+    let mut chain_local = local.fingerprint();
+    let mut chain_remote = chain_local;
+    for gen in 1..=12 {
+        mutate(&mut m, &mut rng, rng.usize_in(1, 5), 1 << BS);
+        let next = gather_from(&to_mask(&m));
+        let delta = PlanDelta::diff(&local, &next).unwrap();
+        let wire = delta.to_json().compact();
+        let shipped = PlanDelta::from_json(&upcsim::util::json::parse(&wire).unwrap()).unwrap();
+        remote = remote.apply_delta(&shipped).unwrap_or_else(|e| panic!("gen {gen}: {e}"));
+        chain_local = chain_fingerprint(chain_local, &delta);
+        chain_remote = chain_fingerprint(chain_remote, &shipped);
+        local = next;
+        assert_eq!(remote.fingerprint(), local.fingerprint(), "gen {gen}: replicas diverged");
+        assert_eq!(chain_local, chain_remote, "gen {gen}: chains diverged");
+    }
+}
